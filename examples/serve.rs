@@ -1,0 +1,67 @@
+//! End-to-end serving driver (the repo's headline E2E validation run —
+//! results are recorded in EXPERIMENTS.md).
+//!
+//!   cargo run --release --example serve
+//!
+//! Loads a small GPT-2-geometry model, serves the same batched Poisson
+//! trace under the FP16 baseline cache and the LOOKAT-4 compressed
+//! cache, and reports latency / throughput / peak key-cache bytes.
+//! Pass `--pjrt` to route attention through the AOT artifacts (requires
+//! `make artifacts`).
+
+use lookat::coordinator::{
+    AttentionBackend, BatcherConfig, EngineConfig, Router, RouterConfig,
+};
+use lookat::model::ModelConfig;
+use lookat::workload::{TraceConfig, TraceGenerator};
+
+fn run_backend(backend: AttentionBackend) -> anyhow::Result<()> {
+    let mut model = ModelConfig::gpt2_layer0();
+    model.n_layer = 2;
+    let mut router = Router::build(RouterConfig {
+        engine: EngineConfig {
+            model,
+            backend,
+            seed: 11,
+            cache_blocks: 512,
+            calib_tokens: 256,
+        },
+        batcher: BatcherConfig { max_batch: 4, max_queue: 128 },
+        max_prompt_tokens: 120,
+    })?;
+    let trace = TraceGenerator::new(TraceConfig {
+        rate: 6.0,
+        num_requests: 24,
+        prompt_chars: (150, 500),
+        gen_tokens: (8, 24),
+        seed: 33,
+    })
+    .generate();
+    let reqs = router.tokenize_trace(&trace);
+    let report = router.serve_trace(reqs)?;
+    println!("{}", report.pretty());
+    // persist for EXPERIMENTS.md
+    let dir = lookat::experiments::report::reports_dir();
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(
+        dir.join(format!("serve_{}.json", report.backend)),
+        report.to_json().to_string_pretty(),
+    )?;
+    anyhow::ensure!(report.completed.len() == 24, "requests lost");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let pjrt = std::env::args().any(|a| a == "--pjrt");
+    println!("== serving the same 24-request trace on each backend ==");
+    if pjrt {
+        run_backend(AttentionBackend::PjrtFp16)?;
+        run_backend(AttentionBackend::PjrtLookat { m: 4 })?;
+    } else {
+        run_backend(AttentionBackend::Fp16Exact)?;
+        run_backend(AttentionBackend::Lookat { m: 4, k: 256 })?;
+        run_backend(AttentionBackend::Lookat { m: 2, k: 256 })?;
+    }
+    println!("\nserve example OK");
+    Ok(())
+}

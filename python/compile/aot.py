@@ -1,0 +1,174 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per graph plus ``manifest.json`` describing
+every artifact's inputs/outputs — the rust loader
+(rust/src/runtime/artifact.rs) is driven entirely by the manifest.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import lookat as kern
+
+# Canonical shapes (paper §4: GPT-2, H=12, d_k=64, K=256 centroids).
+H = 12
+D_K = 64
+K = 256
+D_MODEL = H * D_K
+D_FF = 4 * D_MODEL
+SEQ_LENS = (128, 512, 1024)
+SUBSPACES = (2, 4, 8, 16)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _spec_desc(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_one(name, fn, specs, out_desc, meta, out_dir, manifest):
+    """Lower fn at the given input specs and record it in the manifest."""
+    lowered = jax.jit(fn).lower(*[s for _, s in specs])
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    manifest.append({
+        "name": name,
+        "file": fname,
+        "inputs": [{"name": n, **_spec_desc(s)} for n, s in specs],
+        "outputs": out_desc,
+        "meta": meta,
+    })
+    print(f"  {fname:40s} {len(text) / 1024:8.1f} KiB")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only lower the L=128 artifacts (CI smoke)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+
+    seq_lens = (128,) if args.quick else SEQ_LENS
+    subspaces = (4,) if args.quick else SUBSPACES
+
+    # --- attention decode steps (the serving hot-path artifacts) ---------
+    for L in seq_lens:
+        lower_one(
+            f"attn_fp16_L{L}", model.attn_step_fp16,
+            [("q", f32(H, D_K)), ("k", f32(H, L, D_K)),
+             ("v", f32(H, L, D_K)), ("mask", f32(L))],
+            [{"name": "out", "shape": [H, D_K], "dtype": "float32"}],
+            {"kind": "attn_fp16", "H": H, "d_k": D_K, "L": L},
+            args.out_dir, manifest)
+
+    lookat_shapes = [(m, 512) for m in subspaces]
+    for L in seq_lens:
+        if (4, L) not in lookat_shapes:
+            lookat_shapes.append((4, L))
+    for m, L in lookat_shapes:
+        d_sub = D_K // m
+        lower_one(
+            f"attn_lookat_m{m}_L{L}", model.attn_step_lookat,
+            [("q", f32(H, D_K)), ("codes", i32(H, L, m)),
+             ("codebooks", f32(H, m, K, d_sub)), ("v", f32(H, L, D_K)),
+             ("mask", f32(L))],
+            [{"name": "out", "shape": [H, D_K], "dtype": "float32"}],
+            {"kind": "attn_lookat", "H": H, "d_k": D_K, "L": L,
+             "m": m, "K": K},
+            args.out_dir, manifest)
+
+    # --- full transformer-block decode steps -----------------------------
+    blk_params = [
+        ("ln1_g", f32(D_MODEL)), ("ln1_b", f32(D_MODEL)),
+        ("w_qkv", f32(D_MODEL, 3 * D_MODEL)), ("b_qkv", f32(3 * D_MODEL)),
+        ("w_proj", f32(D_MODEL, D_MODEL)), ("b_proj", f32(D_MODEL)),
+        ("ln2_g", f32(D_MODEL)), ("ln2_b", f32(D_MODEL)),
+        ("w_fc", f32(D_MODEL, D_FF)), ("b_fc", f32(D_FF)),
+        ("w_out", f32(D_FF, D_MODEL)), ("b_out", f32(D_MODEL)),
+    ]
+    blk_out = [
+        {"name": "y", "shape": [D_MODEL], "dtype": "float32"},
+        {"name": "k_new", "shape": [H, D_K], "dtype": "float32"},
+        {"name": "v_new", "shape": [H, D_K], "dtype": "float32"},
+    ]
+    L = 128 if args.quick else 512
+    lower_one(
+        f"block_fp16_L{L}",
+        functools.partial(model.block_decode_fp16, n_head=H, d_head=D_K),
+        [("x", f32(D_MODEL)), ("k_cache", f32(H, L, D_K)),
+         ("v_cache", f32(H, L, D_K)), ("mask", f32(L))] + blk_params,
+        blk_out,
+        {"kind": "block_fp16", "H": H, "d_k": D_K, "L": L,
+         "d_model": D_MODEL, "d_ff": D_FF},
+        args.out_dir, manifest)
+    m = 4
+    lower_one(
+        f"block_lookat_m{m}_L{L}",
+        functools.partial(model.block_decode_lookat, n_head=H, d_head=D_K),
+        [("x", f32(D_MODEL)), ("codes", i32(H, L, m)),
+         ("codebooks", f32(H, m, K, D_K // m)),
+         ("v_cache", f32(H, L, D_K)), ("mask", f32(L))] + blk_params,
+        blk_out,
+        {"kind": "block_lookat", "H": H, "d_k": D_K, "L": L, "m": m,
+         "K": K, "d_model": D_MODEL, "d_ff": D_FF},
+        args.out_dir, manifest)
+
+    # --- kernel-level micro artifacts (runtime integration tests) --------
+    m = 4
+    lower_one(
+        "lut_build_m4", kern.lut_build,
+        [("q_sub", f32(m, D_K // m)), ("codebooks", f32(m, K, D_K // m))],
+        [{"name": "lut", "shape": [m, K], "dtype": "float32"}],
+        {"kind": "lut_build", "m": m, "K": K, "d_k": D_K},
+        args.out_dir, manifest)
+    Ls = 128 if args.quick else 512
+    lower_one(
+        f"adc_scores_m4_L{Ls}", kern.adc_scores,
+        [("codes", i32(Ls, m)), ("lut", f32(m, K))],
+        [{"name": "scores", "shape": [Ls], "dtype": "float32"}],
+        {"kind": "adc_scores", "m": m, "K": K, "L": Ls},
+        args.out_dir, manifest)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"version": 1, "artifacts": manifest}, f, indent=1)
+    print(f"wrote {len(manifest)} artifacts + manifest.json "
+          f"to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

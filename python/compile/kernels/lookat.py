@@ -1,0 +1,230 @@
+"""Pallas kernels for LOOKAT (Layer 1 of the stack).
+
+Three kernels, all run with ``interpret=True`` (the CPU image cannot
+execute Mosaic custom-calls — see /opt/xla-example/README.md):
+
+  * ``lut_build``    — per-query ADC lookup tables  LUT_i = q^(i) · C_i^T
+  * ``adc_scores``   — scores via table lookups, tiled over L
+  * ``lookat_attention`` — fused decode step: LUT → scores → softmax → α·V
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets
+edge NPUs where per-key scalar gathers are cheap. On TPU the MXU wants
+matmuls, so ``adc_scores`` reformulates the gather-and-sum as a one-hot
+matmul: the (L_tile, m) int codes become a (L_tile, m·K) one-hot plane
+multiplied against the flattened (m·K,) LUT. Under interpret=True this is
+also what the CPU backend vectorizes best. Codebooks (m·K·d_sub ≤ 16 KB
+f32 for d_k=64) and the LUT (m·K ≤ 4 KB) are VMEM-resident; only codes and
+values stream from HBM, which is exactly the paper's bandwidth story.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Tile size for the L dimension of the ADC score scan. 128 keeps the
+# one-hot plane (128 × m·256 f32 ≤ 2 MB for m=16) comfortably in VMEM.
+L_TILE = 128
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: LUT build
+# ---------------------------------------------------------------------------
+
+def _lut_build_kernel(q_ref, cb_ref, lut_ref):
+    """q (m, d_sub), codebooks (m, K, d_sub) -> lut (m, K).
+
+    One small einsum; for d_k=64 this is the paper's O(m·K·d_sub) = O(4096)
+    FLOP precompute done once per query.
+    """
+    q = q_ref[...]                       # (m, d_sub)
+    cb = cb_ref[...]                     # (m, K, d_sub)
+    lut_ref[...] = jnp.einsum(
+        "md,mkd->mk", q, cb, preferred_element_type=jnp.float32
+    )
+
+
+def lut_build(q_sub, codebooks):
+    """Build ADC lookup tables. q_sub (m, d_sub), codebooks (m, K, d_sub)."""
+    m, K, _ = codebooks.shape
+    return pl.pallas_call(
+        _lut_build_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, K), jnp.float32),
+        interpret=True,
+    )(q_sub, codebooks)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: ADC score scan (tiled over L, one-hot matmul formulation)
+# ---------------------------------------------------------------------------
+
+def _adc_scores_kernel(codes_ref, lut_ref, out_ref, *, K):
+    """codes tile (T, m) int32, lut (m, K) -> scores tile (T,).
+
+    One-hot matmul: onehot (T, m, K) contracted with lut (m, K). XLA fuses
+    the iota-compare into the reduction, so no (T, m·K) buffer actually
+    materializes in the interpret path; on real TPU this shape feeds the
+    MXU as a (T, m·K) × (m·K, 1) matmul.
+    """
+    codes = codes_ref[...]                                # (T, m)
+    lut = lut_ref[...]                                    # (m, K)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, K), 2)
+    onehot = (codes[:, :, None] == iota).astype(jnp.float32)  # (T, m, K)
+    out_ref[...] = jnp.einsum(
+        "tmk,mk->t", onehot, lut, preferred_element_type=jnp.float32
+    )
+
+
+def adc_scores(codes, lut):
+    """ADC scores for a whole cache. codes (L, m) int32, lut (m, K) -> (L,).
+
+    L must be a multiple of L_TILE (the cache manager pads; the validity
+    mask downstream ignores padded slots).
+    """
+    L, m = codes.shape
+    mK, K = lut.shape
+    assert m == mK
+    assert L % L_TILE == 0, f"L={L} must be a multiple of {L_TILE}"
+    grid = (L // L_TILE,)
+    return pl.pallas_call(
+        functools.partial(_adc_scores_kernel, K=K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L_TILE, m), lambda i: (i, 0)),   # stream codes
+            pl.BlockSpec((m, K), lambda i: (0, 0)),        # LUT pinned
+        ],
+        out_specs=pl.BlockSpec((L_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((L,), jnp.float32),
+        interpret=True,
+    )(codes, lut)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 3: fused LOOKAT decode step (Algorithm 1, single head)
+# ---------------------------------------------------------------------------
+
+def _lookat_attention_kernel(q_ref, codes_ref, cb_ref, v_ref, mask_ref,
+                             out_ref, *, K, d_k):
+    """Fused: LUT build + ADC scores + masked softmax + α·V.
+
+    q (m, d_sub), codes (L, m), codebooks (m, K, d_sub), v (L, d_k),
+    mask (L,) -> out (d_k,). Whole cache in VMEM: for L=1024, m≤16 this is
+    codes 64 KB + v 256 KB + codebooks 16 KB — fine for a 16 MB VMEM.
+    """
+    q = q_ref[...]
+    cb = cb_ref[...]
+    codes = codes_ref[...]
+    v = v_ref[...]
+    mask = mask_ref[...]
+
+    lut = jnp.einsum("md,mkd->mk", q, cb,
+                     preferred_element_type=jnp.float32)       # (m, K)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, K), 2)
+    onehot = (codes[:, :, None] == iota).astype(jnp.float32)   # (L, m, K)
+    s = jnp.einsum("lmk,mk->l", onehot, lut,
+                   preferred_element_type=jnp.float32)         # (L,)
+    s = s / jnp.sqrt(jnp.asarray(d_k, jnp.float32))
+    s = jnp.where(mask > 0, s, NEG_INF)
+    s = s - jnp.max(s)
+    e = jnp.exp(s)
+    a = e / jnp.sum(e)                                          # (L,)
+    out_ref[...] = a @ v                                        # (d_k,)
+
+
+def lookat_attention(q_sub, codes, codebooks, v, mask):
+    """Fused LOOKAT decode step for one head.
+
+    q_sub (m, d_sub), codes (L, m) int32, codebooks (m, K, d_sub),
+    v (L, d_k), mask (L,) -> (d_k,)
+    """
+    m, K, d_sub = codebooks.shape
+    d_k = m * d_sub
+    return pl.pallas_call(
+        functools.partial(_lookat_attention_kernel, K=K, d_k=d_k),
+        out_shape=jax.ShapeDtypeStruct((d_k,), jnp.float32),
+        interpret=True,
+    )(q_sub, codes, codebooks, v, mask)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 4: value-side weighted decode (paper §5.2 extension).
+# Same one-hot-matmul trick, transposed: attention weights aggregate into
+# a (m, K) table, then one small (m·K × d_sub) contraction reconstructs
+# the output — per-token values never materialize.
+# ---------------------------------------------------------------------------
+
+def _value_decode_kernel(w_ref, codes_ref, cb_ref, out_ref, *, K):
+    w = w_ref[...]                                        # (L,)
+    codes = codes_ref[...]                                # (L, m)
+    cb = cb_ref[...]                                      # (m, K, d_sub)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, K), 2)
+    onehot = (codes[:, :, None] == iota).astype(jnp.float32)  # (L, m, K)
+    acc = jnp.einsum("l,lmk->mk", w, onehot,
+                     preferred_element_type=jnp.float32)      # (m, K)
+    out = jnp.einsum("mk,mkd->md", acc, cb,
+                     preferred_element_type=jnp.float32)      # (m, d_sub)
+    out_ref[...] = out.reshape(-1)
+
+
+def value_decode(weights, codes, codebooks):
+    """Weighted decode of PQ-coded values. weights (L,), codes (L, m)
+    int32, codebooks (m, K, d_sub) -> (d_k,)."""
+    m, K, d_sub = codebooks.shape
+    return pl.pallas_call(
+        functools.partial(_value_decode_kernel, K=K),
+        out_shape=jax.ShapeDtypeStruct((m * d_sub,), jnp.float32),
+        interpret=True,
+    )(weights, codes, codebooks)
+
+
+# ---------------------------------------------------------------------------
+# Baseline kernel: exact (FP16-storage) attention decode step, for the
+# speedup comparison and as the FP16 serving path's compute.
+# ---------------------------------------------------------------------------
+
+def _exact_attention_kernel(q_ref, k_ref, v_ref, mask_ref, out_ref, *, d_k):
+    q = q_ref[...]                       # (d_k,)
+    k = k_ref[...]                       # (L, d_k)
+    v = v_ref[...]
+    mask = mask_ref[...]
+    s = k @ q / jnp.sqrt(jnp.asarray(d_k, jnp.float32))
+    s = jnp.where(mask > 0, s, NEG_INF)
+    s = s - jnp.max(s)
+    e = jnp.exp(s)
+    a = e / jnp.sum(e)
+    out_ref[...] = a @ v
+
+
+def exact_attention(q, k, v, mask):
+    """Exact single-head decode step. q (d_k,), k/v (L, d_k), mask (L,)."""
+    L, d_k = k.shape
+    return pl.pallas_call(
+        functools.partial(_exact_attention_kernel, d_k=d_k),
+        out_shape=jax.ShapeDtypeStruct((d_k,), jnp.float32),
+        interpret=True,
+    )(q, k, v, mask)
+
+
+# ---------------------------------------------------------------------------
+# Multi-head entry points used by the L2 model (vmap over heads).
+# ---------------------------------------------------------------------------
+
+def lookat_attention_mh(q, codes, codebooks, v, mask):
+    """q (H, d_k), codes (H, L, m), codebooks (H, m, K, d_sub),
+    v (H, L, d_k), mask (L,) -> (H, d_k)"""
+    m = codebooks.shape[1]
+    H, d_k = q.shape
+    q_sub = q.reshape(H, m, d_k // m)
+    return jax.vmap(lookat_attention, in_axes=(0, 0, 0, 0, None))(
+        q_sub, codes, codebooks, v, mask
+    )
+
+
+def exact_attention_mh(q, k, v, mask):
+    """q (H, d_k), k/v (H, L, d_k), mask (L,) -> (H, d_k)"""
+    return jax.vmap(exact_attention, in_axes=(0, 0, 0, None))(q, k, v, mask)

@@ -1,0 +1,49 @@
+"""Scalar-quantization baselines (INT4 / INT8) — python mirror of
+rust/src/quant/.
+
+The paper's baselines (§4.1) are symmetric per-tensor quantizers: a single
+scale maps the tensor's max-|x| to the top of the signed integer range.
+Attention with scalar-quantized keys must dequantize before the Q·Kᵀ
+matmul (§3.2) — that round trip is exactly what these helpers model.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref
+
+
+def quantize_symmetric(x, bits):
+    """Quantize to signed `bits`-bit integers with per-tensor scale.
+
+    Returns (q, scale) with q integer-valued (stored in int32 for jnp
+    convenience; storage accounting uses bits/8 bytes per element).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int32)
+    return q, scale
+
+
+def dequantize(q, scale):
+    """Reconstruct FP values: x ≈ q · scale."""
+    return q.astype(jnp.float32) * scale
+
+
+def quant_roundtrip(x, bits):
+    """quantize → dequantize in one step (what the INT4/INT8 baselines do
+    to keys before the exact attention matmul)."""
+    q, scale = quantize_symmetric(x, bits)
+    return dequantize(q, scale)
+
+
+def int8_attention(q, k, v):
+    """Exact attention over INT8-roundtripped keys. Single head."""
+    return ref.exact_attention(q, quant_roundtrip(k, 8), v)
+
+
+def int4_attention(q, k, v):
+    """Exact attention over INT4-roundtripped keys. Single head."""
+    return ref.exact_attention(q, quant_roundtrip(k, 4), v)

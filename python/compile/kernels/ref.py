@@ -1,0 +1,194 @@
+"""Pure-jnp reference oracles for the LOOKAT kernels.
+
+Everything in this file is deliberately written in the most obvious way
+possible — no tiling, no fusion, no cleverness — so it can serve as the
+ground truth that both the Pallas kernels (python/tests/) and the rust
+implementation (rust/src/attention, rust/src/pq) are validated against.
+
+Shape conventions (single attention head unless noted):
+    q          : (d_k,)            full-precision query
+    k, v       : (L, d_k)          key / value cache
+    codebooks  : (m, K, d_sub)     PQ codebooks, d_sub = d_k / m
+    codes      : (L, m)  int32     PQ codes, values in [0, K)
+    lut        : (m, K)            ADC lookup tables for one query
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Exact attention (the FP16 baseline of the paper, computed in f32 here; the
+# "FP16" in the paper is a storage format — all our quality metrics compare
+# against this oracle, and byte accounting uses 2 bytes/element).
+# ---------------------------------------------------------------------------
+
+def exact_scores(q, k):
+    """Unscaled dot-product scores q·k_l for every cached key. -> (L,)"""
+    return k @ q
+
+
+def softmax(x, axis=-1):
+    """Numerically-stable softmax (subtract-max trick)."""
+    x = x - jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def exact_attention(q, k, v):
+    """Standard single-head attention for one decode step. -> (d_k,)"""
+    d_k = q.shape[-1]
+    s = exact_scores(q, k) / jnp.sqrt(jnp.asarray(d_k, q.dtype))
+    a = softmax(s)
+    return a @ v
+
+
+def exact_attention_weights(q, k):
+    """Attention distribution alpha over the cache. -> (L,)"""
+    d_k = q.shape[-1]
+    s = exact_scores(q, k) / jnp.sqrt(jnp.asarray(d_k, q.dtype))
+    return softmax(s)
+
+
+# ---------------------------------------------------------------------------
+# Product quantization (paper §3.4)
+# ---------------------------------------------------------------------------
+
+def split_subspaces(x, m):
+    """(..., d_k) -> (..., m, d_sub): contiguous subspace decomposition."""
+    d_k = x.shape[-1]
+    assert d_k % m == 0, f"d_k={d_k} not divisible by m={m}"
+    return x.reshape(*x.shape[:-1], m, d_k // m)
+
+
+def pq_encode(keys, codebooks):
+    """Encode keys to PQ codes by nearest centroid per subspace.
+
+    keys (L, d_k), codebooks (m, K, d_sub) -> codes (L, m) int32.
+    """
+    m = codebooks.shape[0]
+    sub = split_subspaces(keys, m)                      # (L, m, d_sub)
+    # squared L2 distance to every centroid: (L, m, K)
+    d2 = jnp.sum(
+        (sub[:, :, None, :] - codebooks[None, :, :, :]) ** 2, axis=-1
+    )
+    return jnp.argmin(d2, axis=-1).astype(jnp.int32)    # (L, m)
+
+
+def pq_decode(codes, codebooks):
+    """Reconstruct approximate keys from codes. -> (L, d_k)"""
+    m, K, d_sub = codebooks.shape
+    recon = jnp.take_along_axis(
+        codebooks[None, :, :, :],                        # (1, m, K, d_sub)
+        codes[:, :, None, None].astype(jnp.int32),       # (L, m, 1, 1)
+        axis=2,
+    )[:, :, 0, :]                                        # (L, m, d_sub)
+    return recon.reshape(codes.shape[0], m * d_sub)
+
+
+# ---------------------------------------------------------------------------
+# Asymmetric distance computation (paper §3.5)
+# ---------------------------------------------------------------------------
+
+def adc_lut(q, codebooks):
+    """LUT_i = q^(i) · C_i^T for every subspace. -> (m, K)"""
+    m = codebooks.shape[0]
+    qs = split_subspaces(q, m)                          # (m, d_sub)
+    return jnp.einsum("md,mkd->mk", qs, codebooks)
+
+
+def adc_scores(codes, lut):
+    """Score every key by summing its m table entries. -> (L,)
+
+    s_l = sum_i LUT_i[codes[l, i]]   — the paper's Algorithm 1 lines 6-8.
+    """
+    gathered = jnp.take_along_axis(
+        lut[None, :, :],                                 # (1, m, K)
+        codes[:, :, None].astype(jnp.int32),             # (L, m, 1)
+        axis=2,
+    )[:, :, 0]                                           # (L, m)
+    return jnp.sum(gathered, axis=-1)
+
+
+def lookat_attention(q, codes, codebooks, v):
+    """Full LOOKAT decode step (paper Algorithm 1). -> (d_k,)
+
+    Scores come from ADC lookups; softmax and the value reduction are
+    unchanged from standard attention (values stay FP16 in the paper).
+    """
+    d_k = q.shape[-1]
+    lut = adc_lut(q, codebooks)
+    s = adc_scores(codes, lut) / jnp.sqrt(jnp.asarray(d_k, q.dtype))
+    a = softmax(s)
+    return a @ v
+
+
+def lookat_attention_weights(q, codes, codebooks):
+    """LOOKAT attention distribution. -> (L,)"""
+    d_k = q.shape[-1]
+    lut = adc_lut(q, codebooks)
+    s = adc_scores(codes, lut) / jnp.sqrt(jnp.asarray(d_k, q.dtype))
+    return softmax(s)
+
+
+# ---------------------------------------------------------------------------
+# Value compression (paper §5.2 extension; mirrors rust/src/pq/values.rs)
+# ---------------------------------------------------------------------------
+
+def value_weighted_decode(weights, codes, codebooks):
+    """Weighted sum of PQ-coded values via weight aggregation.
+
+    o = Σ_l w_l·decode(codes_l) = Σ_i Σ_c (Σ_{l:codes_l[i]=c} w_l)·C_i[c]
+
+    weights (L,), codes (L, m) int32, codebooks (m, K, d_sub) -> (d_k,).
+    Cost O(L·m + m·K·d_sub) instead of O(L·d_k).
+    """
+    m, K, d_sub = codebooks.shape
+    onehot = (codes[:, :, None] ==
+              jnp.arange(K)[None, None, :]).astype(weights.dtype)
+    acc = jnp.einsum("l,lmk->mk", weights, onehot)        # (m, K)
+    out = jnp.einsum("mk,mkd->md", acc, codebooks)        # (m, d_sub)
+    return out.reshape(m * d_sub)
+
+
+def value_weighted_decode_dense(weights, codes, codebooks):
+    """Dense oracle for value_weighted_decode: per-token decode+scale."""
+    recon = pq_decode(codes, codebooks)                    # (L, d_k)
+    return weights @ recon
+
+
+# ---------------------------------------------------------------------------
+# Multi-head wrappers (vmap-free einsum form) with a validity mask, matching
+# the decode-step artifacts lowered by aot.py. mask is (L,) with 1.0 for
+# valid cache slots and 0.0 for padding (scores of padded slots -> -inf).
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def masked_exact_attention_mh(q, k, v, mask):
+    """q (H, d_k), k/v (H, L, d_k), mask (L,) -> (H, d_k)"""
+    d_k = q.shape[-1]
+    s = jnp.einsum("hld,hd->hl", k, q) / jnp.sqrt(jnp.asarray(d_k, q.dtype))
+    s = jnp.where(mask[None, :] > 0, s, NEG_INF)
+    a = softmax(s, axis=-1)
+    return jnp.einsum("hl,hld->hd", a, v)
+
+
+def masked_lookat_attention_mh(q, codes, codebooks, v, mask):
+    """q (H, d_k), codes (H, L, m), codebooks (H, m, K, d_sub),
+    v (H, L, d_k), mask (L,) -> (H, d_k)"""
+    d_k = q.shape[-1]
+    m = codebooks.shape[1]
+    qs = split_subspaces(q, m)                           # (H, m, d_sub)
+    lut = jnp.einsum("hmd,hmkd->hmk", qs, codebooks)     # (H, m, K)
+    gathered = jnp.take_along_axis(
+        lut[:, None, :, :],                              # (H, 1, m, K)
+        codes[:, :, :, None].astype(jnp.int32),          # (H, L, m, 1)
+        axis=3,
+    )[..., 0]                                            # (H, L, m)
+    s = jnp.sum(gathered, axis=-1) / jnp.sqrt(jnp.asarray(d_k, q.dtype))
+    s = jnp.where(mask[None, :] > 0, s, NEG_INF)
+    a = softmax(s, axis=-1)
+    return jnp.einsum("hl,hld->hd", a, v)

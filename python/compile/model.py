@@ -1,0 +1,224 @@
+"""Layer 2 — GPT-2-style transformer graphs in JAX, calling the Pallas
+kernels from ``kernels/``.
+
+These functions are the *author-time* definition of the model compute that
+the rust coordinator executes at runtime via PJRT. ``aot.py`` lowers them
+at canonical shapes to HLO text in ``artifacts/``.
+
+Conventions shared with the rust side (rust/src/model, rust/src/runtime):
+
+  * All compute is f32 ("FP16" in the paper is a storage format; byte
+    accounting uses 2 B/element — see DESIGN.md).
+  * Attention caches are laid out (H, L, d_k); PQ codes (H, L, m) int32
+    (uint8 in rust storage, widened at the PJRT boundary); codebooks
+    (H, m, K, d_sub).
+  * The cache validity mask is (L,) f32, 1.0 = valid slot.
+  * Decode-step block graphs attend over {cache ∪ current token}: the
+    current token's K/V never round-trips through the cache inside the
+    graph; rust appends (and PQ-encodes) it afterwards.
+  * Per-block parameter order (must match rust/src/model/weights.rs):
+      ln1_g, ln1_b, w_qkv (d_model, 3·d_model), b_qkv,
+      w_proj (d_model, d_model), b_proj, ln2_g, ln2_b,
+      w_fc (d_model, d_ff), b_fc, w_out (d_ff, d_model), b_out
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lookat as kern
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Primitive ops
+# ---------------------------------------------------------------------------
+
+
+def layernorm(x, g, b, eps=1e-5):
+    """LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def gelu(x):
+    """GPT-2's tanh-approximation GELU."""
+    return 0.5 * x * (1.0 + jnp.tanh(
+        0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+# ---------------------------------------------------------------------------
+# Attention-step graphs (the serving hot path artifacts)
+# ---------------------------------------------------------------------------
+
+
+def attn_step_fp16(q, k, v, mask):
+    """Multi-head exact-attention decode step (FP16-storage baseline).
+
+    q (H, d_k), k/v (H, L, d_k), mask (L,) -> (H, d_k).
+    """
+    return kern.exact_attention_mh(q, k, v, mask)
+
+
+def attn_step_lookat(q, codes, codebooks, v, mask):
+    """Multi-head LOOKAT decode step: ADC scores over PQ codes.
+
+    q (H, d_k), codes (H, L, m) int32, codebooks (H, m, K, d_sub),
+    v (H, L, d_k), mask (L,) -> (H, d_k).
+    """
+    return kern.lookat_attention_mh(q, codes, codebooks, v, mask)
+
+
+# ---------------------------------------------------------------------------
+# Transformer-block decode graphs
+# ---------------------------------------------------------------------------
+
+
+def _qkv(x, ln1_g, ln1_b, w_qkv, b_qkv, n_head, d_head):
+    """LN + fused QKV projection for a single token. -> 3 × (H, d_k)"""
+    h = layernorm(x, ln1_g, ln1_b)
+    qkv = h @ w_qkv + b_qkv                        # (3·d_model,)
+    d_model = n_head * d_head
+    q = qkv[:d_model].reshape(n_head, d_head)
+    k = qkv[d_model:2 * d_model].reshape(n_head, d_head)
+    v = qkv[2 * d_model:].reshape(n_head, d_head)
+    return q, k, v
+
+
+def _attend_with_self(scores_cache, self_score, mask, v_cache, v_self, d_k):
+    """Softmax over {cache scores, self score} and reduce values.
+
+    scores_cache (H, L) unscaled, self_score (H,) unscaled, mask (L,),
+    v_cache (H, L, d_k), v_self (H, d_k) -> (H, d_k).
+    """
+    inv = 1.0 / jnp.sqrt(jnp.asarray(d_k, jnp.float32))
+    s = jnp.where(mask[None, :] > 0, scores_cache * inv, ref.NEG_INF)
+    ss = self_score[:, None] * inv                          # (H, 1)
+    full = jnp.concatenate([s, ss], axis=1)                 # (H, L+1)
+    mx = jnp.max(full, axis=1, keepdims=True)
+    e = jnp.exp(full - mx)
+    denom = jnp.sum(e, axis=1, keepdims=True)
+    a = e / denom                                           # (H, L+1)
+    out = jnp.einsum("hl,hld->hd", a[:, :-1], v_cache)
+    out = out + a[:, -1:] * v_self
+    return out
+
+
+def block_decode_fp16(x, k_cache, v_cache, mask,
+                      ln1_g, ln1_b, w_qkv, b_qkv, w_proj, b_proj,
+                      ln2_g, ln2_b, w_fc, b_fc, w_out, b_out,
+                      *, n_head, d_head):
+    """One pre-LN transformer block, single-token decode, exact keys.
+
+    Returns (y (d_model,), k_new (H, d_k), v_new (H, d_k)). The caller
+    appends k_new/v_new to the cache after this step.
+    """
+    q, k_new, v_new = _qkv(x, ln1_g, ln1_b, w_qkv, b_qkv, n_head, d_head)
+    scores = jnp.einsum("hld,hd->hl", k_cache, q)           # (H, L)
+    self_score = jnp.einsum("hd,hd->h", k_new, q)           # (H,)
+    attn = _attend_with_self(scores, self_score, mask, v_cache, v_new,
+                             d_head)                        # (H, d_k)
+    attn_flat = attn.reshape(-1)
+    x = x + attn_flat @ w_proj + b_proj
+    h = layernorm(x, ln2_g, ln2_b)
+    x = x + gelu(h @ w_fc + b_fc) @ w_out + b_out
+    return x, k_new, v_new
+
+
+def block_decode_lookat(x, codes, codebooks, v_cache, mask,
+                        ln1_g, ln1_b, w_qkv, b_qkv, w_proj, b_proj,
+                        ln2_g, ln2_b, w_fc, b_fc, w_out, b_out,
+                        *, n_head, d_head):
+    """One transformer block decode with LOOKAT key compression.
+
+    Cached keys exist only as PQ codes; scores come from the Pallas ADC
+    kernel. The current token's own K stays full-precision inside the
+    step (rust encodes it when appending to the cache).
+    """
+    m = codebooks.shape[1]
+    q, k_new, v_new = _qkv(x, ln1_g, ln1_b, w_qkv, b_qkv, n_head, d_head)
+    H = q.shape[0]
+    q_sub = q.reshape(H, m, d_head // m)
+    lut = jnp.einsum("hmd,hmkd->hmk", q_sub, codebooks)     # (H, m, K)
+    gathered = jnp.take_along_axis(
+        lut[:, None, :, :], codes[:, :, :, None].astype(jnp.int32), axis=3
+    )[..., 0]                                               # (H, L, m)
+    scores = jnp.sum(gathered, axis=-1)                     # (H, L)
+    self_score = jnp.einsum("hd,hd->h", k_new, q)
+    attn = _attend_with_self(scores, self_score, mask, v_cache, v_new,
+                             d_head)
+    attn_flat = attn.reshape(-1)
+    x = x + attn_flat @ w_proj + b_proj
+    h = layernorm(x, ln2_g, ln2_b)
+    x = x + gelu(h @ w_fc + b_fc) @ w_out + b_out
+    return x, k_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# Full-model reference (pytest-only; not lowered). Mirrors rust/src/model.
+# ---------------------------------------------------------------------------
+
+
+def init_params(rng, *, vocab, n_layer, n_head, d_head, d_ff, max_pos):
+    """Random-init a GPT-2-shaped parameter pytree (pytest use only)."""
+    d_model = n_head * d_head
+    keys = jax.random.split(rng, 4 + n_layer)
+
+    def dense(key, fan_in, shape):
+        return jax.random.normal(key, shape) * (fan_in ** -0.5)
+
+    params = {
+        "wte": dense(keys[0], d_model, (vocab, d_model)),
+        "wpe": dense(keys[1], d_model, (max_pos, d_model)) * 0.1,
+        "ln_f_g": jnp.ones((d_model,)),
+        "ln_f_b": jnp.zeros((d_model,)),
+        "blocks": [],
+    }
+    for i in range(n_layer):
+        ks = jax.random.split(keys[4 + i], 4)
+        params["blocks"].append({
+            "ln1_g": jnp.ones((d_model,)), "ln1_b": jnp.zeros((d_model,)),
+            "w_qkv": dense(ks[0], d_model, (d_model, 3 * d_model)),
+            "b_qkv": jnp.zeros((3 * d_model,)),
+            "w_proj": dense(ks[1], d_model, (d_model, d_model)),
+            "b_proj": jnp.zeros((d_model,)),
+            "ln2_g": jnp.ones((d_model,)), "ln2_b": jnp.zeros((d_model,)),
+            "w_fc": dense(ks[2], d_model, (d_model, d_ff)),
+            "b_fc": jnp.zeros((d_ff,)),
+            "w_out": dense(ks[3], d_ff, (d_ff, d_model)),
+            "b_out": jnp.zeros((d_model,)),
+        })
+    return params
+
+
+def prefill(params, token_ids, *, n_head, d_head):
+    """Causal full-context forward. Returns (logits (T, V), per-layer
+    (k, v) caches each (H, T, d_k))."""
+    T = token_ids.shape[0]
+    x = params["wte"][token_ids] + params["wpe"][:T]        # (T, d_model)
+    caches = []
+    causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+    for blk in params["blocks"]:
+        h = layernorm(x, blk["ln1_g"], blk["ln1_b"])
+        qkv = h @ blk["w_qkv"] + blk["b_qkv"]               # (T, 3·d_model)
+        d_model = n_head * d_head
+        q = qkv[:, :d_model].reshape(T, n_head, d_head).transpose(1, 0, 2)
+        k = qkv[:, d_model:2 * d_model].reshape(T, n_head, d_head
+                                                ).transpose(1, 0, 2)
+        v = qkv[:, 2 * d_model:].reshape(T, n_head, d_head
+                                         ).transpose(1, 0, 2)
+        s = jnp.einsum("htd,hsd->hts", q, k) / jnp.sqrt(
+            jnp.asarray(d_head, jnp.float32))
+        s = jnp.where(causal[None], s, ref.NEG_INF)
+        a = ref.softmax(s, axis=-1)
+        attn = jnp.einsum("hts,hsd->htd", a, v)             # (H, T, d_k)
+        attn = attn.transpose(1, 0, 2).reshape(T, d_model)
+        x = x + attn @ blk["w_proj"] + blk["b_proj"]
+        h2 = layernorm(x, blk["ln2_g"], blk["ln2_b"])
+        x = x + gelu(h2 @ blk["w_fc"] + blk["b_fc"]) @ blk["w_out"] \
+            + blk["b_out"]
+        caches.append((k, v))
+    x = layernorm(x, params["ln_f_g"], params["ln_f_b"])
+    logits = x @ params["wte"].T
+    return logits, caches

@@ -1,0 +1,247 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lookat as kern
+from compile.kernels import ref
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape,
+                             dtype=jnp.float32)
+
+
+def make_case(seed, L, d_k, m, K=256):
+    """Random q, keys, values, learned-ish codebooks and codes."""
+    kq, kk, kv, kc = [jax.random.PRNGKey(seed * 7 + i) for i in range(4)]
+    q = jax.random.normal(kq, (d_k,), jnp.float32)
+    keys = jax.random.normal(kk, (L, d_k), jnp.float32)
+    v = jax.random.normal(kv, (L, d_k), jnp.float32)
+    d_sub = d_k // m
+    # "codebooks" = random centroids; quality doesn't matter for kernel
+    # equivalence, only for the end-to-end fidelity experiments.
+    codebooks = jax.random.normal(kc, (m, K, d_sub), jnp.float32)
+    codes = ref.pq_encode(keys, codebooks)
+    return q, keys, v, codebooks, codes
+
+
+# ---------------------------------------------------------------------------
+# lut_build
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,d_k", [(2, 64), (4, 64), (8, 64), (16, 64),
+                                   (4, 32), (8, 128)])
+def test_lut_build_matches_ref(m, d_k):
+    q, _, _, codebooks, _ = make_case(1, 128, d_k, m)
+    got = kern.lut_build(q.reshape(m, d_k // m), codebooks)
+    want = ref.adc_lut(q, codebooks)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_lut_build_zero_query_gives_zero_tables():
+    _, _, _, codebooks, _ = make_case(2, 128, 64, 4)
+    got = kern.lut_build(jnp.zeros((4, 16)), codebooks)
+    assert jnp.all(got == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# adc_scores
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("L", [128, 256, 512, 1024])
+@pytest.mark.parametrize("m", [2, 4, 8, 16])
+def test_adc_scores_matches_ref(L, m):
+    q, _, _, codebooks, codes = make_case(3, L, 64, m)
+    lut = ref.adc_lut(q, codebooks)
+    got = kern.adc_scores(codes, lut)
+    want = ref.adc_scores(codes, lut)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_adc_scores_exact_when_keys_are_centroids():
+    """If every key IS a centroid, ADC scores equal exact scores."""
+    m, K, d_k, L = 4, 256, 64, 128
+    _, _, _, codebooks, _ = make_case(4, L, d_k, m)
+    # build keys from randomly chosen centroids
+    idx = jax.random.randint(jax.random.PRNGKey(9), (L, m), 0, K)
+    keys = ref.pq_decode(idx.astype(jnp.int32), codebooks)
+    codes = ref.pq_encode(keys, codebooks)
+    q = rand(5, d_k)
+    lut = ref.adc_lut(q, codebooks)
+    got = kern.adc_scores(codes, lut)
+    np.testing.assert_allclose(got, ref.exact_scores(q, keys),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_adc_scores_rejects_unaligned_L():
+    q, _, _, codebooks, codes = make_case(6, 128, 64, 4)
+    lut = ref.adc_lut(q, codebooks)
+    with pytest.raises(AssertionError):
+        kern.adc_scores(codes[:100], lut)
+
+
+# ---------------------------------------------------------------------------
+# fused lookat_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("L,m", [(128, 2), (128, 4), (256, 8), (512, 4),
+                                 (1024, 16)])
+def test_lookat_attention_matches_ref(L, m):
+    q, _, v, codebooks, codes = make_case(7, L, 64, m)
+    mask = jnp.ones((L,), jnp.float32)
+    got = kern.lookat_attention(q.reshape(m, 64 // m), codes, codebooks,
+                                v, mask)
+    want = ref.lookat_attention(q, codes, codebooks, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_lookat_attention_respects_mask():
+    """Masked-out slots must not contribute: compare against the oracle
+    run on only the valid prefix."""
+    L, m, valid = 256, 4, 100
+    q, _, v, codebooks, codes = make_case(8, L, 64, m)
+    mask = (jnp.arange(L) < valid).astype(jnp.float32)
+    got = kern.lookat_attention(q.reshape(m, 16), codes, codebooks, v, mask)
+    want = ref.lookat_attention(q, codes[:valid], codebooks, v[:valid])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_exact_attention_kernel_matches_ref():
+    L, d_k = 256, 64
+    q, k, v, _, _ = make_case(9, L, d_k, 4)
+    mask = jnp.ones((L,), jnp.float32)
+    got = kern.exact_attention(q, k, v, mask)
+    want = ref.exact_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_exact_attention_kernel_respects_mask():
+    L, d_k, valid = 256, 64, 37
+    q, k, v, _, _ = make_case(10, L, d_k, 4)
+    mask = (jnp.arange(L) < valid).astype(jnp.float32)
+    got = kern.exact_attention(q, k, v, mask)
+    want = ref.exact_attention(q, k[:valid], v[:valid])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# multi-head wrappers
+# ---------------------------------------------------------------------------
+
+def test_lookat_attention_mh_matches_ref():
+    H, L, d_k, m, K = 4, 128, 64, 4, 256
+    kq, kk, kv, kc = [jax.random.PRNGKey(20 + i) for i in range(4)]
+    q = jax.random.normal(kq, (H, d_k), jnp.float32)
+    keys = jax.random.normal(kk, (H, L, d_k), jnp.float32)
+    v = jax.random.normal(kv, (H, L, d_k), jnp.float32)
+    codebooks = jax.random.normal(kc, (H, m, K, d_k // m), jnp.float32)
+    codes = jnp.stack([ref.pq_encode(keys[h], codebooks[h])
+                       for h in range(H)])
+    mask = jnp.ones((L,), jnp.float32)
+    got = kern.lookat_attention_mh(q, codes, codebooks, v, mask)
+    want = ref.masked_lookat_attention_mh(q, codes, codebooks, v, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_exact_attention_mh_matches_ref():
+    H, L, d_k = 3, 128, 64
+    kq, kk, kv = [jax.random.PRNGKey(30 + i) for i in range(3)]
+    q = jax.random.normal(kq, (H, d_k), jnp.float32)
+    k = jax.random.normal(kk, (H, L, d_k), jnp.float32)
+    v = jax.random.normal(kv, (H, L, d_k), jnp.float32)
+    mask = jnp.ones((L,), jnp.float32)
+    got = kern.exact_attention_mh(q, k, v, mask)
+    want = ref.masked_exact_attention_mh(q, k, v, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: shapes, m, and dtype-robustness of the kernel vs ref
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    L_tiles=st.integers(min_value=1, max_value=8),
+    m=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_adc_scores_equivalence(L_tiles, m, seed):
+    L = L_tiles * kern.L_TILE
+    q, _, _, codebooks, codes = make_case(seed % 1000, L, 64, m, K=256)
+    lut = ref.adc_lut(q, codebooks)
+    got = kern.adc_scores(codes, lut)
+    want = ref.adc_scores(codes, lut)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d_k=st.sampled_from([32, 64, 128]),
+    m=st.sampled_from([2, 4, 8]),
+    K=st.sampled_from([16, 64, 256]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_lut_build_equivalence(d_k, m, K, seed):
+    kq, kc = jax.random.PRNGKey(seed), jax.random.PRNGKey(seed + 1)
+    q = jax.random.normal(kq, (d_k,), jnp.float32)
+    codebooks = jax.random.normal(kc, (m, K, d_k // m), jnp.float32)
+    got = kern.lut_build(q.reshape(m, d_k // m), codebooks)
+    np.testing.assert_allclose(got, ref.adc_lut(q, codebooks),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    L=st.sampled_from([128, 256, 512]),
+    m=st.sampled_from([2, 4, 8, 16]),
+    valid_frac=st.floats(min_value=0.1, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_fused_lookat_masked(L, m, valid_frac, seed):
+    q, _, v, codebooks, codes = make_case(seed % 1000, L, 64, m)
+    valid = max(1, int(L * valid_frac))
+    mask = (jnp.arange(L) < valid).astype(jnp.float32)
+    got = kern.lookat_attention(q.reshape(m, 64 // m), codes, codebooks,
+                                v, mask)
+    want = ref.lookat_attention(q, codes[:valid], codebooks, v[:valid])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# PQ oracle invariants (shared ground truth with rust/src/pq)
+# ---------------------------------------------------------------------------
+
+def test_pq_roundtrip_exact_for_centroid_keys():
+    m, K, d_k, L = 4, 64, 64, 96
+    codebooks = rand(40, m, K, d_k // m)
+    idx = jax.random.randint(jax.random.PRNGKey(41), (L, m), 0, K)
+    keys = ref.pq_decode(idx.astype(jnp.int32), codebooks)
+    codes = ref.pq_encode(keys, codebooks)
+    np.testing.assert_allclose(ref.pq_decode(codes, codebooks), keys,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pq_codes_in_range():
+    q, _, _, codebooks, codes = make_case(42, 256, 64, 8)
+    assert int(codes.min()) >= 0
+    assert int(codes.max()) < codebooks.shape[1]
+
+
+def test_pq_encode_picks_nearest():
+    """Brute-force check on a tiny case."""
+    m, K, d_sub = 2, 8, 4
+    codebooks = rand(43, m, K, d_sub)
+    keys = rand(44, 10, m * d_sub)
+    codes = ref.pq_encode(keys, codebooks)
+    sub = keys.reshape(10, m, d_sub)
+    for l in range(10):
+        for i in range(m):
+            d2 = jnp.sum((codebooks[i] - sub[l, i]) ** 2, axis=-1)
+            assert int(codes[l, i]) == int(jnp.argmin(d2))

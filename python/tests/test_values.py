@@ -1,0 +1,76 @@
+"""Value-compression extension (paper §5.2): Pallas kernel vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lookat as kern
+from compile.kernels import ref
+
+
+def make_case(seed, L, d_k, m, K=64):
+    kw, kv, kc = [jax.random.PRNGKey(seed * 11 + i) for i in range(3)]
+    w = jax.nn.softmax(jax.random.normal(kw, (L,), jnp.float32))
+    values = jax.random.normal(kv, (L, d_k), jnp.float32)
+    codebooks = jax.random.normal(kc, (m, K, d_k // m), jnp.float32)
+    codes = ref.pq_encode(values, codebooks)
+    return w, values, codebooks, codes
+
+
+@pytest.mark.parametrize("L,m", [(64, 2), (128, 4), (256, 8), (100, 4)])
+def test_aggregated_matches_dense_oracle(L, m):
+    w, _, codebooks, codes = make_case(1, L, 64, m)
+    got = ref.value_weighted_decode(w, codes, codebooks)
+    want = ref.value_weighted_decode_dense(w, codes, codebooks)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("L,m", [(64, 2), (128, 4), (256, 8)])
+def test_pallas_value_decode_matches_ref(L, m):
+    w, _, codebooks, codes = make_case(2, L, 64, m)
+    got = kern.value_decode(w, codes, codebooks)
+    want = ref.value_weighted_decode(w, codes, codebooks)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_one_hot_weight_reconstructs_single_value():
+    _, _, codebooks, codes = make_case(3, 32, 32, 4)
+    w = jnp.zeros((32,)).at[5].set(1.0)
+    got = kern.value_decode(w, codes, codebooks)
+    want = ref.pq_decode(codes, codebooks)[5]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_zero_weights_zero_output():
+    _, _, codebooks, codes = make_case(4, 32, 32, 4)
+    got = kern.value_decode(jnp.zeros((32,)), codes, codebooks)
+    assert jnp.all(got == 0.0)
+
+
+def test_fidelity_against_uncompressed_values():
+    # iid gaussian values are the PQ worst case (no structure to exploit;
+    # random codebooks here, not even trained) — the weighted sum still
+    # tracks the exact reduction directionally; trained codebooks on real
+    # value distributions score ~0.98 (see rust ablation_values report)
+    w, values, codebooks, codes = make_case(5, 256, 64, 8, K=256)
+    approx = ref.value_weighted_decode(w, codes, codebooks)
+    exact = w @ values
+    cos = float(jnp.dot(approx, exact) /
+                (jnp.linalg.norm(approx) * jnp.linalg.norm(exact)))
+    assert cos > 0.5, cos
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    L=st.sampled_from([32, 64, 128]),
+    m=st.sampled_from([2, 4, 8]),
+    K=st.sampled_from([16, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_value_decode_equivalence(L, m, K, seed):
+    w, _, codebooks, codes = make_case(seed % 997, L, 32, m, K)
+    got = kern.value_decode(w, codes, codebooks)
+    want = ref.value_weighted_decode_dense(w, codes, codebooks)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,16 @@
+//! Ablation bench A3: calibration-transfer matrix (paper §5.1).
+//!
+//!   cargo bench --bench ablation_calibration
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let m = lookat::experiments::ablation_calibration::run(false)?;
+    let gap =
+        lookat::experiments::ablation_calibration::transfer_gap(&m.cosine);
+    println!(
+        "\n[bench] ablation_calibration regenerated in {:.1}s \
+         (in-domain − cross-domain cosine gap: {gap:.4})",
+        t0.elapsed().as_secs_f64(),
+    );
+    Ok(())
+}

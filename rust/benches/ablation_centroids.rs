@@ -1,0 +1,15 @@
+//! Ablation bench A2: centroid-count sweep validating Proposition 1.
+//!
+//!   cargo bench --bench ablation_centroids
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let rows = lookat::experiments::ablation_centroids::run(false)?;
+    let c = lookat::experiments::ablation_centroids::fit_constant(&rows);
+    println!(
+        "\n[bench] ablation_centroids regenerated in {:.1}s \
+         (fitted 1-rho ≈ {c:.3}·d_k/(mK))",
+        t0.elapsed().as_secs_f64(),
+    );
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! Ablation bench A1: value-compression extension (paper §5.2).
+//!
+//!   cargo bench --bench ablation_values
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let rows = lookat::experiments::ablation_values::run(false)?;
+    println!(
+        "\n[bench] ablation_values regenerated in {:.1}s ({} configs)",
+        t0.elapsed().as_secs_f64(),
+        rows.len()
+    );
+    Ok(())
+}

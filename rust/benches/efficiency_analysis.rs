@@ -1,0 +1,14 @@
+//! Bench E1: paper §4.7 efficiency analysis — analytic FLOP/bandwidth
+//! model plus measured exact-vs-ADC score-phase timings on this host.
+//!
+//!   cargo bench --bench efficiency_analysis
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    lookat::experiments::efficiency::run(false)?;
+    println!(
+        "\n[bench] efficiency analysis done in {:.1}s",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

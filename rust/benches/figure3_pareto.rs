@@ -1,0 +1,15 @@
+//! Bench F3: regenerates paper Figure 3 (four panels + Pareto frontier),
+//! emitting the CSV series for external plotting.
+//!
+//!   cargo bench --bench figure3_pareto
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let fig = lookat::experiments::figure3::run(false)?;
+    println!(
+        "\n[bench] figure3 regenerated in {:.1}s (frontier: {})",
+        t0.elapsed().as_secs_f64(),
+        fig.pareto.join(", ")
+    );
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! Microbenchmarks of the hot paths (the §Perf targets in DESIGN.md):
+//! ADC scan throughput, LUT build, PQ encode, K-Means, exact-attention
+//! matvec baseline, KV-cache append/gather, and the fused decode step.
+//!
+//!   cargo bench --bench micro_hotpaths
+
+use lookat::attention;
+use lookat::kvcache::{KeyStorage, KvCache};
+use lookat::pq::{kmeans::kmeans, LookupTable, PqCodec, TrainOpts};
+use lookat::util::bench::{black_box, Bench};
+use lookat::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new();
+    let d_k = 64;
+    let l = 512;
+    let mut rng = Pcg32::seed(0xBE7C);
+    let keys: Vec<f32> = (0..l * d_k).map(|_| rng.next_f32_std()).collect();
+    let values: Vec<f32> =
+        (0..l * d_k).map(|_| rng.next_f32_std()).collect();
+    let q: Vec<f32> = (0..d_k).map(|_| rng.next_f32_std()).collect();
+
+    // --- exact score scan (the baseline LOOKAT replaces) --------------
+    let mut scores = vec![0.0f32; l];
+    b.run_throughput(
+        "exact_scores/L512_d64",
+        l as f64,
+        (l * d_k * 4) as f64,
+        || {
+            for i in 0..l {
+                scores[i] = lookat::tensor::dot(
+                    &q, &keys[i * d_k..(i + 1) * d_k]);
+            }
+            black_box(&scores);
+        },
+    );
+
+    // --- ADC scan for each paper m -------------------------------------
+    for m in [2usize, 4, 8, 16] {
+        let codec = PqCodec::train(
+            &keys, d_k, m, 256,
+            &TrainOpts { iters: 5, ..Default::default() });
+        let codes = codec.encode_batch(&keys, l);
+        let lut = LookupTable::build(&q, &codec.codebook);
+        b.run_throughput(
+            &format!("adc_scan/m{m}_L512"),
+            l as f64,
+            (l * m) as f64,
+            || {
+                lut.scores_into(&codes, l, &mut scores);
+                black_box(&scores);
+            },
+        );
+        b.run_items(&format!("lut_build/m{m}_K256"), (m * 256) as f64, || {
+            black_box(LookupTable::build(&q, &codec.codebook));
+        });
+        b.run_items(&format!("pq_encode/m{m}"), 1.0, || {
+            black_box(codec.encode(&q));
+        });
+    }
+
+    // --- full attention steps ------------------------------------------
+    let codec4 = PqCodec::train(
+        &keys, d_k, 4, 256, &TrainOpts { iters: 5, ..Default::default() });
+    let codes4 = codec4.encode_batch(&keys, l);
+    b.run_items("attention/exact_L512", l as f64, || {
+        black_box(attention::exact_attention(&q, &keys, &values, l));
+    });
+    b.run_items("attention/lookat4_L512", l as f64, || {
+        black_box(attention::lookat_attention(
+            &q, &codes4, &codec4, &values, l));
+    });
+    b.run_items("attention/int4_L512", l as f64, || {
+        black_box(attention::scalar_quant_attention(
+            &q, &keys, &values, l, 4));
+    });
+
+    // --- K-Means training (codebook build cost) -------------------------
+    let sub: Vec<f32> = keys[..l * 16].to_vec();
+    b.run("kmeans/K64_d16_n512_it5", || {
+        let mut r = Pcg32::seed(3);
+        black_box(kmeans(&sub, 16, 64, 5, 1e-4, &mut r));
+    });
+
+    // --- KV-cache ops ----------------------------------------------------
+    let h = 12;
+    let kv: Vec<f32> = (0..h * d_k).map(|_| rng.next_f32_std()).collect();
+    b.run_items("kvcache/append_fp16_12h", 1.0, || {
+        let mut c = KvCache::new(h, d_k, 24, KeyStorage::Fp16);
+        c.create_seq(1).unwrap();
+        for _ in 0..256 {
+            c.append(1, &kv, &kv).unwrap();
+        }
+        black_box(c.stats());
+    });
+    let codecs: Vec<PqCodec> = (0..h)
+        .map(|_| {
+            PqCodec::train(&keys, d_k, 4, 256,
+                           &TrainOpts { iters: 3, ..Default::default() })
+        })
+        .collect();
+    let storage = KeyStorage::Pq { codecs: std::sync::Arc::new(codecs) };
+    b.run_items("kvcache/append_pq4_12h", 1.0, || {
+        let mut c = KvCache::new(h, d_k, 24, storage.clone());
+        c.create_seq(1).unwrap();
+        for _ in 0..256 {
+            c.append(1, &kv, &kv).unwrap();
+        }
+        black_box(c.stats());
+    });
+    {
+        let mut c = KvCache::new(h, d_k, 24, KeyStorage::Fp16);
+        c.create_seq(1).unwrap();
+        for _ in 0..512 {
+            c.append(1, &kv, &kv).unwrap();
+        }
+        let mut out = Vec::new();
+        b.run_throughput(
+            "kvcache/gather_keys_L512",
+            512.0,
+            (512 * d_k * 4) as f64,
+            || {
+                c.gather_keys_into(1, 3, &mut out).unwrap();
+                black_box(&out);
+            },
+        );
+    }
+
+    b.write_report("micro_hotpaths")?;
+    println!("\n[bench] micro_hotpaths written to artifacts/reports/");
+    Ok(())
+}

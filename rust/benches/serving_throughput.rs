@@ -1,0 +1,64 @@
+//! Serving throughput bench: the coordinator end-to-end on the same
+//! trace under every backend — decode tok/s, TTFT, peak key-cache bytes.
+//!
+//!   cargo bench --bench serving_throughput
+
+use lookat::coordinator::{
+    AttentionBackend, BatcherConfig, EngineConfig, Router, RouterConfig,
+};
+use lookat::model::ModelConfig;
+use lookat::util::json::Json;
+use lookat::workload::{TraceConfig, TraceGenerator};
+
+fn bench_backend(backend: AttentionBackend)
+    -> anyhow::Result<lookat::coordinator::ServingReport>
+{
+    let mut model = ModelConfig::gpt2_layer0();
+    model.n_layer = 2;
+    let mut router = Router::build(RouterConfig {
+        engine: EngineConfig {
+            model,
+            backend,
+            seed: 77,
+            cache_blocks: 512,
+            calib_tokens: 192,
+        },
+        batcher: BatcherConfig { max_batch: 4, max_queue: 256 },
+        max_prompt_tokens: 96,
+    })?;
+    let trace = TraceGenerator::new(TraceConfig {
+        rate: 50.0, // saturating: throughput-bound measurement
+        num_requests: 16,
+        prompt_chars: (150, 350),
+        gen_tokens: (8, 16),
+        seed: 5150,
+    })
+    .generate();
+    let reqs = router.tokenize_trace(&trace);
+    let report = router.serve_trace(reqs)?;
+    println!("{}", report.pretty());
+    Ok(report)
+}
+
+fn main() -> anyhow::Result<()> {
+    let backends = [
+        AttentionBackend::Fp16Exact,
+        AttentionBackend::ScalarQuant { bits: 8 },
+        AttentionBackend::ScalarQuant { bits: 4 },
+        AttentionBackend::Lookat { m: 4, k: 256 },
+        AttentionBackend::Lookat { m: 2, k: 256 },
+    ];
+    let mut arr = Vec::new();
+    for b in backends {
+        let report = bench_backend(b)?;
+        arr.push(report.to_json());
+    }
+    let dir = lookat::experiments::report::reports_dir();
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(
+        dir.join("serving_throughput.json"),
+        Json::Arr(arr).to_string_pretty(),
+    )?;
+    println!("\n[bench] serving_throughput written to artifacts/reports/");
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Bench T1: regenerates paper Table 1 (compression vs quality) at full
+//! size and times the per-method evaluation cost.
+//!
+//!   cargo bench --bench table1_compression_quality
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let rows = lookat::experiments::table1::run(false)?;
+    println!(
+        "\n[bench] table1 regenerated in {:.1}s ({} methods × 3 samples)",
+        t0.elapsed().as_secs_f64(),
+        rows.len()
+    );
+    Ok(())
+}

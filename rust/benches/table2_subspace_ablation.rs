@@ -1,0 +1,14 @@
+//! Bench T2: regenerates paper Table 2 (subspace granularity ablation).
+//!
+//!   cargo bench --bench table2_subspace_ablation
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let rows = lookat::experiments::table2::run(false)?;
+    println!(
+        "\n[bench] table2 regenerated in {:.1}s ({} granularities)",
+        t0.elapsed().as_secs_f64(),
+        rows.len()
+    );
+    Ok(())
+}

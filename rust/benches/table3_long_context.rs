@@ -1,0 +1,15 @@
+//! Bench T3: regenerates paper Table 3 (quality vs sequence length,
+//! LOOKAT-4, L up to 1024).
+//!
+//!   cargo bench --bench table3_long_context
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let rows = lookat::experiments::table3::run(false)?;
+    println!(
+        "\n[bench] table3 regenerated in {:.1}s ({} lengths)",
+        t0.elapsed().as_secs_f64(),
+        rows.len()
+    );
+    Ok(())
+}

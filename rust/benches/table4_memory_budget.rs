@@ -1,0 +1,14 @@
+//! Bench T4: regenerates paper Table 4 (equal-memory head-to-head).
+//!
+//!   cargo bench --bench table4_memory_budget
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let rows = lookat::experiments::table4::run(false)?;
+    println!(
+        "\n[bench] table4 regenerated in {:.1}s ({} budgets)",
+        t0.elapsed().as_secs_f64(),
+        rows.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,621 @@
+//! The inference engine: transformer decode over the paged KV-cache with
+//! a pluggable attention backend.
+//!
+//! Backends:
+//! * `Fp16Exact` — raw keys in cache, exact attention (the baseline)
+//! * `Lookat{m}` — keys stored as PQ codes, ADC attention (the paper)
+//! * `ScalarQuant{bits}` — raw keys, INT4/INT8 round-trip attention
+//! * `PjrtFp16` / `PjrtLookat{m}` — attention steps executed through the
+//!   AOT artifacts on the PJRT CPU client (proves the 3-layer contract
+//!   end-to-end in the serving loop)
+//!
+//! LOOKAT codebooks are trained once at engine build from a calibration
+//! corpus (paper §3.4); the serving hot path never touches python.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context};
+
+use crate::attention;
+use crate::kvcache::{CacheError, KeyStorage, KvCache, SeqId};
+use crate::model::{Gpt2, ModelConfig, Weights};
+use crate::pq::{LookupTable, PqCodec, TrainOpts};
+use crate::runtime::{InputArg, Runtime};
+use crate::workload::{Corpus, Genre};
+
+/// Which attention implementation the engine uses at decode time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AttentionBackend {
+    /// exact attention over FP16-stored keys
+    Fp16Exact,
+    /// LOOKAT: ADC over PQ codes with `m` subspaces, K centroids
+    Lookat { m: usize, k: usize },
+    /// INT4/INT8 dequantize-then-attend baseline
+    ScalarQuant { bits: u8 },
+    /// FP16 attention executed via the AOT artifact on PJRT
+    PjrtFp16,
+    /// LOOKAT attention executed via the AOT artifact on PJRT
+    PjrtLookat { m: usize },
+}
+
+impl AttentionBackend {
+    pub fn name(&self) -> String {
+        match self {
+            AttentionBackend::Fp16Exact => "fp16".into(),
+            AttentionBackend::Lookat { m, .. } => format!("lookat-{m}"),
+            AttentionBackend::ScalarQuant { bits } => format!("int{bits}"),
+            AttentionBackend::PjrtFp16 => "pjrt-fp16".into(),
+            AttentionBackend::PjrtLookat { m } => format!("pjrt-lookat-{m}"),
+        }
+    }
+
+    fn needs_pq(&self) -> Option<(usize, usize)> {
+        match self {
+            AttentionBackend::Lookat { m, k } => Some((*m, *k)),
+            AttentionBackend::PjrtLookat { m } => Some((*m, 256)),
+            _ => None,
+        }
+    }
+}
+
+/// Engine construction parameters.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub model: ModelConfig,
+    pub backend: AttentionBackend,
+    pub seed: u64,
+    /// KV-cache budget in blocks per layer
+    pub cache_blocks: usize,
+    /// tokens of calibration text for PQ codebook training
+    pub calib_tokens: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            model: ModelConfig::gpt2_layer0(),
+            backend: AttentionBackend::Fp16Exact,
+            seed: 0xE47,
+            cache_blocks: 256,
+            calib_tokens: 384,
+        }
+    }
+}
+
+struct SeqMeta {
+    pos: usize,
+    last_hidden: Vec<f32>,
+}
+
+/// The engine: model + per-layer caches + backend dispatch.
+pub struct Engine {
+    pub model: Gpt2,
+    pub backend: AttentionBackend,
+    caches: Vec<KvCache>,
+    seqs: std::collections::HashMap<SeqId, SeqMeta>,
+    runtime: Option<Runtime>,
+    /// padded cache lengths the PJRT artifacts were lowered at
+    pjrt_lens: Vec<usize>,
+    // scratch buffers reused across decode steps (no hot-loop allocation)
+    scratch_keys: Vec<f32>,
+    scratch_vals: Vec<f32>,
+    scratch_codes: Vec<u8>,
+}
+
+impl Engine {
+    /// Build an engine: init weights, train codebooks if the backend
+    /// needs them, open the PJRT runtime if requested.
+    pub fn build(cfg: &EngineConfig) -> anyhow::Result<Engine> {
+        let weights = Weights::random(&cfg.model, cfg.seed);
+        Self::with_weights(cfg, weights)
+    }
+
+    /// Build with explicit weights (examples load from disk).
+    pub fn with_weights(cfg: &EngineConfig, weights: Weights)
+        -> anyhow::Result<Engine>
+    {
+        let model = Gpt2::new(weights);
+        let (h, d_k) = (cfg.model.n_head, cfg.model.d_head);
+
+        // PQ backends: train per-layer, per-head codebooks on calibration
+        // keys extracted exactly like the paper's §3.4 (prefill a corpus,
+        // take each head's keys).
+        let storage_per_layer: Vec<KeyStorage> =
+            if let Some((m, k)) = cfg.backend.needs_pq() {
+                let calib = Self::calibration_keys(&model, cfg)?;
+                calib
+                    .into_iter()
+                    .map(|per_head| {
+                        let codecs: Vec<PqCodec> = per_head
+                            .iter()
+                            .map(|keys| {
+                                PqCodec::train(
+                                    keys,
+                                    d_k,
+                                    m,
+                                    k,
+                                    &TrainOpts {
+                                        seed: cfg.seed ^ 0x90,
+                                        ..Default::default()
+                                    },
+                                )
+                            })
+                            .collect();
+                        KeyStorage::Pq { codecs: Arc::new(codecs) }
+                    })
+                    .collect()
+            } else {
+                (0..cfg.model.n_layer).map(|_| KeyStorage::Fp16).collect()
+            };
+
+        let caches = storage_per_layer
+            .into_iter()
+            .map(|st| KvCache::new(h, d_k, cfg.cache_blocks, st))
+            .collect();
+
+        let runtime = match cfg.backend {
+            AttentionBackend::PjrtFp16 | AttentionBackend::PjrtLookat { .. } => {
+                Some(Runtime::open_default().context(
+                    "PJRT backend needs artifacts (run `make artifacts`)",
+                )?)
+            }
+            _ => None,
+        };
+        let pjrt_lens = match &runtime {
+            Some(rt) => {
+                let kind = if matches!(cfg.backend,
+                                       AttentionBackend::PjrtFp16) {
+                    "attn_fp16"
+                } else {
+                    "attn_lookat"
+                };
+                let mut lens: Vec<usize> = rt
+                    .manifest
+                    .by_kind(kind)
+                    .iter()
+                    .filter(|a| match cfg.backend {
+                        AttentionBackend::PjrtLookat { m } => {
+                            a.meta_usize("m") == Some(m)
+                        }
+                        _ => true,
+                    })
+                    .filter_map(|a| a.meta_usize("L"))
+                    .collect();
+                lens.sort_unstable();
+                if lens.is_empty() {
+                    bail!("no artifacts for backend {:?}", cfg.backend);
+                }
+                lens
+            }
+            None => vec![],
+        };
+
+        Ok(Engine {
+            model,
+            backend: cfg.backend.clone(),
+            caches,
+            seqs: std::collections::HashMap::new(),
+            runtime,
+            pjrt_lens,
+            scratch_keys: Vec::new(),
+            scratch_vals: Vec::new(),
+            scratch_codes: Vec::new(),
+        })
+    }
+
+    /// Calibration keys per layer per head: prefill a mixed-genre corpus.
+    fn calibration_keys(model: &Gpt2, cfg: &EngineConfig)
+        -> anyhow::Result<Vec<Vec<Vec<f32>>>>
+    {
+        let tok = crate::model::ByteTokenizer::new();
+        let mut text = String::new();
+        for (i, g) in Genre::ALL.iter().enumerate() {
+            text.push_str(
+                &Corpus::new(*g, cfg.seed ^ i as u64)
+                    .generate(cfg.calib_tokens * 2),
+            );
+        }
+        let ids = tok.encode_clamped(
+            &text,
+            cfg.calib_tokens.min(cfg.model.max_pos),
+        );
+        let out = model.prefill(&ids);
+        let d_k = cfg.model.d_head;
+        Ok((0..cfg.model.n_layer)
+            .map(|layer| {
+                (0..cfg.model.n_head)
+                    .map(|head| out.head_keys(layer, head, d_k))
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// Sequences currently registered.
+    pub fn active_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Cache stats of layer 0 (all layers are symmetric).
+    pub fn cache_stats(&self) -> crate::kvcache::CacheStats {
+        self.caches[0].stats()
+    }
+
+    /// Whether the cache can admit a sequence of `prompt + gen` tokens.
+    pub fn can_admit(&self, total_tokens: usize) -> bool {
+        let blocks_needed =
+            total_tokens.div_ceil(crate::kvcache::BLOCK_TOKENS);
+        self.caches.iter().all(|c| {
+            c.stats().blocks_total - c.stats().blocks_allocated
+                >= blocks_needed
+        })
+    }
+
+    /// Admit a sequence: prefill its prompt, fill every layer's cache,
+    /// return nothing (call [`Engine::decode_one`] for tokens).
+    pub fn start_seq(&mut self, id: SeqId, prompt: &[u32])
+        -> Result<(), CacheError>
+    {
+        assert!(!prompt.is_empty(), "empty prompt");
+        for c in self.caches.iter_mut() {
+            c.create_seq(id)?;
+        }
+        let out = self.model.prefill(prompt);
+        let (h, d_k) = (self.model.n_head(), self.model.d_head());
+        for layer in 0..self.model.n_layer() {
+            let (k_cache, v_cache) = &out.caches[layer];
+            for t in 0..prompt.len() {
+                // rows are (d_model) = heads contiguous — exactly the
+                // (H × d_k) layout append expects
+                let res = self.caches[layer].append(
+                    id, k_cache.row(t), v_cache.row(t));
+                if let Err(e) = res {
+                    // roll back so the caller can retry later
+                    for c in self.caches.iter_mut() {
+                        let _ = c.free_seq(id);
+                    }
+                    return Err(e);
+                }
+            }
+            let _ = h;
+        }
+        self.seqs.insert(
+            id,
+            SeqMeta { pos: prompt.len(), last_hidden: out.last_hidden },
+        );
+        let _ = d_k;
+        Ok(())
+    }
+
+    /// Generate one token for a sequence (greedy). Appends the token's
+    /// K/V to the cache. Returns the token id.
+    pub fn decode_one(&mut self, id: SeqId) -> anyhow::Result<u32> {
+        let meta = self
+            .seqs
+            .get(&id)
+            .with_context(|| format!("unknown seq {id}"))?;
+        let token = self.model.greedy_next(&meta.last_hidden);
+        let pos = meta.pos;
+        if pos >= self.model.weights.config.max_pos {
+            bail!("sequence {id} exceeded max position");
+        }
+
+        let mut x = self.model.embed(token, pos);
+        for layer in 0..self.model.n_layer() {
+            let (q, k_new, v_new) = self.model.qkv(layer, &x);
+            self.caches[layer]
+                .append(id, &k_new, &v_new)
+                .map_err(|e| anyhow::anyhow!("cache append: {e}"))?;
+            let attn = self.attend_layer(layer, id, &q)?;
+            x = self.model.finish_block(layer, &x, &attn);
+        }
+        let meta = self.seqs.get_mut(&id).unwrap();
+        meta.pos += 1;
+        meta.last_hidden = x;
+        Ok(token)
+    }
+
+    /// One decode-step attention over all heads of one layer.
+    fn attend_layer(&mut self, layer: usize, id: SeqId, q: &[f32])
+        -> anyhow::Result<Vec<f32>>
+    {
+        let (h, d_k) = (self.model.n_head(), self.model.d_head());
+        match &self.backend {
+            AttentionBackend::PjrtFp16 => {
+                return self.attend_pjrt_fp16(layer, id, q);
+            }
+            AttentionBackend::PjrtLookat { .. } => {
+                return self.attend_pjrt_lookat(layer, id, q);
+            }
+            _ => {}
+        }
+        let mut out = vec![0.0f32; h * d_k];
+        for head in 0..h {
+            let qh = &q[head * d_k..(head + 1) * d_k];
+            let n = self.caches[layer]
+                .gather_values_into(id, head, &mut self.scratch_vals)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let res = match &self.backend {
+                AttentionBackend::Fp16Exact => {
+                    self.caches[layer]
+                        .gather_keys_into(id, head, &mut self.scratch_keys)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                    attention::exact_attention(
+                        qh, &self.scratch_keys, &self.scratch_vals, n)
+                }
+                AttentionBackend::ScalarQuant { bits } => {
+                    self.caches[layer]
+                        .gather_keys_into(id, head, &mut self.scratch_keys)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                    attention::scalar_quant_attention(
+                        qh, &self.scratch_keys, &self.scratch_vals, n, *bits)
+                }
+                AttentionBackend::Lookat { .. } => {
+                    self.caches[layer]
+                        .gather_codes_into(id, head, &mut self.scratch_codes)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                    let codec =
+                        &self.caches[layer].codecs().unwrap()[head];
+                    let lut = LookupTable::build(qh, &codec.codebook);
+                    attention::lookat_attention_with_lut(
+                        &lut, &self.scratch_codes, &self.scratch_vals, n,
+                        d_k)
+                }
+                _ => unreachable!(),
+            };
+            out[head * d_k..(head + 1) * d_k].copy_from_slice(&res.out);
+        }
+        Ok(out)
+    }
+
+    /// Smallest artifact length that fits `n` cached tokens.
+    fn pjrt_len_for(&self, n: usize) -> anyhow::Result<usize> {
+        self.pjrt_lens
+            .iter()
+            .copied()
+            .find(|&l| l >= n)
+            .with_context(|| {
+                format!(
+                    "cache length {n} exceeds largest artifact L={:?}",
+                    self.pjrt_lens.last()
+                )
+            })
+    }
+
+    fn attend_pjrt_fp16(&mut self, layer: usize, id: SeqId, q: &[f32])
+        -> anyhow::Result<Vec<f32>>
+    {
+        let (h, d_k) = (self.model.n_head(), self.model.d_head());
+        let n = self.caches[layer].seq_len(id)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let l = self.pjrt_len_for(n)?;
+        // pack (H, L, d_k) padded keys/values + (L,) mask
+        let mut k = vec![0.0f32; h * l * d_k];
+        let mut v = vec![0.0f32; h * l * d_k];
+        let mut mask = vec![0.0f32; l];
+        mask[..n].fill(1.0);
+        for head in 0..h {
+            self.caches[layer]
+                .gather_keys_into(id, head, &mut self.scratch_keys)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            self.caches[layer]
+                .gather_values_into(id, head, &mut self.scratch_vals)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            k[head * l * d_k..head * l * d_k + n * d_k]
+                .copy_from_slice(&self.scratch_keys);
+            v[head * l * d_k..head * l * d_k + n * d_k]
+                .copy_from_slice(&self.scratch_vals);
+        }
+        let name = format!("attn_fp16_L{l}");
+        let rt = self.runtime.as_mut().unwrap();
+        let outs = rt.execute(
+            &name,
+            &[
+                InputArg::F32(q),
+                InputArg::F32(&k),
+                InputArg::F32(&v),
+                InputArg::F32(&mask),
+            ],
+        )?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    fn attend_pjrt_lookat(&mut self, layer: usize, id: SeqId, q: &[f32])
+        -> anyhow::Result<Vec<f32>>
+    {
+        let (h, d_k) = (self.model.n_head(), self.model.d_head());
+        let m = match self.backend {
+            AttentionBackend::PjrtLookat { m } => m,
+            _ => unreachable!(),
+        };
+        let n = self.caches[layer].seq_len(id)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let l = self.pjrt_len_for(n)?;
+        let kk = self.caches[layer].codecs().unwrap()[0].codebook.k;
+        let d_sub = d_k / m;
+        let mut codes = vec![0i32; h * l * m];
+        let mut cbs = vec![0.0f32; h * m * kk * d_sub];
+        let mut v = vec![0.0f32; h * l * d_k];
+        let mut mask = vec![0.0f32; l];
+        mask[..n].fill(1.0);
+        for head in 0..h {
+            self.caches[layer]
+                .gather_codes_into(id, head, &mut self.scratch_codes)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            self.caches[layer]
+                .gather_values_into(id, head, &mut self.scratch_vals)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            for (i, &c) in self.scratch_codes.iter().enumerate() {
+                codes[head * l * m + i] = c as i32;
+            }
+            v[head * l * d_k..head * l * d_k + n * d_k]
+                .copy_from_slice(&self.scratch_vals);
+            let flat =
+                self.caches[layer].codecs().unwrap()[head].codebook.to_flat();
+            cbs[head * m * kk * d_sub..(head + 1) * m * kk * d_sub]
+                .copy_from_slice(&flat);
+        }
+        let name = format!("attn_lookat_m{m}_L{l}");
+        let rt = self.runtime.as_mut().unwrap();
+        let outs = rt.execute(
+            &name,
+            &[
+                InputArg::F32(q),
+                InputArg::I32(&codes),
+                InputArg::F32(&cbs),
+                InputArg::F32(&v),
+                InputArg::F32(&mask),
+            ],
+        )?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    /// Release a finished sequence's cache.
+    pub fn release(&mut self, id: SeqId) -> anyhow::Result<()> {
+        self.seqs.remove(&id).with_context(|| format!("unknown seq {id}"))?;
+        for c in self.caches.iter_mut() {
+            c.free_seq(id).map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ByteTokenizer;
+
+    fn tiny_cfg(backend: AttentionBackend) -> EngineConfig {
+        EngineConfig {
+            model: ModelConfig::test_tiny(),
+            backend,
+            seed: 1,
+            cache_blocks: 32,
+            calib_tokens: 96,
+        }
+    }
+
+    #[test]
+    fn fp16_engine_generates_deterministically() {
+        let mut e = Engine::build(&tiny_cfg(AttentionBackend::Fp16Exact))
+            .unwrap();
+        let ids = ByteTokenizer::new().encode("hello engine");
+        e.start_seq(1, &ids).unwrap();
+        let toks: Vec<u32> =
+            (0..8).map(|_| e.decode_one(1).unwrap()).collect();
+
+        let mut e2 = Engine::build(&tiny_cfg(AttentionBackend::Fp16Exact))
+            .unwrap();
+        e2.start_seq(9, &ids).unwrap();
+        let toks2: Vec<u32> =
+            (0..8).map(|_| e2.decode_one(9).unwrap()).collect();
+        assert_eq!(toks, toks2);
+    }
+
+    #[test]
+    fn engine_decode_matches_reference_model() {
+        // Engine Fp16Exact must reproduce Gpt2::decode_step exactly
+        let cfg = tiny_cfg(AttentionBackend::Fp16Exact);
+        let mut e = Engine::build(&cfg).unwrap();
+        let ids = ByteTokenizer::new().encode("reference check");
+        e.start_seq(1, &ids).unwrap();
+
+        // reference: raw decode over Tensor2 caches
+        let weights = Weights::random(&cfg.model, cfg.seed);
+        let model = Gpt2::new(weights);
+        let pre = model.prefill(&ids);
+        let mut caches = pre.caches;
+        let mut hidden = pre.last_hidden;
+        let mut pos = ids.len();
+
+        for _ in 0..5 {
+            let tok_engine = e.decode_one(1).unwrap();
+            let tok_ref = model.greedy_next(&hidden);
+            assert_eq!(tok_engine, tok_ref);
+            hidden = model.decode_step(tok_ref, pos, &mut caches);
+            pos += 1;
+        }
+    }
+
+    #[test]
+    fn lookat_engine_tracks_fp16_closely() {
+        let ids = ByteTokenizer::new().encode(
+            "the quick brown fox jumps over the lazy dog again and again");
+        let mut fp = Engine::build(&tiny_cfg(AttentionBackend::Fp16Exact))
+            .unwrap();
+        fp.start_seq(1, &ids).unwrap();
+        let mut lk = Engine::build(&tiny_cfg(AttentionBackend::Lookat {
+            m: 4,
+            k: 64,
+        }))
+        .unwrap();
+        lk.start_seq(1, &ids).unwrap();
+        // same model weights (same seed) — only attention path differs
+        let t_fp: Vec<u32> = (0..6).map(|_| fp.decode_one(1).unwrap())
+            .collect();
+        let t_lk: Vec<u32> = (0..6).map(|_| lk.decode_one(1).unwrap())
+            .collect();
+        // greedy tokens may diverge eventually but the first token comes
+        // from an identical prefill hidden state
+        assert_eq!(t_fp[0], t_lk[0]);
+        let _ = (t_fp, t_lk);
+    }
+
+    #[test]
+    fn admission_and_release_cycle() {
+        let mut e = Engine::build(&tiny_cfg(AttentionBackend::Fp16Exact))
+            .unwrap();
+        let ids = ByteTokenizer::new().encode("abc");
+        assert!(e.can_admit(ids.len() + 4));
+        e.start_seq(5, &ids).unwrap();
+        assert_eq!(e.active_seqs(), 1);
+        let _ = e.decode_one(5).unwrap();
+        assert!(e.cache_stats().tokens > 0);
+        e.release(5).unwrap();
+        assert_eq!(e.active_seqs(), 0);
+        assert_eq!(e.cache_stats().tokens, 0);
+    }
+
+    #[test]
+    fn cache_exhaustion_rolls_back_cleanly() {
+        let mut cfg = tiny_cfg(AttentionBackend::Fp16Exact);
+        cfg.cache_blocks = 1; // 32 tokens only
+        let mut e = Engine::build(&cfg).unwrap();
+        let long: Vec<u32> = (0..100).map(|i| (i % 200) as u32).collect();
+        assert!(e.start_seq(1, &long).is_err());
+        // rollback: no partial residue
+        assert_eq!(e.cache_stats().tokens, 0);
+        assert_eq!(e.cache_stats().blocks_allocated, 0);
+        // a short sequence still fits afterwards
+        e.start_seq(2, &long[..16]).unwrap();
+        assert_eq!(e.cache_stats().tokens, 16);
+    }
+
+    #[test]
+    fn unknown_seq_errors() {
+        let mut e = Engine::build(&tiny_cfg(AttentionBackend::Fp16Exact))
+            .unwrap();
+        assert!(e.decode_one(42).is_err());
+        assert!(e.release(42).is_err());
+    }
+
+    #[test]
+    fn scalar_quant_backend_runs() {
+        let mut e = Engine::build(&tiny_cfg(
+            AttentionBackend::ScalarQuant { bits: 8 })).unwrap();
+        let ids = ByteTokenizer::new().encode("int8 path");
+        e.start_seq(1, &ids).unwrap();
+        for _ in 0..3 {
+            e.decode_one(1).unwrap();
+        }
+    }
+
+    #[test]
+    fn backend_names() {
+        assert_eq!(AttentionBackend::Fp16Exact.name(), "fp16");
+        assert_eq!(AttentionBackend::Lookat { m: 4, k: 256 }.name(),
+                   "lookat-4");
+        assert_eq!(AttentionBackend::ScalarQuant { bits: 4 }.name(), "int4");
+        assert_eq!(AttentionBackend::PjrtLookat { m: 2 }.name(),
+                   "pjrt-lookat-2");
+    }
+}

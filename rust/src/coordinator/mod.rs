@@ -1,0 +1,29 @@
+//! The serving coordinator — Layer 3 of the stack.
+//!
+//! A vLLM-router-style serving runtime scaled to this testbed:
+//!
+//! * [`request`] — request lifecycle types and per-request latency records
+//! * [`engine`] — the inference engine: pure-rust GPT-2 forward with a
+//!   pluggable attention backend (FP16 exact, LOOKAT ADC, scalar-quant
+//!   baselines, or the PJRT-executed AOT artifacts) over the paged
+//!   [`crate::kvcache`]
+//! * [`batcher`] — continuous batching with cache-aware admission control
+//! * [`router`] — the front door: trace-driven serving loop, backpressure,
+//!   latency/throughput accounting
+//!
+//! LOOKAT drops in *here*: the engine's cache stores PQ codes instead of
+//! keys and decode-attention runs over lookup tables — no other component
+//! changes, which is the paper's "no architecture changes" claim at the
+//! systems level.
+
+pub mod batcher;
+pub mod engine;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use engine::{AttentionBackend, Engine, EngineConfig};
+pub use request::{CompletedRequest, Request, RequestState};
+pub use router::{Router, RouterConfig, ServingReport};
+pub use server::{Server, ServerConfig};

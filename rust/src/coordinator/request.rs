@@ -1,0 +1,95 @@
+//! Request lifecycle types.
+
+use crate::kvcache::SeqId;
+
+/// A serving request as submitted to the router.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: SeqId,
+    /// prompt token ids (tokenized upstream)
+    pub prompt: Vec<u32>,
+    /// number of tokens to generate
+    pub max_new_tokens: usize,
+    /// arrival time offset (seconds from trace start)
+    pub arrival_s: f64,
+}
+
+/// Where a request currently is in its lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestState {
+    Queued,
+    Prefilling,
+    Decoding,
+    Finished,
+    /// rejected by admission control (cache exhausted and queue full)
+    Rejected,
+}
+
+/// Completed-request record with the standard serving latency breakdown.
+#[derive(Clone, Debug)]
+pub struct CompletedRequest {
+    pub id: SeqId,
+    pub prompt_tokens: usize,
+    pub generated: Vec<u32>,
+    pub arrival_s: f64,
+    /// admission (start of prefill)
+    pub admitted_s: f64,
+    /// first generated token (TTFT measured from arrival)
+    pub first_token_s: f64,
+    pub finished_s: f64,
+}
+
+impl CompletedRequest {
+    /// Time-to-first-token, seconds.
+    pub fn ttft(&self) -> f64 {
+        self.first_token_s - self.arrival_s
+    }
+
+    /// End-to-end latency, seconds.
+    pub fn e2e(&self) -> f64 {
+        self.finished_s - self.arrival_s
+    }
+
+    /// Mean inter-token latency over the decode phase, seconds.
+    pub fn itl(&self) -> f64 {
+        let n = self.generated.len();
+        if n <= 1 {
+            return 0.0;
+        }
+        (self.finished_s - self.first_token_s) / (n - 1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn done() -> CompletedRequest {
+        CompletedRequest {
+            id: 1,
+            prompt_tokens: 10,
+            generated: vec![1, 2, 3, 4, 5],
+            arrival_s: 1.0,
+            admitted_s: 1.5,
+            first_token_s: 2.0,
+            finished_s: 4.0,
+        }
+    }
+
+    #[test]
+    fn latency_breakdown() {
+        let c = done();
+        assert!((c.ttft() - 1.0).abs() < 1e-12);
+        assert!((c.e2e() - 3.0).abs() < 1e-12);
+        assert!((c.itl() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn itl_degenerate_cases() {
+        let mut c = done();
+        c.generated = vec![7];
+        assert_eq!(c.itl(), 0.0);
+        c.generated = vec![];
+        assert_eq!(c.itl(), 0.0);
+    }
+}

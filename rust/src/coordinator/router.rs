@@ -1,0 +1,265 @@
+//! The router: trace-driven serving loop + aggregate reporting.
+//!
+//! Drives a [`Batcher`] against a request trace with real wall-clock
+//! pacing of engine work and trace-time arrival gating: a request only
+//! becomes visible once the serving clock passes its arrival offset.
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::engine::{Engine, EngineConfig};
+use super::request::{CompletedRequest, Request};
+use crate::model::ByteTokenizer;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::workload::RequestSpec;
+
+/// Router construction parameters.
+#[derive(Clone, Debug, Default)]
+pub struct RouterConfig {
+    pub engine: EngineConfig,
+    pub batcher: BatcherConfig,
+    /// clamp prompts to this many tokens (keeps within artifact L)
+    pub max_prompt_tokens: usize,
+}
+
+/// Serving-run report: the numbers `examples/serve.rs` and the
+/// serving_throughput bench print.
+#[derive(Clone, Debug)]
+pub struct ServingReport {
+    pub backend: String,
+    pub completed: Vec<CompletedRequest>,
+    pub rejected: usize,
+    pub wall_s: f64,
+    pub decode_tokens: usize,
+    pub prefill_tokens: usize,
+    pub key_cache_peak_bytes: usize,
+}
+
+impl ServingReport {
+    pub fn throughput_tok_s(&self) -> f64 {
+        self.decode_tokens as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn requests_per_s(&self) -> f64 {
+        self.completed.len() as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn ttft_summary(&self) -> Option<Summary> {
+        Summary::of(
+            &self.completed.iter().map(|c| c.ttft()).collect::<Vec<_>>())
+    }
+
+    pub fn e2e_summary(&self) -> Option<Summary> {
+        Summary::of(
+            &self.completed.iter().map(|c| c.e2e()).collect::<Vec<_>>())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("backend", Json::Str(self.backend.clone()));
+        o.set("completed", Json::Num(self.completed.len() as f64));
+        o.set("rejected", Json::Num(self.rejected as f64));
+        o.set("wall_s", Json::Num(self.wall_s));
+        o.set("decode_tokens", Json::Num(self.decode_tokens as f64));
+        o.set("throughput_tok_s", Json::Num(self.throughput_tok_s()));
+        if let Some(t) = self.ttft_summary() {
+            o.set("ttft_p50_s", Json::Num(t.p50));
+            o.set("ttft_p99_s", Json::Num(t.p99));
+        }
+        if let Some(t) = self.e2e_summary() {
+            o.set("e2e_p50_s", Json::Num(t.p50));
+            o.set("e2e_p99_s", Json::Num(t.p99));
+        }
+        o.set(
+            "key_cache_peak_bytes",
+            Json::Num(self.key_cache_peak_bytes as f64),
+        );
+        o
+    }
+
+    /// Human-readable serving summary.
+    pub fn pretty(&self) -> String {
+        let ttft = self.ttft_summary();
+        let e2e = self.e2e_summary();
+        format!(
+            "backend={:<14} completed={:<4} rejected={:<3} wall={:>7.2}s \
+             decode_tok/s={:>8.1} ttft_p50={:>7.1}ms e2e_p50={:>7.1}ms \
+             key_cache_peak={:>8} B",
+            self.backend,
+            self.completed.len(),
+            self.rejected,
+            self.wall_s,
+            self.throughput_tok_s(),
+            ttft.as_ref().map_or(0.0, |t| t.p50 * 1e3),
+            e2e.as_ref().map_or(0.0, |t| t.p50 * 1e3),
+            self.key_cache_peak_bytes,
+        )
+    }
+}
+
+/// The serving front door.
+pub struct Router {
+    batcher: Batcher,
+    cfg: RouterConfig,
+}
+
+impl Router {
+    pub fn build(cfg: RouterConfig) -> anyhow::Result<Router> {
+        let engine = Engine::build(&cfg.engine)?;
+        Ok(Router {
+            batcher: Batcher::new(engine, cfg.batcher.clone()),
+            cfg,
+        })
+    }
+
+    /// Tokenize a workload trace into requests.
+    pub fn tokenize_trace(&self, trace: &[RequestSpec]) -> Vec<Request> {
+        let tok = ByteTokenizer::new();
+        let max_len = if self.cfg.max_prompt_tokens == 0 {
+            usize::MAX
+        } else {
+            self.cfg.max_prompt_tokens
+        };
+        trace
+            .iter()
+            .map(|spec| Request {
+                id: spec.id,
+                prompt: tok.encode_clamped(&spec.prompt, max_len),
+                max_new_tokens: spec.gen_tokens,
+                arrival_s: spec.arrival_s,
+            })
+            .collect()
+    }
+
+    /// Serve a full trace to completion. The serving clock is wall time;
+    /// arrivals are gated on it (a trace arriving faster than the engine
+    /// decodes builds real queueing delay, which the report captures).
+    pub fn serve_trace(&mut self, requests: Vec<Request>)
+        -> anyhow::Result<ServingReport>
+    {
+        let t0 = std::time::Instant::now();
+        let mut pending: std::collections::VecDeque<Request> =
+            requests.into_iter().collect();
+        let prefill_tokens: usize =
+            pending.iter().map(|r| r.prompt.len()).sum();
+        let mut decode_tokens = 0usize;
+        let mut peak_key_bytes = 0usize;
+
+        while !(pending.is_empty() && self.batcher.idle()) {
+            let now = t0.elapsed().as_secs_f64();
+            // deliver arrived requests
+            while pending
+                .front()
+                .map(|r| r.arrival_s <= now)
+                .unwrap_or(false)
+            {
+                let r = pending.pop_front().unwrap();
+                self.batcher.submit(r);
+            }
+            self.batcher.admit(now);
+            if self.batcher.active() > 0 {
+                decode_tokens += self
+                    .batcher
+                    .step(t0.elapsed().as_secs_f64())?;
+                peak_key_bytes = peak_key_bytes
+                    .max(self.batcher.engine().cache_stats().key_bytes);
+            } else if let Some(r) = pending.front() {
+                // idle until the next arrival
+                let wait = (r.arrival_s - now).max(0.0);
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    wait.min(0.01),
+                ));
+            }
+        }
+
+        Ok(ServingReport {
+            backend: self.batcher.engine().backend.name(),
+            completed: std::mem::take(&mut self.batcher.completed),
+            rejected: self.batcher.rejected.len(),
+            wall_s: t0.elapsed().as_secs_f64(),
+            decode_tokens,
+            prefill_tokens,
+            key_cache_peak_bytes: peak_key_bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::AttentionBackend;
+    use crate::model::ModelConfig;
+    use crate::workload::{TraceConfig, TraceGenerator};
+
+    fn router(backend: AttentionBackend) -> Router {
+        Router::build(RouterConfig {
+            engine: EngineConfig {
+                model: ModelConfig::test_tiny(),
+                backend,
+                seed: 5,
+                cache_blocks: 128,
+                calib_tokens: 64,
+            },
+            batcher: BatcherConfig { max_batch: 4, max_queue: 64 },
+            max_prompt_tokens: 48,
+        })
+        .unwrap()
+    }
+
+    fn small_trace(n: usize) -> Vec<crate::workload::RequestSpec> {
+        TraceGenerator::new(TraceConfig {
+            rate: 1000.0, // all arrive ~immediately
+            num_requests: n,
+            prompt_chars: (60, 120),
+            gen_tokens: (2, 4),
+            seed: 9,
+        })
+        .generate()
+    }
+
+    #[test]
+    fn serves_trace_to_completion_fp16() {
+        let mut r = router(AttentionBackend::Fp16Exact);
+        let reqs = r.tokenize_trace(&small_trace(6));
+        let report = r.serve_trace(reqs).unwrap();
+        assert_eq!(report.completed.len(), 6);
+        assert_eq!(report.rejected, 0);
+        assert!(report.decode_tokens >= 12);
+        assert!(report.throughput_tok_s() > 0.0);
+        for c in &report.completed {
+            assert!(c.ttft() >= 0.0);
+            assert!(c.e2e() >= c.ttft());
+        }
+    }
+
+    #[test]
+    fn serves_trace_lookat_backend() {
+        let mut r = router(AttentionBackend::Lookat { m: 4, k: 64 });
+        let reqs = r.tokenize_trace(&small_trace(4));
+        let report = r.serve_trace(reqs).unwrap();
+        assert_eq!(report.completed.len(), 4);
+        assert_eq!(report.backend, "lookat-4");
+        // compressed cache: peak key bytes far below the fp16 router's
+        let mut rf = router(AttentionBackend::Fp16Exact);
+        let reqs2 = rf.tokenize_trace(&small_trace(4));
+        let report_fp = rf.serve_trace(reqs2).unwrap();
+        assert!(
+            report.key_cache_peak_bytes * 4
+                < report_fp.key_cache_peak_bytes,
+            "lookat {} vs fp16 {}",
+            report.key_cache_peak_bytes,
+            report_fp.key_cache_peak_bytes
+        );
+    }
+
+    #[test]
+    fn report_json_has_core_fields() {
+        let mut r = router(AttentionBackend::Fp16Exact);
+        let reqs = r.tokenize_trace(&small_trace(2));
+        let report = r.serve_trace(reqs).unwrap();
+        let j = report.to_json();
+        for k in ["backend", "completed", "wall_s", "throughput_tok_s"] {
+            assert!(j.get(k).is_some(), "missing {k}");
+        }
+        assert!(!report.pretty().is_empty());
+    }
+}

@@ -1,0 +1,375 @@
+//! TCP front-end: newline-delimited JSON over a socket, backed by the
+//! batcher/engine. This is the "launcher" face of the coordinator — a
+//! client connects, sends one request per line, and receives one JSON
+//! response per line when its generation completes.
+//!
+//! Protocol (UTF-8, one JSON object per line):
+//!   → {"prompt": "text...", "max_new_tokens": 16}
+//!   ← {"id": 3, "text": "...", "prompt_tokens": 12, "ttft_ms": 41.2,
+//!      "e2e_ms": 180.5, "tokens": 16}
+//!   ← {"error": "..."}                      (malformed request / overload)
+//!
+//! tokio is not vendored offline; the server uses one acceptor thread,
+//! one serving thread driving the batcher, and per-connection reader
+//! threads feeding a shared queue (see util::threadpool for the pool
+//! primitive this reuses).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::coordinator::request::Request;
+use crate::model::ByteTokenizer;
+use crate::util::json::Json;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub engine: EngineConfig,
+    pub batcher: BatcherConfig,
+    pub max_prompt_tokens: usize,
+    /// bind address, e.g. "127.0.0.1:7070" (port 0 = ephemeral)
+    pub addr: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            engine: EngineConfig::default(),
+            batcher: BatcherConfig::default(),
+            max_prompt_tokens: 120,
+            addr: "127.0.0.1:0".into(),
+        }
+    }
+}
+
+struct Inbound {
+    req: Request,
+    conn: Arc<Mutex<TcpStream>>,
+}
+
+/// A running server; `shutdown()` + drop joins all threads.
+pub struct Server {
+    pub local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving in background threads.
+    ///
+    /// The engine is constructed *inside* the serving thread: the PJRT
+    /// client (used by the `Pjrt*` backends) holds non-`Send` handles,
+    /// so it must live and die on the thread that drives it.
+    pub fn start(cfg: ServerConfig) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let queue: Arc<Mutex<Vec<Inbound>>> = Arc::new(Mutex::new(Vec::new()));
+        let next_id = Arc::new(AtomicU64::new(0));
+
+        // acceptor thread: accepts connections, spawns reader threads
+        let acc_stop = stop.clone();
+        let acc_queue = queue.clone();
+        let max_prompt = cfg.max_prompt_tokens;
+        let acceptor = std::thread::Builder::new()
+            .name("lookat-acceptor".into())
+            .spawn(move || {
+                let mut readers = Vec::new();
+                while !acc_stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let conn = Arc::new(Mutex::new(
+                                stream.try_clone().expect("clone stream"),
+                            ));
+                            let q = acc_queue.clone();
+                            let ids = next_id.clone();
+                            let rstop = acc_stop.clone();
+                            readers.push(std::thread::spawn(move || {
+                                reader_loop(stream, conn, q, ids, rstop,
+                                            max_prompt);
+                            }));
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::WouldBlock =>
+                        {
+                            std::thread::sleep(
+                                std::time::Duration::from_millis(5),
+                            );
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for r in readers {
+                    let _ = r.join();
+                }
+            })?;
+
+        // serving thread: builds the engine, drains the queue into the
+        // batcher, steps it, writes completions back to their connections
+        let srv_stop = stop.clone();
+        let srv_queue = queue.clone();
+        let engine_cfg = cfg.engine.clone();
+        let batcher_cfg = cfg.batcher.clone();
+        let server_thread = std::thread::Builder::new()
+            .name("lookat-server".into())
+            .spawn(move || {
+                let engine = match Engine::build(&engine_cfg) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        crate::log_error!("engine build failed: {e:#}");
+                        srv_stop.store(true, Ordering::SeqCst);
+                        return;
+                    }
+                };
+                let batcher = Batcher::new(engine, batcher_cfg);
+                serve_loop(batcher, srv_queue, srv_stop);
+            })?;
+
+        Ok(Server {
+            local_addr,
+            stop,
+            threads: vec![acceptor, server_thread],
+        })
+    }
+
+    /// Signal shutdown and join all threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn reader_loop(
+    stream: TcpStream,
+    conn: Arc<Mutex<TcpStream>>,
+    queue: Arc<Mutex<Vec<Inbound>>>,
+    next_id: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    max_prompt: usize,
+) {
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_millis(100)))
+        .ok();
+    let mut reader = BufReader::new(stream);
+    let tok = ByteTokenizer::new();
+    let mut line = String::new();
+    while !stop.load(Ordering::SeqCst) {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) => {
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                match parse_request(trimmed, &tok, &next_id, max_prompt) {
+                    Ok(req) => {
+                        queue.lock().unwrap().push(Inbound {
+                            req,
+                            conn: conn.clone(),
+                        });
+                    }
+                    Err(msg) => {
+                        let mut err = Json::obj();
+                        err.set("error", Json::Str(msg));
+                        write_line(&conn, &err);
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn parse_request(
+    line: &str,
+    tok: &ByteTokenizer,
+    next_id: &AtomicU64,
+    max_prompt: usize,
+) -> Result<Request, String> {
+    let j = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+    let prompt = j
+        .get("prompt")
+        .and_then(|p| p.as_str())
+        .ok_or("missing 'prompt'")?;
+    if prompt.is_empty() {
+        return Err("empty prompt".into());
+    }
+    let max_new = j
+        .get("max_new_tokens")
+        .and_then(|n| n.as_usize())
+        .unwrap_or(16)
+        .clamp(1, 256);
+    Ok(Request {
+        id: next_id.fetch_add(1, Ordering::SeqCst),
+        prompt: tok.encode_clamped(prompt, max_prompt),
+        max_new_tokens: max_new,
+        arrival_s: 0.0, // stamped by the serving loop
+    })
+}
+
+fn serve_loop(
+    mut batcher: Batcher,
+    queue: Arc<Mutex<Vec<Inbound>>>,
+    stop: Arc<AtomicBool>,
+) {
+    let t0 = std::time::Instant::now();
+    let tok = ByteTokenizer::new();
+    // request id -> connection to answer on
+    let mut conns: std::collections::HashMap<u64, Arc<Mutex<TcpStream>>> =
+        std::collections::HashMap::new();
+    loop {
+        let now = t0.elapsed().as_secs_f64();
+        // ingest
+        for mut inbound in queue.lock().unwrap().drain(..) {
+            inbound.req.arrival_s = now;
+            conns.insert(inbound.req.id, inbound.conn.clone());
+            if !batcher.submit(inbound.req) {
+                if let Some(conn) = conns.remove(batcher.rejected.last()
+                                                 .unwrap()) {
+                    let mut err = Json::obj();
+                    err.set("error",
+                            Json::Str("queue full (backpressure)".into()));
+                    write_line(&conn, &err);
+                }
+            }
+        }
+        // work
+        batcher.admit(now);
+        if batcher.active() > 0 {
+            if let Err(e) = batcher.step(t0.elapsed().as_secs_f64()) {
+                crate::log_error!("batcher step failed: {e:#}");
+            }
+        } else if stop.load(Ordering::SeqCst) {
+            break;
+        } else {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        // respond
+        for done in batcher.completed.drain(..) {
+            if let Some(conn) = conns.remove(&done.id) {
+                let mut o = Json::obj();
+                o.set("id", Json::Num(done.id as f64));
+                o.set("text", Json::Str(tok.decode(&done.generated)));
+                o.set("prompt_tokens",
+                      Json::Num(done.prompt_tokens as f64));
+                o.set("tokens", Json::Num(done.generated.len() as f64));
+                o.set("ttft_ms", Json::Num(done.ttft() * 1e3));
+                o.set("e2e_ms", Json::Num(done.e2e() * 1e3));
+                write_line(&conn, &o);
+            }
+        }
+    }
+}
+
+fn write_line(conn: &Arc<Mutex<TcpStream>>, j: &Json) {
+    if let Ok(mut s) = conn.lock() {
+        let _ = writeln!(s, "{j}");
+        let _ = s.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::AttentionBackend;
+    use crate::model::ModelConfig;
+    use std::io::{BufRead, BufReader, Write};
+
+    fn test_server() -> Server {
+        Server::start(ServerConfig {
+            engine: EngineConfig {
+                model: ModelConfig::test_tiny(),
+                backend: AttentionBackend::Lookat { m: 4, k: 64 },
+                seed: 2,
+                cache_blocks: 64,
+                calib_tokens: 64,
+            },
+            batcher: BatcherConfig { max_batch: 2, max_queue: 16 },
+            max_prompt_tokens: 48,
+            addr: "127.0.0.1:0".into(),
+        })
+        .expect("server start")
+    }
+
+    fn roundtrip(addr: std::net::SocketAddr, line: &str) -> Json {
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "{line}").unwrap();
+        s.flush().unwrap();
+        let mut reader = BufReader::new(s);
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap()
+    }
+
+    #[test]
+    fn serves_a_request_over_tcp() {
+        let server = test_server();
+        let resp = roundtrip(
+            server.local_addr,
+            r#"{"prompt": "hello over the wire", "max_new_tokens": 3}"#,
+        );
+        assert!(resp.get("error").is_none(), "{resp}");
+        assert_eq!(resp.get("tokens").unwrap().as_usize(), Some(3));
+        assert!(resp.get("ttft_ms").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(resp.get("text").is_some());
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_request_gets_error() {
+        let server = test_server();
+        let resp = roundtrip(server.local_addr, "{not json");
+        assert!(resp.get("error").is_some());
+        let resp2 = roundtrip(server.local_addr, r#"{"nope": 1}"#);
+        assert!(resp2
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("prompt"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_all_answered() {
+        let server = test_server();
+        let addr = server.local_addr;
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    roundtrip(
+                        addr,
+                        &format!(
+                            r#"{{"prompt": "client {i} text", "max_new_tokens": 2}}"#
+                        ),
+                    )
+                })
+            })
+            .collect();
+        let mut ids = Vec::new();
+        for h in handles {
+            let resp = h.join().unwrap();
+            assert!(resp.get("error").is_none(), "{resp}");
+            ids.push(resp.get("id").unwrap().as_usize().unwrap());
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 4, "each client got a distinct request id");
+        server.shutdown();
+    }
+}

@@ -1,0 +1,474 @@
+//! Shared evaluation machinery for all tables/figures.
+//!
+//! Faithful to paper §4.1: KV caches are extracted from the model's
+//! *first attention layer* over three text genres; every compression
+//! method is evaluated decode-style — for each query position `t`, the
+//! attention distribution over the causal prefix `[0, t]` and the
+//! resulting output vector are compared against the FP16 oracle.
+
+use crate::metrics::{AggregateFidelity, FidelityReport};
+use crate::model::{ByteTokenizer, Gpt2, ModelConfig, Weights};
+use crate::pq::{LookupTable, PqCodec, TrainOpts};
+use crate::quant;
+use crate::tensor::softmax_inplace;
+use crate::workload::{Corpus, Genre};
+
+/// Compression method under evaluation (rows of Tables 1 & 4).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    Fp16,
+    Int8,
+    Int4,
+    Lookat { m: usize },
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Fp16 => "FP16 (Baseline)".into(),
+            Method::Int8 => "INT8".into(),
+            Method::Int4 => "INT4".into(),
+            Method::Lookat { m } => format!("LOOKAT-{m}"),
+        }
+    }
+
+    /// Key-storage bytes per token per head (exact accounting; see
+    /// quant::tests for the paper-discrepancy note).
+    pub fn bytes_per_token(&self, d_k: usize) -> f64 {
+        match self {
+            Method::Fp16 => (d_k * 2) as f64,
+            Method::Int8 => d_k as f64,
+            Method::Int4 => d_k as f64 / 2.0,
+            Method::Lookat { m } => *m as f64,
+        }
+    }
+
+    /// Compression ratio vs FP16 keys.
+    pub fn compression(&self, d_k: usize) -> f64 {
+        (d_k * 2) as f64 / self.bytes_per_token(d_k)
+    }
+}
+
+/// One extracted sample: layer-0 K/V/Q for every head.
+pub struct Sample {
+    pub genre: Genre,
+    pub len: usize,
+    pub d_k: usize,
+    /// per head: (len × d_k)
+    pub keys: Vec<Vec<f32>>,
+    pub values: Vec<Vec<f32>>,
+    pub queries: Vec<Vec<f32>>,
+    /// per head: calibration keys from a *different* text of the same
+    /// genre. Training codebooks on the evaluated cache itself would let
+    /// K-Means memorize it (K=256 ≈ L), reporting spuriously-perfect
+    /// fidelity; deployment trains on calibration data (paper §5.1).
+    pub calib_keys: Vec<Vec<f32>>,
+    /// per head: calibration values (for the §5.2 value-PQ extension)
+    pub calib_values: Vec<Vec<f32>>,
+}
+
+/// Evaluation context: the model + extracted samples.
+pub struct EvalContext {
+    pub model_cfg: ModelConfig,
+    pub samples: Vec<Sample>,
+    pub seed: u64,
+}
+
+impl EvalContext {
+    /// Build the paper's setting: one sample per genre at length `len`,
+    /// KV from layer 0 of the anisotropic-init GPT-2-geometry model.
+    pub fn build(len: usize, seed: u64) -> EvalContext {
+        Self::build_with(ModelConfig::gpt2_layer0(), len, seed)
+    }
+
+    pub fn build_with(model_cfg: ModelConfig, len: usize, seed: u64)
+        -> EvalContext
+    {
+        Self::build_with_calib(model_cfg, len, len, seed)
+    }
+
+    /// Build with an explicit calibration-set length (the seq-length
+    /// sweep pins this so that L is the *only* variable — otherwise a
+    /// longer L also means a larger calibration set, confounding the
+    /// trend).
+    pub fn build_with_calib(
+        model_cfg: ModelConfig,
+        len: usize,
+        calib_len: usize,
+        seed: u64,
+    ) -> EvalContext {
+        assert!(len <= model_cfg.max_pos, "len > max_pos");
+        let model = Gpt2::new(Weights::random(&model_cfg, seed));
+        let tok = ByteTokenizer::new();
+        let samples = Genre::ALL
+            .iter()
+            .enumerate()
+            .map(|(i, &genre)| {
+                let text = Corpus::new(genre, seed ^ (i as u64) << 8)
+                    .generate(len * 4);
+                let ids = tok.encode_clamped(&text, len);
+                let out = model.prefill(&ids);
+                // calibration: same genre, different text
+                let calib_text =
+                    Corpus::new(genre, seed ^ 0xCA11B ^ (i as u64) << 8)
+                        .generate(calib_len * 4);
+                let calib_ids = tok.encode_clamped(&calib_text, calib_len);
+                let calib_out = model.prefill(&calib_ids);
+                let d_k = model_cfg.d_head;
+                let heads = |f: &dyn Fn(usize) -> Vec<f32>| {
+                    (0..model_cfg.n_head).map(f).collect::<Vec<_>>()
+                };
+                Sample {
+                    genre,
+                    len: ids.len(),
+                    d_k,
+                    keys: heads(&|h| out.head_keys(0, h, d_k)),
+                    values: heads(&|h| out.head_values(0, h, d_k)),
+                    queries: heads(&|h| out.head_queries(0, h, d_k)),
+                    calib_keys: heads(&|h| calib_out.head_keys(0, h, d_k)),
+                    calib_values: heads(
+                        &|h| calib_out.head_values(0, h, d_k)),
+                }
+            })
+            .collect();
+        EvalContext { model_cfg, samples, seed }
+    }
+
+    /// Evaluate a method on one sample: average metrics over heads and
+    /// query positions (every `stride`-th position with ≥ 16 context).
+    pub fn evaluate_sample(&self, sample: &Sample, method: Method,
+                           stride: usize) -> FidelityReport {
+        let d_k = sample.d_k;
+        let inv = 1.0 / (d_k as f32).sqrt();
+        let mut reports = Vec::new();
+
+        for head in 0..self.model_cfg.n_head {
+            let keys = &sample.keys[head];
+            let values = &sample.values[head];
+            let queries = &sample.queries[head];
+
+            // method-specific key representation, built once per head;
+            // codebooks are trained on held-out calibration keys (see
+            // Sample::calib_keys)
+            enum Rep {
+                Raw(Vec<f32>),
+                Pq { codec: PqCodec, codes: Vec<u8> },
+            }
+            let rep = match method {
+                Method::Fp16 => Rep::Raw(keys.clone()),
+                Method::Int8 => Rep::Raw(quant::quant_roundtrip(keys, 8)),
+                Method::Int4 => Rep::Raw(quant::quant_roundtrip(keys, 4)),
+                Method::Lookat { m } => {
+                    let codec = PqCodec::train(
+                        &sample.calib_keys[head],
+                        d_k,
+                        m,
+                        crate::pq::NUM_CENTROIDS,
+                        &TrainOpts { seed: self.seed, ..Default::default() },
+                    );
+                    let codes = codec.encode_batch(keys, sample.len);
+                    Rep::Pq { codec, codes }
+                }
+            };
+
+            let mut t = 16.max(stride);
+            while t < sample.len {
+                let n = t + 1; // causal prefix length
+                let q = &queries[t * d_k..(t + 1) * d_k];
+
+                // oracle
+                let mut s_ref: Vec<f32> = (0..n)
+                    .map(|l| {
+                        crate::tensor::dot(
+                            q, &keys[l * d_k..(l + 1) * d_k]) * inv
+                    })
+                    .collect();
+                softmax_inplace(&mut s_ref);
+                let out_ref = weighted_values(&s_ref, values, d_k);
+
+                // approximation
+                let mut s_apx: Vec<f32> = match &rep {
+                    Rep::Raw(kk) => (0..n)
+                        .map(|l| {
+                            crate::tensor::dot(
+                                q, &kk[l * d_k..(l + 1) * d_k]) * inv
+                        })
+                        .collect(),
+                    Rep::Pq { codec, codes } => {
+                        let lut = LookupTable::build(q, &codec.codebook);
+                        let mut s = lut.scores(&codes[..n * codes.len()
+                            / sample.len], n);
+                        for v in s.iter_mut() {
+                            *v *= inv;
+                        }
+                        s
+                    }
+                };
+                softmax_inplace(&mut s_apx);
+                let out_apx = weighted_values(&s_apx, values, d_k);
+
+                reports.push(FidelityReport::compare(
+                    &out_ref, &out_apx, &s_ref, &s_apx));
+                t += stride;
+            }
+        }
+        average_reports(&reports)
+    }
+
+    /// Evaluate LOOKAT with externally-trained per-head codecs (used by
+    /// the calibration-transfer and centroid-count ablations).
+    pub fn evaluate_sample_with_codecs(
+        &self,
+        sample: &Sample,
+        codecs: &[PqCodec],
+        stride: usize,
+    ) -> FidelityReport {
+        let d_k = sample.d_k;
+        let inv = 1.0 / (d_k as f32).sqrt();
+        let mut reports = Vec::new();
+        for head in 0..self.model_cfg.n_head {
+            let keys = &sample.keys[head];
+            let values = &sample.values[head];
+            let queries = &sample.queries[head];
+            let codec = &codecs[head];
+            let m = codec.codebook.m;
+            let codes = codec.encode_batch(keys, sample.len);
+            let mut t = 16.max(stride);
+            while t < sample.len {
+                let n = t + 1;
+                let q = &queries[t * d_k..(t + 1) * d_k];
+                let mut s_ref: Vec<f32> = (0..n)
+                    .map(|l| {
+                        crate::tensor::dot(
+                            q, &keys[l * d_k..(l + 1) * d_k]) * inv
+                    })
+                    .collect();
+                softmax_inplace(&mut s_ref);
+                let out_ref = weighted_values(&s_ref, values, d_k);
+                let lut = LookupTable::build(q, &codec.codebook);
+                let mut s_apx = lut.scores(&codes[..n * m], n);
+                for v in s_apx.iter_mut() {
+                    *v *= inv;
+                }
+                softmax_inplace(&mut s_apx);
+                let out_apx = weighted_values(&s_apx, values, d_k);
+                reports.push(FidelityReport::compare(
+                    &out_ref, &out_apx, &s_ref, &s_apx));
+                t += stride;
+            }
+        }
+        average_reports(&reports)
+    }
+
+    /// Evaluate the §5.2 extension: keys AND values PQ-compressed
+    /// (value codebooks trained on held-out calibration values too).
+    pub fn evaluate_sample_kv(
+        &self,
+        sample: &Sample,
+        m_keys: usize,
+        m_values: usize,
+        stride: usize,
+    ) -> FidelityReport {
+        let calib_values = &sample.calib_values;
+        let d_k = sample.d_k;
+        let inv = 1.0 / (d_k as f32).sqrt();
+        let mut reports = Vec::new();
+        for head in 0..self.model_cfg.n_head {
+            let keys = &sample.keys[head];
+            let values = &sample.values[head];
+            let queries = &sample.queries[head];
+            let kc = PqCodec::train(
+                &sample.calib_keys[head], d_k, m_keys,
+                crate::pq::NUM_CENTROIDS,
+                &TrainOpts { seed: self.seed, ..Default::default() });
+            let vc = PqCodec::train(
+                &calib_values[head], d_k, m_values,
+                crate::pq::NUM_CENTROIDS,
+                &TrainOpts { seed: self.seed ^ 1, ..Default::default() });
+            let key_codes = kc.encode_batch(keys, sample.len);
+            let value_codes = vc.encode_batch(values, sample.len);
+            let mut t = 16.max(stride);
+            while t < sample.len {
+                let n = t + 1;
+                let q = &queries[t * d_k..(t + 1) * d_k];
+                let mut s_ref: Vec<f32> = (0..n)
+                    .map(|l| {
+                        crate::tensor::dot(
+                            q, &keys[l * d_k..(l + 1) * d_k]) * inv
+                    })
+                    .collect();
+                softmax_inplace(&mut s_ref);
+                let out_ref = weighted_values(&s_ref, values, d_k);
+                let apx = crate::attention::lookat_kv_attention(
+                    q, &key_codes[..n * m_keys], &kc,
+                    &value_codes[..n * m_values], &vc, n);
+                reports.push(FidelityReport::compare(
+                    &out_ref, &apx.out, &s_ref, &apx.weights));
+                t += stride;
+            }
+        }
+        average_reports(&reports)
+    }
+
+    /// Evaluate a method over all samples -> (per-sample reports, agg).
+    pub fn evaluate(&self, method: Method, stride: usize)
+        -> (Vec<FidelityReport>, AggregateFidelity)
+    {
+        let per_sample: Vec<FidelityReport> = self
+            .samples
+            .iter()
+            .map(|s| self.evaluate_sample(s, method, stride))
+            .collect();
+        let agg = AggregateFidelity::of(&per_sample);
+        (per_sample, agg)
+    }
+
+    /// Full attention map (T×T lower-triangular, one head) for a method —
+    /// Figure 4's raw material.
+    pub fn attention_map(&self, sample: &Sample, head: usize,
+                         method: Method) -> Vec<Vec<f32>> {
+        let d_k = sample.d_k;
+        let inv = 1.0 / (d_k as f32).sqrt();
+        let keys = &sample.keys[head];
+        let queries = &sample.queries[head];
+
+        let (kk, pq): (Vec<f32>, Option<(PqCodec, Vec<u8>)>) = match method {
+            Method::Fp16 => (keys.clone(), None),
+            Method::Int8 => (quant::quant_roundtrip(keys, 8), None),
+            Method::Int4 => (quant::quant_roundtrip(keys, 4), None),
+            Method::Lookat { m } => {
+                let codec = PqCodec::train(
+                    &sample.calib_keys[head], d_k, m,
+                    crate::pq::NUM_CENTROIDS,
+                    &TrainOpts { seed: self.seed, ..Default::default() });
+                let codes = codec.encode_batch(keys, sample.len);
+                (Vec::new(), Some((codec, codes)))
+            }
+        };
+
+        (0..sample.len)
+            .map(|t| {
+                let q = &queries[t * d_k..(t + 1) * d_k];
+                let n = t + 1;
+                let mut s: Vec<f32> = match &pq {
+                    None => (0..n)
+                        .map(|l| {
+                            crate::tensor::dot(
+                                q, &kk[l * d_k..(l + 1) * d_k]) * inv
+                        })
+                        .collect(),
+                    Some((codec, codes)) => {
+                        let lut = LookupTable::build(q, &codec.codebook);
+                        let m = codec.codebook.m;
+                        let mut s = lut.scores(&codes[..n * m], n);
+                        for v in s.iter_mut() {
+                            *v *= inv;
+                        }
+                        s
+                    }
+                };
+                softmax_inplace(&mut s);
+                s
+            })
+            .collect()
+    }
+}
+
+fn weighted_values(weights: &[f32], values: &[f32], d_k: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; d_k];
+    for (l, &a) in weights.iter().enumerate() {
+        if a > 0.0 {
+            crate::tensor::axpy(&mut out, a, &values[l * d_k..(l + 1) * d_k]);
+        }
+    }
+    out
+}
+
+/// Mean of many fidelity reports (positions × heads within one sample).
+pub fn average_reports(reports: &[FidelityReport]) -> FidelityReport {
+    assert!(!reports.is_empty());
+    let n = reports.len() as f64;
+    FidelityReport {
+        cosine: reports.iter().map(|r| r.cosine).sum::<f64>() / n,
+        kl: reports.iter().map(|r| r.kl).sum::<f64>() / n,
+        spearman: reports.iter().map(|r| r.spearman).sum::<f64>() / n,
+        top5: reports.iter().map(|r| r.top5).sum::<f64>() / n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_ctx() -> EvalContext {
+        EvalContext::build_with(ModelConfig::test_tiny(), 64, 7)
+    }
+
+    #[test]
+    fn context_has_three_genre_samples() {
+        let ctx = quick_ctx();
+        assert_eq!(ctx.samples.len(), 3);
+        for s in &ctx.samples {
+            assert_eq!(s.keys.len(), ctx.model_cfg.n_head);
+            assert_eq!(s.keys[0].len(), s.len * s.d_k);
+        }
+    }
+
+    #[test]
+    fn fp16_method_is_perfect() {
+        let ctx = quick_ctx();
+        let (_, agg) = ctx.evaluate(Method::Fp16, 8);
+        assert!((agg.cosine.0 - 1.0).abs() < 1e-9);
+        assert!(agg.kl.0 < 1e-9);
+        assert!((agg.spearman.0 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn int8_near_lossless_int4_worse() {
+        let ctx = quick_ctx();
+        let (_, i8agg) = ctx.evaluate(Method::Int8, 8);
+        let (_, i4agg) = ctx.evaluate(Method::Int4, 8);
+        assert!(i8agg.cosine.0 > 0.999);
+        assert!(i4agg.cosine.0 < i8agg.cosine.0 + 1e-12);
+        assert!(i4agg.kl.0 > i8agg.kl.0);
+    }
+
+    #[test]
+    fn lookat_preserves_rank_structure() {
+        let ctx = quick_ctx();
+        let (_, agg) = ctx.evaluate(Method::Lookat { m: 4 }, 8);
+        assert!(agg.cosine.0 > 0.85, "cosine {}", agg.cosine.0);
+        assert!(agg.spearman.0 > 0.7, "spearman {}", agg.spearman.0);
+    }
+
+    #[test]
+    fn method_accounting() {
+        assert_eq!(Method::Fp16.compression(64), 1.0);
+        assert_eq!(Method::Lookat { m: 2 }.compression(64), 64.0);
+        assert_eq!(Method::Lookat { m: 4 }.compression(64), 32.0);
+        assert_eq!(Method::Lookat { m: 16 }.compression(64), 8.0);
+        assert_eq!(Method::Int8.bytes_per_token(64), 64.0);
+        assert_eq!(Method::Int4.bytes_per_token(64), 32.0);
+    }
+
+    #[test]
+    fn attention_map_is_causal_and_normalized() {
+        let ctx = quick_ctx();
+        let map = ctx.attention_map(&ctx.samples[0], 0, Method::Fp16);
+        assert_eq!(map.len(), ctx.samples[0].len);
+        for (t, row) in map.iter().enumerate() {
+            assert_eq!(row.len(), t + 1);
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn evaluate_is_deterministic() {
+        let ctx = quick_ctx();
+        let (_, a) = ctx.evaluate(Method::Lookat { m: 4 }, 16);
+        let (_, b) = ctx.evaluate(Method::Lookat { m: 4 }, 16);
+        assert_eq!(a.cosine, b.cosine);
+        assert_eq!(a.kl, b.kl);
+    }
+}

@@ -1,0 +1,176 @@
+//! Figure 3 — comprehensive evaluation, four panels:
+//! (a) cosine vs compression, (b) KL (log scale) vs compression,
+//! (c) Spearman ρ vs compression, (d) Pareto frontier (compression vs
+//! cosine, scalar vs LOOKAT families).
+//!
+//! Emits the series as CSV (one row per method) + a Pareto analysis in
+//! JSON; the markdown includes an ASCII rendition of panel (d).
+
+use super::report::Report;
+use super::table1::{self, Row};
+use crate::util::json::Json;
+
+pub struct Figure3 {
+    pub rows: Vec<Row>,
+    /// methods on the (compression, cosine) Pareto frontier
+    pub pareto: Vec<String>,
+}
+
+/// A point dominates another if it has ≥ compression and ≥ cosine with
+/// at least one strict.
+pub fn pareto_frontier(rows: &[Row]) -> Vec<String> {
+    let mut frontier = Vec::new();
+    for a in rows {
+        let dominated = rows.iter().any(|b| {
+            (b.compression >= a.compression
+                && b.agg.cosine.0 >= a.agg.cosine.0)
+                && (b.compression > a.compression
+                    || b.agg.cosine.0 > a.agg.cosine.0)
+        });
+        if !dominated {
+            frontier.push(a.method.name());
+        }
+    }
+    frontier
+}
+
+fn ascii_pareto(rows: &[Row]) -> String {
+    // 48x14 scatter: x = log2(compression) 0..6, y = cosine 0.90..1.00
+    const W: usize = 49;
+    const H: usize = 15;
+    let mut grid = vec![vec![' '; W]; H];
+    let mut legend = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        let x = ((r.compression.log2() / 6.0) * (W - 1) as f64)
+            .clamp(0.0, (W - 1) as f64) as usize;
+        let ymin = 0.90;
+        let y = (((r.agg.cosine.0 - ymin) / (1.0 - ymin))
+            * (H - 1) as f64)
+            .clamp(0.0, (H - 1) as f64) as usize;
+        let ch = char::from(b'A' + i as u8);
+        grid[H - 1 - y][x] = ch;
+        legend.push_str(&format!(
+            "  {ch} = {:<16} ({:>4.0}x, cos {:.3})\n",
+            r.method.name(),
+            r.compression,
+            r.agg.cosine.0
+        ));
+    }
+    let mut s = String::from(
+        "cosine 1.00 ┌─ Pareto panel (x: log2 compression 1x→64x) ─┐\n");
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            "            "
+        } else if i == H - 1 {
+            "cosine 0.90 "
+        } else {
+            "            "
+        };
+        s.push_str(label);
+        s.push('│');
+        s.extend(row.iter());
+        s.push_str("│\n");
+    }
+    s.push_str("            └");
+    s.push_str(&"─".repeat(W));
+    s.push_str("┘\n");
+    s.push_str(&legend);
+    s
+}
+
+pub fn render(fig: &Figure3, len: usize) -> Report {
+    let mut csv = String::from(
+        "method,family,compression,bytes_per_token,cosine,cosine_std,\
+         kl,kl_std,spearman,spearman_std,top5,top5_std\n",
+    );
+    let mut arr = Vec::new();
+    for r in &fig.rows {
+        let family = if matches!(r.method,
+                                 super::eval::Method::Lookat { .. }) {
+            "lookat"
+        } else {
+            "scalar"
+        };
+        csv.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            r.method.name(),
+            family,
+            r.compression,
+            r.bytes_per_token,
+            r.agg.cosine.0,
+            r.agg.cosine.1,
+            r.agg.kl.0,
+            r.agg.kl.1,
+            r.agg.spearman.0,
+            r.agg.spearman.1,
+            r.agg.top5.0,
+            r.agg.top5.1,
+        ));
+        let mut o = Json::obj();
+        o.set("method", Json::Str(r.method.name()));
+        o.set("family", Json::Str(family.into()));
+        o.set("compression", Json::Num(r.compression));
+        o.set("metrics", r.agg.to_json());
+        arr.push(o);
+    }
+    let mut j = Json::obj();
+    j.set("series", Json::Arr(arr));
+    j.set(
+        "pareto_frontier",
+        Json::Arr(fig.pareto.iter().map(|s| Json::Str(s.clone())).collect()),
+    );
+
+    let markdown = format!(
+        "Four-panel data at L={len} (panels a–c are the CSV columns \
+         cosine/kl/spearman vs compression; panel d below).\n\n\
+         Pareto frontier (compression ⊕ cosine): **{}**\n\n```\n{}```\n",
+        fig.pareto.join(", "),
+        ascii_pareto(&fig.rows)
+    );
+    Report {
+        id: "figure3".into(),
+        title: "Comprehensive evaluation panels (paper Figure 3)".into(),
+        markdown,
+        json: j,
+        csv,
+    }
+}
+
+pub fn run(quick: bool) -> anyhow::Result<Figure3> {
+    let (len, stride) = if quick { (96, 16) } else { (512, 8) };
+    let rows = table1::compute(len, stride, 0xF16_3);
+    let pareto = pareto_frontier(&rows);
+    let fig = Figure3 { rows, pareto };
+    render(&fig, len).emit()?;
+    Ok(fig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookat_dominates_high_compression_regime() {
+        let rows = table1::compute(64, 16, 4);
+        let pareto = pareto_frontier(&rows);
+        // the highest-compression point is LOOKAT-2 by construction and
+        // must be on the frontier (nothing has more compression)
+        assert!(
+            pareto.iter().any(|m| m == "LOOKAT-2"),
+            "frontier: {pareto:?}"
+        );
+        // FP16 (cosine 1.0) is also non-dominated
+        assert!(pareto.iter().any(|m| m.starts_with("FP16")));
+    }
+
+    #[test]
+    fn csv_has_all_methods_and_families() {
+        let rows = table1::compute(64, 16, 4);
+        let pareto = pareto_frontier(&rows);
+        let rep = render(&Figure3 { rows, pareto }, 64);
+        assert_eq!(rep.csv.lines().count(), 8);
+        assert!(rep.csv.contains(",lookat,"));
+        assert!(rep.csv.contains(",scalar,"));
+        assert!(rep.markdown.contains("Pareto"));
+    }
+}

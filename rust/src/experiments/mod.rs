@@ -1,0 +1,67 @@
+//! The experiment harness: regenerates every table and figure of the
+//! paper's evaluation section (§4). See DESIGN.md's experiment index.
+//!
+//! | id | paper artifact | module |
+//! |----|----------------|--------|
+//! | T1 | Table 1 compression–quality | [`table1`] |
+//! | T2 | Table 2 subspace ablation   | [`table2`] |
+//! | T3 | Table 3 long-context        | [`table3`] |
+//! | T4 | Table 4 memory budgets      | [`table4`] |
+//! | F3 | Figure 3 four-panel + Pareto| [`figure3`] |
+//! | F4 | Figure 4 attention maps     | [`figure4`] |
+//! | E1 | §4.7 efficiency analysis    | [`efficiency`] |
+//!
+//! Every experiment prints the paper-shaped table and writes
+//! `artifacts/reports/<id>.{md,json,csv}` via [`report`].
+
+pub mod ablation_calibration;
+pub mod ablation_centroids;
+pub mod ablation_values;
+pub mod efficiency;
+pub mod eval;
+pub mod figure3;
+pub mod figure4;
+pub mod report;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+
+pub use eval::{EvalContext, Method};
+
+/// Run an experiment by id ("table1", ..., "figure4", "efficiency",
+/// "all"). `quick` shrinks sample sizes for CI.
+pub fn run(id: &str, quick: bool) -> anyhow::Result<()> {
+    match id {
+        "table1" => table1::run(quick).map(|_| ()),
+        "table2" => table2::run(quick).map(|_| ()),
+        "table3" => table3::run(quick).map(|_| ()),
+        "table4" => table4::run(quick).map(|_| ()),
+        "figure3" => figure3::run(quick).map(|_| ()),
+        "figure4" => figure4::run(quick).map(|_| ()),
+        "efficiency" => efficiency::run(quick).map(|_| ()),
+        "ablation-values" => ablation_values::run(quick).map(|_| ()),
+        "ablation-centroids" => ablation_centroids::run(quick).map(|_| ()),
+        "ablation-calibration" => {
+            ablation_calibration::run(quick).map(|_| ())
+        }
+        "all" => {
+            table1::run(quick)?;
+            table2::run(quick)?;
+            table3::run(quick)?;
+            table4::run(quick)?;
+            figure3::run(quick)?;
+            figure4::run(quick)?;
+            efficiency::run(quick)?;
+            ablation_values::run(quick)?;
+            ablation_centroids::run(quick)?;
+            ablation_calibration::run(quick)?;
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (table1..4, figure3, figure4, \
+             efficiency, ablation-values, ablation-centroids, \
+             ablation-calibration, all)"
+        ),
+    }
+}

@@ -1,0 +1,146 @@
+//! Report writer: every experiment emits markdown (human), JSON
+//! (machine) and CSV (plotting) under `artifacts/reports/`.
+
+use std::path::PathBuf;
+
+use crate::util::json::Json;
+
+/// Destination directory for reports.
+pub fn reports_dir() -> PathBuf {
+    crate::runtime::default_artifacts_dir().join("reports")
+}
+
+/// A rendered experiment report.
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub markdown: String,
+    pub json: Json,
+    pub csv: String,
+}
+
+impl Report {
+    pub fn write(&self) -> anyhow::Result<()> {
+        let dir = reports_dir();
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(dir.join(format!("{}.md", self.id)),
+                       &self.markdown)?;
+        std::fs::write(
+            dir.join(format!("{}.json", self.id)),
+            self.json.to_string_pretty(),
+        )?;
+        if !self.csv.is_empty() {
+            std::fs::write(dir.join(format!("{}.csv", self.id)), &self.csv)?;
+        }
+        Ok(())
+    }
+
+    /// Print the markdown to stdout and persist all formats.
+    pub fn emit(&self) -> anyhow::Result<()> {
+        println!("\n## {} — {}\n", self.id, self.title);
+        println!("{}", self.markdown);
+        self.write()?;
+        println!("(written to {}/{}.{{md,json,csv}})",
+                 reports_dir().display(), self.id);
+        Ok(())
+    }
+}
+
+/// Format "mean ± std" to 3 decimals, paper-style.
+pub fn pm(mean: f64, std: f64) -> String {
+    format!("{mean:.3} ± {std:.3}")
+}
+
+/// Markdown table builder.
+pub struct MdTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl MdTable {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        s.push_str(&format!(
+            "|{}\n",
+            "---|".repeat(self.header.len())
+        ));
+        for r in &self.rows {
+            s.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            // strip the ± decoration for machine consumption
+            let cells: Vec<String> = r
+                .iter()
+                .map(|c| c.replace(" ± ", ";").replace(',', ";"))
+                .collect();
+            s.push_str(&cells.join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_markdown_and_csv() {
+        let mut t = MdTable::new(&["Method", "Cosine"]);
+        t.row(vec!["FP16".into(), pm(1.0, 0.0)]);
+        t.row(vec!["LOOKAT-4".into(), pm(0.95, 0.022)]);
+        let md = t.render();
+        assert!(md.contains("| Method | Cosine |"));
+        assert!(md.contains("LOOKAT-4"));
+        assert!(md.contains("0.950 ± 0.022"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("Method,Cosine\n"));
+        assert!(csv.contains("0.950;0.022"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn row_width_checked() {
+        let mut t = MdTable::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn report_writes_files() {
+        let r = Report {
+            id: "selftest".into(),
+            title: "self test".into(),
+            markdown: "hello".into(),
+            json: Json::Num(1.0),
+            csv: "a,b\n1,2\n".into(),
+        };
+        r.write().unwrap();
+        let dir = reports_dir();
+        assert!(dir.join("selftest.md").exists());
+        assert!(dir.join("selftest.json").exists());
+        assert!(dir.join("selftest.csv").exists());
+        for ext in ["md", "json", "csv"] {
+            std::fs::remove_file(dir.join(format!("selftest.{ext}"))).ok();
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Table 4 — head-to-head comparison at equivalent memory budgets.
+//!
+//! For each bytes/token budget, which methods fit and what cosine do
+//! they achieve. Under exact byte accounting (see quant tests), scalar
+//! methods occupy the 64/32 B budgets while only LOOKAT can serve
+//! ≤ 16 B/token — which *strengthens* the paper's qualitative claim
+//! (scalar quantization is infeasible in the high-compression regime).
+
+use super::eval::Method;
+use super::report::{MdTable, Report};
+use super::table1::{self, Row as T1Row};
+use crate::util::json::Json;
+
+pub struct BudgetRow {
+    pub budget_bytes: usize,
+    pub entries: Vec<(Method, f64, f64)>, // (method, compression, cosine)
+}
+
+/// Derive the budget table from Table-1 rows.
+pub fn compute(rows: &[T1Row]) -> Vec<BudgetRow> {
+    let budgets = [64usize, 32, 16, 8, 4, 2];
+    budgets
+        .iter()
+        .map(|&b| {
+            let entries = rows
+                .iter()
+                .filter(|r| {
+                    r.method != Method::Fp16
+                        && r.bytes_per_token as usize == b
+                })
+                .map(|r| (r.method, r.compression, r.agg.cosine.0))
+                .collect();
+            BudgetRow { budget_bytes: b, entries }
+        })
+        .collect()
+}
+
+pub fn render(rows: &[BudgetRow]) -> Report {
+    let mut t =
+        MdTable::new(&["Memory Budget", "Method", "Compression",
+                       "Cosine Sim"]);
+    let mut arr = Vec::new();
+    for r in rows {
+        if r.entries.is_empty() {
+            t.row(vec![
+                format!("{} B/token", r.budget_bytes),
+                "—".into(),
+                "—".into(),
+                "—".into(),
+            ]);
+        }
+        for (m, comp, cos) in &r.entries {
+            t.row(vec![
+                format!("{} B/token", r.budget_bytes),
+                m.name(),
+                format!("{comp:.0}×"),
+                format!("{cos:.3}"),
+            ]);
+            let mut o = Json::obj();
+            o.set("budget_bytes", Json::Num(r.budget_bytes as f64));
+            o.set("method", Json::Str(m.name()));
+            o.set("compression", Json::Num(*comp));
+            o.set("cosine", Json::Num(*cos));
+            arr.push(o);
+        }
+    }
+    let markdown = format!(
+        "Exact byte accounting (d_k=64 keys): INT8 = 64 B, INT4 = 32 B, \
+         LOOKAT-m = m B. Scalar quantization cannot enter the ≤16 B \
+         regime at all — only LOOKAT serves those budgets.\n\n{}",
+        t.render()
+    );
+    Report {
+        id: "table4".into(),
+        title: "Equal-memory head-to-head (paper Table 4)".into(),
+        markdown,
+        json: Json::Arr(arr),
+        csv: t.to_csv(),
+    }
+}
+
+pub fn run(quick: bool) -> anyhow::Result<Vec<BudgetRow>> {
+    let (len, stride) = if quick { (96, 16) } else { (512, 8) };
+    let t1 = table1::compute(len, stride, 0xA11CE);
+    let rows = compute(&t1);
+    render(&rows).emit()?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_partition_methods_correctly() {
+        let t1 = table1::compute(64, 16, 3);
+        let rows = compute(&t1);
+        let find = |b: usize| rows.iter().find(|r| r.budget_bytes == b)
+            .unwrap();
+        // 64 B: INT8 only
+        assert_eq!(find(64).entries.len(), 1);
+        assert_eq!(find(64).entries[0].0.name(), "INT8");
+        // 32 B: INT4 only
+        assert_eq!(find(32).entries[0].0.name(), "INT4");
+        // 16/8/4/2 B: LOOKAT only
+        for (b, name) in
+            [(16, "LOOKAT-16"), (8, "LOOKAT-8"), (4, "LOOKAT-4"),
+             (2, "LOOKAT-2")]
+        {
+            let r = find(b);
+            assert_eq!(r.entries.len(), 1, "budget {b}");
+            assert_eq!(r.entries[0].0.name(), name);
+        }
+    }
+
+    #[test]
+    fn lookat_holds_quality_in_exclusive_regime() {
+        let t1 = table1::compute(64, 16, 3);
+        let rows = compute(&t1);
+        for r in rows.iter().filter(|r| r.budget_bytes <= 16) {
+            for (_, _, cos) in &r.entries {
+                assert!(*cos > 0.8, "budget {}: cosine {}", r.budget_bytes,
+                        cos);
+            }
+        }
+    }
+}

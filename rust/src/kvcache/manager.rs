@@ -1,0 +1,539 @@
+//! The KV-cache manager: per-sequence paged storage of (compressed) keys
+//! and full-precision values for all heads of one layer.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::block::{BlockAllocator, BlockId, BLOCK_TOKENS};
+use crate::pq::PqCodec;
+
+/// Sequence identifier (one per serving request).
+pub type SeqId = u64;
+
+/// How keys are stored in the cache.
+#[derive(Clone)]
+pub enum KeyStorage {
+    /// Raw keys ("FP16" storage model: accounted 2 B/element).
+    Fp16,
+    /// LOOKAT: keys live only as PQ codes, one codec per head.
+    Pq { codecs: Arc<Vec<PqCodec>> },
+}
+
+impl KeyStorage {
+    fn m(&self) -> usize {
+        match self {
+            KeyStorage::Fp16 => 0,
+            KeyStorage::Pq { codecs } => codecs[0].codebook.m,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CacheError {
+    #[error("out of cache blocks (budget exhausted)")]
+    OutOfBlocks,
+    #[error("unknown sequence {0}")]
+    UnknownSeq(SeqId),
+    #[error("sequence {0} already exists")]
+    DuplicateSeq(SeqId),
+}
+
+/// Exact memory accounting, in bytes, under the paper's storage model
+/// (FP16 = 2 B per stored element; PQ codes = 1 B each).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub seqs: usize,
+    pub tokens: usize,
+    pub key_bytes: usize,
+    pub value_bytes: usize,
+    pub codebook_bytes: usize,
+    pub blocks_allocated: usize,
+    pub blocks_total: usize,
+}
+
+impl CacheStats {
+    pub fn total_bytes(&self) -> usize {
+        self.key_bytes + self.value_bytes + self.codebook_bytes
+    }
+}
+
+struct SeqState {
+    blocks: Vec<BlockId>,
+    len: usize,
+}
+
+/// Paged KV-cache for one transformer layer (all `h` heads).
+///
+/// Block layout (per block, `BLOCK_TOKENS` token slots):
+///   values: (BLOCK_TOKENS, H, d_k) f32, always
+///   keys:   (BLOCK_TOKENS, H, d_k) f32 when Fp16
+///   codes:  (BLOCK_TOKENS, H, m)  u8  when Pq
+pub struct KvCache {
+    pub h: usize,
+    pub d_k: usize,
+    storage: KeyStorage,
+    alloc: BlockAllocator,
+    seqs: HashMap<SeqId, SeqState>,
+    values: Vec<f32>,
+    keys_raw: Vec<f32>,
+    codes: Vec<u8>,
+}
+
+impl KvCache {
+    /// Build a cache with a budget of `max_blocks` blocks.
+    pub fn new(h: usize, d_k: usize, max_blocks: usize,
+               storage: KeyStorage) -> Self {
+        if let KeyStorage::Pq { codecs } = &storage {
+            assert_eq!(codecs.len(), h, "one codec per head");
+            for c in codecs.iter() {
+                assert_eq!(c.codebook.d_k(), d_k);
+            }
+        }
+        let slot = BLOCK_TOKENS * h;
+        let (keys_raw, codes) = match &storage {
+            KeyStorage::Fp16 => (vec![0.0; max_blocks * slot * d_k], vec![]),
+            KeyStorage::Pq { codecs } => {
+                let m = codecs[0].codebook.m;
+                (vec![], vec![0u8; max_blocks * slot * m])
+            }
+        };
+        Self {
+            h,
+            d_k,
+            storage,
+            alloc: BlockAllocator::new(max_blocks),
+            seqs: HashMap::new(),
+            values: vec![0.0; max_blocks * slot * d_k],
+            keys_raw,
+            codes,
+        }
+    }
+
+    pub fn is_pq(&self) -> bool {
+        matches!(self.storage, KeyStorage::Pq { .. })
+    }
+
+    pub fn codecs(&self) -> Option<&Arc<Vec<PqCodec>>> {
+        match &self.storage {
+            KeyStorage::Pq { codecs } => Some(codecs),
+            KeyStorage::Fp16 => None,
+        }
+    }
+
+    /// Register a new (empty) sequence.
+    pub fn create_seq(&mut self, seq: SeqId) -> Result<(), CacheError> {
+        if self.seqs.contains_key(&seq) {
+            return Err(CacheError::DuplicateSeq(seq));
+        }
+        self.seqs.insert(seq, SeqState { blocks: Vec::new(), len: 0 });
+        Ok(())
+    }
+
+    /// Tokens currently cached for a sequence.
+    pub fn seq_len(&self, seq: SeqId) -> Result<usize, CacheError> {
+        Ok(self.seqs.get(&seq).ok_or(CacheError::UnknownSeq(seq))?.len)
+    }
+
+    /// Whether another `n`-token append can be admitted right now.
+    pub fn can_append(&self, seq: SeqId, n: usize) -> bool {
+        match self.seqs.get(&seq) {
+            None => false,
+            Some(st) => {
+                let need = (st.len + n).div_ceil(BLOCK_TOKENS)
+                    - st.blocks.len();
+                need <= self.alloc.available()
+            }
+        }
+    }
+
+    /// Append one token's K/V for all heads.
+    ///
+    /// `keys`/`values` are (H × d_k). In PQ mode the key is immediately
+    /// encoded to `m` codes per head and the raw key is dropped — this is
+    /// the paper's storage contract (keys never exist uncompressed in the
+    /// cache).
+    pub fn append(
+        &mut self,
+        seq: SeqId,
+        keys: &[f32],
+        values: &[f32],
+    ) -> Result<(), CacheError> {
+        assert_eq!(keys.len(), self.h * self.d_k);
+        assert_eq!(values.len(), self.h * self.d_k);
+        let st = self
+            .seqs
+            .get_mut(&seq)
+            .ok_or(CacheError::UnknownSeq(seq))?;
+        let off = st.len % BLOCK_TOKENS;
+        if off == 0 {
+            let b = self.alloc.alloc().ok_or(CacheError::OutOfBlocks)?;
+            st.blocks.push(b);
+        }
+        let block = *st.blocks.last().unwrap() as usize;
+        let h = self.h;
+        let d_k = self.d_k;
+        // values
+        let vbase = (block * BLOCK_TOKENS + off) * h * d_k;
+        self.values[vbase..vbase + h * d_k].copy_from_slice(values);
+        // keys
+        match &self.storage {
+            KeyStorage::Fp16 => {
+                let kbase = vbase;
+                self.keys_raw[kbase..kbase + h * d_k].copy_from_slice(keys);
+            }
+            KeyStorage::Pq { codecs } => {
+                let m = codecs[0].codebook.m;
+                let cbase = (block * BLOCK_TOKENS + off) * h * m;
+                for head in 0..h {
+                    let code = codecs[head]
+                        .encode(&keys[head * d_k..(head + 1) * d_k]);
+                    self.codes[cbase + head * m..cbase + (head + 1) * m]
+                        .copy_from_slice(&code);
+                }
+            }
+        }
+        st.len += 1;
+        Ok(())
+    }
+
+    /// Drop a sequence and return its blocks to the pool.
+    pub fn free_seq(&mut self, seq: SeqId) -> Result<(), CacheError> {
+        let st = self.seqs.remove(&seq).ok_or(CacheError::UnknownSeq(seq))?;
+        for b in st.blocks {
+            self.alloc.release(b);
+        }
+        Ok(())
+    }
+
+    /// Copy one head's raw keys into `out` (FP16 mode only).
+    /// Returns the sequence length.
+    pub fn gather_keys_into(
+        &self,
+        seq: SeqId,
+        head: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<usize, CacheError> {
+        assert!(!self.is_pq(), "gather_keys_into is for FP16 caches");
+        let st = self.seqs.get(&seq).ok_or(CacheError::UnknownSeq(seq))?;
+        out.clear();
+        out.reserve(st.len * self.d_k);
+        self.for_each_token(st, |tok_base| {
+            let kb = tok_base * self.h * self.d_k + head * self.d_k;
+            out.extend_from_slice(&self.keys_raw[kb..kb + self.d_k]);
+        });
+        Ok(st.len)
+    }
+
+    /// Copy one head's PQ codes into `out` (PQ mode only).
+    pub fn gather_codes_into(
+        &self,
+        seq: SeqId,
+        head: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<usize, CacheError> {
+        let m = self.storage.m();
+        assert!(m > 0, "gather_codes_into is for PQ caches");
+        let st = self.seqs.get(&seq).ok_or(CacheError::UnknownSeq(seq))?;
+        out.clear();
+        out.reserve(st.len * m);
+        self.for_each_token(st, |tok_base| {
+            let cb = tok_base * self.h * m + head * m;
+            out.extend_from_slice(&self.codes[cb..cb + m]);
+        });
+        Ok(st.len)
+    }
+
+    /// Copy one head's values into `out`.
+    pub fn gather_values_into(
+        &self,
+        seq: SeqId,
+        head: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<usize, CacheError> {
+        let st = self.seqs.get(&seq).ok_or(CacheError::UnknownSeq(seq))?;
+        out.clear();
+        out.reserve(st.len * self.d_k);
+        self.for_each_token(st, |tok_base| {
+            let vb = tok_base * self.h * self.d_k + head * self.d_k;
+            out.extend_from_slice(&self.values[vb..vb + self.d_k]);
+        });
+        Ok(st.len)
+    }
+
+    fn for_each_token(&self, st: &SeqState, mut f: impl FnMut(usize)) {
+        let mut remaining = st.len;
+        for &b in &st.blocks {
+            let take = remaining.min(BLOCK_TOKENS);
+            for t in 0..take {
+                f(b as usize * BLOCK_TOKENS + t);
+            }
+            remaining -= take;
+        }
+    }
+
+    /// Exact storage accounting under the paper's byte model.
+    pub fn stats(&self) -> CacheStats {
+        let tokens: usize = self.seqs.values().map(|s| s.len).sum();
+        let key_bytes = match &self.storage {
+            KeyStorage::Fp16 => tokens * self.h * self.d_k * 2,
+            KeyStorage::Pq { codecs } => {
+                tokens * self.h * codecs[0].codebook.m
+            }
+        };
+        let codebook_bytes = match &self.storage {
+            KeyStorage::Fp16 => 0,
+            KeyStorage::Pq { codecs } => {
+                codecs.iter().map(|c| c.codebook.size_bytes_fp16()).sum()
+            }
+        };
+        CacheStats {
+            seqs: self.seqs.len(),
+            tokens,
+            key_bytes,
+            value_bytes: tokens * self.h * self.d_k * 2,
+            codebook_bytes,
+            blocks_allocated: self.alloc.allocated(),
+            blocks_total: self.alloc.total(),
+        }
+    }
+
+    /// Bytes of key storage per token (the paper's "Mem." column).
+    pub fn key_bytes_per_token_per_head(&self) -> usize {
+        match &self.storage {
+            KeyStorage::Fp16 => self.d_k * 2,
+            KeyStorage::Pq { codecs } => codecs[0].codebook.m,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::TrainOpts;
+    use crate::util::rng::Pcg32;
+
+    const H: usize = 2;
+    const DK: usize = 16;
+
+    fn pq_storage(m: usize) -> KeyStorage {
+        let mut rng = Pcg32::seed(5);
+        let calib: Vec<f32> =
+            (0..128 * DK).map(|_| rng.next_f32_std()).collect();
+        let codecs: Vec<PqCodec> = (0..H)
+            .map(|_| PqCodec::train(&calib, DK, m, 16, &TrainOpts::default()))
+            .collect();
+        KeyStorage::Pq { codecs: Arc::new(codecs) }
+    }
+
+    fn token(seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::seed(seed);
+        let k = (0..H * DK).map(|_| rng.next_f32_std()).collect();
+        let v = (0..H * DK).map(|_| rng.next_f32_std()).collect();
+        (k, v)
+    }
+
+    #[test]
+    fn fp16_roundtrip_preserves_keys_and_values() {
+        let mut c = KvCache::new(H, DK, 8, KeyStorage::Fp16);
+        c.create_seq(1).unwrap();
+        let mut all_k = Vec::new();
+        let mut all_v = Vec::new();
+        for t in 0..70 {
+            // spans 3 blocks
+            let (k, v) = token(t);
+            all_k.push(k.clone());
+            all_v.push(v.clone());
+            c.append(1, &k, &v).unwrap();
+        }
+        assert_eq!(c.seq_len(1).unwrap(), 70);
+        let mut keys = Vec::new();
+        let mut vals = Vec::new();
+        for head in 0..H {
+            let n = c.gather_keys_into(1, head, &mut keys).unwrap();
+            assert_eq!(n, 70);
+            c.gather_values_into(1, head, &mut vals).unwrap();
+            for t in 0..70 {
+                assert_eq!(
+                    &keys[t * DK..(t + 1) * DK],
+                    &all_k[t][head * DK..(head + 1) * DK]
+                );
+                assert_eq!(
+                    &vals[t * DK..(t + 1) * DK],
+                    &all_v[t][head * DK..(head + 1) * DK]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pq_mode_stores_codes_matching_direct_encode() {
+        let storage = pq_storage(4);
+        let codecs = match &storage {
+            KeyStorage::Pq { codecs } => codecs.clone(),
+            _ => unreachable!(),
+        };
+        let mut c = KvCache::new(H, DK, 8, storage);
+        c.create_seq(9).unwrap();
+        let mut expected: Vec<Vec<u8>> = vec![Vec::new(); H];
+        for t in 0..40 {
+            let (k, v) = token(100 + t);
+            for head in 0..H {
+                expected[head].extend(
+                    codecs[head].encode(&k[head * DK..(head + 1) * DK]),
+                );
+            }
+            c.append(9, &k, &v).unwrap();
+        }
+        let mut codes = Vec::new();
+        for head in 0..H {
+            let n = c.gather_codes_into(9, head, &mut codes).unwrap();
+            assert_eq!(n, 40);
+            assert_eq!(codes, expected[head]);
+        }
+    }
+
+    #[test]
+    fn out_of_blocks_is_reported_not_panicked() {
+        let mut c = KvCache::new(H, DK, 1, KeyStorage::Fp16);
+        c.create_seq(1).unwrap();
+        let (k, v) = token(0);
+        for _ in 0..BLOCK_TOKENS {
+            c.append(1, &k, &v).unwrap();
+        }
+        assert_eq!(c.append(1, &k, &v), Err(CacheError::OutOfBlocks));
+        assert!(!c.can_append(1, 1));
+    }
+
+    #[test]
+    fn free_seq_releases_blocks_for_reuse() {
+        let mut c = KvCache::new(H, DK, 2, KeyStorage::Fp16);
+        c.create_seq(1).unwrap();
+        let (k, v) = token(0);
+        for _ in 0..2 * BLOCK_TOKENS {
+            c.append(1, &k, &v).unwrap();
+        }
+        assert_eq!(c.stats().blocks_allocated, 2);
+        c.free_seq(1).unwrap();
+        assert_eq!(c.stats().blocks_allocated, 0);
+        c.create_seq(2).unwrap();
+        for _ in 0..2 * BLOCK_TOKENS {
+            c.append(2, &k, &v).unwrap();
+        }
+        assert_eq!(c.seq_len(2).unwrap(), 2 * BLOCK_TOKENS);
+    }
+
+    #[test]
+    fn unknown_and_duplicate_seq_errors() {
+        let mut c = KvCache::new(H, DK, 2, KeyStorage::Fp16);
+        assert_eq!(c.seq_len(7), Err(CacheError::UnknownSeq(7)));
+        c.create_seq(7).unwrap();
+        assert_eq!(c.create_seq(7), Err(CacheError::DuplicateSeq(7)));
+        assert_eq!(c.free_seq(8), Err(CacheError::UnknownSeq(8)));
+    }
+
+    #[test]
+    fn stats_byte_accounting_fp16_vs_pq() {
+        let (k, v) = token(3);
+        let mut fp = KvCache::new(H, DK, 4, KeyStorage::Fp16);
+        fp.create_seq(1).unwrap();
+        for _ in 0..10 {
+            fp.append(1, &k, &v).unwrap();
+        }
+        let s = fp.stats();
+        assert_eq!(s.tokens, 10);
+        assert_eq!(s.key_bytes, 10 * H * DK * 2);
+        assert_eq!(s.value_bytes, 10 * H * DK * 2);
+        assert_eq!(s.codebook_bytes, 0);
+
+        let mut pq = KvCache::new(H, DK, 4, pq_storage(4));
+        pq.create_seq(1).unwrap();
+        for _ in 0..10 {
+            pq.append(1, &k, &v).unwrap();
+        }
+        let s2 = pq.stats();
+        assert_eq!(s2.key_bytes, 10 * H * 4); // m bytes per token per head
+        assert_eq!(s2.value_bytes, s.value_bytes);
+        assert!(s2.codebook_bytes > 0);
+        // compression on keys: 32x/ head for d_k=16? d_k*2/m = 8x here
+        assert_eq!(
+            fp.key_bytes_per_token_per_head()
+                / pq.key_bytes_per_token_per_head(),
+            8
+        );
+    }
+
+    #[test]
+    fn multi_seq_interleaving_isolated() {
+        let mut c = KvCache::new(H, DK, 8, KeyStorage::Fp16);
+        c.create_seq(1).unwrap();
+        c.create_seq(2).unwrap();
+        for t in 0..20 {
+            let (k1, v1) = token(1000 + t);
+            let (k2, v2) = token(2000 + t);
+            c.append(1, &k1, &v1).unwrap();
+            c.append(2, &k2, &v2).unwrap();
+        }
+        let mut k = Vec::new();
+        c.gather_keys_into(1, 0, &mut k).unwrap();
+        let (k1_0, _) = token(1000);
+        assert_eq!(&k[0..DK], &k1_0[0..DK]);
+        c.gather_keys_into(2, 0, &mut k).unwrap();
+        let (k2_0, _) = token(2000);
+        assert_eq!(&k[0..DK], &k2_0[0..DK]);
+    }
+
+    #[test]
+    fn can_append_predicts_admission() {
+        let mut c = KvCache::new(H, DK, 2, KeyStorage::Fp16);
+        c.create_seq(1).unwrap();
+        assert!(c.can_append(1, 2 * BLOCK_TOKENS));
+        assert!(!c.can_append(1, 2 * BLOCK_TOKENS + 1));
+        assert!(!c.can_append(99, 1), "unknown seq can't append");
+    }
+
+    #[test]
+    fn cache_accounting_property() {
+        // property: token count in stats always equals sum of seq lens,
+        // and blocks are conserved
+        let mut c = KvCache::new(H, DK, 16, KeyStorage::Fp16);
+        let mut lens: HashMap<SeqId, usize> = HashMap::new();
+        let mut next_id: SeqId = 0;
+        crate::prop_assert!("cache-accounting", 300, |g| {
+            match g.usize_in(0, 2) {
+                0 => {
+                    let id = next_id;
+                    next_id += 1;
+                    c.create_seq(id).unwrap();
+                    lens.insert(id, 0);
+                }
+                1 => {
+                    if let Some((&id, _)) =
+                        lens.iter().nth(g.usize_in(0, lens.len().max(1) - 1))
+                    {
+                        let (k, v) = token(id * 31 + 7);
+                        if c.append(id, &k, &v).is_ok() {
+                            *lens.get_mut(&id).unwrap() += 1;
+                        }
+                    }
+                }
+                _ => {
+                    if let Some((&id, _)) =
+                        lens.iter().nth(g.usize_in(0, lens.len().max(1) - 1))
+                    {
+                        c.free_seq(id).unwrap();
+                        lens.remove(&id);
+                    }
+                }
+            }
+            let s = c.stats();
+            let want: usize = lens.values().sum();
+            if s.tokens != want {
+                return Err(format!("tokens {} != {}", s.tokens, want));
+            }
+            if s.blocks_allocated + c.alloc.available() != s.blocks_total {
+                return Err("block leak".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,13 @@
+//! Paged KV-cache manager with PQ-compressed key storage.
+//!
+//! The serving engine's cache: values stay full-precision (paper §3.1:
+//! value access is compute-bound), keys are stored either raw (FP16
+//! baseline) or as `m` uint8 PQ codes per token (LOOKAT). Storage is
+//! paged vLLM-style so sequences grow without reallocation and memory
+//! accounting is exact.
+
+mod block;
+mod manager;
+
+pub use block::{BlockAllocator, BlockId, BLOCK_TOKENS};
+pub use manager::{CacheError, CacheStats, KeyStorage, KvCache, SeqId};

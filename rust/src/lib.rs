@@ -1,0 +1,52 @@
+//! # LOOKAT — Lookup-Optimized Key-Attention for Memory-Efficient Transformers
+//!
+//! Full-stack reproduction of the LOOKAT paper (Karmore, 2026): KV-cache
+//! *key* compression via product quantization (PQ) + asymmetric distance
+//! computation (ADC). Attention scores are computed by summing `m` lookup
+//! table entries per cached key instead of a `d_k`-wide dot product over
+//! dequantized keys — the cache is never decompressed.
+//!
+//! ## Architecture (three layers, python never on the request path)
+//!
+//! * **Layer 3 (this crate)** — serving coordinator: request router,
+//!   continuous batcher, PQ KV-cache manager, prefill/decode scheduler,
+//!   plus every substrate the paper's evaluation needs (pure-rust GPT-2
+//!   style model, K-Means, scalar-quant baselines, metrics, workload
+//!   generators, experiment harness).
+//! * **Layer 2** — JAX model graphs (`python/compile/model.py`), lowered
+//!   once to HLO text in `artifacts/` by `make artifacts`.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/lookat.py`),
+//!   called from the L2 graphs; validated against `ref.py` oracles.
+//!
+//! The [`runtime`] module loads the AOT artifacts via the PJRT CPU client
+//! (`xla` crate) and executes them from the rust hot path.
+//!
+//! ## Quick example
+//!
+//! ```no_run
+//! use lookat::pq::PqCodec;
+//! use lookat::attention::{exact_attention, lookat_attention};
+//!
+//! let d_k = 64;
+//! let mut rng = lookat::util::rng::Pcg32::seed(7);
+//! let keys: Vec<f32> = (0..512 * d_k).map(|_| rng.next_f32_std()).collect();
+//! // Train codebooks on (here: the same) calibration keys, encode, attend.
+//! let codec = PqCodec::train(&keys, d_k, 4, 256, &Default::default());
+//! let codes = codec.encode_batch(&keys, 512);
+//! ```
+
+pub mod attention;
+pub mod coordinator;
+pub mod experiments;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod pq;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,190 @@
+//! `lookat` — the leader binary: experiments, serving, and utilities.
+//!
+//! Subcommands:
+//!   experiment <id>   regenerate a paper table/figure (table1..4,
+//!                     figure3, figure4, efficiency, all)
+//!   serve             run the serving coordinator over a synthetic trace
+//!   info              print artifact + platform info
+//!
+//! Examples:
+//!   lookat experiment table1
+//!   lookat serve --backend lookat-4 --requests 16 --rate 4
+//!   lookat info
+
+use lookat::coordinator::{
+    AttentionBackend, BatcherConfig, EngineConfig, Router, RouterConfig,
+};
+use lookat::model::ModelConfig;
+use lookat::util::cli::Cli;
+use lookat::workload::{TraceConfig, TraceGenerator};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_backend(s: &str) -> anyhow::Result<AttentionBackend> {
+    Ok(match s {
+        "fp16" => AttentionBackend::Fp16Exact,
+        "int8" => AttentionBackend::ScalarQuant { bits: 8 },
+        "int4" => AttentionBackend::ScalarQuant { bits: 4 },
+        "pjrt-fp16" => AttentionBackend::PjrtFp16,
+        other => {
+            if let Some(m) = other.strip_prefix("lookat-") {
+                AttentionBackend::Lookat { m: m.parse()?, k: 256 }
+            } else if let Some(m) = other.strip_prefix("pjrt-lookat-") {
+                AttentionBackend::PjrtLookat { m: m.parse()? }
+            } else {
+                anyhow::bail!(
+                    "unknown backend '{other}' (fp16, int8, int4, \
+                     lookat-<m>, pjrt-fp16, pjrt-lookat-<m>)"
+                );
+            }
+        }
+    })
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "experiment" => {
+            let cli = Cli::new("lookat experiment",
+                               "regenerate a paper table/figure")
+                .flag("quick", "CI-sized run")
+                .positional("id", "table1..4 | figure3 | figure4 | \
+                                   efficiency | all");
+            let a = cli.parse(&args[1..])?;
+            lookat::experiments::run(&a.positionals[0], a.get_flag("quick"))
+        }
+        "serve" => {
+            let cli = Cli::new("lookat serve",
+                               "serve a synthetic trace")
+                .opt("backend", "lookat-4",
+                     "fp16|int8|int4|lookat-<m>|pjrt-fp16|pjrt-lookat-<m>")
+                .opt("requests", "16", "number of requests")
+                .opt("rate", "4", "arrival rate, req/s")
+                .opt("max-batch", "4", "max concurrent sequences")
+                .opt("gen-tokens", "16", "max new tokens per request")
+                .opt("layers", "2", "model depth")
+                .opt("seed", "7", "rng seed");
+            let a = cli.parse(&args[1..])?;
+            let backend = parse_backend(a.get("backend"))?;
+            let mut model = ModelConfig::gpt2_layer0();
+            model.n_layer = a.get_usize("layers")?;
+            let mut router = Router::build(RouterConfig {
+                engine: EngineConfig {
+                    model,
+                    backend,
+                    seed: a.get_u64("seed")?,
+                    cache_blocks: 512,
+                    calib_tokens: 256,
+                },
+                batcher: BatcherConfig {
+                    max_batch: a.get_usize("max-batch")?,
+                    max_queue: 256,
+                },
+                max_prompt_tokens: 120,
+            })?;
+            let trace = TraceGenerator::new(TraceConfig {
+                rate: a.get_f64("rate")?,
+                num_requests: a.get_usize("requests")?,
+                prompt_chars: (100, 400),
+                gen_tokens: (4, a.get_usize("gen-tokens")?.max(5)),
+                seed: a.get_u64("seed")?,
+            })
+            .generate();
+            let reqs = router.tokenize_trace(&trace);
+            let report = router.serve_trace(reqs)?;
+            println!("{}", report.pretty());
+            Ok(())
+        }
+        "serve-tcp" => {
+            let cli = Cli::new("lookat serve-tcp",
+                               "serve newline-JSON requests over TCP")
+                .opt("backend", "lookat-4", "attention backend")
+                .opt("addr", "127.0.0.1:7070", "bind address")
+                .opt("max-batch", "4", "max concurrent sequences")
+                .opt("layers", "2", "model depth")
+                .opt("seed", "7", "rng seed");
+            let a = cli.parse(&args[1..])?;
+            let backend = parse_backend(a.get("backend"))?;
+            let mut model = ModelConfig::gpt2_layer0();
+            model.n_layer = a.get_usize("layers")?;
+            let server = lookat::coordinator::Server::start(
+                lookat::coordinator::ServerConfig {
+                    engine: EngineConfig {
+                        model,
+                        backend,
+                        seed: a.get_u64("seed")?,
+                        cache_blocks: 512,
+                        calib_tokens: 256,
+                    },
+                    batcher: BatcherConfig {
+                        max_batch: a.get_usize("max-batch")?,
+                        max_queue: 256,
+                    },
+                    max_prompt_tokens: 120,
+                    addr: a.get("addr").to_string(),
+                },
+            )?;
+            println!("listening on {}", server.local_addr);
+            println!(
+                "protocol: one JSON per line, e.g. \
+                 {{\"prompt\": \"hi\", \"max_new_tokens\": 8}}"
+            );
+            // serve until killed
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "info" => {
+            let dir = lookat::runtime::default_artifacts_dir();
+            println!("artifacts dir: {}", dir.display());
+            if dir.join("manifest.json").exists() {
+                let rt = lookat::runtime::Runtime::open(&dir)?;
+                println!("platform: {}", rt.platform());
+                println!("artifacts ({}):", rt.manifest.artifacts.len());
+                for a in &rt.manifest.artifacts {
+                    println!(
+                        "  {:30} kind={:12} L={:?} m={:?}",
+                        a.name,
+                        a.kind(),
+                        a.meta_usize("L"),
+                        a.meta_usize("m")
+                    );
+                }
+            } else {
+                println!("artifacts not built — run `make artifacts`");
+            }
+            Ok(())
+        }
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try --help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "lookat — LOOKAT paper reproduction (PQ+ADC KV-cache compression)
+
+USAGE:
+  lookat experiment <id> [--quick]   regenerate table1..4 / figure3 /
+                                     figure4 / efficiency / all
+  lookat serve [--backend B] [--requests N] [--rate R]
+  lookat serve-tcp [--backend B] [--addr HOST:PORT]
+  lookat info"
+    );
+}

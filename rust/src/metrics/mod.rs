@@ -1,0 +1,332 @@
+//! Evaluation metrics from paper §4.2: cosine similarity, KL divergence,
+//! Spearman rank correlation and Top-k overlap, plus an aggregate
+//! [`FidelityReport`] used by every experiment table.
+
+use crate::util::json::Json;
+
+/// Cosine similarity between two vectors (§4.2.1). Returns 0 when either
+/// vector is all-zero (direction undefined).
+pub fn cosine_similarity(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut dot = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        dot += x as f64 * y as f64;
+        na += x as f64 * x as f64;
+        nb += y as f64 * y as f64;
+    }
+    if na <= 0.0 || nb <= 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// KL(p ‖ q) in nats over two distributions (§4.2.2). Inputs are
+/// re-normalized; q is floored at `eps` to keep the divergence finite
+/// (matching standard practice for attention-distribution comparisons).
+pub fn kl_divergence(p: &[f32], q: &[f32], eps: f64) -> f64 {
+    assert_eq!(p.len(), q.len());
+    let sp: f64 = p.iter().map(|&x| x as f64).sum();
+    let sq: f64 = q.iter().map(|&x| x as f64).sum();
+    assert!(sp > 0.0 && sq > 0.0, "distributions must have mass");
+    let mut kl = 0.0f64;
+    for (&pi, &qi) in p.iter().zip(q.iter()) {
+        let pn = pi as f64 / sp;
+        if pn <= 0.0 {
+            continue;
+        }
+        let qn = (qi as f64 / sq).max(eps);
+        kl += pn * (pn / qn).ln();
+    }
+    kl.max(0.0)
+}
+
+/// Fractional ranks with average-rank tie handling.
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut r = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        // average rank for the tie group [i, j]
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &id in &idx[i..=j] {
+            r[id] = avg;
+        }
+        i = j + 1;
+    }
+    r
+}
+
+/// Spearman rank correlation ρ (§4.2.3), ties handled by average ranks
+/// (Pearson correlation of the rank vectors).
+pub fn spearman_rho(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let ra = ranks(a);
+    let rb = ranks(b);
+    pearson(&ra, &rb)
+}
+
+/// Pearson correlation of two equal-length samples.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    if va <= 0.0 || vb <= 0.0 {
+        // a constant sequence has undefined correlation; treat identical
+        // constants as perfectly correlated (both rankings are trivial)
+        return if va == vb { 1.0 } else { 0.0 };
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Indices of the top-k values (descending).
+pub fn top_k_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+/// Top-k overlap |TopK(a) ∩ TopK(b)| / k (§4.2.4, k = 5 in the paper).
+pub fn top_k_overlap(a: &[f32], b: &[f32], k: usize) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let k = k.min(a.len());
+    if k == 0 {
+        return 1.0;
+    }
+    let ta = top_k_indices(a, k);
+    let tb = top_k_indices(b, k);
+    let set: std::collections::HashSet<usize> = ta.into_iter().collect();
+    let inter = tb.iter().filter(|i| set.contains(i)).count();
+    inter as f64 / k as f64
+}
+
+/// Aggregate fidelity of one approximate attention output vs FP16
+/// reference — one row of the paper's Table 1 for one sample.
+#[derive(Clone, Debug, Default)]
+pub struct FidelityReport {
+    pub cosine: f64,
+    pub kl: f64,
+    pub spearman: f64,
+    pub top5: f64,
+}
+
+impl FidelityReport {
+    /// Compare attention *outputs* (cosine) and *weights* (KL, ρ, top-5).
+    pub fn compare(
+        out_ref: &[f32],
+        out_approx: &[f32],
+        weights_ref: &[f32],
+        weights_approx: &[f32],
+    ) -> FidelityReport {
+        let wr: Vec<f64> = weights_ref.iter().map(|&x| x as f64).collect();
+        let wa: Vec<f64> =
+            weights_approx.iter().map(|&x| x as f64).collect();
+        FidelityReport {
+            cosine: cosine_similarity(out_ref, out_approx),
+            kl: kl_divergence(weights_ref, weights_approx, 1e-10),
+            spearman: spearman_rho(&wr, &wa),
+            top5: top_k_overlap(weights_ref, weights_approx, 5),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("cosine", Json::Num(self.cosine)),
+            ("kl", Json::Num(self.kl)),
+            ("spearman", Json::Num(self.spearman)),
+            ("top5", Json::Num(self.top5)),
+        ])
+    }
+}
+
+/// Mean ± std over many reports (paper reports mean±std over 3 samples).
+#[derive(Clone, Debug, Default)]
+pub struct AggregateFidelity {
+    pub cosine: (f64, f64),
+    pub kl: (f64, f64),
+    pub spearman: (f64, f64),
+    pub top5: (f64, f64),
+    pub n: usize,
+}
+
+impl AggregateFidelity {
+    pub fn of(reports: &[FidelityReport]) -> AggregateFidelity {
+        use crate::util::stats::mean_std;
+        assert!(!reports.is_empty());
+        let grab = |f: fn(&FidelityReport) -> f64| {
+            let v: Vec<f64> = reports.iter().map(f).collect();
+            mean_std(&v)
+        };
+        AggregateFidelity {
+            cosine: grab(|r| r.cosine),
+            kl: grab(|r| r.kl),
+            spearman: grab(|r| r.spearman),
+            top5: grab(|r| r.top5),
+            n: reports.len(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let pair = |(m, s): (f64, f64)| {
+            Json::Arr(vec![Json::Num(m), Json::Num(s)])
+        };
+        Json::from_pairs(vec![
+            ("cosine", pair(self.cosine)),
+            ("kl", pair(self.kl)),
+            ("spearman", pair(self.spearman)),
+            ("top5", pair(self.top5)),
+            ("n", Json::Num(self.n as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_extremes() {
+        assert!((cosine_similarity(&[1., 0.], &[1., 0.]) - 1.0).abs() < 1e-12);
+        assert!((cosine_similarity(&[1., 0.], &[-1., 0.]) + 1.0).abs() < 1e-12);
+        assert!(cosine_similarity(&[1., 0.], &[0., 1.]).abs() < 1e-12);
+        assert_eq!(cosine_similarity(&[0., 0.], &[1., 1.]), 0.0);
+    }
+
+    #[test]
+    fn cosine_scale_invariant() {
+        let a = [0.3f32, -1.2, 2.0];
+        let b = [0.6f32, -2.4, 4.0];
+        assert!((cosine_similarity(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kl_zero_for_identical() {
+        let p = [0.2f32, 0.3, 0.5];
+        assert!(kl_divergence(&p, &p, 1e-12).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_positive_and_asymmetric() {
+        let p = [0.9f32, 0.05, 0.05];
+        let q = [0.2f32, 0.4, 0.4];
+        let pq = kl_divergence(&p, &q, 1e-12);
+        let qp = kl_divergence(&q, &p, 1e-12);
+        assert!(pq > 0.0);
+        assert!(qp > 0.0);
+        assert!((pq - qp).abs() > 1e-6, "KL should be asymmetric here");
+    }
+
+    #[test]
+    fn kl_known_value() {
+        // KL([1,0] || [0.5,0.5]) = ln 2
+        let kl = kl_divergence(&[1.0, 0.0], &[0.5, 0.5], 1e-12);
+        assert!((kl - std::f64::consts::LN_2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kl_renormalizes_inputs() {
+        let a = kl_divergence(&[2.0, 6.0], &[1.0, 1.0], 1e-12);
+        let b = kl_divergence(&[0.25, 0.75], &[0.5, 0.5], 1e-12);
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spearman_perfect_and_reversed() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let up = [10.0, 20.0, 30.0, 40.0];
+        let down = [4.0, 3.0, 2.0, 1.0];
+        assert!((spearman_rho(&a, &up) - 1.0).abs() < 1e-12);
+        assert!((spearman_rho(&a, &down) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_is_rank_based() {
+        // monotone transform changes values but not ranks
+        let a = [0.1f64, 0.5, 0.2, 0.9];
+        let b: Vec<f64> = a.iter().map(|x| x.exp() * 100.0).collect();
+        assert!((spearman_rho(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let a = [1.0, 1.0, 2.0, 3.0];
+        let b = [1.0, 1.0, 2.0, 3.0];
+        assert!((spearman_rho(&a, &b) - 1.0).abs() < 1e-12);
+        // all-constant vs varying: defined as 0 (no rank information)
+        let c = [5.0, 5.0, 5.0, 5.0];
+        assert_eq!(spearman_rho(&c, &a), 0.0);
+    }
+
+    #[test]
+    fn ranks_average_ties() {
+        let r = ranks(&[10.0, 20.0, 20.0, 30.0]);
+        assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn top_k_overlap_basics() {
+        let a = [9.0f32, 8.0, 7.0, 1.0, 0.5, 0.1];
+        let b = [9.1f32, 8.2, 6.9, 1.1, 0.4, 0.2];
+        assert_eq!(top_k_overlap(&a, &b, 3), 1.0);
+        let c = [0.0f32, 0.1, 0.2, 9.0, 9.1, 9.2];
+        assert_eq!(top_k_overlap(&a, &c, 3), 0.0);
+    }
+
+    #[test]
+    fn top_k_overlap_partial() {
+        let a = [5.0f32, 4.0, 3.0, 2.0, 1.0];
+        let b = [5.0f32, 4.0, 0.0, 2.0, 3.0]; // top-3 of b = {0,1,4}
+        let ov = top_k_overlap(&a, &b, 3);
+        assert!((ov - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn top_k_larger_than_len_is_full_overlap() {
+        let a = [1.0f32, 2.0];
+        assert_eq!(top_k_overlap(&a, &a, 10), 1.0);
+    }
+
+    #[test]
+    fn fidelity_report_identity() {
+        let out = [0.5f32, -0.2, 0.8];
+        let w = [0.1f32, 0.7, 0.2];
+        let r = FidelityReport::compare(&out, &out, &w, &w);
+        assert!((r.cosine - 1.0).abs() < 1e-9);
+        assert!(r.kl.abs() < 1e-9);
+        assert!((r.spearman - 1.0).abs() < 1e-9);
+        assert_eq!(r.top5, 1.0);
+    }
+
+    #[test]
+    fn aggregate_mean_std() {
+        let reports = vec![
+            FidelityReport { cosine: 0.9, kl: 1.0, spearman: 0.8, top5: 1.0 },
+            FidelityReport { cosine: 0.7, kl: 3.0, spearman: 0.6, top5: 0.5 },
+        ];
+        let agg = AggregateFidelity::of(&reports);
+        assert!((agg.cosine.0 - 0.8).abs() < 1e-12);
+        assert!((agg.kl.0 - 2.0).abs() < 1e-12);
+        assert!(agg.cosine.1 > 0.0);
+        assert_eq!(agg.n, 2);
+    }
+}

@@ -1,0 +1,418 @@
+//! GPT-2-style forward passes (pure rust, mirrors python/compile/model.py).
+
+use super::weights::Weights;
+use crate::tensor::{gelu_inplace, layernorm, softmax_inplace, Tensor2};
+
+const LN_EPS: f32 = 1e-5;
+
+/// Full-context prefill result.
+pub struct PrefillOutput {
+    /// logits of the last position, (vocab)
+    pub last_logits: Vec<f32>,
+    /// per-layer (K, V), each (T × d_model) row-major; head `h` occupies
+    /// columns [h·d_k, (h+1)·d_k)
+    pub caches: Vec<(Tensor2, Tensor2)>,
+    /// per-layer queries, (T × d_model) — kept for the experiment
+    /// harness, which replays decode-style attention at every position
+    pub queries: Vec<Tensor2>,
+    /// final hidden state of the last position (pre-LN_f), (d_model)
+    pub last_hidden: Vec<f32>,
+}
+
+impl PrefillOutput {
+    /// Contiguous (T × d_k) copy of one head's keys from one layer —
+    /// the paper's §4.1 KV-extraction operation.
+    pub fn head_keys(&self, layer: usize, head: usize, d_k: usize)
+        -> Vec<f32>
+    {
+        Self::extract_head(&self.caches[layer].0, head, d_k)
+    }
+
+    /// Contiguous (T × d_k) copy of one head's values from one layer.
+    pub fn head_values(&self, layer: usize, head: usize, d_k: usize)
+        -> Vec<f32>
+    {
+        Self::extract_head(&self.caches[layer].1, head, d_k)
+    }
+
+    /// Contiguous (T × d_k) copy of one head's queries from one layer.
+    pub fn head_queries(&self, layer: usize, head: usize, d_k: usize)
+        -> Vec<f32>
+    {
+        Self::extract_head(&self.queries[layer], head, d_k)
+    }
+
+    fn extract_head(t: &Tensor2, head: usize, d_k: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(t.rows * d_k);
+        for r in 0..t.rows {
+            out.extend_from_slice(
+                &t.row(r)[head * d_k..(head + 1) * d_k]);
+        }
+        out
+    }
+}
+
+/// The model: weights + forward passes.
+pub struct Gpt2 {
+    pub weights: Weights,
+}
+
+impl Gpt2 {
+    pub fn new(weights: Weights) -> Self {
+        Self { weights }
+    }
+
+    pub fn n_layer(&self) -> usize {
+        self.weights.config.n_layer
+    }
+
+    pub fn n_head(&self) -> usize {
+        self.weights.config.n_head
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.weights.config.d_head
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.weights.config.d_model()
+    }
+
+    /// Token + position embedding for one token.
+    pub fn embed(&self, token: u32, pos: usize) -> Vec<f32> {
+        let w = &self.weights;
+        assert!(pos < w.config.max_pos, "position {pos} out of range");
+        let mut x = w.wte.row(token as usize).to_vec();
+        for (xi, pi) in x.iter_mut().zip(w.wpe.row(pos)) {
+            *xi += *pi;
+        }
+        x
+    }
+
+    /// LN1 + fused QKV projection for one token in one layer.
+    /// Returns (q, k, v), each (H · d_k) with heads contiguous.
+    pub fn qkv(&self, layer: usize, x: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let blk = &self.weights.blocks[layer];
+        let d = self.d_model();
+        let h = layernorm(x, &blk.ln1_g, &blk.ln1_b, LN_EPS);
+        let mut qkv = blk.w_qkv.vecmat(&h);
+        for (v, b) in qkv.iter_mut().zip(&blk.b_qkv) {
+            *v += *b;
+        }
+        let q = qkv[0..d].to_vec();
+        let k = qkv[d..2 * d].to_vec();
+        let v = qkv[2 * d..3 * d].to_vec();
+        (q, k, v)
+    }
+
+    /// Residual attention-out projection + MLP for one token in one layer.
+    /// `attn` is the concatenated per-head attention output (d_model).
+    pub fn finish_block(&self, layer: usize, x: &[f32], attn: &[f32])
+        -> Vec<f32>
+    {
+        let blk = &self.weights.blocks[layer];
+        let mut y = x.to_vec();
+        let proj = blk.w_proj.vecmat(attn);
+        for ((yi, pi), bi) in y.iter_mut().zip(&proj).zip(&blk.b_proj) {
+            *yi += *pi + *bi;
+        }
+        let h = layernorm(&y, &blk.ln2_g, &blk.ln2_b, LN_EPS);
+        let mut ff = blk.w_fc.vecmat(&h);
+        for (fi, bi) in ff.iter_mut().zip(&blk.b_fc) {
+            *fi += *bi;
+        }
+        gelu_inplace(&mut ff);
+        let out = blk.w_out.vecmat(&ff);
+        for ((yi, oi), bi) in y.iter_mut().zip(&out).zip(&blk.b_out) {
+            *yi += *oi + *bi;
+        }
+        y
+    }
+
+    /// Final layernorm + tied LM head.
+    pub fn logits(&self, x: &[f32]) -> Vec<f32> {
+        let w = &self.weights;
+        let h = layernorm(x, &w.ln_f_g, &w.ln_f_b, LN_EPS);
+        w.wte.matvec(&h)
+    }
+
+    /// Greedy next-token choice from a hidden state.
+    pub fn greedy_next(&self, x: &[f32]) -> u32 {
+        let logits = self.logits(x);
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        best as u32
+    }
+
+    /// Full causal forward over `ids`, producing every layer's K/V cache
+    /// (the paper's KV-extraction path) and the last position's logits.
+    pub fn prefill(&self, ids: &[u32]) -> PrefillOutput {
+        let t_len = ids.len();
+        assert!(t_len > 0);
+        let cfg = &self.weights.config;
+        let d = cfg.d_model();
+        let (n_head, d_k) = (cfg.n_head, cfg.d_head);
+        let inv_sqrt = 1.0 / (d_k as f32).sqrt();
+
+        let mut x = Tensor2::zeros(t_len, d);
+        for (t, &id) in ids.iter().enumerate() {
+            let e = self.embed(id, t);
+            x.row_mut(t).copy_from_slice(&e);
+        }
+
+        let mut caches = Vec::with_capacity(cfg.n_layer);
+        let mut queries = Vec::with_capacity(cfg.n_layer);
+        for layer in 0..cfg.n_layer {
+            let blk = &self.weights.blocks[layer];
+            // LN1 + QKV for all positions
+            let mut k_cache = Tensor2::zeros(t_len, d);
+            let mut v_cache = Tensor2::zeros(t_len, d);
+            let mut q_all = Tensor2::zeros(t_len, d);
+            for t in 0..t_len {
+                let h = layernorm(x.row(t), &blk.ln1_g, &blk.ln1_b, LN_EPS);
+                let mut qkv = blk.w_qkv.vecmat(&h);
+                for (v, b) in qkv.iter_mut().zip(&blk.b_qkv) {
+                    *v += *b;
+                }
+                q_all.row_mut(t).copy_from_slice(&qkv[0..d]);
+                k_cache.row_mut(t).copy_from_slice(&qkv[d..2 * d]);
+                v_cache.row_mut(t).copy_from_slice(&qkv[2 * d..3 * d]);
+            }
+            // causal attention per head
+            let mut attn_all = Tensor2::zeros(t_len, d);
+            let mut scores = vec![0.0f32; t_len];
+            for head in 0..n_head {
+                let c0 = head * d_k;
+                for t in 0..t_len {
+                    let q = &q_all.row(t)[c0..c0 + d_k];
+                    for s in 0..=t {
+                        let kk = &k_cache.row(s)[c0..c0 + d_k];
+                        scores[s] = crate::tensor::dot(q, kk) * inv_sqrt;
+                    }
+                    softmax_inplace(&mut scores[0..t + 1]);
+                    let orow = &mut attn_all.row_mut(t)[c0..c0 + d_k];
+                    orow.iter_mut().for_each(|v| *v = 0.0);
+                    for s in 0..t + 1 {
+                        let a = scores[s];
+                        let vv = &v_cache.row(s)[c0..c0 + d_k];
+                        for (o, val) in orow.iter_mut().zip(vv) {
+                            *o += a * val;
+                        }
+                    }
+                }
+            }
+            // out-proj + MLP, residuals
+            for t in 0..t_len {
+                let y = self.finish_block(layer, x.row(t), attn_all.row(t));
+                x.row_mut(t).copy_from_slice(&y);
+            }
+            caches.push((k_cache, v_cache));
+            queries.push(q_all);
+        }
+
+        let last_hidden = x.row(t_len - 1).to_vec();
+        let last_logits = self.logits(&last_hidden);
+        PrefillOutput { last_logits, caches, queries, last_hidden }
+    }
+
+    /// Incremental decode of one token against explicit per-layer caches
+    /// (each (n × d_model) K/V plus current length). Returns the new
+    /// hidden state and appends this token's K/V to the caches.
+    ///
+    /// This is the reference decode path; the serving engine re-implements
+    /// the loop against its paged cache + pluggable attention backends.
+    pub fn decode_step(
+        &self,
+        token: u32,
+        pos: usize,
+        caches: &mut [(Tensor2, Tensor2)],
+    ) -> Vec<f32> {
+        let cfg = &self.weights.config;
+        let (n_head, d_k) = (cfg.n_head, cfg.d_head);
+        let inv_sqrt = 1.0 / (d_k as f32).sqrt();
+        let mut x = self.embed(token, pos);
+        for layer in 0..cfg.n_layer {
+            let (q, k_new, v_new) = self.qkv(layer, &x);
+            // grow cache tensors by one row
+            let (k_cache, v_cache) = &mut caches[layer];
+            k_cache.data.extend_from_slice(&k_new);
+            k_cache.rows += 1;
+            v_cache.data.extend_from_slice(&v_new);
+            v_cache.rows += 1;
+            let n = k_cache.rows;
+            let mut attn = vec![0.0f32; cfg.d_model()];
+            let mut scores = vec![0.0f32; n];
+            for head in 0..n_head {
+                let c0 = head * d_k;
+                let qh = &q[c0..c0 + d_k];
+                for s in 0..n {
+                    scores[s] = crate::tensor::dot(
+                        qh, &k_cache.row(s)[c0..c0 + d_k]) * inv_sqrt;
+                }
+                softmax_inplace(&mut scores);
+                let orow = &mut attn[c0..c0 + d_k];
+                for s in 0..n {
+                    let a = scores[s];
+                    let vv = &v_cache.row(s)[c0..c0 + d_k];
+                    for (o, val) in orow.iter_mut().zip(vv) {
+                        *o += a * val;
+                    }
+                }
+            }
+            x = self.finish_block(layer, &x, &attn);
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ByteTokenizer, ModelConfig};
+
+    fn tiny_model() -> Gpt2 {
+        Gpt2::new(Weights::random(&ModelConfig::test_tiny(), 42))
+    }
+
+    #[test]
+    fn prefill_shapes() {
+        let m = tiny_model();
+        let ids = ByteTokenizer::new().encode("hello world");
+        let out = m.prefill(&ids);
+        assert_eq!(out.last_logits.len(), m.weights.config.vocab);
+        assert_eq!(out.caches.len(), 2);
+        assert_eq!(out.caches[0].0.rows, ids.len());
+        assert_eq!(out.caches[0].0.cols, m.d_model());
+        assert!(out.last_logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn head_extraction_consistent() {
+        let m = tiny_model();
+        let ids = ByteTokenizer::new().encode("abcdef");
+        let out = m.prefill(&ids);
+        let d_k = m.d_head();
+        let hk = out.head_keys(0, 1, d_k);
+        assert_eq!(hk.len(), ids.len() * d_k);
+        // row t of head 1 == cols [d_k, 2d_k) of cache row t
+        for t in 0..ids.len() {
+            assert_eq!(
+                &hk[t * d_k..(t + 1) * d_k],
+                &out.caches[0].0.row(t)[d_k..2 * d_k]
+            );
+        }
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // prefill over a prefix must equal the prefix rows of a longer
+        // prefill (causal masking works)
+        let m = tiny_model();
+        let t = ByteTokenizer::new();
+        let long = t.encode("the quick brown fox");
+        let short: Vec<u32> = long[..8].to_vec();
+        let o_long = m.prefill(&long);
+        let o_short = m.prefill(&short);
+        for tpos in 0..8 {
+            for c in 0..m.d_model() {
+                let a = o_long.caches[1].0.at(tpos, c);
+                let b = o_short.caches[1].0.at(tpos, c);
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "K mismatch at t={tpos} c={c}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_step_matches_prefill() {
+        // prefill T tokens == prefill T-1 then decode_step for token T
+        let m = tiny_model();
+        let t = ByteTokenizer::new();
+        let ids = t.encode("incremental");
+        let tn = ids.len();
+        let full = m.prefill(&ids);
+
+        let prefix = m.prefill(&ids[..tn - 1]);
+        let mut caches = prefix.caches;
+        let hidden = m.decode_step(ids[tn - 1], tn - 1, &mut caches);
+
+        for (h, f) in hidden.iter().zip(&full.last_hidden) {
+            assert!((h - f).abs() < 1e-3, "{h} vs {f}");
+        }
+        // caches should now match the full prefill's caches
+        for layer in 0..2 {
+            assert_eq!(caches[layer].0.rows, tn);
+            for c in 0..m.d_model() {
+                let a = caches[layer].0.at(tn - 1, c);
+                let b = full.caches[layer].0.at(tn - 1, c);
+                assert!((a - b).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn logits_and_greedy_are_stable() {
+        let m = tiny_model();
+        let ids = ByteTokenizer::new().encode("xyz");
+        let a = m.prefill(&ids);
+        let b = m.prefill(&ids);
+        assert_eq!(a.last_logits, b.last_logits);
+        assert_eq!(m.greedy_next(&a.last_hidden),
+                   m.greedy_next(&b.last_hidden));
+    }
+
+    #[test]
+    fn embed_adds_position() {
+        let m = tiny_model();
+        let a = m.embed(65, 0);
+        let b = m.embed(65, 1);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "position")]
+    fn embed_rejects_out_of_range_pos() {
+        let m = tiny_model();
+        m.embed(0, 100_000);
+    }
+
+    #[test]
+    fn key_anisotropy_visible_in_cache() {
+        // Cached keys should be far more "clusterable" than an iid
+        // Gaussian point set of the same variance (the PQ worst case at
+        // fixed variance) — this is the low-intrinsic-dimensionality
+        // premise the paper leans on (§1) and the structured init models.
+        let m = Gpt2::new(Weights::random(&ModelConfig::test_tiny(), 11));
+        let text = crate::workload::Corpus::new(
+            crate::workload::Genre::Prose, 3).generate(600);
+        let ids = ByteTokenizer::new().encode_clamped(&text, 96);
+        let out = m.prefill(&ids);
+        let d_k = m.d_head();
+        let keys = out.head_keys(0, 0, d_k);
+        let n = ids.len();
+        let rel_err = |data: &[f32]| {
+            let codec = crate::pq::PqCodec::train(
+                data, d_k, 4, 16, &Default::default());
+            let mse = codec.reconstruction_mse(data, n);
+            let var: f64 = data.iter().map(|&x| (x as f64).powi(2))
+                .sum::<f64>() / data.len() as f64;
+            mse / (var * d_k as f64)
+        };
+        let mut rng = crate::util::rng::Pcg32::seed(77);
+        let gauss: Vec<f32> =
+            (0..n * d_k).map(|_| rng.next_f32_std()).collect();
+        let ek = rel_err(&keys);
+        let eg = rel_err(&gauss);
+        assert!(
+            ek < eg * 0.5,
+            "model keys should quantize much better than iid gaussian: \
+             {ek} vs {eg}"
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! Pure-rust GPT-2-style transformer substrate.
+//!
+//! Mirrors `python/compile/model.py` op-for-op (pre-LN blocks, fused QKV,
+//! tanh-GELU MLP, tied LM head) so the same weights produce the same
+//! numerics through either path. Used by the experiment harness (which
+//! needs thousands of forwards without PJRT round-trips) and as the
+//! non-PJRT compute backend of the serving engine.
+//!
+//! The paper extracts KV caches from GPT-2's first attention layer
+//! (§4.1); [`Gpt2::prefill`] exposes every layer's K/V for that.
+
+mod config;
+mod gpt2;
+mod tokenizer;
+mod weights;
+
+pub use config::ModelConfig;
+pub use gpt2::{Gpt2, PrefillOutput};
+pub use tokenizer::ByteTokenizer;
+pub use weights::{BlockWeights, Weights};

@@ -1,0 +1,98 @@
+//! Byte-level tokenizer: every UTF-8 byte is a token, plus BOS/EOS.
+//!
+//! A byte vocabulary sidesteps the need for a trained BPE merges table
+//! (no network access for GPT-2's vocab) while exercising the same code
+//! paths; the KV-statistics experiments only need *some* deterministic
+//! text→ids mapping.
+
+use super::config::ByteVocab;
+
+/// Stateless byte-level tokenizer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        ByteTokenizer
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        ByteVocab::SIZE
+    }
+
+    /// Encode text to ids, prepending BOS.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids = Vec::with_capacity(text.len() + 1);
+        ids.push(ByteVocab::BOS);
+        ids.extend(text.as_bytes().iter().map(|&b| b as u32));
+        ids
+    }
+
+    /// Encode and truncate/pad-free clamp to `max_len` tokens.
+    pub fn encode_clamped(&self, text: &str, max_len: usize) -> Vec<u32> {
+        let mut ids = self.encode(text);
+        ids.truncate(max_len);
+        ids
+    }
+
+    /// Whether an id is a special (non-byte) token.
+    pub fn is_special(&self, id: u32) -> bool {
+        id == ByteVocab::BOS || id == ByteVocab::EOS
+    }
+
+    /// Decode ids back to text (specials dropped, invalid UTF-8 lossy).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&id| id < 256)
+            .map(|&id| id as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::new();
+        let ids = t.encode("hello world");
+        assert_eq!(ids[0], ByteVocab::BOS);
+        assert_eq!(ids.len(), 12);
+        assert_eq!(t.decode(&ids), "hello world");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer::new();
+        let s = "naïve Σ θ — ok";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn clamping_truncates() {
+        let t = ByteTokenizer::new();
+        let ids = t.encode_clamped("abcdefgh", 4);
+        assert_eq!(ids.len(), 4);
+        assert_eq!(t.decode(&ids), "abc"); // BOS + 3 bytes
+    }
+
+    #[test]
+    fn specials_are_flagged_and_dropped() {
+        let t = ByteTokenizer::new();
+        assert!(t.is_special(ByteVocab::BOS));
+        assert!(t.is_special(ByteVocab::EOS));
+        assert!(!t.is_special(65));
+        assert_eq!(t.decode(&[ByteVocab::BOS, 65, ByteVocab::EOS]), "A");
+    }
+
+    #[test]
+    fn all_ids_in_vocab() {
+        let t = ByteTokenizer::new();
+        for id in t.encode("\u{0000}\u{00FF}ÿ~") {
+            assert!((id as usize) < t.vocab_size());
+        }
+    }
+}

@@ -1,0 +1,324 @@
+//! Model weights: structured random initialization + binary persistence.
+//!
+//! Initialization is *anisotropic* on the key projection: the K block of
+//! `w_qkv` is low-rank-plus-noise, concentrating key energy in a small
+//! subspace. Pretrained transformers exhibit exactly this low intrinsic
+//! dimensionality (paper §1 cites Aghajanyan et al. 2021 as the reason
+//! PQ codebooks capture keys well); a plain isotropic Gaussian would be
+//! the *hardest* case for PQ and would understate the paper's effect.
+//! See DESIGN.md §Environment constraints.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context};
+
+use super::config::ModelConfig;
+use crate::tensor::Tensor2;
+use crate::util::rng::Pcg32;
+
+/// Per-block parameters. Field order matches the python convention in
+/// python/compile/model.py (and the block artifact input order).
+#[derive(Clone, Debug)]
+pub struct BlockWeights {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    /// (d_model, 3·d_model) fused QKV
+    pub w_qkv: Tensor2,
+    pub b_qkv: Vec<f32>,
+    /// (d_model, d_model)
+    pub w_proj: Tensor2,
+    pub b_proj: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    /// (d_model, d_ff)
+    pub w_fc: Tensor2,
+    pub b_fc: Vec<f32>,
+    /// (d_ff, d_model)
+    pub w_out: Tensor2,
+    pub b_out: Vec<f32>,
+}
+
+/// Full model parameters (LM head tied to `wte`).
+pub struct Weights {
+    pub config: ModelConfig,
+    /// (vocab, d_model)
+    pub wte: Tensor2,
+    /// (max_pos, d_model)
+    pub wpe: Tensor2,
+    pub blocks: Vec<BlockWeights>,
+    pub ln_f_g: Vec<f32>,
+    pub ln_f_b: Vec<f32>,
+}
+
+const MAGIC: &[u8; 8] = b"LOOKATW1";
+
+/// Low-rank-plus-noise matrix: A(r) @ B(r) * scale + eps * G.
+fn low_rank_noise(
+    rows: usize,
+    cols: usize,
+    rank: usize,
+    scale: f32,
+    eps: f32,
+    rng: &mut Pcg32,
+) -> Tensor2 {
+    let a = Tensor2::randn(rows, rank, 1.0 / (rank as f32).sqrt(), rng);
+    let b = Tensor2::randn(rank, cols, scale, rng);
+    let mut m = a.matmul(&b);
+    for v in m.data.iter_mut() {
+        *v += rng.next_normal(0.0, eps);
+    }
+    m
+}
+
+impl Weights {
+    /// Structured random initialization (see module docs).
+    pub fn random(config: &ModelConfig, seed: u64) -> Weights {
+        let mut rng = Pcg32::seed(seed);
+        let d = config.d_model();
+        let sigma = 1.0 / (d as f32).sqrt();
+        let wte = Tensor2::randn(config.vocab, d, sigma * 4.0, &mut rng);
+        let wpe = Tensor2::randn(config.max_pos, d, sigma, &mut rng);
+        let mut blocks = Vec::with_capacity(config.n_layer);
+        for layer in 0..config.n_layer {
+            let mut lrng = rng.split(layer as u64);
+            blocks.push(Self::random_block(config, &mut lrng));
+        }
+        Weights {
+            config: config.clone(),
+            wte,
+            wpe,
+            blocks,
+            ln_f_g: vec![1.0; d],
+            ln_f_b: vec![0.0; d],
+        }
+    }
+
+    fn random_block(config: &ModelConfig, rng: &mut Pcg32) -> BlockWeights {
+        let d = config.d_model();
+        let sigma = 1.0 / (d as f32).sqrt();
+        // Q and V blocks: isotropic. K block: low-rank + noise so cached
+        // keys live near a low-dimensional subspace (see module docs).
+        let w_q = Tensor2::randn(d, d, sigma, rng);
+        let k_rank = (config.d_head / 4).max(2) * config.n_head;
+        let w_k = low_rank_noise(d, d, k_rank, sigma * 1.5, sigma * 0.15, rng);
+        let w_v = Tensor2::randn(d, d, sigma, rng);
+        // fuse into (d, 3d): columns [Q | K | V]
+        let mut w_qkv = Tensor2::zeros(d, 3 * d);
+        for r in 0..d {
+            w_qkv.row_mut(r)[0..d].copy_from_slice(w_q.row(r));
+            w_qkv.row_mut(r)[d..2 * d].copy_from_slice(w_k.row(r));
+            w_qkv.row_mut(r)[2 * d..3 * d].copy_from_slice(w_v.row(r));
+        }
+        BlockWeights {
+            ln1_g: vec![1.0; d],
+            ln1_b: vec![0.0; d],
+            w_qkv,
+            b_qkv: vec![0.0; 3 * d],
+            w_proj: Tensor2::randn(d, d, sigma, rng),
+            b_proj: vec![0.0; d],
+            ln2_g: vec![1.0; d],
+            ln2_b: vec![0.0; d],
+            w_fc: Tensor2::randn(d, config.d_ff, sigma, rng),
+            b_fc: vec![0.0; config.d_ff],
+            w_out: Tensor2::randn(
+                config.d_ff,
+                d,
+                1.0 / (config.d_ff as f32).sqrt(),
+                rng,
+            ),
+            b_out: vec![0.0; d],
+        }
+    }
+
+    // -- persistence -------------------------------------------------------
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        let cfg = self.config.to_json().to_string();
+        w.write_all(&(cfg.len() as u64).to_le_bytes())?;
+        w.write_all(cfg.as_bytes())?;
+        let write_f32s = |w: &mut dyn Write, xs: &[f32]| -> anyhow::Result<()> {
+            let mut buf = Vec::with_capacity(xs.len() * 4);
+            for &x in xs {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            w.write_all(&buf)?;
+            Ok(())
+        };
+        write_f32s(&mut w, &self.wte.data)?;
+        write_f32s(&mut w, &self.wpe.data)?;
+        for b in &self.blocks {
+            for xs in b.flat_order() {
+                write_f32s(&mut w, xs)?;
+            }
+        }
+        write_f32s(&mut w, &self.ln_f_g)?;
+        write_f32s(&mut w, &self.ln_f_b)?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Weights> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic).context("weights magic")?;
+        if &magic != MAGIC {
+            bail!("not a LOOKAT weights file");
+        }
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let cfg_len = u64::from_le_bytes(b8) as usize;
+        if cfg_len > 1 << 20 {
+            bail!("unreasonable config length");
+        }
+        let mut cfg_buf = vec![0u8; cfg_len];
+        r.read_exact(&mut cfg_buf)?;
+        let cfg_json = crate::util::json::Json::parse(
+            std::str::from_utf8(&cfg_buf)?,
+        )?;
+        let config = ModelConfig::from_json(&cfg_json)
+            .context("bad config json")?;
+
+        let read_f32s = |r: &mut dyn Read, n: usize| -> anyhow::Result<Vec<f32>> {
+            let mut buf = vec![0u8; n * 4];
+            r.read_exact(&mut buf)?;
+            Ok(buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        };
+        let d = config.d_model();
+        let wte = Tensor2::from_vec(
+            config.vocab, d, read_f32s(&mut r, config.vocab * d)?);
+        let wpe = Tensor2::from_vec(
+            config.max_pos, d, read_f32s(&mut r, config.max_pos * d)?);
+        let mut blocks = Vec::with_capacity(config.n_layer);
+        for _ in 0..config.n_layer {
+            blocks.push(BlockWeights {
+                ln1_g: read_f32s(&mut r, d)?,
+                ln1_b: read_f32s(&mut r, d)?,
+                w_qkv: Tensor2::from_vec(d, 3 * d,
+                                         read_f32s(&mut r, d * 3 * d)?),
+                b_qkv: read_f32s(&mut r, 3 * d)?,
+                w_proj: Tensor2::from_vec(d, d, read_f32s(&mut r, d * d)?),
+                b_proj: read_f32s(&mut r, d)?,
+                ln2_g: read_f32s(&mut r, d)?,
+                ln2_b: read_f32s(&mut r, d)?,
+                w_fc: Tensor2::from_vec(d, config.d_ff,
+                                        read_f32s(&mut r, d * config.d_ff)?),
+                b_fc: read_f32s(&mut r, config.d_ff)?,
+                w_out: Tensor2::from_vec(config.d_ff, d,
+                                         read_f32s(&mut r, config.d_ff * d)?),
+                b_out: read_f32s(&mut r, d)?,
+            });
+        }
+        let ln_f_g = read_f32s(&mut r, d)?;
+        let ln_f_b = read_f32s(&mut r, d)?;
+        Ok(Weights { config, wte, wpe, blocks, ln_f_g, ln_f_b })
+    }
+}
+
+impl BlockWeights {
+    /// Parameter slices in the canonical (python-matching) order.
+    pub fn flat_order(&self) -> Vec<&[f32]> {
+        vec![
+            &self.ln1_g, &self.ln1_b, &self.w_qkv.data, &self.b_qkv,
+            &self.w_proj.data, &self.b_proj, &self.ln2_g, &self.ln2_b,
+            &self.w_fc.data, &self.b_fc, &self.w_out.data, &self.b_out,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_init_shapes() {
+        let cfg = ModelConfig::test_tiny();
+        let w = Weights::random(&cfg, 1);
+        let d = cfg.d_model();
+        assert_eq!(w.wte.rows, cfg.vocab);
+        assert_eq!(w.blocks.len(), cfg.n_layer);
+        assert_eq!(w.blocks[0].w_qkv.cols, 3 * d);
+        assert_eq!(w.blocks[0].w_fc.cols, cfg.d_ff);
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let cfg = ModelConfig::test_tiny();
+        let a = Weights::random(&cfg, 7);
+        let b = Weights::random(&cfg, 7);
+        assert_eq!(a.wte.data, b.wte.data);
+        assert_eq!(a.blocks[1].w_qkv.data, b.blocks[1].w_qkv.data);
+        let c = Weights::random(&cfg, 8);
+        assert_ne!(a.wte.data, c.wte.data);
+    }
+
+    #[test]
+    fn key_block_is_anisotropic() {
+        // effective rank of K block should be well below Q block's
+        let cfg = ModelConfig::test_tiny();
+        let w = Weights::random(&cfg, 3);
+        let d = cfg.d_model();
+        let spectral_spread = |cols: std::ops::Range<usize>| {
+            // cheap proxy: column-norm variance of the block
+            let blk = &w.blocks[0].w_qkv;
+            let norms: Vec<f64> = cols
+                .map(|c| {
+                    (0..d)
+                        .map(|r| (blk.at(r, c) as f64).powi(2))
+                        .sum::<f64>()
+                        .sqrt()
+                })
+                .collect();
+            let m = norms.iter().sum::<f64>() / norms.len() as f64;
+            norms.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+                / norms.len() as f64
+        };
+        let q_spread = spectral_spread(0..d);
+        let k_spread = spectral_spread(d..2 * d);
+        assert!(
+            k_spread > q_spread * 2.0,
+            "K block should be structured: {k_spread} vs {q_spread}"
+        );
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig::test_tiny();
+        let w = Weights::random(&cfg, 5);
+        let dir = std::env::temp_dir().join("lookat-test-weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        w.save(&path).unwrap();
+        let back = Weights::load(&path).unwrap();
+        assert_eq!(back.config, cfg);
+        assert_eq!(back.wte.data, w.wte.data);
+        assert_eq!(back.wpe.data, w.wpe.data);
+        assert_eq!(back.ln_f_g, w.ln_f_g);
+        for (a, b) in back.blocks.iter().zip(&w.blocks) {
+            assert_eq!(a.w_qkv.data, b.w_qkv.data);
+            assert_eq!(a.w_out.data, b.w_out.data);
+            assert_eq!(a.b_fc, b.b_fc);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("lookat-test-weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.bin");
+        std::fs::write(&path, b"garbage data here").unwrap();
+        assert!(Weights::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn flat_order_has_twelve_entries() {
+        let cfg = ModelConfig::test_tiny();
+        let w = Weights::random(&cfg, 9);
+        assert_eq!(w.blocks[0].flat_order().len(), 12);
+    }
+}

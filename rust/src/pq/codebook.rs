@@ -1,0 +1,250 @@
+//! Per-subspace codebook container with binary persistence.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context};
+
+/// Codebooks for all `m` subspaces of one attention head.
+///
+/// Layout: `centroids[i]` is the subspace-i codebook, a flat
+/// (K × d_sub) row-major matrix.
+#[derive(Clone, Debug)]
+pub struct Codebook {
+    pub m: usize,
+    pub k: usize,
+    pub d_sub: usize,
+    centroids: Vec<Vec<f32>>,
+    /// transposed centroids per subspace: (d_sub × K) row-major. Lets the
+    /// LUT build and encoder run K-wide axpy/FMA loops instead of K short
+    /// dot products — the §Perf optimization (see EXPERIMENTS.md §Perf).
+    centroids_t: Vec<Vec<f32>>,
+    /// squared norms ‖c‖² per centroid per subspace, for the encoder's
+    /// argmin ‖x−c‖² = argmax (x·c − ‖c‖²/2) trick
+    norms2: Vec<Vec<f32>>,
+}
+
+impl PartialEq for Codebook {
+    fn eq(&self, other: &Self) -> bool {
+        self.m == other.m
+            && self.k == other.k
+            && self.d_sub == other.d_sub
+            && self.centroids == other.centroids
+    }
+}
+
+const MAGIC: &[u8; 8] = b"LOOKATCB";
+
+impl Codebook {
+    pub fn new(m: usize, k: usize, d_sub: usize,
+               centroids: Vec<Vec<f32>>) -> Self {
+        assert_eq!(centroids.len(), m);
+        for cb in &centroids {
+            assert_eq!(cb.len(), k * d_sub);
+        }
+        let centroids_t: Vec<Vec<f32>> = centroids
+            .iter()
+            .map(|cb| {
+                let mut t = vec![0.0f32; k * d_sub];
+                for c in 0..k {
+                    for d in 0..d_sub {
+                        t[d * k + c] = cb[c * d_sub + d];
+                    }
+                }
+                t
+            })
+            .collect();
+        let norms2: Vec<Vec<f32>> = centroids
+            .iter()
+            .map(|cb| {
+                (0..k)
+                    .map(|c| {
+                        crate::tensor::dot(
+                            &cb[c * d_sub..(c + 1) * d_sub],
+                            &cb[c * d_sub..(c + 1) * d_sub],
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { m, k, d_sub, centroids, centroids_t, norms2 }
+    }
+
+    /// Transposed (d_sub × K) centroids of subspace `i`.
+    #[inline]
+    pub fn subspace_t(&self, i: usize) -> &[f32] {
+        &self.centroids_t[i]
+    }
+
+    /// Squared centroid norms of subspace `i`.
+    #[inline]
+    pub fn norms2(&self, i: usize) -> &[f32] {
+        &self.norms2[i]
+    }
+
+    /// Head dimension this codebook quantizes.
+    pub fn d_k(&self) -> usize {
+        self.m * self.d_sub
+    }
+
+    /// Flat (K × d_sub) codebook of subspace `i`.
+    #[inline]
+    pub fn subspace(&self, i: usize) -> &[f32] {
+        &self.centroids[i]
+    }
+
+    /// Centroid `c` of subspace `i`.
+    #[inline]
+    pub fn centroid(&self, i: usize, c: usize) -> &[f32] {
+        &self.centroids[i][c * self.d_sub..(c + 1) * self.d_sub]
+    }
+
+    /// Storage cost of the codebooks themselves in bytes (f32 entries),
+    /// i.e. the paper's "32 KB of codebook storage per layer" accounting
+    /// (the paper counts FP16 entries; double for our f32 storage).
+    pub fn size_bytes_f32(&self) -> usize {
+        self.m * self.k * self.d_sub * 4
+    }
+
+    /// Paper-accounting size with FP16 entries (2 bytes each).
+    pub fn size_bytes_fp16(&self) -> usize {
+        self.m * self.k * self.d_sub * 2
+    }
+
+    // -- persistence (binary: magic, dims, then f32 LE payload) -----------
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> anyhow::Result<()> {
+        w.write_all(MAGIC)?;
+        for v in [self.m as u64, self.k as u64, self.d_sub as u64] {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for cb in &self.centroids {
+            for &x in cb {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> anyhow::Result<Codebook> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic).context("codebook magic")?;
+        if &magic != MAGIC {
+            bail!("not a LOOKAT codebook file");
+        }
+        let mut b8 = [0u8; 8];
+        let mut dims = [0usize; 3];
+        for d in dims.iter_mut() {
+            r.read_exact(&mut b8)?;
+            *d = u64::from_le_bytes(b8) as usize;
+        }
+        let (m, k, d_sub) = (dims[0], dims[1], dims[2]);
+        if m == 0 || k == 0 || d_sub == 0 || m * k * d_sub > (1 << 28) {
+            bail!("unreasonable codebook dims {m}x{k}x{d_sub}");
+        }
+        let mut centroids = Vec::with_capacity(m);
+        let mut b4 = [0u8; 4];
+        for _ in 0..m {
+            let mut cb = Vec::with_capacity(k * d_sub);
+            for _ in 0..k * d_sub {
+                r.read_exact(&mut b4)?;
+                cb.push(f32::from_le_bytes(b4));
+            }
+            centroids.push(cb);
+        }
+        Ok(Codebook::new(m, k, d_sub, centroids))
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_to(&mut f)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Codebook> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        Self::read_from(&mut f)
+    }
+
+    /// Flatten to (m, K, d_sub) order for the PJRT artifact boundary.
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.m * self.k * self.d_sub);
+        for cb in &self.centroids {
+            out.extend_from_slice(cb);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_codebook(m: usize, k: usize, d_sub: usize) -> Codebook {
+        let mut rng = Pcg32::seed(11);
+        let centroids = (0..m)
+            .map(|_| (0..k * d_sub).map(|_| rng.next_f32_std()).collect())
+            .collect();
+        Codebook::new(m, k, d_sub, centroids)
+    }
+
+    #[test]
+    fn accessors_consistent() {
+        let cb = random_codebook(4, 16, 8);
+        assert_eq!(cb.d_k(), 32);
+        assert_eq!(cb.subspace(2).len(), 16 * 8);
+        assert_eq!(cb.centroid(1, 3), &cb.subspace(1)[24..32]);
+    }
+
+    #[test]
+    fn size_accounting_matches_paper() {
+        // paper: m=4, K=256, d_sub=16 -> 4·256·16·2 B = 32 KB per head set
+        let cb = random_codebook(4, 256, 16);
+        assert_eq!(cb.size_bytes_fp16(), 32 * 1024);
+        assert_eq!(cb.size_bytes_f32(), 64 * 1024);
+    }
+
+    #[test]
+    fn roundtrip_through_bytes() {
+        let cb = random_codebook(2, 64, 4);
+        let mut buf = Vec::new();
+        cb.write_to(&mut buf).unwrap();
+        let back = Codebook::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, cb);
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let cb = random_codebook(8, 32, 2);
+        let dir = std::env::temp_dir().join("lookat-test-cb");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cb.bin");
+        cb.save(&path).unwrap();
+        let back = Codebook::load(&path).unwrap();
+        assert_eq!(back, cb);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let data = b"NOTLOOKA0000000000000000".to_vec();
+        assert!(Codebook::read_from(&mut data.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let cb = random_codebook(2, 8, 2);
+        let mut buf = Vec::new();
+        cb.write_to(&mut buf).unwrap();
+        buf.truncate(buf.len() - 5);
+        assert!(Codebook::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn to_flat_order() {
+        let cb = random_codebook(3, 4, 2);
+        let flat = cb.to_flat();
+        assert_eq!(flat.len(), 3 * 4 * 2);
+        assert_eq!(&flat[0..8], cb.subspace(0));
+        assert_eq!(&flat[8..16], cb.subspace(1));
+    }
+}

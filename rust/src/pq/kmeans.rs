@@ -1,0 +1,263 @@
+//! Lloyd's K-Means with k-means++ initialization, operating on flat
+//! row-major point sets. This is the codebook learner of paper §3.4:
+//!
+//!   C_i = argmin_C  Σ_{k ∈ calib}  min_{c ∈ C} ||k^(i) − c||²
+
+use crate::tensor::dist2;
+use crate::util::rng::Pcg32;
+
+/// K-Means result: centroids (k × dim, row-major) and final inertia.
+#[derive(Clone, Debug)]
+pub struct KMeansResult {
+    pub centroids: Vec<f32>,
+    pub k: usize,
+    pub dim: usize,
+    pub inertia: f64,
+    pub iters_run: usize,
+}
+
+/// Run k-means++ + Lloyd on `points` (n × dim row-major).
+///
+/// If n < k, surplus centroids are duplicated from sampled points — every
+/// centroid is always a valid `dim`-vector, and encoding stays total.
+pub fn kmeans(
+    points: &[f32],
+    dim: usize,
+    k: usize,
+    iters: usize,
+    tol: f64,
+    rng: &mut Pcg32,
+) -> KMeansResult {
+    assert!(dim > 0 && k > 0);
+    assert_eq!(points.len() % dim, 0, "points not a multiple of dim");
+    let n = points.len() / dim;
+    assert!(n > 0, "kmeans needs at least one point");
+
+    let mut centroids = init_pp(points, n, dim, k, rng);
+    let mut assign = vec![0u32; n];
+    let mut prev_inertia = f64::INFINITY;
+    let mut inertia = f64::INFINITY;
+    let mut iters_run = 0;
+
+    for it in 0..iters {
+        // assignment step
+        inertia = 0.0;
+        for p in 0..n {
+            let pt = &points[p * dim..(p + 1) * dim];
+            let (best, d) = nearest(pt, &centroids, k, dim);
+            assign[p] = best as u32;
+            inertia += d as f64;
+        }
+        iters_run = it + 1;
+
+        // convergence check
+        if prev_inertia.is_finite() {
+            let rel = (prev_inertia - inertia) / prev_inertia.max(1e-30);
+            if rel.abs() < tol {
+                break;
+            }
+        }
+        prev_inertia = inertia;
+
+        // update step
+        let mut counts = vec![0u32; k];
+        let mut sums = vec![0.0f32; k * dim];
+        for p in 0..n {
+            let c = assign[p] as usize;
+            counts[c] += 1;
+            let pt = &points[p * dim..(p + 1) * dim];
+            for (s, v) in sums[c * dim..(c + 1) * dim].iter_mut().zip(pt) {
+                *s += *v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                let inv = 1.0 / counts[c] as f32;
+                for d in 0..dim {
+                    centroids[c * dim + d] = sums[c * dim + d] * inv;
+                }
+            } else {
+                // dead centroid: respawn on a random point
+                let p = rng.next_bounded(n as u32) as usize;
+                centroids[c * dim..(c + 1) * dim]
+                    .copy_from_slice(&points[p * dim..(p + 1) * dim]);
+            }
+        }
+    }
+
+    KMeansResult { centroids, k, dim, inertia, iters_run }
+}
+
+/// Index and squared distance of the nearest centroid.
+#[inline]
+pub fn nearest(pt: &[f32], centroids: &[f32], k: usize, dim: usize)
+    -> (usize, f32)
+{
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for c in 0..k {
+        let d = dist2(pt, &centroids[c * dim..(c + 1) * dim]);
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    (best, best_d)
+}
+
+/// k-means++ seeding (Arthur & Vassilvitskii 2007).
+fn init_pp(points: &[f32], n: usize, dim: usize, k: usize, rng: &mut Pcg32)
+    -> Vec<f32>
+{
+    let mut centroids = Vec::with_capacity(k * dim);
+    // first centroid: uniform random point
+    let first = rng.next_bounded(n as u32) as usize;
+    centroids.extend_from_slice(&points[first * dim..(first + 1) * dim]);
+
+    let mut d2 = vec![0.0f32; n];
+    for p in 0..n {
+        d2[p] = dist2(
+            &points[p * dim..(p + 1) * dim],
+            &centroids[0..dim],
+        );
+    }
+
+    for c in 1..k {
+        let total: f64 = d2.iter().map(|&x| x as f64).sum();
+        let next = if total <= 1e-30 {
+            // all points identical / already covered: sample uniformly
+            rng.next_bounded(n as u32) as usize
+        } else {
+            let mut target = rng.next_f64() * total;
+            let mut chosen = n - 1;
+            for (p, &w) in d2.iter().enumerate() {
+                target -= w as f64;
+                if target <= 0.0 {
+                    chosen = p;
+                    break;
+                }
+            }
+            chosen
+        };
+        let base = centroids.len();
+        centroids.extend_from_slice(&points[next * dim..(next + 1) * dim]);
+        // update min-distances against the new centroid
+        let newc = &centroids[base..base + dim];
+        for p in 0..n {
+            let d = dist2(&points[p * dim..(p + 1) * dim], newc);
+            if d < d2[p] {
+                d2[p] = d;
+            }
+        }
+        let _ = c;
+    }
+    centroids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated gaussian blobs in 2-D.
+    fn blobs(rng: &mut Pcg32) -> Vec<f32> {
+        let centers = [(-10.0f32, 0.0f32), (10.0, 0.0), (0.0, 15.0)];
+        let mut pts = Vec::new();
+        for &(cx, cy) in &centers {
+            for _ in 0..100 {
+                pts.push(cx + rng.next_f32_std() * 0.5);
+                pts.push(cy + rng.next_f32_std() * 0.5);
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Pcg32::seed(1);
+        let pts = blobs(&mut rng);
+        let res = kmeans(&pts, 2, 3, 50, 1e-6, &mut rng);
+        // every centroid should sit near one of the true centers
+        let truth = [(-10.0f32, 0.0f32), (10.0, 0.0), (0.0, 15.0)];
+        let mut matched = [false; 3];
+        for c in 0..3 {
+            let cx = res.centroids[c * 2];
+            let cy = res.centroids[c * 2 + 1];
+            for (t, &(tx, ty)) in truth.iter().enumerate() {
+                if (cx - tx).abs() < 1.0 && (cy - ty).abs() < 1.0 {
+                    matched[t] = true;
+                }
+            }
+        }
+        assert!(matched.iter().all(|&m| m), "centroids {:?}", res.centroids);
+        // tight blobs -> tiny inertia per point
+        assert!(res.inertia / 300.0 < 1.0);
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let mut rng = Pcg32::seed(2);
+        let pts: Vec<f32> = (0..2000).map(|_| rng.next_f32_std()).collect();
+        let mut last = f64::INFINITY;
+        for k in [2, 8, 32] {
+            let mut r = Pcg32::seed(3);
+            let res = kmeans(&pts, 4, k, 30, 1e-6, &mut r);
+            assert!(
+                res.inertia < last,
+                "inertia should shrink with k: k={k} {} >= {last}",
+                res.inertia
+            );
+            last = res.inertia;
+        }
+    }
+
+    #[test]
+    fn handles_fewer_points_than_k() {
+        let mut rng = Pcg32::seed(4);
+        let pts = vec![1.0f32, 2.0, 3.0, 4.0]; // 2 points, dim 2
+        let res = kmeans(&pts, 2, 8, 10, 1e-6, &mut rng);
+        assert_eq!(res.centroids.len(), 8 * 2);
+        assert!(res.centroids.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn identical_points_collapse() {
+        let mut rng = Pcg32::seed(5);
+        let pts = vec![5.0f32; 50 * 3];
+        let res = kmeans(&pts, 3, 4, 10, 1e-6, &mut rng);
+        assert!(res.inertia < 1e-9);
+        for c in 0..4 {
+            for d in 0..3 {
+                assert!((res.centroids[c * 3 + d] - 5.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let mut rng = Pcg32::seed(6);
+        let pts: Vec<f32> = (0..600).map(|_| rng.next_f32_std()).collect();
+        let mut r1 = Pcg32::seed(7);
+        let mut r2 = Pcg32::seed(7);
+        let a = kmeans(&pts, 3, 5, 20, 1e-6, &mut r1);
+        let b = kmeans(&pts, 3, 5, 20, 1e-6, &mut r2);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.inertia, b.inertia);
+    }
+
+    #[test]
+    fn early_stop_respects_tol() {
+        let mut rng = Pcg32::seed(8);
+        let pts = blobs(&mut rng);
+        let res = kmeans(&pts, 2, 3, 1000, 1e-3, &mut rng);
+        assert!(res.iters_run < 1000, "should early-stop, ran {}",
+                res.iters_run);
+    }
+
+    #[test]
+    fn nearest_finds_argmin() {
+        let centroids = vec![0.0f32, 0.0, 10.0, 10.0, -5.0, 2.0];
+        let (idx, d) = nearest(&[9.0, 9.5], &centroids, 3, 2);
+        assert_eq!(idx, 1);
+        assert!((d - (1.0 + 0.25)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,38 @@
+//! Product quantization + asymmetric distance computation — the paper's
+//! §3.4/§3.5 core, implemented as the rust hot path.
+//!
+//! Pipeline:
+//!   1. [`kmeans`] learns a per-subspace codebook from calibration keys.
+//!   2. [`PqCodec`] encodes each key vector into `m` uint8 codes.
+//!   3. [`LookupTable`] precomputes `LUT_i = q^(i) · C_i^T` per query and
+//!      scores every key with `m` table lookups + adds — no dequantization.
+
+mod adc;
+mod codebook;
+mod encoder;
+pub mod kmeans;
+pub mod values;
+
+pub use adc::LookupTable;
+pub use codebook::Codebook;
+pub use encoder::PqCodec;
+
+/// Number of centroids per subspace (paper fixes K = 256 so codes fit u8).
+pub const NUM_CENTROIDS: usize = 256;
+
+/// Training options for the K-Means codebook learner.
+#[derive(Clone, Debug)]
+pub struct TrainOpts {
+    /// Lloyd iterations.
+    pub iters: usize,
+    /// RNG seed (k-means++ init).
+    pub seed: u64,
+    /// Early-stop when relative inertia improvement falls below this.
+    pub tol: f64,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        Self { iters: 25, seed: 0x10CA7, tol: 1e-4 }
+    }
+}

@@ -1,0 +1,170 @@
+//! Value compression — the paper's §5.2 future-work extension, built out.
+//!
+//! Keys use ADC because attention only needs score *rankings*. Values
+//! enter a weighted sum, which the paper calls "non-trivial". The trick
+//! is to transpose the aggregation: with PQ-coded values,
+//!
+//!   o = Σ_l α_l · v_l ≈ Σ_l α_l · decode(codes_l)
+//!     = Σ_i Σ_c ( Σ_{l : codes_l[i]=c} α_l ) · C_i[c]
+//!
+//! i.e. scatter-accumulate the attention weights into a per-subspace
+//! (K,) weight table, then take one (K × d_sub) matvec per subspace.
+//! Cost: O(L·m + m·K·d_sub) instead of O(L·d_k) — the same complexity
+//! shape as key-side ADC, and the values are never dequantized per-token.
+
+use super::encoder::PqCodec;
+
+/// Weighted-sum of PQ-coded values via weight aggregation.
+///
+/// `weights` (n) are the post-softmax attention weights; `codes` is the
+/// (n × m) u8 code matrix of the values. Returns the (d_k) output.
+pub fn weighted_decode(
+    weights: &[f32],
+    codes: &[u8],
+    codec: &PqCodec,
+) -> Vec<f32> {
+    let cb = &codec.codebook;
+    let (m, k, d_sub) = (cb.m, cb.k, cb.d_sub);
+    let n = weights.len();
+    assert_eq!(codes.len(), n * m, "codes/weights length mismatch");
+
+    // phase 1: scatter weights into per-subspace accumulators — O(n·m)
+    let mut acc = vec![0.0f32; m * k];
+    for l in 0..n {
+        let w = weights[l];
+        if w == 0.0 {
+            continue;
+        }
+        let row = &codes[l * m..(l + 1) * m];
+        for (i, &c) in row.iter().enumerate() {
+            acc[i * k + c as usize] += w;
+        }
+    }
+
+    // phase 2: per-subspace weighted centroid sum — O(m·K·d_sub)
+    let mut out = vec![0.0f32; m * d_sub];
+    for i in 0..m {
+        let seg = &mut out[i * d_sub..(i + 1) * d_sub];
+        let cents = cb.subspace(i);
+        for c in 0..k {
+            let w = acc[i * k + c];
+            if w != 0.0 {
+                let cent = &cents[c * d_sub..(c + 1) * d_sub];
+                for (o, v) in seg.iter_mut().zip(cent) {
+                    *o += w * *v;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Analytic FLOP count of [`weighted_decode`] vs the dense reduction.
+pub fn flops(n: usize, m: usize, k: usize, d_sub: usize) -> (usize, usize) {
+    let dense = n * m * d_sub; // Σ α_l·v_l over d_k = m·d_sub dims
+    let adc = n * m + m * k * d_sub;
+    (dense, adc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::TrainOpts;
+    use crate::util::rng::Pcg32;
+
+    fn setup(n: usize, d_k: usize, m: usize, k: usize)
+        -> (Vec<f32>, PqCodec, Vec<u8>, Vec<f32>)
+    {
+        let mut rng = Pcg32::seed(0xBEEF);
+        let values: Vec<f32> =
+            (0..n * d_k).map(|_| rng.next_f32_std()).collect();
+        let codec = PqCodec::train(&values, d_k, m, k,
+                                   &TrainOpts::default());
+        let codes = codec.encode_batch(&values, n);
+        let mut weights: Vec<f32> =
+            (0..n).map(|_| rng.next_f32()).collect();
+        let s: f32 = weights.iter().sum();
+        for w in weights.iter_mut() {
+            *w /= s;
+        }
+        (values, codec, codes, weights)
+    }
+
+    /// dense oracle: Σ α_l · decode(codes_l)
+    fn oracle(weights: &[f32], codes: &[u8], codec: &PqCodec) -> Vec<f32> {
+        let m = codec.codebook.m;
+        let d_k = codec.codebook.d_k();
+        let mut out = vec![0.0f32; d_k];
+        for (l, &w) in weights.iter().enumerate() {
+            let v = codec.decode(&codes[l * m..(l + 1) * m]);
+            for (o, x) in out.iter_mut().zip(&v) {
+                *o += w * x;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_dense_decode_reduction() {
+        for (n, m, k) in [(64, 4, 32), (200, 8, 64), (128, 2, 256)] {
+            let (_, codec, codes, weights) = setup(n, 64, m, k);
+            let got = weighted_decode(&weights, &codes, &codec);
+            let want = oracle(&weights, &codes, &codec);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "n={n} m={m}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn close_to_uncompressed_values() {
+        let (values, codec, codes, weights) = setup(256, 64, 8, 256);
+        let approx = weighted_decode(&weights, &codes, &codec);
+        let mut exact = vec![0.0f32; 64];
+        for (l, &w) in weights.iter().enumerate() {
+            for (o, x) in exact.iter_mut().zip(&values[l * 64..(l + 1) * 64])
+            {
+                *o += w * x;
+            }
+        }
+        let cos = crate::metrics::cosine_similarity(&exact, &approx);
+        assert!(cos > 0.95, "cosine {cos}");
+    }
+
+    #[test]
+    fn zero_weights_give_zero_output() {
+        let (_, codec, codes, _) = setup(32, 32, 4, 16);
+        let out = weighted_decode(&vec![0.0; 32], &codes, &codec);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn single_hot_weight_reconstructs_that_value() {
+        let (_, codec, codes, _) = setup(32, 32, 4, 16);
+        let mut w = vec![0.0f32; 32];
+        w[7] = 1.0;
+        let out = weighted_decode(&w, &codes, &codec);
+        let want = codec.decode(&codes[7 * 4..8 * 4]);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn flops_favor_adc_for_long_caches() {
+        // at L=512, d_k=64, m=4, K=256: dense = 32768, adc = 2048+16384
+        let (dense, adc) = flops(512, 4, 256, 16);
+        assert_eq!(dense, 512 * 64);
+        assert_eq!(adc, 512 * 4 + 4 * 256 * 16);
+        // crossover: ADC wins once n·m·d_sub > n·m + m·K·d_sub
+        let (d2, a2) = flops(4096, 4, 256, 16);
+        assert!(a2 < d2);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn rejects_mismatched_inputs() {
+        let (_, codec, codes, _) = setup(32, 32, 4, 16);
+        weighted_decode(&vec![0.1; 16], &codes, &codec);
+    }
+}

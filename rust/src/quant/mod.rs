@@ -1,0 +1,144 @@
+//! Scalar-quantization baselines (paper §3.2, §4.1): symmetric per-tensor
+//! INT4 / INT8. These exist to reproduce the INT4/INT8 rows of Tables 1
+//! and 4 — including the round-trip dequantization that LOOKAT avoids.
+
+/// A scalar-quantized tensor: packed signed codes + one per-tensor scale.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    /// signed codes, one i8 per element (INT4 uses the low nibble range)
+    pub codes: Vec<i8>,
+    pub scale: f32,
+    pub bits: u8,
+}
+
+impl QuantizedTensor {
+    /// Storage bytes under ideal packing (INT4 packs two codes per byte).
+    pub fn storage_bytes(&self) -> usize {
+        match self.bits {
+            4 => self.codes.len().div_ceil(2),
+            8 => self.codes.len(),
+            b => self.codes.len() * b as usize / 8,
+        }
+    }
+}
+
+/// Symmetric per-tensor quantization: scale maps max|x| to the top of the
+/// signed range. Mirrors python/compile/kernels/quant.py.
+pub fn quantize_symmetric(x: &[f32], bits: u8) -> QuantizedTensor {
+    assert!(bits == 4 || bits == 8, "only INT4/INT8 baselines supported");
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let qmin = -qmax - 1.0;
+    let amax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    let scale = if amax > 0.0 { amax / qmax } else { 1.0 };
+    let codes = x
+        .iter()
+        .map(|&v| (v / scale).round().clamp(qmin, qmax) as i8)
+        .collect();
+    QuantizedTensor { codes, scale, bits }
+}
+
+/// Dequantize back to f32: x ≈ code · scale. This round trip is the
+/// bandwidth cost scalar quantization cannot avoid (paper §3.2).
+pub fn dequantize(q: &QuantizedTensor) -> Vec<f32> {
+    q.codes.iter().map(|&c| c as f32 * q.scale).collect()
+}
+
+/// quantize→dequantize in one call (what the INT4/INT8 rows do to keys
+/// before exact attention).
+pub fn quant_roundtrip(x: &[f32], bits: u8) -> Vec<f32> {
+    dequantize(&quantize_symmetric(x, bits))
+}
+
+/// Bytes/token for a scalar-quantized key of dimension `d_k`.
+pub fn bytes_per_token(d_k: usize, bits: u8) -> usize {
+    (d_k * bits as usize).div_ceil(8)
+}
+
+/// Compression ratio vs FP16 keys.
+pub fn compression_ratio(bits: u8) -> f64 {
+    16.0 / bits as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn sample(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seed(seed);
+        (0..n).map(|_| rng.next_f32_std() * 3.0).collect()
+    }
+
+    #[test]
+    fn int8_roundtrip_error_bounded_by_half_scale() {
+        let x = sample(4096, 1);
+        let q = quantize_symmetric(&x, 8);
+        let y = dequantize(&q);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() <= q.scale * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn int4_coarser_than_int8() {
+        let x = sample(4096, 2);
+        let mse = |y: &[f32]| -> f64 {
+            x.iter()
+                .zip(y)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / x.len() as f64
+        };
+        let e4 = mse(&quant_roundtrip(&x, 4));
+        let e8 = mse(&quant_roundtrip(&x, 8));
+        assert!(e4 > e8 * 10.0, "e4={e4} e8={e8}");
+    }
+
+    #[test]
+    fn codes_respect_bit_range() {
+        let x = sample(1000, 3);
+        let q4 = quantize_symmetric(&x, 4);
+        assert!(q4.codes.iter().all(|&c| (-8..=7).contains(&c)));
+        let q8 = quantize_symmetric(&x, 8);
+        assert!(q8.codes.iter().all(|&c| (-128..=127).contains(&c)));
+    }
+
+    #[test]
+    fn zero_tensor_is_stable() {
+        let q = quantize_symmetric(&[0.0; 64], 4);
+        assert_eq!(q.scale, 1.0);
+        assert!(dequantize(&q).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn max_element_is_exactly_representable() {
+        let x = [1.0f32, -0.5, 0.25, 127.0];
+        let y = quant_roundtrip(&x, 8);
+        assert!((y[3] - 127.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn storage_and_compression_accounting() {
+        // Exact accounting: FP16 key (d_k=64) = 128 B; INT8 = 64 B (2x),
+        // INT4 = 32 B (4x). NOTE: the paper's Table 1 lists INT8 = 8x/16 B
+        // and INT4 = 16x/8 B, which is arithmetically inconsistent with
+        // d_k=64 scalar quantization; we report exact bytes and flag the
+        // discrepancy in EXPERIMENTS.md (the qualitative shape — scalar
+        // methods cannot reach the >=32x regime — is unchanged, indeed
+        // strengthened).
+        assert_eq!(bytes_per_token(64, 8), 64);
+        assert_eq!(bytes_per_token(64, 4), 32);
+        assert_eq!(compression_ratio(8), 2.0);
+        assert_eq!(compression_ratio(4), 4.0);
+        let q = quantize_symmetric(&vec![1.0; 64], 8);
+        assert_eq!(q.storage_bytes(), 64);
+        let q4 = quantize_symmetric(&vec![1.0; 64], 4);
+        assert_eq!(q4.storage_bytes(), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "only INT4/INT8")]
+    fn rejects_unsupported_bits() {
+        quantize_symmetric(&[1.0], 2);
+    }
+}

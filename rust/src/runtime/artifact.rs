@@ -1,0 +1,215 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime. The manifest fully describes each lowered graph's
+//! inputs/outputs, so the loader never guesses shapes.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::util::json::Json;
+
+/// Dtype + shape of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Option<TensorSpec> {
+        Some(TensorSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Option<Vec<_>>>()?,
+            dtype: j.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT-lowered graph.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    /// Integer meta field accessor (e.g. "L", "m", "H").
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key)?.as_usize()
+    }
+
+    pub fn kind(&self) -> &str {
+        self.meta
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .unwrap_or("unknown")
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json parse")?;
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_usize())
+            .context("manifest version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .context("manifest artifacts")?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let parse_specs = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                a.get(key)
+                    .and_then(|x| x.as_arr())
+                    .context("artifact specs")?
+                    .iter()
+                    .map(|t| {
+                        TensorSpec::from_json(t).context("bad tensor spec")
+                    })
+                    .collect()
+            };
+            artifacts.push(ArtifactSpec {
+                name: a
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .context("artifact name")?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .and_then(|n| n.as_str())
+                    .context("artifact file")?
+                    .to_string(),
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+                meta: a.get("meta").cloned().unwrap_or(Json::obj()),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts of a given meta `kind`.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts.iter().filter(|a| a.kind() == kind).collect()
+    }
+
+    /// Find the attention artifact for (kind, L) — e.g. the decode-step
+    /// graph for a padded cache length.
+    pub fn attn_for(&self, kind: &str, l: usize, m: Option<usize>)
+        -> Option<&ArtifactSpec>
+    {
+        self.artifacts.iter().find(|a| {
+            a.kind() == kind
+                && a.meta_usize("L") == Some(l)
+                && (m.is_none() || a.meta_usize("m") == m)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "attn_fp16_L128", "file": "attn_fp16_L128.hlo.txt",
+         "inputs": [
+           {"name": "q", "shape": [12, 64], "dtype": "float32"},
+           {"name": "k", "shape": [12, 128, 64], "dtype": "float32"}],
+         "outputs": [{"name": "out", "shape": [12, 64],
+                      "dtype": "float32"}],
+         "meta": {"kind": "attn_fp16", "H": 12, "d_k": 64, "L": 128}},
+        {"name": "attn_lookat_m4_L128", "file": "x.hlo.txt",
+         "inputs": [{"name": "codes", "shape": [12, 128, 4],
+                     "dtype": "int32"}],
+         "outputs": [{"name": "out", "shape": [12, 64],
+                      "dtype": "float32"}],
+         "meta": {"kind": "attn_lookat", "L": 128, "m": 4}}
+      ]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("attn_fp16_L128").unwrap();
+        assert_eq!(a.inputs[1].shape, vec![12, 128, 64]);
+        assert_eq!(a.inputs[1].elements(), 12 * 128 * 64);
+        assert_eq!(a.kind(), "attn_fp16");
+        assert_eq!(a.meta_usize("L"), Some(128));
+    }
+
+    #[test]
+    fn lookup_by_kind_and_shape() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.by_kind("attn_lookat").len(), 1);
+        assert!(m.attn_for("attn_fp16", 128, None).is_some());
+        assert!(m.attn_for("attn_fp16", 512, None).is_none());
+        assert!(m.attn_for("attn_lookat", 128, Some(4)).is_some());
+        assert!(m.attn_for("attn_lookat", 128, Some(8)).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 99");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(Path::new("/tmp"), "{}").is_err());
+        assert!(Manifest::parse(
+            Path::new("/tmp"),
+            r#"{"version": 1, "artifacts": [{"name": "x"}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn load_real_manifest_if_built() {
+        // integration hook: validates against the real artifacts dir when
+        // `make artifacts` has run (skips silently otherwise)
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() >= 5);
+            for a in &m.artifacts {
+                assert!(dir.join(&a.file).exists(), "{} missing", a.file);
+            }
+        }
+    }
+}

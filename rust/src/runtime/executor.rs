@@ -1,0 +1,173 @@
+//! The executor: PJRT CPU client + lazily-compiled executable registry.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use super::artifact::{ArtifactSpec, Manifest};
+
+/// Typed input argument for an artifact execution.
+pub enum InputArg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl InputArg<'_> {
+    fn len(&self) -> usize {
+        match self {
+            InputArg::F32(d) => d.len(),
+            InputArg::I32(d) => d.len(),
+        }
+    }
+
+    fn dtype(&self) -> &'static str {
+        match self {
+            InputArg::F32(_) => "float32",
+            InputArg::I32(_) => "int32",
+        }
+    }
+
+    fn to_literal(&self, shape: &[usize]) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            InputArg::F32(d) => xla::Literal::vec1(d),
+            InputArg::I32(d) => xla::Literal::vec1(d),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// PJRT runtime over one artifacts directory.
+///
+/// Executables compile lazily on first use and are cached for the process
+/// lifetime — python is never involved (`make artifacts` already ran).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (must contain manifest.json).
+    pub fn open(dir: &Path) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client =
+            xla::PjRtClient::cpu().context("PJRT CPU client init")?;
+        crate::log_info!(
+            "PJRT client up: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Runtime { client, manifest, executables: HashMap::new() })
+    }
+
+    /// Default artifacts directory (repo-root/artifacts), if built.
+    pub fn open_default() -> anyhow::Result<Runtime> {
+        Self::open(&default_artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Ensure an artifact is compiled; returns its spec.
+    pub fn load(&mut self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        if !self.executables.contains_key(name) {
+            let spec = self
+                .manifest
+                .get(name)
+                .with_context(|| format!("unknown artifact '{name}'"))?
+                .clone();
+            let path = self.manifest.dir.join(&spec.file);
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            crate::log_info!(
+                "compiled {name} in {:.1} ms",
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(self.manifest.get(name).unwrap())
+    }
+
+    /// Execute an artifact with shape/dtype validation against the
+    /// manifest. Returns one flat f32 vector per declared output.
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[InputArg<'_>],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        let spec = self.manifest.get(name).unwrap().clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (arg, ispec) in inputs.iter().zip(&spec.inputs) {
+            if arg.len() != ispec.elements() {
+                bail!(
+                    "{name}.{}: expected {} elements {:?}, got {}",
+                    ispec.name,
+                    ispec.elements(),
+                    ispec.shape,
+                    arg.len()
+                );
+            }
+            if arg.dtype() != ispec.dtype {
+                bail!(
+                    "{name}.{}: dtype {} != {}",
+                    ispec.name,
+                    arg.dtype(),
+                    ispec.dtype
+                );
+            }
+            literals.push(arg.to_literal(&ispec.shape)?);
+        }
+        let exe = self.executables.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+        if tuple.len() != spec.outputs.len() {
+            bail!(
+                "{name}: graph returned {} outputs, manifest says {}",
+                tuple.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(tuple.len());
+        for (lit, ospec) in tuple.into_iter().zip(&spec.outputs) {
+            let v: Vec<f32> = lit.to_vec()?;
+            if v.len() != ospec.elements() {
+                bail!(
+                    "{name}.{}: output has {} elements, expected {}",
+                    ospec.name,
+                    v.len(),
+                    ospec.elements()
+                );
+            }
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+
+    /// Names of artifacts compiled so far.
+    pub fn loaded(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// `<repo>/artifacts` resolved from the crate manifest dir.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `make artifacts` and executes them from the rust hot path.
+//!
+//! Interchange is HLO *text* — jax ≥0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+mod artifact;
+mod executor;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use executor::{default_artifacts_dir, InputArg, Runtime};

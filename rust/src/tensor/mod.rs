@@ -1,0 +1,101 @@
+//! Minimal f32 tensor substrate powering the pure-rust model and the
+//! experiment harness.
+//!
+//! Row-major dense tensors with the handful of ops a GPT-2-style forward
+//! needs: blocked matmul, bias add, layernorm, GELU, softmax, transpose.
+//! The matmul is cache-blocked and written so LLVM auto-vectorizes the
+//! inner kernel (see `matmul` and rust/benches/micro_hotpaths.rs).
+
+mod ops;
+mod tensor2;
+
+pub use ops::{gelu_inplace, layernorm, softmax_inplace, softmax_rows};
+pub use tensor2::Tensor2;
+
+/// Dot product of two equal-length slices (unrolled for autovectorization).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        // 8-wide partial sums: LLVM lowers this to SIMD fma on x86-64.
+        for j in 0..8 {
+            acc[j] += a[i + j] * b[i + j];
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * *xi;
+    }
+}
+
+/// Euclidean norm.
+pub fn norm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+/// Squared L2 distance between two slices.
+#[inline]
+pub fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..100).map(|i| i as f32 * 0.1).collect();
+        let b: Vec<f32> = (0..100).map(|i| (i as f32 * 0.05).sin()).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn dot_handles_short_and_unaligned() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(dot(&[2.0], &[3.0]), 6.0);
+        let a = [1.0; 13];
+        let b = [2.0; 13];
+        assert_eq!(dot(&a, &b), 26.0);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut y = vec![1.0, 2.0];
+        axpy(&mut y, 0.5, &[4.0, 8.0]);
+        assert_eq!(y, vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn dist2_basic() {
+        assert_eq!(dist2(&[0.0, 3.0], &[4.0, 0.0]), 25.0);
+        assert_eq!(dist2(&[1.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn norm2_basic() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,134 @@
+//! Elementwise / normalization ops for the pure-rust transformer.
+
+use super::Tensor2;
+
+/// Numerically-stable in-place softmax over a single slice.
+pub fn softmax_inplace(x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let mx = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Row-wise softmax of a matrix (attention weights over each query row).
+pub fn softmax_rows(t: &mut Tensor2) {
+    for r in 0..t.rows {
+        softmax_inplace(t.row_mut(r));
+    }
+}
+
+/// LayerNorm over the last axis: (x - mean)/sqrt(var + eps) * g + b.
+pub fn layernorm(x: &[f32], g: &[f32], b: &[f32], eps: f32) -> Vec<f32> {
+    assert_eq!(x.len(), g.len());
+    assert_eq!(x.len(), b.len());
+    let n = x.len() as f32;
+    let mean = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let inv = 1.0 / (var + eps).sqrt();
+    x.iter()
+        .zip(g.iter().zip(b.iter()))
+        .map(|(v, (gi, bi))| (v - mean) * inv * gi + bi)
+        .collect()
+}
+
+/// GPT-2's tanh-approximation GELU, in place.
+/// Must match python/compile/model.py::gelu bit-for-bit in formula.
+pub fn gelu_inplace(x: &mut [f32]) {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    for v in x.iter_mut() {
+        let u = *v;
+        *v = 0.5 * u * (1.0 + (C * (u + 0.044715 * u * u * u)).tanh());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut x = vec![1000.0, 1001.0, 999.0]; // would overflow naive exp
+        softmax_inplace(&mut x);
+        let sum: f32 = x.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(x[1] > x[0] && x[0] > x[2]);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn softmax_uniform_for_equal_inputs() {
+        let mut x = vec![3.0; 5];
+        softmax_inplace(&mut x);
+        for v in &x {
+            assert!((v - 0.2).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_empty_is_noop() {
+        let mut x: Vec<f32> = vec![];
+        softmax_inplace(&mut x);
+        assert!(x.is_empty());
+    }
+
+    #[test]
+    fn softmax_rows_normalizes_each_row() {
+        let mut t = Tensor2::from_vec(2, 3, vec![1., 2., 3., 0., 0., 10.]);
+        softmax_rows(&mut t);
+        for r in 0..2 {
+            let s: f32 = t.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(t.at(1, 2) > 0.99);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x: Vec<f32> = (0..64).map(|i| i as f32 * 0.5 - 7.0).collect();
+        let g = vec![1.0; 64];
+        let b = vec![0.0; 64];
+        let y = layernorm(&x, &g, &b, 1e-5);
+        let mean: f32 = y.iter().sum::<f32>() / 64.0;
+        let var: f32 = y.iter().map(|v| v * v).sum::<f32>() / 64.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn layernorm_applies_gain_and_bias() {
+        let x = vec![1.0, -1.0];
+        let y = layernorm(&x, &[2.0, 2.0], &[10.0, 10.0], 1e-5);
+        assert!((y[0] - 12.0).abs() < 1e-2);
+        assert!((y[1] - 8.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        // mirror of python/tests/test_model.py::test_gelu_reference_points
+        let mut x = vec![0.0, 3.0, -3.0];
+        gelu_inplace(&mut x);
+        assert_eq!(x[0], 0.0);
+        assert!((x[1] - 2.9964).abs() < 1e-3);
+        assert!((x[2] + 0.0036).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_monotone_on_positive_axis() {
+        let mut x: Vec<f32> = (0..100).map(|i| i as f32 * 0.1).collect();
+        let orig = x.clone();
+        gelu_inplace(&mut x);
+        for i in 1..100 {
+            assert!(x[i] >= x[i - 1]);
+            assert!(x[i] <= orig[i]); // gelu(x) <= x for x >= 0
+        }
+    }
+}

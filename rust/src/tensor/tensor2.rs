@@ -1,0 +1,234 @@
+//! Dense row-major 2-D f32 tensor with cache-blocked matmul.
+
+use crate::util::rng::Pcg32;
+
+/// Row-major (rows × cols) f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor2 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor2 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// N(0, sigma^2) initialization.
+    pub fn randn(rows: usize, cols: usize, sigma: f32, rng: &mut Pcg32)
+        -> Self
+    {
+        let data = (0..rows * cols)
+            .map(|_| rng.next_normal(0.0, sigma))
+            .collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Tensor2 {
+        let mut t = Tensor2::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// self (R×K) @ other (K×C) -> (R×C), cache-blocked i-k-j loop order.
+    ///
+    /// The k-j inner loops stream `other` rows sequentially and accumulate
+    /// into the output row, which LLVM vectorizes; blocking keeps the
+    /// working set in L1/L2. This is the pure-rust model's hot matmul.
+    pub fn matmul(&self, other: &Tensor2) -> Tensor2 {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (r_n, k_n, c_n) = (self.rows, self.cols, other.cols);
+        let mut out = Tensor2::zeros(r_n, c_n);
+        const KB: usize = 64; // k-block: other-rows chunk resident in L1
+        for k0 in (0..k_n).step_by(KB) {
+            let k1 = (k0 + KB).min(k_n);
+            for r in 0..r_n {
+                let arow = self.row(r);
+                let orow = out.row_mut(r);
+                for k in k0..k1 {
+                    let a = arow[k];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[k * c_n..(k + 1) * c_n];
+                    super::axpy(orow, a, brow);
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product: self (R×C) @ x (C) -> (R).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows).map(|r| super::dot(self.row(r), x)).collect()
+    }
+
+    /// Vector–matrix product: x (R) @ self (R×C) -> (C).
+    /// Streams rows (sequential access) instead of striding columns.
+    pub fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.rows, x.len());
+        let mut out = vec![0.0f32; self.cols];
+        for (r, &xv) in x.iter().enumerate() {
+            if xv != 0.0 {
+                super::axpy(&mut out, xv, self.row(r));
+            }
+        }
+        out
+    }
+
+    /// Add a row-broadcast bias in place.
+    pub fn add_bias(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols);
+        for r in 0..self.rows {
+            for (v, b) in self.row_mut(r).iter_mut().zip(bias) {
+                *v += *b;
+            }
+        }
+    }
+
+    /// Frobenius norm (tests / debugging).
+    pub fn fro_norm(&self) -> f32 {
+        super::dot(&self.data, &self.data).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Tensor2, b: &Tensor2) -> Tensor2 {
+        let mut out = Tensor2::zeros(a.rows, b.cols);
+        for r in 0..a.rows {
+            for c in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(r, k) * b.at(k, c);
+                }
+                out.set(r, c, s);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg32::seed(1);
+        for (r, k, c) in [(3, 4, 5), (17, 33, 9), (64, 128, 64), (1, 70, 1)] {
+            let a = Tensor2::randn(r, k, 1.0, &mut rng);
+            let b = Tensor2::randn(k, c, 1.0, &mut rng);
+            let got = a.matmul(&b);
+            let want = naive_matmul(&a, &b);
+            for i in 0..got.data.len() {
+                assert!(
+                    (got.data[i] - want.data[i]).abs() < 1e-3,
+                    "mismatch at {i}: {} vs {}",
+                    got.data[i],
+                    want.data[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg32::seed(2);
+        let a = Tensor2::randn(8, 8, 1.0, &mut rng);
+        let mut eye = Tensor2::zeros(8, 8);
+        for i in 0..8 {
+            eye.set(i, i, 1.0);
+        }
+        let out = a.matmul(&eye);
+        for i in 0..64 {
+            assert!((out.data[i] - a.data[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_shape_mismatch_panics() {
+        let a = Tensor2::zeros(2, 3);
+        let b = Tensor2::zeros(4, 2);
+        let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn matvec_and_vecmat_consistent_with_matmul() {
+        let mut rng = Pcg32::seed(3);
+        let a = Tensor2::randn(6, 9, 1.0, &mut rng);
+        let x: Vec<f32> = (0..9).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let xcol = Tensor2::from_vec(9, 1, x.clone());
+        let want = a.matmul(&xcol);
+        let got = a.matvec(&x);
+        for i in 0..6 {
+            assert!((got[i] - want.data[i]).abs() < 1e-4);
+        }
+
+        let y: Vec<f32> = (0..6).map(|i| (i as f32).cos()).collect();
+        let yrow = Tensor2::from_vec(1, 6, y.clone());
+        let want2 = yrow.matmul(&a);
+        let got2 = a.vecmat(&y);
+        for i in 0..9 {
+            assert!((got2[i] - want2.data[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg32::seed(4);
+        let a = Tensor2::randn(5, 7, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().at(3, 2), a.at(2, 3));
+    }
+
+    #[test]
+    fn add_bias_broadcasts() {
+        let mut a = Tensor2::zeros(2, 3);
+        a.add_bias(&[1.0, 2.0, 3.0]);
+        assert_eq!(a.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(a.row(1), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn randn_statistics() {
+        let mut rng = Pcg32::seed(5);
+        let t = Tensor2::randn(100, 100, 2.0, &mut rng);
+        let mean: f32 = t.data.iter().sum::<f32>() / 10_000.0;
+        let var: f32 =
+            t.data.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+                / 10_000.0;
+        assert!(mean.abs() < 0.1);
+        assert!((var - 4.0).abs() < 0.3);
+    }
+}

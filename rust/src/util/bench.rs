@@ -1,0 +1,262 @@
+//! Benchmark harness (criterion is not vendored offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warmup, timed iterations, median + MAD reporting, derived throughput,
+//! and a black-box sink to stop the optimizer deleting the benchmarked
+//! work. Results can be serialized through [`crate::util::json`].
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Prevent dead-code elimination of a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// wall-clock per iteration, seconds
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub mean_s: f64,
+    pub iters: usize,
+    /// optional items-per-iteration for throughput derivation
+    pub items_per_iter: Option<f64>,
+    /// optional bytes-per-iteration
+    pub bytes_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    pub fn throughput_items_per_s(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.median_s)
+    }
+
+    pub fn throughput_gb_per_s(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|b| b / self.median_s / 1e9)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(self.name.clone()));
+        o.set("median_s", Json::Num(self.median_s));
+        o.set("mad_s", Json::Num(self.mad_s));
+        o.set("mean_s", Json::Num(self.mean_s));
+        o.set("iters", Json::Num(self.iters as f64));
+        if let Some(t) = self.throughput_items_per_s() {
+            o.set("items_per_s", Json::Num(t));
+        }
+        if let Some(t) = self.throughput_gb_per_s() {
+            o.set("gb_per_s", Json::Num(t));
+        }
+        o
+    }
+
+    /// One human line, criterion-style.
+    pub fn pretty(&self) -> String {
+        let mut s = format!(
+            "{:44} {:>12}  ±{:>10}",
+            self.name,
+            fmt_duration(self.median_s),
+            fmt_duration(self.mad_s)
+        );
+        if let Some(t) = self.throughput_items_per_s() {
+            s.push_str(&format!("  {:>12.3} Melem/s", t / 1e6));
+        }
+        if let Some(t) = self.throughput_gb_per_s() {
+            s.push_str(&format!("  {t:>8.3} GB/s"));
+        }
+        s
+    }
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Bench runner with a time budget per benchmark.
+pub struct Bench {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fast settings for CI / tests.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(10),
+            budget: Duration::from_millis(100),
+            min_iters: 3,
+            max_iters: 1000,
+            ..Default::default()
+        }
+    }
+
+    /// Time `f`, which must do one unit of benchmarked work per call.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
+        self.run_with(name, None, None, &mut f)
+    }
+
+    /// Time `f` and derive items/s throughput.
+    pub fn run_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: F,
+    ) -> &Measurement {
+        self.run_with(name, Some(items), None, &mut f)
+    }
+
+    /// Time `f` and derive both items/s and GB/s.
+    pub fn run_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items: f64,
+        bytes: f64,
+        mut f: F,
+    ) -> &Measurement {
+        self.run_with(name, Some(items), Some(bytes), &mut f)
+    }
+
+    fn run_with(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        bytes: Option<f64>,
+        f: &mut dyn FnMut(),
+    ) -> &Measurement {
+        // warmup + per-iteration cost estimate
+        let wstart = Instant::now();
+        let mut witers = 0usize;
+        while wstart.elapsed() < self.warmup || witers == 0 {
+            f();
+            witers += 1;
+            if witers >= self.max_iters {
+                break;
+            }
+        }
+        let est = wstart.elapsed().as_secs_f64() / witers as f64;
+        let target_iters = ((self.budget.as_secs_f64() / est.max(1e-9))
+            as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut times = Vec::with_capacity(target_iters);
+        for _ in 0..target_iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            median_s: stats::median(&times),
+            mad_s: stats::mad(&times),
+            mean_s: times.iter().sum::<f64>() / times.len() as f64,
+            iters: target_iters,
+            items_per_iter: items,
+            bytes_per_iter: bytes,
+        };
+        println!("{}", m.pretty());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Serialize all results (for artifacts/reports/).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.results.iter().map(|m| m.to_json()).collect())
+    }
+
+    /// Write results JSON to `artifacts/reports/<name>.json`.
+    pub fn write_report(&self, name: &str) -> std::io::Result<()> {
+        let dir = std::path::Path::new("artifacts/reports");
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(
+            dir.join(format!("{name}.json")),
+            self.to_json().to_string_pretty(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let mut b = Bench::quick();
+        let mut acc = 0u64;
+        let m = b
+            .run("noop-ish", || {
+                acc = black_box(acc.wrapping_add(1));
+            })
+            .clone();
+        assert!(m.median_s >= 0.0);
+        assert!(m.iters >= 3);
+    }
+
+    #[test]
+    fn throughput_derivation() {
+        let m = Measurement {
+            name: "x".into(),
+            median_s: 0.5,
+            mad_s: 0.0,
+            mean_s: 0.5,
+            iters: 10,
+            items_per_iter: Some(1000.0),
+            bytes_per_iter: Some(2e9),
+        };
+        assert_eq!(m.throughput_items_per_s(), Some(2000.0));
+        assert_eq!(m.throughput_gb_per_s(), Some(4.0));
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert!(fmt_duration(2.0).ends_with(" s"));
+        assert!(fmt_duration(2e-3).ends_with(" ms"));
+        assert!(fmt_duration(2e-6).ends_with(" µs"));
+        assert!(fmt_duration(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn json_output_has_fields() {
+        let mut b = Bench::quick();
+        b.run_items("t", 10.0, || {
+            black_box(1 + 1);
+        });
+        let j = b.to_json();
+        let first = j.idx(0).unwrap();
+        assert!(first.get("median_s").is_some());
+        assert!(first.get("items_per_s").is_some());
+    }
+}

@@ -1,0 +1,324 @@
+//! Tiny declarative CLI argument parser (clap is not vendored offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, and positional arguments. Produces a usage string.
+
+use std::collections::BTreeMap;
+
+/// Declared option (always string-typed at parse time; accessors convert).
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    default: Option<String>,
+    help: String,
+    is_flag: bool,
+}
+
+/// A declarative command-line spec for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub program: String,
+    pub about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>, // (name, help)
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("missing required positional <{0}>")]
+    MissingPositional(String),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(String, String),
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            default: Some(default.to_string()),
+            help: help.to_string(),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required `--name <value>` (no default).
+    pub fn opt_required(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            default: None,
+            help: help.to_string(),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            default: None,
+            help: help.to_string(),
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Declare a required positional argument.
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    /// Render a usage/help string.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program,
+                            self.about, self.program);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        if !self.opts.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        s.push('\n');
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let left = if o.is_flag {
+                    format!("--{}", o.name)
+                } else if let Some(d) = &o.default {
+                    format!("--{} <v> (default {d})", o.name)
+                } else {
+                    format!("--{} <v> (required)", o.name)
+                };
+                s.push_str(&format!("  {left:36} {}\n", o.help));
+            }
+        }
+        s
+    }
+
+    /// Parse a token list (no program name).
+    pub fn parse(&self, tokens: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        // seed defaults
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+            if o.is_flag {
+                args.flags.insert(o.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.is_flag {
+                    args.flags.insert(name, true);
+                } else if let Some(v) = inline {
+                    args.values.insert(name, v);
+                } else {
+                    i += 1;
+                    let v = tokens
+                        .get(i)
+                        .ok_or_else(|| CliError::MissingValue(name.clone()))?;
+                    args.values.insert(name, v.clone());
+                }
+            } else {
+                args.positionals.push(t.clone());
+            }
+            i += 1;
+        }
+        // required options & positionals
+        for o in &self.opts {
+            if !o.is_flag && !args.values.contains_key(&o.name) {
+                return Err(CliError::MissingValue(o.name.clone()));
+            }
+        }
+        if args.positionals.len() < self.positionals.len() {
+            return Err(CliError::MissingPositional(
+                self.positionals[args.positionals.len()].0.clone(),
+            ));
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("undeclared option --{name}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError::Invalid(name.into(), self.get(name).into()))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError::Invalid(name.into(), self.get(name).into()))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError::Invalid(name.into(), self.get(name).into()))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+
+    /// Parse a comma-separated list of usize, e.g. "2,4,8".
+    pub fn get_usize_list(&self, name: &str) -> Result<Vec<usize>, CliError> {
+        self.get(name)
+            .split(',')
+            .map(|t| {
+                t.trim().parse().map_err(|_| {
+                    CliError::Invalid(name.into(), self.get(name).into())
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(x: &str) -> String {
+        x.to_string()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("test", "a test command")
+            .opt("depth", "4", "model depth")
+            .opt("name", "gpt", "model name")
+            .flag("verbose", "chatty output")
+            .opt_required("out", "output path")
+            .positional("input", "input file")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli()
+            .parse(&[s("--out"), s("/tmp/x"), s("file.txt")])
+            .unwrap();
+        assert_eq!(a.get_usize("depth").unwrap(), 4);
+        assert_eq!(a.get("name"), "gpt");
+        assert!(!a.get_flag("verbose"));
+        assert_eq!(a.positionals, vec![s("file.txt")]);
+    }
+
+    #[test]
+    fn overrides_and_flags() {
+        let a = cli()
+            .parse(&[
+                s("--depth=12"),
+                s("--verbose"),
+                s("--out"),
+                s("o"),
+                s("in"),
+            ])
+            .unwrap();
+        assert_eq!(a.get_usize("depth").unwrap(), 12);
+        assert!(a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_and_space_syntax_equivalent() {
+        let a = cli()
+            .parse(&[s("--name"), s("abc"), s("--out=o"), s("in")])
+            .unwrap();
+        assert_eq!(a.get("name"), "abc");
+        assert_eq!(a.get("out"), "o");
+    }
+
+    #[test]
+    fn missing_required_option_errors() {
+        let e = cli().parse(&[s("in")]).unwrap_err();
+        assert!(matches!(e, CliError::MissingValue(n) if n == "out"));
+    }
+
+    #[test]
+    fn missing_positional_errors() {
+        let e = cli().parse(&[s("--out"), s("o")]).unwrap_err();
+        assert!(matches!(e, CliError::MissingPositional(n) if n == "input"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = cli()
+            .parse(&[s("--bogus"), s("--out"), s("o"), s("in")])
+            .unwrap_err();
+        assert!(matches!(e, CliError::Unknown(n) if n == "bogus"));
+    }
+
+    #[test]
+    fn value_missing_at_end_errors() {
+        let e = cli().parse(&[s("--out")]).unwrap_err();
+        assert!(matches!(e, CliError::MissingValue(_)));
+    }
+
+    #[test]
+    fn usize_list() {
+        let c = Cli::new("t", "t").opt("ms", "2,4,8", "subspace list");
+        let a = c.parse(&[]).unwrap();
+        assert_eq!(a.get_usize_list("ms").unwrap(), vec![2, 4, 8]);
+    }
+
+    #[test]
+    fn usage_mentions_everything() {
+        let u = cli().usage();
+        assert!(u.contains("--depth"));
+        assert!(u.contains("<input>"));
+        assert!(u.contains("(required)"));
+    }
+
+    #[test]
+    fn bad_numeric_value_errors() {
+        let c = Cli::new("t", "t").opt("n", "1", "num");
+        let a = c.parse(&[s("--n"), s("xyz")]).unwrap();
+        assert!(a.get_usize("n").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! From-scratch substrates for everything the offline image does not
+//! vendor: RNG, JSON, CLI parsing, thread pool, benchmarking, statistics,
+//! logging and a miniature property-testing framework.
+//!
+//! These are deliberately small, dependency-free and fully unit-tested —
+//! see DESIGN.md §Environment constraints.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

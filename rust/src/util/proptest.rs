@@ -1,0 +1,192 @@
+//! Miniature property-testing framework (the real proptest crate is not
+//! vendored offline).
+//!
+//! A property is a closure over a [`Gen`] (seeded RNG wrapper with value
+//! generators). [`check`] runs it for N seeded cases; on failure it
+//! reports the failing case index and seed so the case can be replayed
+//! deterministically with [`replay`].
+
+use crate::util::rng::Pcg32;
+
+/// Value generators for one property-test case.
+pub struct Gen {
+    pub rng: Pcg32,
+    pub case: usize,
+}
+
+impl Gen {
+    /// usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.next_bounded((hi - lo + 1) as u32) as usize
+    }
+
+    /// f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.next_range_f32(lo, hi)
+    }
+
+    /// Standard-normal f32 vector of length n.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.next_f32_std()).collect()
+    }
+
+    /// Uniform f32 vector in [lo, hi).
+    pub fn uniform_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.next_range_f32(lo, hi)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_bounded(xs.len() as u32) as usize]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+}
+
+/// Outcome of a property over many cases.
+#[derive(Debug)]
+pub struct PropResult {
+    pub cases: usize,
+    pub failure: Option<PropFailure>,
+}
+
+#[derive(Debug)]
+pub struct PropFailure {
+    pub case: usize,
+    pub seed: u64,
+    pub message: String,
+}
+
+/// Run `prop` for `cases` seeded cases. Return Err-like result on first
+/// failure (panics are caught so the failing seed is always reported).
+pub fn check<F>(
+    name: &str,
+    cases: usize,
+    base_seed: u64,
+    mut prop: F,
+) -> PropResult
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || {
+                let mut g = Gen { rng: Pcg32::seed(seed), case };
+                prop(&mut g)
+            },
+        ));
+        let failed = match outcome {
+            Ok(Ok(())) => None,
+            Ok(Err(msg)) => Some(msg),
+            Err(p) => Some(format!(
+                "panic: {}",
+                p.downcast_ref::<&str>().copied().unwrap_or("<non-str>")
+            )),
+        };
+        if let Some(message) = failed {
+            return PropResult {
+                cases,
+                failure: Some(PropFailure { case, seed, message }),
+            };
+        }
+    }
+    let _ = name;
+    PropResult { cases, failure: None }
+}
+
+/// Re-run a single failing case by seed (debugging helper).
+pub fn replay<F>(seed: u64, prop: F) -> Result<(), String>
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen { rng: Pcg32::seed(seed), case: 0 };
+    prop(&mut g)
+}
+
+/// Assert a property holds; formats the failing seed into the panic.
+#[macro_export]
+macro_rules! prop_assert {
+    ($name:expr, $cases:expr, $prop:expr) => {{
+        let r = $crate::util::proptest::check($name, $cases, 0xC0FFEE, $prop);
+        if let Some(f) = r.failure {
+            panic!(
+                "property '{}' failed at case {}/{} (replay seed {:#x}): {}",
+                $name, f.case, r.cases, f.seed, f.message
+            );
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_assert!("add-commutes", 50, |g: &mut Gen| {
+            let a = g.f32_in(-10.0, 10.0);
+            let b = g.f32_in(-10.0, 10.0);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = check("always-fails", 10, 42, |_g| Err("nope".into()));
+        let f = r.failure.expect("should fail");
+        assert_eq!(f.case, 0);
+        assert!(f.message.contains("nope"));
+        // the reported seed replays to the same failure
+        assert!(replay(f.seed, |_g| Err::<(), _>("nope".into())).is_err());
+    }
+
+    #[test]
+    fn panicking_property_is_caught() {
+        let r = check("panics", 5, 7, |g| {
+            if g.case == 3 {
+                panic!("boom");
+            }
+            Ok(())
+        });
+        let f = r.failure.expect("should fail");
+        assert_eq!(f.case, 3);
+        assert!(f.message.contains("panic"));
+    }
+
+    #[test]
+    fn generators_in_range() {
+        let mut g = Gen { rng: Pcg32::seed(1), case: 0 };
+        for _ in 0..1000 {
+            let u = g.usize_in(3, 9);
+            assert!((3..=9).contains(&u));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        let v = g.normal_vec(100);
+        assert_eq!(v.len(), 100);
+        let picked = *g.choose(&[1, 2, 3]);
+        assert!([1, 2, 3].contains(&picked));
+    }
+
+    #[test]
+    fn cases_are_deterministic_for_same_base_seed() {
+        let collect = |base| {
+            let mut vals = Vec::new();
+            check("det", 5, base, |g| {
+                vals.push(g.rng.next_u32());
+                Ok(())
+            });
+            vals
+        };
+        assert_eq!(collect(9), collect(9));
+        assert_ne!(collect(9), collect(10));
+    }
+}

@@ -1,0 +1,229 @@
+//! Minimal work-stealing-free thread pool + scoped parallel-for.
+//!
+//! tokio is not vendored in the offline image; the coordinator's event
+//! loop and the experiment harness use this instead. The pool owns N
+//! worker threads fed from a shared MPMC queue built on std primitives.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<std::collections::VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: Mutex<bool>,
+    inflight: AtomicUsize,
+    done_cv: Condvar,
+    done_mx: Mutex<()>,
+}
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `n` workers (n >= 1).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: Mutex::new(false),
+            inflight: AtomicUsize::new(0),
+            done_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("lookat-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Pool sized to available parallelism.
+    pub fn with_default_size() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Box::new(f));
+        }
+        self.shared.cv.notify_one();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.done_mx.lock().unwrap();
+        while self.shared.inflight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.done_cv.wait(guard).unwrap();
+        }
+    }
+
+    /// Number of queued-or-running jobs.
+    pub fn inflight(&self) -> usize {
+        self.shared.inflight.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if *sh.shutdown.lock().unwrap() {
+                    return;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        job();
+        if sh.inflight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _g = sh.done_mx.lock().unwrap();
+            sh.done_cv.notify_all();
+        }
+    }
+}
+
+/// Run `f(i)` for i in 0..n, chunked across up to `threads` scoped threads,
+/// writing results into the returned Vec. Uses std::thread::scope, so `f`
+/// only needs to be Sync (no 'static bound).
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    let mut out = vec![T::default(); n];
+    if n == 0 {
+        return out;
+    }
+    if threads == 1 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = f(i);
+        }
+        return out;
+    }
+    let chunk = n.div_ceil(threads);
+    let fref = &f;
+    std::thread::scope(|s| {
+        for (t, slice) in out.chunks_mut(chunk).enumerate() {
+            s.spawn(move || {
+                for (j, slot) in slice.iter_mut().enumerate() {
+                    *slot = fref(t * chunk + j);
+                }
+            });
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle(); // must not deadlock
+        assert_eq!(pool.inflight(), 0);
+    }
+
+    #[test]
+    fn jobs_can_be_submitted_after_wait() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for round in 0..3 {
+            for _ in 0..10 {
+                let c = counter.clone();
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.wait_idle();
+            assert_eq!(counter.load(Ordering::SeqCst), (round + 1) * 10);
+        }
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must not hang
+        // jobs may or may not all have run before shutdown flag is seen,
+        // but the queued ones before drop had inflight ticks; just ensure
+        // no deadlock occurred to get here.
+    }
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let got = parallel_map(1000, 8, |i| i * i);
+        let want: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_map_empty_and_single() {
+        assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(1, 4, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn parallel_map_single_thread_path() {
+        let got = parallel_map(64, 1, |i| i as f64 * 0.5);
+        assert_eq!(got[63], 31.5);
+    }
+}

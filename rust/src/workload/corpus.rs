@@ -1,0 +1,253 @@
+//! Synthetic text corpora with per-genre statistics.
+//!
+//! The paper evaluates on three text types (natural prose, Python code,
+//! technical writing) whose role is to vary the key-vector statistics the
+//! PQ codebooks must capture. Offline we generate deterministic synthetic
+//! corpora with clearly distinct distributions:
+//!
+//!   * Prose     — Zipf-distributed word vocabulary, sentence structure
+//!   * Code      — keyword/identifier/punctuation mix, indentation
+//!   * Technical — prose interleaved with symbols, numbers and citations
+
+use crate::util::rng::Pcg32;
+
+/// Text genre (paper §4.1's three sample types).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Genre {
+    Prose,
+    Code,
+    Technical,
+}
+
+impl Genre {
+    pub const ALL: [Genre; 3] = [Genre::Prose, Genre::Code, Genre::Technical];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Genre::Prose => "prose",
+            Genre::Code => "code",
+            Genre::Technical => "technical",
+        }
+    }
+}
+
+/// A deterministic corpus generator.
+pub struct Corpus {
+    rng: Pcg32,
+    genre: Genre,
+    prose_vocab: Vec<String>,
+}
+
+const PROSE_STEMS: &[&str] = &[
+    "time", "way", "year", "work", "government", "day", "man", "world",
+    "life", "part", "house", "course", "case", "system", "place", "end",
+    "group", "company", "party", "information", "school", "fact", "money",
+    "point", "example", "state", "business", "night", "area", "water",
+    "thing", "family", "head", "hand", "order", "john", "side", "home",
+    "development", "week", "power", "country", "council", "use", "service",
+    "room", "market", "problem", "court", "lot", "a", "the", "of", "and",
+    "to", "in", "is", "was", "it", "for", "with", "he", "be", "on", "i",
+    "that", "by", "at", "you", "are", "his", "had", "not", "this", "have",
+    "from", "but", "which", "she", "they", "or", "an", "were", "we",
+    "their", "been", "has", "will", "one", "all", "would", "can", "if",
+    "who", "more", "when", "so", "no", "out", "up", "into", "them",
+];
+
+const CODE_KEYWORDS: &[&str] = &[
+    "def", "return", "if", "else", "elif", "for", "while", "import",
+    "from", "class", "self", "None", "True", "False", "lambda", "try",
+    "except", "raise", "with", "as", "yield", "assert", "pass", "break",
+    "continue", "in", "not", "and", "or", "is", "print", "len", "range",
+];
+
+const CODE_IDENTS: &[&str] = &[
+    "x", "y", "i", "j", "n", "data", "result", "value", "key", "index",
+    "count", "total", "items", "args", "kwargs", "config", "model",
+    "batch", "layer", "cache", "score", "query", "token", "output",
+];
+
+const TECH_TERMS: &[&str] = &[
+    "algorithm", "theorem", "quantization", "vector", "matrix", "tensor",
+    "subspace", "codebook", "centroid", "softmax", "attention", "latency",
+    "bandwidth", "throughput", "approximation", "correlation", "gradient",
+    "eigenvalue", "manifold", "entropy", "distribution", "probability",
+];
+
+impl Corpus {
+    pub fn new(genre: Genre, seed: u64) -> Self {
+        let rng = Pcg32::seed(seed ^ 0xC0_97_05);
+        let prose_vocab =
+            PROSE_STEMS.iter().map(|s| s.to_string()).collect();
+        Self { rng, genre, prose_vocab }
+    }
+
+    /// Zipf-ish rank sample over [0, n): p(r) ∝ 1/(r+1).
+    fn zipf(&mut self, n: usize) -> usize {
+        let hn: f64 = (1..=n).map(|i| 1.0 / i as f64).sum();
+        let mut target = self.rng.next_f64() * hn;
+        for r in 0..n {
+            target -= 1.0 / (r + 1) as f64;
+            if target <= 0.0 {
+                return r;
+            }
+        }
+        n - 1
+    }
+
+    /// Generate a text of at least `min_chars` characters.
+    pub fn generate(&mut self, min_chars: usize) -> String {
+        let mut out = String::with_capacity(min_chars + 128);
+        while out.len() < min_chars {
+            match self.genre {
+                Genre::Prose => self.push_sentence(&mut out),
+                Genre::Code => self.push_code_line(&mut out),
+                Genre::Technical => self.push_technical(&mut out),
+            }
+        }
+        out
+    }
+
+    fn push_sentence(&mut self, out: &mut String) {
+        let words = 5 + self.rng.next_bounded(12) as usize;
+        for w in 0..words {
+            let r = self.zipf(self.prose_vocab.len());
+            let word = &self.prose_vocab[r];
+            if w == 0 {
+                // capitalize
+                let mut cs = word.chars();
+                if let Some(c) = cs.next() {
+                    out.push(c.to_ascii_uppercase());
+                    out.push_str(cs.as_str());
+                }
+            } else {
+                out.push_str(word);
+            }
+            out.push(if w + 1 == words { '.' } else { ' ' });
+        }
+        out.push(' ');
+    }
+
+    fn push_code_line(&mut self, out: &mut String) {
+        let indent = self.rng.next_bounded(3) as usize;
+        out.push_str(&"    ".repeat(indent));
+        match self.rng.next_bounded(4) {
+            0 => {
+                let f = CODE_IDENTS
+                    [self.rng.next_bounded(CODE_IDENTS.len() as u32) as usize];
+                let a = CODE_IDENTS
+                    [self.rng.next_bounded(CODE_IDENTS.len() as u32) as usize];
+                out.push_str(&format!("def {f}({a}):"));
+            }
+            1 => {
+                let v = CODE_IDENTS
+                    [self.rng.next_bounded(CODE_IDENTS.len() as u32) as usize];
+                let n = self.rng.next_bounded(100);
+                out.push_str(&format!("{v} = {v} + {n}"));
+            }
+            2 => {
+                let kw = CODE_KEYWORDS[self
+                    .rng
+                    .next_bounded(CODE_KEYWORDS.len() as u32)
+                    as usize];
+                let v = CODE_IDENTS
+                    [self.rng.next_bounded(CODE_IDENTS.len() as u32) as usize];
+                out.push_str(&format!("{kw} {v}:"));
+            }
+            _ => {
+                let v = CODE_IDENTS
+                    [self.rng.next_bounded(CODE_IDENTS.len() as u32) as usize];
+                out.push_str(&format!("return {v}"));
+            }
+        }
+        out.push('\n');
+    }
+
+    fn push_technical(&mut self, out: &mut String) {
+        let words = 4 + self.rng.next_bounded(8) as usize;
+        for w in 0..words {
+            match self.rng.next_bounded(5) {
+                0 => {
+                    let t = TECH_TERMS[self
+                        .rng
+                        .next_bounded(TECH_TERMS.len() as u32)
+                        as usize];
+                    out.push_str(t);
+                }
+                1 => {
+                    out.push_str(&format!(
+                        "{}.{}",
+                        self.rng.next_bounded(10),
+                        self.rng.next_bounded(100)
+                    ));
+                }
+                2 => out.push_str(&format!("[{}]", self.rng.next_bounded(30))),
+                _ => {
+                    let r = self.zipf(self.prose_vocab.len());
+                    out.push_str(&self.prose_vocab[r]);
+                }
+            }
+            out.push(if w + 1 == words { '.' } else { ' ' });
+        }
+        out.push(' ');
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Corpus::new(Genre::Prose, 42).generate(500);
+        let b = Corpus::new(Genre::Prose, 42).generate(500);
+        assert_eq!(a, b);
+        let c = Corpus::new(Genre::Prose, 43).generate(500);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn generates_at_least_min_chars() {
+        for g in Genre::ALL {
+            let text = Corpus::new(g, 1).generate(1000);
+            assert!(text.len() >= 1000, "{}: {}", g.name(), text.len());
+        }
+    }
+
+    #[test]
+    fn genres_are_statistically_distinct() {
+        let prose = Corpus::new(Genre::Prose, 7).generate(3000);
+        let code = Corpus::new(Genre::Code, 7).generate(3000);
+        let tech = Corpus::new(Genre::Technical, 7).generate(3000);
+        // code has newlines and defs; prose has none
+        assert!(code.matches('\n').count() > 20);
+        assert!(prose.matches('\n').count() == 0);
+        assert!(code.contains("def "));
+        // technical has digits and brackets far more often than prose
+        let digits = |s: &str| s.chars().filter(|c| c.is_ascii_digit()).count();
+        assert!(digits(&tech) > digits(&prose) * 2 + 10);
+    }
+
+    #[test]
+    fn zipf_head_is_heavy() {
+        let mut c = Corpus::new(Genre::Prose, 9);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..10_000 {
+            counts[c.zipf(100)] += 1;
+        }
+        assert!(counts[0] > counts[50] * 5);
+        assert!(counts[0] > counts[10]);
+    }
+
+    #[test]
+    fn prose_has_sentences() {
+        let text = Corpus::new(Genre::Prose, 11).generate(800);
+        assert!(text.matches('.').count() > 5);
+        // vocabulary is bounded
+        let words: HashSet<&str> = text
+            .split_whitespace()
+            .map(|w| w.trim_end_matches('.'))
+            .collect();
+        assert!(words.len() <= PROSE_STEMS.len() * 2 + 5);
+    }
+}

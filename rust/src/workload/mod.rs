@@ -1,0 +1,9 @@
+//! Workload generation: synthetic text corpora with genre-specific token
+//! statistics (substituting the paper's prose / code / technical samples
+//! — see DESIGN.md) and Poisson request traces for the serving benches.
+
+mod corpus;
+mod trace;
+
+pub use corpus::{Corpus, Genre};
+pub use trace::{RequestSpec, TraceConfig, TraceGenerator};

@@ -1,0 +1,159 @@
+//! Serving request traces: Poisson arrivals with configurable prompt /
+//! generation length distributions. Drives the coordinator benches and
+//! the end-to-end `examples/serve.rs` driver.
+
+use super::corpus::{Corpus, Genre};
+use crate::util::rng::Pcg32;
+
+/// One request in a trace.
+#[derive(Clone, Debug)]
+pub struct RequestSpec {
+    pub id: u64,
+    /// arrival offset from trace start, seconds
+    pub arrival_s: f64,
+    pub genre: Genre,
+    pub prompt: String,
+    /// tokens to generate
+    pub gen_tokens: usize,
+}
+
+/// Trace shape parameters.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// mean arrival rate, requests/second (Poisson)
+    pub rate: f64,
+    pub num_requests: usize,
+    /// prompt length bounds in characters
+    pub prompt_chars: (usize, usize),
+    /// generation length bounds in tokens
+    pub gen_tokens: (usize, usize),
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            rate: 4.0,
+            num_requests: 32,
+            prompt_chars: (200, 800),
+            gen_tokens: (8, 64),
+            seed: 0x7ACE,
+        }
+    }
+}
+
+/// Generates deterministic request traces.
+pub struct TraceGenerator {
+    cfg: TraceConfig,
+    rng: Pcg32,
+    next_id: u64,
+    clock_s: f64,
+}
+
+impl TraceGenerator {
+    pub fn new(cfg: TraceConfig) -> Self {
+        let rng = Pcg32::seed(cfg.seed);
+        Self { cfg, rng, next_id: 0, clock_s: 0.0 }
+    }
+
+    /// Generate the full trace, sorted by arrival time.
+    pub fn generate(&mut self) -> Vec<RequestSpec> {
+        (0..self.cfg.num_requests).map(|_| self.next_request()).collect()
+    }
+
+    /// Generate the next request (arrivals are cumulative exponential
+    /// inter-arrival gaps — a Poisson process).
+    pub fn next_request(&mut self) -> RequestSpec {
+        let gap = self.rng.next_exp(self.cfg.rate);
+        self.clock_s += gap;
+        let id = self.next_id;
+        self.next_id += 1;
+        let genre = *[Genre::Prose, Genre::Code, Genre::Technical]
+            .get(self.rng.next_bounded(3) as usize)
+            .unwrap();
+        let (lo, hi) = self.cfg.prompt_chars;
+        let chars = lo + self.rng.next_bounded((hi - lo + 1) as u32) as usize;
+        let prompt = Corpus::new(genre, self.cfg.seed ^ id).generate(chars);
+        let (glo, ghi) = self.cfg.gen_tokens;
+        let gen_tokens =
+            glo + self.rng.next_bounded((ghi - glo + 1) as u32) as usize;
+        RequestSpec { id, arrival_s: self.clock_s, genre, prompt, gen_tokens }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_sorted() {
+        let cfg = TraceConfig { num_requests: 50, ..Default::default() };
+        let a = TraceGenerator::new(cfg.clone()).generate();
+        let b = TraceGenerator::new(cfg).generate();
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.prompt, y.prompt);
+        }
+        for w in a.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+    }
+
+    #[test]
+    fn arrival_rate_approximately_matches() {
+        let cfg = TraceConfig {
+            rate: 10.0,
+            num_requests: 2000,
+            ..Default::default()
+        };
+        let trace = TraceGenerator::new(cfg).generate();
+        let span = trace.last().unwrap().arrival_s;
+        let measured = 2000.0 / span;
+        assert!(
+            (measured - 10.0).abs() < 1.0,
+            "measured rate {measured}"
+        );
+    }
+
+    #[test]
+    fn lengths_respect_bounds() {
+        let cfg = TraceConfig {
+            prompt_chars: (100, 200),
+            gen_tokens: (5, 9),
+            num_requests: 64,
+            ..Default::default()
+        };
+        for r in TraceGenerator::new(cfg).generate() {
+            assert!(r.prompt.len() >= 100);
+            assert!((5..=9).contains(&r.gen_tokens));
+        }
+    }
+
+    #[test]
+    fn ids_are_sequential() {
+        let trace = TraceGenerator::new(TraceConfig {
+            num_requests: 10,
+            ..Default::default()
+        })
+        .generate();
+        for (i, r) in trace.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn genres_are_mixed() {
+        let trace = TraceGenerator::new(TraceConfig {
+            num_requests: 100,
+            ..Default::default()
+        })
+        .generate();
+        let n_prose = trace.iter().filter(|r| r.genre == Genre::Prose).count();
+        let n_code = trace.iter().filter(|r| r.genre == Genre::Code).count();
+        let n_tech =
+            trace.iter().filter(|r| r.genre == Genre::Technical).count();
+        assert!(n_prose > 10 && n_code > 10 && n_tech > 10);
+    }
+}

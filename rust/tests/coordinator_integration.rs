@@ -1,0 +1,92 @@
+//! End-to-end coordinator integration: serving through the PJRT-executed
+//! AOT artifacts (python-authored, rust-served — the 3-layer contract in
+//! the actual serving loop). Skips when artifacts aren't built.
+
+use lookat::coordinator::{AttentionBackend, Engine, EngineConfig};
+use lookat::model::{ByteTokenizer, ModelConfig};
+use lookat::runtime::default_artifacts_dir;
+
+fn artifacts_built() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+fn paper_cfg(backend: AttentionBackend) -> EngineConfig {
+    EngineConfig {
+        model: ModelConfig::gpt2_layer0(), // H=12, d_k=64: artifact geometry
+        backend,
+        seed: 21,
+        cache_blocks: 64,
+        calib_tokens: 128,
+    }
+}
+
+#[test]
+fn pjrt_fp16_backend_matches_rust_backend_tokens() {
+    if !artifacts_built() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let ids = ByteTokenizer::new().encode("compare the two backends");
+
+    let mut rust_engine =
+        Engine::build(&paper_cfg(AttentionBackend::Fp16Exact)).unwrap();
+    rust_engine.start_seq(1, &ids).unwrap();
+    let rust_toks: Vec<u32> =
+        (0..4).map(|_| rust_engine.decode_one(1).unwrap()).collect();
+
+    let mut pjrt_engine =
+        Engine::build(&paper_cfg(AttentionBackend::PjrtFp16)).unwrap();
+    pjrt_engine.start_seq(1, &ids).unwrap();
+    let pjrt_toks: Vec<u32> =
+        (0..4).map(|_| pjrt_engine.decode_one(1).unwrap()).collect();
+
+    // same weights (same seed), same attention math — same greedy tokens
+    assert_eq!(rust_toks, pjrt_toks);
+}
+
+#[test]
+fn pjrt_lookat_backend_serves_and_matches_rust_lookat() {
+    if !artifacts_built() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let ids = ByteTokenizer::new().encode("lookat through pjrt");
+
+    let mut rust_lk = Engine::build(&paper_cfg(AttentionBackend::Lookat {
+        m: 4,
+        k: 256,
+    }))
+    .unwrap();
+    rust_lk.start_seq(1, &ids).unwrap();
+    let rust_toks: Vec<u32> =
+        (0..3).map(|_| rust_lk.decode_one(1).unwrap()).collect();
+
+    let mut pjrt_lk =
+        Engine::build(&paper_cfg(AttentionBackend::PjrtLookat { m: 4 }))
+            .unwrap();
+    pjrt_lk.start_seq(1, &ids).unwrap();
+    let pjrt_toks: Vec<u32> =
+        (0..3).map(|_| pjrt_lk.decode_one(1).unwrap()).collect();
+
+    // identical codebooks (same seed/calibration) + identical ADC math
+    assert_eq!(rust_toks, pjrt_toks);
+}
+
+#[test]
+fn pjrt_backend_handles_cache_growth_past_first_artifact() {
+    if !artifacts_built() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // prompt + decode pushes past L=128 so the engine must switch to the
+    // L=512 artifact mid-sequence
+    let long_text = "x".repeat(140);
+    let ids = ByteTokenizer::new().encode(&long_text);
+    let mut e =
+        Engine::build(&paper_cfg(AttentionBackend::PjrtFp16)).unwrap();
+    e.start_seq(7, &ids).unwrap();
+    for _ in 0..4 {
+        e.decode_one(7).unwrap();
+    }
+    assert!(e.cache_stats().tokens > 128);
+}

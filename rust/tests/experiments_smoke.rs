@@ -1,0 +1,29 @@
+//! Smoke: every experiment runs end-to-end in --quick mode and writes
+//! its reports. This is the "can a user regenerate the paper" check.
+
+use lookat::experiments;
+
+#[test]
+fn all_experiments_run_quick() {
+    experiments::run("all", true).expect("quick experiment run");
+    let dir = experiments::report::reports_dir();
+    for id in [
+        "table1", "table2", "table3", "table4", "figure3", "figure4",
+        "efficiency", "ablation_values", "ablation_centroids",
+        "ablation_calibration",
+    ] {
+        assert!(
+            dir.join(format!("{id}.md")).exists(),
+            "{id}.md not written"
+        );
+        assert!(
+            dir.join(format!("{id}.json")).exists(),
+            "{id}.json not written"
+        );
+    }
+}
+
+#[test]
+fn unknown_experiment_id_errors() {
+    assert!(experiments::run("table9", true).is_err());
+}

@@ -1,0 +1,233 @@
+//! Integration tests: the three-layer AOT contract.
+//!
+//! Loads the real `artifacts/*.hlo.txt` (jax/pallas-lowered) through the
+//! PJRT CPU client and checks numerics against the pure-rust
+//! implementations. Skips gracefully when `make artifacts` hasn't run.
+
+use lookat::attention;
+use lookat::pq::{LookupTable, PqCodec, TrainOpts};
+use lookat::runtime::{default_artifacts_dir, InputArg, Runtime};
+use lookat::util::rng::Pcg32;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(&dir).expect("runtime open"))
+}
+
+fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32_std()).collect()
+}
+
+const H: usize = 12;
+const DK: usize = 64;
+const K: usize = 256;
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for name in [
+        "attn_fp16_L128",
+        "attn_fp16_L512",
+        "attn_lookat_m4_L512",
+        "attn_lookat_m2_L512",
+        "lut_build_m4",
+        "adc_scores_m4_L512",
+        "block_fp16_L512",
+        "block_lookat_m4_L512",
+    ] {
+        assert!(rt.manifest.get(name).is_some(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn lut_build_artifact_matches_rust() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let m = 4;
+    let d_sub = DK / m;
+    let mut rng = Pcg32::seed(100);
+    // train a real codec so the codebook layout is authentic
+    let calib = randv(&mut rng, 256 * DK);
+    let codec = PqCodec::train(&calib, DK, m, K, &TrainOpts::default());
+    let q = randv(&mut rng, DK);
+    let lut_rust = LookupTable::build(&q, &codec.codebook);
+
+    let cb_flat = codec.codebook.to_flat();
+    let out = rt
+        .execute(
+            "lut_build_m4",
+            &[InputArg::F32(&q), InputArg::F32(&cb_flat)],
+        )
+        .expect("execute lut_build");
+    assert_eq!(out[0].len(), m * K);
+    for (a, b) in out[0].iter().zip(lut_rust.as_slice()) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+    let _ = d_sub;
+}
+
+#[test]
+fn adc_scores_artifact_matches_rust() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let m = 4;
+    let l = 512;
+    let mut rng = Pcg32::seed(101);
+    let calib = randv(&mut rng, 256 * DK);
+    let codec = PqCodec::train(&calib, DK, m, K, &TrainOpts::default());
+    let keys = randv(&mut rng, l * DK);
+    let codes = codec.encode_batch(&keys, l);
+    let q = randv(&mut rng, DK);
+    let lut = LookupTable::build(&q, &codec.codebook);
+    let want = lut.scores(&codes, l);
+
+    let codes_i32: Vec<i32> = codes.iter().map(|&c| c as i32).collect();
+    let out = rt
+        .execute(
+            "adc_scores_m4_L512",
+            &[InputArg::I32(&codes_i32), InputArg::F32(lut.as_slice())],
+        )
+        .expect("execute adc_scores");
+    for (a, b) in out[0].iter().zip(&want) {
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn attn_fp16_artifact_matches_rust_attention() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let l = 128;
+    let valid = 100usize;
+    let mut rng = Pcg32::seed(102);
+    let q: Vec<f32> = randv(&mut rng, H * DK);
+    let k: Vec<f32> = randv(&mut rng, H * l * DK);
+    let v: Vec<f32> = randv(&mut rng, H * l * DK);
+    let mask: Vec<f32> =
+        (0..l).map(|i| if i < valid { 1.0 } else { 0.0 }).collect();
+
+    let out = rt
+        .execute(
+            "attn_fp16_L128",
+            &[
+                InputArg::F32(&q),
+                InputArg::F32(&k),
+                InputArg::F32(&v),
+                InputArg::F32(&mask),
+            ],
+        )
+        .expect("execute attn_fp16");
+    assert_eq!(out[0].len(), H * DK);
+
+    // reference: per-head rust exact attention over the valid prefix
+    for h in 0..H {
+        let qh = &q[h * DK..(h + 1) * DK];
+        let kh: Vec<f32> = (0..valid)
+            .flat_map(|t| {
+                k[(h * l + t) * DK..(h * l + t + 1) * DK].to_vec()
+            })
+            .collect();
+        let vh: Vec<f32> = (0..valid)
+            .flat_map(|t| {
+                v[(h * l + t) * DK..(h * l + t + 1) * DK].to_vec()
+            })
+            .collect();
+        let want = attention::exact_attention(qh, &kh, &vh, valid);
+        for (a, b) in out[0][h * DK..(h + 1) * DK].iter().zip(&want.out) {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "head {h}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn attn_lookat_artifact_matches_rust_lookat() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let (l, m) = (512, 4);
+    let valid = 300usize;
+    let mut rng = Pcg32::seed(103);
+
+    // per-head codecs trained on the head's own keys (authentic pipeline)
+    let mut q = Vec::new();
+    let mut v = Vec::new();
+    let mut codes_i32 = Vec::new();
+    let mut cb_flat = Vec::new();
+    let mut rust_out = Vec::new();
+    let mut codes_all: Vec<Vec<u8>> = Vec::new();
+    let mut codecs = Vec::new();
+    for _h in 0..H {
+        let keys = randv(&mut rng, l * DK);
+        let codec = PqCodec::train(&keys, DK, m, K, &TrainOpts::default());
+        let codes = codec.encode_batch(&keys, l);
+        cb_flat.extend(codec.codebook.to_flat());
+        codes_i32.extend(codes.iter().map(|&c| c as i32));
+        codes_all.push(codes);
+        codecs.push(codec);
+        q.extend(randv(&mut rng, DK));
+        v.extend(randv(&mut rng, l * DK));
+    }
+    let mask: Vec<f32> =
+        (0..l).map(|i| if i < valid { 1.0 } else { 0.0 }).collect();
+    for h in 0..H {
+        let qh = &q[h * DK..(h + 1) * DK];
+        let vh = &v[h * l * DK..(h * l + valid) * DK];
+        let codes_valid = &codes_all[h][..valid * m];
+        let got = attention::lookat_attention(
+            qh, codes_valid, &codecs[h], vh, valid);
+        rust_out.extend(got.out);
+    }
+
+    let out = rt
+        .execute(
+            "attn_lookat_m4_L512",
+            &[
+                InputArg::F32(&q),
+                InputArg::I32(&codes_i32),
+                InputArg::F32(&cb_flat),
+                InputArg::F32(&v),
+                InputArg::F32(&mask),
+            ],
+        )
+        .expect("execute attn_lookat");
+    for (i, (a, b)) in out[0].iter().zip(&rust_out).enumerate() {
+        assert!((a - b).abs() < 1e-3, "elem {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn execute_validates_shapes_and_dtypes() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let q = vec![0.0f32; 3]; // wrong size
+    let err = rt
+        .execute("attn_fp16_L128", &[InputArg::F32(&q)])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("inputs"), "{err}");
+
+    // right count, wrong element count
+    let k = vec![0.0f32; 10];
+    let v = vec![0.0f32; 10];
+    let mask = vec![0.0f32; 10];
+    let err2 = rt
+        .execute(
+            "attn_fp16_L128",
+            &[
+                InputArg::F32(&q),
+                InputArg::F32(&k),
+                InputArg::F32(&v),
+                InputArg::F32(&mask),
+            ],
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err2.contains("elements"), "{err2}");
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    assert!(rt.execute("no_such_artifact", &[]).is_err());
+}
