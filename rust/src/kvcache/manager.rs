@@ -28,15 +28,30 @@ impl KeyStorage {
     }
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum CacheError {
-    #[error("out of cache blocks (budget exhausted)")]
     OutOfBlocks,
-    #[error("unknown sequence {0}")]
     UnknownSeq(SeqId),
-    #[error("sequence {0} already exists")]
     DuplicateSeq(SeqId),
 }
+
+impl std::fmt::Display for CacheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheError::OutOfBlocks => {
+                write!(f, "out of cache blocks (budget exhausted)")
+            }
+            CacheError::UnknownSeq(id) => {
+                write!(f, "unknown sequence {id}")
+            }
+            CacheError::DuplicateSeq(id) => {
+                write!(f, "sequence {id} already exists")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CacheError {}
 
 /// Exact memory accounting, in bytes, under the paper's storage model
 /// (FP16 = 2 B per stored element; PQ codes = 1 B each).

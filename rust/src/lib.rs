@@ -18,8 +18,13 @@
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/lookat.py`),
 //!   called from the L2 graphs; validated against `ref.py` oracles.
 //!
-//! The [`runtime`] module loads the AOT artifacts via the PJRT CPU client
-//! (`xla` crate) and executes them from the rust hot path.
+//! The [`runtime`] module loads the AOT artifacts and executes them from
+//! the rust hot path. It is **feature-gated**: the default build uses a
+//! pure-rust interpreter `Runtime` (no external runtime deps, works in
+//! offline images), while `--features xla` swaps in the PJRT CPU client
+//! (`xla` crate) that compiles and runs the HLO text. Both backends share
+//! one calling convention and manifest validation — see `runtime/mod.rs`
+//! and README.md §Build matrix.
 //!
 //! ## Quick example
 //!
@@ -35,6 +40,16 @@
 //! let codes = codec.encode_batch(&keys, 512);
 //! ```
 
+// The numeric kernels are written as explicit index loops so LLVM's
+// autovectorizer sees flat access patterns; silence the style lints that
+// would rewrite them into iterator chains.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::manual_memcpy,
+    clippy::too_many_arguments,
+    clippy::type_complexity
+)]
+
 pub mod attention;
 pub mod coordinator;
 pub mod experiments;
@@ -45,6 +60,7 @@ pub mod pq;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;
+pub mod testkit;
 pub mod util;
 pub mod workload;
 

@@ -1,4 +1,5 @@
-//! The executor: PJRT CPU client + lazily-compiled executable registry.
+//! The PJRT executor: CPU client + lazily-compiled executable registry.
+//! Compiled only with `--features xla` (see `runtime/mod.rs`).
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -6,36 +7,15 @@ use std::path::Path;
 use anyhow::{bail, Context};
 
 use super::artifact::{ArtifactSpec, Manifest};
+use super::{validate_inputs, InputArg};
 
-/// Typed input argument for an artifact execution.
-pub enum InputArg<'a> {
-    F32(&'a [f32]),
-    I32(&'a [i32]),
-}
-
-impl InputArg<'_> {
-    fn len(&self) -> usize {
-        match self {
-            InputArg::F32(d) => d.len(),
-            InputArg::I32(d) => d.len(),
-        }
-    }
-
-    fn dtype(&self) -> &'static str {
-        match self {
-            InputArg::F32(_) => "float32",
-            InputArg::I32(_) => "int32",
-        }
-    }
-
-    fn to_literal(&self, shape: &[usize]) -> anyhow::Result<xla::Literal> {
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            InputArg::F32(d) => xla::Literal::vec1(d),
-            InputArg::I32(d) => xla::Literal::vec1(d),
-        };
-        Ok(lit.reshape(&dims)?)
-    }
+fn to_literal(arg: &InputArg<'_>, shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let lit = match arg {
+        InputArg::F32(d) => xla::Literal::vec1(d),
+        InputArg::I32(d) => xla::Literal::vec1(d),
+    };
+    Ok(lit.reshape(&dims)?)
 }
 
 /// PJRT runtime over one artifacts directory.
@@ -63,9 +43,9 @@ impl Runtime {
         Ok(Runtime { client, manifest, executables: HashMap::new() })
     }
 
-    /// Default artifacts directory (repo-root/artifacts), if built.
+    /// Default artifacts directory (rust/artifacts), if built.
     pub fn open_default() -> anyhow::Result<Runtime> {
-        Self::open(&default_artifacts_dir())
+        Self::open(&super::default_artifacts_dir())
     }
 
     pub fn platform(&self) -> String {
@@ -107,33 +87,10 @@ impl Runtime {
     ) -> anyhow::Result<Vec<Vec<f32>>> {
         self.load(name)?;
         let spec = self.manifest.get(name).unwrap().clone();
-        if inputs.len() != spec.inputs.len() {
-            bail!(
-                "{name}: expected {} inputs, got {}",
-                spec.inputs.len(),
-                inputs.len()
-            );
-        }
+        validate_inputs(&spec, inputs)?;
         let mut literals = Vec::with_capacity(inputs.len());
         for (arg, ispec) in inputs.iter().zip(&spec.inputs) {
-            if arg.len() != ispec.elements() {
-                bail!(
-                    "{name}.{}: expected {} elements {:?}, got {}",
-                    ispec.name,
-                    ispec.elements(),
-                    ispec.shape,
-                    arg.len()
-                );
-            }
-            if arg.dtype() != ispec.dtype {
-                bail!(
-                    "{name}.{}: dtype {} != {}",
-                    ispec.name,
-                    arg.dtype(),
-                    ispec.dtype
-                );
-            }
-            literals.push(arg.to_literal(&ispec.shape)?);
+            literals.push(to_literal(arg, &ispec.shape)?);
         }
         let exe = self.executables.get(name).unwrap();
         let result = exe.execute::<xla::Literal>(&literals)?;
@@ -165,9 +122,4 @@ impl Runtime {
     pub fn loaded(&self) -> Vec<&str> {
         self.executables.keys().map(|s| s.as_str()).collect()
     }
-}
-
-/// `<repo>/artifacts` resolved from the crate manifest dir.
-pub fn default_artifacts_dir() -> std::path::PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }

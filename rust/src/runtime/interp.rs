@@ -1,0 +1,501 @@
+//! Pure-rust interpreter `Runtime` — the default (no `xla` feature)
+//! backend. See `runtime/mod.rs` for the backend contract.
+//!
+//! Instead of compiling the HLO text, this backend evaluates the known
+//! artifact *kinds* directly from the manifest contract, with the same
+//! math as the L3 hot path (`attention`, `pq::LookupTable`). Shape and
+//! dtype validation is shared with the PJRT executor, so the `Pjrt*`
+//! engine backends and the integration tests behave identically up to
+//! numerics — which the interpreter reproduces bit-for-bit against the
+//! pure-rust reference because it *is* the pure-rust reference.
+
+use std::collections::HashSet;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use super::artifact::{ArtifactSpec, Manifest};
+use super::{validate_inputs, InputArg};
+use crate::tensor::{dot, softmax_inplace};
+
+/// Interpreter runtime over one artifacts directory.
+pub struct Runtime {
+    pub manifest: Manifest,
+    loaded: HashSet<String>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (must contain manifest.json).
+    pub fn open(dir: &Path) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        crate::log_info!(
+            "interp runtime up (xla feature off): artifacts={}",
+            manifest.artifacts.len()
+        );
+        Ok(Runtime { manifest, loaded: HashSet::new() })
+    }
+
+    /// Default artifacts directory (rust/artifacts), if built.
+    pub fn open_default() -> anyhow::Result<Runtime> {
+        Self::open(&super::default_artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        "interp-cpu".to_string()
+    }
+
+    /// Resolve an artifact; returns its spec. (The interpreter has no
+    /// compile step — this only checks the manifest entry exists.)
+    pub fn load(&mut self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        let spec = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?;
+        self.loaded.insert(name.to_string());
+        Ok(spec)
+    }
+
+    /// Execute an artifact with shape/dtype validation against the
+    /// manifest. Returns one flat f32 vector per declared output.
+    ///
+    /// This is the default backend's per-decode-step path, so the spec
+    /// is used by shared borrow — no per-call clone of the shape/meta
+    /// tree.
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[InputArg<'_>],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        if self.manifest.get(name).is_some() {
+            self.loaded.insert(name.to_string());
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?;
+        validate_inputs(spec, inputs)?;
+        let outs = match spec.kind() {
+            "attn_fp16" => vec![attn_fp16(spec, inputs)?],
+            "attn_lookat" => vec![attn_lookat(spec, inputs)?],
+            "lut_build" => vec![lut_build(spec, inputs)?],
+            "adc_scores" => vec![adc_scores(spec, inputs)?],
+            other => bail!(
+                "{name}: artifact kind '{other}' is not supported by the \
+                 interpreter runtime — build with --features xla"
+            ),
+        };
+        if outs.len() != spec.outputs.len() {
+            bail!(
+                "{name}: interpreter produced {} outputs, manifest says {}",
+                outs.len(),
+                spec.outputs.len()
+            );
+        }
+        for (v, ospec) in outs.iter().zip(&spec.outputs) {
+            if v.len() != ospec.elements() {
+                bail!(
+                    "{name}.{}: output has {} elements, expected {}",
+                    ospec.name,
+                    v.len(),
+                    ospec.elements()
+                );
+            }
+        }
+        Ok(outs)
+    }
+
+    /// Names of artifacts resolved so far.
+    pub fn loaded(&self) -> Vec<&str> {
+        self.loaded.iter().map(|s| s.as_str()).collect()
+    }
+}
+
+fn f32_input<'a>(
+    arg: &InputArg<'a>,
+    what: &str,
+) -> anyhow::Result<&'a [f32]> {
+    match arg {
+        InputArg::F32(d) => Ok(*d),
+        InputArg::I32(_) => bail!("{what}: expected f32 input"),
+    }
+}
+
+fn i32_input<'a>(
+    arg: &InputArg<'a>,
+    what: &str,
+) -> anyhow::Result<&'a [i32]> {
+    match arg {
+        InputArg::I32(d) => Ok(*d),
+        InputArg::F32(_) => bail!("{what}: expected i32 input"),
+    }
+}
+
+/// Guard against manifest-internal inconsistency: `validate_inputs`
+/// checks the caller's inputs *against* the spec, but the spec itself is
+/// external JSON — a kind with the wrong input count must error, not
+/// panic on a fixed-position index below.
+fn expect_arity(
+    spec: &ArtifactSpec,
+    kind: &str,
+    n: usize,
+) -> anyhow::Result<()> {
+    if spec.inputs.len() != n {
+        bail!(
+            "{}: kind '{kind}' needs {n} inputs, manifest declares {}",
+            spec.name,
+            spec.inputs.len()
+        );
+    }
+    Ok(())
+}
+
+/// LUT kernel shared by `attn_lookat` and `lut_build`:
+/// `out[i*K + c] = q^(i) · cb[i, c, :]` over a flat (m, K, d_sub)
+/// codebook.
+fn build_lut_into(
+    q: &[f32],
+    cb: &[f32],
+    m: usize,
+    kk: usize,
+    d_sub: usize,
+    out: &mut [f32],
+) {
+    for i in 0..m {
+        let q_sub = &q[i * d_sub..(i + 1) * d_sub];
+        for c in 0..kk {
+            let base = (i * kk + c) * d_sub;
+            out[i * kk + c] = dot(q_sub, &cb[base..base + d_sub]);
+        }
+    }
+}
+
+/// Masked single-query attention tail shared by both attention kinds:
+/// scale by 1/sqrt(d_k), softmax over the mask-selected positions,
+/// weighted value sum. Writes the (d_k) context into `out`.
+fn masked_attention_tail(
+    scores: &[f32],
+    values: &[f32],
+    mask: &[f32],
+    d_k: usize,
+    out: &mut [f32],
+) {
+    let inv = 1.0 / (d_k as f32).sqrt();
+    // gather valid positions (mask != 0), softmax over them only —
+    // identical to running exact attention over the valid prefix
+    let valid: Vec<usize> =
+        (0..mask.len()).filter(|&l| mask[l] != 0.0).collect();
+    let mut s: Vec<f32> =
+        valid.iter().map(|&l| scores[l] * inv).collect();
+    softmax_inplace(&mut s);
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for (i, &l) in valid.iter().enumerate() {
+        let a = s[i];
+        if a > 0.0 {
+            crate::tensor::axpy(out, a, &values[l * d_k..(l + 1) * d_k]);
+        }
+    }
+}
+
+/// kind=attn_fp16 — inputs (q[H,dk], k[H,L,dk], v[H,L,dk], mask[L]),
+/// output (H,dk).
+fn attn_fp16(
+    spec: &ArtifactSpec,
+    inputs: &[InputArg<'_>],
+) -> anyhow::Result<Vec<f32>> {
+    expect_arity(spec, "attn_fp16", 4)?;
+    let qs = &spec.inputs[0].shape;
+    if qs.len() != 2 || spec.inputs[1].shape.len() != 3 {
+        bail!("{}: unexpected attn_fp16 shapes", spec.name);
+    }
+    let (h, d_k) = (qs[0], qs[1]);
+    let l = spec.inputs[1].shape[1];
+    if spec.inputs[1].elements() != h * l * d_k
+        || spec.inputs[2].elements() != h * l * d_k
+        || spec.inputs[3].elements() != l
+    {
+        bail!("{}: k/v/mask shapes disagree with q in manifest", spec.name);
+    }
+    let q = f32_input(&inputs[0], "q")?;
+    let k = f32_input(&inputs[1], "k")?;
+    let v = f32_input(&inputs[2], "v")?;
+    let mask = f32_input(&inputs[3], "mask")?;
+    let mut out = vec![0.0f32; h * d_k];
+    let mut scores = vec![0.0f32; l];
+    for head in 0..h {
+        let qh = &q[head * d_k..(head + 1) * d_k];
+        let kh = &k[head * l * d_k..(head + 1) * l * d_k];
+        for (t, s) in scores.iter_mut().enumerate() {
+            *s = dot(qh, &kh[t * d_k..(t + 1) * d_k]);
+        }
+        masked_attention_tail(
+            &scores,
+            &v[head * l * d_k..(head + 1) * l * d_k],
+            mask,
+            d_k,
+            &mut out[head * d_k..(head + 1) * d_k],
+        );
+    }
+    Ok(out)
+}
+
+/// kind=attn_lookat — inputs (q[H,dk], codes[H,L,m], cbs[H,m,K,dsub],
+/// v[H,L,dk], mask[L]), output (H,dk).
+fn attn_lookat(
+    spec: &ArtifactSpec,
+    inputs: &[InputArg<'_>],
+) -> anyhow::Result<Vec<f32>> {
+    expect_arity(spec, "attn_lookat", 5)?;
+    let qs = &spec.inputs[0].shape;
+    let cs = &spec.inputs[1].shape;
+    let bs = &spec.inputs[2].shape;
+    if qs.len() != 2 || cs.len() != 3 || bs.len() != 4 {
+        bail!("{}: unexpected attn_lookat shapes", spec.name);
+    }
+    let (h, d_k) = (qs[0], qs[1]);
+    let (l, m) = (cs[1], cs[2]);
+    let (kk, d_sub) = (bs[2], bs[3]);
+    if m * d_sub != d_k {
+        bail!("{}: m*d_sub != d_k in manifest", spec.name);
+    }
+    if bs[1] != m || cs[0] != h || bs[0] != h {
+        bail!(
+            "{}: codes ({}x{l}x{}) and codebooks ({}x{}x{kk}x{d_sub}) \
+             disagree with q ({h}x{d_k}) in manifest",
+            spec.name, cs[0], m, bs[0], bs[1]
+        );
+    }
+    if spec.inputs[3].elements() != h * l * d_k
+        || spec.inputs[4].elements() != l
+    {
+        bail!("{}: v/mask shapes disagree with q in manifest", spec.name);
+    }
+    let q = f32_input(&inputs[0], "q")?;
+    let codes = i32_input(&inputs[1], "codes")?;
+    let cbs = f32_input(&inputs[2], "cbs")?;
+    let v = f32_input(&inputs[3], "v")?;
+    let mask = f32_input(&inputs[4], "mask")?;
+    let mut out = vec![0.0f32; h * d_k];
+    let mut scores = vec![0.0f32; l];
+    let mut lut = vec![0.0f32; m * kk];
+    for head in 0..h {
+        let qh = &q[head * d_k..(head + 1) * d_k];
+        let cb_h = &cbs[head * m * kk * d_sub..(head + 1) * m * kk * d_sub];
+        build_lut_into(qh, cb_h, m, kk, d_sub, &mut lut);
+        let codes_h = &codes[head * l * m..(head + 1) * l * m];
+        for (t, s) in scores.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for i in 0..m {
+                let c = codes_h[t * m + i];
+                if c < 0 || c as usize >= kk {
+                    bail!("{}: code {c} out of range K={kk}", spec.name);
+                }
+                acc += lut[i * kk + c as usize];
+            }
+            *s = acc;
+        }
+        masked_attention_tail(
+            &scores,
+            &v[head * l * d_k..(head + 1) * l * d_k],
+            mask,
+            d_k,
+            &mut out[head * d_k..(head + 1) * d_k],
+        );
+    }
+    Ok(out)
+}
+
+/// kind=lut_build — inputs (q[dk], cb[m,K,dsub]), output (m,K).
+fn lut_build(
+    spec: &ArtifactSpec,
+    inputs: &[InputArg<'_>],
+) -> anyhow::Result<Vec<f32>> {
+    expect_arity(spec, "lut_build", 2)?;
+    let bs = &spec.inputs[1].shape;
+    if bs.len() != 3 {
+        bail!("{}: unexpected lut_build shapes", spec.name);
+    }
+    let (m, kk, d_sub) = (bs[0], bs[1], bs[2]);
+    if spec.inputs[0].elements() != m * d_sub {
+        bail!("{}: q length != m*d_sub in manifest", spec.name);
+    }
+    let q = f32_input(&inputs[0], "q")?;
+    let cb = f32_input(&inputs[1], "cb")?;
+    let mut lut = vec![0.0f32; m * kk];
+    build_lut_into(q, cb, m, kk, d_sub, &mut lut);
+    Ok(lut)
+}
+
+/// kind=adc_scores — inputs (codes[L,m], lut[m,K]), output (L,).
+fn adc_scores(
+    spec: &ArtifactSpec,
+    inputs: &[InputArg<'_>],
+) -> anyhow::Result<Vec<f32>> {
+    expect_arity(spec, "adc_scores", 2)?;
+    let cs = &spec.inputs[0].shape;
+    let ls = &spec.inputs[1].shape;
+    if cs.len() != 2 || ls.len() != 2 {
+        bail!("{}: unexpected adc_scores shapes", spec.name);
+    }
+    let (l, m) = (cs[0], cs[1]);
+    let kk = ls[1];
+    if ls[0] != m {
+        bail!("{}: lut rows != codes' m in manifest", spec.name);
+    }
+    let codes = i32_input(&inputs[0], "codes")?;
+    let lut = f32_input(&inputs[1], "lut")?;
+    let mut out = vec![0.0f32; l];
+    for (t, s) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for i in 0..m {
+            let c = codes[t * m + i];
+            if c < 0 || c as usize >= kk {
+                bail!("{}: code {c} out of range K={kk}", spec.name);
+            }
+            acc += lut[i * kk + c as usize];
+        }
+        *s = acc;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::{LookupTable, PqCodec, TrainOpts};
+    use crate::util::rng::Pcg32;
+
+    /// Build a Runtime over a synthetic in-memory manifest (no files on
+    /// disk are needed because the interpreter never reads HLO text).
+    fn runtime_with(manifest_json: &str) -> Runtime {
+        let manifest =
+            Manifest::parse(Path::new("/tmp"), manifest_json).unwrap();
+        Runtime { manifest, loaded: HashSet::new() }
+    }
+
+    const LUT_MANIFEST: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "lut_build_m4", "file": "x.hlo.txt",
+         "inputs": [
+           {"name": "q", "shape": [32], "dtype": "float32"},
+           {"name": "cb", "shape": [4, 16, 8], "dtype": "float32"}],
+         "outputs": [{"name": "lut", "shape": [4, 16],
+                      "dtype": "float32"}],
+         "meta": {"kind": "lut_build", "m": 4}},
+        {"name": "adc_scores_m4", "file": "x.hlo.txt",
+         "inputs": [
+           {"name": "codes", "shape": [64, 4], "dtype": "int32"},
+           {"name": "lut", "shape": [4, 16], "dtype": "float32"}],
+         "outputs": [{"name": "scores", "shape": [64],
+                      "dtype": "float32"}],
+         "meta": {"kind": "adc_scores", "m": 4}},
+        {"name": "attn_fp16_L8", "file": "x.hlo.txt",
+         "inputs": [
+           {"name": "q", "shape": [2, 8], "dtype": "float32"},
+           {"name": "k", "shape": [2, 8, 8], "dtype": "float32"},
+           {"name": "v", "shape": [2, 8, 8], "dtype": "float32"},
+           {"name": "mask", "shape": [8], "dtype": "float32"}],
+         "outputs": [{"name": "out", "shape": [2, 8],
+                      "dtype": "float32"}],
+         "meta": {"kind": "attn_fp16", "L": 8}},
+        {"name": "block_fp16_L8", "file": "x.hlo.txt",
+         "inputs": [], "outputs": [],
+         "meta": {"kind": "block_fp16", "L": 8}}
+      ]}"#;
+
+    #[test]
+    fn lut_and_adc_match_hot_path() {
+        let mut rt = runtime_with(LUT_MANIFEST);
+        let (d_k, m, k, n) = (32usize, 4usize, 16usize, 64usize);
+        let mut rng = Pcg32::seed(5);
+        let calib: Vec<f32> =
+            (0..256 * d_k).map(|_| rng.next_f32_std()).collect();
+        let codec =
+            PqCodec::train(&calib, d_k, m, k, &TrainOpts::default());
+        let keys: Vec<f32> =
+            (0..n * d_k).map(|_| rng.next_f32_std()).collect();
+        let codes = codec.encode_batch(&keys, n);
+        let q: Vec<f32> = (0..d_k).map(|_| rng.next_f32_std()).collect();
+        let lut = LookupTable::build(&q, &codec.codebook);
+
+        let cb_flat = codec.codebook.to_flat();
+        let got_lut = rt
+            .execute(
+                "lut_build_m4",
+                &[InputArg::F32(&q), InputArg::F32(&cb_flat)],
+            )
+            .unwrap();
+        for (a, b) in got_lut[0].iter().zip(lut.as_slice()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+
+        let codes_i32: Vec<i32> = codes.iter().map(|&c| c as i32).collect();
+        let got_scores = rt
+            .execute(
+                "adc_scores_m4",
+                &[InputArg::I32(&codes_i32), InputArg::F32(lut.as_slice())],
+            )
+            .unwrap();
+        let want = lut.scores(&codes, n);
+        for (a, b) in got_scores[0].iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn attn_fp16_matches_exact_attention_on_valid_prefix() {
+        let mut rt = runtime_with(LUT_MANIFEST);
+        let (h, d_k, l, valid) = (2usize, 8usize, 8usize, 5usize);
+        let mut rng = Pcg32::seed(9);
+        let q: Vec<f32> =
+            (0..h * d_k).map(|_| rng.next_f32_std()).collect();
+        let k: Vec<f32> =
+            (0..h * l * d_k).map(|_| rng.next_f32_std()).collect();
+        let v: Vec<f32> =
+            (0..h * l * d_k).map(|_| rng.next_f32_std()).collect();
+        let mask: Vec<f32> =
+            (0..l).map(|i| if i < valid { 1.0 } else { 0.0 }).collect();
+        let out = rt
+            .execute(
+                "attn_fp16_L8",
+                &[
+                    InputArg::F32(&q),
+                    InputArg::F32(&k),
+                    InputArg::F32(&v),
+                    InputArg::F32(&mask),
+                ],
+            )
+            .unwrap();
+        for head in 0..h {
+            let qh = &q[head * d_k..(head + 1) * d_k];
+            let kh = &k[head * l * d_k..(head * l + valid) * d_k];
+            let vh = &v[head * l * d_k..(head * l + valid) * d_k];
+            let want = crate::attention::exact_attention(qh, kh, vh, valid);
+            for (a, b) in
+                out[0][head * d_k..(head + 1) * d_k].iter().zip(&want.out)
+            {
+                assert!((a - b).abs() < 1e-5, "head {head}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn unsupported_kind_and_unknown_artifact_error() {
+        let mut rt = runtime_with(LUT_MANIFEST);
+        let err = rt.execute("block_fp16_L8", &[]).unwrap_err().to_string();
+        assert!(err.contains("not supported"), "{err}");
+        assert!(rt.execute("no_such", &[]).is_err());
+        assert_eq!(rt.platform(), "interp-cpu");
+    }
+
+    #[test]
+    fn validation_errors_match_executor_contract() {
+        let mut rt = runtime_with(LUT_MANIFEST);
+        let q = vec![0.0f32; 3];
+        let err = rt
+            .execute("attn_fp16_L8", &[InputArg::F32(&q)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("inputs"), "{err}");
+    }
+}

@@ -1,12 +1,159 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! Artifact runtime: loads the AOT HLO-text artifacts produced by
 //! `make artifacts` and executes them from the rust hot path.
 //!
-//! Interchange is HLO *text* — jax ≥0.5 serialized protos carry 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//! Two interchangeable backends behind one `Runtime` type:
+//!
+//! * **`--features xla`** — the PJRT CPU client ([`executor`]): compiles
+//!   the HLO text through xla_extension and runs it on device. Interchange
+//!   is HLO *text* — jax ≥0.5 serialized protos carry 64-bit instruction
+//!   ids that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//! * **default** — a pure-rust interpreter ([`interp`]) over the manifest
+//!   contract: it validates shapes/dtypes identically and evaluates the
+//!   known artifact kinds (fp16 attention, LUT build, ADC scores, LOOKAT
+//!   attention) with the same math as the L3 hot path. This keeps every
+//!   `Pjrt*` code path compiling and testable in offline images where the
+//!   `xla` crate is unavailable.
+//!
+//! Both backends share [`InputArg`], [`default_artifacts_dir`] and the
+//! manifest-driven input validation, so error messages and calling
+//! conventions are identical.
 
 mod artifact;
+#[cfg(feature = "xla")]
 mod executor;
+#[cfg(not(feature = "xla"))]
+mod interp;
 
 pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
-pub use executor::{default_artifacts_dir, InputArg, Runtime};
+#[cfg(feature = "xla")]
+pub use executor::Runtime;
+#[cfg(not(feature = "xla"))]
+pub use interp::Runtime;
+
+use std::path::Path;
+
+use anyhow::bail;
+
+/// Typed input argument for an artifact execution.
+pub enum InputArg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl InputArg<'_> {
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            InputArg::F32(d) => d.len(),
+            InputArg::I32(d) => d.len(),
+        }
+    }
+
+    pub(crate) fn dtype(&self) -> &'static str {
+        match self {
+            InputArg::F32(_) => "float32",
+            InputArg::I32(_) => "int32",
+        }
+    }
+}
+
+/// Validate an input list against an artifact's manifest spec. Both the
+/// PJRT executor and the interpreter call this, so shape/dtype errors
+/// are identical across backends.
+pub(crate) fn validate_inputs(
+    spec: &ArtifactSpec,
+    inputs: &[InputArg<'_>],
+) -> anyhow::Result<()> {
+    let name = &spec.name;
+    if inputs.len() != spec.inputs.len() {
+        bail!(
+            "{name}: expected {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (arg, ispec) in inputs.iter().zip(&spec.inputs) {
+        if arg.len() != ispec.elements() {
+            bail!(
+                "{name}.{}: expected {} elements {:?}, got {}",
+                ispec.name,
+                ispec.elements(),
+                ispec.shape,
+                arg.len()
+            );
+        }
+        if arg.dtype() != ispec.dtype {
+            bail!(
+                "{name}.{}: dtype {} != {}",
+                ispec.name,
+                arg.dtype(),
+                ispec.dtype
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `<repo>/rust/artifacts` resolved from the crate manifest dir.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArtifactSpec {
+        ArtifactSpec {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            inputs: vec![
+                TensorSpec {
+                    name: "q".into(),
+                    shape: vec![2, 3],
+                    dtype: "float32".into(),
+                },
+                TensorSpec {
+                    name: "codes".into(),
+                    shape: vec![4],
+                    dtype: "int32".into(),
+                },
+            ],
+            outputs: vec![],
+            meta: crate::util::json::Json::obj(),
+        }
+    }
+
+    #[test]
+    fn accepts_matching_inputs() {
+        let q = [0.0f32; 6];
+        let c = [0i32; 4];
+        validate_inputs(&spec(), &[InputArg::F32(&q), InputArg::I32(&c)])
+            .unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_arity_count_and_dtype() {
+        let q = [0.0f32; 6];
+        let c = [0i32; 4];
+        let short = [0.0f32; 5];
+        let e = validate_inputs(&spec(), &[InputArg::F32(&q)])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("inputs"), "{e}");
+        let e2 = validate_inputs(
+            &spec(),
+            &[InputArg::F32(&short), InputArg::I32(&c)],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e2.contains("elements"), "{e2}");
+        let wrong_ty = [0i32; 6];
+        let e3 = validate_inputs(
+            &spec(),
+            &[InputArg::I32(&wrong_ty), InputArg::I32(&c)],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e3.contains("dtype"), "{e3}");
+    }
+}

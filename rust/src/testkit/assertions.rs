@@ -1,0 +1,100 @@
+//! Paper-metric assertion helpers: Spearman rank-correlation and cosine
+//! fidelity floors with readable failure messages.
+//!
+//! Thin, f32-friendly wrappers over [`crate::metrics`] — the single
+//! source of truth for the metric definitions — plus `assert_*` forms
+//! that report the observed value, the floor and a caller-supplied
+//! context string on failure.
+
+use crate::metrics;
+
+/// Spearman rank correlation of two f32 score vectors.
+pub fn spearman(a: &[f32], b: &[f32]) -> f64 {
+    let af: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+    let bf: Vec<f64> = b.iter().map(|&x| x as f64).collect();
+    metrics::spearman_rho(&af, &bf)
+}
+
+/// Cosine similarity of two f32 vectors.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    metrics::cosine_similarity(a, b)
+}
+
+/// Assert Spearman ρ(a, b) > `floor`; returns the observed ρ so callers
+/// can additionally record it (e.g. for bit-stability comparisons).
+pub fn assert_spearman_at_least(
+    a: &[f32],
+    b: &[f32],
+    floor: f64,
+    ctx: &str,
+) -> f64 {
+    let rho = spearman(a, b);
+    assert!(
+        rho > floor,
+        "[{ctx}] Spearman rho {rho:.6} <= floor {floor}"
+    );
+    rho
+}
+
+/// Assert cosine(a, b) > `floor`; returns the observed value.
+pub fn assert_cosine_at_least(
+    a: &[f32],
+    b: &[f32],
+    floor: f64,
+    ctx: &str,
+) -> f64 {
+    let cos = cosine(a, b);
+    assert!(
+        cos > floor,
+        "[{ctx}] cosine {cos:.6} <= floor {floor}"
+    );
+    cos
+}
+
+/// Assert elementwise |a - b| <= tol with an index-carrying message.
+pub fn assert_all_close(a: &[f32], b: &[f32], tol: f32, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "[{ctx}] length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!(
+            (x - y).abs() <= tol,
+            "[{ctx}] element {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrappers_agree_with_metrics() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [2.0f32, 4.0, 6.0, 8.0];
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-12);
+        assert!((cosine(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn assert_forms_pass_and_return_value() {
+        let a = [0.1f32, 0.9, 0.5];
+        let rho = assert_spearman_at_least(&a, &a, 0.99, "self");
+        assert!((rho - 1.0).abs() < 1e-12);
+        let cos = assert_cosine_at_least(&a, &a, 0.99, "self");
+        assert!((cos - 1.0).abs() < 1e-9);
+        assert_all_close(&a, &a, 0.0, "self");
+    }
+
+    #[test]
+    #[should_panic(expected = "Spearman")]
+    fn spearman_floor_violation_panics_with_context() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [3.0f32, 2.0, 1.0];
+        assert_spearman_at_least(&a, &b, 0.0, "reversed");
+    }
+
+    #[test]
+    #[should_panic(expected = "element 1")]
+    fn all_close_reports_failing_index() {
+        assert_all_close(&[1.0, 2.0], &[1.0, 3.0], 0.5, "t");
+    }
+}

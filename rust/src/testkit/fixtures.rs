@@ -1,0 +1,164 @@
+//! Seeded fixture generators for key/value/query tensors.
+//!
+//! The paper's premise (§1) is that transformer keys live near a
+//! low-intrinsic-dimension manifold, which is what makes PQ codebooks
+//! capture them at 32–64× compression. The generators here span that
+//! spectrum explicitly:
+//!
+//! * [`gaussian_keys`] — iid N(0,1): the PQ *worst case* at fixed
+//!   variance (no structure to exploit).
+//! * [`low_rank_keys`] — rank-r + noise, mirroring the structured model
+//!   init in `model::weights`.
+//! * [`clustered_keys`] — a C-cluster Gaussian mixture with tight
+//!   clusters: the PQ-favorable regime the fidelity floors are asserted
+//!   on. [`cluster_centers`] + [`keys_from_centers`] let the calibration
+//!   and evaluation sets share centers while drawing independent noise,
+//!   which is the paper's §5.1 deployment setting (train on calibration
+//!   data, apply to fresh caches from the same distribution).
+
+use crate::util::rng::Pcg32;
+
+/// iid standard-normal keys, (n × d) row-major.
+pub fn gaussian_keys(n: usize, d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seed(seed);
+    (0..n * d).map(|_| rng.next_f32_std()).collect()
+}
+
+/// `n_q` query vectors, (n_q × d) row-major, iid N(0,1).
+pub fn queries(n_q: usize, d: usize, seed: u64) -> Vec<f32> {
+    gaussian_keys(n_q, d, seed ^ 0x51EE17)
+}
+
+/// `c` cluster centers, (c × d) row-major, iid N(0,1).
+pub fn cluster_centers(c: usize, d: usize, seed: u64) -> Vec<f32> {
+    assert!(c > 0 && d > 0);
+    let mut rng = Pcg32::seed(seed ^ 0xCE17E2);
+    (0..c * d).map(|_| rng.next_f32_std()).collect()
+}
+
+/// `n` keys drawn around the given (c × d) centers: cluster id uniform,
+/// key = center + sigma·N(0,1). Independent draws for any `seed`, so the
+/// same centers can back both a calibration and an evaluation set.
+pub fn keys_from_centers(
+    centers: &[f32],
+    c: usize,
+    n: usize,
+    d: usize,
+    sigma: f32,
+    seed: u64,
+) -> Vec<f32> {
+    assert_eq!(centers.len(), c * d, "centers shape mismatch");
+    let mut rng = Pcg32::seed(seed);
+    let mut out = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let id = rng.next_bounded(c as u32) as usize;
+        let center = &centers[id * d..(id + 1) * d];
+        for &cv in center {
+            out.push(cv + sigma * rng.next_f32_std());
+        }
+    }
+    out
+}
+
+/// Convenience: fresh centers + one key set in a single call.
+pub fn clustered_keys(
+    n: usize,
+    d: usize,
+    c: usize,
+    sigma: f32,
+    seed: u64,
+) -> Vec<f32> {
+    let centers = cluster_centers(c, d, seed);
+    keys_from_centers(&centers, c, n, d, sigma, seed ^ 0x0FF5E7)
+}
+
+/// Rank-`r` + noise keys: z(r) @ B(r×d) + eps·N(0,1), matching the
+/// anisotropic key-projection init of `model::weights`.
+pub fn low_rank_keys(
+    n: usize,
+    d: usize,
+    r: usize,
+    eps: f32,
+    seed: u64,
+) -> Vec<f32> {
+    assert!(r > 0 && r <= d);
+    let mut rng = Pcg32::seed(seed ^ 0x10243A);
+    let basis: Vec<f32> = (0..r * d)
+        .map(|_| rng.next_f32_std() / (r as f32).sqrt())
+        .collect();
+    let mut out = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let z: Vec<f32> = (0..r).map(|_| rng.next_f32_std()).collect();
+        for col in 0..d {
+            let mut v = 0.0f32;
+            for (k, &zk) in z.iter().enumerate() {
+                v += zk * basis[k * d + col];
+            }
+            out.push(v + eps * rng.next_f32_std());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        assert_eq!(gaussian_keys(8, 4, 1), gaussian_keys(8, 4, 1));
+        assert_ne!(gaussian_keys(8, 4, 1), gaussian_keys(8, 4, 2));
+        assert_eq!(
+            clustered_keys(16, 8, 4, 0.1, 3),
+            clustered_keys(16, 8, 4, 0.1, 3)
+        );
+        assert_eq!(
+            low_rank_keys(16, 8, 2, 0.1, 4),
+            low_rank_keys(16, 8, 2, 0.1, 4)
+        );
+    }
+
+    #[test]
+    fn shapes_are_correct() {
+        assert_eq!(gaussian_keys(7, 5, 0).len(), 35);
+        assert_eq!(cluster_centers(3, 4, 0).len(), 12);
+        let centers = cluster_centers(3, 4, 0);
+        assert_eq!(keys_from_centers(&centers, 3, 10, 4, 0.1, 1).len(), 40);
+        assert_eq!(low_rank_keys(6, 8, 3, 0.05, 2).len(), 48);
+        assert_eq!(queries(2, 16, 9).len(), 32);
+    }
+
+    #[test]
+    fn clustered_keys_sit_near_their_centers() {
+        let (c, d, sigma) = (4usize, 16usize, 0.05f32);
+        let centers = cluster_centers(c, d, 7);
+        let keys = keys_from_centers(&centers, c, 64, d, sigma, 8);
+        // every key must be within a few sigma·sqrt(d) of SOME center
+        let bound = 6.0 * sigma * (d as f32).sqrt();
+        for t in 0..64 {
+            let key = &keys[t * d..(t + 1) * d];
+            let min_d = (0..c)
+                .map(|i| {
+                    crate::tensor::dist2(key, &centers[i * d..(i + 1) * d])
+                        .sqrt()
+                })
+                .fold(f32::INFINITY, f32::min);
+            assert!(min_d < bound, "key {t} is {min_d} from nearest center");
+        }
+    }
+
+    #[test]
+    fn low_rank_keys_are_actually_low_rank() {
+        // residual energy off the top-r directions should be ~eps²·d;
+        // cheap proxy: compare quantization-friendliness per
+        // model/gpt2.rs::key_anisotropy_visible_in_cache
+        let d = 32;
+        let n = 256;
+        let lr = low_rank_keys(n, d, 4, 0.05, 11);
+        let var: f64 = lr.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+            / lr.len() as f64;
+        // rank-4 signal with unit z and 1/sqrt(r) basis scaling has
+        // per-dim variance ~1/r·r = O(1); just sanity-check spread exists
+        assert!(var > 0.01 && var.is_finite());
+    }
+}

@@ -1,0 +1,226 @@
+//! Golden-value JSON fixtures: record-then-compare regression anchors.
+//!
+//! A [`Golden`] file maps fixture names to f32 arrays. The first run of a
+//! test records the observed values (the file is created); later runs
+//! compare against the recorded values within a tolerance. Re-bless by
+//! deleting the file or setting `LOOKAT_BLESS=1`.
+//!
+//! Values are stored via their exact `f32::to_bits` representation in
+//! addition to a human-readable decimal, so a comparison at `tol = 0.0`
+//! is a true bit-stability check — JSON number round-tripping never
+//! touches the payload.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::util::json::Json;
+
+/// One golden-fixture file (lazy: loads if present, records if not).
+pub struct Golden {
+    path: PathBuf,
+    doc: Json,
+    /// true when the file did not exist and this run is recording
+    recording: bool,
+    dirty: bool,
+}
+
+impl Golden {
+    /// Open (or start recording) the golden file at `path`.
+    ///
+    /// Bless mode (`LOOKAT_BLESS` set to anything but ""/"0") re-records
+    /// the fixtures a run touches while keeping every other entry in the
+    /// file intact — blessing one test must not delete its neighbours.
+    pub fn open(path: &Path) -> anyhow::Result<Golden> {
+        let bless = std::env::var("LOOKAT_BLESS")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        Self::open_with(path, bless)
+    }
+
+    /// [`Golden::open`] with an explicit bless flag (testable without
+    /// process-global env mutation).
+    pub fn open_with(path: &Path, bless: bool) -> anyhow::Result<Golden> {
+        if path.exists() {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading golden {path:?}"))?;
+            let doc = Json::parse(&text)
+                .with_context(|| format!("parsing golden {path:?}"))?;
+            Ok(Golden {
+                path: path.to_path_buf(),
+                doc,
+                recording: bless,
+                dirty: false,
+            })
+        } else {
+            Ok(Golden {
+                path: path.to_path_buf(),
+                doc: Json::obj(),
+                recording: true,
+                dirty: false,
+            })
+        }
+    }
+
+    /// Whether this run is recording (no golden file existed).
+    pub fn recording(&self) -> bool {
+        self.recording
+    }
+
+    /// Check `values` against the recorded fixture `name`, or record
+    /// them when recording. Returns true if a comparison happened.
+    pub fn check_or_record(
+        &mut self,
+        name: &str,
+        values: &[f32],
+        tol: f32,
+    ) -> anyhow::Result<bool> {
+        if self.recording {
+            let bits: Vec<Json> = values
+                .iter()
+                .map(|&v| Json::Num(v.to_bits() as f64))
+                .collect();
+            let dec: Vec<Json> =
+                values.iter().map(|&v| Json::Num(v as f64)).collect();
+            let mut entry = Json::obj();
+            entry.set("bits", Json::Arr(bits));
+            entry.set("values", Json::Arr(dec));
+            self.doc.set(name, entry);
+            self.dirty = true;
+            return Ok(false);
+        }
+        let entry = self
+            .doc
+            .get(name)
+            .with_context(|| format!("golden fixture '{name}' missing"))?;
+        let bits = entry
+            .get("bits")
+            .and_then(|b| b.as_arr())
+            .with_context(|| format!("golden '{name}' has no bits array"))?;
+        anyhow::ensure!(
+            bits.len() == values.len(),
+            "golden '{name}': recorded {} values, observed {}",
+            bits.len(),
+            values.len()
+        );
+        for (i, (b, &got)) in bits.iter().zip(values).enumerate() {
+            let want = f32::from_bits(
+                b.as_f64()
+                    .with_context(|| format!("golden '{name}' bad bits"))?
+                    as u32,
+            );
+            let ok = if tol == 0.0 {
+                want.to_bits() == got.to_bits()
+            } else {
+                (want - got).abs() <= tol
+            };
+            anyhow::ensure!(
+                ok,
+                "golden '{name}' mismatch at {i}: recorded {want}, \
+                 observed {got} (tol {tol})"
+            );
+        }
+        Ok(true)
+    }
+
+    /// Persist newly-recorded fixtures (no-op unless recording+dirty).
+    pub fn save(&self) -> anyhow::Result<()> {
+        if !self.dirty {
+            return Ok(());
+        }
+        if let Some(parent) = self.path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&self.path, self.doc.to_string_pretty())
+            .with_context(|| format!("writing golden {:?}", self.path))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("lookat-golden-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn record_then_check_roundtrip_is_bit_exact() {
+        let path = tmp("roundtrip.json");
+        std::fs::remove_file(&path).ok();
+        let vals = [1.5f32, -0.25, 3.0e-8, 1234.5678];
+
+        let mut g = Golden::open_with(&path, false).unwrap();
+        assert!(g.recording());
+        assert!(!g.check_or_record("v", &vals, 0.0).unwrap());
+        g.save().unwrap();
+        assert!(path.exists());
+
+        let mut g2 = Golden::open_with(&path, false).unwrap();
+        assert!(!g2.recording());
+        assert!(g2.check_or_record("v", &vals, 0.0).unwrap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bless_preserves_untouched_fixtures() {
+        // blessing one fixture must keep the file's other entries
+        let path = tmp("bless-merge.json");
+        std::fs::remove_file(&path).ok();
+        let mut g = Golden::open_with(&path, false).unwrap();
+        g.check_or_record("a", &[1.0], 0.0).unwrap();
+        g.check_or_record("b", &[2.0], 0.0).unwrap();
+        g.save().unwrap();
+
+        // bless mode: existing doc is loaded, not discarded
+        let mut g2 = Golden::open_with(&path, true).unwrap();
+        assert!(g2.recording());
+        g2.check_or_record("a", &[1.5], 0.0).unwrap();
+        g2.save().unwrap();
+
+        let mut g3 = Golden::open_with(&path, false).unwrap();
+        assert!(!g3.recording());
+        assert!(g3.check_or_record("a", &[1.5], 0.0).unwrap());
+        assert!(g3.check_or_record("b", &[2.0], 0.0).unwrap(),
+                "untouched fixture must survive a bless run");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bless_off_flag_compares_instead_of_recording() {
+        let path = tmp("bless-off.json");
+        std::fs::remove_file(&path).ok();
+        let mut g = Golden::open_with(&path, false).unwrap();
+        g.check_or_record("v", &[1.0], 0.0).unwrap();
+        g.save().unwrap();
+        let g2 = Golden::open_with(&path, false).unwrap();
+        assert!(!g2.recording(), "existing file + bless off must compare");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mismatch_is_detected() {
+        let path = tmp("mismatch.json");
+        std::fs::remove_file(&path).ok();
+        let mut g = Golden::open_with(&path, false).unwrap();
+        g.check_or_record("v", &[1.0, 2.0], 0.0).unwrap();
+        g.save().unwrap();
+
+        let mut g2 = Golden::open_with(&path, false).unwrap();
+        let err = g2
+            .check_or_record("v", &[1.0, 2.5], 0.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mismatch"), "{err}");
+        // within tolerance passes
+        assert!(g2.check_or_record("v", &[1.0, 2.5], 1.0).unwrap());
+        // length change is an error
+        assert!(g2.check_or_record("v", &[1.0], 0.0).is_err());
+        // unknown fixture is an error
+        assert!(g2.check_or_record("w", &[1.0], 0.0).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

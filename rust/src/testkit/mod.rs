@@ -1,0 +1,23 @@
+//! Test support kit: seeded fixture generators, golden-value JSON
+//! fixtures, and paper-metric assertion helpers.
+//!
+//! Everything here is deterministic by construction — fixtures are
+//! parameterized by an explicit [`crate::util::rng::Pcg32`] seed, so the
+//! paper-fidelity suite (`rust/tests/paper_fidelity.rs`) is bit-stable
+//! across runs and platforms. The module is part of the public crate so
+//! integration tests, benches and downstream experiment code can share
+//! one vocabulary of inputs.
+
+pub mod assertions;
+pub mod fixtures;
+pub mod golden;
+
+pub use assertions::{
+    assert_all_close, assert_cosine_at_least, assert_spearman_at_least,
+    cosine, spearman,
+};
+pub use fixtures::{
+    cluster_centers, clustered_keys, gaussian_keys, keys_from_centers,
+    low_rank_keys, queries,
+};
+pub use golden::Golden;

@@ -78,14 +78,50 @@ impl Json {
         }
     }
 
-    /// Insert into an object (panics if not an object).
+    /// Insert into an object. On a non-object receiver this is a no-op
+    /// with a logged warning — report-building code paths chain many
+    /// `set` calls and must not take the process down over one bad value
+    /// (previously this panicked; see the regression test).
     pub fn set(&mut self, key: &str, val: Json) -> &mut Json {
+        if let Json::Obj(m) = self {
+            m.insert(key.to_string(), val);
+        } else {
+            crate::log_warn!(
+                "Json::set('{key}') ignored: receiver is {} not an object",
+                self.type_name()
+            );
+        }
+        self
+    }
+
+    /// Fallible insert for callers that want to handle the mismatch.
+    pub fn try_set(&mut self, key: &str, val: Json)
+        -> Result<&mut Json, JsonError>
+    {
         match self {
             Json::Obj(m) => {
                 m.insert(key.to_string(), val);
-                self
+                Ok(self)
             }
-            _ => panic!("Json::set on non-object"),
+            other => Err(JsonError {
+                pos: 0,
+                msg: format!(
+                    "set('{key}') on {} (expected object)",
+                    other.type_name()
+                ),
+            }),
+        }
+    }
+
+    /// Variant name, for diagnostics.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
         }
     }
 
@@ -204,13 +240,21 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
-/// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+/// JSON error: a parse failure with byte offset, or a value-model
+/// misuse from [`Json::try_set`] (reported with `pos` 0).
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     b: &'a [u8],
@@ -482,6 +526,27 @@ mod tests {
         let mut o = Json::obj();
         o.set("x", Json::Num(7.0));
         assert_eq!(o.get("x").unwrap().as_usize(), Some(7));
+    }
+
+    #[test]
+    fn set_on_non_object_is_noop_not_panic() {
+        // regression: this used to panic!("Json::set on non-object")
+        let mut n = Json::Num(1.0);
+        n.set("x", Json::Num(2.0));
+        assert_eq!(n, Json::Num(1.0), "value must be unchanged");
+        let mut a = Json::Arr(vec![]);
+        a.set("k", Json::Null).set("k2", Json::Null); // chaining still ok
+        assert_eq!(a, Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn try_set_reports_type_mismatch() {
+        let mut o = Json::obj();
+        assert!(o.try_set("x", Json::Num(7.0)).is_ok());
+        assert_eq!(o.get("x").unwrap().as_usize(), Some(7));
+        let mut s = Json::Str("nope".into());
+        let err = s.try_set("x", Json::Null).unwrap_err();
+        assert!(err.msg.contains("string"), "{}", err.msg);
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //! AOT artifacts (python-authored, rust-served — the 3-layer contract in
 //! the actual serving loop). Skips when artifacts aren't built.
 
-use lookat::coordinator::{AttentionBackend, Engine, EngineConfig};
+use lookat::coordinator::{
+    AttentionBackend, Batcher, BatcherConfig, Engine, EngineConfig, Request,
+};
 use lookat::model::{ByteTokenizer, ModelConfig};
 use lookat::runtime::default_artifacts_dir;
 
@@ -70,6 +72,90 @@ fn pjrt_lookat_backend_serves_and_matches_rust_lookat() {
 
     // identical codebooks (same seed/calibration) + identical ADC math
     assert_eq!(rust_toks, pjrt_toks);
+}
+
+// ---- batcher coverage (no artifacts needed: pure-rust fp16 engine) ----
+
+fn tiny_batcher(max_batch: usize) -> Batcher {
+    let engine = Engine::build(&EngineConfig {
+        model: ModelConfig::test_tiny(),
+        backend: AttentionBackend::Fp16Exact,
+        seed: 13,
+        cache_blocks: 64,
+        calib_tokens: 48,
+    })
+    .unwrap();
+    Batcher::new(engine, BatcherConfig { max_batch, max_queue: 32 })
+}
+
+fn req(id: u64, gen: usize) -> Request {
+    Request {
+        id,
+        prompt: ByteTokenizer::new().encode("integration prompt"),
+        max_new_tokens: gen,
+        arrival_s: 0.0,
+    }
+}
+
+#[test]
+fn full_batch_drains_fifo() {
+    // submit 2x the batch width with staggered decode lengths so every
+    // completion lands on its own tick; the queue must drain FCFS: ids
+    // admitted in submission order and completed in submission order
+    let mut b = tiny_batcher(3);
+    for i in 0..6u64 {
+        assert!(b.submit(req(i, 1 + i as usize)));
+    }
+    assert_eq!(b.queued(), 6);
+    let mut now = 0.0;
+    let mut iters = 0;
+    while !b.idle() {
+        b.admit(now);
+        assert!(b.active() <= 3, "batch overflow");
+        let produced = b.step(now).unwrap();
+        assert!(produced <= 3, "one token per active per tick");
+        now += 0.01;
+        iters += 1;
+        assert!(iters < 500, "batcher failed to drain");
+    }
+    assert_eq!(b.completed.len(), 6);
+    let order: Vec<u64> = b.completed.iter().map(|c| c.id).collect();
+    assert_eq!(order, vec![0, 1, 2, 3, 4, 5], "FIFO drain order");
+    // admission times are monotone in submission order too
+    for w in b.completed.windows(2) {
+        assert!(
+            w[1].admitted_s >= w[0].admitted_s - 1e-12,
+            "admission must be FCFS"
+        );
+    }
+    assert_eq!(b.rejected.len(), 0);
+    assert_eq!(b.engine().cache_stats().tokens, 0, "cache fully released");
+}
+
+#[test]
+fn empty_tick_does_not_spin() {
+    // admit + step on an empty batcher must be cheap no-ops: no tokens,
+    // no completions, no cache churn — the serving loop's idle path
+    let mut b = tiny_batcher(2);
+    assert!(b.idle());
+    let t0 = std::time::Instant::now();
+    for tick in 0..100 {
+        b.admit(tick as f64);
+        let produced = b.step(tick as f64).unwrap();
+        assert_eq!(produced, 0, "empty tick produced tokens");
+    }
+    assert!(b.idle());
+    assert_eq!(b.queued(), 0);
+    assert_eq!(b.active(), 0);
+    assert_eq!(b.completed.len(), 0);
+    assert_eq!(b.engine().cache_stats().tokens, 0);
+    // 100 empty ticks must be effectively instantaneous (no decode work,
+    // no sleeping, no busy model calls)
+    assert!(
+        t0.elapsed() < std::time::Duration::from_millis(500),
+        "empty ticks took {:?}",
+        t0.elapsed()
+    );
 }
 
 #[test]

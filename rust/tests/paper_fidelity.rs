@@ -1,0 +1,215 @@
+//! Paper-fidelity integration suite: the executable form of the paper's
+//! headline claims, deterministic and self-contained.
+//!
+//! * rank correlation ρ > 0.95 between `lookat_attention` and
+//!   `exact_attention` score vectors at the 64× (m=2), 32× (m=4) and
+//!   16× (m=8) compression configurations, K = 256, across sequence
+//!   lengths {128, 512, 1024} (paper abstract + Table 3);
+//! * output-fidelity floors at m ∈ {4, 8} (paper Table 1's ≥ 0.95
+//!   cosine band);
+//! * bit-stability: two end-to-end runs of the full train→encode→attend
+//!   pipeline produce identical f32 bits (the property every experiment
+//!   table depends on for reproducibility).
+//!
+//! Keys are drawn from a tight Gaussian-mixture fixture
+//! (`testkit::fixtures`): the low-intrinsic-dimension regime the paper
+//! assumes of transformer keys (§1), with codebooks trained on a
+//! *held-out* calibration set sharing the mixture (§5.1's deployment
+//! setting). Values and queries are iid normal.
+
+use lookat::attention::{exact_attention, lookat_attention};
+use lookat::pq::{LookupTable, PqCodec, TrainOpts, NUM_CENTROIDS};
+use lookat::testkit::{assertions, fixtures};
+
+const D_K: usize = 64;
+const N_CLUSTERS: usize = 64;
+const SIGMA: f32 = 0.02;
+const CALIB_N: usize = 1024;
+const LENS: [usize; 3] = [128, 512, 1024];
+const SEED: u64 = 0x1007AB;
+
+/// One (m, L) evaluation: raw ADC/exact score vectors plus the attention
+/// outputs for the last of three probe queries.
+struct Eval {
+    rho_min: f64,
+    cosine_min: f64,
+    /// concatenated ADC scores across probes (bit-stability payload)
+    scores_apx: Vec<f32>,
+    out_apx: Vec<f32>,
+}
+
+/// Train once on held-out calibration keys, then evaluate ADC vs exact
+/// attention at every requested length. Pure function of (m, seed).
+fn run_pipeline(m: usize, seed: u64) -> Vec<(usize, Eval)> {
+    let centers = fixtures::cluster_centers(N_CLUSTERS, D_K, seed);
+    let calib = fixtures::keys_from_centers(
+        &centers, N_CLUSTERS, CALIB_N, D_K, SIGMA, seed ^ 0xCA11B);
+    let codec = PqCodec::train(
+        &calib,
+        D_K,
+        m,
+        NUM_CENTROIDS,
+        &TrainOpts { iters: 10, seed: seed ^ 0xC0DE, tol: 1e-3 },
+    );
+    assert_eq!(
+        codec.compression_ratio(),
+        (D_K * 2 / m) as f64,
+        "m={m} must give the paper's {}x ratio",
+        D_K * 2 / m
+    );
+
+    LENS.iter()
+        .map(|&len| {
+            let keys = fixtures::keys_from_centers(
+                &centers, N_CLUSTERS, len, D_K, SIGMA,
+                seed ^ 0xE7A1 ^ ((len as u64) << 16));
+            let values =
+                fixtures::gaussian_keys(len, D_K, seed ^ len as u64);
+            let codes = codec.encode_batch(&keys, len);
+            assert_eq!(codes.len(), len * m);
+            assert!(
+                codes.iter().all(|&c| (c as usize) < NUM_CENTROIDS),
+                "codes must stay below K"
+            );
+
+            let probes = fixtures::queries(3, D_K, seed ^ 0x9E_17);
+            let mut rho_min = f64::INFINITY;
+            let mut cosine_min = f64::INFINITY;
+            let mut scores_apx = Vec::new();
+            let mut out_apx = Vec::new();
+            for p in 0..3 {
+                let q = &probes[p * D_K..(p + 1) * D_K];
+                let exact = exact_attention(q, &keys, &values, len);
+                let approx =
+                    lookat_attention(q, &codes, &codec, &values, len);
+
+                // raw score vectors (pre-softmax rank structure): ADC
+                // scores vs exact dot products
+                let lut = LookupTable::build(q, &codec.codebook);
+                let s_apx = lut.scores(&codes, len);
+                let s_ref: Vec<f32> = (0..len)
+                    .map(|l| {
+                        lookat::tensor::dot(
+                            q, &keys[l * D_K..(l + 1) * D_K])
+                    })
+                    .collect();
+                let ctx = format!("m={m} L={len} probe={p}");
+                let rho =
+                    assertions::assert_spearman_at_least(
+                        &s_ref, &s_apx, 0.95, &ctx);
+                let cos = assertions::assert_cosine_at_least(
+                    &exact.out, &approx.out, 0.90, &ctx);
+                rho_min = rho_min.min(rho);
+                cosine_min = cosine_min.min(cos);
+                scores_apx.extend_from_slice(&s_apx);
+                out_apx = approx.out;
+            }
+            (len, Eval { rho_min, cosine_min, scores_apx, out_apx })
+        })
+        .collect()
+}
+
+#[test]
+fn rank_correlation_exceeds_0_95_at_paper_compressions() {
+    // 64x (m=2), 32x (m=4), 16x (m=8) — acceptance floor is rho > 0.95
+    // at every length and every probe query; the per-probe assertion
+    // already enforces it, this test keeps the aggregate visible.
+    for m in [2usize, 4, 8] {
+        for (len, eval) in run_pipeline(m, SEED) {
+            assert!(
+                eval.rho_min > 0.95,
+                "m={m} L={len}: min rho {:.4}",
+                eval.rho_min
+            );
+        }
+    }
+}
+
+#[test]
+fn output_fidelity_floors_at_m4_and_m8() {
+    // Table 1's band: LOOKAT-4/8 keep attention outputs within a ≥0.95
+    // cosine of the FP16 oracle on PQ-favorable keys.
+    for m in [4usize, 8] {
+        for (len, eval) in run_pipeline(m, SEED) {
+            assert!(
+                eval.cosine_min > 0.95,
+                "m={m} L={len}: min cosine {:.4}",
+                eval.cosine_min
+            );
+        }
+    }
+}
+
+#[test]
+fn pipeline_is_bit_stable_across_runs() {
+    // Run the full train -> encode -> attend pipeline twice at m=4 and
+    // require *identical f32 bits* everywhere — this is what makes the
+    // experiment tables regenerate bit-identically.
+    let a = run_pipeline(4, SEED);
+    let b = run_pipeline(4, SEED);
+    assert_eq!(a.len(), b.len());
+    for ((len_a, ea), (len_b, eb)) in a.iter().zip(&b) {
+        assert_eq!(len_a, len_b);
+        assert_eq!(ea.rho_min.to_bits(), eb.rho_min.to_bits());
+        assert_eq!(ea.cosine_min.to_bits(), eb.cosine_min.to_bits());
+        assert_eq!(ea.scores_apx.len(), eb.scores_apx.len());
+        for (x, y) in ea.scores_apx.iter().zip(&eb.scores_apx) {
+            assert_eq!(x.to_bits(), y.to_bits(), "ADC scores drifted");
+        }
+        for (x, y) in ea.out_apx.iter().zip(&eb.out_apx) {
+            assert_eq!(x.to_bits(), y.to_bits(), "outputs drifted");
+        }
+    }
+}
+
+#[test]
+fn golden_fixture_anchors_the_m4_scores() {
+    // Golden-value regression: the first 32 ADC scores of the m=4,
+    // L=128 configuration. On a checkout without the fixture the run
+    // records it AND immediately re-opens the file to do a real
+    // bit-exact comparison (so even the recording run verifies the
+    // round trip); later runs compare against disk. Re-bless with
+    // LOOKAT_BLESS=1 or by deleting the file.
+    let evals = run_pipeline(4, SEED);
+    let (len, eval) = &evals[0];
+    assert_eq!(*len, 128);
+    let head = &eval.scores_apx[..32];
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/paper_fidelity_golden.json");
+    let mut golden = lookat::testkit::Golden::open(&path).unwrap();
+    let compared = golden.check_or_record("m4_l128_scores", head, 0.0)
+        .unwrap();
+    golden.save().unwrap();
+    if !compared {
+        eprintln!("golden recorded at {path:?} (first run)");
+        // recording run: reload from disk and compare for real — the
+        // golden file must round-trip the exact bits it just captured
+        let mut reread =
+            lookat::testkit::Golden::open_with(&path, false).unwrap();
+        assert!(
+            reread.check_or_record("m4_l128_scores", head, 0.0).unwrap(),
+            "re-opened golden must compare, not re-record"
+        );
+    }
+}
+
+#[test]
+fn degradation_tracks_the_o_dk_over_mk_bound() {
+    // Proposition 1 direction check on the fixture: the rank-correlation
+    // deficit (1 - rho) must not grow as m·K grows. m=4 halves d_k/(mK)
+    // vs m=2 (0.0625 vs 0.125 at K=256), so its worst-case deficit
+    // should be no larger (small jitter tolerated).
+    let rho_at = |m: usize| {
+        run_pipeline(m, SEED)
+            .iter()
+            .map(|(_, e)| e.rho_min)
+            .fold(f64::INFINITY, f64::min)
+    };
+    let d4 = 1.0 - rho_at(4);
+    let d2 = 1.0 - rho_at(2);
+    assert!(
+        d4 <= d2 + 0.02,
+        "deficit must shrink (or hold) as m grows: 1-rho m=4 {d4:.4} vs \
+         m=2 {d2:.4}"
+    );
+}

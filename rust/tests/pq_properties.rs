@@ -1,0 +1,143 @@
+//! Property tests for the PQ invariants, driven by the crate's
+//! `util::proptest` mini-framework (`lookat::prop_assert!`):
+//!
+//! 1. K-Means is deterministic for a fixed `Pcg32` seed;
+//! 2. `PqCodec::encode_batch` codes are always `< K`;
+//! 3. ADC lookup scores equal naive decode-then-dot-product within 1e-4.
+
+use lookat::pq::kmeans::kmeans;
+use lookat::pq::{LookupTable, PqCodec, TrainOpts};
+use lookat::prop_assert;
+use lookat::util::proptest::Gen;
+use lookat::util::rng::Pcg32;
+
+/// Random but structurally valid (keys, d_k, m, k) tuple.
+fn random_pq_case(g: &mut Gen) -> (Vec<f32>, usize, usize, usize) {
+    let m = *g.choose(&[2usize, 4, 8]);
+    let d_sub = *g.choose(&[4usize, 8]);
+    let d_k = m * d_sub;
+    let k = *g.choose(&[4usize, 8, 16, 32]);
+    let n = g.usize_in(k.max(16), 96);
+    // scaled-down values keep dot magnitudes small so the 1e-4 ADC
+    // tolerance is a genuine relative bound
+    let keys: Vec<f32> =
+        g.normal_vec(n * d_k).iter().map(|v| v * 0.5).collect();
+    (keys, d_k, m, k)
+}
+
+#[test]
+fn kmeans_is_deterministic_for_fixed_seed() {
+    prop_assert!("kmeans-deterministic", 25, |g: &mut Gen| {
+        let dim = g.usize_in(2, 8);
+        let k = g.usize_in(2, 12);
+        let n = g.usize_in(k, 80);
+        let pts = g.normal_vec(n * dim);
+        let seed = g.rng.next_u64();
+        let a = kmeans(&pts, dim, k, 15, 1e-6, &mut Pcg32::seed(seed));
+        let b = kmeans(&pts, dim, k, 15, 1e-6, &mut Pcg32::seed(seed));
+        if a.centroids != b.centroids {
+            return Err(format!(
+                "centroids diverged for seed {seed:#x}"
+            ));
+        }
+        if a.inertia.to_bits() != b.inertia.to_bits() {
+            return Err(format!(
+                "inertia diverged for seed {seed:#x}: {} vs {}",
+                a.inertia, b.inertia
+            ));
+        }
+        if a.iters_run != b.iters_run {
+            return Err("iteration count diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn encode_batch_codes_always_below_k() {
+    prop_assert!("codes-below-k", 25, |g: &mut Gen| {
+        let (keys, d_k, m, k) = random_pq_case(g);
+        let n = keys.len() / d_k;
+        let codec = PqCodec::train(
+            &keys,
+            d_k,
+            m,
+            k,
+            &TrainOpts { iters: 6, seed: g.rng.next_u64(), tol: 1e-4 },
+        );
+        let codes = codec.encode_batch(&keys, n);
+        if codes.len() != n * m {
+            return Err(format!(
+                "expected {} codes, got {}",
+                n * m,
+                codes.len()
+            ));
+        }
+        match codes.iter().position(|&c| c as usize >= k) {
+            Some(i) => Err(format!(
+                "code {} at {i} >= K={k} (m={m}, d_k={d_k})",
+                codes[i]
+            )),
+            None => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn adc_scores_equal_decode_then_dot_within_1e4() {
+    prop_assert!("adc-equals-decode-dot", 25, |g: &mut Gen| {
+        let (keys, d_k, m, k) = random_pq_case(g);
+        let n = keys.len() / d_k;
+        let codec = PqCodec::train(
+            &keys,
+            d_k,
+            m,
+            k,
+            &TrainOpts { iters: 6, seed: g.rng.next_u64(), tol: 1e-4 },
+        );
+        let codes = codec.encode_batch(&keys, n);
+        let q: Vec<f32> =
+            g.normal_vec(d_k).iter().map(|v| v * 0.5).collect();
+        let lut = LookupTable::build(&q, &codec.codebook);
+        let batch = lut.scores(&codes, n);
+        for l in 0..n {
+            let code = &codes[l * m..(l + 1) * m];
+            let naive = lookat::tensor::dot(&q, &codec.decode(code));
+            let scalar = lut.score(code);
+            if (scalar - naive).abs() > 1e-4 {
+                return Err(format!(
+                    "l={l}: lut.score {scalar} vs decode-dot {naive} \
+                     (m={m}, k={k}, d_k={d_k})"
+                ));
+            }
+            if (batch[l] - naive).abs() > 1e-4 {
+                return Err(format!(
+                    "l={l}: batched {} vs decode-dot {naive}",
+                    batch[l]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn train_then_encode_is_deterministic_end_to_end() {
+    // codec-level counterpart of the kmeans property: same opts -> same
+    // codebook bits -> same codes
+    prop_assert!("codec-deterministic", 10, |g: &mut Gen| {
+        let (keys, d_k, m, k) = random_pq_case(g);
+        let n = keys.len() / d_k;
+        let opts =
+            TrainOpts { iters: 5, seed: g.rng.next_u64(), tol: 1e-4 };
+        let a = PqCodec::train(&keys, d_k, m, k, &opts);
+        let b = PqCodec::train(&keys, d_k, m, k, &opts);
+        if a.codebook != b.codebook {
+            return Err("codebooks diverged".into());
+        }
+        if a.encode_batch(&keys, n) != b.encode_batch(&keys, n) {
+            return Err("codes diverged".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,170 @@
+//! API-compatible **stub** of the small xla-rs / PJRT surface that
+//! `lookat::runtime::executor` uses.
+//!
+//! The offline build image does not vendor the real `xla` crate (it links
+//! a multi-hundred-MB xla_extension). This stub keeps `--features xla`
+//! *compiling* everywhere; every runtime entry point returns an error
+//! telling the operator to patch in a real checkout:
+//!
+//! ```toml
+//! # .cargo/config.toml or workspace Cargo.toml
+//! [patch.crates-io]            # or a [patch."path"] override
+//! xla = { path = "/path/to/xla-rs" }
+//! ```
+//!
+//! Keep the type/method signatures in sync with
+//! `rust/src/runtime/executor.rs` — that file is the single consumer.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: carries a static explanation.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: this build links the vendored xla *stub*; patch the \
+         real xla-rs crate in to execute HLO (see rust/README.md)"
+    )))
+}
+
+/// Element types a [`Literal`] can hold in this stub.
+pub trait NativeElem: Copy {}
+impl NativeElem for f32 {}
+impl NativeElem for i32 {}
+
+/// Host-side tensor literal (stub: stores nothing).
+#[derive(Clone, Debug, Default)]
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1<T: NativeElem>(_data: &[T]) -> Literal {
+        Literal { _priv: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { _priv: () })
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        stub_err("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T: NativeElem>(&self) -> Result<Vec<T>> {
+        stub_err("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto> {
+        stub_err("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation handle (stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Device-side buffer returned by an execution (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+/// Literal-like argument types accepted by [`PjRtLoadedExecutable::execute`].
+pub trait AsLiteral {}
+impl AsLiteral for Literal {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsLiteral>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client (stub: construction fails loudly so no one mistakes the
+/// stub for a working runtime).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub_err("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        stub_err("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn literal_construction_is_cheap() {
+        let l = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2]).unwrap();
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}
