@@ -25,6 +25,7 @@ fn run_backend(backend: AttentionBackend) -> anyhow::Result<()> {
             seed: 11,
             cache_blocks: 512,
             calib_tokens: 256,
+            decode_threads: 0,
         },
         batcher: BatcherConfig { max_batch: 4, max_queue: 128 },
         max_prompt_tokens: 120,

@@ -99,7 +99,7 @@ fn main() -> anyhow::Result<()> {
                            &TrainOpts { iters: 3, ..Default::default() })
         })
         .collect();
-    let storage = KeyStorage::Pq { codecs: std::sync::Arc::new(codecs) };
+    let storage = KeyStorage::pq(codecs)?;
     b.run_items("kvcache/append_pq4_12h", 1.0, || {
         let mut c = KvCache::new(h, d_k, 24, storage.clone());
         c.create_seq(1).unwrap();
@@ -122,6 +122,22 @@ fn main() -> anyhow::Result<()> {
             || {
                 c.gather_keys_into(1, 3, &mut out).unwrap();
                 black_box(&out);
+            },
+        );
+        // the zero-copy path the LOOKAT kernel uses instead of gathering
+        // (reads every value lane so the byte count matches the work)
+        b.run_throughput(
+            "kvcache/block_scan_values_L512",
+            512.0,
+            (512 * d_k * 4) as f64,
+            || {
+                let mut acc = 0.0f32;
+                for blk in c.blocks(1, 3).unwrap() {
+                    for v in blk.values {
+                        acc += *v;
+                    }
+                }
+                black_box(acc);
             },
         );
     }

@@ -1,7 +1,19 @@
 //! Serving throughput bench: the coordinator end-to-end on the same
-//! trace under every backend — decode tok/s, TTFT, peak key-cache bytes.
+//! trace under every backend × decode batch width — decode tok/s, TTFT,
+//! peak key-cache bytes.
 //!
 //!   cargo bench --bench serving_throughput
+//!
+//! Each backend builds one engine (so codebook training and weight init
+//! stay out of the comparison) and serves a fresh copy of the same
+//! 16-request trace at batch widths 1, 4 and 16. Batch 1 is the serial
+//! baseline; wider batches exercise the batched decode pipeline's
+//! (seq, head) fan-out. Two artifacts are written:
+//!
+//! * `artifacts/reports/serving_throughput.json` — full per-run reports
+//! * `<repo root>/BENCH_serving.json` — the machine-readable perf
+//!   trajectory CI uploads (tokens/s per backend per batch width, plus
+//!   the batch-16-vs-1 speedup)
 
 use lookat::coordinator::{
     AttentionBackend, BatcherConfig, EngineConfig, Router, RouterConfig,
@@ -10,34 +22,61 @@ use lookat::model::ModelConfig;
 use lookat::util::json::Json;
 use lookat::workload::{TraceConfig, TraceGenerator};
 
-fn bench_backend(backend: AttentionBackend)
-    -> anyhow::Result<lookat::coordinator::ServingReport>
-{
+const BATCH_SIZES: [usize; 3] = [1, 4, 16];
+
+/// Short prompts, long generations: decode throughput (the batched
+/// pipeline) is the quantity under test, so generation dominates.
+fn trace() -> Vec<lookat::workload::RequestSpec> {
+    TraceGenerator::new(TraceConfig {
+        rate: 1000.0, // saturating: throughput-bound measurement
+        num_requests: 16,
+        prompt_chars: (10, 30),
+        gen_tokens: (48, 64),
+        seed: 5150,
+    })
+    .generate()
+}
+
+fn bench_backend(backend: AttentionBackend) -> anyhow::Result<Json> {
     let mut model = ModelConfig::gpt2_layer0();
     model.n_layer = 2;
     let mut router = Router::build(RouterConfig {
         engine: EngineConfig {
             model,
-            backend,
+            backend: backend.clone(),
             seed: 77,
             cache_blocks: 512,
             calib_tokens: 192,
+            decode_threads: 0,
         },
-        batcher: BatcherConfig { max_batch: 4, max_queue: 256 },
+        batcher: BatcherConfig { max_batch: 1, max_queue: 256 },
         max_prompt_tokens: 96,
     })?;
-    let trace = TraceGenerator::new(TraceConfig {
-        rate: 50.0, // saturating: throughput-bound measurement
-        num_requests: 16,
-        prompt_chars: (150, 350),
-        gen_tokens: (8, 16),
-        seed: 5150,
-    })
-    .generate();
-    let reqs = router.tokenize_trace(&trace);
-    let report = router.serve_trace(reqs)?;
-    println!("{}", report.pretty());
-    Ok(report)
+
+    let mut o = Json::obj();
+    o.set("backend", Json::Str(backend.name()));
+    let mut runs = Vec::new();
+    let mut tok_s_by_batch = Vec::new();
+    for &bs in &BATCH_SIZES {
+        router.set_max_batch(bs);
+        let reqs = router.tokenize_trace(&trace());
+        let report = router.serve_trace(reqs)?;
+        println!("batch={bs:<3} {}", report.pretty());
+        tok_s_by_batch.push(report.throughput_tok_s());
+        o.set(
+            &format!("batch_{bs}_tok_s"),
+            Json::Num(report.throughput_tok_s()),
+        );
+        let mut run = report.to_json();
+        run.set("batch", Json::Num(bs as f64));
+        runs.push(run);
+    }
+    o.set(
+        "speedup_b16_vs_b1",
+        Json::Num(tok_s_by_batch[2] / tok_s_by_batch[0].max(1e-12)),
+    );
+    o.set("runs", Json::Arr(runs));
+    Ok(o)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -48,17 +87,44 @@ fn main() -> anyhow::Result<()> {
         AttentionBackend::Lookat { m: 4, k: 256 },
         AttentionBackend::Lookat { m: 2, k: 256 },
     ];
-    let mut arr = Vec::new();
+    let mut results = Vec::new();
     for b in backends {
-        let report = bench_backend(b)?;
-        arr.push(report.to_json());
+        results.push(bench_backend(b)?);
     }
+
+    let mut top = Json::obj();
+    top.set("bench", Json::Str("serving_throughput".into()));
+    top.set(
+        "batch_sizes",
+        Json::Arr(BATCH_SIZES.iter().map(|&b| Json::Num(b as f64)).collect()),
+    );
+    top.set(
+        "threads",
+        Json::Num(
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1) as f64,
+        ),
+    );
+    top.set("results", Json::Arr(results));
+
+    // full per-run reports next to the other experiment artifacts
     let dir = lookat::experiments::report::reports_dir();
     std::fs::create_dir_all(&dir)?;
     std::fs::write(
         dir.join("serving_throughput.json"),
-        Json::Arr(arr).to_string_pretty(),
+        top.to_string_pretty(),
     )?;
-    println!("\n[bench] serving_throughput written to artifacts/reports/");
+
+    // machine-readable perf trajectory at the repo root for CI upload
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .join("BENCH_serving.json");
+    std::fs::write(&root, top.to_string_pretty())?;
+    println!(
+        "\n[bench] serving_throughput written to artifacts/reports/ and {}",
+        root.display()
+    );
     Ok(())
 }

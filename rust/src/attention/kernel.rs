@@ -1,0 +1,540 @@
+//! Batched decode kernels: the [`AttentionKernel`] trait and its five
+//! backends (fp16, lookat, scalar-quant, pjrt-fp16, pjrt-lookat).
+//!
+//! The engine builds one [`DecodePlan`] per layer per batcher tick —
+//! every (seq, head) of the drained batch at once — and hands it to the
+//! kernel. The pure-rust kernels fan the independent items out on
+//! `util::threadpool`; the PJRT kernels own the runtime client (whose
+//! handles are not `Send`) and walk the plan's per-sequence groups
+//! serially, packing one padded artifact call per sequence exactly as
+//! the old per-seq path did.
+//!
+//! The LOOKAT kernel is the paper's bandwidth story end-to-end: it
+//! builds the LUT per (seq, head) query, scans the PQ codes *in place*
+//! over the cache's head-major blocks ([`LookupTable::scores_blocks`])
+//! and accumulates α·V straight from the same views — zero per-step
+//! key-code copies.
+
+use anyhow::{bail, Context};
+
+use super::{finish_attention_blocks, AttnOutput};
+use crate::attention;
+use crate::kvcache::{CacheError, KvCache, SeqId};
+use crate::pq::LookupTable;
+use crate::runtime::{InputArg, Runtime};
+use crate::util::threadpool::parallel_try_map;
+
+/// One (seq, head) attention task of a decode tick.
+pub struct WorkItem<'a> {
+    pub seq: SeqId,
+    pub head: usize,
+    /// this head's query, (d_k)
+    pub q: &'a [f32],
+}
+
+/// All attention work of one layer for one decode tick.
+///
+/// Items are seq-major: the engine emits every head of a sequence
+/// consecutively, heads ascending — the PJRT kernels rely on this to
+/// regroup items into one padded artifact call per sequence.
+pub struct DecodePlan<'a> {
+    /// the layer's cache; every item resolves against it
+    pub cache: &'a KvCache,
+    pub d_k: usize,
+    /// worker threads to fan items out on (1 = serial)
+    pub threads: usize,
+    pub items: Vec<WorkItem<'a>>,
+}
+
+/// A batched attention backend: scores and attends every (seq, head)
+/// item of a [`DecodePlan`], returning outputs in item order.
+pub trait AttentionKernel {
+    /// Kernel name (diagnostics / reports).
+    fn name(&self) -> &'static str;
+
+    /// Run the whole plan. Outputs align with `plan.items`.
+    fn decode_batch(&mut self, plan: &DecodePlan<'_>)
+        -> anyhow::Result<Vec<AttnOutput>>;
+}
+
+std::thread_local! {
+    /// Per-thread gather scratch (keys, values) for the dense kernels:
+    /// two allocations per fan-out worker instead of two per (seq,
+    /// head) item. Fan-out workers are scoped threads that live for
+    /// one `parallel_try_map` call, so reuse spans that call's chunk of
+    /// items; only the serial (threads = 1) path, which runs on the
+    /// engine thread, carries capacity across decode ticks.
+    static GATHER_SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Gather one item's keys and values into the thread's scratch and
+/// score with `f`.
+fn with_gathered<F>(
+    plan: &DecodePlan<'_>,
+    it: &WorkItem<'_>,
+    f: F,
+) -> Result<AttnOutput, CacheError>
+where
+    F: FnOnce(&[f32], &[f32], usize) -> AttnOutput,
+{
+    GATHER_SCRATCH.with(|s| {
+        let (keys, vals) = &mut *s.borrow_mut();
+        let n = plan.cache.gather_keys_into(it.seq, it.head, keys)?;
+        plan.cache.gather_values_into(it.seq, it.head, vals)?;
+        Ok(f(keys, vals, n))
+    })
+}
+
+/// Exact attention over FP16-stored keys (gathers the paged cache into
+/// contiguous scratch per item — dense scoring needs one flat tensor).
+pub struct Fp16Kernel;
+
+impl AttentionKernel for Fp16Kernel {
+    fn name(&self) -> &'static str {
+        "fp16"
+    }
+
+    fn decode_batch(&mut self, plan: &DecodePlan<'_>)
+        -> anyhow::Result<Vec<AttnOutput>>
+    {
+        parallel_try_map(plan.items.len(), plan.threads, |i| {
+            let it = &plan.items[i];
+            with_gathered(plan, it, |keys, vals, n| {
+                attention::exact_attention(it.q, keys, vals, n)
+            })
+        })
+        .map_err(|e: CacheError| anyhow::anyhow!("fp16 decode: {e}"))
+    }
+}
+
+/// INT4/INT8 round-trip baseline (gathers, dequantizes, then scores —
+/// the bandwidth-bound path the paper compares against).
+pub struct ScalarQuantKernel {
+    pub bits: u8,
+}
+
+impl AttentionKernel for ScalarQuantKernel {
+    fn name(&self) -> &'static str {
+        "scalar-quant"
+    }
+
+    fn decode_batch(&mut self, plan: &DecodePlan<'_>)
+        -> anyhow::Result<Vec<AttnOutput>>
+    {
+        let bits = self.bits;
+        parallel_try_map(plan.items.len(), plan.threads, |i| {
+            let it = &plan.items[i];
+            with_gathered(plan, it, |keys, vals, n| {
+                attention::scalar_quant_attention(it.q, keys, vals, n, bits)
+            })
+        })
+        .map_err(|e: CacheError| anyhow::anyhow!("int{bits} decode: {e}"))
+    }
+}
+
+/// LOOKAT ADC over the block-resident PQ codes: LUT build per item,
+/// then scores and α·V accumulated straight from the cache's
+/// [`crate::kvcache::BlockView`]s — no gather copies at all.
+pub struct LookatKernel;
+
+impl AttentionKernel for LookatKernel {
+    fn name(&self) -> &'static str {
+        "lookat"
+    }
+
+    fn decode_batch(&mut self, plan: &DecodePlan<'_>)
+        -> anyhow::Result<Vec<AttnOutput>>
+    {
+        let codecs = plan
+            .cache
+            .codecs()
+            .context("lookat kernel needs a PQ cache")?
+            .clone();
+        parallel_try_map(plan.items.len(), plan.threads, |i| {
+            let it = &plan.items[i];
+            let lut = LookupTable::build(it.q, &codecs[it.head].codebook);
+            let n = plan.cache.seq_len(it.seq)?;
+            let mut scores = Vec::with_capacity(n);
+            lut.scores_blocks(
+                plan.cache.blocks(it.seq, it.head)?.map(|b| b.codes),
+                &mut scores,
+            );
+            Ok(finish_attention_blocks(
+                scores,
+                plan.cache.blocks(it.seq, it.head)?,
+                plan.d_k,
+            ))
+        })
+        .map_err(|e: CacheError| anyhow::anyhow!("lookat decode: {e}"))
+    }
+}
+
+/// Smallest artifact length that fits `n` cached tokens.
+fn pjrt_len_for(lens: &[usize], n: usize) -> anyhow::Result<usize> {
+    lens.iter().copied().find(|&l| l >= n).with_context(|| {
+        format!(
+            "cache length {n} exceeds largest artifact L={:?}",
+            lens.last()
+        )
+    })
+}
+
+/// Split a seq-major plan into per-sequence groups of `h` items and
+/// check the ordering contract the engine promises.
+fn seq_groups<'p, 'a>(
+    plan: &'p DecodePlan<'a>,
+) -> anyhow::Result<std::slice::Chunks<'p, WorkItem<'a>>> {
+    let h = plan.cache.h;
+    if plan.items.len() % h != 0 {
+        bail!(
+            "DecodePlan has {} items, not a multiple of H={h}",
+            plan.items.len()
+        );
+    }
+    for group in plan.items.chunks(h) {
+        for (j, it) in group.iter().enumerate() {
+            if it.head != j || it.seq != group[0].seq {
+                bail!("DecodePlan items must be seq-major with ascending \
+                       heads");
+            }
+        }
+    }
+    Ok(plan.items.chunks(h))
+}
+
+/// Split one full-width context row (H · d_k) into per-head outputs.
+/// PJRT artifacts return no attention distribution, so `weights` is
+/// empty — the serving loop only consumes `out`.
+fn split_heads(full: &[f32], h: usize, d_k: usize) -> Vec<AttnOutput> {
+    (0..h)
+        .map(|head| AttnOutput {
+            out: full[head * d_k..(head + 1) * d_k].to_vec(),
+            weights: Vec::new(),
+        })
+        .collect()
+}
+
+/// FP16 attention through the AOT artifacts on the PJRT client. The
+/// client's handles are not `Send`, so sequences run serially on the
+/// engine thread; each sequence is one padded artifact execution.
+pub struct PjrtFp16Kernel {
+    runtime: Runtime,
+    lens: Vec<usize>,
+    scratch_keys: Vec<f32>,
+    scratch_vals: Vec<f32>,
+}
+
+impl PjrtFp16Kernel {
+    pub fn new(runtime: Runtime, lens: Vec<usize>) -> Self {
+        Self {
+            runtime,
+            lens,
+            scratch_keys: Vec::new(),
+            scratch_vals: Vec::new(),
+        }
+    }
+
+    fn attend_seq(
+        &mut self,
+        cache: &KvCache,
+        seq: SeqId,
+        q: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let (h, d_k) = (cache.h, cache.d_k);
+        let n = cache.seq_len(seq).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let l = pjrt_len_for(&self.lens, n)?;
+        // pack (H, L, d_k) padded keys/values + (L,) mask
+        let mut k = vec![0.0f32; h * l * d_k];
+        let mut v = vec![0.0f32; h * l * d_k];
+        let mut mask = vec![0.0f32; l];
+        mask[..n].fill(1.0);
+        for head in 0..h {
+            cache
+                .gather_keys_into(seq, head, &mut self.scratch_keys)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            cache
+                .gather_values_into(seq, head, &mut self.scratch_vals)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            k[head * l * d_k..head * l * d_k + n * d_k]
+                .copy_from_slice(&self.scratch_keys);
+            v[head * l * d_k..head * l * d_k + n * d_k]
+                .copy_from_slice(&self.scratch_vals);
+        }
+        let name = format!("attn_fp16_L{l}");
+        let outs = self.runtime.execute(
+            &name,
+            &[
+                InputArg::F32(q),
+                InputArg::F32(&k),
+                InputArg::F32(&v),
+                InputArg::F32(&mask),
+            ],
+        )?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+}
+
+impl AttentionKernel for PjrtFp16Kernel {
+    fn name(&self) -> &'static str {
+        "pjrt-fp16"
+    }
+
+    fn decode_batch(&mut self, plan: &DecodePlan<'_>)
+        -> anyhow::Result<Vec<AttnOutput>>
+    {
+        let (h, d_k) = (plan.cache.h, plan.d_k);
+        let groups: Vec<(SeqId, Vec<f32>)> = seq_groups(plan)?
+            .map(|group| {
+                let mut q = vec![0.0f32; h * d_k];
+                for it in group {
+                    q[it.head * d_k..(it.head + 1) * d_k]
+                        .copy_from_slice(it.q);
+                }
+                (group[0].seq, q)
+            })
+            .collect();
+        let mut outs = Vec::with_capacity(plan.items.len());
+        for (seq, q) in groups {
+            let full = self.attend_seq(plan.cache, seq, &q)?;
+            outs.extend(split_heads(&full, h, d_k));
+        }
+        Ok(outs)
+    }
+}
+
+/// LOOKAT attention through the AOT artifacts on the PJRT client.
+pub struct PjrtLookatKernel {
+    runtime: Runtime,
+    lens: Vec<usize>,
+    m: usize,
+    scratch_codes: Vec<u8>,
+    scratch_vals: Vec<f32>,
+}
+
+impl PjrtLookatKernel {
+    pub fn new(runtime: Runtime, lens: Vec<usize>, m: usize) -> Self {
+        Self {
+            runtime,
+            lens,
+            m,
+            scratch_codes: Vec::new(),
+            scratch_vals: Vec::new(),
+        }
+    }
+
+    fn attend_seq(
+        &mut self,
+        cache: &KvCache,
+        seq: SeqId,
+        q: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let (h, d_k) = (cache.h, cache.d_k);
+        let m = self.m;
+        let codecs = cache
+            .codecs()
+            .context("pjrt-lookat kernel needs a PQ cache")?
+            .clone();
+        let n = cache.seq_len(seq).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let l = pjrt_len_for(&self.lens, n)?;
+        let kk = codecs[0].codebook.k;
+        let d_sub = d_k / m;
+        let mut codes = vec![0i32; h * l * m];
+        let mut cbs = vec![0.0f32; h * m * kk * d_sub];
+        let mut v = vec![0.0f32; h * l * d_k];
+        let mut mask = vec![0.0f32; l];
+        mask[..n].fill(1.0);
+        for head in 0..h {
+            cache
+                .gather_codes_into(seq, head, &mut self.scratch_codes)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            cache
+                .gather_values_into(seq, head, &mut self.scratch_vals)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            for (i, &c) in self.scratch_codes.iter().enumerate() {
+                codes[head * l * m + i] = c as i32;
+            }
+            v[head * l * d_k..head * l * d_k + n * d_k]
+                .copy_from_slice(&self.scratch_vals);
+            let flat = codecs[head].codebook.to_flat();
+            cbs[head * m * kk * d_sub..(head + 1) * m * kk * d_sub]
+                .copy_from_slice(&flat);
+        }
+        let name = format!("attn_lookat_m{m}_L{l}");
+        let outs = self.runtime.execute(
+            &name,
+            &[
+                InputArg::F32(q),
+                InputArg::I32(&codes),
+                InputArg::F32(&cbs),
+                InputArg::F32(&v),
+                InputArg::F32(&mask),
+            ],
+        )?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+}
+
+impl AttentionKernel for PjrtLookatKernel {
+    fn name(&self) -> &'static str {
+        "pjrt-lookat"
+    }
+
+    fn decode_batch(&mut self, plan: &DecodePlan<'_>)
+        -> anyhow::Result<Vec<AttnOutput>>
+    {
+        let (h, d_k) = (plan.cache.h, plan.d_k);
+        let groups: Vec<(SeqId, Vec<f32>)> = seq_groups(plan)?
+            .map(|group| {
+                let mut q = vec![0.0f32; h * d_k];
+                for it in group {
+                    q[it.head * d_k..(it.head + 1) * d_k]
+                        .copy_from_slice(it.q);
+                }
+                (group[0].seq, q)
+            })
+            .collect();
+        let mut outs = Vec::with_capacity(plan.items.len());
+        for (seq, q) in groups {
+            let full = self.attend_seq(plan.cache, seq, &q)?;
+            outs.extend(split_heads(&full, h, d_k));
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{KeyStorage, KvCache};
+    use crate::pq::{PqCodec, TrainOpts};
+    use crate::util::rng::Pcg32;
+
+    const H: usize = 2;
+    const DK: usize = 16;
+
+    fn filled_cache(storage: KeyStorage, seqs: &[(SeqId, usize)])
+        -> KvCache
+    {
+        let mut c = KvCache::new(H, DK, 64, storage);
+        for &(id, n) in seqs {
+            c.create_seq(id).unwrap();
+            let mut rng = Pcg32::seed(0xC0 + id);
+            for _ in 0..n {
+                let k: Vec<f32> =
+                    (0..H * DK).map(|_| rng.next_f32_std()).collect();
+                let v: Vec<f32> =
+                    (0..H * DK).map(|_| rng.next_f32_std()).collect();
+                c.append(id, &k, &v).unwrap();
+            }
+        }
+        c
+    }
+
+    fn pq_storage(m: usize) -> KeyStorage {
+        let mut rng = Pcg32::seed(77);
+        let calib: Vec<f32> =
+            (0..256 * DK).map(|_| rng.next_f32_std()).collect();
+        let codecs: Vec<PqCodec> = (0..H)
+            .map(|_| {
+                PqCodec::train(&calib, DK, m, 16, &TrainOpts::default())
+            })
+            .collect();
+        KeyStorage::pq(codecs).unwrap()
+    }
+
+    fn plan_for<'a>(
+        cache: &'a KvCache,
+        qs: &'a [Vec<f32>],
+        seqs: &[SeqId],
+        threads: usize,
+    ) -> DecodePlan<'a> {
+        let mut items = Vec::new();
+        for (i, &seq) in seqs.iter().enumerate() {
+            for head in 0..H {
+                items.push(WorkItem {
+                    seq,
+                    head,
+                    q: &qs[i][head * DK..(head + 1) * DK],
+                });
+            }
+        }
+        DecodePlan { cache, d_k: DK, threads, items }
+    }
+
+    fn queries(n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::seed(seed);
+        (0..n)
+            .map(|_| (0..H * DK).map(|_| rng.next_f32_std()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn fp16_kernel_matches_direct_attention() {
+        let cache =
+            filled_cache(KeyStorage::Fp16, &[(1, 40), (2, 70), (3, 5)]);
+        let qs = queries(3, 9);
+        let plan = plan_for(&cache, &qs, &[1, 2, 3], 2);
+        let outs = Fp16Kernel.decode_batch(&plan).unwrap();
+        assert_eq!(outs.len(), 6);
+        for (j, it) in plan.items.iter().enumerate() {
+            let mut keys = Vec::new();
+            let mut vals = Vec::new();
+            let n = cache
+                .gather_keys_into(it.seq, it.head, &mut keys)
+                .unwrap();
+            cache.gather_values_into(it.seq, it.head, &mut vals).unwrap();
+            let want = attention::exact_attention(it.q, &keys, &vals, n);
+            assert_eq!(outs[j].out, want.out);
+            assert_eq!(outs[j].weights, want.weights);
+        }
+    }
+
+    #[test]
+    fn lookat_kernel_zero_copy_path_matches_gathered_path() {
+        let cache =
+            filled_cache(pq_storage(4), &[(1, 33), (2, 64), (3, 100)]);
+        let qs = queries(3, 11);
+        let plan = plan_for(&cache, &qs, &[1, 2, 3], 2);
+        let outs = LookatKernel.decode_batch(&plan).unwrap();
+        let codecs = cache.codecs().unwrap();
+        for (j, it) in plan.items.iter().enumerate() {
+            let mut codes = Vec::new();
+            let mut vals = Vec::new();
+            let n = cache
+                .gather_codes_into(it.seq, it.head, &mut codes)
+                .unwrap();
+            cache.gather_values_into(it.seq, it.head, &mut vals).unwrap();
+            let lut =
+                LookupTable::build(it.q, &codecs[it.head].codebook);
+            let want = attention::lookat_attention_with_lut(
+                &lut, &codes, &vals, n, DK);
+            assert_eq!(outs[j].out, want.out, "item {j}");
+            assert_eq!(outs[j].weights, want.weights, "item {j}");
+        }
+    }
+
+    #[test]
+    fn kernel_outputs_independent_of_thread_count() {
+        let cache = filled_cache(pq_storage(2), &[(1, 50), (2, 50)]);
+        let qs = queries(2, 13);
+        let serial = LookatKernel
+            .decode_batch(&plan_for(&cache, &qs, &[1, 2], 1))
+            .unwrap();
+        let parallel = LookatKernel
+            .decode_batch(&plan_for(&cache, &qs, &[1, 2], 4))
+            .unwrap();
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.out, b.out);
+            assert_eq!(a.weights, b.weights);
+        }
+    }
+
+    #[test]
+    fn unknown_seq_surfaces_as_error() {
+        let cache = filled_cache(KeyStorage::Fp16, &[(1, 10)]);
+        let qs = queries(1, 15);
+        let plan = plan_for(&cache, &qs, &[99], 2);
+        assert!(Fp16Kernel.decode_batch(&plan).is_err());
+    }
+}

@@ -1,10 +1,17 @@
 //! Attention decode-step implementations: the FP16 oracle, the LOOKAT
 //! ADC path (paper Algorithm 1), and scalar-quantized baselines.
 //!
-//! All functions are single-head, single-query (decode-step) primitives;
-//! the model/coordinator layers iterate heads. Shapes follow the paper:
-//! `q` is (d_k), the cache holds `n` keys/values of dimension d_k.
+//! The free functions here are single-head, single-query (decode-step)
+//! primitives; [`kernel`] wraps them in the batched `AttentionKernel`
+//! backends the serving engine fans out over (seq, head) work items.
+//! Shapes follow the paper: `q` is (d_k), the cache holds `n`
+//! keys/values of dimension d_k.
 
+pub mod kernel;
+
+pub use kernel::{AttentionKernel, DecodePlan, WorkItem};
+
+use crate::kvcache::BlockView;
 use crate::pq::{LookupTable, PqCodec};
 use crate::quant;
 use crate::tensor::{dot, softmax_inplace};
@@ -25,10 +32,10 @@ pub fn exact_attention(q: &[f32], keys: &[f32], values: &[f32], n: usize)
     let d_k = q.len();
     assert_eq!(keys.len(), n * d_k);
     assert_eq!(values.len(), n * d_k);
-    let mut scores: Vec<f32> = (0..n)
+    let scores: Vec<f32> = (0..n)
         .map(|l| dot(q, &keys[l * d_k..(l + 1) * d_k]))
         .collect();
-    finish_attention(&mut scores, values, d_k)
+    finish_attention(scores, values, d_k)
 }
 
 /// LOOKAT attention (Algorithm 1): LUT build + ADC scan; keys exist only
@@ -43,8 +50,8 @@ pub fn lookat_attention(
     let d_k = q.len();
     assert_eq!(values.len(), n * d_k);
     let lut = LookupTable::build(q, &codec.codebook);
-    let mut scores = lut.scores(codes, n);
-    finish_attention(&mut scores, values, d_k)
+    let scores = lut.scores(codes, n);
+    finish_attention(scores, values, d_k)
 }
 
 /// LOOKAT attention with a pre-built LUT (the serving hot path re-uses
@@ -56,8 +63,8 @@ pub fn lookat_attention_with_lut(
     n: usize,
     d_k: usize,
 ) -> AttnOutput {
-    let mut scores = lut.scores(codes, n);
-    finish_attention(&mut scores, values, d_k)
+    let scores = lut.scores(codes, n);
+    finish_attention(scores, values, d_k)
 }
 
 /// Fully-compressed LOOKAT attention (paper §5.2 extension): keys *and*
@@ -98,15 +105,19 @@ pub fn scalar_quant_attention(
     exact_attention(q, &deq, values, n)
 }
 
-/// Shared tail: scale by 1/√d_k, softmax, α·V.
-fn finish_attention(scores: &mut [f32], values: &[f32], d_k: usize)
-    -> AttnOutput
-{
+/// Shared tail: scale by 1/√d_k, softmax, α·V. Takes the scores buffer
+/// by value and moves it into [`AttnOutput::weights`] — the hot path
+/// allocates no copy of the distribution.
+pub(crate) fn finish_attention(
+    mut scores: Vec<f32>,
+    values: &[f32],
+    d_k: usize,
+) -> AttnOutput {
     let inv = 1.0 / (d_k as f32).sqrt();
     for s in scores.iter_mut() {
         *s *= inv;
     }
-    softmax_inplace(scores);
+    softmax_inplace(&mut scores);
     let n = scores.len();
     let mut out = vec![0.0f32; d_k];
     for l in 0..n {
@@ -115,7 +126,38 @@ fn finish_attention(scores: &mut [f32], values: &[f32], d_k: usize)
             crate::tensor::axpy(&mut out, a, &values[l * d_k..(l + 1) * d_k]);
         }
     }
-    AttnOutput { out, weights: scores.to_vec() }
+    AttnOutput { out, weights: scores }
+}
+
+/// Block-resident attention tail: softmax the raw scores, then
+/// accumulate α·V straight from the paged cache's [`BlockView`]s — no
+/// contiguous value gather. Token order (and therefore every float op)
+/// matches [`finish_attention`] over the gathered equivalent, so the
+/// two tails are bit-identical.
+pub fn finish_attention_blocks<'a>(
+    mut scores: Vec<f32>,
+    blocks: impl Iterator<Item = BlockView<'a>>,
+    d_k: usize,
+) -> AttnOutput {
+    let inv = 1.0 / (d_k as f32).sqrt();
+    for s in scores.iter_mut() {
+        *s *= inv;
+    }
+    softmax_inplace(&mut scores);
+    let mut out = vec![0.0f32; d_k];
+    let mut l = 0usize;
+    for blk in blocks {
+        for t in 0..blk.len {
+            let a = scores[l];
+            if a > 0.0 {
+                crate::tensor::axpy(
+                    &mut out, a, &blk.values[t * d_k..(t + 1) * d_k]);
+            }
+            l += 1;
+        }
+    }
+    debug_assert_eq!(l, scores.len(), "blocks/scores length mismatch");
+    AttnOutput { out, weights: scores }
 }
 
 #[cfg(test)]

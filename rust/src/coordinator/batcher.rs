@@ -6,7 +6,7 @@ use std::collections::VecDeque;
 
 use super::engine::Engine;
 use super::request::{CompletedRequest, Request};
-use crate::kvcache::SeqId;
+use crate::kvcache::{SeqId, BLOCK_TOKENS};
 
 /// Batching policy knobs.
 #[derive(Clone, Debug)]
@@ -82,45 +82,77 @@ impl Batcher {
 
     /// Admit queued requests while batch slots and cache blocks allow.
     /// FCFS with head-of-line blocking (matching the paper setting of a
-    /// single bandwidth-constrained device; no preemption).
+    /// single bandwidth-constrained device; no preemption). Everything
+    /// admissible this tick prefills in one [`Engine::start_seq_batch`]
+    /// call, so prompt prefills run concurrently.
     pub fn admit(&mut self, now_s: f64) {
-        while self.active.len() < self.cfg.max_batch {
+        // drain the admissible prefix of the queue against a cumulative
+        // block budget (prompt + full generation, the no-preemption
+        // worst case)
+        let mut budget = self.engine.free_blocks();
+        let mut picked: Vec<Request> = Vec::new();
+        while self.active.len() + picked.len() < self.cfg.max_batch {
             let Some(front) = self.queue.front() else { break };
             let total = front.prompt.len() + front.max_new_tokens;
-            if !self.engine.can_admit(total) {
+            let need = total.div_ceil(BLOCK_TOKENS);
+            if need > budget {
                 break; // wait for cache space
             }
-            let req = self.queue.pop_front().unwrap();
-            match self.engine.start_seq(req.id, &req.prompt) {
+            budget -= need;
+            picked.push(self.queue.pop_front().unwrap());
+        }
+        if picked.is_empty() {
+            return;
+        }
+        let reqs: Vec<(SeqId, &[u32])> = picked
+            .iter()
+            .map(|r| (r.id, r.prompt.as_slice()))
+            .collect();
+        let results = self.engine.start_seq_batch(&reqs);
+        drop(reqs);
+        let mut requeue = Vec::new();
+        for (req, res) in picked.into_iter().zip(results) {
+            match res {
                 Ok(()) => self.active.push(Active {
                     req,
                     admitted_s: now_s,
                     first_token_s: None,
                     generated: Vec::new(),
                 }),
-                Err(_) => {
-                    // cache raced below the estimate — requeue at front
-                    self.queue.push_front(req);
-                    break;
-                }
+                // cache raced below the estimate — requeue in order
+                Err(_) => requeue.push(req),
             }
+        }
+        for req in requeue.into_iter().rev() {
+            self.queue.push_front(req);
         }
     }
 
-    /// One decode iteration across the active batch. Returns the number
-    /// of tokens produced. `now_s` stamps completion records.
+    /// One decode iteration across the active batch: a single
+    /// [`Engine::decode_batch`] tick over every active sequence —
+    /// independent (seq, head) attention items run concurrently inside
+    /// the engine. Returns the number of tokens produced; `now_s`
+    /// stamps completion records.
     pub fn step(&mut self, now_s: f64) -> anyhow::Result<usize> {
-        let mut produced = 0;
-        let mut i = 0;
-        while i < self.active.len() {
-            let a = &mut self.active[i];
-            let tok = self.engine.decode_one(a.req.id)?;
-            produced += 1;
+        if self.active.is_empty() {
+            return Ok(0);
+        }
+        let ids: Vec<SeqId> =
+            self.active.iter().map(|a| a.req.id).collect();
+        let toks = self.engine.decode_batch(&ids)?;
+        let produced = toks.len();
+        for (a, &tok) in self.active.iter_mut().zip(&toks) {
             if a.first_token_s.is_none() {
                 a.first_token_s = Some(now_s);
             }
             a.generated.push(tok);
-            if a.generated.len() >= a.req.max_new_tokens {
+        }
+        // sweep completions after the tick
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].generated.len()
+                >= self.active[i].req.max_new_tokens
+            {
                 let a = self.active.swap_remove(i);
                 self.engine.release(a.req.id)?;
                 self.completed.push(CompletedRequest {
@@ -155,6 +187,7 @@ mod tests {
             seed: 3,
             cache_blocks: blocks,
             calib_tokens: 64,
+            decode_threads: 2,
         })
         .unwrap();
         Batcher::new(engine, BatcherConfig { max_batch, max_queue })

@@ -1,26 +1,37 @@
 //! The inference engine: transformer decode over the paged KV-cache with
-//! a pluggable attention backend.
+//! a pluggable batched attention kernel.
 //!
-//! Backends:
+//! Backends (each an [`AttentionKernel`] implementation):
 //! * `Fp16Exact` — raw keys in cache, exact attention (the baseline)
-//! * `Lookat{m}` — keys stored as PQ codes, ADC attention (the paper)
+//! * `Lookat{m}` — keys stored as PQ codes, block-resident ADC attention
+//!   (the paper; zero per-step key-code copies)
 //! * `ScalarQuant{bits}` — raw keys, INT4/INT8 round-trip attention
 //! * `PjrtFp16` / `PjrtLookat{m}` — attention steps executed through the
 //!   AOT artifacts on the PJRT CPU client (proves the 3-layer contract
 //!   end-to-end in the serving loop)
 //!
+//! Decode is batched: [`Engine::decode_batch`] advances every sequence
+//! of the batcher's drained tick by one token, building one
+//! [`DecodePlan`] per layer — all (seq, head) work items at once — and
+//! fanning the independent items (plus the per-sequence QKV/MLP math)
+//! out on `util::threadpool`. Per-sequence results are bit-identical to
+//! a batch of one: items never interact.
+//!
 //! LOOKAT codebooks are trained once at engine build from a calibration
 //! corpus (paper §3.4); the serving hot path never touches python.
 
-use std::sync::Arc;
-
 use anyhow::{bail, Context};
 
-use crate::attention;
+use crate::attention::kernel::{
+    Fp16Kernel, LookatKernel, PjrtFp16Kernel, PjrtLookatKernel,
+    ScalarQuantKernel,
+};
+use crate::attention::{AttentionKernel, DecodePlan, WorkItem};
 use crate::kvcache::{CacheError, KeyStorage, KvCache, SeqId};
-use crate::model::{Gpt2, ModelConfig, Weights};
-use crate::pq::{LookupTable, PqCodec, TrainOpts};
-use crate::runtime::{InputArg, Runtime};
+use crate::model::{Gpt2, ModelConfig, PrefillOutput, Weights};
+use crate::pq::{PqCodec, TrainOpts};
+use crate::runtime::Runtime;
+use crate::util::threadpool::{parallel_map, parallel_try_map};
 use crate::workload::{Corpus, Genre};
 
 /// Which attention implementation the engine uses at decode time.
@@ -68,6 +79,9 @@ pub struct EngineConfig {
     pub cache_blocks: usize,
     /// tokens of calibration text for PQ codebook training
     pub calib_tokens: usize,
+    /// worker threads for the batched decode fan-out (0 = one per
+    /// available core)
+    pub decode_threads: usize,
 }
 
 impl Default for EngineConfig {
@@ -78,6 +92,7 @@ impl Default for EngineConfig {
             seed: 0xE47,
             cache_blocks: 256,
             calib_tokens: 384,
+            decode_threads: 0,
         }
     }
 }
@@ -87,19 +102,14 @@ struct SeqMeta {
     last_hidden: Vec<f32>,
 }
 
-/// The engine: model + per-layer caches + backend dispatch.
+/// The engine: model + per-layer caches + batched attention kernel.
 pub struct Engine {
     pub model: Gpt2,
     pub backend: AttentionBackend,
     caches: Vec<KvCache>,
     seqs: std::collections::HashMap<SeqId, SeqMeta>,
-    runtime: Option<Runtime>,
-    /// padded cache lengths the PJRT artifacts were lowered at
-    pjrt_lens: Vec<usize>,
-    // scratch buffers reused across decode steps (no hot-loop allocation)
-    scratch_keys: Vec<f32>,
-    scratch_vals: Vec<f32>,
-    scratch_codes: Vec<u8>,
+    kernel: Box<dyn AttentionKernel>,
+    threads: usize,
 }
 
 impl Engine {
@@ -123,27 +133,29 @@ impl Engine {
         let storage_per_layer: Vec<KeyStorage> =
             if let Some((m, k)) = cfg.backend.needs_pq() {
                 let calib = Self::calibration_keys(&model, cfg)?;
-                calib
-                    .into_iter()
-                    .map(|per_head| {
-                        let codecs: Vec<PqCodec> = per_head
-                            .iter()
-                            .map(|keys| {
-                                PqCodec::train(
-                                    keys,
-                                    d_k,
-                                    m,
-                                    k,
-                                    &TrainOpts {
-                                        seed: cfg.seed ^ 0x90,
-                                        ..Default::default()
-                                    },
-                                )
-                            })
-                            .collect();
-                        KeyStorage::Pq { codecs: Arc::new(codecs) }
-                    })
-                    .collect()
+                let mut per_layer = Vec::with_capacity(calib.len());
+                for per_head in calib {
+                    let codecs: Vec<PqCodec> = per_head
+                        .iter()
+                        .map(|keys| {
+                            PqCodec::train(
+                                keys,
+                                d_k,
+                                m,
+                                k,
+                                &TrainOpts {
+                                    seed: cfg.seed ^ 0x90,
+                                    ..Default::default()
+                                },
+                            )
+                        })
+                        .collect();
+                    per_layer.push(
+                        KeyStorage::pq(codecs)
+                            .map_err(|e| anyhow::anyhow!("{e}"))?,
+                    );
+                }
+                per_layer
             } else {
                 (0..cfg.model.n_layer).map(|_| KeyStorage::Fp16).collect()
             };
@@ -153,23 +165,49 @@ impl Engine {
             .map(|st| KvCache::new(h, d_k, cfg.cache_blocks, st))
             .collect();
 
-        let runtime = match cfg.backend {
-            AttentionBackend::PjrtFp16 | AttentionBackend::PjrtLookat { .. } => {
-                Some(Runtime::open_default().context(
-                    "PJRT backend needs artifacts (run `make artifacts`)",
-                )?)
-            }
-            _ => None,
+        let kernel = Self::build_kernel(cfg)?;
+        let threads = if cfg.decode_threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            cfg.decode_threads
         };
-        let pjrt_lens = match &runtime {
-            Some(rt) => {
+
+        Ok(Engine {
+            model,
+            backend: cfg.backend.clone(),
+            caches,
+            seqs: std::collections::HashMap::new(),
+            kernel,
+            threads,
+        })
+    }
+
+    /// Instantiate the backend's attention kernel. PJRT backends open
+    /// the runtime here and move it into the kernel — the engine itself
+    /// no longer talks to the artifact executor.
+    fn build_kernel(cfg: &EngineConfig)
+        -> anyhow::Result<Box<dyn AttentionKernel>>
+    {
+        Ok(match cfg.backend {
+            AttentionBackend::Fp16Exact => Box::new(Fp16Kernel),
+            AttentionBackend::Lookat { .. } => Box::new(LookatKernel),
+            AttentionBackend::ScalarQuant { bits } => {
+                Box::new(ScalarQuantKernel { bits })
+            }
+            AttentionBackend::PjrtFp16
+            | AttentionBackend::PjrtLookat { .. } => {
+                let runtime = Runtime::open_default().context(
+                    "PJRT backend needs artifacts (run `make artifacts`)",
+                )?;
                 let kind = if matches!(cfg.backend,
                                        AttentionBackend::PjrtFp16) {
                     "attn_fp16"
                 } else {
                     "attn_lookat"
                 };
-                let mut lens: Vec<usize> = rt
+                let mut lens: Vec<usize> = runtime
                     .manifest
                     .by_kind(kind)
                     .iter()
@@ -185,21 +223,16 @@ impl Engine {
                 if lens.is_empty() {
                     bail!("no artifacts for backend {:?}", cfg.backend);
                 }
-                lens
+                match cfg.backend {
+                    AttentionBackend::PjrtFp16 => {
+                        Box::new(PjrtFp16Kernel::new(runtime, lens))
+                    }
+                    AttentionBackend::PjrtLookat { m } => {
+                        Box::new(PjrtLookatKernel::new(runtime, lens, m))
+                    }
+                    _ => unreachable!(),
+                }
             }
-            None => vec![],
-        };
-
-        Ok(Engine {
-            model,
-            backend: cfg.backend.clone(),
-            caches,
-            seqs: std::collections::HashMap::new(),
-            runtime,
-            pjrt_lens,
-            scratch_keys: Vec::new(),
-            scratch_vals: Vec::new(),
-            scratch_codes: Vec::new(),
         })
     }
 
@@ -242,28 +275,74 @@ impl Engine {
 
     /// Whether the cache can admit a sequence of `prompt + gen` tokens.
     pub fn can_admit(&self, total_tokens: usize) -> bool {
-        let blocks_needed =
-            total_tokens.div_ceil(crate::kvcache::BLOCK_TOKENS);
-        self.caches.iter().all(|c| {
-            c.stats().blocks_total - c.stats().blocks_allocated
-                >= blocks_needed
-        })
+        self.free_blocks()
+            >= total_tokens.div_ceil(crate::kvcache::BLOCK_TOKENS)
+    }
+
+    /// Free cache blocks available right now (min across layers) — the
+    /// batcher's cumulative admission budget.
+    pub fn free_blocks(&self) -> usize {
+        self.caches
+            .iter()
+            .map(|c| {
+                let s = c.stats();
+                s.blocks_total - s.blocks_allocated
+            })
+            .min()
+            .unwrap_or(0)
     }
 
     /// Admit a sequence: prefill its prompt, fill every layer's cache,
-    /// return nothing (call [`Engine::decode_one`] for tokens).
+    /// return nothing (call [`Engine::decode_batch`] for tokens).
     pub fn start_seq(&mut self, id: SeqId, prompt: &[u32])
         -> Result<(), CacheError>
     {
         assert!(!prompt.is_empty(), "empty prompt");
+        let out = self.model.prefill(prompt);
+        self.install_prefill(id, prompt.len(), out)
+    }
+
+    /// Admit several sequences in one tick: the prompt prefills (pure
+    /// model math, the TTFT-dominant cost) run concurrently on the
+    /// decode thread budget; the cache fills stay serial. Returns one
+    /// result per request, in order — failed admissions leave no
+    /// residue and the rest still land.
+    pub fn start_seq_batch(&mut self, reqs: &[(SeqId, &[u32])])
+        -> Vec<Result<(), CacheError>>
+    {
+        for &(_, prompt) in reqs {
+            assert!(!prompt.is_empty(), "empty prompt");
+        }
+        let model = &self.model;
+        let prefills: Vec<PrefillOutput> =
+            match parallel_try_map(reqs.len(), self.threads, |i| {
+                Ok::<_, std::convert::Infallible>(model.prefill(reqs[i].1))
+            }) {
+                Ok(p) => p,
+                Err(e) => match e {},
+            };
+        reqs.iter()
+            .zip(prefills)
+            .map(|(&(id, prompt), out)| {
+                self.install_prefill(id, prompt.len(), out)
+            })
+            .collect()
+    }
+
+    /// Register a prefilled sequence: fill every layer's cache and store
+    /// its decode state. Rolls back cleanly on cache exhaustion.
+    fn install_prefill(
+        &mut self,
+        id: SeqId,
+        prompt_len: usize,
+        out: PrefillOutput,
+    ) -> Result<(), CacheError> {
         for c in self.caches.iter_mut() {
             c.create_seq(id)?;
         }
-        let out = self.model.prefill(prompt);
-        let (h, d_k) = (self.model.n_head(), self.model.d_head());
         for layer in 0..self.model.n_layer() {
             let (k_cache, v_cache) = &out.caches[layer];
-            for t in 0..prompt.len() {
+            for t in 0..prompt_len {
                 // rows are (d_model) = heads contiguous — exactly the
                 // (H × d_k) layout append expects
                 let res = self.caches[layer].append(
@@ -276,197 +355,140 @@ impl Engine {
                     return Err(e);
                 }
             }
-            let _ = h;
         }
         self.seqs.insert(
             id,
-            SeqMeta { pos: prompt.len(), last_hidden: out.last_hidden },
+            SeqMeta { pos: prompt_len, last_hidden: out.last_hidden },
         );
-        let _ = d_k;
         Ok(())
     }
 
-    /// Generate one token for a sequence (greedy). Appends the token's
-    /// K/V to the cache. Returns the token id.
+    /// Generate one token for a sequence (greedy): a batch of one.
     pub fn decode_one(&mut self, id: SeqId) -> anyhow::Result<u32> {
-        let meta = self
-            .seqs
-            .get(&id)
-            .with_context(|| format!("unknown seq {id}"))?;
-        let token = self.model.greedy_next(&meta.last_hidden);
-        let pos = meta.pos;
-        if pos >= self.model.weights.config.max_pos {
-            bail!("sequence {id} exceeded max position");
+        Ok(self.decode_batch(&[id])?[0])
+    }
+
+    /// One decode tick for a batch of sequences: every sequence gets one
+    /// greedy token appended to its cache.
+    ///
+    /// Per layer, all (seq, head) attention items form one [`DecodePlan`]
+    /// that the backend kernel executes; QKV projections, the greedy
+    /// logits pass and the block MLPs fan out per sequence on the same
+    /// thread budget. Sequences are independent, so the result for each
+    /// is bit-identical to decoding it in a batch of one.
+    pub fn decode_batch(&mut self, ids: &[SeqId])
+        -> anyhow::Result<Vec<u32>>
+    {
+        if ids.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (h, d_k) = (self.model.n_head(), self.model.d_head());
+        for &id in ids {
+            let meta = self
+                .seqs
+                .get(&id)
+                .with_context(|| format!("unknown seq {id}"))?;
+            if meta.pos >= self.model.weights.config.max_pos {
+                bail!("sequence {id} exceeded max position");
+            }
+        }
+        // pre-flight the tick's block demand so a mid-batch OutOfBlocks
+        // can't leave some sequences' caches ahead of their SeqMeta
+        // (admission over-commits by design: it reserves against current
+        // allocation, not outstanding generation)
+        for (layer, cache) in self.caches.iter().enumerate() {
+            let mut need = 0usize;
+            for &id in ids {
+                let len =
+                    cache.seq_len(id).map_err(|e| anyhow::anyhow!("{e}"))?;
+                if len % crate::kvcache::BLOCK_TOKENS == 0 {
+                    need += 1;
+                }
+            }
+            let s = cache.stats();
+            if need > s.blocks_total - s.blocks_allocated {
+                bail!(
+                    "out of cache blocks for decode tick \
+                     (layer {layer}: need {need} new blocks)"
+                );
+            }
         }
 
-        let mut x = self.model.embed(token, pos);
+        // greedy next-token + embedding per sequence
+        let model = &self.model;
+        let seqs = &self.seqs;
+        let picked: Vec<(u32, Vec<f32>)> =
+            parallel_map(ids.len(), self.threads, |i| {
+                let meta = &seqs[&ids[i]];
+                let token = model.greedy_next(&meta.last_hidden);
+                (token, model.embed(token, meta.pos))
+            });
+        let (tokens, mut xs): (Vec<u32>, Vec<Vec<f32>>) =
+            picked.into_iter().unzip();
+
         for layer in 0..self.model.n_layer() {
-            let (q, k_new, v_new) = self.model.qkv(layer, &x);
-            self.caches[layer]
-                .append(id, &k_new, &v_new)
-                .map_err(|e| anyhow::anyhow!("cache append: {e}"))?;
-            let attn = self.attend_layer(layer, id, &q)?;
-            x = self.model.finish_block(layer, &x, &attn);
-        }
-        let meta = self.seqs.get_mut(&id).unwrap();
-        meta.pos += 1;
-        meta.last_hidden = x;
-        Ok(token)
-    }
-
-    /// One decode-step attention over all heads of one layer.
-    fn attend_layer(&mut self, layer: usize, id: SeqId, q: &[f32])
-        -> anyhow::Result<Vec<f32>>
-    {
-        let (h, d_k) = (self.model.n_head(), self.model.d_head());
-        match &self.backend {
-            AttentionBackend::PjrtFp16 => {
-                return self.attend_pjrt_fp16(layer, id, q);
+            // QKV projections (independent per sequence)
+            let model = &self.model;
+            let xs_ref = &xs;
+            let qkvs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> =
+                parallel_map(ids.len(), self.threads, |i| {
+                    model.qkv(layer, &xs_ref[i])
+                });
+            // cache appends mutate the paged storage — serial
+            for (i, &id) in ids.iter().enumerate() {
+                self.caches[layer]
+                    .append(id, &qkvs[i].1, &qkvs[i].2)
+                    .map_err(|e| anyhow::anyhow!("cache append: {e}"))?;
             }
-            AttentionBackend::PjrtLookat { .. } => {
-                return self.attend_pjrt_lookat(layer, id, q);
+            // one DecodePlan for the tick: all (seq, head) items,
+            // seq-major with ascending heads (the kernel contract)
+            let mut items = Vec::with_capacity(ids.len() * h);
+            for (i, &id) in ids.iter().enumerate() {
+                let q = &qkvs[i].0;
+                for head in 0..h {
+                    items.push(WorkItem {
+                        seq: id,
+                        head,
+                        q: &q[head * d_k..(head + 1) * d_k],
+                    });
+                }
             }
-            _ => {}
-        }
-        let mut out = vec![0.0f32; h * d_k];
-        for head in 0..h {
-            let qh = &q[head * d_k..(head + 1) * d_k];
-            let n = self.caches[layer]
-                .gather_values_into(id, head, &mut self.scratch_vals)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
-            let res = match &self.backend {
-                AttentionBackend::Fp16Exact => {
-                    self.caches[layer]
-                        .gather_keys_into(id, head, &mut self.scratch_keys)
-                        .map_err(|e| anyhow::anyhow!("{e}"))?;
-                    attention::exact_attention(
-                        qh, &self.scratch_keys, &self.scratch_vals, n)
-                }
-                AttentionBackend::ScalarQuant { bits } => {
-                    self.caches[layer]
-                        .gather_keys_into(id, head, &mut self.scratch_keys)
-                        .map_err(|e| anyhow::anyhow!("{e}"))?;
-                    attention::scalar_quant_attention(
-                        qh, &self.scratch_keys, &self.scratch_vals, n, *bits)
-                }
-                AttentionBackend::Lookat { .. } => {
-                    self.caches[layer]
-                        .gather_codes_into(id, head, &mut self.scratch_codes)
-                        .map_err(|e| anyhow::anyhow!("{e}"))?;
-                    let codec =
-                        &self.caches[layer].codecs().unwrap()[head];
-                    let lut = LookupTable::build(qh, &codec.codebook);
-                    attention::lookat_attention_with_lut(
-                        &lut, &self.scratch_codes, &self.scratch_vals, n,
-                        d_k)
-                }
-                _ => unreachable!(),
+            let plan = DecodePlan {
+                cache: &self.caches[layer],
+                d_k,
+                threads: self.threads,
+                items,
             };
-            out[head * d_k..(head + 1) * d_k].copy_from_slice(&res.out);
-        }
-        Ok(out)
-    }
-
-    /// Smallest artifact length that fits `n` cached tokens.
-    fn pjrt_len_for(&self, n: usize) -> anyhow::Result<usize> {
-        self.pjrt_lens
-            .iter()
-            .copied()
-            .find(|&l| l >= n)
-            .with_context(|| {
-                format!(
-                    "cache length {n} exceeds largest artifact L={:?}",
-                    self.pjrt_lens.last()
-                )
-            })
-    }
-
-    fn attend_pjrt_fp16(&mut self, layer: usize, id: SeqId, q: &[f32])
-        -> anyhow::Result<Vec<f32>>
-    {
-        let (h, d_k) = (self.model.n_head(), self.model.d_head());
-        let n = self.caches[layer].seq_len(id)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
-        let l = self.pjrt_len_for(n)?;
-        // pack (H, L, d_k) padded keys/values + (L,) mask
-        let mut k = vec![0.0f32; h * l * d_k];
-        let mut v = vec![0.0f32; h * l * d_k];
-        let mut mask = vec![0.0f32; l];
-        mask[..n].fill(1.0);
-        for head in 0..h {
-            self.caches[layer]
-                .gather_keys_into(id, head, &mut self.scratch_keys)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
-            self.caches[layer]
-                .gather_values_into(id, head, &mut self.scratch_vals)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
-            k[head * l * d_k..head * l * d_k + n * d_k]
-                .copy_from_slice(&self.scratch_keys);
-            v[head * l * d_k..head * l * d_k + n * d_k]
-                .copy_from_slice(&self.scratch_vals);
-        }
-        let name = format!("attn_fp16_L{l}");
-        let rt = self.runtime.as_mut().unwrap();
-        let outs = rt.execute(
-            &name,
-            &[
-                InputArg::F32(q),
-                InputArg::F32(&k),
-                InputArg::F32(&v),
-                InputArg::F32(&mask),
-            ],
-        )?;
-        Ok(outs.into_iter().next().unwrap())
-    }
-
-    fn attend_pjrt_lookat(&mut self, layer: usize, id: SeqId, q: &[f32])
-        -> anyhow::Result<Vec<f32>>
-    {
-        let (h, d_k) = (self.model.n_head(), self.model.d_head());
-        let m = match self.backend {
-            AttentionBackend::PjrtLookat { m } => m,
-            _ => unreachable!(),
-        };
-        let n = self.caches[layer].seq_len(id)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
-        let l = self.pjrt_len_for(n)?;
-        let kk = self.caches[layer].codecs().unwrap()[0].codebook.k;
-        let d_sub = d_k / m;
-        let mut codes = vec![0i32; h * l * m];
-        let mut cbs = vec![0.0f32; h * m * kk * d_sub];
-        let mut v = vec![0.0f32; h * l * d_k];
-        let mut mask = vec![0.0f32; l];
-        mask[..n].fill(1.0);
-        for head in 0..h {
-            self.caches[layer]
-                .gather_codes_into(id, head, &mut self.scratch_codes)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
-            self.caches[layer]
-                .gather_values_into(id, head, &mut self.scratch_vals)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
-            for (i, &c) in self.scratch_codes.iter().enumerate() {
-                codes[head * l * m + i] = c as i32;
+            let outs = self.kernel.decode_batch(&plan)?;
+            if outs.len() != ids.len() * h {
+                bail!(
+                    "kernel returned {} outputs for {} work items",
+                    outs.len(),
+                    ids.len() * h
+                );
             }
-            v[head * l * d_k..head * l * d_k + n * d_k]
-                .copy_from_slice(&self.scratch_vals);
-            let flat =
-                self.caches[layer].codecs().unwrap()[head].codebook.to_flat();
-            cbs[head * m * kk * d_sub..(head + 1) * m * kk * d_sub]
-                .copy_from_slice(&flat);
+            // concat heads + residual/MLP tail (independent per sequence)
+            let model = &self.model;
+            let xs_ref = &xs;
+            let outs_ref = &outs;
+            let next: Vec<Vec<f32>> =
+                parallel_map(ids.len(), self.threads, |i| {
+                    let mut attn = vec![0.0f32; h * d_k];
+                    for head in 0..h {
+                        attn[head * d_k..(head + 1) * d_k]
+                            .copy_from_slice(&outs_ref[i * h + head].out);
+                    }
+                    model.finish_block(layer, &xs_ref[i], &attn)
+                });
+            xs = next;
         }
-        let name = format!("attn_lookat_m{m}_L{l}");
-        let rt = self.runtime.as_mut().unwrap();
-        let outs = rt.execute(
-            &name,
-            &[
-                InputArg::F32(q),
-                InputArg::I32(&codes),
-                InputArg::F32(&cbs),
-                InputArg::F32(&v),
-                InputArg::F32(&mask),
-            ],
-        )?;
-        Ok(outs.into_iter().next().unwrap())
+
+        for (i, &id) in ids.iter().enumerate() {
+            let meta = self.seqs.get_mut(&id).unwrap();
+            meta.pos += 1;
+            meta.last_hidden = std::mem::take(&mut xs[i]);
+        }
+        Ok(tokens)
     }
 
     /// Release a finished sequence's cache.
@@ -491,6 +513,7 @@ mod tests {
             seed: 1,
             cache_blocks: 32,
             calib_tokens: 96,
+            decode_threads: 2,
         }
     }
 
@@ -560,6 +583,10 @@ mod tests {
         let _ = (t_fp, t_lk);
     }
 
+    // batched-vs-serial bit-parity per backend lives in
+    // tests/decode_parity.rs (it needs full engine builds per backend;
+    // no point paying for them twice in CI)
+
     #[test]
     fn admission_and_release_cycle() {
         let mut e = Engine::build(&tiny_cfg(AttentionBackend::Fp16Exact))
@@ -595,7 +622,9 @@ mod tests {
         let mut e = Engine::build(&tiny_cfg(AttentionBackend::Fp16Exact))
             .unwrap();
         assert!(e.decode_one(42).is_err());
+        assert!(e.decode_batch(&[1, 42]).is_err());
         assert!(e.release(42).is_err());
+        assert!(e.decode_batch(&[]).unwrap().is_empty());
     }
 
     #[test]

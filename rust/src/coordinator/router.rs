@@ -111,6 +111,13 @@ impl Router {
         })
     }
 
+    /// Change the decode batch width between runs. The serving bench
+    /// sweeps batch sizes over one engine so codebook training and
+    /// weight init stay out of the comparison.
+    pub fn set_max_batch(&mut self, max_batch: usize) {
+        self.batcher.cfg.max_batch = max_batch;
+    }
+
     /// Tokenize a workload trace into requests.
     pub fn tokenize_trace(&self, trace: &[RequestSpec]) -> Vec<Request> {
         let tok = ByteTokenizer::new();
@@ -174,7 +181,9 @@ impl Router {
         Ok(ServingReport {
             backend: self.batcher.engine().backend.name(),
             completed: std::mem::take(&mut self.batcher.completed),
-            rejected: self.batcher.rejected.len(),
+            // drain, don't peek: a reused router (set_max_batch sweeps)
+            // must not re-report earlier runs' rejections
+            rejected: std::mem::take(&mut self.batcher.rejected).len(),
             wall_s: t0.elapsed().as_secs_f64(),
             decode_tokens,
             prefill_tokens,
@@ -198,6 +207,7 @@ mod tests {
                 seed: 5,
                 cache_blocks: 128,
                 calib_tokens: 64,
+                decode_threads: 2,
             },
             batcher: BatcherConfig { max_batch: 4, max_queue: 64 },
             max_prompt_tokens: 48,
@@ -249,6 +259,32 @@ mod tests {
             report.key_cache_peak_bytes,
             report_fp.key_cache_peak_bytes
         );
+    }
+
+    #[test]
+    fn batch_width_does_not_change_tokens() {
+        // the same trace served at batch 1 and batch 4 must emit
+        // identical generations — batched decode is bit-exact
+        let backend = AttentionBackend::Lookat { m: 4, k: 64 };
+        let mut r1 = router(backend.clone());
+        r1.set_max_batch(1);
+        let reqs1 = r1.tokenize_trace(&small_trace(4));
+        let rep1 = r1.serve_trace(reqs1).unwrap();
+
+        let mut r4 = router(backend);
+        let reqs4 = r4.tokenize_trace(&small_trace(4));
+        let rep4 = r4.serve_trace(reqs4).unwrap();
+
+        let by_id = |rep: &ServingReport| {
+            let mut v: Vec<(u64, Vec<u32>)> = rep
+                .completed
+                .iter()
+                .map(|c| (c.id, c.generated.clone()))
+                .collect();
+            v.sort();
+            v
+        };
+        assert_eq!(by_id(&rep1), by_id(&rep4));
     }
 
     #[test]

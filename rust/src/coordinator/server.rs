@@ -298,6 +298,7 @@ mod tests {
                 seed: 2,
                 cache_blocks: 64,
                 calib_tokens: 64,
+                decode_threads: 2,
             },
             batcher: BatcherConfig { max_batch: 2, max_queue: 16 },
             max_prompt_tokens: 48,

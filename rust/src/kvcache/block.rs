@@ -7,6 +7,23 @@ pub const BLOCK_TOKENS: usize = 32;
 /// Opaque block handle.
 pub type BlockId = u32;
 
+/// Zero-copy view of one head's slice of one cache block, in the order
+/// the sequence's tokens were appended. Produced by `KvCache::blocks`;
+/// the batched decode kernels scan these in place instead of gathering
+/// the paged cache into contiguous scratch.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockView<'a> {
+    /// valid tokens in this block (≤ [`BLOCK_TOKENS`]; only the last
+    /// block of a sequence is partial)
+    pub len: usize,
+    /// this head's raw keys, (len × d_k) row-major — empty in PQ mode
+    pub keys: &'a [f32],
+    /// this head's PQ codes, (len × m) row-major — empty in FP16 mode
+    pub codes: &'a [u8],
+    /// this head's values, (len × d_k) row-major
+    pub values: &'a [f32],
+}
+
 /// Free-list block allocator over a fixed budget of blocks.
 #[derive(Debug)]
 pub struct BlockAllocator {

@@ -4,7 +4,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use super::block::{BlockAllocator, BlockId, BLOCK_TOKENS};
+use super::block::{BlockAllocator, BlockId, BlockView, BLOCK_TOKENS};
 use crate::pq::PqCodec;
 
 /// Sequence identifier (one per serving request).
@@ -16,23 +16,37 @@ pub enum KeyStorage {
     /// Raw keys ("FP16" storage model: accounted 2 B/element).
     Fp16,
     /// LOOKAT: keys live only as PQ codes, one codec per head.
+    /// Build via [`KeyStorage::pq`], which validates the codec set.
     Pq { codecs: Arc<Vec<PqCodec>> },
 }
 
 impl KeyStorage {
+    /// Validated PQ storage: one codec per head, at least one head.
+    pub fn pq(codecs: Vec<PqCodec>) -> Result<KeyStorage, CacheError> {
+        if codecs.is_empty() {
+            return Err(CacheError::NoCodecs);
+        }
+        Ok(KeyStorage::Pq { codecs: Arc::new(codecs) })
+    }
+
+    /// Codes per token per head (0 for FP16 storage).
     fn m(&self) -> usize {
         match self {
             KeyStorage::Fp16 => 0,
-            KeyStorage::Pq { codecs } => codecs[0].codebook.m,
+            KeyStorage::Pq { codecs } => {
+                codecs.first().map_or(0, |c| c.codebook.m)
+            }
         }
     }
 }
 
-#[derive(Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum CacheError {
     OutOfBlocks,
     UnknownSeq(SeqId),
     DuplicateSeq(SeqId),
+    /// PQ storage was constructed with an empty codec set.
+    NoCodecs,
 }
 
 impl std::fmt::Display for CacheError {
@@ -46,6 +60,9 @@ impl std::fmt::Display for CacheError {
             }
             CacheError::DuplicateSeq(id) => {
                 write!(f, "sequence {id} already exists")
+            }
+            CacheError::NoCodecs => {
+                write!(f, "PQ key storage needs at least one codec")
             }
         }
     }
@@ -79,10 +96,12 @@ struct SeqState {
 
 /// Paged KV-cache for one transformer layer (all `h` heads).
 ///
-/// Block layout (per block, `BLOCK_TOKENS` token slots):
-///   values: (BLOCK_TOKENS, H, d_k) f32, always
-///   keys:   (BLOCK_TOKENS, H, d_k) f32 when Fp16
-///   codes:  (BLOCK_TOKENS, H, m)  u8  when Pq
+/// Block layout (per block, `BLOCK_TOKENS` token slots) is head-major,
+/// so one head's run of tokens within a block is contiguous and the
+/// decode kernels can scan it in place ([`KvCache::blocks`]):
+///   values: (H, BLOCK_TOKENS, d_k) f32, always
+///   keys:   (H, BLOCK_TOKENS, d_k) f32 when Fp16
+///   codes:  (H, BLOCK_TOKENS, m)  u8  when Pq
 pub struct KvCache {
     pub h: usize,
     pub d_k: usize,
@@ -105,10 +124,10 @@ impl KvCache {
             }
         }
         let slot = BLOCK_TOKENS * h;
+        let m = storage.m();
         let (keys_raw, codes) = match &storage {
             KeyStorage::Fp16 => (vec![0.0; max_blocks * slot * d_k], vec![]),
-            KeyStorage::Pq { codecs } => {
-                let m = codecs[0].codebook.m;
+            KeyStorage::Pq { .. } => {
                 (vec![], vec![0u8; max_blocks * slot * m])
             }
         };
@@ -187,23 +206,30 @@ impl KvCache {
         let block = *st.blocks.last().unwrap() as usize;
         let h = self.h;
         let d_k = self.d_k;
-        // values
-        let vbase = (block * BLOCK_TOKENS + off) * h * d_k;
-        self.values[vbase..vbase + h * d_k].copy_from_slice(values);
+        // values: one strided write per head (head-major block layout)
+        for head in 0..h {
+            let vbase = ((block * h + head) * BLOCK_TOKENS + off) * d_k;
+            self.values[vbase..vbase + d_k]
+                .copy_from_slice(&values[head * d_k..(head + 1) * d_k]);
+        }
         // keys
         match &self.storage {
             KeyStorage::Fp16 => {
-                let kbase = vbase;
-                self.keys_raw[kbase..kbase + h * d_k].copy_from_slice(keys);
+                for head in 0..h {
+                    let kbase =
+                        ((block * h + head) * BLOCK_TOKENS + off) * d_k;
+                    self.keys_raw[kbase..kbase + d_k].copy_from_slice(
+                        &keys[head * d_k..(head + 1) * d_k]);
+                }
             }
             KeyStorage::Pq { codecs } => {
                 let m = codecs[0].codebook.m;
-                let cbase = (block * BLOCK_TOKENS + off) * h * m;
                 for head in 0..h {
                     let code = codecs[head]
                         .encode(&keys[head * d_k..(head + 1) * d_k]);
-                    self.codes[cbase + head * m..cbase + (head + 1) * m]
-                        .copy_from_slice(&code);
+                    let cbase =
+                        ((block * h + head) * BLOCK_TOKENS + off) * m;
+                    self.codes[cbase..cbase + m].copy_from_slice(&code);
                 }
             }
         }
@@ -220,6 +246,29 @@ impl KvCache {
         Ok(())
     }
 
+    /// Zero-copy iteration over one head's cache blocks, in token order.
+    ///
+    /// This is the batched-decode hot path: the LOOKAT kernel scans the
+    /// codes and accumulates α·V straight out of these views; the
+    /// gather-based paths below exist for backends that need one
+    /// contiguous tensor (FP16 scoring, scalar-quant round-trips, PJRT
+    /// artifact packing).
+    pub fn blocks(
+        &self,
+        seq: SeqId,
+        head: usize,
+    ) -> Result<BlockIter<'_>, CacheError> {
+        assert!(head < self.h, "head {head} out of range (H={})", self.h);
+        let st = self.seqs.get(&seq).ok_or(CacheError::UnknownSeq(seq))?;
+        Ok(BlockIter {
+            cache: self,
+            blocks: &st.blocks,
+            head,
+            remaining: st.len,
+            idx: 0,
+        })
+    }
+
     /// Copy one head's raw keys into `out` (FP16 mode only).
     /// Returns the sequence length.
     pub fn gather_keys_into(
@@ -229,14 +278,13 @@ impl KvCache {
         out: &mut Vec<f32>,
     ) -> Result<usize, CacheError> {
         assert!(!self.is_pq(), "gather_keys_into is for FP16 caches");
-        let st = self.seqs.get(&seq).ok_or(CacheError::UnknownSeq(seq))?;
+        let len = self.seq_len(seq)?;
         out.clear();
-        out.reserve(st.len * self.d_k);
-        self.for_each_token(st, |tok_base| {
-            let kb = tok_base * self.h * self.d_k + head * self.d_k;
-            out.extend_from_slice(&self.keys_raw[kb..kb + self.d_k]);
-        });
-        Ok(st.len)
+        out.reserve(len * self.d_k);
+        for blk in self.blocks(seq, head)? {
+            out.extend_from_slice(blk.keys);
+        }
+        Ok(len)
     }
 
     /// Copy one head's PQ codes into `out` (PQ mode only).
@@ -248,14 +296,13 @@ impl KvCache {
     ) -> Result<usize, CacheError> {
         let m = self.storage.m();
         assert!(m > 0, "gather_codes_into is for PQ caches");
-        let st = self.seqs.get(&seq).ok_or(CacheError::UnknownSeq(seq))?;
+        let len = self.seq_len(seq)?;
         out.clear();
-        out.reserve(st.len * m);
-        self.for_each_token(st, |tok_base| {
-            let cb = tok_base * self.h * m + head * m;
-            out.extend_from_slice(&self.codes[cb..cb + m]);
-        });
-        Ok(st.len)
+        out.reserve(len * m);
+        for blk in self.blocks(seq, head)? {
+            out.extend_from_slice(blk.codes);
+        }
+        Ok(len)
     }
 
     /// Copy one head's values into `out`.
@@ -265,25 +312,13 @@ impl KvCache {
         head: usize,
         out: &mut Vec<f32>,
     ) -> Result<usize, CacheError> {
-        let st = self.seqs.get(&seq).ok_or(CacheError::UnknownSeq(seq))?;
+        let len = self.seq_len(seq)?;
         out.clear();
-        out.reserve(st.len * self.d_k);
-        self.for_each_token(st, |tok_base| {
-            let vb = tok_base * self.h * self.d_k + head * self.d_k;
-            out.extend_from_slice(&self.values[vb..vb + self.d_k]);
-        });
-        Ok(st.len)
-    }
-
-    fn for_each_token(&self, st: &SeqState, mut f: impl FnMut(usize)) {
-        let mut remaining = st.len;
-        for &b in &st.blocks {
-            let take = remaining.min(BLOCK_TOKENS);
-            for t in 0..take {
-                f(b as usize * BLOCK_TOKENS + t);
-            }
-            remaining -= take;
+        out.reserve(len * self.d_k);
+        for blk in self.blocks(seq, head)? {
+            out.extend_from_slice(blk.values);
         }
+        Ok(len)
     }
 
     /// Exact storage accounting under the paper's byte model.
@@ -291,8 +326,8 @@ impl KvCache {
         let tokens: usize = self.seqs.values().map(|s| s.len).sum();
         let key_bytes = match &self.storage {
             KeyStorage::Fp16 => tokens * self.h * self.d_k * 2,
-            KeyStorage::Pq { codecs } => {
-                tokens * self.h * codecs[0].codebook.m
+            KeyStorage::Pq { .. } => {
+                tokens * self.h * self.storage.m()
             }
         };
         let codebook_bytes = match &self.storage {
@@ -316,8 +351,46 @@ impl KvCache {
     pub fn key_bytes_per_token_per_head(&self) -> usize {
         match &self.storage {
             KeyStorage::Fp16 => self.d_k * 2,
-            KeyStorage::Pq { codecs } => codecs[0].codebook.m,
+            KeyStorage::Pq { .. } => self.storage.m(),
         }
+    }
+}
+
+/// Iterator over one head's [`BlockView`]s (see [`KvCache::blocks`]).
+pub struct BlockIter<'a> {
+    cache: &'a KvCache,
+    blocks: &'a [BlockId],
+    head: usize,
+    remaining: usize,
+    idx: usize,
+}
+
+impl<'a> Iterator for BlockIter<'a> {
+    type Item = BlockView<'a>;
+
+    fn next(&mut self) -> Option<BlockView<'a>> {
+        if self.remaining == 0 || self.idx >= self.blocks.len() {
+            return None;
+        }
+        let b = self.blocks[self.idx] as usize;
+        self.idx += 1;
+        let take = self.remaining.min(BLOCK_TOKENS);
+        self.remaining -= take;
+        let c = self.cache;
+        let (h, d_k) = (c.h, c.d_k);
+        let vbase = (b * h + self.head) * BLOCK_TOKENS * d_k;
+        let values = &c.values[vbase..vbase + take * d_k];
+        let (keys, codes): (&[f32], &[u8]) = match &c.storage {
+            KeyStorage::Fp16 => {
+                (&c.keys_raw[vbase..vbase + take * d_k], &[][..])
+            }
+            KeyStorage::Pq { .. } => {
+                let m = c.storage.m();
+                let cbase = (b * h + self.head) * BLOCK_TOKENS * m;
+                (&[][..], &c.codes[cbase..cbase + take * m])
+            }
+        };
+        Some(BlockView { len: take, keys, codes, values })
     }
 }
 
@@ -337,7 +410,7 @@ mod tests {
         let codecs: Vec<PqCodec> = (0..H)
             .map(|_| PqCodec::train(&calib, DK, m, 16, &TrainOpts::default()))
             .collect();
-        KeyStorage::Pq { codecs: Arc::new(codecs) }
+        KeyStorage::pq(codecs).unwrap()
     }
 
     fn token(seed: u64) -> (Vec<f32>, Vec<f32>) {
@@ -435,6 +508,84 @@ mod tests {
             c.append(2, &k, &v).unwrap();
         }
         assert_eq!(c.seq_len(2).unwrap(), 2 * BLOCK_TOKENS);
+    }
+
+    #[test]
+    fn empty_codec_set_is_an_error_not_a_panic() {
+        assert!(matches!(
+            KeyStorage::pq(Vec::new()),
+            Err(CacheError::NoCodecs)
+        ));
+        assert!(KeyStorage::pq(match pq_storage(4) {
+            KeyStorage::Pq { codecs } =>
+                codecs.as_ref().clone(),
+            _ => unreachable!(),
+        })
+        .is_ok());
+    }
+
+    #[test]
+    fn block_views_match_gathers_fp16_and_pq() {
+        for storage in [KeyStorage::Fp16, pq_storage(4)] {
+            let is_pq = matches!(storage, KeyStorage::Pq { .. });
+            let mut c = KvCache::new(H, DK, 8, storage);
+            c.create_seq(1).unwrap();
+            for t in 0..70 {
+                // 3 blocks, last one partial
+                let (k, v) = token(500 + t);
+                c.append(1, &k, &v).unwrap();
+            }
+            for head in 0..H {
+                let mut vals = Vec::new();
+                c.gather_values_into(1, head, &mut vals).unwrap();
+                let mut from_blocks = Vec::new();
+                let mut total = 0;
+                for blk in c.blocks(1, head).unwrap() {
+                    assert!(blk.len <= BLOCK_TOKENS);
+                    assert_eq!(blk.values.len(), blk.len * DK);
+                    from_blocks.extend_from_slice(blk.values);
+                    total += blk.len;
+                }
+                assert_eq!(total, 70);
+                assert_eq!(from_blocks, vals);
+                if is_pq {
+                    let mut codes = Vec::new();
+                    c.gather_codes_into(1, head, &mut codes).unwrap();
+                    let concat: Vec<u8> = c
+                        .blocks(1, head)
+                        .unwrap()
+                        .flat_map(|b| b.codes.iter().copied())
+                        .collect();
+                    assert_eq!(concat, codes);
+                    assert!(c
+                        .blocks(1, head)
+                        .unwrap()
+                        .all(|b| b.keys.is_empty()));
+                } else {
+                    let mut keys = Vec::new();
+                    c.gather_keys_into(1, head, &mut keys).unwrap();
+                    let concat: Vec<f32> = c
+                        .blocks(1, head)
+                        .unwrap()
+                        .flat_map(|b| b.keys.iter().copied())
+                        .collect();
+                    assert_eq!(concat, keys);
+                    assert!(c
+                        .blocks(1, head)
+                        .unwrap()
+                        .all(|b| b.codes.is_empty()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_unknown_seq_errors() {
+        let c = KvCache::new(H, DK, 2, KeyStorage::Fp16);
+        assert!(matches!(
+            c.blocks(3, 0),
+            Err(CacheError::UnknownSeq(3))
+        ));
     }
 
     #[test]

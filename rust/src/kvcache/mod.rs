@@ -4,10 +4,15 @@
 //! value access is compute-bound), keys are stored either raw (FP16
 //! baseline) or as `m` uint8 PQ codes per token (LOOKAT). Storage is
 //! paged vLLM-style so sequences grow without reallocation and memory
-//! accounting is exact.
+//! accounting is exact. Blocks are head-major, so one head's codes or
+//! values inside a block are contiguous and the decode kernels scan
+//! them in place via [`KvCache::blocks`] — the LOOKAT hot path never
+//! copies key codes out of the cache.
 
 mod block;
 mod manager;
 
-pub use block::{BlockAllocator, BlockId, BLOCK_TOKENS};
-pub use manager::{CacheError, CacheStats, KeyStorage, KvCache, SeqId};
+pub use block::{BlockAllocator, BlockId, BlockView, BLOCK_TOKENS};
+pub use manager::{
+    BlockIter, CacheError, CacheStats, KeyStorage, KvCache, SeqId,
+};

@@ -76,6 +76,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 .opt("max-batch", "4", "max concurrent sequences")
                 .opt("gen-tokens", "16", "max new tokens per request")
                 .opt("layers", "2", "model depth")
+                .opt("threads", "0", "decode worker threads (0 = auto)")
                 .opt("seed", "7", "rng seed");
             let a = cli.parse(&args[1..])?;
             let backend = parse_backend(a.get("backend"))?;
@@ -88,6 +89,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     seed: a.get_u64("seed")?,
                     cache_blocks: 512,
                     calib_tokens: 256,
+                    decode_threads: a.get_usize("threads")?,
                 },
                 batcher: BatcherConfig {
                     max_batch: a.get_usize("max-batch")?,
@@ -115,6 +117,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 .opt("addr", "127.0.0.1:7070", "bind address")
                 .opt("max-batch", "4", "max concurrent sequences")
                 .opt("layers", "2", "model depth")
+                .opt("threads", "0", "decode worker threads (0 = auto)")
                 .opt("seed", "7", "rng seed");
             let a = cli.parse(&args[1..])?;
             let backend = parse_backend(a.get("backend"))?;
@@ -128,6 +131,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                         seed: a.get_u64("seed")?,
                         cache_blocks: 512,
                         calib_tokens: 256,
+                        decode_threads: a.get_usize("threads")?,
                     },
                     batcher: BatcherConfig {
                         max_batch: a.get_usize("max-batch")?,

@@ -123,6 +123,28 @@ impl LookupTable {
         self.scores_into(codes, n, &mut out);
         out
     }
+
+    /// Block-resident scan: append scores for each code block in turn.
+    ///
+    /// The slices come straight from the paged cache
+    /// (`KvCache::blocks`), so the serving hot path scans the codes
+    /// where they live — no gather into contiguous scratch. Each block
+    /// is a (len × m) row-major code slice; per-token results are
+    /// bit-identical to one contiguous [`LookupTable::scores_into`]
+    /// pass over the gathered equivalent, because every token's score
+    /// is computed independently by the same unrolled kernels.
+    pub fn scores_blocks<'a, I>(&self, blocks: I, out: &mut Vec<f32>)
+    where
+        I: IntoIterator<Item = &'a [u8]>,
+    {
+        for codes in blocks {
+            debug_assert_eq!(codes.len() % self.m, 0);
+            let n = codes.len() / self.m;
+            let start = out.len();
+            out.resize(start + n, 0.0);
+            self.scores_into(codes, n, &mut out[start..]);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -195,6 +217,21 @@ mod tests {
                 // unrolled kernels use pairwise sums; f32 reassociation
                 // gives tiny differences vs the sequential scalar path
                 assert!((batch[l] - s).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_scan_bit_identical_to_flat_scan() {
+        for m in [2usize, 4, 8, 16] {
+            let (query, codec, _, codes, n) = setup(m);
+            let lut = LookupTable::build(&query, &codec.codebook);
+            let flat = lut.scores(&codes, n);
+            // uneven block sizes, last block partial — the paged shape
+            for bt in [32usize, 48, 200, 7] {
+                let mut blocked = Vec::new();
+                lut.scores_blocks(codes.chunks(bt * m), &mut blocked);
+                assert_eq!(flat, blocked, "m={m} block_tokens={bt}");
             }
         }
     }

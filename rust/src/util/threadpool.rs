@@ -150,6 +150,56 @@ where
     out
 }
 
+/// Fallible [`parallel_map`]: run `f(i)` for i in 0..n across up to
+/// `threads` scoped threads and collect the results, or return the
+/// lowest-index error. Unlike [`parallel_map`] there is no
+/// `Default + Clone` bound, so it also suits result types that carry
+/// owned buffers (the batched-decode kernels' `AttnOutput`s).
+///
+/// Like [`parallel_map`], workers are `std::thread::scope` threads
+/// spawned per call — that is what lets `f` borrow non-`'static` plan
+/// state. The spawn/join cost is a few tens of µs per call, noise next
+/// to a decode tick's model math; a borrow-capable fan-out over the
+/// persistent [`ThreadPool`] is a ROADMAP item if profiles ever say
+/// otherwise.
+pub fn parallel_try_map<T, E, F>(
+    n: usize,
+    threads: usize,
+    f: F,
+) -> Result<Vec<T>, E>
+where
+    T: Send,
+    E: Send,
+    F: Fn(usize) -> Result<T, E> + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            out.push(f(i)?);
+        }
+        return Ok(out);
+    }
+    let mut slots: Vec<Option<Result<T, E>>> =
+        (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(threads);
+    let fref = &f;
+    std::thread::scope(|s| {
+        for (t, slice) in slots.chunks_mut(chunk).enumerate() {
+            s.spawn(move || {
+                for (j, slot) in slice.iter_mut().enumerate() {
+                    *slot = Some(fref(t * chunk + j));
+                }
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(n);
+    for r in slots {
+        out.push(r.expect("parallel_try_map: unfilled slot")?);
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,5 +275,33 @@ mod tests {
     fn parallel_map_single_thread_path() {
         let got = parallel_map(64, 1, |i| i as f64 * 0.5);
         assert_eq!(got[63], 31.5);
+    }
+
+    #[test]
+    fn parallel_try_map_ok_matches_serial() {
+        let par = parallel_try_map(500, 8, |i| Ok::<_, String>(i * 3));
+        let ser = parallel_try_map(500, 1, |i| Ok::<_, String>(i * 3));
+        let want: Vec<usize> = (0..500).map(|i| i * 3).collect();
+        assert_eq!(par.unwrap(), want);
+        assert_eq!(ser.unwrap(), want);
+    }
+
+    #[test]
+    fn parallel_try_map_reports_lowest_index_error() {
+        let got = parallel_try_map(100, 4, |i| {
+            if i == 17 || i == 63 {
+                Err(format!("boom {i}"))
+            } else {
+                Ok(i)
+            }
+        });
+        assert_eq!(got.unwrap_err(), "boom 17");
+    }
+
+    #[test]
+    fn parallel_try_map_empty() {
+        let got: Result<Vec<usize>, String> =
+            parallel_try_map(0, 4, |i| Ok(i));
+        assert_eq!(got.unwrap(), Vec::<usize>::new());
     }
 }

@@ -19,6 +19,7 @@ fn paper_cfg(backend: AttentionBackend) -> EngineConfig {
         seed: 21,
         cache_blocks: 64,
         calib_tokens: 128,
+        decode_threads: 0,
     }
 }
 
@@ -83,6 +84,7 @@ fn tiny_batcher(max_batch: usize) -> Batcher {
         seed: 13,
         cache_blocks: 64,
         calib_tokens: 48,
+        decode_threads: 2,
     })
     .unwrap();
     Batcher::new(engine, BatcherConfig { max_batch, max_queue: 32 })

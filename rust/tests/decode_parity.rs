@@ -1,0 +1,192 @@
+//! Batched-decode parity + KV-cache block lifecycle (the PR-2
+//! acceptance suite): dropping a sequence returns its blocks, the
+//! allocator budget is re-admittable to exhaustion, and a decode batch
+//! of N is bit-identical to N serial batch-of-one decodes on every
+//! backend (PJRT backends run when artifacts are built).
+
+use lookat::coordinator::{AttentionBackend, Engine, EngineConfig};
+use lookat::kvcache::{
+    CacheError, KeyStorage, KvCache, BLOCK_TOKENS,
+};
+use lookat::model::{ByteTokenizer, ModelConfig};
+use lookat::runtime::default_artifacts_dir;
+
+fn artifacts_built() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+fn tiny_cfg(backend: AttentionBackend, threads: usize) -> EngineConfig {
+    EngineConfig {
+        model: ModelConfig::test_tiny(),
+        backend,
+        seed: 42,
+        cache_blocks: 48,
+        calib_tokens: 96,
+        decode_threads: threads,
+    }
+}
+
+fn paper_cfg(backend: AttentionBackend, threads: usize) -> EngineConfig {
+    EngineConfig {
+        model: ModelConfig::gpt2_layer0(), // artifact geometry
+        backend,
+        seed: 21,
+        cache_blocks: 64,
+        calib_tokens: 128,
+        decode_threads: threads,
+    }
+}
+
+// ---- block lifecycle ---------------------------------------------------
+
+#[test]
+fn freed_blocks_return_to_the_allocator_and_readmit() {
+    let mut c = KvCache::new(2, 16, 4, KeyStorage::Fp16);
+    let k = vec![0.5f32; 2 * 16];
+    let v = vec![0.25f32; 2 * 16];
+
+    // fill the whole budget with one sequence
+    c.create_seq(1).unwrap();
+    for _ in 0..4 * BLOCK_TOKENS {
+        c.append(1, &k, &v).unwrap();
+    }
+    assert_eq!(c.append(1, &k, &v), Err(CacheError::OutOfBlocks));
+    let s = c.stats();
+    assert_eq!(s.blocks_allocated, 4);
+    assert_eq!(s.blocks_total, 4);
+
+    // drop it: every block must come back
+    c.free_seq(1).unwrap();
+    let s = c.stats();
+    assert_eq!(s.blocks_allocated, 0);
+    assert_eq!(s.tokens, 0);
+
+    // re-admit new sequences until exhaustion — the full budget is
+    // usable again, and the failure mode is an error, not a panic
+    c.create_seq(2).unwrap();
+    c.create_seq(3).unwrap();
+    let mut appended = 0usize;
+    loop {
+        let id = 2 + (appended / BLOCK_TOKENS) as u64 % 2;
+        match c.append(id, &k, &v) {
+            Ok(()) => appended += 1,
+            Err(CacheError::OutOfBlocks) => break,
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+        assert!(appended <= 4 * BLOCK_TOKENS, "over-admitted");
+    }
+    assert_eq!(appended, 4 * BLOCK_TOKENS);
+    assert_eq!(c.stats().blocks_allocated, 4);
+}
+
+#[test]
+fn engine_release_makes_room_for_new_sequences() {
+    // cache_blocks = 2 per layer: one ~40-token sequence fills it
+    let mut cfg = tiny_cfg(AttentionBackend::Fp16Exact, 1);
+    cfg.cache_blocks = 2;
+    let mut e = Engine::build(&cfg).unwrap();
+    let ids = ByteTokenizer::new()
+        .encode("a prompt long enough to span one cache block easily..");
+    e.start_seq(1, &ids).unwrap();
+    assert!(!e.can_admit(ids.len()), "cache should be near-full");
+    e.release(1).unwrap();
+    assert!(e.can_admit(ids.len()), "release must free the blocks");
+    e.start_seq(2, &ids).unwrap();
+    e.decode_one(2).unwrap();
+}
+
+// ---- batched vs serial parity ------------------------------------------
+
+fn assert_batched_matches_serial(
+    serial: &mut Engine,
+    batched: &mut Engine,
+    n_seqs: u64,
+    steps: usize,
+) {
+    let tok = ByteTokenizer::new();
+    let prompts = [
+        "first parity prompt",
+        "a different second prompt",
+        "third, rather longer, parity prompt for block spill",
+        "and a fourth",
+    ];
+    for i in 0..n_seqs {
+        let ids = tok.encode(prompts[i as usize % prompts.len()]);
+        serial.start_seq(i, &ids).unwrap();
+        batched.start_seq(i, &ids).unwrap();
+    }
+    let ids: Vec<u64> = (0..n_seqs).collect();
+    for step in 0..steps {
+        let s: Vec<u32> = ids
+            .iter()
+            .map(|&i| serial.decode_one(i).unwrap())
+            .collect();
+        let b = batched.decode_batch(&ids).unwrap();
+        assert_eq!(
+            s, b,
+            "backend {:?} diverged at step {step}",
+            batched.backend
+        );
+    }
+}
+
+#[test]
+fn batched_decode_bit_identical_all_rust_backends() {
+    for backend in [
+        AttentionBackend::Fp16Exact,
+        AttentionBackend::Lookat { m: 4, k: 64 },
+        AttentionBackend::Lookat { m: 2, k: 64 },
+        AttentionBackend::ScalarQuant { bits: 8 },
+        AttentionBackend::ScalarQuant { bits: 4 },
+    ] {
+        let mut serial =
+            Engine::build(&tiny_cfg(backend.clone(), 1)).unwrap();
+        let mut batched =
+            Engine::build(&tiny_cfg(backend, 4)).unwrap();
+        assert_batched_matches_serial(&mut serial, &mut batched, 4, 6);
+    }
+}
+
+#[test]
+fn batched_decode_bit_identical_pjrt_backends() {
+    if !artifacts_built() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    for backend in [
+        AttentionBackend::PjrtFp16,
+        AttentionBackend::PjrtLookat { m: 4 },
+    ] {
+        let mut serial =
+            Engine::build(&paper_cfg(backend.clone(), 1)).unwrap();
+        let mut batched =
+            Engine::build(&paper_cfg(backend, 2)).unwrap();
+        assert_batched_matches_serial(&mut serial, &mut batched, 2, 3);
+    }
+}
+
+#[test]
+fn batch_composition_does_not_change_a_sequence() {
+    // seq 0 decoded alongside 3 peers must equal seq 0 decoded alone —
+    // the plan's items never interact
+    let backend = AttentionBackend::Lookat { m: 4, k: 64 };
+    let tok = ByteTokenizer::new();
+    let ids = tok.encode("isolation check prompt");
+
+    let mut alone = Engine::build(&tiny_cfg(backend.clone(), 2)).unwrap();
+    alone.start_seq(0, &ids).unwrap();
+    let alone_toks: Vec<u32> =
+        (0..5).map(|_| alone.decode_one(0).unwrap()).collect();
+
+    let mut crowd = Engine::build(&tiny_cfg(backend, 2)).unwrap();
+    crowd.start_seq(0, &ids).unwrap();
+    for i in 1..4u64 {
+        crowd.start_seq(i, &tok.encode("peer sequence filler")).unwrap();
+    }
+    let mut crowd_toks = Vec::new();
+    for _ in 0..5 {
+        let t = crowd.decode_batch(&[0, 1, 2, 3]).unwrap();
+        crowd_toks.push(t[0]);
+    }
+    assert_eq!(alone_toks, crowd_toks);
+}
