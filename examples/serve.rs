@@ -11,17 +11,26 @@
 
 use lookat::coordinator::{
     AttentionBackend, BatcherConfig, EngineConfig, Router, RouterConfig,
+    ValueBackend,
 };
 use lookat::model::ModelConfig;
 use lookat::workload::{TraceConfig, TraceGenerator};
 
 fn run_backend(backend: AttentionBackend) -> anyhow::Result<()> {
+    run_backend_kv(backend, ValueBackend::Fp32)
+}
+
+fn run_backend_kv(
+    backend: AttentionBackend,
+    value_backend: ValueBackend,
+) -> anyhow::Result<()> {
     let mut model = ModelConfig::gpt2_layer0();
     model.n_layer = 2;
     let mut router = Router::build(RouterConfig {
         engine: EngineConfig {
             model,
             backend,
+            value_backend,
             seed: 11,
             cache_blocks: 512,
             calib_tokens: 256,
@@ -62,6 +71,11 @@ fn main() -> anyhow::Result<()> {
         run_backend(AttentionBackend::Fp16Exact)?;
         run_backend(AttentionBackend::Lookat { m: 4, k: 256 })?;
         run_backend(AttentionBackend::Lookat { m: 2, k: 256 })?;
+        // fully-compressed cache: PQ keys + PQ values, fused decode
+        run_backend_kv(
+            AttentionBackend::Lookat { m: 4, k: 256 },
+            ValueBackend::Pq { m: 8, k: 256 },
+        )?;
     }
     println!("\nserve example OK");
     Ok(())

@@ -5,7 +5,7 @@
 //!   cargo bench --bench micro_hotpaths
 
 use lookat::attention;
-use lookat::kvcache::{KeyStorage, KvCache};
+use lookat::kvcache::{KeyStorage, KvCache, ValueStorage};
 use lookat::pq::{kmeans::kmeans, LookupTable, PqCodec, TrainOpts};
 use lookat::util::bench::{black_box, Bench};
 use lookat::util::rng::Pcg32;
@@ -86,7 +86,8 @@ fn main() -> anyhow::Result<()> {
     let h = 12;
     let kv: Vec<f32> = (0..h * d_k).map(|_| rng.next_f32_std()).collect();
     b.run_items("kvcache/append_fp16_12h", 1.0, || {
-        let mut c = KvCache::new(h, d_k, 24, KeyStorage::Fp16);
+        let mut c = KvCache::new(
+            h, d_k, 24, KeyStorage::Fp16, ValueStorage::Fp32);
         c.create_seq(1).unwrap();
         for _ in 0..256 {
             c.append(1, &kv, &kv).unwrap();
@@ -101,7 +102,8 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let storage = KeyStorage::pq(codecs)?;
     b.run_items("kvcache/append_pq4_12h", 1.0, || {
-        let mut c = KvCache::new(h, d_k, 24, storage.clone());
+        let mut c = KvCache::new(
+            h, d_k, 24, storage.clone(), ValueStorage::Fp32);
         c.create_seq(1).unwrap();
         for _ in 0..256 {
             c.append(1, &kv, &kv).unwrap();
@@ -109,7 +111,8 @@ fn main() -> anyhow::Result<()> {
         black_box(c.stats());
     });
     {
-        let mut c = KvCache::new(h, d_k, 24, KeyStorage::Fp16);
+        let mut c = KvCache::new(
+            h, d_k, 24, KeyStorage::Fp16, ValueStorage::Fp32);
         c.create_seq(1).unwrap();
         for _ in 0..512 {
             c.append(1, &kv, &kv).unwrap();

@@ -1,6 +1,6 @@
 //! Serving throughput bench: the coordinator end-to-end on the same
-//! trace under every backend × decode batch width — decode tok/s, TTFT,
-//! peak key-cache bytes.
+//! trace under every (key backend × value backend) × decode batch
+//! width — decode tok/s, TTFT, peak key- and value-cache bytes.
 //!
 //!   cargo bench --bench serving_throughput
 //!
@@ -17,6 +17,7 @@
 
 use lookat::coordinator::{
     AttentionBackend, BatcherConfig, EngineConfig, Router, RouterConfig,
+    ValueBackend,
 };
 use lookat::model::ModelConfig;
 use lookat::util::json::Json;
@@ -37,13 +38,17 @@ fn trace() -> Vec<lookat::workload::RequestSpec> {
     .generate()
 }
 
-fn bench_backend(backend: AttentionBackend) -> anyhow::Result<Json> {
+fn bench_backend(
+    backend: AttentionBackend,
+    value_backend: ValueBackend,
+) -> anyhow::Result<Json> {
     let mut model = ModelConfig::gpt2_layer0();
     model.n_layer = 2;
     let mut router = Router::build(RouterConfig {
         engine: EngineConfig {
             model,
-            backend: backend.clone(),
+            backend,
+            value_backend,
             seed: 77,
             cache_blocks: 512,
             calib_tokens: 192,
@@ -53,8 +58,10 @@ fn bench_backend(backend: AttentionBackend) -> anyhow::Result<Json> {
         max_prompt_tokens: 96,
     })?;
 
+    // the entry's name is the report's own label (Engine::label):
+    // fp32-value combos keep the bare key-backend name, so the CI
+    // regression gate matches them against pre-value-sweep baselines
     let mut o = Json::obj();
-    o.set("backend", Json::Str(backend.name()));
     let mut runs = Vec::new();
     let mut tok_s_by_batch = Vec::new();
     for &bs in &BATCH_SIZES {
@@ -62,6 +69,9 @@ fn bench_backend(backend: AttentionBackend) -> anyhow::Result<Json> {
         let reqs = router.tokenize_trace(&trace());
         let report = router.serve_trace(reqs)?;
         println!("batch={bs:<3} {}", report.pretty());
+        if runs.is_empty() {
+            o.set("backend", Json::Str(report.backend.clone()));
+        }
         tok_s_by_batch.push(report.throughput_tok_s());
         o.set(
             &format!("batch_{bs}_tok_s"),
@@ -80,16 +90,32 @@ fn bench_backend(backend: AttentionBackend) -> anyhow::Result<Json> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let backends = [
-        AttentionBackend::Fp16Exact,
-        AttentionBackend::ScalarQuant { bits: 8 },
-        AttentionBackend::ScalarQuant { bits: 4 },
-        AttentionBackend::Lookat { m: 4, k: 256 },
-        AttentionBackend::Lookat { m: 2, k: 256 },
+    let combos = [
+        // the pre-existing key-backend sweep (fp32 values)
+        (AttentionBackend::Fp16Exact, ValueBackend::Fp32),
+        (AttentionBackend::ScalarQuant { bits: 8 }, ValueBackend::Fp32),
+        (AttentionBackend::ScalarQuant { bits: 4 }, ValueBackend::Fp32),
+        (AttentionBackend::Lookat { m: 4, k: 256 }, ValueBackend::Fp32),
+        (AttentionBackend::Lookat { m: 2, k: 256 }, ValueBackend::Fp32),
+        // value-backend sweep: lookat-kv (fully compressed, fused
+        // blocked weighted decode) at the paper's 32x and combined-64x
+        // configurations, plus the int-key x pq-value combination
+        (
+            AttentionBackend::Lookat { m: 4, k: 256 },
+            ValueBackend::Pq { m: 8, k: 256 },
+        ),
+        (
+            AttentionBackend::Lookat { m: 2, k: 256 },
+            ValueBackend::Pq { m: 2, k: 256 },
+        ),
+        (
+            AttentionBackend::ScalarQuant { bits: 8 },
+            ValueBackend::Pq { m: 8, k: 256 },
+        ),
     ];
     let mut results = Vec::new();
-    for b in backends {
-        results.push(bench_backend(b)?);
+    for (b, vb) in combos {
+        results.push(bench_backend(b, vb)?);
     }
 
     let mut top = Json::obj();

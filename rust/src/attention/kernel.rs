@@ -14,10 +14,22 @@
 //! over the cache's head-major blocks ([`LookupTable::scores_blocks`])
 //! and accumulates α·V straight from the same views — zero per-step
 //! key-code copies.
+//!
+//! Every pure-rust kernel is additionally *value-storage aware*: when
+//! the plan's cache stores PQ-coded values
+//! ([`crate::kvcache::ValueStorage::Pq`]), the attention tail switches
+//! to the fused blocked weighted decode
+//! ([`finish_attention_kv_blocks`]) — post-softmax weights are
+//! scatter-accumulated into per-subspace tables while the value-code
+//! blocks stream, so values are never dequantized per token either.
+//! LOOKAT keys × PQ values is the paper's fully-compressed "lookat-kv"
+//! combination with zero per-step copies on *both* cache sides.
 
 use anyhow::{bail, Context};
 
-use super::{finish_attention_blocks, AttnOutput};
+use super::{
+    finish_attention_blocks, finish_attention_kv_blocks, AttnOutput,
+};
 use crate::attention;
 use crate::kvcache::{CacheError, KvCache, SeqId};
 use crate::pq::LookupTable;
@@ -60,16 +72,16 @@ pub trait AttentionKernel {
 std::thread_local! {
     /// Per-thread gather scratch (keys, values) for the dense kernels:
     /// two allocations per fan-out worker instead of two per (seq,
-    /// head) item. Fan-out workers are scoped threads that live for
-    /// one `parallel_try_map` call, so reuse spans that call's chunk of
-    /// items; only the serial (threads = 1) path, which runs on the
-    /// engine thread, carries capacity across decode ticks.
+    /// head) item. Fan-out now runs on `util::threadpool`'s persistent
+    /// process-wide pool, so workers — and this scratch — survive
+    /// across decode ticks; the serial (threads = 1) path carries its
+    /// capacity on the engine thread the same way.
     static GATHER_SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
         const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
 }
 
 /// Gather one item's keys and values into the thread's scratch and
-/// score with `f`.
+/// score with `f` (FP32-value caches only).
 fn with_gathered<F>(
     plan: &DecodePlan<'_>,
     it: &WorkItem<'_>,
@@ -86,8 +98,41 @@ where
     })
 }
 
+/// Raw (unscaled) dense scores of one query against gathered keys.
+fn dense_scores(q: &[f32], keys: &[f32], n: usize) -> Vec<f32> {
+    let d_k = q.len();
+    (0..n)
+        .map(|l| crate::tensor::dot(q, &keys[l * d_k..(l + 1) * d_k]))
+        .collect()
+}
+
+/// Shared attention tail for one plan item given its raw scores:
+/// block-resident α·V over raw values, or the fused blocked weighted
+/// decode when the cache stores PQ-coded values.
+fn finish_item(
+    plan: &DecodePlan<'_>,
+    it: &WorkItem<'_>,
+    scores: Vec<f32>,
+) -> Result<AttnOutput, CacheError> {
+    match plan.cache.value_codecs() {
+        None => Ok(finish_attention_blocks(
+            scores,
+            plan.cache.blocks(it.seq, it.head)?,
+            plan.d_k,
+        )),
+        Some(vcodecs) => Ok(finish_attention_kv_blocks(
+            scores,
+            plan.cache.blocks(it.seq, it.head)?,
+            &vcodecs[it.head],
+            plan.d_k,
+        )),
+    }
+}
+
 /// Exact attention over FP16-stored keys (gathers the paged cache into
 /// contiguous scratch per item — dense scoring needs one flat tensor).
+/// With PQ-coded values, only the keys are gathered; the value side
+/// runs the fused blocked weighted decode.
 pub struct Fp16Kernel;
 
 impl AttentionKernel for Fp16Kernel {
@@ -98,18 +143,31 @@ impl AttentionKernel for Fp16Kernel {
     fn decode_batch(&mut self, plan: &DecodePlan<'_>)
         -> anyhow::Result<Vec<AttnOutput>>
     {
+        let pq_values = plan.cache.value_codecs().is_some();
         parallel_try_map(plan.items.len(), plan.threads, |i| {
             let it = &plan.items[i];
-            with_gathered(plan, it, |keys, vals, n| {
-                attention::exact_attention(it.q, keys, vals, n)
-            })
+            if pq_values {
+                let scores = GATHER_SCRATCH.with(|s| {
+                    let (keys, _) = &mut *s.borrow_mut();
+                    let n =
+                        plan.cache.gather_keys_into(it.seq, it.head, keys)?;
+                    Ok::<_, CacheError>(dense_scores(it.q, keys, n))
+                })?;
+                finish_item(plan, it, scores)
+            } else {
+                with_gathered(plan, it, |keys, vals, n| {
+                    attention::exact_attention(it.q, keys, vals, n)
+                })
+            }
         })
         .map_err(|e: CacheError| anyhow::anyhow!("fp16 decode: {e}"))
     }
 }
 
 /// INT4/INT8 round-trip baseline (gathers, dequantizes, then scores —
-/// the bandwidth-bound path the paper compares against).
+/// the bandwidth-bound path the paper compares against). With PQ-coded
+/// values this is the "int-key × pq-value" combination: round-tripped
+/// key scores feed the fused blocked weighted decode.
 pub struct ScalarQuantKernel {
     pub bits: u8,
 }
@@ -123,11 +181,24 @@ impl AttentionKernel for ScalarQuantKernel {
         -> anyhow::Result<Vec<AttnOutput>>
     {
         let bits = self.bits;
+        let pq_values = plan.cache.value_codecs().is_some();
         parallel_try_map(plan.items.len(), plan.threads, |i| {
             let it = &plan.items[i];
-            with_gathered(plan, it, |keys, vals, n| {
-                attention::scalar_quant_attention(it.q, keys, vals, n, bits)
-            })
+            if pq_values {
+                let scores = GATHER_SCRATCH.with(|s| {
+                    let (keys, _) = &mut *s.borrow_mut();
+                    let n =
+                        plan.cache.gather_keys_into(it.seq, it.head, keys)?;
+                    let deq = crate::quant::quant_roundtrip(keys, bits);
+                    Ok::<_, CacheError>(dense_scores(it.q, &deq, n))
+                })?;
+                finish_item(plan, it, scores)
+            } else {
+                with_gathered(plan, it, |keys, vals, n| {
+                    attention::scalar_quant_attention(
+                        it.q, keys, vals, n, bits)
+                })
+            }
         })
         .map_err(|e: CacheError| anyhow::anyhow!("int{bits} decode: {e}"))
     }
@@ -135,7 +206,10 @@ impl AttentionKernel for ScalarQuantKernel {
 
 /// LOOKAT ADC over the block-resident PQ codes: LUT build per item,
 /// then scores and α·V accumulated straight from the cache's
-/// [`crate::kvcache::BlockView`]s — no gather copies at all.
+/// [`crate::kvcache::BlockView`]s — no gather copies at all. With
+/// PQ-coded values this is the paper's fully-compressed **lookat-kv**
+/// path: both the key-code scan and the value weighted decode are
+/// block-resident, zero per-step copies on either cache side.
 pub struct LookatKernel;
 
 impl AttentionKernel for LookatKernel {
@@ -160,11 +234,7 @@ impl AttentionKernel for LookatKernel {
                 plan.cache.blocks(it.seq, it.head)?.map(|b| b.codes),
                 &mut scores,
             );
-            Ok(finish_attention_blocks(
-                scores,
-                plan.cache.blocks(it.seq, it.head)?,
-                plan.d_k,
-            ))
+            finish_item(plan, it, scores)
         })
         .map_err(|e: CacheError| anyhow::anyhow!("lookat decode: {e}"))
     }
@@ -406,17 +476,19 @@ impl AttentionKernel for PjrtLookatKernel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::{KeyStorage, KvCache};
+    use crate::kvcache::{KeyStorage, KvCache, ValueStorage};
     use crate::pq::{PqCodec, TrainOpts};
     use crate::util::rng::Pcg32;
 
     const H: usize = 2;
     const DK: usize = 16;
 
-    fn filled_cache(storage: KeyStorage, seqs: &[(SeqId, usize)])
-        -> KvCache
-    {
-        let mut c = KvCache::new(H, DK, 64, storage);
+    fn filled_cache_kv(
+        storage: KeyStorage,
+        values: ValueStorage,
+        seqs: &[(SeqId, usize)],
+    ) -> KvCache {
+        let mut c = KvCache::new(H, DK, 64, storage, values);
         for &(id, n) in seqs {
             c.create_seq(id).unwrap();
             let mut rng = Pcg32::seed(0xC0 + id);
@@ -431,16 +503,29 @@ mod tests {
         c
     }
 
-    fn pq_storage(m: usize) -> KeyStorage {
-        let mut rng = Pcg32::seed(77);
+    fn filled_cache(storage: KeyStorage, seqs: &[(SeqId, usize)])
+        -> KvCache
+    {
+        filled_cache_kv(storage, ValueStorage::Fp32, seqs)
+    }
+
+    fn trained_codecs(m: usize, seed: u64) -> Vec<PqCodec> {
+        let mut rng = Pcg32::seed(seed);
         let calib: Vec<f32> =
             (0..256 * DK).map(|_| rng.next_f32_std()).collect();
-        let codecs: Vec<PqCodec> = (0..H)
+        (0..H)
             .map(|_| {
                 PqCodec::train(&calib, DK, m, 16, &TrainOpts::default())
             })
-            .collect();
-        KeyStorage::pq(codecs).unwrap()
+            .collect()
+    }
+
+    fn pq_storage(m: usize) -> KeyStorage {
+        KeyStorage::pq(trained_codecs(m, 77)).unwrap()
+    }
+
+    fn pq_value_storage(m: usize) -> ValueStorage {
+        ValueStorage::pq(trained_codecs(m, 78)).unwrap()
     }
 
     fn plan_for<'a>(
@@ -511,6 +596,72 @@ mod tests {
                 &lut, &codes, &vals, n, DK);
             assert_eq!(outs[j].out, want.out, "item {j}");
             assert_eq!(outs[j].weights, want.weights, "item {j}");
+        }
+    }
+
+    #[test]
+    fn lookat_kv_kernel_matches_primitive() {
+        // fully-compressed path: fused kernel output must be
+        // bit-identical to lookat_kv_attention over gathered codes
+        let cache = filled_cache_kv(
+            pq_storage(4),
+            pq_value_storage(4),
+            &[(1, 33), (2, 64), (3, 100)],
+        );
+        let qs = queries(3, 17);
+        let plan = plan_for(&cache, &qs, &[1, 2, 3], 2);
+        let outs = LookatKernel.decode_batch(&plan).unwrap();
+        let kcodecs = cache.codecs().unwrap();
+        let vcodecs = cache.value_codecs().unwrap();
+        for (j, it) in plan.items.iter().enumerate() {
+            let mut kcodes = Vec::new();
+            let mut vcodes = Vec::new();
+            let n = cache
+                .gather_codes_into(it.seq, it.head, &mut kcodes)
+                .unwrap();
+            cache
+                .gather_value_codes_into(it.seq, it.head, &mut vcodes)
+                .unwrap();
+            let want = attention::lookat_kv_attention(
+                it.q,
+                &kcodes,
+                &kcodecs[it.head],
+                &vcodes,
+                &vcodecs[it.head],
+                n,
+            );
+            assert_eq!(outs[j].out, want.out, "item {j}");
+            assert_eq!(outs[j].weights, want.weights, "item {j}");
+        }
+    }
+
+    #[test]
+    fn dense_kernels_with_pq_values_keep_key_side_weights() {
+        // value coding must not change the attention distribution: the
+        // fp16/int kernels over a PQ-value cache produce the same
+        // weights as over an FP32-value cache with identical contents
+        let seqs = [(1u64, 40usize), (2, 70)];
+        let qs = queries(2, 19);
+        let fp32 = filled_cache(KeyStorage::Fp16, &seqs);
+        let vpq = filled_cache_kv(
+            KeyStorage::Fp16, pq_value_storage(4), &seqs);
+        let a = Fp16Kernel
+            .decode_batch(&plan_for(&fp32, &qs, &[1, 2], 2))
+            .unwrap();
+        let b = Fp16Kernel
+            .decode_batch(&plan_for(&vpq, &qs, &[1, 2], 2))
+            .unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.weights, y.weights);
+        }
+        let a = ScalarQuantKernel { bits: 8 }
+            .decode_batch(&plan_for(&fp32, &qs, &[1, 2], 2))
+            .unwrap();
+        let b = ScalarQuantKernel { bits: 8 }
+            .decode_batch(&plan_for(&vpq, &qs, &[1, 2], 2))
+            .unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.weights, y.weights);
         }
     }
 

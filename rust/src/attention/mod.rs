@@ -160,6 +160,34 @@ pub fn finish_attention_blocks<'a>(
     AttnOutput { out, weights: scores }
 }
 
+/// Fully-fused block-resident attention tail for PQ-coded values (the
+/// §5.2 extension in the serving path): softmax the raw scores, then
+/// scatter-accumulate the post-softmax weights into per-subspace (K,)
+/// tables while streaming the cache's value-code blocks, finishing with
+/// one m × K × d_sub centroid matvec
+/// ([`crate::pq::values::weighted_decode_blocks`]). Values are never
+/// dequantized per token and never gathered — zero per-step value
+/// copies. Token order matches the flat path, so the output is
+/// bit-identical to [`lookat_kv_attention`] over the gathered codes.
+pub fn finish_attention_kv_blocks<'a>(
+    mut scores: Vec<f32>,
+    blocks: impl Iterator<Item = BlockView<'a>>,
+    value_codec: &PqCodec,
+    d_k: usize,
+) -> AttnOutput {
+    let inv = 1.0 / (d_k as f32).sqrt();
+    for s in scores.iter_mut() {
+        *s *= inv;
+    }
+    softmax_inplace(&mut scores);
+    let out = crate::pq::values::weighted_decode_blocks(
+        &scores,
+        blocks.map(|b| b.value_codes),
+        value_codec,
+    );
+    AttnOutput { out, weights: scores }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -317,6 +345,41 @@ mod tests {
         let kv = lookat_kv_attention(
             &q, &key_codes, &kc, &value_codes, &vc, n);
         assert_eq!(key_only.weights, kv.weights);
+    }
+
+    #[test]
+    fn fused_kv_tail_bit_identical_to_primitive() {
+        // finish_attention_kv_blocks over chunked value codes must equal
+        // lookat_kv_attention over the flat equivalents, bit for bit
+        let d_k = 32;
+        let n = 100;
+        let (q, keys, values) = case(n, d_k, 30);
+        let kc = PqCodec::train(&keys, d_k, 4, 64, &TrainOpts::default());
+        let vc = PqCodec::train(&values, d_k, 4, 64, &TrainOpts::default());
+        let key_codes = kc.encode_batch(&keys, n);
+        let value_codes = vc.encode_batch(&values, n);
+        let want = lookat_kv_attention(
+            &q, &key_codes, &kc, &value_codes, &vc, n);
+
+        let lut = LookupTable::build(&q, &kc.codebook);
+        let scores = lut.scores(&key_codes, n);
+        for bt in [32usize, 48, 7] {
+            let views = value_codes.chunks(bt * 4).map(|c| BlockView {
+                len: c.len() / 4,
+                keys: &[],
+                codes: &[],
+                values: &[],
+                value_codes: c,
+            });
+            let got = finish_attention_kv_blocks(
+                scores.clone(), views, &vc, d_k);
+            assert_eq!(
+                want.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                got.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "block_tokens={bt}"
+            );
+            assert_eq!(want.weights, got.weights, "block_tokens={bt}");
+        }
     }
 
     #[test]

@@ -184,6 +184,8 @@ mod tests {
         let engine = Engine::build(&EngineConfig {
             model: ModelConfig::test_tiny(),
             backend: AttentionBackend::Fp16Exact,
+            value_backend:
+                crate::coordinator::engine::ValueBackend::Fp32,
             seed: 3,
             cache_blocks: blocks,
             calib_tokens: 64,
@@ -223,6 +225,43 @@ mod tests {
             assert!(c.finished_s >= c.first_token_s);
         }
         // all cache released
+        assert_eq!(b.engine().cache_stats().tokens, 0);
+    }
+
+    #[test]
+    fn drains_queue_on_fully_compressed_engine() {
+        // admission + decode ticks over the lookat-kv (PQ keys + PQ
+        // values) engine: block accounting is storage-agnostic, so the
+        // batcher needs no special casing — this pins that down
+        let engine = Engine::build(&EngineConfig {
+            model: ModelConfig::test_tiny(),
+            backend: AttentionBackend::Lookat { m: 4, k: 64 },
+            value_backend:
+                crate::coordinator::engine::ValueBackend::Pq {
+                    m: 4,
+                    k: 64,
+                },
+            seed: 3,
+            cache_blocks: 64,
+            calib_tokens: 64,
+            decode_threads: 2,
+        })
+        .unwrap();
+        let mut b =
+            Batcher::new(engine, BatcherConfig { max_batch: 2, max_queue: 16 });
+        for i in 0..4 {
+            assert!(b.submit(req(i, 3)));
+        }
+        let mut now = 0.0;
+        let mut iters = 0;
+        while !b.idle() {
+            b.admit(now);
+            b.step(now).unwrap();
+            now += 0.01;
+            iters += 1;
+            assert!(iters < 1000, "stuck");
+        }
+        assert_eq!(b.completed.len(), 4);
         assert_eq!(b.engine().cache_stats().tokens, 0);
     }
 

@@ -27,7 +27,9 @@ use crate::attention::kernel::{
     ScalarQuantKernel,
 };
 use crate::attention::{AttentionKernel, DecodePlan, WorkItem};
-use crate::kvcache::{CacheError, KeyStorage, KvCache, SeqId};
+use crate::kvcache::{
+    CacheError, KeyStorage, KvCache, SeqId, ValueStorage,
+};
 use crate::model::{Gpt2, ModelConfig, PrefillOutput, Weights};
 use crate::pq::{PqCodec, TrainOpts};
 use crate::runtime::Runtime;
@@ -69,11 +71,43 @@ impl AttentionBackend {
     }
 }
 
+/// How the engine's caches store values — the value-side axis of the
+/// backend matrix, orthogonal to [`AttentionBackend`] (which picks the
+/// key representation and scoring path).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ValueBackend {
+    /// raw values (the default; "FP16" under the paper's byte model)
+    Fp32,
+    /// PQ-coded values with `m` subspaces, K centroids: the fused
+    /// blocked weighted decode serves attention with zero per-step
+    /// value dequantization copies
+    Pq { m: usize, k: usize },
+}
+
+impl ValueBackend {
+    pub fn name(&self) -> String {
+        match self {
+            ValueBackend::Fp32 => "fp32".into(),
+            ValueBackend::Pq { m, .. } => format!("vpq-{m}"),
+        }
+    }
+
+    fn needs_pq(&self) -> Option<(usize, usize)> {
+        match self {
+            ValueBackend::Fp32 => None,
+            ValueBackend::Pq { m, k } => Some((*m, *k)),
+        }
+    }
+}
+
 /// Engine construction parameters.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub model: ModelConfig,
     pub backend: AttentionBackend,
+    /// value-side storage (orthogonal to `backend`; PJRT backends
+    /// require `Fp32`)
+    pub value_backend: ValueBackend,
     pub seed: u64,
     /// KV-cache budget in blocks per layer
     pub cache_blocks: usize,
@@ -89,6 +123,7 @@ impl Default for EngineConfig {
         Self {
             model: ModelConfig::gpt2_layer0(),
             backend: AttentionBackend::Fp16Exact,
+            value_backend: ValueBackend::Fp32,
             seed: 0xE47,
             cache_blocks: 256,
             calib_tokens: 384,
@@ -106,6 +141,7 @@ struct SeqMeta {
 pub struct Engine {
     pub model: Gpt2,
     pub backend: AttentionBackend,
+    pub value_backend: ValueBackend,
     caches: Vec<KvCache>,
     seqs: std::collections::HashMap<SeqId, SeqMeta>,
     kernel: Box<dyn AttentionKernel>,
@@ -127,43 +163,71 @@ impl Engine {
         let model = Gpt2::new(weights);
         let (h, d_k) = (cfg.model.n_head, cfg.model.d_head);
 
-        // PQ backends: train per-layer, per-head codebooks on calibration
-        // keys extracted exactly like the paper's §3.4 (prefill a corpus,
-        // take each head's keys).
-        let storage_per_layer: Vec<KeyStorage> =
-            if let Some((m, k)) = cfg.backend.needs_pq() {
-                let calib = Self::calibration_keys(&model, cfg)?;
-                let mut per_layer = Vec::with_capacity(calib.len());
-                for per_head in calib {
-                    let codecs: Vec<PqCodec> = per_head
-                        .iter()
-                        .map(|keys| {
-                            PqCodec::train(
-                                keys,
-                                d_k,
-                                m,
-                                k,
-                                &TrainOpts {
-                                    seed: cfg.seed ^ 0x90,
-                                    ..Default::default()
-                                },
-                            )
-                        })
-                        .collect();
-                    per_layer.push(
-                        KeyStorage::pq(codecs)
-                            .map_err(|e| anyhow::anyhow!("{e}"))?,
-                    );
-                }
-                per_layer
-            } else {
-                (0..cfg.model.n_layer).map(|_| KeyStorage::Fp16).collect()
-            };
+        let key_pq = cfg.backend.needs_pq();
+        let value_pq = cfg.value_backend.needs_pq();
+        if value_pq.is_some()
+            && matches!(
+                cfg.backend,
+                AttentionBackend::PjrtFp16
+                    | AttentionBackend::PjrtLookat { .. }
+            )
+        {
+            bail!(
+                "PQ value storage is not supported on PJRT backends \
+                 (the artifacts have no value-code contract); use \
+                 --value-backend fp32"
+            );
+        }
 
-        let caches = storage_per_layer
-            .into_iter()
-            .map(|st| KvCache::new(h, d_k, cfg.cache_blocks, st))
-            .collect();
+        // PQ backends: train per-layer, per-head codebooks on a
+        // calibration corpus exactly like the paper's §3.4 (prefill
+        // once, take each head's keys — and values, for the §5.2
+        // value-side extension — from every layer).
+        let calib: Option<PrefillOutput> =
+            if key_pq.is_some() || value_pq.is_some() {
+                Some(Self::calibration_prefill(&model, cfg)?)
+            } else {
+                None
+            };
+        let train = |data: &[f32], m: usize, k: usize, salt: u64| {
+            PqCodec::train(
+                data,
+                d_k,
+                m,
+                k,
+                &TrainOpts { seed: cfg.seed ^ salt, ..Default::default() },
+            )
+        };
+
+        let mut caches = Vec::with_capacity(cfg.model.n_layer);
+        for layer in 0..cfg.model.n_layer {
+            let storage = if let Some((m, k)) = key_pq {
+                let out = calib.as_ref().unwrap();
+                let codecs: Vec<PqCodec> = (0..h)
+                    .map(|head| {
+                        train(&out.head_keys(layer, head, d_k), m, k, 0x90)
+                    })
+                    .collect();
+                KeyStorage::pq(codecs).map_err(|e| anyhow::anyhow!("{e}"))?
+            } else {
+                KeyStorage::Fp16
+            };
+            let value_storage = if let Some((m, k)) = value_pq {
+                let out = calib.as_ref().unwrap();
+                let codecs: Vec<PqCodec> = (0..h)
+                    .map(|head| {
+                        train(
+                            &out.head_values(layer, head, d_k), m, k, 0x91)
+                    })
+                    .collect();
+                ValueStorage::pq(codecs)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?
+            } else {
+                ValueStorage::Fp32
+            };
+            caches.push(KvCache::new(
+                h, d_k, cfg.cache_blocks, storage, value_storage));
+        }
 
         let kernel = Self::build_kernel(cfg)?;
         let threads = if cfg.decode_threads == 0 {
@@ -177,11 +241,22 @@ impl Engine {
         Ok(Engine {
             model,
             backend: cfg.backend.clone(),
+            value_backend: cfg.value_backend.clone(),
             caches,
             seqs: std::collections::HashMap::new(),
             kernel,
             threads,
         })
+    }
+
+    /// Combined backend label for reports: the key backend's name, plus
+    /// a `+vpq-<m>` suffix when values are PQ-coded (fp32 values keep
+    /// the bare name, so perf trajectories stay comparable across PRs).
+    pub fn label(&self) -> String {
+        match &self.value_backend {
+            ValueBackend::Fp32 => self.backend.name(),
+            vb => format!("{}+{}", self.backend.name(), vb.name()),
+        }
     }
 
     /// Instantiate the backend's attention kernel. PJRT backends open
@@ -236,9 +311,11 @@ impl Engine {
         })
     }
 
-    /// Calibration keys per layer per head: prefill a mixed-genre corpus.
-    fn calibration_keys(model: &Gpt2, cfg: &EngineConfig)
-        -> anyhow::Result<Vec<Vec<Vec<f32>>>>
+    /// Calibration prefill over a mixed-genre corpus: one forward pass
+    /// whose per-layer caches supply both the key and the value
+    /// codebook training sets.
+    fn calibration_prefill(model: &Gpt2, cfg: &EngineConfig)
+        -> anyhow::Result<PrefillOutput>
     {
         let tok = crate::model::ByteTokenizer::new();
         let mut text = String::new();
@@ -252,15 +329,7 @@ impl Engine {
             &text,
             cfg.calib_tokens.min(cfg.model.max_pos),
         );
-        let out = model.prefill(&ids);
-        let d_k = cfg.model.d_head;
-        Ok((0..cfg.model.n_layer)
-            .map(|layer| {
-                (0..cfg.model.n_head)
-                    .map(|head| out.head_keys(layer, head, d_k))
-                    .collect()
-            })
-            .collect())
+        Ok(model.prefill(&ids))
     }
 
     /// Sequences currently registered.
@@ -510,6 +579,7 @@ mod tests {
         EngineConfig {
             model: ModelConfig::test_tiny(),
             backend,
+            value_backend: ValueBackend::Fp32,
             seed: 1,
             cache_blocks: 32,
             calib_tokens: 96,
@@ -646,5 +716,51 @@ mod tests {
         assert_eq!(AttentionBackend::ScalarQuant { bits: 4 }.name(), "int4");
         assert_eq!(AttentionBackend::PjrtLookat { m: 2 }.name(),
                    "pjrt-lookat-2");
+        assert_eq!(ValueBackend::Fp32.name(), "fp32");
+        assert_eq!(ValueBackend::Pq { m: 8, k: 256 }.name(), "vpq-8");
+    }
+
+    #[test]
+    fn lookat_kv_engine_generates_and_compresses_values() {
+        let mut cfg = tiny_cfg(AttentionBackend::Lookat { m: 4, k: 64 });
+        cfg.value_backend = ValueBackend::Pq { m: 4, k: 64 };
+        let mut e = Engine::build(&cfg).unwrap();
+        assert_eq!(e.label(), "lookat-4+vpq-4");
+        let ids = ByteTokenizer::new().encode("fully compressed serve");
+        e.start_seq(1, &ids).unwrap();
+        for _ in 0..4 {
+            e.decode_one(1).unwrap();
+        }
+        let s = e.cache_stats();
+        // value accounting reflects the PQ mode: m_v B/token/head
+        assert_eq!(s.value_bytes, s.tokens * cfg.model.n_head * 4);
+        e.release(1).unwrap();
+    }
+
+    #[test]
+    fn pjrt_backend_rejects_pq_values() {
+        let mut cfg = tiny_cfg(AttentionBackend::PjrtFp16);
+        cfg.value_backend = ValueBackend::Pq { m: 4, k: 64 };
+        let err = Engine::build(&cfg).unwrap_err().to_string();
+        assert!(err.contains("PQ value storage"), "{err}");
+    }
+
+    #[test]
+    fn value_backend_does_not_change_attention_weights_path() {
+        // same seed, same prompts: the first decoded token (prefill
+        // hidden state) must match between fp32 and pq value storage
+        let ids = ByteTokenizer::new().encode("value invariance probe");
+        let base = tiny_cfg(AttentionBackend::Lookat { m: 4, k: 64 });
+        let mut fp = Engine::build(&base).unwrap();
+        fp.start_seq(1, &ids).unwrap();
+        let mut cfg = base.clone();
+        cfg.value_backend = ValueBackend::Pq { m: 8, k: 64 };
+        let mut vq = Engine::build(&cfg).unwrap();
+        vq.start_seq(1, &ids).unwrap();
+        assert_eq!(
+            fp.decode_one(1).unwrap(),
+            vq.decode_one(1).unwrap(),
+            "first token comes from an identical prefill hidden state"
+        );
     }
 }

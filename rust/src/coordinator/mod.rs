@@ -23,7 +23,7 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use engine::{AttentionBackend, Engine, EngineConfig};
+pub use engine::{AttentionBackend, Engine, EngineConfig, ValueBackend};
 pub use request::{CompletedRequest, Request, RequestState};
 pub use router::{Router, RouterConfig, ServingReport};
 pub use server::{Server, ServerConfig};

@@ -32,6 +32,7 @@ pub struct ServingReport {
     pub decode_tokens: usize,
     pub prefill_tokens: usize,
     pub key_cache_peak_bytes: usize,
+    pub value_cache_peak_bytes: usize,
 }
 
 impl ServingReport {
@@ -73,6 +74,10 @@ impl ServingReport {
             "key_cache_peak_bytes",
             Json::Num(self.key_cache_peak_bytes as f64),
         );
+        o.set(
+            "value_cache_peak_bytes",
+            Json::Num(self.value_cache_peak_bytes as f64),
+        );
         o
     }
 
@@ -83,7 +88,7 @@ impl ServingReport {
         format!(
             "backend={:<14} completed={:<4} rejected={:<3} wall={:>7.2}s \
              decode_tok/s={:>8.1} ttft_p50={:>7.1}ms e2e_p50={:>7.1}ms \
-             key_cache_peak={:>8} B",
+             key_cache_peak={:>8} B value_cache_peak={:>8} B",
             self.backend,
             self.completed.len(),
             self.rejected,
@@ -92,6 +97,7 @@ impl ServingReport {
             ttft.as_ref().map_or(0.0, |t| t.p50 * 1e3),
             e2e.as_ref().map_or(0.0, |t| t.p50 * 1e3),
             self.key_cache_peak_bytes,
+            self.value_cache_peak_bytes,
         )
     }
 }
@@ -150,6 +156,7 @@ impl Router {
             pending.iter().map(|r| r.prompt.len()).sum();
         let mut decode_tokens = 0usize;
         let mut peak_key_bytes = 0usize;
+        let mut peak_value_bytes = 0usize;
 
         while !(pending.is_empty() && self.batcher.idle()) {
             let now = t0.elapsed().as_secs_f64();
@@ -167,8 +174,9 @@ impl Router {
                 decode_tokens += self
                     .batcher
                     .step(t0.elapsed().as_secs_f64())?;
-                peak_key_bytes = peak_key_bytes
-                    .max(self.batcher.engine().cache_stats().key_bytes);
+                let stats = self.batcher.engine().cache_stats();
+                peak_key_bytes = peak_key_bytes.max(stats.key_bytes);
+                peak_value_bytes = peak_value_bytes.max(stats.value_bytes);
             } else if let Some(r) = pending.front() {
                 // idle until the next arrival
                 let wait = (r.arrival_s - now).max(0.0);
@@ -179,7 +187,7 @@ impl Router {
         }
 
         Ok(ServingReport {
-            backend: self.batcher.engine().backend.name(),
+            backend: self.batcher.engine().label(),
             completed: std::mem::take(&mut self.batcher.completed),
             // drain, don't peek: a reused router (set_max_batch sweeps)
             // must not re-report earlier runs' rejections
@@ -188,6 +196,7 @@ impl Router {
             decode_tokens,
             prefill_tokens,
             key_cache_peak_bytes: peak_key_bytes,
+            value_cache_peak_bytes: peak_value_bytes,
         })
     }
 }
@@ -195,7 +204,7 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::engine::AttentionBackend;
+    use crate::coordinator::engine::{AttentionBackend, ValueBackend};
     use crate::model::ModelConfig;
     use crate::workload::{TraceConfig, TraceGenerator};
 
@@ -204,6 +213,7 @@ mod tests {
             engine: EngineConfig {
                 model: ModelConfig::test_tiny(),
                 backend,
+                value_backend: ValueBackend::Fp32,
                 seed: 5,
                 cache_blocks: 128,
                 calib_tokens: 64,
@@ -259,6 +269,40 @@ mod tests {
             report.key_cache_peak_bytes,
             report_fp.key_cache_peak_bytes
         );
+    }
+
+    #[test]
+    fn serves_trace_lookat_kv_backend() {
+        // fully-compressed cache: both peak byte columns shrink
+        let mut r = Router::build(RouterConfig {
+            engine: EngineConfig {
+                model: ModelConfig::test_tiny(),
+                backend: AttentionBackend::Lookat { m: 4, k: 64 },
+                value_backend: ValueBackend::Pq { m: 4, k: 64 },
+                seed: 5,
+                cache_blocks: 128,
+                calib_tokens: 64,
+                decode_threads: 2,
+            },
+            batcher: BatcherConfig { max_batch: 4, max_queue: 64 },
+            max_prompt_tokens: 48,
+        })
+        .unwrap();
+        let reqs = r.tokenize_trace(&small_trace(4));
+        let report = r.serve_trace(reqs).unwrap();
+        assert_eq!(report.completed.len(), 4);
+        assert_eq!(report.backend, "lookat-4+vpq-4");
+        let mut rf = router(AttentionBackend::Fp16Exact);
+        let reqs_fp = rf.tokenize_trace(&small_trace(4));
+        let report_fp = rf.serve_trace(reqs_fp).unwrap();
+        assert!(
+            report.value_cache_peak_bytes * 4
+                < report_fp.value_cache_peak_bytes,
+            "vpq {} vs fp32 {}",
+            report.value_cache_peak_bytes,
+            report_fp.value_cache_peak_bytes
+        );
+        assert!(report.to_json().get("value_cache_peak_bytes").is_some());
     }
 
     #[test]

@@ -295,6 +295,8 @@ mod tests {
             engine: EngineConfig {
                 model: ModelConfig::test_tiny(),
                 backend: AttentionBackend::Lookat { m: 4, k: 64 },
+                value_backend:
+                    crate::coordinator::engine::ValueBackend::Fp32,
                 seed: 2,
                 cache_blocks: 64,
                 calib_tokens: 64,

@@ -1,7 +1,15 @@
-//! Ablation A1 — value compression (paper §5.2 future work, built out):
-//! keys-only LOOKAT vs keys+values LOOKAT at matched configurations.
-//! Total cache bytes/token now include the value side, which dominates
-//! once keys are compressed (values are 128 B/token FP16 at d_k=64).
+//! Ablation A1 — value compression (paper §5.2, now in the serving
+//! path): keys-only LOOKAT vs keys+values LOOKAT at matched
+//! configurations. Total cache bytes/token include the value side,
+//! which dominates once keys are compressed (values are 128 B/token
+//! FP16 at d_k=64).
+//!
+//! The keys+values rows run through `EvalContext::evaluate_sample_kv`,
+//! which replays each sample into a paged `KvCache`
+//! (`KeyStorage::Pq` + `ValueStorage::Pq`) and attends through
+//! `LookatKernel::decode_batch` — the same block-resident ADC scan and
+//! fused blocked weighted decode `Engine::decode_batch` serves with,
+//! not a standalone evaluation loop.
 
 use super::eval::EvalContext;
 use super::report::{pm, MdTable, Report};
@@ -72,7 +80,10 @@ pub fn render(rows: &[Row]) -> Report {
          (128 B/token/head at d_k=64). Compressing values with the \
          transposed-ADC weighted decode (pq::values) pushes *total* \
          cache compression to ~32× while the attention distribution is \
-         untouched (value coding can't change scores).\n\n{}",
+         untouched (value coding can't change scores). Keys+values rows \
+         are measured through the serving path itself: a paged KvCache \
+         in ValueStorage::Pq mode attended via LookatKernel's fused \
+         blocked weighted decode.\n\n{}",
         t.render()
     );
     Report {

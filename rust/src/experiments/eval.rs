@@ -262,6 +262,13 @@ impl EvalContext {
 
     /// Evaluate the §5.2 extension: keys AND values PQ-compressed
     /// (value codebooks trained on held-out calibration values too).
+    ///
+    /// Runs the *serving path*, not a standalone loop: the sample is
+    /// replayed into a paged [`KvCache`] with `KeyStorage::Pq` +
+    /// `ValueStorage::Pq` and every probe position attends through
+    /// [`LookatKernel::decode_batch`] — the same block-resident ADC
+    /// scan and fused blocked weighted decode `Engine::decode_batch`
+    /// uses in production.
     pub fn evaluate_sample_kv(
         &self,
         sample: &Sample,
@@ -269,28 +276,69 @@ impl EvalContext {
         m_values: usize,
         stride: usize,
     ) -> FidelityReport {
-        let calib_values = &sample.calib_values;
+        use crate::attention::{AttentionKernel, DecodePlan, WorkItem};
+        use crate::attention::kernel::LookatKernel;
+        use crate::kvcache::{
+            KeyStorage, KvCache, ValueStorage, BLOCK_TOKENS,
+        };
+
         let d_k = sample.d_k;
+        let h = self.model_cfg.n_head;
         let inv = 1.0 / (d_k as f32).sqrt();
+        let train = |calib: &[f32], m: usize, salt: u64| {
+            PqCodec::train(
+                calib, d_k, m, crate::pq::NUM_CENTROIDS,
+                &TrainOpts { seed: self.seed ^ salt, ..Default::default() })
+        };
+        let kcs: Vec<PqCodec> = (0..h)
+            .map(|head| train(&sample.calib_keys[head], m_keys, 0))
+            .collect();
+        let vcs: Vec<PqCodec> = (0..h)
+            .map(|head| train(&sample.calib_values[head], m_values, 1))
+            .collect();
+        let mut cache = KvCache::new(
+            h,
+            d_k,
+            sample.len.div_ceil(BLOCK_TOKENS),
+            KeyStorage::pq(kcs).expect("non-empty key codecs"),
+            ValueStorage::pq(vcs).expect("non-empty value codecs"),
+        );
+        cache.create_seq(0).expect("fresh cache");
+        let mut kernel = LookatKernel;
+
         let mut reports = Vec::new();
-        for head in 0..self.model_cfg.n_head {
-            let keys = &sample.keys[head];
-            let values = &sample.values[head];
-            let queries = &sample.queries[head];
-            let kc = PqCodec::train(
-                &sample.calib_keys[head], d_k, m_keys,
-                crate::pq::NUM_CENTROIDS,
-                &TrainOpts { seed: self.seed, ..Default::default() });
-            let vc = PqCodec::train(
-                &calib_values[head], d_k, m_values,
-                crate::pq::NUM_CENTROIDS,
-                &TrainOpts { seed: self.seed ^ 1, ..Default::default() });
-            let key_codes = kc.encode_batch(keys, sample.len);
-            let value_codes = vc.encode_batch(values, sample.len);
-            let mut t = 16.max(stride);
-            while t < sample.len {
-                let n = t + 1;
-                let q = &queries[t * d_k..(t + 1) * d_k];
+        let first = 16.max(stride);
+        for t in 0..sample.len {
+            // replay token t into the cache exactly as serving would
+            let mut k_row = Vec::with_capacity(h * d_k);
+            let mut v_row = Vec::with_capacity(h * d_k);
+            for head in 0..h {
+                k_row.extend_from_slice(
+                    &sample.keys[head][t * d_k..(t + 1) * d_k]);
+                v_row.extend_from_slice(
+                    &sample.values[head][t * d_k..(t + 1) * d_k]);
+            }
+            cache.append(0, &k_row, &v_row).expect("within block budget");
+            if t < first || (t - first) % stride != 0 {
+                continue;
+            }
+            // one decode plan over the causal prefix [0, t], all heads
+            let n = t + 1;
+            let items: Vec<WorkItem> = (0..h)
+                .map(|head| WorkItem {
+                    seq: 0,
+                    head,
+                    q: &sample.queries[head][t * d_k..(t + 1) * d_k],
+                })
+                .collect();
+            let plan =
+                DecodePlan { cache: &cache, d_k, threads: 1, items };
+            let outs =
+                kernel.decode_batch(&plan).expect("lookat-kv decode");
+            for head in 0..h {
+                let keys = &sample.keys[head];
+                let values = &sample.values[head];
+                let q = &sample.queries[head][t * d_k..(t + 1) * d_k];
                 let mut s_ref: Vec<f32> = (0..n)
                     .map(|l| {
                         crate::tensor::dot(
@@ -299,12 +347,12 @@ impl EvalContext {
                     .collect();
                 softmax_inplace(&mut s_ref);
                 let out_ref = weighted_values(&s_ref, values, d_k);
-                let apx = crate::attention::lookat_kv_attention(
-                    q, &key_codes[..n * m_keys], &kc,
-                    &value_codes[..n * m_values], &vc, n);
                 reports.push(FidelityReport::compare(
-                    &out_ref, &apx.out, &s_ref, &apx.weights));
-                t += stride;
+                    &out_ref,
+                    &outs[head].out,
+                    &s_ref,
+                    &outs[head].weights,
+                ));
             }
         }
         average_reports(&reports)

@@ -18,10 +18,14 @@ pub struct BlockView<'a> {
     pub len: usize,
     /// this head's raw keys, (len × d_k) row-major — empty in PQ mode
     pub keys: &'a [f32],
-    /// this head's PQ codes, (len × m) row-major — empty in FP16 mode
+    /// this head's PQ key codes, (len × m) row-major — empty in FP16 mode
     pub codes: &'a [u8],
-    /// this head's values, (len × d_k) row-major
+    /// this head's raw values, (len × d_k) row-major — empty when values
+    /// are PQ-coded (`ValueStorage::Pq`)
     pub values: &'a [f32],
+    /// this head's PQ value codes, (len × m_v) row-major — empty when
+    /// values are raw (`ValueStorage::Fp32`)
+    pub value_codes: &'a [u8],
 }
 
 /// Free-list block allocator over a fixed budget of blocks.

@@ -1,5 +1,5 @@
 //! The KV-cache manager: per-sequence paged storage of (compressed) keys
-//! and full-precision values for all heads of one layer.
+//! and (compressed or full-precision) values for all heads of one layer.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -21,11 +21,11 @@ pub enum KeyStorage {
 }
 
 impl KeyStorage {
-    /// Validated PQ storage: one codec per head, at least one head.
+    /// Validated PQ storage: one codec per head, at least one head,
+    /// every head sharing one subspace count (blocks are strided by a
+    /// single `m`).
     pub fn pq(codecs: Vec<PqCodec>) -> Result<KeyStorage, CacheError> {
-        if codecs.is_empty() {
-            return Err(CacheError::NoCodecs);
-        }
+        uniform_codecs(&codecs)?;
         Ok(KeyStorage::Pq { codecs: Arc::new(codecs) })
     }
 
@@ -40,6 +40,38 @@ impl KeyStorage {
     }
 }
 
+/// How values are stored in the cache — the §5.2 extension mirrored onto
+/// the key side's storage contract: under `Pq`, values exist only as
+/// codes and are re-materialized solely through the fused weighted
+/// decode (`pq::values::weighted_decode_blocks`), never per token.
+#[derive(Clone)]
+pub enum ValueStorage {
+    /// Raw values ("FP16" storage model: accounted 2 B/element).
+    Fp32,
+    /// PQ-coded values, one codec per head.
+    /// Build via [`ValueStorage::pq`], which validates the codec set.
+    Pq { codecs: Arc<Vec<PqCodec>> },
+}
+
+impl ValueStorage {
+    /// Validated PQ value storage: same contract as [`KeyStorage::pq`]
+    /// (non-empty, one uniform subspace count across heads).
+    pub fn pq(codecs: Vec<PqCodec>) -> Result<ValueStorage, CacheError> {
+        uniform_codecs(&codecs)?;
+        Ok(ValueStorage::Pq { codecs: Arc::new(codecs) })
+    }
+
+    /// Codes per token per head (0 for FP32 storage).
+    fn m(&self) -> usize {
+        match self {
+            ValueStorage::Fp32 => 0,
+            ValueStorage::Pq { codecs } => {
+                codecs.first().map_or(0, |c| c.codebook.m)
+            }
+        }
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum CacheError {
     OutOfBlocks,
@@ -47,6 +79,20 @@ pub enum CacheError {
     DuplicateSeq(SeqId),
     /// PQ storage was constructed with an empty codec set.
     NoCodecs,
+    /// PQ storage was constructed with per-head codecs whose subspace
+    /// counts differ — block strides assume one `m` across heads.
+    MixedCodecs,
+}
+
+/// Shared validation for the PQ storage constructors.
+fn uniform_codecs(codecs: &[PqCodec]) -> Result<(), CacheError> {
+    let Some(first) = codecs.first() else {
+        return Err(CacheError::NoCodecs);
+    };
+    if codecs.iter().any(|c| c.codebook.m != first.codebook.m) {
+        return Err(CacheError::MixedCodecs);
+    }
+    Ok(())
 }
 
 impl std::fmt::Display for CacheError {
@@ -62,7 +108,13 @@ impl std::fmt::Display for CacheError {
                 write!(f, "sequence {id} already exists")
             }
             CacheError::NoCodecs => {
-                write!(f, "PQ key storage needs at least one codec")
+                write!(f, "PQ storage needs at least one codec")
+            }
+            CacheError::MixedCodecs => {
+                write!(
+                    f,
+                    "PQ storage needs one subspace count across heads"
+                )
             }
         }
     }
@@ -99,16 +151,19 @@ struct SeqState {
 /// Block layout (per block, `BLOCK_TOKENS` token slots) is head-major,
 /// so one head's run of tokens within a block is contiguous and the
 /// decode kernels can scan it in place ([`KvCache::blocks`]):
-///   values: (H, BLOCK_TOKENS, d_k) f32, always
-///   keys:   (H, BLOCK_TOKENS, d_k) f32 when Fp16
-///   codes:  (H, BLOCK_TOKENS, m)  u8  when Pq
+///   values:      (H, BLOCK_TOKENS, d_k) f32 when value storage is Fp32
+///   value codes: (H, BLOCK_TOKENS, m_v) u8  when value storage is Pq
+///   keys:        (H, BLOCK_TOKENS, d_k) f32 when Fp16
+///   key codes:   (H, BLOCK_TOKENS, m)   u8  when Pq
 pub struct KvCache {
     pub h: usize,
     pub d_k: usize,
     storage: KeyStorage,
+    value_storage: ValueStorage,
     alloc: BlockAllocator,
     seqs: HashMap<SeqId, SeqState>,
     values: Vec<f32>,
+    value_codes: Vec<u8>,
     keys_raw: Vec<f32>,
     codes: Vec<u8>,
 }
@@ -116,9 +171,15 @@ pub struct KvCache {
 impl KvCache {
     /// Build a cache with a budget of `max_blocks` blocks.
     pub fn new(h: usize, d_k: usize, max_blocks: usize,
-               storage: KeyStorage) -> Self {
+               storage: KeyStorage, value_storage: ValueStorage) -> Self {
         if let KeyStorage::Pq { codecs } = &storage {
             assert_eq!(codecs.len(), h, "one codec per head");
+            for c in codecs.iter() {
+                assert_eq!(c.codebook.d_k(), d_k);
+            }
+        }
+        if let ValueStorage::Pq { codecs } = &value_storage {
+            assert_eq!(codecs.len(), h, "one value codec per head");
             for c in codecs.iter() {
                 assert_eq!(c.codebook.d_k(), d_k);
             }
@@ -131,13 +192,24 @@ impl KvCache {
                 (vec![], vec![0u8; max_blocks * slot * m])
             }
         };
+        let m_v = value_storage.m();
+        let (values, value_codes) = match &value_storage {
+            ValueStorage::Fp32 => {
+                (vec![0.0; max_blocks * slot * d_k], vec![])
+            }
+            ValueStorage::Pq { .. } => {
+                (vec![], vec![0u8; max_blocks * slot * m_v])
+            }
+        };
         Self {
             h,
             d_k,
             storage,
+            value_storage,
             alloc: BlockAllocator::new(max_blocks),
             seqs: HashMap::new(),
-            values: vec![0.0; max_blocks * slot * d_k],
+            values,
+            value_codes,
             keys_raw,
             codes,
         }
@@ -147,10 +219,21 @@ impl KvCache {
         matches!(self.storage, KeyStorage::Pq { .. })
     }
 
+    pub fn is_value_pq(&self) -> bool {
+        matches!(self.value_storage, ValueStorage::Pq { .. })
+    }
+
     pub fn codecs(&self) -> Option<&Arc<Vec<PqCodec>>> {
         match &self.storage {
             KeyStorage::Pq { codecs } => Some(codecs),
             KeyStorage::Fp16 => None,
+        }
+    }
+
+    pub fn value_codecs(&self) -> Option<&Arc<Vec<PqCodec>>> {
+        match &self.value_storage {
+            ValueStorage::Pq { codecs } => Some(codecs),
+            ValueStorage::Fp32 => None,
         }
     }
 
@@ -182,10 +265,11 @@ impl KvCache {
 
     /// Append one token's K/V for all heads.
     ///
-    /// `keys`/`values` are (H × d_k). In PQ mode the key is immediately
-    /// encoded to `m` codes per head and the raw key is dropped — this is
-    /// the paper's storage contract (keys never exist uncompressed in the
-    /// cache).
+    /// `keys`/`values` are (H × d_k). In PQ mode the key (and, under
+    /// `ValueStorage::Pq`, the value) is immediately encoded to `m`
+    /// codes per head and the raw vector is dropped — this is the
+    /// paper's storage contract (compressed tensors never exist
+    /// uncompressed in the cache).
     pub fn append(
         &mut self,
         seq: SeqId,
@@ -206,11 +290,28 @@ impl KvCache {
         let block = *st.blocks.last().unwrap() as usize;
         let h = self.h;
         let d_k = self.d_k;
-        // values: one strided write per head (head-major block layout)
-        for head in 0..h {
-            let vbase = ((block * h + head) * BLOCK_TOKENS + off) * d_k;
-            self.values[vbase..vbase + d_k]
-                .copy_from_slice(&values[head * d_k..(head + 1) * d_k]);
+        // values: one strided write (or encode) per head (head-major
+        // block layout)
+        match &self.value_storage {
+            ValueStorage::Fp32 => {
+                for head in 0..h {
+                    let vbase =
+                        ((block * h + head) * BLOCK_TOKENS + off) * d_k;
+                    self.values[vbase..vbase + d_k].copy_from_slice(
+                        &values[head * d_k..(head + 1) * d_k]);
+                }
+            }
+            ValueStorage::Pq { codecs } => {
+                let m_v = codecs[0].codebook.m;
+                for head in 0..h {
+                    let code = codecs[head]
+                        .encode(&values[head * d_k..(head + 1) * d_k]);
+                    let cbase =
+                        ((block * h + head) * BLOCK_TOKENS + off) * m_v;
+                    self.value_codes[cbase..cbase + m_v]
+                        .copy_from_slice(&code);
+                }
+            }
         }
         // keys
         match &self.storage {
@@ -305,13 +406,17 @@ impl KvCache {
         Ok(len)
     }
 
-    /// Copy one head's values into `out`.
+    /// Copy one head's raw values into `out` (FP32 value mode only).
     pub fn gather_values_into(
         &self,
         seq: SeqId,
         head: usize,
         out: &mut Vec<f32>,
     ) -> Result<usize, CacheError> {
+        assert!(
+            !self.is_value_pq(),
+            "gather_values_into is for FP32 value caches"
+        );
         let len = self.seq_len(seq)?;
         out.clear();
         out.reserve(len * self.d_k);
@@ -321,7 +426,28 @@ impl KvCache {
         Ok(len)
     }
 
-    /// Exact storage accounting under the paper's byte model.
+    /// Copy one head's PQ value codes into `out` (PQ value mode only).
+    pub fn gather_value_codes_into(
+        &self,
+        seq: SeqId,
+        head: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<usize, CacheError> {
+        let m_v = self.value_storage.m();
+        assert!(m_v > 0, "gather_value_codes_into is for PQ value caches");
+        let len = self.seq_len(seq)?;
+        out.clear();
+        out.reserve(len * m_v);
+        for blk in self.blocks(seq, head)? {
+            out.extend_from_slice(blk.value_codes);
+        }
+        Ok(len)
+    }
+
+    /// Exact storage accounting under the paper's byte model. Both sides
+    /// reflect the *active* storage mode: PQ-coded tensors cost their
+    /// codes (1 B each) plus their codebooks (FP16 entries), raw tensors
+    /// cost 2 B/element.
     pub fn stats(&self) -> CacheStats {
         let tokens: usize = self.seqs.values().map(|s| s.len).sum();
         let key_bytes = match &self.storage {
@@ -330,17 +456,29 @@ impl KvCache {
                 tokens * self.h * self.storage.m()
             }
         };
-        let codebook_bytes = match &self.storage {
+        let value_bytes = match &self.value_storage {
+            ValueStorage::Fp32 => tokens * self.h * self.d_k * 2,
+            ValueStorage::Pq { .. } => {
+                tokens * self.h * self.value_storage.m()
+            }
+        };
+        let mut codebook_bytes: usize = match &self.storage {
             KeyStorage::Fp16 => 0,
             KeyStorage::Pq { codecs } => {
                 codecs.iter().map(|c| c.codebook.size_bytes_fp16()).sum()
             }
         };
+        if let ValueStorage::Pq { codecs } = &self.value_storage {
+            codebook_bytes += codecs
+                .iter()
+                .map(|c| c.codebook.size_bytes_fp16())
+                .sum::<usize>();
+        }
         CacheStats {
             seqs: self.seqs.len(),
             tokens,
             key_bytes,
-            value_bytes: tokens * self.h * self.d_k * 2,
+            value_bytes,
             codebook_bytes,
             blocks_allocated: self.alloc.allocated(),
             blocks_total: self.alloc.total(),
@@ -352,6 +490,14 @@ impl KvCache {
         match &self.storage {
             KeyStorage::Fp16 => self.d_k * 2,
             KeyStorage::Pq { .. } => self.storage.m(),
+        }
+    }
+
+    /// Bytes of value storage per token (the "Mem." column's value axis).
+    pub fn value_bytes_per_token_per_head(&self) -> usize {
+        match &self.value_storage {
+            ValueStorage::Fp32 => self.d_k * 2,
+            ValueStorage::Pq { .. } => self.value_storage.m(),
         }
     }
 }
@@ -378,11 +524,21 @@ impl<'a> Iterator for BlockIter<'a> {
         self.remaining -= take;
         let c = self.cache;
         let (h, d_k) = (c.h, c.d_k);
-        let vbase = (b * h + self.head) * BLOCK_TOKENS * d_k;
-        let values = &c.values[vbase..vbase + take * d_k];
+        let fbase = (b * h + self.head) * BLOCK_TOKENS * d_k;
+        let (values, value_codes): (&[f32], &[u8]) = match &c.value_storage
+        {
+            ValueStorage::Fp32 => {
+                (&c.values[fbase..fbase + take * d_k], &[][..])
+            }
+            ValueStorage::Pq { .. } => {
+                let m_v = c.value_storage.m();
+                let vcbase = (b * h + self.head) * BLOCK_TOKENS * m_v;
+                (&[][..], &c.value_codes[vcbase..vcbase + take * m_v])
+            }
+        };
         let (keys, codes): (&[f32], &[u8]) = match &c.storage {
             KeyStorage::Fp16 => {
-                (&c.keys_raw[vbase..vbase + take * d_k], &[][..])
+                (&c.keys_raw[fbase..fbase + take * d_k], &[][..])
             }
             KeyStorage::Pq { .. } => {
                 let m = c.storage.m();
@@ -390,7 +546,7 @@ impl<'a> Iterator for BlockIter<'a> {
                 (&[][..], &c.codes[cbase..cbase + take * m])
             }
         };
-        Some(BlockView { len: take, keys, codes, values })
+        Some(BlockView { len: take, keys, codes, values, value_codes })
     }
 }
 
@@ -422,7 +578,7 @@ mod tests {
 
     #[test]
     fn fp16_roundtrip_preserves_keys_and_values() {
-        let mut c = KvCache::new(H, DK, 8, KeyStorage::Fp16);
+        let mut c = KvCache::new(H, DK, 8, KeyStorage::Fp16, ValueStorage::Fp32);
         c.create_seq(1).unwrap();
         let mut all_k = Vec::new();
         let mut all_v = Vec::new();
@@ -460,7 +616,7 @@ mod tests {
             KeyStorage::Pq { codecs } => codecs.clone(),
             _ => unreachable!(),
         };
-        let mut c = KvCache::new(H, DK, 8, storage);
+        let mut c = KvCache::new(H, DK, 8, storage, ValueStorage::Fp32);
         c.create_seq(9).unwrap();
         let mut expected: Vec<Vec<u8>> = vec![Vec::new(); H];
         for t in 0..40 {
@@ -482,7 +638,7 @@ mod tests {
 
     #[test]
     fn out_of_blocks_is_reported_not_panicked() {
-        let mut c = KvCache::new(H, DK, 1, KeyStorage::Fp16);
+        let mut c = KvCache::new(H, DK, 1, KeyStorage::Fp16, ValueStorage::Fp32);
         c.create_seq(1).unwrap();
         let (k, v) = token(0);
         for _ in 0..BLOCK_TOKENS {
@@ -494,7 +650,7 @@ mod tests {
 
     #[test]
     fn free_seq_releases_blocks_for_reuse() {
-        let mut c = KvCache::new(H, DK, 2, KeyStorage::Fp16);
+        let mut c = KvCache::new(H, DK, 2, KeyStorage::Fp16, ValueStorage::Fp32);
         c.create_seq(1).unwrap();
         let (k, v) = token(0);
         for _ in 0..2 * BLOCK_TOKENS {
@@ -528,7 +684,7 @@ mod tests {
     fn block_views_match_gathers_fp16_and_pq() {
         for storage in [KeyStorage::Fp16, pq_storage(4)] {
             let is_pq = matches!(storage, KeyStorage::Pq { .. });
-            let mut c = KvCache::new(H, DK, 8, storage);
+            let mut c = KvCache::new(H, DK, 8, storage, ValueStorage::Fp32);
             c.create_seq(1).unwrap();
             for t in 0..70 {
                 // 3 blocks, last one partial
@@ -581,7 +737,7 @@ mod tests {
 
     #[test]
     fn blocks_unknown_seq_errors() {
-        let c = KvCache::new(H, DK, 2, KeyStorage::Fp16);
+        let c = KvCache::new(H, DK, 2, KeyStorage::Fp16, ValueStorage::Fp32);
         assert!(matches!(
             c.blocks(3, 0),
             Err(CacheError::UnknownSeq(3))
@@ -590,7 +746,7 @@ mod tests {
 
     #[test]
     fn unknown_and_duplicate_seq_errors() {
-        let mut c = KvCache::new(H, DK, 2, KeyStorage::Fp16);
+        let mut c = KvCache::new(H, DK, 2, KeyStorage::Fp16, ValueStorage::Fp32);
         assert_eq!(c.seq_len(7), Err(CacheError::UnknownSeq(7)));
         c.create_seq(7).unwrap();
         assert_eq!(c.create_seq(7), Err(CacheError::DuplicateSeq(7)));
@@ -600,7 +756,7 @@ mod tests {
     #[test]
     fn stats_byte_accounting_fp16_vs_pq() {
         let (k, v) = token(3);
-        let mut fp = KvCache::new(H, DK, 4, KeyStorage::Fp16);
+        let mut fp = KvCache::new(H, DK, 4, KeyStorage::Fp16, ValueStorage::Fp32);
         fp.create_seq(1).unwrap();
         for _ in 0..10 {
             fp.append(1, &k, &v).unwrap();
@@ -611,7 +767,7 @@ mod tests {
         assert_eq!(s.value_bytes, 10 * H * DK * 2);
         assert_eq!(s.codebook_bytes, 0);
 
-        let mut pq = KvCache::new(H, DK, 4, pq_storage(4));
+        let mut pq = KvCache::new(H, DK, 4, pq_storage(4), ValueStorage::Fp32);
         pq.create_seq(1).unwrap();
         for _ in 0..10 {
             pq.append(1, &k, &v).unwrap();
@@ -630,7 +786,7 @@ mod tests {
 
     #[test]
     fn multi_seq_interleaving_isolated() {
-        let mut c = KvCache::new(H, DK, 8, KeyStorage::Fp16);
+        let mut c = KvCache::new(H, DK, 8, KeyStorage::Fp16, ValueStorage::Fp32);
         c.create_seq(1).unwrap();
         c.create_seq(2).unwrap();
         for t in 0..20 {
@@ -650,18 +806,142 @@ mod tests {
 
     #[test]
     fn can_append_predicts_admission() {
-        let mut c = KvCache::new(H, DK, 2, KeyStorage::Fp16);
+        let mut c = KvCache::new(H, DK, 2, KeyStorage::Fp16, ValueStorage::Fp32);
         c.create_seq(1).unwrap();
         assert!(c.can_append(1, 2 * BLOCK_TOKENS));
         assert!(!c.can_append(1, 2 * BLOCK_TOKENS + 1));
         assert!(!c.can_append(99, 1), "unknown seq can't append");
     }
 
+    fn pq_value_storage(m: usize) -> ValueStorage {
+        let mut rng = Pcg32::seed(17);
+        let calib: Vec<f32> =
+            (0..128 * DK).map(|_| rng.next_f32_std()).collect();
+        let codecs: Vec<PqCodec> = (0..H)
+            .map(|_| PqCodec::train(&calib, DK, m, 16, &TrainOpts::default()))
+            .collect();
+        ValueStorage::pq(codecs).unwrap()
+    }
+
+    #[test]
+    fn value_pq_mode_stores_codes_matching_direct_encode() {
+        let vstore = pq_value_storage(4);
+        let vcodecs = match &vstore {
+            ValueStorage::Pq { codecs } => codecs.clone(),
+            _ => unreachable!(),
+        };
+        let mut c = KvCache::new(H, DK, 8, KeyStorage::Fp16, vstore);
+        c.create_seq(3).unwrap();
+        let mut expected: Vec<Vec<u8>> = vec![Vec::new(); H];
+        for t in 0..70 {
+            // 3 blocks, last partial
+            let (k, v) = token(300 + t);
+            for head in 0..H {
+                expected[head].extend(
+                    vcodecs[head].encode(&v[head * DK..(head + 1) * DK]),
+                );
+            }
+            c.append(3, &k, &v).unwrap();
+        }
+        assert!(c.is_value_pq());
+        assert!(c.value_codecs().is_some());
+        let mut codes = Vec::new();
+        for head in 0..H {
+            let n = c.gather_value_codes_into(3, head, &mut codes).unwrap();
+            assert_eq!(n, 70);
+            assert_eq!(codes, expected[head]);
+            // block views expose the codes lane and no raw values
+            let concat: Vec<u8> = c
+                .blocks(3, head)
+                .unwrap()
+                .flat_map(|b| b.value_codes.iter().copied())
+                .collect();
+            assert_eq!(concat, codes);
+            assert!(c.blocks(3, head).unwrap().all(|b| b.values.is_empty()));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "FP32 value caches")]
+    fn gather_values_rejects_pq_value_mode() {
+        let mut c =
+            KvCache::new(H, DK, 4, KeyStorage::Fp16, pq_value_storage(4));
+        c.create_seq(1).unwrap();
+        let (k, v) = token(0);
+        c.append(1, &k, &v).unwrap();
+        let mut out = Vec::new();
+        let _ = c.gather_values_into(1, 0, &mut out);
+    }
+
+    #[test]
+    fn stats_value_accounting_reflects_active_mode() {
+        let (k, v) = token(5);
+        let mut fp = KvCache::new(
+            H, DK, 4, KeyStorage::Fp16, ValueStorage::Fp32);
+        let mut pq = KvCache::new(
+            H, DK, 4, pq_storage(4), pq_value_storage(4));
+        for c in [&mut fp, &mut pq] {
+            c.create_seq(1).unwrap();
+            for _ in 0..10 {
+                c.append(1, &k, &v).unwrap();
+            }
+        }
+        let s_fp = fp.stats();
+        assert_eq!(s_fp.value_bytes, 10 * H * DK * 2);
+        assert_eq!(fp.value_bytes_per_token_per_head(), DK * 2);
+
+        // PQ values: codes (m_v B/token/head) + both codebooks
+        let s_pq = pq.stats();
+        assert_eq!(s_pq.value_bytes, 10 * H * 4);
+        assert_eq!(pq.value_bytes_per_token_per_head(), 4);
+        let one_codebook: usize = pq
+            .codecs()
+            .unwrap()
+            .iter()
+            .map(|c| c.codebook.size_bytes_fp16())
+            .sum();
+        let value_codebook: usize = pq
+            .value_codecs()
+            .unwrap()
+            .iter()
+            .map(|c| c.codebook.size_bytes_fp16())
+            .sum();
+        assert_eq!(s_pq.codebook_bytes, one_codebook + value_codebook);
+        assert!(s_pq.total_bytes() < s_fp.total_bytes());
+    }
+
+    #[test]
+    fn empty_value_codec_set_is_an_error_not_a_panic() {
+        assert!(matches!(
+            ValueStorage::pq(Vec::new()),
+            Err(CacheError::NoCodecs)
+        ));
+    }
+
+    #[test]
+    fn mixed_subspace_codecs_are_an_error_not_a_panic() {
+        let mut rng = Pcg32::seed(23);
+        let calib: Vec<f32> =
+            (0..128 * DK).map(|_| rng.next_f32_std()).collect();
+        let mixed = vec![
+            PqCodec::train(&calib, DK, 4, 16, &TrainOpts::default()),
+            PqCodec::train(&calib, DK, 8, 16, &TrainOpts::default()),
+        ];
+        assert!(matches!(
+            KeyStorage::pq(mixed.clone()),
+            Err(CacheError::MixedCodecs)
+        ));
+        assert!(matches!(
+            ValueStorage::pq(mixed),
+            Err(CacheError::MixedCodecs)
+        ));
+    }
+
     #[test]
     fn cache_accounting_property() {
         // property: token count in stats always equals sum of seq lens,
         // and blocks are conserved
-        let mut c = KvCache::new(H, DK, 16, KeyStorage::Fp16);
+        let mut c = KvCache::new(H, DK, 16, KeyStorage::Fp16, ValueStorage::Fp32);
         let mut lens: HashMap<SeqId, usize> = HashMap::new();
         let mut next_id: SeqId = 0;
         crate::prop_assert!("cache-accounting", 300, |g| {

@@ -1,13 +1,15 @@
-//! Paged KV-cache manager with PQ-compressed key storage.
+//! Paged KV-cache manager with PQ-compressed key *and* value storage.
 //!
-//! The serving engine's cache: values stay full-precision (paper §3.1:
-//! value access is compute-bound), keys are stored either raw (FP16
-//! baseline) or as `m` uint8 PQ codes per token (LOOKAT). Storage is
-//! paged vLLM-style so sequences grow without reallocation and memory
-//! accounting is exact. Blocks are head-major, so one head's codes or
-//! values inside a block are contiguous and the decode kernels scan
-//! them in place via [`KvCache::blocks`] — the LOOKAT hot path never
-//! copies key codes out of the cache.
+//! The serving engine's cache: keys are stored either raw (FP16
+//! baseline) or as `m` uint8 PQ codes per token (LOOKAT); values are
+//! stored raw ([`ValueStorage::Fp32`]) or as `m_v` codes per token
+//! ([`ValueStorage::Pq`], the paper's §5.2 extension in the serving
+//! path). Storage is paged vLLM-style so sequences grow without
+//! reallocation and memory accounting is exact. Blocks are head-major,
+//! so one head's codes or values inside a block are contiguous and the
+//! decode kernels scan them in place via [`KvCache::blocks`] — the
+//! LOOKAT hot path never copies key codes out of the cache, and the
+//! fused weighted decode never copies (or dequantizes) value codes.
 
 mod block;
 mod manager;
@@ -15,4 +17,5 @@ mod manager;
 pub use block::{BlockAllocator, BlockId, BlockView, BLOCK_TOKENS};
 pub use manager::{
     BlockIter, CacheError, CacheStats, KeyStorage, KvCache, SeqId,
+    ValueStorage,
 };

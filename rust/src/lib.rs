@@ -4,7 +4,12 @@
 //! *key* compression via product quantization (PQ) + asymmetric distance
 //! computation (ADC). Attention scores are computed by summing `m` lookup
 //! table entries per cached key instead of a `d_k`-wide dot product over
-//! dequantized keys — the cache is never decompressed.
+//! dequantized keys — the cache is never decompressed. The §5.2
+//! value-side extension is in the serving path too: with
+//! `ValueStorage::Pq` the cache stores value codes and attention
+//! finishes through a fused blocked weighted decode
+//! ([`pq::values::weighted_decode_blocks`]) — neither cache side is
+//! ever dequantized per token.
 //!
 //! ## Architecture (three layers, python never on the request path)
 //!

@@ -13,6 +13,7 @@
 
 use lookat::coordinator::{
     AttentionBackend, BatcherConfig, EngineConfig, Router, RouterConfig,
+    ValueBackend,
 };
 use lookat::model::ModelConfig;
 use lookat::util::cli::Cli;
@@ -38,13 +39,49 @@ fn parse_backend(s: &str) -> anyhow::Result<AttentionBackend> {
         "pjrt-fp16" => AttentionBackend::PjrtFp16,
         other => {
             if let Some(m) = other.strip_prefix("lookat-") {
-                AttentionBackend::Lookat { m: m.parse()?, k: 256 }
+                AttentionBackend::Lookat {
+                    m: validate_m(m.parse()?, "--backend")?,
+                    k: 256,
+                }
             } else if let Some(m) = other.strip_prefix("pjrt-lookat-") {
-                AttentionBackend::PjrtLookat { m: m.parse()? }
+                AttentionBackend::PjrtLookat {
+                    m: validate_m(m.parse()?, "--backend")?,
+                }
             } else {
                 anyhow::bail!(
                     "unknown backend '{other}' (fp16, int8, int4, \
                      lookat-<m>, pjrt-fp16, pjrt-lookat-<m>)"
+                );
+            }
+        }
+    })
+}
+
+/// Subspace counts the serving geometry (d_k = 64) supports — checked
+/// at parse time so a bad `m` is a usage error, not a panic inside
+/// codebook training.
+fn validate_m(m: usize, flag: &str) -> anyhow::Result<usize> {
+    if m == 0 || 64 % m != 0 {
+        anyhow::bail!(
+            "{flag}: m={m} must be a divisor of d_k=64 \
+             (1, 2, 4, 8, 16, 32, 64)"
+        );
+    }
+    Ok(m)
+}
+
+fn parse_value_backend(s: &str) -> anyhow::Result<ValueBackend> {
+    Ok(match s {
+        "fp32" => ValueBackend::Fp32,
+        other => {
+            if let Some(m) = other.strip_prefix("pq-") {
+                ValueBackend::Pq {
+                    m: validate_m(m.parse()?, "--value-backend")?,
+                    k: 256,
+                }
+            } else {
+                anyhow::bail!(
+                    "unknown value backend '{other}' (fp32, pq-<m>)"
                 );
             }
         }
@@ -71,6 +108,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                                "serve a synthetic trace")
                 .opt("backend", "lookat-4",
                      "fp16|int8|int4|lookat-<m>|pjrt-fp16|pjrt-lookat-<m>")
+                .opt("value-backend", "fp32",
+                     "fp32|pq-<m> (PQ-coded values, fused decode)")
                 .opt("requests", "16", "number of requests")
                 .opt("rate", "4", "arrival rate, req/s")
                 .opt("max-batch", "4", "max concurrent sequences")
@@ -80,12 +119,15 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 .opt("seed", "7", "rng seed");
             let a = cli.parse(&args[1..])?;
             let backend = parse_backend(a.get("backend"))?;
+            let value_backend =
+                parse_value_backend(a.get("value-backend"))?;
             let mut model = ModelConfig::gpt2_layer0();
             model.n_layer = a.get_usize("layers")?;
             let mut router = Router::build(RouterConfig {
                 engine: EngineConfig {
                     model,
                     backend,
+                    value_backend,
                     seed: a.get_u64("seed")?,
                     cache_blocks: 512,
                     calib_tokens: 256,
@@ -114,6 +156,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let cli = Cli::new("lookat serve-tcp",
                                "serve newline-JSON requests over TCP")
                 .opt("backend", "lookat-4", "attention backend")
+                .opt("value-backend", "fp32", "fp32|pq-<m>")
                 .opt("addr", "127.0.0.1:7070", "bind address")
                 .opt("max-batch", "4", "max concurrent sequences")
                 .opt("layers", "2", "model depth")
@@ -121,6 +164,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 .opt("seed", "7", "rng seed");
             let a = cli.parse(&args[1..])?;
             let backend = parse_backend(a.get("backend"))?;
+            let value_backend =
+                parse_value_backend(a.get("value-backend"))?;
             let mut model = ModelConfig::gpt2_layer0();
             model.n_layer = a.get_usize("layers")?;
             let server = lookat::coordinator::Server::start(
@@ -128,6 +173,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     engine: EngineConfig {
                         model,
                         backend,
+                        value_backend,
                         seed: a.get_u64("seed")?,
                         cache_blocks: 512,
                         calib_tokens: 256,
@@ -149,6 +195,45 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             // serve until killed
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "bench-check" => {
+            let cli = Cli::new(
+                "lookat bench-check",
+                "fail on BENCH_serving.json tokens/s regressions",
+            )
+            .opt_required("old", "previous BENCH_serving.json (baseline)")
+            .opt_required("new", "current BENCH_serving.json")
+            .opt("max-regress", "0.10",
+                 "fractional tokens/s drop that fails (0.10 = 10%)");
+            let a = cli.parse(&args[1..])?;
+            let tol = a.get_f64("max-regress")?;
+            let read =
+                |path: &str| -> anyhow::Result<lookat::util::json::Json> {
+                    let text = std::fs::read_to_string(path)
+                        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                    lookat::util::json::Json::parse(&text)
+                        .map_err(|e| anyhow::anyhow!("{path}: {e}"))
+                };
+            let old = read(a.get("old"))?;
+            let new = read(a.get("new"))?;
+            let regs = lookat::util::benchcmp::compare(&old, &new, tol)
+                .map_err(|e| anyhow::anyhow!("bench-check: {e}"))?;
+            if regs.is_empty() {
+                println!(
+                    "bench-check: no backend regressed beyond {:.0}%",
+                    tol * 100.0
+                );
+                Ok(())
+            } else {
+                for r in &regs {
+                    eprintln!("REGRESSION: {r}");
+                }
+                anyhow::bail!(
+                    "{} tokens/s regression(s) beyond {:.0}%",
+                    regs.len(),
+                    tol * 100.0
+                );
             }
         }
         "info" => {
@@ -187,8 +272,10 @@ fn print_usage() {
 USAGE:
   lookat experiment <id> [--quick]   regenerate table1..4 / figure3 /
                                      figure4 / efficiency / all
-  lookat serve [--backend B] [--requests N] [--rate R]
-  lookat serve-tcp [--backend B] [--addr HOST:PORT]
+  lookat serve [--backend B] [--value-backend V] [--requests N]
+               [--rate R]
+  lookat serve-tcp [--backend B] [--value-backend V] [--addr HOST:PORT]
+  lookat bench-check --old PREV.json --new CUR.json [--max-regress F]
   lookat info"
     );
 }

@@ -24,14 +24,58 @@ pub fn weighted_decode(
     codec: &PqCodec,
 ) -> Vec<f32> {
     let cb = &codec.codebook;
-    let (m, k, d_sub) = (cb.m, cb.k, cb.d_sub);
+    let (m, k) = (cb.m, cb.k);
     let n = weights.len();
     assert_eq!(codes.len(), n * m, "codes/weights length mismatch");
 
     // phase 1: scatter weights into per-subspace accumulators — O(n·m)
     let mut acc = vec![0.0f32; m * k];
-    for l in 0..n {
-        let w = weights[l];
+    scatter_weights(&mut acc, weights, codes, m, k);
+    centroid_matvec(&acc, codec)
+}
+
+/// Block-resident sibling of [`weighted_decode`] — the serving hot
+/// path's fused tail. The (n × m) code matrix arrives as a sequence of
+/// row-major chunks (the paged cache's per-block value-code slices,
+/// `BlockView::value_codes`), aligned with `weights` in token order.
+/// Weights are scatter-accumulated into the per-subspace (K,) tables
+/// *while the blocks stream*, then one m × K × d_sub centroid matvec
+/// produces the output — values are never gathered into contiguous
+/// scratch and never dequantized per token. Accumulation order matches
+/// the flat path exactly, so the result is bit-identical to
+/// [`weighted_decode`] over the gathered equivalent.
+pub fn weighted_decode_blocks<'a, I>(
+    weights: &[f32],
+    blocks: I,
+    codec: &PqCodec,
+) -> Vec<f32>
+where
+    I: IntoIterator<Item = &'a [u8]>,
+{
+    let cb = &codec.codebook;
+    let (m, k) = (cb.m, cb.k);
+    let mut acc = vec![0.0f32; m * k];
+    let mut l = 0usize;
+    for codes in blocks {
+        debug_assert_eq!(codes.len() % m, 0);
+        let n = codes.len() / m;
+        scatter_weights(&mut acc, &weights[l..l + n], codes, m, k);
+        l += n;
+    }
+    assert_eq!(l, weights.len(), "codes/weights length mismatch");
+    centroid_matvec(&acc, codec)
+}
+
+/// Phase 1 of the transposed aggregation: `acc[i*k + codes[l][i]] +=
+/// weights[l]` for every token `l` of one code chunk.
+fn scatter_weights(
+    acc: &mut [f32],
+    weights: &[f32],
+    codes: &[u8],
+    m: usize,
+    k: usize,
+) {
+    for (l, &w) in weights.iter().enumerate() {
         if w == 0.0 {
             continue;
         }
@@ -40,8 +84,12 @@ pub fn weighted_decode(
             acc[i * k + c as usize] += w;
         }
     }
+}
 
-    // phase 2: per-subspace weighted centroid sum — O(m·K·d_sub)
+/// Phase 2: per-subspace weighted centroid sum — O(m·K·d_sub).
+fn centroid_matvec(acc: &[f32], codec: &PqCodec) -> Vec<f32> {
+    let cb = &codec.codebook;
+    let (m, k, d_sub) = (cb.m, cb.k, cb.d_sub);
     let mut out = vec![0.0f32; m * d_sub];
     for i in 0..m {
         let seg = &mut out[i * d_sub..(i + 1) * d_sub];
@@ -136,6 +184,47 @@ mod tests {
         let (_, codec, codes, _) = setup(32, 32, 4, 16);
         let out = weighted_decode(&vec![0.0; 32], &codes, &codec);
         assert!(out.iter().all(|&x| x == 0.0));
+        // blocked path agrees on the all-zero weight vector
+        let blocked = weighted_decode_blocks(
+            &vec![0.0; 32], codes.chunks(8 * 4), &codec);
+        assert_eq!(out, blocked);
+    }
+
+    #[test]
+    fn empty_weights_give_zero_output_of_full_dim() {
+        let (_, codec, _, _) = setup(8, 32, 4, 16);
+        let out = weighted_decode(&[], &[], &codec);
+        assert_eq!(out, vec![0.0f32; 32]);
+        let blocked =
+            weighted_decode_blocks(&[], std::iter::empty(), &codec);
+        assert_eq!(blocked, vec![0.0f32; 32]);
+    }
+
+    #[test]
+    fn blocked_decode_bit_identical_to_flat() {
+        for (n, m, k) in [(64usize, 4usize, 32usize), (200, 8, 64)] {
+            let (_, codec, codes, weights) = setup(n, 64, m, k);
+            let flat = weighted_decode(&weights, &codes, &codec);
+            // uneven chunk sizes incl. a partial tail — the paged shape
+            for bt in [32usize, 48, 7, n] {
+                let blocked = weighted_decode_blocks(
+                    &weights, codes.chunks(bt * m), &codec);
+                assert_eq!(
+                    flat.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    blocked.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "n={n} m={m} block_tokens={bt}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn blocked_rejects_short_code_stream() {
+        let (_, codec, codes, weights) = setup(32, 32, 4, 16);
+        // stream only half the blocks for a full-length weight vector
+        weighted_decode_blocks(
+            &weights, codes.chunks(16 * 4).take(1), &codec);
     }
 
     #[test]

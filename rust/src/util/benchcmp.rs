@@ -1,0 +1,196 @@
+//! BENCH_serving.json regression comparison — the CI perf gate.
+//!
+//! CI downloads the previous run's `BENCH_serving.json` artifact and
+//! runs `lookat bench-check --old <prev> --new <current>`: any backend
+//! × batch-width tokens/s figure that regresses by more than the
+//! tolerance fails the job, and a backend that disappears from the
+//! sweep fails it too (silent coverage loss reads as a pass otherwise).
+//! New backends in the current file are ignored — they have no baseline.
+
+use crate::util::json::Json;
+
+/// One tokens/s comparison that exceeded the tolerance (or vanished).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Regression {
+    pub backend: String,
+    pub metric: String,
+    pub old: f64,
+    pub new: f64,
+}
+
+impl std::fmt::Display for Regression {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.new.is_nan() {
+            write!(
+                f,
+                "{} {}: present in baseline, missing from new sweep",
+                self.backend, self.metric
+            )
+        } else {
+            write!(
+                f,
+                "{} {}: {:.1} -> {:.1} tok/s ({:+.1}%)",
+                self.backend,
+                self.metric,
+                self.old,
+                self.new,
+                (self.new / self.old - 1.0) * 100.0
+            )
+        }
+    }
+}
+
+/// Compare two BENCH_serving.json documents. Returns every regression
+/// beyond `max_regress` (0.10 = a 10% tokens/s drop fails); an empty
+/// vec is a pass. `Err` means a document is structurally malformed.
+pub fn compare(
+    old: &Json,
+    new: &Json,
+    max_regress: f64,
+) -> Result<Vec<Regression>, String> {
+    let old_results = results_of(old, "old")?;
+    let new_results = results_of(new, "new")?;
+    let batches = old
+        .get("batch_sizes")
+        .and_then(|b| b.as_arr())
+        .ok_or("old: missing batch_sizes array")?;
+
+    let mut regressions = Vec::new();
+    for entry in old_results {
+        let backend = entry
+            .get("backend")
+            .and_then(|b| b.as_str())
+            .ok_or("old: result without backend name")?;
+        let new_entry = new_results.iter().find(|e| {
+            e.get("backend").and_then(|b| b.as_str()) == Some(backend)
+        });
+        for bs in batches {
+            let metric = format!(
+                "batch_{}_tok_s",
+                bs.as_usize().ok_or("old: non-numeric batch size")?
+            );
+            let Some(old_v) =
+                entry.get(&metric).and_then(|v| v.as_f64())
+            else {
+                continue; // metric not recorded in the baseline
+            };
+            let new_v = new_entry
+                .and_then(|e| e.get(&metric))
+                .and_then(|v| v.as_f64());
+            match new_v {
+                None => regressions.push(Regression {
+                    backend: backend.to_string(),
+                    metric,
+                    old: old_v,
+                    new: f64::NAN,
+                }),
+                Some(n) if n < old_v * (1.0 - max_regress) => {
+                    regressions.push(Regression {
+                        backend: backend.to_string(),
+                        metric,
+                        old: old_v,
+                        new: n,
+                    })
+                }
+                Some(_) => {}
+            }
+        }
+    }
+    Ok(regressions)
+}
+
+fn results_of<'a>(
+    doc: &'a Json,
+    which: &str,
+) -> Result<&'a [Json], String> {
+    doc.get("results")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| format!("{which}: missing results array"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(entries: &[(&str, &[(usize, f64)])]) -> Json {
+        let mut top = Json::obj();
+        top.set(
+            "batch_sizes",
+            Json::Arr(vec![Json::Num(1.0), Json::Num(4.0)]),
+        );
+        let results = entries
+            .iter()
+            .map(|(name, runs)| {
+                let mut o = Json::obj();
+                o.set("backend", Json::Str(name.to_string()));
+                for (bs, tok_s) in runs.iter() {
+                    o.set(
+                        &format!("batch_{bs}_tok_s"),
+                        Json::Num(*tok_s),
+                    );
+                }
+                o
+            })
+            .collect();
+        top.set("results", Json::Arr(results));
+        top
+    }
+
+    #[test]
+    fn identical_sweeps_pass() {
+        let d = doc(&[("fp16", &[(1, 100.0), (4, 300.0)])]);
+        assert!(compare(&d, &d, 0.10).unwrap().is_empty());
+    }
+
+    #[test]
+    fn small_drop_within_tolerance_passes() {
+        let old = doc(&[("fp16", &[(1, 100.0)])]);
+        let new = doc(&[("fp16", &[(1, 91.0)])]);
+        assert!(compare(&old, &new, 0.10).unwrap().is_empty());
+    }
+
+    #[test]
+    fn big_drop_fails() {
+        let old = doc(&[("lookat-4", &[(1, 100.0), (4, 400.0)])]);
+        let new = doc(&[("lookat-4", &[(1, 100.0), (4, 350.0)])]);
+        let regs = compare(&old, &new, 0.10).unwrap();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, "batch_4_tok_s");
+        assert!(regs[0].to_string().contains("lookat-4"));
+    }
+
+    #[test]
+    fn missing_backend_fails() {
+        let old = doc(&[("fp16", &[(1, 100.0)]), ("int8", &[(1, 90.0)])]);
+        let new = doc(&[("fp16", &[(1, 100.0)])]);
+        let regs = compare(&old, &new, 0.10).unwrap();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].backend, "int8");
+        assert!(regs[0].new.is_nan());
+        assert!(regs[0].to_string().contains("missing"));
+    }
+
+    #[test]
+    fn new_backends_are_ignored() {
+        let old = doc(&[("fp16", &[(1, 100.0)])]);
+        let new = doc(&[
+            ("fp16", &[(1, 100.0)]),
+            ("lookat-4+vpq-8", &[(1, 50.0)]),
+        ]);
+        assert!(compare(&old, &new, 0.10).unwrap().is_empty());
+    }
+
+    #[test]
+    fn improvements_pass() {
+        let old = doc(&[("fp16", &[(1, 100.0)])]);
+        let new = doc(&[("fp16", &[(1, 180.0)])]);
+        assert!(compare(&old, &new, 0.10).unwrap().is_empty());
+    }
+
+    #[test]
+    fn malformed_docs_error() {
+        let good = doc(&[("fp16", &[(1, 100.0)])]);
+        assert!(compare(&Json::obj(), &good, 0.1).is_err());
+        assert!(compare(&good, &Json::obj(), 0.1).is_err());
+    }
+}

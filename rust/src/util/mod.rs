@@ -6,6 +6,7 @@
 //! see DESIGN.md §Environment constraints.
 
 pub mod bench;
+pub mod benchcmp;
 pub mod cli;
 pub mod json;
 pub mod log;

@@ -3,9 +3,17 @@
 //! tokio is not vendored in the offline image; the coordinator's event
 //! loop and the experiment harness use this instead. The pool owns N
 //! worker threads fed from a shared MPMC queue built on std primitives.
+//!
+//! [`ThreadPool::run_scoped`] is the borrow-capable fan-out primitive:
+//! it runs closures that borrow caller state on the *persistent*
+//! workers (blocking until every task finishes, which is what makes the
+//! lifetime erasure sound), and the free functions
+//! [`parallel_map`]/[`parallel_try_map`] route through a process-wide
+//! pool via it — so decode-tick workers, and their thread-local gather
+//! scratch, persist across ticks instead of being re-spawned per call.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -83,6 +91,129 @@ impl ThreadPool {
     pub fn inflight(&self) -> usize {
         self.shared.inflight.load(Ordering::SeqCst)
     }
+
+    /// Pop one queued job and run it on the calling thread. Returns
+    /// false when the queue is empty. This is the work-helping hook
+    /// [`ThreadPool::run_scoped`] uses while it blocks, so a fan-out
+    /// issued *from inside* a pool job can never deadlock the fixed
+    /// worker set.
+    fn try_run_one(&self) -> bool {
+        let job = { self.shared.queue.lock().unwrap().pop_front() };
+        match job {
+            Some(job) => {
+                job();
+                if self.shared.inflight.fetch_sub(1, Ordering::SeqCst)
+                    == 1
+                {
+                    let _g = self.shared.done_mx.lock().unwrap();
+                    self.shared.done_cv.notify_all();
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Run `f(t)` for t in 0..tasks on the pool's persistent workers,
+    /// blocking until every task has finished. Unlike [`submit`],
+    /// `f` may borrow caller state (no `'static` bound): the closure
+    /// reference is lifetime-erased for the queue, which is sound
+    /// because this call does not return — and so the borrow cannot
+    /// dangle — until the last task completes. The calling thread helps
+    /// drain the queue while it waits.
+    ///
+    /// [`submit`]: ThreadPool::submit
+    pub fn run_scoped<'env, F>(&self, tasks: usize, f: F)
+    where
+        F: Fn(usize) + Sync + 'env,
+    {
+        if tasks == 0 {
+            return;
+        }
+        struct Latch {
+            left: Mutex<usize>,
+            cv: Condvar,
+            /// first panic payload from a task, repropagated on the
+            /// calling thread so assertion messages stay attributed
+            panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+        }
+        let latch = Arc::new(Latch {
+            left: Mutex::new(tasks),
+            cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: the erased reference is only reachable from the
+        // `tasks` jobs enqueued below, and this function blocks until
+        // the latch counts every one of them as finished — `f` and
+        // everything it borrows strictly outlive all uses.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                &'static (dyn Fn(usize) + Sync),
+            >(f_ref)
+        };
+        for t in 0..tasks {
+            let latch = latch.clone();
+            self.submit(move || {
+                // a panicking task must still count down (and keep its
+                // worker alive) or the caller would block forever; the
+                // payload is repropagated on the calling thread below
+                if let Err(payload) = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| f_static(t)),
+                ) {
+                    let mut slot = latch.panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
+                let mut left = latch.left.lock().unwrap();
+                *left -= 1;
+                if *left == 0 {
+                    // notify while holding the lock: the waiter below
+                    // checks the count under the same lock, so the
+                    // wakeup cannot be lost
+                    latch.cv.notify_all();
+                }
+            });
+        }
+        loop {
+            // opportunistically run queued jobs (ours or another
+            // scope's) instead of parking
+            let done = loop {
+                if *latch.left.lock().unwrap() == 0 {
+                    break true;
+                }
+                if !self.try_run_one() {
+                    break false;
+                }
+            };
+            if done {
+                break;
+            }
+            let left = latch.left.lock().unwrap();
+            if *left == 0 {
+                break;
+            }
+            // queue drained but tasks still running on workers — sleep
+            // until a completion notifies
+            drop(latch.cv.wait(left).unwrap());
+        }
+        if let Some(payload) = latch.panic.lock().unwrap().take() {
+            // same behavior as std::thread::scope: the child's payload
+            // (e.g. an assert message) reaches the caller intact
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// The process-wide pool behind [`parallel_map`]/[`parallel_try_map`]:
+/// one persistent worker per available core, spawned on first use.
+/// Worker threads — and their `thread_local!` scratch — live for the
+/// whole process, so per-tick fan-outs reuse warm allocations.
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL.get_or_init(ThreadPool::with_default_size)
 }
 
 impl Drop for ThreadPool {
@@ -117,9 +248,10 @@ fn worker_loop(sh: Arc<Shared>) {
     }
 }
 
-/// Run `f(i)` for i in 0..n, chunked across up to `threads` scoped threads,
-/// writing results into the returned Vec. Uses std::thread::scope, so `f`
-/// only needs to be Sync (no 'static bound).
+/// Run `f(i)` for i in 0..n, chunked across up to `threads` tasks on
+/// the persistent [`global`] pool, writing results into the returned
+/// Vec. `f` only needs to be Sync (no 'static bound) — the pool's
+/// scoped fan-out blocks until every chunk lands.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send + Default + Clone,
@@ -137,31 +269,28 @@ where
         return out;
     }
     let chunk = n.div_ceil(threads);
-    let fref = &f;
-    std::thread::scope(|s| {
-        for (t, slice) in out.chunks_mut(chunk).enumerate() {
-            s.spawn(move || {
-                for (j, slot) in slice.iter_mut().enumerate() {
-                    *slot = fref(t * chunk + j);
-                }
-            });
+    let chunks: Vec<Mutex<&mut [T]>> =
+        out.chunks_mut(chunk).map(Mutex::new).collect();
+    global().run_scoped(chunks.len(), |t| {
+        // each chunk's mutex is locked exactly once, by its own task —
+        // it only exists to hand the &mut slice across the Fn boundary
+        let slice = &mut *chunks[t].lock().unwrap();
+        for (j, slot) in slice.iter_mut().enumerate() {
+            *slot = f(t * chunk + j);
         }
     });
+    drop(chunks);
     out
 }
 
 /// Fallible [`parallel_map`]: run `f(i)` for i in 0..n across up to
-/// `threads` scoped threads and collect the results, or return the
-/// lowest-index error. Unlike [`parallel_map`] there is no
-/// `Default + Clone` bound, so it also suits result types that carry
-/// owned buffers (the batched-decode kernels' `AttnOutput`s).
-///
-/// Like [`parallel_map`], workers are `std::thread::scope` threads
-/// spawned per call — that is what lets `f` borrow non-`'static` plan
-/// state. The spawn/join cost is a few tens of µs per call, noise next
-/// to a decode tick's model math; a borrow-capable fan-out over the
-/// persistent [`ThreadPool`] is a ROADMAP item if profiles ever say
-/// otherwise.
+/// `threads` tasks on the persistent [`global`] pool and collect the
+/// results, or return the lowest-index error. Unlike [`parallel_map`]
+/// there is no `Default + Clone` bound, so it also suits result types
+/// that carry owned buffers (the batched-decode kernels'
+/// `AttnOutput`s). Per-index results are independent, so routing
+/// through the pool changes nothing observable — the decode pipeline's
+/// batched-equals-serial bit-parity holds by construction.
 pub fn parallel_try_map<T, E, F>(
     n: usize,
     threads: usize,
@@ -183,16 +312,15 @@ where
     let mut slots: Vec<Option<Result<T, E>>> =
         (0..n).map(|_| None).collect();
     let chunk = n.div_ceil(threads);
-    let fref = &f;
-    std::thread::scope(|s| {
-        for (t, slice) in slots.chunks_mut(chunk).enumerate() {
-            s.spawn(move || {
-                for (j, slot) in slice.iter_mut().enumerate() {
-                    *slot = Some(fref(t * chunk + j));
-                }
-            });
+    let chunks: Vec<Mutex<&mut [Option<Result<T, E>>]>> =
+        slots.chunks_mut(chunk).map(Mutex::new).collect();
+    global().run_scoped(chunks.len(), |t| {
+        let slice = &mut *chunks[t].lock().unwrap();
+        for (j, slot) in slice.iter_mut().enumerate() {
+            *slot = Some(f(t * chunk + j));
         }
     });
+    drop(chunks);
     let mut out = Vec::with_capacity(n);
     for r in slots {
         out.push(r.expect("parallel_try_map: unfilled slot")?);
@@ -256,6 +384,78 @@ mod tests {
         // jobs may or may not all have run before shutdown flag is seen,
         // but the queued ones before drop had inflight ticks; just ensure
         // no deadlock occurred to get here.
+    }
+
+    #[test]
+    fn run_scoped_borrows_caller_state() {
+        // the whole point of the scoped API: f borrows non-'static data
+        let data: Vec<u64> = (0..256).collect();
+        let sum = AtomicU64::new(0);
+        let pool = ThreadPool::new(4);
+        pool.run_scoped(8, |t| {
+            let part: u64 =
+                data[t * 32..(t + 1) * 32].iter().sum();
+            sum.fetch_add(part, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), data.iter().sum::<u64>());
+        assert_eq!(pool.inflight(), 0);
+    }
+
+    #[test]
+    fn run_scoped_zero_tasks_returns() {
+        let pool = ThreadPool::new(2);
+        pool.run_scoped(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn nested_run_scoped_does_not_deadlock() {
+        // a fan-out issued from inside a pool job must complete even
+        // when it outnumbers the workers (caller work-helping)
+        let pool = ThreadPool::new(2);
+        let counter = AtomicU64::new(0);
+        pool.run_scoped(4, |_| {
+            pool.run_scoped(4, |_| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn run_scoped_on_single_worker_pool_completes() {
+        let pool = ThreadPool::new(1);
+        let counter = AtomicU64::new(0);
+        pool.run_scoped(32, |_| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn run_scoped_surfaces_task_panics_without_hanging() {
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.run_scoped(4, |t| {
+                    if t == 2 {
+                        panic!("boom");
+                    }
+                });
+            }),
+        );
+        assert!(caught.is_err(), "panic must propagate to the caller");
+        // pool still works afterwards
+        let counter = AtomicU64::new(0);
+        pool.run_scoped(4, |_| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        assert!(global().size() >= 1);
+        assert!(std::ptr::eq(global(), global()));
     }
 
     #[test]

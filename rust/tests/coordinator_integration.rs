@@ -3,7 +3,8 @@
 //! the actual serving loop). Skips when artifacts aren't built.
 
 use lookat::coordinator::{
-    AttentionBackend, Batcher, BatcherConfig, Engine, EngineConfig, Request,
+    AttentionBackend, Batcher, BatcherConfig, Engine, EngineConfig,
+    Request, ValueBackend,
 };
 use lookat::model::{ByteTokenizer, ModelConfig};
 use lookat::runtime::default_artifacts_dir;
@@ -16,6 +17,7 @@ fn paper_cfg(backend: AttentionBackend) -> EngineConfig {
     EngineConfig {
         model: ModelConfig::gpt2_layer0(), // H=12, d_k=64: artifact geometry
         backend,
+        value_backend: ValueBackend::Fp32,
         seed: 21,
         cache_blocks: 64,
         calib_tokens: 128,
@@ -81,6 +83,7 @@ fn tiny_batcher(max_batch: usize) -> Batcher {
     let engine = Engine::build(&EngineConfig {
         model: ModelConfig::test_tiny(),
         backend: AttentionBackend::Fp16Exact,
+        value_backend: ValueBackend::Fp32,
         seed: 13,
         cache_blocks: 64,
         calib_tokens: 48,

@@ -4,9 +4,11 @@
 //! of N is bit-identical to N serial batch-of-one decodes on every
 //! backend (PJRT backends run when artifacts are built).
 
-use lookat::coordinator::{AttentionBackend, Engine, EngineConfig};
+use lookat::coordinator::{
+    AttentionBackend, Engine, EngineConfig, ValueBackend,
+};
 use lookat::kvcache::{
-    CacheError, KeyStorage, KvCache, BLOCK_TOKENS,
+    CacheError, KeyStorage, KvCache, ValueStorage, BLOCK_TOKENS,
 };
 use lookat::model::{ByteTokenizer, ModelConfig};
 use lookat::runtime::default_artifacts_dir;
@@ -16,9 +18,18 @@ fn artifacts_built() -> bool {
 }
 
 fn tiny_cfg(backend: AttentionBackend, threads: usize) -> EngineConfig {
+    tiny_cfg_kv(backend, ValueBackend::Fp32, threads)
+}
+
+fn tiny_cfg_kv(
+    backend: AttentionBackend,
+    value_backend: ValueBackend,
+    threads: usize,
+) -> EngineConfig {
     EngineConfig {
         model: ModelConfig::test_tiny(),
         backend,
+        value_backend,
         seed: 42,
         cache_blocks: 48,
         calib_tokens: 96,
@@ -30,6 +41,7 @@ fn paper_cfg(backend: AttentionBackend, threads: usize) -> EngineConfig {
     EngineConfig {
         model: ModelConfig::gpt2_layer0(), // artifact geometry
         backend,
+        value_backend: ValueBackend::Fp32,
         seed: 21,
         cache_blocks: 64,
         calib_tokens: 128,
@@ -41,7 +53,7 @@ fn paper_cfg(backend: AttentionBackend, threads: usize) -> EngineConfig {
 
 #[test]
 fn freed_blocks_return_to_the_allocator_and_readmit() {
-    let mut c = KvCache::new(2, 16, 4, KeyStorage::Fp16);
+    let mut c = KvCache::new(2, 16, 4, KeyStorage::Fp16, ValueStorage::Fp32);
     let k = vec![0.5f32; 2 * 16];
     let v = vec![0.25f32; 2 * 16];
 
@@ -145,6 +157,55 @@ fn batched_decode_bit_identical_all_rust_backends() {
             Engine::build(&tiny_cfg(backend, 4)).unwrap();
         assert_batched_matches_serial(&mut serial, &mut batched, 4, 6);
     }
+}
+
+#[test]
+fn batched_decode_bit_identical_every_key_value_backend_combo() {
+    // the value-storage axis: every rust key backend × {fp32, pq}
+    // values must stay bit-identical between batched and serial decode
+    // (the fused blocked weighted decode is per-item deterministic)
+    let key_backends = [
+        AttentionBackend::Fp16Exact,
+        AttentionBackend::Lookat { m: 4, k: 64 },
+        AttentionBackend::Lookat { m: 2, k: 64 },
+        AttentionBackend::ScalarQuant { bits: 8 },
+        AttentionBackend::ScalarQuant { bits: 4 },
+    ];
+    let value_backends = [
+        ValueBackend::Fp32,
+        ValueBackend::Pq { m: 4, k: 64 },
+    ];
+    for backend in key_backends {
+        for vb in &value_backends {
+            let mut serial = Engine::build(&tiny_cfg_kv(
+                backend.clone(), vb.clone(), 1)).unwrap();
+            let mut batched = Engine::build(&tiny_cfg_kv(
+                backend.clone(), vb.clone(), 4)).unwrap();
+            assert_batched_matches_serial(
+                &mut serial, &mut batched, 4, 6);
+        }
+    }
+}
+
+#[test]
+fn value_pq_cache_frees_like_fp32() {
+    // block lifecycle holds with the value-codes lane active
+    let mut e = Engine::build(&tiny_cfg_kv(
+        AttentionBackend::Lookat { m: 4, k: 64 },
+        ValueBackend::Pq { m: 4, k: 64 },
+        2,
+    ))
+    .unwrap();
+    let ids = ByteTokenizer::new().encode("value lane lifecycle");
+    e.start_seq(1, &ids).unwrap();
+    for _ in 0..3 {
+        e.decode_one(1).unwrap();
+    }
+    assert!(e.cache_stats().blocks_allocated > 0);
+    e.release(1).unwrap();
+    assert_eq!(e.cache_stats().blocks_allocated, 0);
+    e.start_seq(2, &ids).unwrap();
+    e.decode_one(2).unwrap();
 }
 
 #[test]

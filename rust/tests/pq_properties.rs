@@ -3,7 +3,9 @@
 //!
 //! 1. K-Means is deterministic for a fixed `Pcg32` seed;
 //! 2. `PqCodec::encode_batch` codes are always `< K`;
-//! 3. ADC lookup scores equal naive decode-then-dot-product within 1e-4.
+//! 3. ADC lookup scores equal naive decode-then-dot-product within 1e-4;
+//! 4. `pq::values::weighted_decode` (and its block-resident sibling)
+//!    equals the naive decode-then-weighted-sum within 1e-4.
 
 use lookat::pq::kmeans::kmeans;
 use lookat::pq::{LookupTable, PqCodec, TrainOpts};
@@ -116,6 +118,68 @@ fn adc_scores_equal_decode_then_dot_within_1e4() {
                     batch[l]
                 ));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn weighted_decode_equals_decode_then_weighted_sum_within_1e4() {
+    // the §5.2 transposed aggregation: Σ_l α_l · decode(codes_l) must
+    // match the scatter-accumulate + centroid-matvec path on arbitrary
+    // (values, weights) draws — including zero weights, which the
+    // scatter path skips outright — and the blocked variant must match
+    // the flat one bit for bit
+    prop_assert!("weighted-decode-equals-dense", 25, |g: &mut Gen| {
+        let (values, d_k, m, k) = random_pq_case(g);
+        let n = values.len() / d_k;
+        let codec = PqCodec::train(
+            &values,
+            d_k,
+            m,
+            k,
+            &TrainOpts { iters: 6, seed: g.rng.next_u64(), tol: 1e-4 },
+        );
+        let codes = codec.encode_batch(&values, n);
+        // softmax-like weights with a sprinkle of exact zeros
+        let mut weights: Vec<f32> = (0..n)
+            .map(|_| if g.bool() { g.rng.next_f32() } else { 0.0 })
+            .collect();
+        let s: f32 = weights.iter().sum();
+        if s > 0.0 {
+            for w in weights.iter_mut() {
+                *w /= s;
+            }
+        }
+        let got =
+            lookat::pq::values::weighted_decode(&weights, &codes, &codec);
+        let mut want = vec![0.0f32; d_k];
+        for (l, &w) in weights.iter().enumerate() {
+            let v = codec.decode(&codes[l * m..(l + 1) * m]);
+            for (o, x) in want.iter_mut().zip(&v) {
+                *o += w * x;
+            }
+        }
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            if (a - b).abs() > 1e-4 {
+                return Err(format!(
+                    "dim {i}: weighted_decode {a} vs dense {b} \
+                     (n={n}, m={m}, k={k})"
+                ));
+            }
+        }
+        let bt = g.usize_in(1, n);
+        let blocked = lookat::pq::values::weighted_decode_blocks(
+            &weights,
+            codes.chunks(bt * m),
+            &codec,
+        );
+        if got.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            != blocked.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        {
+            return Err(format!(
+                "blocked decode diverged from flat (bt={bt})"
+            ));
         }
         Ok(())
     });
