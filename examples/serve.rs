@@ -35,8 +35,13 @@ fn run_backend_kv(
             cache_blocks: 512,
             calib_tokens: 256,
             decode_threads: 0,
+            prefill_chunk: 0,
         },
-        batcher: BatcherConfig { max_batch: 4, max_queue: 128 },
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_queue: 128,
+            policy: lookat::coordinator::SchedulerPolicy::Fcfs,
+        },
         max_prompt_tokens: 120,
     })?;
     let trace = TraceGenerator::new(TraceConfig {

@@ -13,15 +13,19 @@
 //! * `artifacts/reports/serving_throughput.json` — full per-run reports
 //! * `<repo root>/BENCH_serving.json` — the machine-readable perf
 //!   trajectory CI uploads (tokens/s per backend per batch width, plus
-//!   the batch-16-vs-1 speedup)
+//!   the batch-16-vs-1 speedup, plus the scheduler scenarios: the
+//!   oversubscribed long-prompt interference run under fcfs-monolithic
+//!   vs preempt + chunked prefill)
 
 use lookat::coordinator::{
     AttentionBackend, BatcherConfig, EngineConfig, Router, RouterConfig,
-    ValueBackend,
+    SchedulerPolicy, ValueBackend,
 };
 use lookat::model::ModelConfig;
 use lookat::util::json::Json;
-use lookat::workload::{TraceConfig, TraceGenerator};
+use lookat::workload::{
+    Genre, RequestSpec, TraceConfig, TraceGenerator,
+};
 
 const BATCH_SIZES: [usize; 3] = [1, 4, 16];
 
@@ -53,8 +57,13 @@ fn bench_backend(
             cache_blocks: 512,
             calib_tokens: 192,
             decode_threads: 0,
+            prefill_chunk: 0,
         },
-        batcher: BatcherConfig { max_batch: 1, max_queue: 256 },
+        batcher: BatcherConfig {
+            max_batch: 1,
+            max_queue: 256,
+            policy: SchedulerPolicy::Fcfs,
+        },
         max_prompt_tokens: 96,
     })?;
 
@@ -89,6 +98,122 @@ fn bench_backend(
     Ok(o)
 }
 
+/// The scheduler scenarios: decode throughput under long-prompt
+/// interference and oversubscription.
+///
+/// 16 decode-heavy short requests arrive at a steady rate (batch width
+/// 16); one 1024-token prompt lands mid-stream. Three runs:
+///
+/// * `baseline` — the short trace alone (preempt + chunked config, so
+///   the comparison isolates the long prompt, not the scheduler)
+/// * `fcfs_monolithic` — long prompt included, FCFS admission and
+///   one-shot prefill (the head-of-line stall this PR removes)
+/// * `preempt_chunked` — long prompt included, `--prefill-chunk 128
+///   --scheduler preempt`: the prefill rides mixed ticks and decode
+///   keeps flowing
+///
+/// The headline figure is `preempt_chunked_vs_baseline` — decode
+/// tokens/s retained under interference (target: ≥ 0.8).
+fn scheduler_scenarios() -> anyhow::Result<Json> {
+    const LONG_PROMPT_TOKENS: usize = 1024;
+
+    let build = |policy: SchedulerPolicy, chunk: usize| {
+        let mut model = ModelConfig::gpt2_layer0();
+        model.n_layer = 2;
+        // room for the 1024-token prompt plus its generation
+        model.max_pos = 1280;
+        Router::build(RouterConfig {
+            engine: EngineConfig {
+                model,
+                backend: AttentionBackend::Lookat { m: 4, k: 256 },
+                value_backend: ValueBackend::Fp32,
+                seed: 77,
+                cache_blocks: 128,
+                calib_tokens: 192,
+                decode_threads: 0,
+                prefill_chunk: chunk,
+            },
+            batcher: BatcherConfig {
+                max_batch: 16,
+                max_queue: 256,
+                policy,
+            },
+            max_prompt_tokens: LONG_PROMPT_TOKENS,
+        })
+    };
+
+    let shorts = || {
+        TraceGenerator::new(TraceConfig {
+            rate: 6.0,
+            num_requests: 16,
+            prompt_chars: (20, 60),
+            gen_tokens: (48, 64),
+            seed: 4242,
+        })
+        .generate()
+    };
+    let with_long = || {
+        let mut specs = shorts();
+        specs.push(RequestSpec {
+            id: 1000,
+            arrival_s: 1.0, // mid-stream: shorts are already decoding
+            genre: Genre::Prose,
+            prompt: lookat::workload::Corpus::new(Genre::Prose, 99)
+                .generate(LONG_PROMPT_TOKENS),
+            gen_tokens: 8,
+        });
+        // keep arrival order for the router's delivery loop
+        specs.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+        specs
+    };
+
+    let run = |router: &mut Router, specs: Vec<RequestSpec>| {
+        let reqs = router.tokenize_trace(&specs);
+        router.serve_trace(reqs)
+    };
+
+    let mut baseline_router =
+        build(SchedulerPolicy::Preempt, 128)?;
+    let baseline = run(&mut baseline_router, shorts())?;
+    println!("scenario baseline        {}", baseline.pretty());
+
+    let mut fcfs_router = build(SchedulerPolicy::Fcfs, 0)?;
+    let fcfs = run(&mut fcfs_router, with_long())?;
+    println!("scenario fcfs-monolithic {}", fcfs.pretty());
+
+    let mut pre_router = build(SchedulerPolicy::Preempt, 128)?;
+    let pre = run(&mut pre_router, with_long())?;
+    println!("scenario preempt-chunked {}", pre.pretty());
+
+    let ratio = pre.throughput_tok_s()
+        / baseline.throughput_tok_s().max(1e-12);
+    println!(
+        "scenario long_prompt: preempt+chunked retains {:.0}% of the \
+         no-long-prompt decode tok/s (fcfs-monolithic: {:.0}%)",
+        ratio * 100.0,
+        fcfs.throughput_tok_s()
+            / baseline.throughput_tok_s().max(1e-12)
+            * 100.0
+    );
+
+    let mut o = Json::obj();
+    o.set("scenario", Json::Str("long_prompt_oversubscribed".into()));
+    o.set("batch", Json::Num(16.0));
+    o.set("long_prompt_tokens", Json::Num(LONG_PROMPT_TOKENS as f64));
+    o.set("baseline_tok_s", Json::Num(baseline.throughput_tok_s()));
+    o.set("fcfs_monolithic_tok_s", Json::Num(fcfs.throughput_tok_s()));
+    o.set("preempt_chunked_tok_s", Json::Num(pre.throughput_tok_s()));
+    o.set("preempt_chunked_vs_baseline", Json::Num(ratio));
+    o.set("preemptions", Json::Num(pre.preemptions as f64));
+    o.set(
+        "completed",
+        Json::Num((baseline.completed.len()
+            + fcfs.completed.len()
+            + pre.completed.len()) as f64),
+    );
+    Ok(o)
+}
+
 fn main() -> anyhow::Result<()> {
     let combos = [
         // the pre-existing key-backend sweep (fp32 values)
@@ -117,9 +242,11 @@ fn main() -> anyhow::Result<()> {
     for (b, vb) in combos {
         results.push(bench_backend(b, vb)?);
     }
+    let scenarios = scheduler_scenarios()?;
 
     let mut top = Json::obj();
     top.set("bench", Json::Str("serving_throughput".into()));
+    top.set("scenarios", Json::Arr(vec![scenarios]));
     top.set(
         "batch_sizes",
         Json::Arr(BATCH_SIZES.iter().map(|&b| Json::Num(b as f64)).collect()),

@@ -3,17 +3,28 @@
 //!
 //! The engine builds one [`DecodePlan`] per layer per batcher tick —
 //! every (seq, head) of the drained batch at once — and hands it to the
-//! kernel. The pure-rust kernels fan the independent items out on
+//! kernel. Since the chunked-prefill scheduler landed, a work item is a
+//! *span* of `rows ≥ 1` query rows: decode items carry one row, prefill
+//! chunks carry the whole chunk. Row `r` of an item attends only its
+//! causal prefix (`seq_len - rows + r + 1` cached tokens), so prefill
+//! compute rides the same block-resident scan as decode and a chunk of
+//! any size is bit-identical to the monolithic equivalent — every row's
+//! math depends only on (query row, cache prefix), never on how the
+//! rows were grouped into ticks.
+//!
+//! The pure-rust kernels fan the independent items out on
 //! `util::threadpool`; the PJRT kernels own the runtime client (whose
 //! handles are not `Send`) and walk the plan's per-sequence groups
-//! serially, packing one padded artifact call per sequence exactly as
-//! the old per-seq path did.
+//! serially, packing padded artifact calls exactly as the old per-seq
+//! path did (one call per query row, masked to the row's prefix).
 //!
 //! The LOOKAT kernel is the paper's bandwidth story end-to-end: it
-//! builds the LUT per (seq, head) query, scans the PQ codes *in place*
-//! over the cache's head-major blocks ([`LookupTable::scores_blocks`])
-//! and accumulates α·V straight from the same views — zero per-step
-//! key-code copies.
+//! builds the LUT per query row, scans the PQ codes *in place* over the
+//! cache's head-major blocks ([`LookupTable::scores_blocks`]) and
+//! accumulates α·V straight from the same views — zero per-step
+//! key-code copies. Because prefill rides this same path, a preempted
+//! sequence re-prefills by re-encoding codes only: the resumed decode
+//! states are bit-identical to the uninterrupted run.
 //!
 //! Every pure-rust kernel is additionally *value-storage aware*: when
 //! the plan's cache stores PQ-coded values
@@ -36,19 +47,26 @@ use crate::pq::LookupTable;
 use crate::runtime::{InputArg, Runtime};
 use crate::util::threadpool::parallel_try_map;
 
-/// One (seq, head) attention task of a decode tick.
+/// One (seq, head) attention task of a decode tick: `rows` query rows
+/// over one head's cache. Decode items have `rows == 1`; prefill-chunk
+/// items carry the chunk's full span.
 pub struct WorkItem<'a> {
     pub seq: SeqId,
     pub head: usize,
-    /// this head's query, (d_k)
+    /// this head's query rows, (rows × d_k) row-major
     pub q: &'a [f32],
+    /// query rows in this item; row `r` attends the causal prefix of
+    /// `seq_len - rows + r + 1` cached tokens (the span's K/V are
+    /// appended to the cache before the kernel runs)
+    pub rows: usize,
 }
 
 /// All attention work of one layer for one decode tick.
 ///
 /// Items are seq-major: the engine emits every head of a sequence
-/// consecutively, heads ascending — the PJRT kernels rely on this to
-/// regroup items into one padded artifact call per sequence.
+/// consecutively, heads ascending, all heads of a sequence sharing one
+/// `rows` — the PJRT kernels rely on this to regroup items into padded
+/// artifact calls per sequence.
 pub struct DecodePlan<'a> {
     /// the layer's cache; every item resolves against it
     pub cache: &'a KvCache,
@@ -58,13 +76,22 @@ pub struct DecodePlan<'a> {
     pub items: Vec<WorkItem<'a>>,
 }
 
+impl DecodePlan<'_> {
+    /// Total output rows the kernel must produce (Σ item rows).
+    pub fn total_rows(&self) -> usize {
+        self.items.iter().map(|it| it.rows).sum()
+    }
+}
+
 /// A batched attention backend: scores and attends every (seq, head)
-/// item of a [`DecodePlan`], returning outputs in item order.
+/// item of a [`DecodePlan`], returning one [`AttnOutput`] per (item,
+/// row) — item-major, rows ascending within an item.
 pub trait AttentionKernel {
     /// Kernel name (diagnostics / reports).
     fn name(&self) -> &'static str;
 
-    /// Run the whole plan. Outputs align with `plan.items`.
+    /// Run the whole plan. Outputs align with `plan.items` flattened
+    /// over each item's rows.
     fn decode_batch(&mut self, plan: &DecodePlan<'_>)
         -> anyhow::Result<Vec<AttnOutput>>;
 }
@@ -72,30 +99,12 @@ pub trait AttentionKernel {
 std::thread_local! {
     /// Per-thread gather scratch (keys, values) for the dense kernels:
     /// two allocations per fan-out worker instead of two per (seq,
-    /// head) item. Fan-out now runs on `util::threadpool`'s persistent
+    /// head) item. Fan-out runs on `util::threadpool`'s persistent
     /// process-wide pool, so workers — and this scratch — survive
     /// across decode ticks; the serial (threads = 1) path carries its
     /// capacity on the engine thread the same way.
     static GATHER_SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
         const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
-}
-
-/// Gather one item's keys and values into the thread's scratch and
-/// score with `f` (FP32-value caches only).
-fn with_gathered<F>(
-    plan: &DecodePlan<'_>,
-    it: &WorkItem<'_>,
-    f: F,
-) -> Result<AttnOutput, CacheError>
-where
-    F: FnOnce(&[f32], &[f32], usize) -> AttnOutput,
-{
-    GATHER_SCRATCH.with(|s| {
-        let (keys, vals) = &mut *s.borrow_mut();
-        let n = plan.cache.gather_keys_into(it.seq, it.head, keys)?;
-        plan.cache.gather_values_into(it.seq, it.head, vals)?;
-        Ok(f(keys, vals, n))
-    })
 }
 
 /// Raw (unscaled) dense scores of one query against gathered keys.
@@ -106,9 +115,11 @@ fn dense_scores(q: &[f32], keys: &[f32], n: usize) -> Vec<f32> {
         .collect()
 }
 
-/// Shared attention tail for one plan item given its raw scores:
+/// Shared attention tail for one plan row given its raw prefix scores:
 /// block-resident α·V over raw values, or the fused blocked weighted
-/// decode when the cache stores PQ-coded values.
+/// decode when the cache stores PQ-coded values. The block stream may
+/// extend past `scores.len()` tokens (span rows attend a prefix); the
+/// tails truncate it.
 fn finish_item(
     plan: &DecodePlan<'_>,
     it: &WorkItem<'_>,
@@ -129,6 +140,18 @@ fn finish_item(
     }
 }
 
+/// Causal prefix length of row `r` of an item whose sequence currently
+/// caches `n` tokens (the span was appended before the kernel ran).
+fn row_prefix(n: usize, rows: usize, r: usize) -> usize {
+    debug_assert!(rows >= 1 && rows <= n);
+    n - rows + r + 1
+}
+
+/// Flatten per-item output vectors into the plan's (item, row) order.
+fn flatten_rows(per_item: Vec<Vec<AttnOutput>>) -> Vec<AttnOutput> {
+    per_item.into_iter().flatten().collect()
+}
+
 /// Exact attention over FP16-stored keys (gathers the paged cache into
 /// contiguous scratch per item — dense scoring needs one flat tensor).
 /// With PQ-coded values, only the keys are gathered; the value side
@@ -144,30 +167,52 @@ impl AttentionKernel for Fp16Kernel {
         -> anyhow::Result<Vec<AttnOutput>>
     {
         let pq_values = plan.cache.value_codecs().is_some();
-        parallel_try_map(plan.items.len(), plan.threads, |i| {
-            let it = &plan.items[i];
-            if pq_values {
-                let scores = GATHER_SCRATCH.with(|s| {
-                    let (keys, _) = &mut *s.borrow_mut();
-                    let n =
-                        plan.cache.gather_keys_into(it.seq, it.head, keys)?;
-                    Ok::<_, CacheError>(dense_scores(it.q, keys, n))
-                })?;
-                finish_item(plan, it, scores)
-            } else {
-                with_gathered(plan, it, |keys, vals, n| {
-                    attention::exact_attention(it.q, keys, vals, n)
+        let d_k = plan.d_k;
+        let per_item = parallel_try_map(
+            plan.items.len(),
+            plan.threads,
+            |i| {
+                let it = &plan.items[i];
+                let n = plan.cache.seq_len(it.seq)?;
+                GATHER_SCRATCH.with(|s| {
+                    let (keys, vals) = &mut *s.borrow_mut();
+                    plan.cache.gather_keys_into(it.seq, it.head, keys)?;
+                    if !pq_values {
+                        plan.cache
+                            .gather_values_into(it.seq, it.head, vals)?;
+                    }
+                    let mut outs = Vec::with_capacity(it.rows);
+                    for r in 0..it.rows {
+                        let p = row_prefix(n, it.rows, r);
+                        let q = &it.q[r * d_k..(r + 1) * d_k];
+                        if pq_values {
+                            let scores = dense_scores(q, keys, p);
+                            outs.push(finish_item(plan, it, scores)?);
+                        } else {
+                            outs.push(attention::exact_attention(
+                                q,
+                                &keys[..p * d_k],
+                                &vals[..p * d_k],
+                                p,
+                            ));
+                        }
+                    }
+                    Ok::<_, CacheError>(outs)
                 })
-            }
-        })
-        .map_err(|e: CacheError| anyhow::anyhow!("fp16 decode: {e}"))
+            },
+        )
+        .map_err(|e: CacheError| anyhow::anyhow!("fp16 decode: {e}"))?;
+        Ok(flatten_rows(per_item))
     }
 }
 
 /// INT4/INT8 round-trip baseline (gathers, dequantizes, then scores —
-/// the bandwidth-bound path the paper compares against). With PQ-coded
-/// values this is the "int-key × pq-value" combination: round-tripped
-/// key scores feed the fused blocked weighted decode.
+/// the bandwidth-bound path the paper compares against). The per-tensor
+/// scale is computed over each row's causal prefix, exactly as the
+/// single-row decode path sees it, so span rows stay bit-identical to
+/// their decode-tick equivalents. With PQ-coded values this is the
+/// "int-key × pq-value" combination: round-tripped key scores feed the
+/// fused blocked weighted decode.
 pub struct ScalarQuantKernel {
     pub bits: u8,
 }
@@ -182,30 +227,54 @@ impl AttentionKernel for ScalarQuantKernel {
     {
         let bits = self.bits;
         let pq_values = plan.cache.value_codecs().is_some();
-        parallel_try_map(plan.items.len(), plan.threads, |i| {
-            let it = &plan.items[i];
-            if pq_values {
-                let scores = GATHER_SCRATCH.with(|s| {
-                    let (keys, _) = &mut *s.borrow_mut();
-                    let n =
-                        plan.cache.gather_keys_into(it.seq, it.head, keys)?;
-                    let deq = crate::quant::quant_roundtrip(keys, bits);
-                    Ok::<_, CacheError>(dense_scores(it.q, &deq, n))
-                })?;
-                finish_item(plan, it, scores)
-            } else {
-                with_gathered(plan, it, |keys, vals, n| {
-                    attention::scalar_quant_attention(
-                        it.q, keys, vals, n, bits)
+        let d_k = plan.d_k;
+        let per_item = parallel_try_map(
+            plan.items.len(),
+            plan.threads,
+            |i| {
+                let it = &plan.items[i];
+                let n = plan.cache.seq_len(it.seq)?;
+                GATHER_SCRATCH.with(|s| {
+                    let (keys, vals) = &mut *s.borrow_mut();
+                    plan.cache.gather_keys_into(it.seq, it.head, keys)?;
+                    if !pq_values {
+                        plan.cache
+                            .gather_values_into(it.seq, it.head, vals)?;
+                    }
+                    let mut outs = Vec::with_capacity(it.rows);
+                    for r in 0..it.rows {
+                        let p = row_prefix(n, it.rows, r);
+                        let q = &it.q[r * d_k..(r + 1) * d_k];
+                        if pq_values {
+                            let deq = crate::quant::quant_roundtrip(
+                                &keys[..p * d_k],
+                                bits,
+                            );
+                            let scores = dense_scores(q, &deq, p);
+                            outs.push(finish_item(plan, it, scores)?);
+                        } else {
+                            outs.push(attention::scalar_quant_attention(
+                                q,
+                                &keys[..p * d_k],
+                                &vals[..p * d_k],
+                                p,
+                                bits,
+                            ));
+                        }
+                    }
+                    Ok::<_, CacheError>(outs)
                 })
-            }
-        })
-        .map_err(|e: CacheError| anyhow::anyhow!("int{bits} decode: {e}"))
+            },
+        )
+        .map_err(|e: CacheError| {
+            anyhow::anyhow!("int{bits} decode: {e}")
+        })?;
+        Ok(flatten_rows(per_item))
     }
 }
 
-/// LOOKAT ADC over the block-resident PQ codes: LUT build per item,
-/// then scores and α·V accumulated straight from the cache's
+/// LOOKAT ADC over the block-resident PQ codes: LUT build per query
+/// row, then scores and α·V accumulated straight from the cache's
 /// [`crate::kvcache::BlockView`]s — no gather copies at all. With
 /// PQ-coded values this is the paper's fully-compressed **lookat-kv**
 /// path: both the key-code scan and the value weighted decode are
@@ -225,18 +294,36 @@ impl AttentionKernel for LookatKernel {
             .codecs()
             .context("lookat kernel needs a PQ cache")?
             .clone();
-        parallel_try_map(plan.items.len(), plan.threads, |i| {
-            let it = &plan.items[i];
-            let lut = LookupTable::build(it.q, &codecs[it.head].codebook);
-            let n = plan.cache.seq_len(it.seq)?;
-            let mut scores = Vec::with_capacity(n);
-            lut.scores_blocks(
-                plan.cache.blocks(it.seq, it.head)?.map(|b| b.codes),
-                &mut scores,
-            );
-            finish_item(plan, it, scores)
-        })
-        .map_err(|e: CacheError| anyhow::anyhow!("lookat decode: {e}"))
+        let d_k = plan.d_k;
+        let per_item = parallel_try_map(
+            plan.items.len(),
+            plan.threads,
+            |i| {
+                let it = &plan.items[i];
+                let n = plan.cache.seq_len(it.seq)?;
+                let mut outs = Vec::with_capacity(it.rows);
+                for r in 0..it.rows {
+                    let p = row_prefix(n, it.rows, r);
+                    let q = &it.q[r * d_k..(r + 1) * d_k];
+                    let lut =
+                        LookupTable::build(q, &codecs[it.head].codebook);
+                    let mut scores = Vec::with_capacity(n);
+                    lut.scores_blocks(
+                        plan.cache
+                            .blocks(it.seq, it.head)?
+                            .map(|b| b.codes),
+                        &mut scores,
+                    );
+                    // per-token ADC scores are independent, so the
+                    // causal truncation is exact
+                    scores.truncate(p);
+                    outs.push(finish_item(plan, it, scores)?);
+                }
+                Ok::<_, CacheError>(outs)
+            },
+        )
+        .map_err(|e: CacheError| anyhow::anyhow!("lookat decode: {e}"))?;
+        Ok(flatten_rows(per_item))
     }
 }
 
@@ -251,7 +338,8 @@ fn pjrt_len_for(lens: &[usize], n: usize) -> anyhow::Result<usize> {
 }
 
 /// Split a seq-major plan into per-sequence groups of `h` items and
-/// check the ordering contract the engine promises.
+/// check the ordering contract the engine promises (ascending heads,
+/// one `rows` per sequence).
 fn seq_groups<'p, 'a>(
     plan: &'p DecodePlan<'a>,
 ) -> anyhow::Result<std::slice::Chunks<'p, WorkItem<'a>>> {
@@ -264,30 +352,66 @@ fn seq_groups<'p, 'a>(
     }
     for group in plan.items.chunks(h) {
         for (j, it) in group.iter().enumerate() {
-            if it.head != j || it.seq != group[0].seq {
+            if it.head != j
+                || it.seq != group[0].seq
+                || it.rows != group[0].rows
+            {
                 bail!("DecodePlan items must be seq-major with ascending \
-                       heads");
+                       heads and uniform rows per sequence");
             }
         }
     }
     Ok(plan.items.chunks(h))
 }
 
+/// Full-width (H · d_k) query rows of one sequence group, one per span
+/// row, owned — the PJRT kernels need them after the plan borrow ends.
+fn group_queries(
+    group: &[WorkItem<'_>],
+    h: usize,
+    d_k: usize,
+) -> (SeqId, usize, Vec<Vec<f32>>) {
+    let rows = group[0].rows;
+    let row_qs = (0..rows)
+        .map(|r| {
+            let mut q = vec![0.0f32; h * d_k];
+            for it in group {
+                q[it.head * d_k..(it.head + 1) * d_k]
+                    .copy_from_slice(&it.q[r * d_k..(r + 1) * d_k]);
+            }
+            q
+        })
+        .collect();
+    (group[0].seq, rows, row_qs)
+}
+
 /// Split one full-width context row (H · d_k) into per-head outputs.
 /// PJRT artifacts return no attention distribution, so `weights` is
 /// empty — the serving loop only consumes `out`.
-fn split_heads(full: &[f32], h: usize, d_k: usize) -> Vec<AttnOutput> {
-    (0..h)
-        .map(|head| AttnOutput {
-            out: full[head * d_k..(head + 1) * d_k].to_vec(),
-            weights: Vec::new(),
-        })
-        .collect()
+///
+/// `per_row` holds one full-width result per span row; the outputs are
+/// emitted item-major (head-major, rows ascending within a head) to
+/// match the kernel contract.
+fn split_heads_rows(
+    per_row: &[Vec<f32>],
+    h: usize,
+    d_k: usize,
+    outs: &mut Vec<AttnOutput>,
+) {
+    for head in 0..h {
+        for full in per_row {
+            outs.push(AttnOutput {
+                out: full[head * d_k..(head + 1) * d_k].to_vec(),
+                weights: Vec::new(),
+            });
+        }
+    }
 }
 
 /// FP16 attention through the AOT artifacts on the PJRT client. The
 /// client's handles are not `Send`, so sequences run serially on the
-/// engine thread; each sequence is one padded artifact execution.
+/// engine thread; each span row is one padded artifact execution with
+/// the mask cut to the row's causal prefix.
 pub struct PjrtFp16Kernel {
     runtime: Runtime,
     lens: Vec<usize>,
@@ -305,11 +429,14 @@ impl PjrtFp16Kernel {
         }
     }
 
+    /// One padded artifact execution: `q` is (H · d_k), attention is
+    /// masked to the first `prefix` of the sequence's `n` cached tokens.
     fn attend_seq(
         &mut self,
         cache: &KvCache,
         seq: SeqId,
         q: &[f32],
+        prefix: usize,
     ) -> anyhow::Result<Vec<f32>> {
         let (h, d_k) = (cache.h, cache.d_k);
         let n = cache.seq_len(seq).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -318,7 +445,7 @@ impl PjrtFp16Kernel {
         let mut k = vec![0.0f32; h * l * d_k];
         let mut v = vec![0.0f32; h * l * d_k];
         let mut mask = vec![0.0f32; l];
-        mask[..n].fill(1.0);
+        mask[..prefix].fill(1.0);
         for head in 0..h {
             cache
                 .gather_keys_into(seq, head, &mut self.scratch_keys)
@@ -354,20 +481,22 @@ impl AttentionKernel for PjrtFp16Kernel {
         -> anyhow::Result<Vec<AttnOutput>>
     {
         let (h, d_k) = (plan.cache.h, plan.d_k);
-        let groups: Vec<(SeqId, Vec<f32>)> = seq_groups(plan)?
-            .map(|group| {
-                let mut q = vec![0.0f32; h * d_k];
-                for it in group {
-                    q[it.head * d_k..(it.head + 1) * d_k]
-                        .copy_from_slice(it.q);
-                }
-                (group[0].seq, q)
-            })
+        let groups: Vec<(SeqId, usize, Vec<Vec<f32>>)> = seq_groups(plan)?
+            .map(|group| group_queries(group, h, d_k))
             .collect();
-        let mut outs = Vec::with_capacity(plan.items.len());
-        for (seq, q) in groups {
-            let full = self.attend_seq(plan.cache, seq, &q)?;
-            outs.extend(split_heads(&full, h, d_k));
+        let mut outs = Vec::with_capacity(plan.total_rows() * h);
+        for (seq, rows, row_qs) in groups {
+            let n = plan
+                .cache
+                .seq_len(seq)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let mut per_row = Vec::with_capacity(rows);
+            for (r, q) in row_qs.iter().enumerate() {
+                let prefix = row_prefix(n, rows, r);
+                per_row.push(
+                    self.attend_seq(plan.cache, seq, q, prefix)?);
+            }
+            split_heads_rows(&per_row, h, d_k, &mut outs);
         }
         Ok(outs)
     }
@@ -393,11 +522,14 @@ impl PjrtLookatKernel {
         }
     }
 
+    /// One padded artifact execution over the sequence's PQ codes,
+    /// masked to the first `prefix` cached tokens.
     fn attend_seq(
         &mut self,
         cache: &KvCache,
         seq: SeqId,
         q: &[f32],
+        prefix: usize,
     ) -> anyhow::Result<Vec<f32>> {
         let (h, d_k) = (cache.h, cache.d_k);
         let m = self.m;
@@ -413,7 +545,7 @@ impl PjrtLookatKernel {
         let mut cbs = vec![0.0f32; h * m * kk * d_sub];
         let mut v = vec![0.0f32; h * l * d_k];
         let mut mask = vec![0.0f32; l];
-        mask[..n].fill(1.0);
+        mask[..prefix].fill(1.0);
         for head in 0..h {
             cache
                 .gather_codes_into(seq, head, &mut self.scratch_codes)
@@ -454,20 +586,22 @@ impl AttentionKernel for PjrtLookatKernel {
         -> anyhow::Result<Vec<AttnOutput>>
     {
         let (h, d_k) = (plan.cache.h, plan.d_k);
-        let groups: Vec<(SeqId, Vec<f32>)> = seq_groups(plan)?
-            .map(|group| {
-                let mut q = vec![0.0f32; h * d_k];
-                for it in group {
-                    q[it.head * d_k..(it.head + 1) * d_k]
-                        .copy_from_slice(it.q);
-                }
-                (group[0].seq, q)
-            })
+        let groups: Vec<(SeqId, usize, Vec<Vec<f32>>)> = seq_groups(plan)?
+            .map(|group| group_queries(group, h, d_k))
             .collect();
-        let mut outs = Vec::with_capacity(plan.items.len());
-        for (seq, q) in groups {
-            let full = self.attend_seq(plan.cache, seq, &q)?;
-            outs.extend(split_heads(&full, h, d_k));
+        let mut outs = Vec::with_capacity(plan.total_rows() * h);
+        for (seq, rows, row_qs) in groups {
+            let n = plan
+                .cache
+                .seq_len(seq)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let mut per_row = Vec::with_capacity(rows);
+            for (r, q) in row_qs.iter().enumerate() {
+                let prefix = row_prefix(n, rows, r);
+                per_row.push(
+                    self.attend_seq(plan.cache, seq, q, prefix)?);
+            }
+            split_heads_rows(&per_row, h, d_k, &mut outs);
         }
         Ok(outs)
     }
@@ -541,6 +675,7 @@ mod tests {
                     seq,
                     head,
                     q: &qs[i][head * DK..(head + 1) * DK],
+                    rows: 1,
                 });
             }
         }
@@ -678,6 +813,93 @@ mod tests {
         for (a, b) in serial.iter().zip(&parallel) {
             assert_eq!(a.out, b.out);
             assert_eq!(a.weights, b.weights);
+        }
+    }
+
+    /// Build a span plan over one sequence: every head carries `rows`
+    /// query rows (the prefill-chunk shape).
+    fn span_plan<'a>(
+        cache: &'a KvCache,
+        q_heads: &'a [Vec<f32>],
+        seq: SeqId,
+        rows: usize,
+    ) -> DecodePlan<'a> {
+        let items = (0..H)
+            .map(|head| WorkItem {
+                seq,
+                head,
+                q: &q_heads[head],
+                rows,
+            })
+            .collect();
+        DecodePlan { cache, d_k: DK, threads: 2, items }
+    }
+
+    #[test]
+    fn span_rows_match_manual_prefix_attention() {
+        // a rows=3 item's outputs must equal exact attention over each
+        // row's causal prefix — the prefill-span contract every backend
+        // inherits
+        let n = 40usize;
+        let rows = 3usize;
+        let cache = filled_cache(KeyStorage::Fp16, &[(1, n)]);
+        let mut rng = Pcg32::seed(23);
+        // per head, a (rows × d_k) span of queries
+        let q_heads: Vec<Vec<f32>> = (0..H)
+            .map(|_| {
+                (0..rows * DK).map(|_| rng.next_f32_std()).collect()
+            })
+            .collect();
+        let plan = span_plan(&cache, &q_heads, 1, rows);
+        let outs = Fp16Kernel.decode_batch(&plan).unwrap();
+        assert_eq!(outs.len(), H * rows);
+        for head in 0..H {
+            let mut keys = Vec::new();
+            let mut vals = Vec::new();
+            cache.gather_keys_into(1, head, &mut keys).unwrap();
+            cache.gather_values_into(1, head, &mut vals).unwrap();
+            for r in 0..rows {
+                let p = n - rows + r + 1;
+                let q = &q_heads[head][r * DK..(r + 1) * DK];
+                let want = attention::exact_attention(
+                    q, &keys[..p * DK], &vals[..p * DK], p);
+                let got = &outs[head * rows + r];
+                assert_eq!(got.out, want.out, "head {head} row {r}");
+                assert_eq!(got.weights, want.weights);
+            }
+        }
+    }
+
+    #[test]
+    fn lookat_span_rows_match_prefix_scores() {
+        let n = 70usize;
+        let rows = 4usize;
+        let cache = filled_cache(pq_storage(4), &[(1, n)]);
+        let mut rng = Pcg32::seed(29);
+        let q_heads: Vec<Vec<f32>> = (0..H)
+            .map(|_| {
+                (0..rows * DK).map(|_| rng.next_f32_std()).collect()
+            })
+            .collect();
+        let plan = span_plan(&cache, &q_heads, 1, rows);
+        let outs = LookatKernel.decode_batch(&plan).unwrap();
+        let codecs = cache.codecs().unwrap();
+        for head in 0..H {
+            let mut codes = Vec::new();
+            let mut vals = Vec::new();
+            cache.gather_codes_into(1, head, &mut codes).unwrap();
+            cache.gather_values_into(1, head, &mut vals).unwrap();
+            for r in 0..rows {
+                let p = n - rows + r + 1;
+                let q = &q_heads[head][r * DK..(r + 1) * DK];
+                let m = codecs[head].codebook.m;
+                let want = attention::lookat_attention(
+                    q, &codes[..p * m], &codecs[head],
+                    &vals[..p * DK], p);
+                let got = &outs[head * rows + r];
+                assert_eq!(got.out, want.out, "head {head} row {r}");
+                assert_eq!(got.weights, want.weights);
+            }
         }
     }
 

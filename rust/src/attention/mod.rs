@@ -134,6 +134,10 @@ pub(crate) fn finish_attention(
 /// contiguous value gather. Token order (and therefore every float op)
 /// matches [`finish_attention`] over the gathered equivalent, so the
 /// two tails are bit-identical.
+///
+/// The blocks may carry *more* tokens than there are scores: a prefill
+/// span's row `r` attends only its causal prefix, so the tail stops
+/// after `scores.len()` tokens and ignores the rest of the stream.
 pub fn finish_attention_blocks<'a>(
     mut scores: Vec<f32>,
     blocks: impl Iterator<Item = BlockView<'a>>,
@@ -146,8 +150,11 @@ pub fn finish_attention_blocks<'a>(
     softmax_inplace(&mut scores);
     let mut out = vec![0.0f32; d_k];
     let mut l = 0usize;
-    for blk in blocks {
+    'blocks: for blk in blocks {
         for t in 0..blk.len {
+            if l == scores.len() {
+                break 'blocks;
+            }
             let a = scores[l];
             if a > 0.0 {
                 crate::tensor::axpy(
@@ -169,6 +176,9 @@ pub fn finish_attention_blocks<'a>(
 /// dequantized per token and never gathered — zero per-step value
 /// copies. Token order matches the flat path, so the output is
 /// bit-identical to [`lookat_kv_attention`] over the gathered codes.
+/// Like [`finish_attention_blocks`], the code stream may extend past
+/// `scores.len()` tokens (a prefill span row's causal prefix); excess
+/// tokens are truncated before the weighted decode.
 pub fn finish_attention_kv_blocks<'a>(
     mut scores: Vec<f32>,
     blocks: impl Iterator<Item = BlockView<'a>>,
@@ -180,9 +190,18 @@ pub fn finish_attention_kv_blocks<'a>(
         *s *= inv;
     }
     softmax_inplace(&mut scores);
+    let m_v = value_codec.codebook.m;
+    let mut left = scores.len();
     let out = crate::pq::values::weighted_decode_blocks(
         &scores,
-        blocks.map(|b| b.value_codes),
+        blocks.map(|b| b.value_codes).filter_map(move |c| {
+            if left == 0 {
+                return None;
+            }
+            let take = (c.len() / m_v).min(left);
+            left -= take;
+            Some(&c[..take * m_v])
+        }),
         value_codec,
     );
     AttnOutput { out, weights: scores }

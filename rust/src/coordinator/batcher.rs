@@ -1,25 +1,87 @@
-//! Continuous batching: cache-aware admission + round-robin decode
-//! scheduling (the Orca/vLLM iteration-level scheduling policy, scaled
-//! to this testbed).
+//! Continuous batching: cache-aware admission, Sarathi-style chunked
+//! prefill and (optionally) preemptive iteration-level scheduling over
+//! one engine.
+//!
+//! Every [`Batcher::step`] tick assembles one mixed [`TickEntry`] plan:
+//! each decoding sequence contributes a one-token decode entry and each
+//! still-prefilling sequence contributes its next prefill chunk
+//! (`EngineConfig::prefill_chunk` tokens, 0 = monolithic), so long
+//! prompts interleave with decode instead of stalling it. Under
+//! [`SchedulerPolicy::Preempt`], block pressure evicts the
+//! lowest-priority running sequence — its blocks are freed without any
+//! codec teardown and it re-enters the queue carrying its
+//! generated-so-far tokens for cheap code-level re-prefill; the engine
+//! guarantees the resumed logits are bit-identical to the
+//! uninterrupted run.
 
 use std::collections::VecDeque;
 
-use super::engine::Engine;
+use super::engine::{Engine, TickEntry};
 use super::request::{CompletedRequest, Request};
 use crate::kvcache::{SeqId, BLOCK_TOKENS};
+
+/// How the batcher arbitrates cache blocks between running sequences.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerPolicy {
+    /// FCFS with head-of-line blocking (the paper setting of a single
+    /// bandwidth-constrained device): admission charges the full
+    /// prompt + generation worst case up front and running sequences
+    /// are never evicted.
+    Fcfs,
+    /// Preemptive continuous batching: admission charges only the
+    /// first prefill chunk, and when the block budget runs dry the
+    /// lowest-priority (latest-arrived) running sequence frees its
+    /// blocks and re-enters the queue front for later re-prefill.
+    Preempt,
+}
 
 /// Batching policy knobs.
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
     /// max sequences decoding concurrently
     pub max_batch: usize,
-    /// max queued requests before rejection (backpressure)
+    /// max queued requests before rejection (backpressure); preempted
+    /// sequences re-enter at the front and may transiently exceed this
     pub max_queue: usize,
+    /// block arbitration policy
+    pub policy: SchedulerPolicy,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        Self { max_batch: 8, max_queue: 64 }
+        Self {
+            max_batch: 8,
+            max_queue: 64,
+            policy: SchedulerPolicy::Fcfs,
+        }
+    }
+}
+
+/// A queued request, possibly carrying preemption state.
+struct Queued {
+    req: Request,
+    /// tokens generated before a preemption — re-prefilled (not
+    /// re-generated) on re-admission
+    resume: Vec<u32>,
+    /// original admission time, preserved across preemptions
+    first_admitted_s: Option<f64>,
+    /// original first-token time, preserved across preemptions
+    first_token_s: Option<f64>,
+}
+
+impl Queued {
+    fn fresh(req: Request) -> Self {
+        Self {
+            req,
+            resume: Vec::new(),
+            first_admitted_s: None,
+            first_token_s: None,
+        }
+    }
+
+    /// Tokens this request must (re-)prefill on admission.
+    fn context_len(&self) -> usize {
+        self.req.prompt.len() + self.resume.len()
     }
 }
 
@@ -27,17 +89,31 @@ struct Active {
     req: Request,
     admitted_s: f64,
     first_token_s: Option<f64>,
+    /// prompt ++ resumed tokens — the prefill source
+    prefill_src: Vec<u32>,
+    /// tokens of `prefill_src` already in cache
+    prefilled: usize,
+    /// all generated tokens (resumed ones included)
     generated: Vec<u32>,
+}
+
+impl Active {
+    fn prefilling(&self) -> bool {
+        self.prefilled < self.prefill_src.len()
+    }
 }
 
 /// Iteration-level batcher over one engine.
 pub struct Batcher {
     pub cfg: BatcherConfig,
     engine: Engine,
-    queue: VecDeque<Request>,
+    queue: VecDeque<Queued>,
     active: Vec<Active>,
     pub completed: Vec<CompletedRequest>,
     pub rejected: Vec<SeqId>,
+    /// sequences evicted under block pressure (cumulative; drained by
+    /// the router per serving run)
+    pub preemptions: usize,
 }
 
 impl Batcher {
@@ -49,6 +125,7 @@ impl Batcher {
             active: Vec::new(),
             completed: Vec::new(),
             rejected: Vec::new(),
+            preemptions: 0,
         }
     }
 
@@ -63,7 +140,7 @@ impl Batcher {
             self.rejected.push(req.id);
             return false;
         }
-        self.queue.push_back(req);
+        self.queue.push_back(Queued::fresh(req));
         true
     }
 
@@ -80,73 +157,204 @@ impl Batcher {
         self.queue.is_empty() && self.active.is_empty()
     }
 
-    /// Admit queued requests while batch slots and cache blocks allow.
-    /// FCFS with head-of-line blocking (matching the paper setting of a
-    /// single bandwidth-constrained device; no preemption). Everything
-    /// admissible this tick prefills in one [`Engine::start_seq_batch`]
-    /// call, so prompt prefills run concurrently.
-    pub fn admit(&mut self, now_s: f64) {
-        // drain the admissible prefix of the queue against a cumulative
-        // block budget (prompt + full generation, the no-preemption
-        // worst case)
-        let mut budget = self.engine.free_blocks();
-        let mut picked: Vec<Request> = Vec::new();
-        while self.active.len() + picked.len() < self.cfg.max_batch {
-            let Some(front) = self.queue.front() else { break };
-            let total = front.prompt.len() + front.max_new_tokens;
-            let need = total.div_ceil(BLOCK_TOKENS);
-            if need > budget {
-                break; // wait for cache space
+    /// Blocks the queue-front request needs to be admitted under the
+    /// current policy.
+    fn admission_need(&self, q: &Queued) -> usize {
+        let ctx = q.context_len();
+        match self.cfg.policy {
+            // worst case: the whole prompt plus every future token,
+            // because nothing is ever evicted
+            SchedulerPolicy::Fcfs => {
+                (ctx + q.req.max_new_tokens).div_ceil(BLOCK_TOKENS)
             }
-            budget -= need;
-            picked.push(self.queue.pop_front().unwrap());
-        }
-        if picked.is_empty() {
-            return;
-        }
-        let reqs: Vec<(SeqId, &[u32])> = picked
-            .iter()
-            .map(|r| (r.id, r.prompt.as_slice()))
-            .collect();
-        let results = self.engine.start_seq_batch(&reqs);
-        drop(reqs);
-        let mut requeue = Vec::new();
-        for (req, res) in picked.into_iter().zip(results) {
-            match res {
-                Ok(()) => self.active.push(Active {
-                    req,
-                    admitted_s: now_s,
-                    first_token_s: None,
-                    generated: Vec::new(),
-                }),
-                // cache raced below the estimate — requeue in order
-                Err(_) => requeue.push(req),
+            // only the first prefill chunk is charged; later pressure
+            // is resolved by preemption, so admission stops rejecting
+            // requests the scheduler can handle
+            SchedulerPolicy::Preempt => {
+                let chunk = self.engine.prefill_chunk();
+                let first = if chunk == 0 { ctx } else { ctx.min(chunk) };
+                first.max(1).div_ceil(BLOCK_TOKENS).max(1)
             }
-        }
-        for req in requeue.into_iter().rev() {
-            self.queue.push_front(req);
         }
     }
 
-    /// One decode iteration across the active batch: a single
-    /// [`Engine::decode_batch`] tick over every active sequence —
-    /// independent (seq, head) attention items run concurrently inside
-    /// the engine. Returns the number of tokens produced; `now_s`
-    /// stamps completion records.
+    /// Admit queued requests while batch slots and cache blocks allow.
+    /// Admission only registers the sequence (no prefill compute): the
+    /// prompt is fed to the engine chunk by chunk inside
+    /// [`Batcher::step`]'s mixed ticks.
+    pub fn admit(&mut self, now_s: f64) {
+        let mut budget = self.engine.free_blocks();
+        let total = self.engine.total_blocks();
+        while self.active.len() < self.cfg.max_batch {
+            let Some(front) = self.queue.front() else { break };
+            // a request whose peak context (prompt + full generation)
+            // can never fit in the whole cache would either head-of-line
+            // block forever (fcfs) or hard-error mid-generation
+            // (preempt) — reject it outright
+            let peak = front.req.prompt.len() + front.req.max_new_tokens;
+            if peak.div_ceil(BLOCK_TOKENS) > total {
+                let q = self.queue.pop_front().unwrap();
+                self.rejected.push(q.req.id);
+                continue;
+            }
+            let need = self.admission_need(front);
+            if need > budget {
+                break; // wait for cache space
+            }
+            let mut q = self.queue.pop_front().unwrap();
+            if self.engine.begin_seq(q.req.id).is_err() {
+                // id collision with a live sequence: refuse it
+                self.rejected.push(q.req.id);
+                continue;
+            }
+            budget -= need;
+            let mut prefill_src = q.req.prompt.clone();
+            prefill_src.extend_from_slice(&q.resume);
+            self.active.push(Active {
+                admitted_s: q.first_admitted_s.unwrap_or(now_s),
+                first_token_s: q.first_token_s.take(),
+                prefill_src,
+                prefilled: 0,
+                generated: std::mem::take(&mut q.resume),
+                req: q.req,
+            });
+        }
+    }
+
+    /// This tick's span for one active sequence: the next prefill chunk
+    /// while prefilling, one decode token afterwards.
+    fn tick_span(&self, a: &Active) -> usize {
+        if a.prefilling() {
+            let rem = a.prefill_src.len() - a.prefilled;
+            let chunk = self.engine.prefill_chunk();
+            if chunk == 0 {
+                rem
+            } else {
+                rem.min(chunk)
+            }
+        } else {
+            1
+        }
+    }
+
+    /// New cache blocks the tick's spans demand beyond what the active
+    /// sequences already hold.
+    fn tick_block_need(&self, spans: &[usize]) -> usize {
+        self.active
+            .iter()
+            .zip(spans)
+            .map(|(a, &s)| {
+                let len = self.engine.seq_pos(a.req.id).unwrap_or(0);
+                (len + s).div_ceil(BLOCK_TOKENS)
+                    - len.div_ceil(BLOCK_TOKENS)
+            })
+            .sum()
+    }
+
+    /// Evict the lowest-priority active sequence (latest arrival, ties
+    /// to the larger id): blocks freed, request re-queued at the front
+    /// carrying its generated-so-far tokens. Returns false when there
+    /// is nothing to evict.
+    fn preempt_one(&mut self) -> bool {
+        let Some(idx) = (0..self.active.len()).max_by(|&i, &j| {
+            let a = &self.active[i].req;
+            let b = &self.active[j].req;
+            a.arrival_s
+                .total_cmp(&b.arrival_s)
+                .then(a.id.cmp(&b.id))
+        }) else {
+            return false;
+        };
+        let a = self.active.swap_remove(idx);
+        let _ = self.engine.release(a.req.id);
+        self.preemptions += 1;
+        self.queue.push_front(Queued {
+            resume: a.generated,
+            first_admitted_s: Some(a.admitted_s),
+            first_token_s: a.first_token_s,
+            req: a.req,
+        });
+        true
+    }
+
+    /// One serving iteration across the active batch: a single mixed
+    /// [`Engine::step_batch`] tick — decode entries for decoding
+    /// sequences, the next prefill chunk for prefilling ones; all
+    /// (seq, head) work items run through the same per-layer plan.
+    /// Under the preemptive policy, block pressure is resolved *before*
+    /// the tick by evicting low-priority sequences. Returns the number
+    /// of decode tokens produced; `now_s` stamps completion records.
     pub fn step(&mut self, now_s: f64) -> anyhow::Result<usize> {
         if self.active.is_empty() {
             return Ok(0);
         }
-        let ids: Vec<SeqId> =
-            self.active.iter().map(|a| a.req.id).collect();
-        let toks = self.engine.decode_batch(&ids)?;
-        let produced = toks.len();
-        for (a, &tok) in self.active.iter_mut().zip(&toks) {
-            if a.first_token_s.is_none() {
-                a.first_token_s = Some(now_s);
+        // plan spans, preempting under pressure until the tick fits
+        let mut spans: Vec<usize> =
+            self.active.iter().map(|a| self.tick_span(a)).collect();
+        if self.cfg.policy == SchedulerPolicy::Preempt {
+            while self.tick_block_need(&spans) > self.engine.free_blocks()
+                && self.active.len() > 1
+            {
+                self.preempt_one();
+                spans = self
+                    .active
+                    .iter()
+                    .map(|a| self.tick_span(a))
+                    .collect();
             }
-            a.generated.push(tok);
+            // last resort: a single sequence whose prefill chunk
+            // outgrows the remaining budget gets a shorter chunk
+            if self.active.len() == 1 && self.active[0].prefilling() {
+                let free = self.engine.free_blocks();
+                if self.tick_block_need(&spans) > free {
+                    let len = self
+                        .engine
+                        .seq_pos(self.active[0].req.id)
+                        .unwrap_or(0);
+                    let tail = len.div_ceil(BLOCK_TOKENS) * BLOCK_TOKENS
+                        - len;
+                    let fit = tail + free * BLOCK_TOKENS;
+                    if fit >= 1 {
+                        spans[0] = spans[0].min(fit);
+                    }
+                }
+            }
         }
+
+        let entries: Vec<TickEntry<'_>> = self
+            .active
+            .iter()
+            .zip(&spans)
+            .map(|(a, &s)| {
+                if a.prefilling() {
+                    TickEntry::Prefill {
+                        seq: a.req.id,
+                        tokens: &a.prefill_src
+                            [a.prefilled..a.prefilled + s],
+                    }
+                } else {
+                    TickEntry::Decode(a.req.id)
+                }
+            })
+            .collect();
+        let outcomes = self.engine.step_batch(&entries)?;
+        drop(entries);
+
+        let mut produced = 0usize;
+        for (i, out) in outcomes.iter().enumerate() {
+            let a = &mut self.active[i];
+            match out.token {
+                Some(tok) => {
+                    if a.first_token_s.is_none() {
+                        a.first_token_s = Some(now_s);
+                    }
+                    a.generated.push(tok);
+                    produced += 1;
+                }
+                None => a.prefilled += spans[i],
+            }
+        }
+
         // sweep completions after the tick
         let mut i = 0;
         while i < self.active.len() {
@@ -161,7 +369,9 @@ impl Batcher {
                     generated: a.generated,
                     arrival_s: a.req.arrival_s,
                     admitted_s: a.admitted_s,
-                    first_token_s: a.first_token_s.unwrap(),
+                    // None only for max_new_tokens == 0 (prefill-only
+                    // requests complete without ever decoding)
+                    first_token_s: a.first_token_s.unwrap_or(now_s),
                     finished_s: now_s,
                 });
             } else {
@@ -178,9 +388,13 @@ mod tests {
     use crate::coordinator::engine::{AttentionBackend, EngineConfig};
     use crate::model::{ByteTokenizer, ModelConfig};
 
-    fn mk_batcher(max_batch: usize, max_queue: usize, blocks: usize)
-        -> Batcher
-    {
+    fn mk_batcher_policy(
+        max_batch: usize,
+        max_queue: usize,
+        blocks: usize,
+        policy: SchedulerPolicy,
+        prefill_chunk: usize,
+    ) -> Batcher {
         let engine = Engine::build(&EngineConfig {
             model: ModelConfig::test_tiny(),
             backend: AttentionBackend::Fp16Exact,
@@ -190,9 +404,20 @@ mod tests {
             cache_blocks: blocks,
             calib_tokens: 64,
             decode_threads: 2,
+            prefill_chunk,
         })
         .unwrap();
-        Batcher::new(engine, BatcherConfig { max_batch, max_queue })
+        Batcher::new(
+            engine,
+            BatcherConfig { max_batch, max_queue, policy },
+        )
+    }
+
+    fn mk_batcher(max_batch: usize, max_queue: usize, blocks: usize)
+        -> Batcher
+    {
+        mk_batcher_policy(
+            max_batch, max_queue, blocks, SchedulerPolicy::Fcfs, 0)
     }
 
     fn req(id: u64, gen: usize) -> Request {
@@ -204,12 +429,7 @@ mod tests {
         }
     }
 
-    #[test]
-    fn processes_all_requests_to_completion() {
-        let mut b = mk_batcher(2, 16, 64);
-        for i in 0..5 {
-            assert!(b.submit(req(i, 3)));
-        }
+    fn drain(b: &mut Batcher) {
         let mut now = 0.0;
         let mut iters = 0;
         while !b.idle() {
@@ -217,8 +437,17 @@ mod tests {
             b.step(now).unwrap();
             now += 0.01;
             iters += 1;
-            assert!(iters < 1000, "stuck");
+            assert!(iters < 2000, "stuck");
         }
+    }
+
+    #[test]
+    fn processes_all_requests_to_completion() {
+        let mut b = mk_batcher(2, 16, 64);
+        for i in 0..5 {
+            assert!(b.submit(req(i, 3)));
+        }
+        drain(&mut b);
         assert_eq!(b.completed.len(), 5);
         for c in &b.completed {
             assert_eq!(c.generated.len(), 3);
@@ -245,22 +474,21 @@ mod tests {
             cache_blocks: 64,
             calib_tokens: 64,
             decode_threads: 2,
+            prefill_chunk: 0,
         })
         .unwrap();
-        let mut b =
-            Batcher::new(engine, BatcherConfig { max_batch: 2, max_queue: 16 });
+        let mut b = Batcher::new(
+            engine,
+            BatcherConfig {
+                max_batch: 2,
+                max_queue: 16,
+                policy: SchedulerPolicy::Fcfs,
+            },
+        );
         for i in 0..4 {
             assert!(b.submit(req(i, 3)));
         }
-        let mut now = 0.0;
-        let mut iters = 0;
-        while !b.idle() {
-            b.admit(now);
-            b.step(now).unwrap();
-            now += 0.01;
-            iters += 1;
-            assert!(iters < 1000, "stuck");
-        }
+        drain(&mut b);
         assert_eq!(b.completed.len(), 4);
         assert_eq!(b.engine().cache_stats().tokens, 0);
     }
@@ -295,6 +523,77 @@ mod tests {
         b.admit(0.0);
         assert!(b.active() <= 2, "cache should limit admissions");
         assert!(b.active() >= 1);
+    }
+
+    #[test]
+    fn preemptive_admission_charges_only_first_chunk() {
+        // same 2-block cache: the FCFS worst-case charge admits one
+        // request, the preemptive chunk charge admits several — the
+        // admission bugfix the preemptive scheduler enables
+        let mut fcfs = mk_batcher_policy(
+            8, 16, 2, SchedulerPolicy::Fcfs, 8);
+        let mut pre = mk_batcher_policy(
+            8, 16, 2, SchedulerPolicy::Preempt, 8);
+        for i in 0..4 {
+            fcfs.submit(req(i, 30));
+            pre.submit(req(i, 30));
+        }
+        fcfs.admit(0.0);
+        pre.admit(0.0);
+        assert!(pre.active() > fcfs.active(),
+                "chunk-charged admission must admit more: {} vs {}",
+                pre.active(), fcfs.active());
+    }
+
+    #[test]
+    fn oversubscription_drains_with_preemption() {
+        // far more demand than blocks: FCFS would reject or stall, the
+        // preemptive scheduler cycles everything through to completion
+        let mut b = mk_batcher_policy(
+            4, 32, 3, SchedulerPolicy::Preempt, 8);
+        for i in 0..6 {
+            assert!(b.submit(req(i, 25)));
+        }
+        drain(&mut b);
+        assert_eq!(b.completed.len(), 6);
+        assert!(b.rejected.is_empty(), "no admitted request was dropped");
+        assert_eq!(b.engine().cache_stats().tokens, 0);
+    }
+
+    #[test]
+    fn zero_generation_request_completes_without_decode() {
+        // prefill-only requests (max_new_tokens = 0) complete after
+        // their prefill tick without ever producing a token — and
+        // without panicking on the missing first-token timestamp
+        let mut b = mk_batcher(2, 8, 64);
+        b.submit(Request {
+            id: 0,
+            prompt: ByteTokenizer::new().encode("prefill only"),
+            max_new_tokens: 0,
+            arrival_s: 0.0,
+        });
+        drain(&mut b);
+        assert_eq!(b.completed.len(), 1);
+        assert!(b.completed[0].generated.is_empty());
+        assert_eq!(b.engine().cache_stats().tokens, 0);
+    }
+
+    #[test]
+    fn never_fitting_request_is_rejected_not_stuck() {
+        let mut b = mk_batcher_policy(
+            2, 16, 2, SchedulerPolicy::Preempt, 8);
+        let huge = Request {
+            id: 9,
+            prompt: vec![1u32; 3 * BLOCK_TOKENS],
+            max_new_tokens: 4,
+            arrival_s: 0.0,
+        };
+        b.submit(huge);
+        b.submit(req(1, 2));
+        drain(&mut b);
+        assert_eq!(b.rejected, vec![9]);
+        assert_eq!(b.completed.len(), 1);
+        assert_eq!(b.completed[0].id, 1);
     }
 
     #[test]
@@ -336,6 +635,39 @@ mod tests {
                 return Err(format!("batch overflow: {}", b.active()));
             }
             // conservation: submitted == queued + active + done + rejected
+            let total = b.queued() + b.active() + b.completed.len()
+                + b.rejected.len();
+            if total != next_id as usize {
+                return Err(format!("lost requests: {total} != {next_id}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn preemptive_conservation_property() {
+        // the same conservation law must survive preemption churn: a
+        // preempted request lives in the queue, never in limbo
+        let mut b = mk_batcher_policy(
+            3, 64, 3, SchedulerPolicy::Preempt, 4);
+        let mut next_id = 0u64;
+        let mut now = 0.0;
+        crate::prop_assert!("preempt-conservation", 150, |g| {
+            match g.usize_in(0, 2) {
+                0 => {
+                    b.submit(req(next_id, g.usize_in(1, 6)));
+                    next_id += 1;
+                }
+                _ => {
+                    b.admit(now);
+                    b.step(now).map_err(|e| e.to_string())?;
+                    now += 0.1;
+                }
+            }
+            let s = b.engine().cache_stats();
+            if s.blocks_allocated > s.blocks_total {
+                return Err("block budget exceeded".into());
+            }
             let total = b.queued() + b.active() + b.completed.len()
                 + b.rejected.len();
             if total != next_id as usize {

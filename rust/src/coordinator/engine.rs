@@ -10,12 +10,21 @@
 //!   AOT artifacts on the PJRT CPU client (proves the 3-layer contract
 //!   end-to-end in the serving loop)
 //!
-//! Decode is batched: [`Engine::decode_batch`] advances every sequence
-//! of the batcher's drained tick by one token, building one
-//! [`DecodePlan`] per layer — all (seq, head) work items at once — and
-//! fanning the independent items (plus the per-sequence QKV/MLP math)
-//! out on `util::threadpool`. Per-sequence results are bit-identical to
-//! a batch of one: items never interact.
+//! The serving tick is unified: [`Engine::step_batch`] advances a mixed
+//! set of [`TickEntry`]s — decode items (one greedy token each) and
+//! prefill chunks (a span of prompt tokens) — by building one
+//! [`DecodePlan`] per layer containing *all* (seq, head) work items of
+//! the tick. Prefill rides the same backend kernel as decode (a decode
+//! item is just a one-row span), which has two consequences the
+//! scheduler leans on:
+//!
+//! * chunked prefill is bit-identical to monolithic prefill on every
+//!   backend — a span row's math depends only on (query row, cache
+//!   prefix), never on how rows were grouped into ticks;
+//! * a preempted sequence resumes exactly: re-prefilling its prompt +
+//!   generated-so-far tokens re-encodes codes and replays the identical
+//!   per-token computation, so the resumed hidden state (and every
+//!   subsequent logit) matches the uninterrupted run bit for bit.
 //!
 //! LOOKAT codebooks are trained once at engine build from a calibration
 //! corpus (paper §3.4); the serving hot path never touches python.
@@ -28,12 +37,12 @@ use crate::attention::kernel::{
 };
 use crate::attention::{AttentionKernel, DecodePlan, WorkItem};
 use crate::kvcache::{
-    CacheError, KeyStorage, KvCache, SeqId, ValueStorage,
+    CacheError, KeyStorage, KvCache, SeqId, ValueStorage, BLOCK_TOKENS,
 };
 use crate::model::{Gpt2, ModelConfig, PrefillOutput, Weights};
 use crate::pq::{PqCodec, TrainOpts};
 use crate::runtime::Runtime;
-use crate::util::threadpool::{parallel_map, parallel_try_map};
+use crate::util::threadpool::parallel_map;
 use crate::workload::{Corpus, Genre};
 
 /// Which attention implementation the engine uses at decode time.
@@ -116,6 +125,10 @@ pub struct EngineConfig {
     /// worker threads for the batched decode fan-out (0 = one per
     /// available core)
     pub decode_threads: usize,
+    /// prefill chunk size in tokens: the scheduler splits every prompt
+    /// into spans of at most this many tokens so long prefills
+    /// interleave with decode ticks (0 = monolithic, Sarathi-style off)
+    pub prefill_chunk: usize,
 }
 
 impl Default for EngineConfig {
@@ -128,12 +141,50 @@ impl Default for EngineConfig {
             cache_blocks: 256,
             calib_tokens: 384,
             decode_threads: 0,
+            prefill_chunk: 0,
         }
     }
 }
 
+/// One unit of a serving tick, as assembled by the batcher.
+#[derive(Clone, Copy, Debug)]
+pub enum TickEntry<'t> {
+    /// advance a decoding sequence by one greedy token
+    Decode(SeqId),
+    /// process the sequence's next prefill chunk; `tokens[r]` lands at
+    /// cache position `pos + r`
+    Prefill { seq: SeqId, tokens: &'t [u32] },
+}
+
+impl TickEntry<'_> {
+    fn seq(&self) -> SeqId {
+        match self {
+            TickEntry::Decode(id) => *id,
+            TickEntry::Prefill { seq, .. } => *seq,
+        }
+    }
+
+    fn span(&self) -> usize {
+        match self {
+            TickEntry::Decode(_) => 1,
+            TickEntry::Prefill { tokens, .. } => tokens.len(),
+        }
+    }
+}
+
+/// Per-entry result of one [`Engine::step_batch`] tick.
+#[derive(Clone, Copy, Debug)]
+pub struct TickOutcome {
+    pub seq: SeqId,
+    /// the greedy token produced this tick — `Some` for decode entries,
+    /// `None` for prefill chunks
+    pub token: Option<u32>,
+}
+
 struct SeqMeta {
     pos: usize,
+    /// final hidden state of the last processed position; empty until
+    /// the first prefill chunk lands
     last_hidden: Vec<f32>,
 }
 
@@ -146,6 +197,7 @@ pub struct Engine {
     seqs: std::collections::HashMap<SeqId, SeqMeta>,
     kernel: Box<dyn AttentionKernel>,
     threads: usize,
+    prefill_chunk: usize,
 }
 
 impl Engine {
@@ -246,6 +298,7 @@ impl Engine {
             seqs: std::collections::HashMap::new(),
             kernel,
             threads,
+            prefill_chunk: cfg.prefill_chunk,
         })
     }
 
@@ -344,8 +397,7 @@ impl Engine {
 
     /// Whether the cache can admit a sequence of `prompt + gen` tokens.
     pub fn can_admit(&self, total_tokens: usize) -> bool {
-        self.free_blocks()
-            >= total_tokens.div_ceil(crate::kvcache::BLOCK_TOKENS)
+        self.free_blocks() >= total_tokens.div_ceil(BLOCK_TOKENS)
     }
 
     /// Free cache blocks available right now (min across layers) — the
@@ -361,75 +413,75 @@ impl Engine {
             .unwrap_or(0)
     }
 
-    /// Admit a sequence: prefill its prompt, fill every layer's cache,
-    /// return nothing (call [`Engine::decode_batch`] for tokens).
-    pub fn start_seq(&mut self, id: SeqId, prompt: &[u32])
-        -> Result<(), CacheError>
-    {
-        assert!(!prompt.is_empty(), "empty prompt");
-        let out = self.model.prefill(prompt);
-        self.install_prefill(id, prompt.len(), out)
+    /// Total block budget per layer.
+    pub fn total_blocks(&self) -> usize {
+        self.caches[0].stats().blocks_total
     }
 
-    /// Admit several sequences in one tick: the prompt prefills (pure
-    /// model math, the TTFT-dominant cost) run concurrently on the
-    /// decode thread budget; the cache fills stay serial. Returns one
-    /// result per request, in order — failed admissions leave no
-    /// residue and the rest still land.
-    pub fn start_seq_batch(&mut self, reqs: &[(SeqId, &[u32])])
-        -> Vec<Result<(), CacheError>>
-    {
-        for &(_, prompt) in reqs {
-            assert!(!prompt.is_empty(), "empty prompt");
-        }
-        let model = &self.model;
-        let prefills: Vec<PrefillOutput> =
-            match parallel_try_map(reqs.len(), self.threads, |i| {
-                Ok::<_, std::convert::Infallible>(model.prefill(reqs[i].1))
-            }) {
-                Ok(p) => p,
-                Err(e) => match e {},
-            };
-        reqs.iter()
-            .zip(prefills)
-            .map(|(&(id, prompt), out)| {
-                self.install_prefill(id, prompt.len(), out)
-            })
-            .collect()
+    /// The configured prefill chunk size (0 = monolithic).
+    pub fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk
     }
 
-    /// Register a prefilled sequence: fill every layer's cache and store
-    /// its decode state. Rolls back cleanly on cache exhaustion.
-    fn install_prefill(
-        &mut self,
-        id: SeqId,
-        prompt_len: usize,
-        out: PrefillOutput,
-    ) -> Result<(), CacheError> {
-        for c in self.caches.iter_mut() {
-            c.create_seq(id)?;
+    /// Tokens currently cached for a sequence (`None` if unknown).
+    pub fn seq_pos(&self, id: SeqId) -> Option<usize> {
+        self.seqs.get(&id).map(|m| m.pos)
+    }
+
+    /// Blocks a sequence holds per layer (0 if unknown) — what a
+    /// preemption would free.
+    pub fn seq_blocks(&self, id: SeqId) -> usize {
+        self.caches[0].seq_blocks(id).unwrap_or(0)
+    }
+
+    /// Register an empty sequence: no prefill compute, no blocks — the
+    /// scheduler feeds its prompt in chunks via [`Engine::step_batch`].
+    pub fn begin_seq(&mut self, id: SeqId) -> Result<(), CacheError> {
+        if self.seqs.contains_key(&id) {
+            return Err(CacheError::DuplicateSeq(id));
         }
-        for layer in 0..self.model.n_layer() {
-            let (k_cache, v_cache) = &out.caches[layer];
-            for t in 0..prompt_len {
-                // rows are (d_model) = heads contiguous — exactly the
-                // (H × d_k) layout append expects
-                let res = self.caches[layer].append(
-                    id, k_cache.row(t), v_cache.row(t));
-                if let Err(e) = res {
-                    // roll back so the caller can retry later
-                    for c in self.caches.iter_mut() {
-                        let _ = c.free_seq(id);
-                    }
-                    return Err(e);
+        for i in 0..self.caches.len() {
+            if let Err(e) = self.caches[i].create_seq(id) {
+                for c in self.caches[..i].iter_mut() {
+                    let _ = c.free_seq(id);
                 }
+                return Err(e);
             }
         }
         self.seqs.insert(
             id,
-            SeqMeta { pos: prompt_len, last_hidden: out.last_hidden },
+            SeqMeta { pos: 0, last_hidden: Vec::new() },
         );
         Ok(())
+    }
+
+    /// Admit a sequence with a monolithic prefill (the whole prompt as
+    /// one span through the backend kernel). Rolls back cleanly on
+    /// cache exhaustion so the caller can retry later.
+    pub fn start_seq(&mut self, id: SeqId, prompt: &[u32])
+        -> Result<(), CacheError>
+    {
+        assert!(!prompt.is_empty(), "empty prompt");
+        self.begin_seq(id)?;
+        match self.step_batch(&[TickEntry::Prefill {
+            seq: id,
+            tokens: prompt,
+        }]) {
+            Ok(_) => Ok(()),
+            Err(e) => {
+                // no residue: drop the registered (possibly partially
+                // filled) sequence entirely
+                let _ = self.release(id);
+                match e.downcast_ref::<CacheError>() {
+                    Some(ce) => Err(ce.clone()),
+                    // non-cache failures (position overflow, kernel
+                    // faults) are programming errors, not retryable
+                    // capacity signals — matching the pre-scheduler
+                    // behaviour of panicking inside the prefill
+                    None => panic!("start_seq({id}): {e:#}"),
+                }
+            }
+        }
     }
 
     /// Generate one token for a sequence (greedy): a batch of one.
@@ -438,87 +490,188 @@ impl Engine {
     }
 
     /// One decode tick for a batch of sequences: every sequence gets one
-    /// greedy token appended to its cache.
-    ///
-    /// Per layer, all (seq, head) attention items form one [`DecodePlan`]
-    /// that the backend kernel executes; QKV projections, the greedy
-    /// logits pass and the block MLPs fan out per sequence on the same
-    /// thread budget. Sequences are independent, so the result for each
-    /// is bit-identical to decoding it in a batch of one.
+    /// greedy token appended to its cache (a [`Engine::step_batch`] of
+    /// all-decode entries).
     pub fn decode_batch(&mut self, ids: &[SeqId])
         -> anyhow::Result<Vec<u32>>
     {
         if ids.is_empty() {
             return Ok(Vec::new());
         }
+        let entries: Vec<TickEntry<'_>> =
+            ids.iter().map(|&id| TickEntry::Decode(id)).collect();
+        let outcomes = self.step_batch(&entries)?;
+        Ok(outcomes
+            .into_iter()
+            .map(|o| o.token.expect("decode entry produces a token"))
+            .collect())
+    }
+
+    /// One mixed serving tick: decode entries produce one greedy token
+    /// each, prefill entries push their chunk's K/V into the cache and
+    /// advance the sequence's hidden state. Per layer, every entry's
+    /// (seq, head) span items form one [`DecodePlan`] the backend
+    /// kernel executes; QKV projections and MLP tails fan out per row
+    /// on the same thread budget. Rows never interact, so each
+    /// sequence's result is bit-identical to processing it alone — and
+    /// to any other chunking of the same tokens.
+    pub fn step_batch(&mut self, entries: &[TickEntry<'_>])
+        -> anyhow::Result<Vec<TickOutcome>>
+    {
+        if entries.is_empty() {
+            return Ok(Vec::new());
+        }
         let (h, d_k) = (self.model.n_head(), self.model.d_head());
-        for &id in ids {
+        let max_pos = self.model.weights.config.max_pos;
+
+        // validate the tick before touching any state
+        let mut seen = std::collections::HashSet::new();
+        for e in entries {
+            let id = e.seq();
+            if !seen.insert(id) {
+                bail!("sequence {id} appears twice in one tick");
+            }
             let meta = self
                 .seqs
                 .get(&id)
                 .with_context(|| format!("unknown seq {id}"))?;
-            if meta.pos >= self.model.weights.config.max_pos {
-                bail!("sequence {id} exceeded max position");
-            }
-        }
-        // pre-flight the tick's block demand so a mid-batch OutOfBlocks
-        // can't leave some sequences' caches ahead of their SeqMeta
-        // (admission over-commits by design: it reserves against current
-        // allocation, not outstanding generation)
-        for (layer, cache) in self.caches.iter().enumerate() {
-            let mut need = 0usize;
-            for &id in ids {
-                let len =
-                    cache.seq_len(id).map_err(|e| anyhow::anyhow!("{e}"))?;
-                if len % crate::kvcache::BLOCK_TOKENS == 0 {
-                    need += 1;
+            match e {
+                TickEntry::Decode(_) => {
+                    if meta.last_hidden.is_empty() {
+                        bail!(
+                            "sequence {id} is still prefilling \
+                             (no hidden state to decode from)"
+                        );
+                    }
+                }
+                TickEntry::Prefill { tokens, .. } => {
+                    if tokens.is_empty() {
+                        bail!("empty prefill chunk for sequence {id}");
+                    }
                 }
             }
-            let s = cache.stats();
-            if need > s.blocks_total - s.blocks_allocated {
+            if meta.pos + e.span() > max_pos {
                 bail!(
-                    "out of cache blocks for decode tick \
-                     (layer {layer}: need {need} new blocks)"
+                    "sequence {id} would exceed max position {max_pos}"
                 );
             }
         }
 
-        // greedy next-token + embedding per sequence
+        // pre-flight the tick's block demand so a mid-batch OutOfBlocks
+        // can't leave some sequences' caches ahead of their SeqMeta.
+        // The error is typed (CacheError::OutOfBlocks) so the scheduler
+        // can react by preempting instead of failing the request.
+        for (layer, cache) in self.caches.iter().enumerate() {
+            let mut need = 0usize;
+            for e in entries {
+                let len = cache
+                    .seq_len(e.seq())
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                need += (len + e.span()).div_ceil(BLOCK_TOKENS)
+                    - len.div_ceil(BLOCK_TOKENS);
+            }
+            let s = cache.stats();
+            if need > s.blocks_total - s.blocks_allocated {
+                return Err(anyhow::Error::new(CacheError::OutOfBlocks)
+                    .context(format!(
+                        "tick needs {need} new cache blocks in layer \
+                         {layer} (free: {})",
+                        s.blocks_total - s.blocks_allocated
+                    )));
+            }
+        }
+
+        // row bookkeeping: entry i owns flat rows
+        // entry_row0[i] .. entry_row0[i] + span_i
+        let spans: Vec<usize> = entries.iter().map(|e| e.span()).collect();
+        let total_rows: usize = spans.iter().sum();
+        let mut entry_row0 = Vec::with_capacity(entries.len());
+        let mut row_entry = Vec::with_capacity(total_rows);
+        for (i, &s) in spans.iter().enumerate() {
+            entry_row0.push(row_entry.len());
+            for _ in 0..s {
+                row_entry.push(i);
+            }
+        }
+
+        // greedy next-token picks + embeddings per entry
         let model = &self.model;
         let seqs = &self.seqs;
-        let picked: Vec<(u32, Vec<f32>)> =
-            parallel_map(ids.len(), self.threads, |i| {
-                let meta = &seqs[&ids[i]];
-                let token = model.greedy_next(&meta.last_hidden);
-                (token, model.embed(token, meta.pos))
+        let picks: Vec<(Option<u32>, Vec<Vec<f32>>)> =
+            parallel_map(entries.len(), self.threads, |i| {
+                match &entries[i] {
+                    TickEntry::Decode(id) => {
+                        let meta = &seqs[id];
+                        let tok = model.greedy_next(&meta.last_hidden);
+                        (Some(tok), vec![model.embed(tok, meta.pos)])
+                    }
+                    TickEntry::Prefill { seq, tokens } => {
+                        let meta = &seqs[seq];
+                        let embeds = tokens
+                            .iter()
+                            .enumerate()
+                            .map(|(r, &t)| model.embed(t, meta.pos + r))
+                            .collect();
+                        (None, embeds)
+                    }
+                }
             });
-        let (tokens, mut xs): (Vec<u32>, Vec<Vec<f32>>) =
-            picked.into_iter().unzip();
+        let mut picked_tokens = Vec::with_capacity(entries.len());
+        let mut xs: Vec<Vec<f32>> = Vec::with_capacity(total_rows);
+        for (tok, embeds) in picks {
+            picked_tokens.push(tok);
+            xs.extend(embeds);
+        }
 
         for layer in 0..self.model.n_layer() {
-            // QKV projections (independent per sequence)
+            // QKV projections (independent per row)
             let model = &self.model;
             let xs_ref = &xs;
             let qkvs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> =
-                parallel_map(ids.len(), self.threads, |i| {
-                    model.qkv(layer, &xs_ref[i])
+                parallel_map(xs.len(), self.threads, |r| {
+                    model.qkv(layer, &xs_ref[r])
                 });
-            // cache appends mutate the paged storage — serial
-            for (i, &id) in ids.iter().enumerate() {
-                self.caches[layer]
-                    .append(id, &qkvs[i].1, &qkvs[i].2)
-                    .map_err(|e| anyhow::anyhow!("cache append: {e}"))?;
+            // cache appends mutate the paged storage — serial, in row
+            // order per entry
+            for (i, e) in entries.iter().enumerate() {
+                let id = e.seq();
+                for r in entry_row0[i]..entry_row0[i] + spans[i] {
+                    self.caches[layer]
+                        .append(id, &qkvs[r].1, &qkvs[r].2)
+                        .map_err(|e| {
+                            anyhow::anyhow!("cache append: {e}")
+                        })?;
+                }
             }
-            // one DecodePlan for the tick: all (seq, head) items,
+            // span query buffers, head-major per entry so each item's
+            // rows are contiguous: (H, span, d_k)
+            let qbufs: Vec<Vec<f32>> = (0..entries.len())
+                .map(|i| {
+                    let s = spans[i];
+                    let mut buf = vec![0.0f32; h * s * d_k];
+                    for r in 0..s {
+                        let q = &qkvs[entry_row0[i] + r].0;
+                        for head in 0..h {
+                            let dst = (head * s + r) * d_k;
+                            buf[dst..dst + d_k].copy_from_slice(
+                                &q[head * d_k..(head + 1) * d_k],
+                            );
+                        }
+                    }
+                    buf
+                })
+                .collect();
+            // one DecodePlan for the tick: all (seq, head) span items,
             // seq-major with ascending heads (the kernel contract)
-            let mut items = Vec::with_capacity(ids.len() * h);
-            for (i, &id) in ids.iter().enumerate() {
-                let q = &qkvs[i].0;
+            let mut items = Vec::with_capacity(entries.len() * h);
+            for (i, e) in entries.iter().enumerate() {
+                let s = spans[i];
                 for head in 0..h {
                     items.push(WorkItem {
-                        seq: id,
+                        seq: e.seq(),
                         head,
-                        q: &q[head * d_k..(head + 1) * d_k],
+                        q: &qbufs[i][head * s * d_k..(head + 1) * s * d_k],
+                        rows: s,
                     });
                 }
             }
@@ -529,38 +682,66 @@ impl Engine {
                 items,
             };
             let outs = self.kernel.decode_batch(&plan)?;
-            if outs.len() != ids.len() * h {
+            if outs.len() != total_rows * h {
                 bail!(
-                    "kernel returned {} outputs for {} work items",
+                    "kernel returned {} outputs for {} work rows",
                     outs.len(),
-                    ids.len() * h
+                    total_rows * h
                 );
             }
-            // concat heads + residual/MLP tail (independent per sequence)
+            // per-entry offset into the item-major output stream
+            let mut out_base = Vec::with_capacity(entries.len());
+            let mut acc = 0usize;
+            for &s in &spans {
+                out_base.push(acc);
+                acc += h * s;
+            }
+            // concat heads + residual/MLP tail (independent per row)
             let model = &self.model;
             let xs_ref = &xs;
             let outs_ref = &outs;
+            let row_entry_ref = &row_entry;
+            let entry_row0_ref = &entry_row0;
+            let spans_ref = &spans;
+            let out_base_ref = &out_base;
             let next: Vec<Vec<f32>> =
-                parallel_map(ids.len(), self.threads, |i| {
+                parallel_map(xs.len(), self.threads, |r| {
+                    let i = row_entry_ref[r];
+                    let local = r - entry_row0_ref[i];
+                    let s = spans_ref[i];
                     let mut attn = vec![0.0f32; h * d_k];
                     for head in 0..h {
                         attn[head * d_k..(head + 1) * d_k]
-                            .copy_from_slice(&outs_ref[i * h + head].out);
+                            .copy_from_slice(
+                                &outs_ref
+                                    [out_base_ref[i] + head * s + local]
+                                    .out,
+                            );
                     }
-                    model.finish_block(layer, &xs_ref[i], &attn)
+                    model.finish_block(layer, &xs_ref[r], &attn)
                 });
             xs = next;
         }
 
-        for (i, &id) in ids.iter().enumerate() {
-            let meta = self.seqs.get_mut(&id).unwrap();
-            meta.pos += 1;
-            meta.last_hidden = std::mem::take(&mut xs[i]);
+        for (i, e) in entries.iter().enumerate() {
+            let meta = self.seqs.get_mut(&e.seq()).unwrap();
+            meta.pos += spans[i];
+            let last = entry_row0[i] + spans[i] - 1;
+            meta.last_hidden = std::mem::take(&mut xs[last]);
         }
-        Ok(tokens)
+        Ok(entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| TickOutcome {
+                seq: e.seq(),
+                token: picked_tokens[i],
+            })
+            .collect())
     }
 
-    /// Release a finished sequence's cache.
+    /// Release a finished (or preempted) sequence's cache. The storage
+    /// codecs are untouched — a preempted sequence later re-prefills by
+    /// re-encoding codes only.
     pub fn release(&mut self, id: SeqId) -> anyhow::Result<()> {
         self.seqs.remove(&id).with_context(|| format!("unknown seq {id}"))?;
         for c in self.caches.iter_mut() {
@@ -584,6 +765,7 @@ mod tests {
             cache_blocks: 32,
             calib_tokens: 96,
             decode_threads: 2,
+            prefill_chunk: 0,
         }
     }
 
@@ -606,7 +788,9 @@ mod tests {
 
     #[test]
     fn engine_decode_matches_reference_model() {
-        // Engine Fp16Exact must reproduce Gpt2::decode_step exactly
+        // Engine Fp16Exact must reproduce Gpt2::decode_step exactly —
+        // including its prefill, which now rides the fp16 kernel but
+        // performs the identical float ops in the identical order
         let cfg = tiny_cfg(AttentionBackend::Fp16Exact);
         let mut e = Engine::build(&cfg).unwrap();
         let ids = ByteTokenizer::new().encode("reference check");
@@ -630,32 +814,77 @@ mod tests {
     }
 
     #[test]
-    fn lookat_engine_tracks_fp16_closely() {
+    fn lookat_engine_decodes_deterministically() {
+        // prefill rides the ADC kernel now, so the lookat engine's
+        // whole trajectory (prefill included) is a pure function of
+        // (seed, prompt) — two builds must agree bit for bit
         let ids = ByteTokenizer::new().encode(
             "the quick brown fox jumps over the lazy dog again and again");
-        let mut fp = Engine::build(&tiny_cfg(AttentionBackend::Fp16Exact))
-            .unwrap();
-        fp.start_seq(1, &ids).unwrap();
-        let mut lk = Engine::build(&tiny_cfg(AttentionBackend::Lookat {
-            m: 4,
-            k: 64,
-        }))
-        .unwrap();
-        lk.start_seq(1, &ids).unwrap();
-        // same model weights (same seed) — only attention path differs
-        let t_fp: Vec<u32> = (0..6).map(|_| fp.decode_one(1).unwrap())
-            .collect();
-        let t_lk: Vec<u32> = (0..6).map(|_| lk.decode_one(1).unwrap())
-            .collect();
-        // greedy tokens may diverge eventually but the first token comes
-        // from an identical prefill hidden state
-        assert_eq!(t_fp[0], t_lk[0]);
-        let _ = (t_fp, t_lk);
+        let cfg = tiny_cfg(AttentionBackend::Lookat { m: 4, k: 64 });
+        let mut a = Engine::build(&cfg).unwrap();
+        a.start_seq(1, &ids).unwrap();
+        let t_a: Vec<u32> =
+            (0..6).map(|_| a.decode_one(1).unwrap()).collect();
+        let mut b = Engine::build(&cfg).unwrap();
+        b.start_seq(2, &ids).unwrap();
+        let t_b: Vec<u32> =
+            (0..6).map(|_| b.decode_one(2).unwrap()).collect();
+        assert_eq!(t_a, t_b);
     }
 
-    // batched-vs-serial bit-parity per backend lives in
-    // tests/decode_parity.rs (it needs full engine builds per backend;
-    // no point paying for them twice in CI)
+    // batched-vs-serial and chunked-vs-monolithic bit-parity per
+    // backend live in tests/decode_parity.rs (they need full engine
+    // builds per backend; no point paying for them twice in CI)
+
+    #[test]
+    fn mixed_tick_advances_decode_and_prefill_together() {
+        // one tick carrying a decode entry and a prefill chunk must
+        // advance both, and the interleaving must not change the
+        // decoding sequence's tokens
+        let cfg = tiny_cfg(AttentionBackend::Fp16Exact);
+        let tok = ByteTokenizer::new();
+        let ids_a = tok.encode("sequence that decodes");
+        let ids_b = tok.encode("sequence that prefills in chunks");
+
+        let mut alone = Engine::build(&cfg).unwrap();
+        alone.start_seq(1, &ids_a).unwrap();
+        let alone_toks: Vec<u32> =
+            (0..4).map(|_| alone.decode_one(1).unwrap()).collect();
+
+        let mut mixed = Engine::build(&cfg).unwrap();
+        mixed.start_seq(1, &ids_a).unwrap();
+        mixed.begin_seq(2).unwrap();
+        let mut toks = Vec::new();
+        let mut off = 0usize;
+        for _ in 0..4 {
+            let mut entries = vec![TickEntry::Decode(1)];
+            if off < ids_b.len() {
+                let end = (off + 4).min(ids_b.len());
+                entries.push(TickEntry::Prefill {
+                    seq: 2,
+                    tokens: &ids_b[off..end],
+                });
+                off = end;
+            }
+            let outs = mixed.step_batch(&entries).unwrap();
+            toks.push(outs[0].token.unwrap());
+            assert_eq!(outs[0].seq, 1);
+            if outs.len() > 1 {
+                assert!(outs[1].token.is_none());
+            }
+        }
+        assert_eq!(alone_toks, toks);
+        assert_eq!(mixed.seq_pos(2), Some(off));
+    }
+
+    #[test]
+    fn decode_before_prefill_is_an_error() {
+        let cfg = tiny_cfg(AttentionBackend::Fp16Exact);
+        let mut e = Engine::build(&cfg).unwrap();
+        e.begin_seq(1).unwrap();
+        let err = e.decode_batch(&[1]).unwrap_err().to_string();
+        assert!(err.contains("prefilling"), "{err}");
+    }
 
     #[test]
     fn admission_and_release_cycle() {
@@ -667,9 +896,11 @@ mod tests {
         assert_eq!(e.active_seqs(), 1);
         let _ = e.decode_one(5).unwrap();
         assert!(e.cache_stats().tokens > 0);
+        assert!(e.seq_blocks(5) >= 1);
         e.release(5).unwrap();
         assert_eq!(e.active_seqs(), 0);
         assert_eq!(e.cache_stats().tokens, 0);
+        assert_eq!(e.seq_blocks(5), 0);
     }
 
     #[test]
@@ -685,6 +916,24 @@ mod tests {
         // a short sequence still fits afterwards
         e.start_seq(2, &long[..16]).unwrap();
         assert_eq!(e.cache_stats().tokens, 16);
+    }
+
+    #[test]
+    fn out_of_blocks_is_downcastable_from_step_batch() {
+        // the scheduler's preemption trigger: a tick that outgrows the
+        // block budget surfaces a typed CacheError, not a stringly one
+        let mut cfg = tiny_cfg(AttentionBackend::Fp16Exact);
+        cfg.cache_blocks = 1;
+        let mut e = Engine::build(&cfg).unwrap();
+        e.begin_seq(1).unwrap();
+        let long: Vec<u32> = (0..40).map(|i| i as u32).collect();
+        let err = e
+            .step_batch(&[TickEntry::Prefill { seq: 1, tokens: &long }])
+            .unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<CacheError>(),
+            Some(&CacheError::OutOfBlocks)
+        );
     }
 
     #[test]
@@ -746,21 +995,21 @@ mod tests {
     }
 
     #[test]
-    fn value_backend_does_not_change_attention_weights_path() {
-        // same seed, same prompts: the first decoded token (prefill
-        // hidden state) must match between fp32 and pq value storage
+    fn value_pq_engine_is_deterministic_end_to_end() {
+        // values-as-codes now shape the prefill output too (the fused
+        // weighted decode serves prefill rows); the whole trajectory
+        // must still be a pure function of (seed, prompt)
         let ids = ByteTokenizer::new().encode("value invariance probe");
-        let base = tiny_cfg(AttentionBackend::Lookat { m: 4, k: 64 });
-        let mut fp = Engine::build(&base).unwrap();
-        fp.start_seq(1, &ids).unwrap();
-        let mut cfg = base.clone();
+        let mut cfg = tiny_cfg(AttentionBackend::Lookat { m: 4, k: 64 });
         cfg.value_backend = ValueBackend::Pq { m: 8, k: 64 };
-        let mut vq = Engine::build(&cfg).unwrap();
-        vq.start_seq(1, &ids).unwrap();
-        assert_eq!(
-            fp.decode_one(1).unwrap(),
-            vq.decode_one(1).unwrap(),
-            "first token comes from an identical prefill hidden state"
-        );
+        let mut a = Engine::build(&cfg).unwrap();
+        a.start_seq(1, &ids).unwrap();
+        let t_a: Vec<u32> =
+            (0..5).map(|_| a.decode_one(1).unwrap()).collect();
+        let mut b = Engine::build(&cfg).unwrap();
+        b.start_seq(7, &ids).unwrap();
+        let t_b: Vec<u32> =
+            (0..5).map(|_| b.decode_one(7).unwrap()).collect();
+        assert_eq!(t_a, t_b);
     }
 }

@@ -7,7 +7,8 @@
 //!   pluggable attention backend (FP16 exact, LOOKAT ADC, scalar-quant
 //!   baselines, or the PJRT-executed AOT artifacts) over the paged
 //!   [`crate::kvcache`]
-//! * [`batcher`] — continuous batching with cache-aware admission control
+//! * [`batcher`] — continuous batching with cache-aware admission
+//!   control, chunked prefill and preemptive scheduling
 //! * [`router`] — the front door: trace-driven serving loop, backpressure,
 //!   latency/throughput accounting
 //!
@@ -22,8 +23,11 @@ pub mod request;
 pub mod router;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherConfig};
-pub use engine::{AttentionBackend, Engine, EngineConfig, ValueBackend};
+pub use batcher::{Batcher, BatcherConfig, SchedulerPolicy};
+pub use engine::{
+    AttentionBackend, Engine, EngineConfig, TickEntry, TickOutcome,
+    ValueBackend,
+};
 pub use request::{CompletedRequest, Request, RequestState};
 pub use router::{Router, RouterConfig, ServingReport};
 pub use server::{Server, ServerConfig};

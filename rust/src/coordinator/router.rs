@@ -31,6 +31,8 @@ pub struct ServingReport {
     pub wall_s: f64,
     pub decode_tokens: usize,
     pub prefill_tokens: usize,
+    /// sequences evicted under block pressure (preemptive policy only)
+    pub preemptions: usize,
     pub key_cache_peak_bytes: usize,
     pub value_cache_peak_bytes: usize,
 }
@@ -62,6 +64,7 @@ impl ServingReport {
         o.set("wall_s", Json::Num(self.wall_s));
         o.set("decode_tokens", Json::Num(self.decode_tokens as f64));
         o.set("throughput_tok_s", Json::Num(self.throughput_tok_s()));
+        o.set("preemptions", Json::Num(self.preemptions as f64));
         if let Some(t) = self.ttft_summary() {
             o.set("ttft_p50_s", Json::Num(t.p50));
             o.set("ttft_p99_s", Json::Num(t.p99));
@@ -86,12 +89,14 @@ impl ServingReport {
         let ttft = self.ttft_summary();
         let e2e = self.e2e_summary();
         format!(
-            "backend={:<14} completed={:<4} rejected={:<3} wall={:>7.2}s \
-             decode_tok/s={:>8.1} ttft_p50={:>7.1}ms e2e_p50={:>7.1}ms \
-             key_cache_peak={:>8} B value_cache_peak={:>8} B",
+            "backend={:<14} completed={:<4} rejected={:<3} preempt={:<3} \
+             wall={:>7.2}s decode_tok/s={:>8.1} ttft_p50={:>7.1}ms \
+             e2e_p50={:>7.1}ms key_cache_peak={:>8} B \
+             value_cache_peak={:>8} B",
             self.backend,
             self.completed.len(),
             self.rejected,
+            self.preemptions,
             self.wall_s,
             self.throughput_tok_s(),
             ttft.as_ref().map_or(0.0, |t| t.p50 * 1e3),
@@ -195,6 +200,7 @@ impl Router {
             wall_s: t0.elapsed().as_secs_f64(),
             decode_tokens,
             prefill_tokens,
+            preemptions: std::mem::take(&mut self.batcher.preemptions),
             key_cache_peak_bytes: peak_key_bytes,
             value_cache_peak_bytes: peak_value_bytes,
         })
@@ -218,8 +224,13 @@ mod tests {
                 cache_blocks: 128,
                 calib_tokens: 64,
                 decode_threads: 2,
+                prefill_chunk: 0,
             },
-            batcher: BatcherConfig { max_batch: 4, max_queue: 64 },
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_queue: 64,
+                policy: crate::coordinator::SchedulerPolicy::Fcfs,
+            },
             max_prompt_tokens: 48,
         })
         .unwrap()
@@ -283,8 +294,13 @@ mod tests {
                 cache_blocks: 128,
                 calib_tokens: 64,
                 decode_threads: 2,
+                prefill_chunk: 0,
             },
-            batcher: BatcherConfig { max_batch: 4, max_queue: 64 },
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_queue: 64,
+                policy: crate::coordinator::SchedulerPolicy::Fcfs,
+            },
             max_prompt_tokens: 48,
         })
         .unwrap();
@@ -337,9 +353,46 @@ mod tests {
         let reqs = r.tokenize_trace(&small_trace(2));
         let report = r.serve_trace(reqs).unwrap();
         let j = report.to_json();
-        for k in ["backend", "completed", "wall_s", "throughput_tok_s"] {
+        for k in [
+            "backend",
+            "completed",
+            "wall_s",
+            "throughput_tok_s",
+            "preemptions",
+        ] {
             assert!(j.get(k).is_some(), "missing {k}");
         }
         assert!(!report.pretty().is_empty());
+    }
+
+    #[test]
+    fn preemptive_chunked_router_serves_oversubscribed_trace() {
+        // tiny block budget + chunked prefill + preemption: the trace
+        // still completes, nothing is rejected, and the report carries
+        // the preemption count
+        let mut r = Router::build(RouterConfig {
+            engine: EngineConfig {
+                model: ModelConfig::test_tiny(),
+                backend: AttentionBackend::Lookat { m: 4, k: 64 },
+                value_backend: ValueBackend::Fp32,
+                seed: 5,
+                cache_blocks: 4,
+                calib_tokens: 64,
+                decode_threads: 2,
+                prefill_chunk: 8,
+            },
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_queue: 64,
+                policy: crate::coordinator::SchedulerPolicy::Preempt,
+            },
+            max_prompt_tokens: 48,
+        })
+        .unwrap();
+        let reqs = r.tokenize_trace(&small_trace(6));
+        let report = r.serve_trace(reqs).unwrap();
+        assert_eq!(report.completed.len(), 6);
+        assert_eq!(report.rejected, 0);
+        assert!(report.to_json().get("preemptions").is_some());
     }
 }

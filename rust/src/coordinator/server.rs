@@ -301,8 +301,13 @@ mod tests {
                 cache_blocks: 64,
                 calib_tokens: 64,
                 decode_threads: 2,
+                prefill_chunk: 16,
             },
-            batcher: BatcherConfig { max_batch: 2, max_queue: 16 },
+            batcher: BatcherConfig {
+                max_batch: 2,
+                max_queue: 16,
+                policy: crate::coordinator::SchedulerPolicy::Preempt,
+            },
             max_prompt_tokens: 48,
             addr: "127.0.0.1:0".into(),
         })

@@ -329,6 +329,7 @@ impl EvalContext {
                     seq: 0,
                     head,
                     q: &sample.queries[head][t * d_k..(t + 1) * d_k],
+                    rows: 1,
                 })
                 .collect();
             let plan =

@@ -338,7 +338,22 @@ impl KvCache {
         Ok(())
     }
 
-    /// Drop a sequence and return its blocks to the pool.
+    /// Blocks currently held by one sequence — the preemptive
+    /// scheduler's victim-accounting signal (how much a preemption
+    /// would free).
+    pub fn seq_blocks(&self, seq: SeqId) -> Result<usize, CacheError> {
+        Ok(self
+            .seqs
+            .get(&seq)
+            .ok_or(CacheError::UnknownSeq(seq))?
+            .blocks
+            .len())
+    }
+
+    /// Drop a sequence and return its blocks to the pool. The storage
+    /// codecs are untouched: a preempted sequence's blocks can be freed
+    /// and later reallocated (code-level re-prefill) without any codec
+    /// teardown or retraining.
     pub fn free_seq(&mut self, seq: SeqId) -> Result<(), CacheError> {
         let st = self.seqs.remove(&seq).ok_or(CacheError::UnknownSeq(seq))?;
         for b in st.blocks {
@@ -802,6 +817,56 @@ mod tests {
         c.gather_keys_into(2, 0, &mut k).unwrap();
         let (k2_0, _) = token(2000);
         assert_eq!(&k[0..DK], &k2_0[0..DK]);
+    }
+
+    #[test]
+    fn seq_blocks_tracks_per_seq_allocation() {
+        let mut c =
+            KvCache::new(H, DK, 8, KeyStorage::Fp16, ValueStorage::Fp32);
+        c.create_seq(1).unwrap();
+        c.create_seq(2).unwrap();
+        assert_eq!(c.seq_blocks(1).unwrap(), 0);
+        let (k, v) = token(9);
+        for _ in 0..BLOCK_TOKENS + 1 {
+            c.append(1, &k, &v).unwrap();
+        }
+        c.append(2, &k, &v).unwrap();
+        assert_eq!(c.seq_blocks(1).unwrap(), 2);
+        assert_eq!(c.seq_blocks(2).unwrap(), 1);
+        assert!(matches!(
+            c.seq_blocks(99),
+            Err(CacheError::UnknownSeq(99))
+        ));
+        // free-and-reallocate keeps per-seq accounting consistent
+        c.free_seq(1).unwrap();
+        assert!(c.seq_blocks(1).is_err());
+        assert_eq!(c.stats().blocks_allocated, 1);
+    }
+
+    #[test]
+    fn free_and_reallocate_keeps_codecs_hot() {
+        // preemption contract: freeing a PQ sequence must not tear down
+        // the codecs — a re-admitted sequence re-encodes straight away
+        let mut c = KvCache::new(
+            H, DK, 4, pq_storage(4), pq_value_storage(4));
+        c.create_seq(1).unwrap();
+        let (k, v) = token(31);
+        for _ in 0..BLOCK_TOKENS {
+            c.append(1, &k, &v).unwrap();
+        }
+        let mut before = Vec::new();
+        c.gather_codes_into(1, 0, &mut before).unwrap();
+        c.free_seq(1).unwrap();
+        assert!(c.codecs().is_some(), "key codecs survive free_seq");
+        assert!(c.value_codecs().is_some(), "value codecs survive");
+        // re-admit: identical tokens re-encode to identical codes
+        c.create_seq(1).unwrap();
+        for _ in 0..BLOCK_TOKENS {
+            c.append(1, &k, &v).unwrap();
+        }
+        let mut after = Vec::new();
+        c.gather_codes_into(1, 0, &mut after).unwrap();
+        assert_eq!(before, after);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 use lookat::coordinator::{
     AttentionBackend, BatcherConfig, EngineConfig, Router, RouterConfig,
-    ValueBackend,
+    SchedulerPolicy, ValueBackend,
 };
 use lookat::model::ModelConfig;
 use lookat::util::cli::Cli;
@@ -70,6 +70,16 @@ fn validate_m(m: usize, flag: &str) -> anyhow::Result<usize> {
     Ok(m)
 }
 
+fn parse_scheduler(s: &str) -> anyhow::Result<SchedulerPolicy> {
+    Ok(match s {
+        "fcfs" => SchedulerPolicy::Fcfs,
+        "preempt" => SchedulerPolicy::Preempt,
+        other => anyhow::bail!(
+            "unknown scheduler '{other}' (fcfs, preempt)"
+        ),
+    })
+}
+
 fn parse_value_backend(s: &str) -> anyhow::Result<ValueBackend> {
     Ok(match s {
         "fp32" => ValueBackend::Fp32,
@@ -116,11 +126,16 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 .opt("gen-tokens", "16", "max new tokens per request")
                 .opt("layers", "2", "model depth")
                 .opt("threads", "0", "decode worker threads (0 = auto)")
+                .opt("prefill-chunk", "0",
+                     "prefill chunk tokens (0 = monolithic)")
+                .opt("scheduler", "fcfs",
+                     "fcfs|preempt (preempt evicts under block pressure)")
                 .opt("seed", "7", "rng seed");
             let a = cli.parse(&args[1..])?;
             let backend = parse_backend(a.get("backend"))?;
             let value_backend =
                 parse_value_backend(a.get("value-backend"))?;
+            let policy = parse_scheduler(a.get("scheduler"))?;
             let mut model = ModelConfig::gpt2_layer0();
             model.n_layer = a.get_usize("layers")?;
             let mut router = Router::build(RouterConfig {
@@ -132,10 +147,12 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     cache_blocks: 512,
                     calib_tokens: 256,
                     decode_threads: a.get_usize("threads")?,
+                    prefill_chunk: a.get_usize("prefill-chunk")?,
                 },
                 batcher: BatcherConfig {
                     max_batch: a.get_usize("max-batch")?,
                     max_queue: 256,
+                    policy,
                 },
                 max_prompt_tokens: 120,
             })?;
@@ -161,11 +178,16 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 .opt("max-batch", "4", "max concurrent sequences")
                 .opt("layers", "2", "model depth")
                 .opt("threads", "0", "decode worker threads (0 = auto)")
+                .opt("prefill-chunk", "0",
+                     "prefill chunk tokens (0 = monolithic)")
+                .opt("scheduler", "fcfs",
+                     "fcfs|preempt (preempt evicts under block pressure)")
                 .opt("seed", "7", "rng seed");
             let a = cli.parse(&args[1..])?;
             let backend = parse_backend(a.get("backend"))?;
             let value_backend =
                 parse_value_backend(a.get("value-backend"))?;
+            let policy = parse_scheduler(a.get("scheduler"))?;
             let mut model = ModelConfig::gpt2_layer0();
             model.n_layer = a.get_usize("layers")?;
             let server = lookat::coordinator::Server::start(
@@ -178,10 +200,12 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                         cache_blocks: 512,
                         calib_tokens: 256,
                         decode_threads: a.get_usize("threads")?,
+                        prefill_chunk: a.get_usize("prefill-chunk")?,
                     },
                     batcher: BatcherConfig {
                         max_batch: a.get_usize("max-batch")?,
                         max_queue: 256,
+                        policy,
                     },
                     max_prompt_tokens: 120,
                     addr: a.get("addr").to_string(),
@@ -273,8 +297,9 @@ USAGE:
   lookat experiment <id> [--quick]   regenerate table1..4 / figure3 /
                                      figure4 / efficiency / all
   lookat serve [--backend B] [--value-backend V] [--requests N]
-               [--rate R]
+               [--rate R] [--prefill-chunk T] [--scheduler fcfs|preempt]
   lookat serve-tcp [--backend B] [--value-backend V] [--addr HOST:PORT]
+                   [--prefill-chunk T] [--scheduler fcfs|preempt]
   lookat bench-check --old PREV.json --new CUR.json [--max-regress F]
   lookat info"
     );

@@ -22,6 +22,7 @@ fn paper_cfg(backend: AttentionBackend) -> EngineConfig {
         cache_blocks: 64,
         calib_tokens: 128,
         decode_threads: 0,
+        prefill_chunk: 0,
     }
 }
 
@@ -88,9 +89,17 @@ fn tiny_batcher(max_batch: usize) -> Batcher {
         cache_blocks: 64,
         calib_tokens: 48,
         decode_threads: 2,
+        prefill_chunk: 0,
     })
     .unwrap();
-    Batcher::new(engine, BatcherConfig { max_batch, max_queue: 32 })
+    Batcher::new(
+        engine,
+        BatcherConfig {
+            max_batch,
+            max_queue: 32,
+            policy: lookat::coordinator::SchedulerPolicy::Fcfs,
+        },
+    )
 }
 
 fn req(id: u64, gen: usize) -> Request {

@@ -1,11 +1,16 @@
 //! Batched-decode parity + KV-cache block lifecycle (the PR-2
-//! acceptance suite): dropping a sequence returns its blocks, the
-//! allocator budget is re-admittable to exhaustion, and a decode batch
-//! of N is bit-identical to N serial batch-of-one decodes on every
-//! backend (PJRT backends run when artifacts are built).
+//! acceptance suite, extended by the chunked-prefill/preemption PR):
+//! dropping a sequence returns its blocks, the allocator budget is
+//! re-admittable to exhaustion, a decode batch of N is bit-identical to
+//! N serial batch-of-one decodes on every backend, chunked prefill is
+//! bit-identical to monolithic prefill on every key × value backend
+//! combination, and a preempt → re-admit round trip reproduces the
+//! uninterrupted run's tokens exactly (PJRT backends run when artifacts
+//! are built).
 
 use lookat::coordinator::{
-    AttentionBackend, Engine, EngineConfig, ValueBackend,
+    AttentionBackend, Batcher, BatcherConfig, Engine, EngineConfig,
+    Request, SchedulerPolicy, TickEntry, ValueBackend,
 };
 use lookat::kvcache::{
     CacheError, KeyStorage, KvCache, ValueStorage, BLOCK_TOKENS,
@@ -34,6 +39,7 @@ fn tiny_cfg_kv(
         cache_blocks: 48,
         calib_tokens: 96,
         decode_threads: threads,
+        prefill_chunk: 0,
     }
 }
 
@@ -46,6 +52,23 @@ fn paper_cfg(backend: AttentionBackend, threads: usize) -> EngineConfig {
         cache_blocks: 64,
         calib_tokens: 128,
         decode_threads: threads,
+        prefill_chunk: 0,
+    }
+}
+
+/// Feed a prompt to a fresh sequence in chunks of `chunk` tokens
+/// through the mixed-tick path (what the scheduler does).
+fn prefill_chunked(e: &mut Engine, id: u64, prompt: &[u32], chunk: usize) {
+    e.begin_seq(id).unwrap();
+    let mut off = 0;
+    while off < prompt.len() {
+        let end = (off + chunk).min(prompt.len());
+        e.step_batch(&[TickEntry::Prefill {
+            seq: id,
+            tokens: &prompt[off..end],
+        }])
+        .unwrap();
+        off = end;
     }
 }
 
@@ -208,6 +231,166 @@ fn value_pq_cache_frees_like_fp32() {
     e.decode_one(2).unwrap();
 }
 
+// ---- chunked prefill vs monolithic -------------------------------------
+
+#[test]
+fn chunked_prefill_bit_identical_every_key_value_backend_combo() {
+    // prefill rides the backend kernel as causal spans, so a span row's
+    // result depends only on (query row, cache prefix) — any chunking
+    // of the same prompt must produce bit-identical decode trajectories
+    let tok = ByteTokenizer::new();
+    let ids = tok.encode(
+        "chunked prefill parity prompt, long enough to spill across \
+         cache blocks and then some more",
+    );
+    assert!(ids.len() > BLOCK_TOKENS, "prompt must span blocks");
+    let key_backends = [
+        AttentionBackend::Fp16Exact,
+        AttentionBackend::Lookat { m: 4, k: 64 },
+        AttentionBackend::Lookat { m: 2, k: 64 },
+        AttentionBackend::ScalarQuant { bits: 8 },
+        AttentionBackend::ScalarQuant { bits: 4 },
+    ];
+    let value_backends = [
+        ValueBackend::Fp32,
+        ValueBackend::Pq { m: 4, k: 64 },
+    ];
+    for backend in key_backends {
+        for vb in &value_backends {
+            let cfg = tiny_cfg_kv(backend.clone(), vb.clone(), 2);
+            let mut mono = Engine::build(&cfg).unwrap();
+            mono.start_seq(1, &ids).unwrap();
+            let mono_toks: Vec<u32> =
+                (0..4).map(|_| mono.decode_one(1).unwrap()).collect();
+            for chunk in [1usize, 7] {
+                let mut ch = Engine::build(&cfg).unwrap();
+                prefill_chunked(&mut ch, 1, &ids, chunk);
+                let ch_toks: Vec<u32> = (0..4)
+                    .map(|_| ch.decode_one(1).unwrap())
+                    .collect();
+                assert_eq!(
+                    mono_toks, ch_toks,
+                    "{backend:?} + {vb:?} diverged at chunk={chunk}"
+                );
+            }
+        }
+    }
+}
+
+// ---- preemption round trip ---------------------------------------------
+
+fn preempt_requests(n: u64, gen: usize) -> Vec<Request> {
+    let tok = ByteTokenizer::new();
+    let prompts = [
+        "preemption parity prompt number one",
+        "a different second preemption prompt",
+        "third prompt, somewhat longer, to vary block usage a bit",
+        "and the fourth one",
+    ];
+    (0..n)
+        .map(|i| Request {
+            id: i,
+            prompt: tok.encode(prompts[i as usize % prompts.len()]),
+            max_new_tokens: gen,
+            // staggered arrivals: preemption victims are well-defined
+            arrival_s: i as f64 * 0.001,
+        })
+        .collect()
+}
+
+fn drain_batcher(b: &mut Batcher) {
+    let mut now = 0.0;
+    let mut iters = 0;
+    while !b.idle() {
+        b.admit(now);
+        b.step(now).unwrap();
+        let s = b.engine().cache_stats();
+        assert!(
+            s.blocks_allocated <= s.blocks_total,
+            "block budget exceeded"
+        );
+        now += 0.01;
+        iters += 1;
+        assert!(iters < 4000, "batcher failed to drain");
+    }
+}
+
+#[test]
+fn preempt_readmit_roundtrip_produces_identical_tokens() {
+    // an oversubscribed preemptive run must emit exactly the tokens of
+    // a roomy no-preemption run: re-prefill from codes reproduces the
+    // evicted sequence's decode states bit for bit
+    let mk = |blocks: usize, policy: SchedulerPolicy| {
+        let mut cfg =
+            tiny_cfg(AttentionBackend::Lookat { m: 4, k: 64 }, 2);
+        cfg.cache_blocks = blocks;
+        cfg.prefill_chunk = 8;
+        let engine = Engine::build(&cfg).unwrap();
+        Batcher::new(
+            engine,
+            BatcherConfig { max_batch: 4, max_queue: 32, policy },
+        )
+    };
+
+    let mut roomy = mk(64, SchedulerPolicy::Fcfs);
+    for r in preempt_requests(4, 40) {
+        assert!(roomy.submit(r));
+    }
+    drain_batcher(&mut roomy);
+
+    // 5 blocks: four ~(36 prompt + 40 gen)-token sequences need 3
+    // blocks each at peak — far over budget, so eviction must kick in
+    let mut tight = mk(5, SchedulerPolicy::Preempt);
+    for r in preempt_requests(4, 40) {
+        assert!(tight.submit(r));
+    }
+    drain_batcher(&mut tight);
+
+    assert!(
+        tight.preemptions > 0,
+        "scenario must actually exercise preemption"
+    );
+    assert_eq!(tight.completed.len(), 4);
+    assert!(tight.rejected.is_empty(), "no admitted request dropped");
+
+    let by_id = |b: &Batcher| {
+        let mut v: Vec<(u64, Vec<u32>)> = b
+            .completed
+            .iter()
+            .map(|c| (c.id, c.generated.clone()))
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(by_id(&roomy), by_id(&tight));
+}
+
+#[test]
+fn oversubscription_no_longer_rejects_admitted_requests() {
+    // under the preemptive policy, admission charges only the chunk in
+    // flight: demand far beyond the block budget queues and cycles
+    // instead of erroring with OutOfBlocks
+    let mut cfg = tiny_cfg(AttentionBackend::Fp16Exact, 2);
+    cfg.cache_blocks = 4;
+    cfg.prefill_chunk = 8;
+    let engine = Engine::build(&cfg).unwrap();
+    let mut b = Batcher::new(
+        engine,
+        BatcherConfig {
+            max_batch: 6,
+            max_queue: 64,
+            policy: SchedulerPolicy::Preempt,
+        },
+    );
+    for r in preempt_requests(8, 30) {
+        assert!(b.submit(r));
+    }
+    drain_batcher(&mut b);
+    assert_eq!(b.completed.len(), 8, "every request completes");
+    assert!(b.rejected.is_empty());
+    assert_eq!(b.engine().cache_stats().tokens, 0, "cache drained");
+}
+
 #[test]
 fn batched_decode_bit_identical_pjrt_backends() {
     if !artifacts_built() {
@@ -223,6 +406,30 @@ fn batched_decode_bit_identical_pjrt_backends() {
         let mut batched =
             Engine::build(&paper_cfg(backend, 2)).unwrap();
         assert_batched_matches_serial(&mut serial, &mut batched, 2, 3);
+    }
+}
+
+#[test]
+fn chunked_prefill_bit_identical_pjrt_backends() {
+    if !artifacts_built() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let ids = ByteTokenizer::new().encode("pjrt chunked prefill parity");
+    for backend in [
+        AttentionBackend::PjrtFp16,
+        AttentionBackend::PjrtLookat { m: 4 },
+    ] {
+        let cfg = paper_cfg(backend.clone(), 1);
+        let mut mono = Engine::build(&cfg).unwrap();
+        mono.start_seq(1, &ids).unwrap();
+        let mono_toks: Vec<u32> =
+            (0..2).map(|_| mono.decode_one(1).unwrap()).collect();
+        let mut ch = Engine::build(&cfg).unwrap();
+        prefill_chunked(&mut ch, 1, &ids, 7);
+        let ch_toks: Vec<u32> =
+            (0..2).map(|_| ch.decode_one(1).unwrap()).collect();
+        assert_eq!(mono_toks, ch_toks, "{backend:?}");
     }
 }
 

@@ -284,7 +284,7 @@ fn combined_64x_key_value_pq_serving_path() {
 
             // fused serving decode == §5.2 primitive, bit for bit —
             // and it never touched a raw value
-            let items = vec![WorkItem { seq: 0, head: 0, q }];
+            let items = vec![WorkItem { seq: 0, head: 0, q, rows: 1 }];
             let plan = DecodePlan {
                 cache: &cache,
                 d_k: D_K,
