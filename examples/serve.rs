@@ -36,6 +36,7 @@ fn run_backend_kv(
             calib_tokens: 256,
             decode_threads: 0,
             prefill_chunk: 0,
+            pipeline: true,
         },
         batcher: BatcherConfig {
             max_batch: 4,

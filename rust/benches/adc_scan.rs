@@ -1,0 +1,128 @@
+//! ADC scan micro-bench: the fast-scan (subspace-major lane) kernel vs
+//! the token-major flat kernel, per subspace count.
+//!
+//!   cargo bench --bench adc_scan
+//!
+//! Measures raw scan throughput (GB/s of code bytes streamed, and
+//! scored tokens/s) for every unrolled `m` specialization plus the
+//! generic path, in both layouts over the same codes. Lanes are built
+//! at [`BLOCK_TOKENS`]-token groups — exactly the paged cache's block
+//! shape — so the figures are the serving hot path's, not a synthetic
+//! best case. Two artifacts are written:
+//!
+//! * `artifacts/reports/adc_scan.json` — full measurements
+//! * `<repo root>/BENCH_adc.json` — the machine-readable perf
+//!   trajectory CI uploads next to `BENCH_serving.json`; its `results`
+//!   entries carry `scan_gb_s` / `scan_tok_s` metrics, which `lookat
+//!   bench-check` discovers and gates alongside the serving figures
+
+use lookat::kvcache::BLOCK_TOKENS;
+use lookat::pq::{Codebook, LookupTable};
+use lookat::testkit::fixtures::interleave_lanes;
+use lookat::util::bench::{black_box, Bench};
+use lookat::util::json::Json;
+use lookat::util::rng::Pcg32;
+
+/// Tokens scanned per iteration (128 cache blocks' worth).
+const N_TOKENS: usize = 128 * BLOCK_TOKENS;
+const D_K: usize = 64;
+const K: usize = 256;
+
+/// Random codebook + codes: scan cost does not depend on centroid
+/// values, so no k-means training is needed for a scan bench.
+fn setup(m: usize) -> (LookupTable, Vec<u8>) {
+    let mut rng = Pcg32::seed(0xADC + m as u64);
+    let d_sub = D_K / m;
+    let centroids: Vec<Vec<f32>> = (0..m)
+        .map(|_| (0..K * d_sub).map(|_| rng.next_f32_std()).collect())
+        .collect();
+    let cb = Codebook::new(m, K, d_sub, centroids);
+    let query: Vec<f32> = (0..D_K).map(|_| rng.next_f32_std()).collect();
+    let lut = LookupTable::build(&query, &cb);
+    let codes: Vec<u8> =
+        (0..N_TOKENS * m).map(|_| rng.next_bounded(K as u32) as u8).collect();
+    (lut, codes)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut results = Vec::new();
+    let mut bench = Bench::new();
+    // 32 exercises the generic (non-unrolled) kernel
+    for m in [2usize, 4, 8, 16, 32] {
+        let (lut, codes) = setup(m);
+        let lanes = interleave_lanes(&codes, m, BLOCK_TOKENS);
+        let bytes = (N_TOKENS * m) as f64;
+
+        let mut out = vec![0.0f32; N_TOKENS];
+        let flat = bench
+            .run_throughput(
+                &format!("adc_scan/flat/m{m}"),
+                N_TOKENS as f64,
+                bytes,
+                || {
+                    lut.scores_into(&codes, N_TOKENS, &mut out);
+                    black_box(out[N_TOKENS - 1]);
+                },
+            )
+            .clone();
+
+        let mut lane_out = Vec::with_capacity(N_TOKENS);
+        let grouped = bench
+            .run_throughput(
+                &format!("adc_scan/lanes/m{m}"),
+                N_TOKENS as f64,
+                bytes,
+                || {
+                    lane_out.clear();
+                    lut.scores_lanes(
+                        lanes.iter().map(|(l, n)| (&l[..], *n)),
+                        &mut lane_out,
+                    );
+                    black_box(lane_out[N_TOKENS - 1]);
+                },
+            )
+            .clone();
+
+        for (layout, meas) in [("flat", &flat), ("lanes", &grouped)] {
+            let mut o = Json::obj();
+            o.set("backend", Json::Str(format!("adc-m{m}-{layout}")));
+            o.set("m", Json::Num(m as f64));
+            o.set("layout", Json::Str(layout.to_string()));
+            o.set(
+                "scan_tok_s",
+                Json::Num(meas.throughput_items_per_s().unwrap_or(0.0)),
+            );
+            o.set(
+                "scan_gb_s",
+                Json::Num(meas.throughput_gb_per_s().unwrap_or(0.0)),
+            );
+            o.set("median_s", Json::Num(meas.median_s));
+            results.push(o);
+        }
+        println!(
+            "m={m:<3} lanes/flat speedup: {:.2}x",
+            flat.median_s / grouped.median_s.max(1e-12)
+        );
+    }
+
+    let mut top = Json::obj();
+    top.set("bench", Json::Str("adc_scan".into()));
+    top.set("tokens_per_iter", Json::Num(N_TOKENS as f64));
+    top.set("group_tokens", Json::Num(BLOCK_TOKENS as f64));
+    top.set("results", Json::Arr(results));
+
+    let dir = lookat::experiments::report::reports_dir();
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join("adc_scan.json"), top.to_string_pretty())?;
+
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .join("BENCH_adc.json");
+    std::fs::write(&root, top.to_string_pretty())?;
+    println!(
+        "\n[bench] adc_scan written to artifacts/reports/ and {}",
+        root.display()
+    );
+    Ok(())
+}

@@ -12,10 +12,11 @@
 //!
 //! * `artifacts/reports/serving_throughput.json` — full per-run reports
 //! * `<repo root>/BENCH_serving.json` — the machine-readable perf
-//!   trajectory CI uploads (tokens/s per backend per batch width, plus
-//!   the batch-16-vs-1 speedup, plus the scheduler scenarios: the
-//!   oversubscribed long-prompt interference run under fcfs-monolithic
-//!   vs preempt + chunked prefill)
+//!   trajectory CI uploads (tokens/s per backend per batch width with
+//!   per-phase breakdowns, the batch-16-vs-1 speedup, and the
+//!   scenarios: the oversubscribed long-prompt interference run under
+//!   fcfs-monolithic vs preempt + chunked prefill, and the 12-layer
+//!   `--pipeline on|off` A/B of the software-pipelined layer executor)
 
 use lookat::coordinator::{
     AttentionBackend, BatcherConfig, EngineConfig, Router, RouterConfig,
@@ -58,6 +59,7 @@ fn bench_backend(
             calib_tokens: 192,
             decode_threads: 0,
             prefill_chunk: 0,
+            pipeline: true,
         },
         batcher: BatcherConfig {
             max_batch: 1,
@@ -132,6 +134,7 @@ fn scheduler_scenarios() -> anyhow::Result<Json> {
                 calib_tokens: 192,
                 decode_threads: 0,
                 prefill_chunk: chunk,
+                pipeline: true,
             },
             batcher: BatcherConfig {
                 max_batch: 16,
@@ -214,6 +217,80 @@ fn scheduler_scenarios() -> anyhow::Result<Json> {
     Ok(o)
 }
 
+/// The layer-pipeline scenario: gpt2_small depth (12 layers) decoding
+/// a steady batch, `--pipeline on` vs `--pipeline off`. Deep models
+/// are where the software-pipelined executor earns its keep — each
+/// tick crosses the layer loop 12 times, so overlapping one group's
+/// attention/MLP with the other group's QKV and appends compounds.
+/// Outputs are bit-identical between the two runs (asserted in
+/// tests/decode_parity.rs); this records the throughput delta.
+fn pipeline_scenario() -> anyhow::Result<Json> {
+    let build = |pipeline: bool| {
+        let mut model = ModelConfig::gpt2_layer0();
+        model.n_layer = 12; // gpt2_small depth
+        Router::build(RouterConfig {
+            engine: EngineConfig {
+                model,
+                backend: AttentionBackend::Lookat { m: 4, k: 256 },
+                value_backend: ValueBackend::Fp32,
+                seed: 77,
+                cache_blocks: 256,
+                calib_tokens: 128,
+                decode_threads: 0,
+                prefill_chunk: 0,
+                pipeline,
+            },
+            batcher: BatcherConfig {
+                max_batch: 16,
+                max_queue: 64,
+                policy: SchedulerPolicy::Fcfs,
+            },
+            max_prompt_tokens: 48,
+        })
+    };
+    let trace = || {
+        TraceGenerator::new(TraceConfig {
+            rate: 1000.0,
+            num_requests: 16,
+            prompt_chars: (10, 30),
+            gen_tokens: (12, 16),
+            seed: 6160,
+        })
+        .generate()
+    };
+
+    let mut off_router = build(false)?;
+    let reqs = off_router.tokenize_trace(&trace());
+    let off = off_router.serve_trace(reqs)?;
+    println!("scenario pipeline-off    {}", off.pretty());
+    drop(off_router);
+
+    let mut on_router = build(true)?;
+    let reqs = on_router.tokenize_trace(&trace());
+    let on = on_router.serve_trace(reqs)?;
+    println!("scenario pipeline-on     {}", on.pretty());
+
+    let speedup =
+        on.throughput_tok_s() / off.throughput_tok_s().max(1e-12);
+    println!(
+        "scenario layer_pipeline: 12-layer decode tok/s {:.1} -> {:.1} \
+         ({speedup:.2}x with --pipeline on)",
+        off.throughput_tok_s(),
+        on.throughput_tok_s()
+    );
+
+    let mut o = Json::obj();
+    o.set("scenario", Json::Str("layer_pipeline_12l".into()));
+    o.set("batch", Json::Num(16.0));
+    o.set("layers", Json::Num(12.0));
+    o.set("pipeline_off_tok_s", Json::Num(off.throughput_tok_s()));
+    o.set("pipeline_on_tok_s", Json::Num(on.throughput_tok_s()));
+    o.set("pipeline_speedup", Json::Num(speedup));
+    o.set("pipeline_off_phases", off.phases.to_json());
+    o.set("pipeline_on_phases", on.phases.to_json());
+    Ok(o)
+}
+
 fn main() -> anyhow::Result<()> {
     let combos = [
         // the pre-existing key-backend sweep (fp32 values)
@@ -243,10 +320,11 @@ fn main() -> anyhow::Result<()> {
         results.push(bench_backend(b, vb)?);
     }
     let scenarios = scheduler_scenarios()?;
+    let pipeline = pipeline_scenario()?;
 
     let mut top = Json::obj();
     top.set("bench", Json::Str("serving_throughput".into()));
-    top.set("scenarios", Json::Arr(vec![scenarios]));
+    top.set("scenarios", Json::Arr(vec![scenarios, pipeline]));
     top.set(
         "batch_sizes",
         Json::Arr(BATCH_SIZES.iter().map(|&b| Json::Num(b as f64)).collect()),

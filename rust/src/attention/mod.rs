@@ -107,7 +107,9 @@ pub fn scalar_quant_attention(
 
 /// Shared tail: scale by 1/√d_k, softmax, α·V. Takes the scores buffer
 /// by value and moves it into [`AttnOutput::weights`] — the hot path
-/// allocates no copy of the distribution.
+/// allocates no copy of the distribution, and the context buffer is
+/// leased from the thread pool's scratch arena so the serving loop can
+/// recycle it once consumed.
 pub(crate) fn finish_attention(
     mut scores: Vec<f32>,
     values: &[f32],
@@ -119,7 +121,7 @@ pub(crate) fn finish_attention(
     }
     softmax_inplace(&mut scores);
     let n = scores.len();
-    let mut out = vec![0.0f32; d_k];
+    let mut out = crate::util::threadpool::scratch().take_f32(d_k);
     for l in 0..n {
         let a = scores[l];
         if a > 0.0 {
@@ -148,7 +150,7 @@ pub fn finish_attention_blocks<'a>(
         *s *= inv;
     }
     softmax_inplace(&mut scores);
-    let mut out = vec![0.0f32; d_k];
+    let mut out = crate::util::threadpool::scratch().take_f32(d_k);
     let mut l = 0usize;
     'blocks: for blk in blocks {
         for t in 0..blk.len {
@@ -170,15 +172,16 @@ pub fn finish_attention_blocks<'a>(
 /// Fully-fused block-resident attention tail for PQ-coded values (the
 /// §5.2 extension in the serving path): softmax the raw scores, then
 /// scatter-accumulate the post-softmax weights into per-subspace (K,)
-/// tables while streaming the cache's value-code blocks, finishing with
-/// one m × K × d_sub centroid matvec
-/// ([`crate::pq::values::weighted_decode_blocks`]). Values are never
+/// tables while streaming the cache's subspace-major value-code lanes,
+/// finishing with one m × K × d_sub centroid matvec
+/// ([`crate::pq::values::weighted_decode_lanes`]). Values are never
 /// dequantized per token and never gathered — zero per-step value
-/// copies. Token order matches the flat path, so the output is
-/// bit-identical to [`lookat_kv_attention`] over the gathered codes.
-/// Like [`finish_attention_blocks`], the code stream may extend past
-/// `scores.len()` tokens (a prefill span row's causal prefix); excess
-/// tokens are truncated before the weighted decode.
+/// copies. Per-cell accumulation order matches the flat path, so the
+/// output is bit-identical to [`lookat_kv_attention`] over the
+/// gathered codes. Like [`finish_attention_blocks`], the lane stream
+/// may extend past `scores.len()` tokens (a prefill span row's causal
+/// prefix); excess tokens are truncated by shrinking each lane's
+/// claimed length.
 pub fn finish_attention_kv_blocks<'a>(
     mut scores: Vec<f32>,
     blocks: impl Iterator<Item = BlockView<'a>>,
@@ -190,17 +193,16 @@ pub fn finish_attention_kv_blocks<'a>(
         *s *= inv;
     }
     softmax_inplace(&mut scores);
-    let m_v = value_codec.codebook.m;
     let mut left = scores.len();
-    let out = crate::pq::values::weighted_decode_blocks(
+    let out = crate::pq::values::weighted_decode_lanes(
         &scores,
-        blocks.map(|b| b.value_codes).filter_map(move |c| {
+        blocks.filter_map(move |b| {
             if left == 0 {
                 return None;
             }
-            let take = (c.len() / m_v).min(left);
+            let take = b.len.min(left);
             left -= take;
-            Some(&c[..take * m_v])
+            Some((b.value_codes, take))
         }),
         value_codec,
     );
@@ -383,12 +385,15 @@ mod tests {
         let lut = LookupTable::build(&q, &kc.codebook);
         let scores = lut.scores(&key_codes, n);
         for bt in [32usize, 48, 7] {
-            let views = value_codes.chunks(bt * 4).map(|c| BlockView {
-                len: c.len() / 4,
+            // blocks expose subspace-major value-code lanes
+            let lanes = crate::testkit::fixtures::interleave_lanes(
+                &value_codes, 4, bt);
+            let views = lanes.iter().map(|(lane, len)| BlockView {
+                len: *len,
                 keys: &[],
                 codes: &[],
                 values: &[],
-                value_codes: c,
+                value_codes: &lane[..],
             });
             let got = finish_attention_kv_blocks(
                 scores.clone(), views, &vc, d_k);

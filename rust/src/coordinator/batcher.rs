@@ -405,6 +405,7 @@ mod tests {
             calib_tokens: 64,
             decode_threads: 2,
             prefill_chunk,
+            pipeline: true,
         })
         .unwrap();
         Batcher::new(
@@ -475,6 +476,7 @@ mod tests {
             calib_tokens: 64,
             decode_threads: 2,
             prefill_chunk: 0,
+            pipeline: true,
         })
         .unwrap();
         let mut b = Batcher::new(

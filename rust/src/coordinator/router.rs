@@ -10,6 +10,7 @@ use super::request::{CompletedRequest, Request};
 use crate::model::ByteTokenizer;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
+use crate::util::timing::PhaseTimes;
 use crate::workload::RequestSpec;
 
 /// Router construction parameters.
@@ -35,6 +36,11 @@ pub struct ServingReport {
     pub preemptions: usize,
     pub key_cache_peak_bytes: usize,
     pub value_cache_peak_bytes: usize,
+    /// per-phase time breakdown of the run (`lut_build`, `scan`,
+    /// `value_decode`, `qkv`, `mlp`); phase sums count every worker
+    /// thread and overlapped pipeline stage, so they may exceed
+    /// `wall_s`
+    pub phases: PhaseTimes,
 }
 
 impl ServingReport {
@@ -81,6 +87,7 @@ impl ServingReport {
             "value_cache_peak_bytes",
             Json::Num(self.value_cache_peak_bytes as f64),
         );
+        o.set("phases", self.phases.to_json());
         o
     }
 
@@ -163,6 +170,10 @@ impl Router {
         let mut peak_key_bytes = 0usize;
         let mut peak_value_bytes = 0usize;
 
+        // fresh phase window for this run (a reused router must not
+        // carry an earlier run's breakdown)
+        let _ = self.batcher.engine().take_phase_times();
+
         while !(pending.is_empty() && self.batcher.idle()) {
             let now = t0.elapsed().as_secs_f64();
             // deliver arrived requests
@@ -203,6 +214,7 @@ impl Router {
             preemptions: std::mem::take(&mut self.batcher.preemptions),
             key_cache_peak_bytes: peak_key_bytes,
             value_cache_peak_bytes: peak_value_bytes,
+            phases: self.batcher.engine().take_phase_times(),
         })
     }
 }
@@ -225,6 +237,7 @@ mod tests {
                 calib_tokens: 64,
                 decode_threads: 2,
                 prefill_chunk: 0,
+                pipeline: true,
             },
             batcher: BatcherConfig {
                 max_batch: 4,
@@ -295,6 +308,7 @@ mod tests {
                 calib_tokens: 64,
                 decode_threads: 2,
                 prefill_chunk: 0,
+                pipeline: true,
             },
             batcher: BatcherConfig {
                 max_batch: 4,
@@ -359,9 +373,19 @@ mod tests {
             "wall_s",
             "throughput_tok_s",
             "preemptions",
+            "phases",
         ] {
             assert!(j.get(k).is_some(), "missing {k}");
         }
+        let phases = j.get("phases").unwrap();
+        for k in
+            ["lut_build_s", "scan_s", "value_decode_s", "qkv_s", "mlp_s"]
+        {
+            assert!(phases.get(k).is_some(), "missing phase {k}");
+        }
+        // a served run booked real compute into the breakdown
+        assert!(report.phases.qkv_s > 0.0, "qkv phase empty");
+        assert!(report.phases.mlp_s > 0.0, "mlp phase empty");
         assert!(!report.pretty().is_empty());
     }
 
@@ -380,6 +404,7 @@ mod tests {
                 calib_tokens: 64,
                 decode_threads: 2,
                 prefill_chunk: 8,
+                pipeline: true,
             },
             batcher: BatcherConfig {
                 max_batch: 4,

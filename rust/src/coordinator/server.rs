@@ -302,6 +302,7 @@ mod tests {
                 calib_tokens: 64,
                 decode_threads: 2,
                 prefill_chunk: 16,
+                pipeline: true,
             },
             batcher: BatcherConfig {
                 max_batch: 2,

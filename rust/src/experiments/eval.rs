@@ -333,7 +333,13 @@ impl EvalContext {
                 })
                 .collect();
             let plan =
-                DecodePlan { cache: &cache, d_k, threads: 1, items };
+                DecodePlan {
+                    cache: &cache,
+                    d_k,
+                    threads: 1,
+                    timers: None,
+                    items,
+                };
             let outs =
                 kernel.decode_batch(&plan).expect("lookat-kv decode");
             for head in 0..h {

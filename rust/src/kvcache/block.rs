@@ -11,6 +11,16 @@ pub type BlockId = u32;
 /// the sequence's tokens were appended. Produced by `KvCache::blocks`;
 /// the batched decode kernels scan these in place instead of gathering
 /// the paged cache into contiguous scratch.
+///
+/// Code lanes are **subspace-major** (the vector-database "fast scan"
+/// layout): a lane is the full `(m × BLOCK_TOKENS)` row-major matrix
+/// of the block — row `i` holds subspace `i`'s codes for every token
+/// slot — and only the first [`BlockView::len`] entries of each row
+/// are valid. The ADC scan (`LookupTable::scores_lanes`) and the fused
+/// value decode (`pq::values::weighted_decode_lanes`) consume
+/// `(lane, len)` pairs directly, keeping one LUT/accumulator row hot
+/// while a block's codes stream. Float lanes (keys/values) stay
+/// token-major — their consumers walk whole `d_k` rows.
 #[derive(Clone, Copy, Debug)]
 pub struct BlockView<'a> {
     /// valid tokens in this block (≤ [`BLOCK_TOKENS`]; only the last
@@ -18,13 +28,16 @@ pub struct BlockView<'a> {
     pub len: usize,
     /// this head's raw keys, (len × d_k) row-major — empty in PQ mode
     pub keys: &'a [f32],
-    /// this head's PQ key codes, (len × m) row-major — empty in FP16 mode
+    /// this head's PQ key-code lane, subspace-major
+    /// (m × [`BLOCK_TOKENS`]) with the first `len` of each row valid —
+    /// empty in FP16 mode
     pub codes: &'a [u8],
     /// this head's raw values, (len × d_k) row-major — empty when values
     /// are PQ-coded (`ValueStorage::Pq`)
     pub values: &'a [f32],
-    /// this head's PQ value codes, (len × m_v) row-major — empty when
-    /// values are raw (`ValueStorage::Fp32`)
+    /// this head's PQ value-code lane, subspace-major
+    /// (m_v × [`BLOCK_TOKENS`]) with the first `len` of each row valid
+    /// — empty when values are raw (`ValueStorage::Fp32`)
     pub value_codes: &'a [u8],
 }
 

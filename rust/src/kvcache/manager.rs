@@ -43,7 +43,7 @@ impl KeyStorage {
 /// How values are stored in the cache — the §5.2 extension mirrored onto
 /// the key side's storage contract: under `Pq`, values exist only as
 /// codes and are re-materialized solely through the fused weighted
-/// decode (`pq::values::weighted_decode_blocks`), never per token.
+/// decode (`pq::values::weighted_decode_lanes`), never per token.
 #[derive(Clone)]
 pub enum ValueStorage {
     /// Raw values ("FP16" storage model: accounted 2 B/element).
@@ -150,11 +150,13 @@ struct SeqState {
 ///
 /// Block layout (per block, `BLOCK_TOKENS` token slots) is head-major,
 /// so one head's run of tokens within a block is contiguous and the
-/// decode kernels can scan it in place ([`KvCache::blocks`]):
+/// decode kernels can scan it in place ([`KvCache::blocks`]). Float
+/// lanes are token-major; code lanes are **subspace-major interleaved**
+/// (fast-scan layout — see [`BlockView`]):
 ///   values:      (H, BLOCK_TOKENS, d_k) f32 when value storage is Fp32
-///   value codes: (H, BLOCK_TOKENS, m_v) u8  when value storage is Pq
+///   value codes: (H, m_v, BLOCK_TOKENS) u8  when value storage is Pq
 ///   keys:        (H, BLOCK_TOKENS, d_k) f32 when Fp16
-///   key codes:   (H, BLOCK_TOKENS, m)   u8  when Pq
+///   key codes:   (H, m, BLOCK_TOKENS)   u8  when Pq
 pub struct KvCache {
     pub h: usize,
     pub d_k: usize,
@@ -166,6 +168,12 @@ pub struct KvCache {
     value_codes: Vec<u8>,
     keys_raw: Vec<f32>,
     codes: Vec<u8>,
+    /// append-time encode buffer (max(m, m_v) bytes) — the hot path
+    /// encodes into it and scatters strided, allocation-free
+    code_scratch: Vec<u8>,
+    /// append-time per-subspace dot scratch for the encoders — owned
+    /// so the serial append stage never touches the shared arena mutex
+    dots_scratch: Vec<f32>,
 }
 
 impl KvCache {
@@ -212,6 +220,8 @@ impl KvCache {
             value_codes,
             keys_raw,
             codes,
+            code_scratch: vec![0u8; m.max(m_v)],
+            dots_scratch: Vec::new(),
         }
     }
 
@@ -291,7 +301,7 @@ impl KvCache {
         let h = self.h;
         let d_k = self.d_k;
         // values: one strided write (or encode) per head (head-major
-        // block layout)
+        // block layout; code lanes are subspace-major within the block)
         match &self.value_storage {
             ValueStorage::Fp32 => {
                 for head in 0..h {
@@ -304,12 +314,18 @@ impl KvCache {
             ValueStorage::Pq { codecs } => {
                 let m_v = codecs[0].codebook.m;
                 for head in 0..h {
-                    let code = codecs[head]
-                        .encode(&values[head * d_k..(head + 1) * d_k]);
-                    let cbase =
-                        ((block * h + head) * BLOCK_TOKENS + off) * m_v;
-                    self.value_codes[cbase..cbase + m_v]
-                        .copy_from_slice(&code);
+                    let code = &mut self.code_scratch[..m_v];
+                    codecs[head].encode_into_with(
+                        &values[head * d_k..(head + 1) * d_k],
+                        code,
+                        &mut self.dots_scratch,
+                    );
+                    let lane =
+                        (block * h + head) * BLOCK_TOKENS * m_v;
+                    for (i, &c) in code.iter().enumerate() {
+                        self.value_codes
+                            [lane + i * BLOCK_TOKENS + off] = c;
+                    }
                 }
             }
         }
@@ -326,11 +342,16 @@ impl KvCache {
             KeyStorage::Pq { codecs } => {
                 let m = codecs[0].codebook.m;
                 for head in 0..h {
-                    let code = codecs[head]
-                        .encode(&keys[head * d_k..(head + 1) * d_k]);
-                    let cbase =
-                        ((block * h + head) * BLOCK_TOKENS + off) * m;
-                    self.codes[cbase..cbase + m].copy_from_slice(&code);
+                    let code = &mut self.code_scratch[..m];
+                    codecs[head].encode_into_with(
+                        &keys[head * d_k..(head + 1) * d_k],
+                        code,
+                        &mut self.dots_scratch,
+                    );
+                    let lane = (block * h + head) * BLOCK_TOKENS * m;
+                    for (i, &c) in code.iter().enumerate() {
+                        self.codes[lane + i * BLOCK_TOKENS + off] = c;
+                    }
                 }
             }
         }
@@ -403,7 +424,10 @@ impl KvCache {
         Ok(len)
     }
 
-    /// Copy one head's PQ codes into `out` (PQ mode only).
+    /// Copy one head's PQ codes into `out` (PQ mode only),
+    /// de-interleaved from the blocks' subspace-major lanes back to
+    /// token-major (n × m) — the layout PJRT packing, experiments and
+    /// the attention primitives expect.
     pub fn gather_codes_into(
         &self,
         seq: SeqId,
@@ -416,7 +440,7 @@ impl KvCache {
         out.clear();
         out.reserve(len * m);
         for blk in self.blocks(seq, head)? {
-            out.extend_from_slice(blk.codes);
+            deinterleave_lane(blk.codes, blk.len, m, out);
         }
         Ok(len)
     }
@@ -441,7 +465,9 @@ impl KvCache {
         Ok(len)
     }
 
-    /// Copy one head's PQ value codes into `out` (PQ value mode only).
+    /// Copy one head's PQ value codes into `out` (PQ value mode only),
+    /// de-interleaved to token-major (n × m_v) like
+    /// [`KvCache::gather_codes_into`].
     pub fn gather_value_codes_into(
         &self,
         seq: SeqId,
@@ -454,7 +480,7 @@ impl KvCache {
         out.clear();
         out.reserve(len * m_v);
         for blk in self.blocks(seq, head)? {
-            out.extend_from_slice(blk.value_codes);
+            deinterleave_lane(blk.value_codes, blk.len, m_v, out);
         }
         Ok(len)
     }
@@ -517,6 +543,20 @@ impl KvCache {
     }
 }
 
+/// De-interleave one block's subspace-major `(m × BLOCK_TOKENS)` code
+/// lane back to token-major `(len × m)`, appending to `out` — the
+/// single home of the lane-layout inverse (the forward scatter lives
+/// in [`KvCache::append`], the test-side packer in
+/// `testkit::fixtures::interleave_lanes`).
+fn deinterleave_lane(lane: &[u8], len: usize, m: usize, out: &mut Vec<u8>) {
+    debug_assert_eq!(lane.len(), m * BLOCK_TOKENS);
+    for t in 0..len {
+        for i in 0..m {
+            out.push(lane[i * BLOCK_TOKENS + t]);
+        }
+    }
+}
+
 /// Iterator over one head's [`BlockView`]s (see [`KvCache::blocks`]).
 pub struct BlockIter<'a> {
     cache: &'a KvCache,
@@ -540,6 +580,9 @@ impl<'a> Iterator for BlockIter<'a> {
         let c = self.cache;
         let (h, d_k) = (c.h, c.d_k);
         let fbase = (b * h + self.head) * BLOCK_TOKENS * d_k;
+        // code lanes are subspace-major: expose the block's FULL
+        // (m × BLOCK_TOKENS) lane — `len` bounds the valid prefix of
+        // each subspace row (the scan kernels slice per row)
         let (values, value_codes): (&[f32], &[u8]) = match &c.value_storage
         {
             ValueStorage::Fp32 => {
@@ -547,8 +590,11 @@ impl<'a> Iterator for BlockIter<'a> {
             }
             ValueStorage::Pq { .. } => {
                 let m_v = c.value_storage.m();
-                let vcbase = (b * h + self.head) * BLOCK_TOKENS * m_v;
-                (&[][..], &c.value_codes[vcbase..vcbase + take * m_v])
+                let lane = (b * h + self.head) * BLOCK_TOKENS * m_v;
+                (
+                    &[][..],
+                    &c.value_codes[lane..lane + m_v * BLOCK_TOKENS],
+                )
             }
         };
         let (keys, codes): (&[f32], &[u8]) = match &c.storage {
@@ -557,8 +603,8 @@ impl<'a> Iterator for BlockIter<'a> {
             }
             KeyStorage::Pq { .. } => {
                 let m = c.storage.m();
-                let cbase = (b * h + self.head) * BLOCK_TOKENS * m;
-                (&[][..], &c.codes[cbase..cbase + take * m])
+                let lane = (b * h + self.head) * BLOCK_TOKENS * m;
+                (&[][..], &c.codes[lane..lane + m * BLOCK_TOKENS])
             }
         };
         Some(BlockView { len: take, keys, codes, values, value_codes })
@@ -722,12 +768,25 @@ mod tests {
                 if is_pq {
                     let mut codes = Vec::new();
                     c.gather_codes_into(1, head, &mut codes).unwrap();
-                    let concat: Vec<u8> = c
-                        .blocks(1, head)
-                        .unwrap()
-                        .flat_map(|b| b.codes.iter().copied())
-                        .collect();
-                    assert_eq!(concat, codes);
+                    // block lanes are subspace-major (m × BLOCK_TOKENS);
+                    // de-interleaving them must reproduce the token-
+                    // major gather exactly
+                    let m = 4usize;
+                    let mut tok = 0usize;
+                    for b in c.blocks(1, head).unwrap() {
+                        assert_eq!(b.codes.len(), m * BLOCK_TOKENS);
+                        for t in 0..b.len {
+                            for i in 0..m {
+                                assert_eq!(
+                                    b.codes[i * BLOCK_TOKENS + t],
+                                    codes[(tok + t) * m + i],
+                                    "head {head} tok {t} sub {i}"
+                                );
+                            }
+                        }
+                        tok += b.len;
+                    }
+                    assert_eq!(tok, 70);
                     assert!(c
                         .blocks(1, head)
                         .unwrap()
@@ -915,13 +974,22 @@ mod tests {
             let n = c.gather_value_codes_into(3, head, &mut codes).unwrap();
             assert_eq!(n, 70);
             assert_eq!(codes, expected[head]);
-            // block views expose the codes lane and no raw values
-            let concat: Vec<u8> = c
-                .blocks(3, head)
-                .unwrap()
-                .flat_map(|b| b.value_codes.iter().copied())
-                .collect();
-            assert_eq!(concat, codes);
+            // block views expose subspace-major value-code lanes and
+            // no raw values
+            let mut tok = 0usize;
+            for b in c.blocks(3, head).unwrap() {
+                assert_eq!(b.value_codes.len(), 4 * BLOCK_TOKENS);
+                for t in 0..b.len {
+                    for i in 0..4 {
+                        assert_eq!(
+                            b.value_codes[i * BLOCK_TOKENS + t],
+                            codes[(tok + t) * 4 + i]
+                        );
+                    }
+                }
+                tok += b.len;
+            }
+            assert_eq!(tok, 70);
             assert!(c.blocks(3, head).unwrap().all(|b| b.values.is_empty()));
         }
     }

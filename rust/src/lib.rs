@@ -8,7 +8,7 @@
 //! value-side extension is in the serving path too: with
 //! `ValueStorage::Pq` the cache stores value codes and attention
 //! finishes through a fused blocked weighted decode
-//! ([`pq::values::weighted_decode_blocks`]) — neither cache side is
+//! ([`pq::values::weighted_decode_lanes`]) — neither cache side is
 //! ever dequantized per token.
 //!
 //! ## Architecture (three layers, python never on the request path)

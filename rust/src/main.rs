@@ -70,6 +70,16 @@ fn validate_m(m: usize, flag: &str) -> anyhow::Result<usize> {
     Ok(m)
 }
 
+/// `--pipeline on|off`: the software-pipelined layer executor A/B
+/// switch (output is bit-identical either way).
+fn parse_pipeline(s: &str) -> anyhow::Result<bool> {
+    match s {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => anyhow::bail!("unknown --pipeline '{other}' (on, off)"),
+    }
+}
+
 fn parse_scheduler(s: &str) -> anyhow::Result<SchedulerPolicy> {
     Ok(match s {
         "fcfs" => SchedulerPolicy::Fcfs,
@@ -130,12 +140,16 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                      "prefill chunk tokens (0 = monolithic)")
                 .opt("scheduler", "fcfs",
                      "fcfs|preempt (preempt evicts under block pressure)")
+                .opt("pipeline", "on",
+                     "on|off: software-pipelined layer executor \
+                      (bit-identical A/B)")
                 .opt("seed", "7", "rng seed");
             let a = cli.parse(&args[1..])?;
             let backend = parse_backend(a.get("backend"))?;
             let value_backend =
                 parse_value_backend(a.get("value-backend"))?;
             let policy = parse_scheduler(a.get("scheduler"))?;
+            let pipeline = parse_pipeline(a.get("pipeline"))?;
             let mut model = ModelConfig::gpt2_layer0();
             model.n_layer = a.get_usize("layers")?;
             let mut router = Router::build(RouterConfig {
@@ -148,6 +162,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     calib_tokens: 256,
                     decode_threads: a.get_usize("threads")?,
                     prefill_chunk: a.get_usize("prefill-chunk")?,
+                    pipeline,
                 },
                 batcher: BatcherConfig {
                     max_batch: a.get_usize("max-batch")?,
@@ -182,12 +197,16 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                      "prefill chunk tokens (0 = monolithic)")
                 .opt("scheduler", "fcfs",
                      "fcfs|preempt (preempt evicts under block pressure)")
+                .opt("pipeline", "on",
+                     "on|off: software-pipelined layer executor \
+                      (bit-identical A/B)")
                 .opt("seed", "7", "rng seed");
             let a = cli.parse(&args[1..])?;
             let backend = parse_backend(a.get("backend"))?;
             let value_backend =
                 parse_value_backend(a.get("value-backend"))?;
             let policy = parse_scheduler(a.get("scheduler"))?;
+            let pipeline = parse_pipeline(a.get("pipeline"))?;
             let mut model = ModelConfig::gpt2_layer0();
             model.n_layer = a.get_usize("layers")?;
             let server = lookat::coordinator::Server::start(
@@ -201,6 +220,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                         calib_tokens: 256,
                         decode_threads: a.get_usize("threads")?,
                         prefill_chunk: a.get_usize("prefill-chunk")?,
+                        pipeline,
                     },
                     batcher: BatcherConfig {
                         max_batch: a.get_usize("max-batch")?,
@@ -298,8 +318,10 @@ USAGE:
                                      figure4 / efficiency / all
   lookat serve [--backend B] [--value-backend V] [--requests N]
                [--rate R] [--prefill-chunk T] [--scheduler fcfs|preempt]
+               [--pipeline on|off]
   lookat serve-tcp [--backend B] [--value-backend V] [--addr HOST:PORT]
                    [--prefill-chunk T] [--scheduler fcfs|preempt]
+                   [--pipeline on|off]
   lookat bench-check --old PREV.json --new CUR.json [--max-regress F]
   lookat info"
     );

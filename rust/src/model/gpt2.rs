@@ -1,7 +1,9 @@
 //! GPT-2-style forward passes (pure rust, mirrors python/compile/model.py).
 
 use super::weights::Weights;
-use crate::tensor::{gelu_inplace, layernorm, softmax_inplace, Tensor2};
+use crate::tensor::{
+    gelu_inplace, layernorm, layernorm_into, softmax_inplace, Tensor2,
+};
 
 const LN_EPS: f32 = 1e-5;
 
@@ -127,6 +129,158 @@ impl Gpt2 {
             *yi += *oi + *bi;
         }
         y
+    }
+
+    /// LN1 + fused QKV projection for a *batch* of token rows in one
+    /// layer — the engine's `qkv` stage. Returns a pooled
+    /// (rows × 3·d_model) buffer; row `r` holds `[q | k | v]` exactly
+    /// as [`Gpt2::qkv`] would produce them (the GEMM accumulates each
+    /// output element in the identical order as `vecmat`, so the batch
+    /// is bit-identical to per-row calls). Batching is the point: the
+    /// (d × 3d) weight matrix streams through memory once per row
+    /// *chunk* instead of once per row, which at decode batch width B
+    /// cuts weight traffic ~B/threads× — the engine's dominant
+    /// bandwidth cost before this refactor. Return the buffer to
+    /// `util::threadpool::scratch()` when done.
+    pub fn qkv_rows(
+        &self,
+        layer: usize,
+        xs: &[Vec<f32>],
+        threads: usize,
+    ) -> Vec<f32> {
+        let blk = &self.weights.blocks[layer];
+        let d = self.d_model();
+        let rows = xs.len();
+        let pool = crate::util::threadpool::scratch();
+        let mut out = pool.take_f32_any(rows * 3 * d);
+        if rows == 0 {
+            return out;
+        }
+        let threads = threads.max(1).min(rows);
+        let chunk = rows.div_ceil(threads);
+        let out_chunks: Vec<std::sync::Mutex<&mut [f32]>> =
+            out.chunks_mut(chunk * 3 * d).map(std::sync::Mutex::new).collect();
+        crate::util::threadpool::global().run_scoped(
+            out_chunks.len(),
+            |t| {
+                let o = &mut *out_chunks[t].lock().unwrap();
+                let r0 = t * chunk;
+                let nr = o.len() / (3 * d);
+                let pool = crate::util::threadpool::scratch();
+                let mut h = pool.take_f32_any(nr * d);
+                for j in 0..nr {
+                    layernorm_into(
+                        &xs[r0 + j],
+                        &blk.ln1_g,
+                        &blk.ln1_b,
+                        LN_EPS,
+                        &mut h[j * d..(j + 1) * d],
+                    );
+                }
+                crate::tensor::matmul_rows_into(&h, &blk.w_qkv, o);
+                for j in 0..nr {
+                    let row = &mut o[j * 3 * d..(j + 1) * 3 * d];
+                    for (v, b) in row.iter_mut().zip(&blk.b_qkv) {
+                        *v += *b;
+                    }
+                }
+                pool.put_f32(h);
+            },
+        );
+        drop(out_chunks);
+        out
+    }
+
+    /// Residual attention-out projection + MLP for a *batch* of rows —
+    /// the engine's `mlp` stage, bit-identical per row to
+    /// [`Gpt2::finish_block`] (same GEMM accumulation order, same
+    /// elementwise expressions). `attn` is (rows × d_model) row-major;
+    /// returns one pooled hidden vector per row. All staging tensors
+    /// (projection, LN2, FF, out) are leased from the scratch pool per
+    /// row chunk, so the steady-state tick allocates nothing here.
+    pub fn finish_block_rows(
+        &self,
+        layer: usize,
+        xs: &[Vec<f32>],
+        attn: &[f32],
+        threads: usize,
+    ) -> Vec<Vec<f32>> {
+        let blk = &self.weights.blocks[layer];
+        let d = self.d_model();
+        let d_ff = blk.w_fc.cols;
+        let rows = xs.len();
+        assert_eq!(attn.len(), rows * d, "attn must be rows × d_model");
+        let mut ys: Vec<Vec<f32>> = (0..rows).map(|_| Vec::new()).collect();
+        if rows == 0 {
+            return ys;
+        }
+        let threads = threads.max(1).min(rows);
+        let chunk = rows.div_ceil(threads);
+        let y_chunks: Vec<std::sync::Mutex<&mut [Vec<f32>]>> =
+            ys.chunks_mut(chunk).map(std::sync::Mutex::new).collect();
+        crate::util::threadpool::global().run_scoped(
+            y_chunks.len(),
+            |t| {
+                let slot = &mut *y_chunks[t].lock().unwrap();
+                let r0 = t * chunk;
+                let nr = slot.len();
+                let pool = crate::util::threadpool::scratch();
+                // attention-out projection for the chunk
+                let mut proj = pool.take_f32_any(nr * d);
+                crate::tensor::matmul_rows_into(
+                    &attn[r0 * d..(r0 + nr) * d],
+                    &blk.w_proj,
+                    &mut proj,
+                );
+                // y = x + proj + b_proj, then LN2 rows
+                let mut h = pool.take_f32_any(nr * d);
+                for (j, y_slot) in slot.iter_mut().enumerate() {
+                    let mut y = pool.take_f32_any(d);
+                    y.copy_from_slice(&xs[r0 + j]);
+                    let p = &proj[j * d..(j + 1) * d];
+                    for ((yi, pi), bi) in
+                        y.iter_mut().zip(p).zip(&blk.b_proj)
+                    {
+                        *yi += *pi + *bi;
+                    }
+                    layernorm_into(
+                        &y,
+                        &blk.ln2_g,
+                        &blk.ln2_b,
+                        LN_EPS,
+                        &mut h[j * d..(j + 1) * d],
+                    );
+                    *y_slot = y;
+                }
+                // FF up-projection + GELU for the chunk
+                let mut ff = pool.take_f32_any(nr * d_ff);
+                crate::tensor::matmul_rows_into(&h, &blk.w_fc, &mut ff);
+                for j in 0..nr {
+                    let row = &mut ff[j * d_ff..(j + 1) * d_ff];
+                    for (fi, bi) in row.iter_mut().zip(&blk.b_fc) {
+                        *fi += *bi;
+                    }
+                }
+                gelu_inplace(&mut ff);
+                // FF down-projection + residual
+                let mut o = pool.take_f32_any(nr * d);
+                crate::tensor::matmul_rows_into(&ff, &blk.w_out, &mut o);
+                for (j, y) in slot.iter_mut().enumerate() {
+                    let orow = &o[j * d..(j + 1) * d];
+                    for ((yi, oi), bi) in
+                        y.iter_mut().zip(orow).zip(&blk.b_out)
+                    {
+                        *yi += *oi + *bi;
+                    }
+                }
+                pool.put_f32(proj);
+                pool.put_f32(h);
+                pool.put_f32(ff);
+                pool.put_f32(o);
+            },
+        );
+        drop(y_chunks);
+        ys
     }
 
     /// Final layernorm + tied LM head.
@@ -380,6 +534,40 @@ mod tests {
     fn embed_rejects_out_of_range_pos() {
         let m = tiny_model();
         m.embed(0, 100_000);
+    }
+
+    #[test]
+    fn batched_row_stages_bit_identical_to_per_row_paths() {
+        // qkv_rows / finish_block_rows are the engine's GEMM-batched
+        // stages; every row must match the scalar qkv / finish_block
+        // reference bit for bit at every thread width
+        let m = tiny_model();
+        let d = m.d_model();
+        let mut rng = crate::util::rng::Pcg32::seed(2024);
+        let rows = 5usize;
+        let xs: Vec<Vec<f32>> = (0..rows)
+            .map(|_| (0..d).map(|_| rng.next_f32_std()).collect())
+            .collect();
+        let attn: Vec<f32> =
+            (0..rows * d).map(|_| rng.next_f32_std()).collect();
+        for layer in 0..2 {
+            for threads in [1usize, 2, 4] {
+                let qkv = m.qkv_rows(layer, &xs, threads);
+                for (r, x) in xs.iter().enumerate() {
+                    let (q, k, v) = m.qkv(layer, x);
+                    let row = &qkv[r * 3 * d..(r + 1) * 3 * d];
+                    assert_eq!(&row[..d], &q[..], "q row {r}");
+                    assert_eq!(&row[d..2 * d], &k[..], "k row {r}");
+                    assert_eq!(&row[2 * d..], &v[..], "v row {r}");
+                }
+                let ys = m.finish_block_rows(layer, &xs, &attn, threads);
+                for (r, x) in xs.iter().enumerate() {
+                    let want = m.finish_block(
+                        layer, x, &attn[r * d..(r + 1) * d]);
+                    assert_eq!(ys[r], want, "finish row {r}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,10 +1,23 @@
 //! Asymmetric distance computation: per-query lookup tables and the
 //! batched code-scan that replaces the Q·Kᵀ matmul (paper §3.5, Alg. 1).
 //!
-//! This is the L3 hot path. The scan is specialized for the paper's
-//! m ∈ {2,4,8,16} with unrolled inner loops; the LUT (m × K f32 ≤ 16 KB)
-//! stays resident in L1/L2 while the uint8 codes stream through — the
-//! bandwidth story the paper claims (m bytes/key instead of 2·d_k).
+//! This is the L3 hot path. Two scan layouts exist:
+//!
+//! * **token-major** ([`LookupTable::scores_into`]): codes are (n × m)
+//!   row-major, one token's m codes contiguous. The reference layout —
+//!   gathers, PJRT packing and the attention primitives use it.
+//! * **subspace-major fast-scan** ([`LookupTable::scores_lanes`]): codes
+//!   arrive as (m × G) lanes (vector-database "fast scan" layout, the
+//!   paged cache's block-resident form). The inner loop walks one LUT
+//!   row over G tokens, so a single (K,) row stays register/L1-resident
+//!   while the uint8 codes stream — the bandwidth story the paper
+//!   claims (m bytes/key instead of 2·d_k), now with the LUT access
+//!   pattern to match.
+//!
+//! Every kernel accumulates each token's subspaces **in order 0..m
+//! (strict left-to-right)**, so all paths — [`LookupTable::score`],
+//! [`LookupTable::scores_into`] (all unrolled `m` specializations) and
+//! [`LookupTable::scores_lanes`] — produce bit-identical f32 scores.
 
 use super::Codebook;
 
@@ -26,9 +39,23 @@ impl LookupTable {
     /// whose call overhead dominated the original profile (§Perf: 17 µs
     /// → ~2 µs for m=4, K=256).
     pub fn build(query: &[f32], cb: &Codebook) -> LookupTable {
+        Self::build_into(query, cb, Vec::new())
+    }
+
+    /// [`LookupTable::build`] reusing a scratch buffer for the table
+    /// storage (the decode kernels recycle tables through the
+    /// thread pool's [`crate::util::threadpool::ScratchPool`], so the
+    /// steady-state tick allocates no LUT memory). The buffer is
+    /// cleared and resized; its prior contents are irrelevant.
+    pub fn build_into(
+        query: &[f32],
+        cb: &Codebook,
+        mut table: Vec<f32>,
+    ) -> LookupTable {
         assert_eq!(query.len(), cb.d_k(), "query/codebook dim mismatch");
         let (m, k, d_sub) = (cb.m, cb.k, cb.d_sub);
-        let mut table = vec![0.0f32; m * k];
+        table.clear();
+        table.resize(m * k, 0.0);
         for i in 0..m {
             let q_sub = &query[i * d_sub..(i + 1) * d_sub];
             let ct = cb.subspace_t(i); // (d_sub × K)
@@ -42,12 +69,19 @@ impl LookupTable {
         LookupTable { m, k, table }
     }
 
+    /// Recover the table storage for recycling (see
+    /// [`LookupTable::build_into`]).
+    pub fn into_table(self) -> Vec<f32> {
+        self.table
+    }
+
     /// Raw table access (PJRT boundary, tests).
     pub fn as_slice(&self) -> &[f32] {
         &self.table
     }
 
-    /// Score one key: `Σ_i LUT_i[codes[i]]` (Alg. 1 line 7).
+    /// Score one key: `Σ_i LUT_i[codes[i]]` (Alg. 1 line 7),
+    /// accumulated in subspace order 0..m.
     #[inline]
     pub fn score(&self, codes: &[u8]) -> f32 {
         debug_assert_eq!(codes.len(), self.m);
@@ -58,91 +92,146 @@ impl LookupTable {
         s
     }
 
-    /// Batched scan: scores for `n` keys with row-major codes (n × m).
+    /// Batched token-major scan: scores for `n` keys with row-major
+    /// codes (n × m).
     ///
-    /// Specialized unrolled kernels for the paper's subspace counts keep
-    /// the loop free of the generic inner-loop bounds checks.
+    /// Specialized kernels for the paper's subspace counts keep the
+    /// loop free of generic inner-loop bounds checks; the generic-`m`
+    /// path is the same inlined loop without the compile-time unroll
+    /// (no per-token function call). All paths accumulate subspaces
+    /// strictly left-to-right, bit-identical to [`LookupTable::score`]
+    /// and to the subspace-major [`LookupTable::scores_lanes`].
     pub fn scores_into(&self, codes: &[u8], n: usize, out: &mut [f32]) {
         assert_eq!(codes.len(), n * self.m);
         assert!(out.len() >= n);
+        match self.m {
+            2 => self.scores_fixed::<2>(codes, n, out),
+            4 => self.scores_fixed::<4>(codes, n, out),
+            8 => self.scores_fixed::<8>(codes, n, out),
+            16 => self.scores_fixed::<16>(codes, n, out),
+            _ => self.scores_generic(codes, n, out),
+        }
+    }
+
+    /// Token-major kernel with a compile-time subspace count: the
+    /// sequential accumulation unrolls fully and the per-token code
+    /// slice becomes a fixed-size array (no bounds checks).
+    fn scores_fixed<const M: usize>(
+        &self,
+        codes: &[u8],
+        n: usize,
+        out: &mut [f32],
+    ) {
         let k = self.k;
         let t = &self.table[..];
-        match self.m {
-            2 => {
-                let (t0, t1) = (&t[0..k], &t[k..2 * k]);
-                for l in 0..n {
-                    let c = &codes[l * 2..l * 2 + 2];
-                    out[l] = t0[c[0] as usize] + t1[c[1] as usize];
-                }
+        for (l, o) in out.iter_mut().enumerate().take(n) {
+            let c: &[u8; M] =
+                codes[l * M..l * M + M].try_into().unwrap();
+            let mut s = t[c[0] as usize];
+            for i in 1..M {
+                s += t[i * k + c[i] as usize];
             }
-            4 => {
-                for l in 0..n {
-                    let c = &codes[l * 4..l * 4 + 4];
-                    out[l] = t[c[0] as usize]
-                        + t[k + c[1] as usize]
-                        + t[2 * k + c[2] as usize]
-                        + t[3 * k + c[3] as usize];
-                }
+            *o = s;
+        }
+    }
+
+    /// Token-major kernel for arbitrary `m` — the same loop as
+    /// [`LookupTable::scores_fixed`] without the unroll (and without
+    /// the retired per-token `score()` call of earlier revisions).
+    fn scores_generic(&self, codes: &[u8], n: usize, out: &mut [f32]) {
+        let (m, k) = (self.m, self.k);
+        let t = &self.table[..];
+        for (l, o) in out.iter_mut().enumerate().take(n) {
+            let c = &codes[l * m..(l + 1) * m];
+            let mut s = t[c[0] as usize];
+            for (i, &ci) in c.iter().enumerate().skip(1) {
+                s += t[i * k + ci as usize];
             }
-            8 => {
-                for l in 0..n {
-                    let c = &codes[l * 8..l * 8 + 8];
-                    let a = t[c[0] as usize] + t[k + c[1] as usize];
-                    let b = t[2 * k + c[2] as usize]
-                        + t[3 * k + c[3] as usize];
-                    let d = t[4 * k + c[4] as usize]
-                        + t[5 * k + c[5] as usize];
-                    let e = t[6 * k + c[6] as usize]
-                        + t[7 * k + c[7] as usize];
-                    out[l] = (a + b) + (d + e);
-                }
-            }
-            16 => {
-                for l in 0..n {
-                    let c = &codes[l * 16..l * 16 + 16];
-                    let mut acc = 0.0f32;
-                    let mut acc2 = 0.0f32;
-                    for i in (0..16).step_by(2) {
-                        acc += t[i * k + c[i] as usize];
-                        acc2 += t[(i + 1) * k + c[i + 1] as usize];
-                    }
-                    out[l] = acc + acc2;
-                }
-            }
-            m => {
-                for l in 0..n {
-                    out[l] = self.score(&codes[l * m..(l + 1) * m]);
-                }
-            }
+            *o = s;
         }
     }
 
     /// Convenience allocating wrapper around [`scores_into`].
+    ///
+    /// [`scores_into`]: LookupTable::scores_into
     pub fn scores(&self, codes: &[u8], n: usize) -> Vec<f32> {
         let mut out = vec![0.0f32; n];
         self.scores_into(codes, n, &mut out);
         out
     }
 
-    /// Block-resident scan: append scores for each code block in turn.
+    /// Subspace-major fast scan: append scores for a stream of code
+    /// *lanes*.
     ///
-    /// The slices come straight from the paged cache
-    /// (`KvCache::blocks`), so the serving hot path scans the codes
-    /// where they live — no gather into contiguous scratch. Each block
-    /// is a (len × m) row-major code slice; per-token results are
-    /// bit-identical to one contiguous [`LookupTable::scores_into`]
-    /// pass over the gathered equivalent, because every token's score
-    /// is computed independently by the same unrolled kernels.
-    pub fn scores_blocks<'a, I>(&self, blocks: I, out: &mut Vec<f32>)
+    /// Each lane is the `(m × stride)` row-major code matrix of one
+    /// group of tokens (the paged cache's per-block layout,
+    /// `BlockView::codes`): row `i` holds subspace `i`'s codes for the
+    /// group, and only the first `len` entries of each row are valid
+    /// (`stride` is inferred as `lane.len() / m`). *Any* lane may
+    /// claim `len < stride` — a sequence's partial last block, but
+    /// also an interior block cut short by a span row's causal-prefix
+    /// truncation (the kernels shorten `len` mid-stream rather than
+    /// scoring tokens a prefill row must not attend). The outer loop walks
+    /// subspaces, so one (K,) LUT row stays hot while `len` codes
+    /// stream through a branch-free inner loop — and because token `t`
+    /// still receives its subspace terms in order 0..m, the result is
+    /// bit-identical to the token-major [`LookupTable::scores_into`]
+    /// over the gathered equivalent.
+    ///
+    /// Lane geometry is checked with *release-mode* asserts: a corrupt
+    /// block lane aborts instead of silently misscoring (this replaced
+    /// a `debug_assert!` that vanished in release builds).
+    pub fn scores_lanes<'a, I>(&self, lanes: I, out: &mut Vec<f32>)
     where
-        I: IntoIterator<Item = &'a [u8]>,
+        I: IntoIterator<Item = (&'a [u8], usize)>,
     {
-        for codes in blocks {
-            debug_assert_eq!(codes.len() % self.m, 0);
-            let n = codes.len() / self.m;
+        let (m, k) = (self.m, self.k);
+        for (lane, len) in lanes {
+            assert_eq!(
+                lane.len() % m,
+                0,
+                "code lane misaligned: {} bytes for m={m}",
+                lane.len()
+            );
+            let stride = lane.len() / m;
+            assert!(
+                len <= stride,
+                "lane claims {len} tokens but has stride {stride}"
+            );
             let start = out.len();
-            out.resize(start + n, 0.0);
-            self.scores_into(codes, n, &mut out[start..]);
+            out.resize(start + len, 0.0);
+            let dst = &mut out[start..];
+            for i in 0..m {
+                let row = &self.table[i * k..(i + 1) * k];
+                let codes_i = &lane[i * stride..i * stride + len];
+                gather_accumulate(row, codes_i, dst, i == 0);
+            }
+        }
+    }
+}
+
+/// One fast-scan pass: `dst[t] (=|+=) row[codes[t]]`. The K = 256 case
+/// is specialized through a fixed-size array so the u8 index needs no
+/// bounds check and the loop stays branch-free.
+#[inline]
+fn gather_accumulate(row: &[f32], codes: &[u8], dst: &mut [f32], first: bool) {
+    if let Ok(row) = <&[f32; 256]>::try_from(row) {
+        if first {
+            for (o, &c) in dst.iter_mut().zip(codes) {
+                *o = row[c as usize];
+            }
+        } else {
+            for (o, &c) in dst.iter_mut().zip(codes) {
+                *o += row[c as usize];
+            }
+        }
+    } else if first {
+        for (o, &c) in dst.iter_mut().zip(codes) {
+            *o = row[c as usize];
+        }
+    } else {
+        for (o, &c) in dst.iter_mut().zip(codes) {
+            *o += row[c as usize];
         }
     }
 }
@@ -165,6 +254,8 @@ mod tests {
         (query, codec, keys, codes, n)
     }
 
+    use crate::testkit::fixtures::interleave_lanes as to_lanes;
+
     #[test]
     fn lut_entries_are_subspace_dots() {
         let (query, codec, _, _, _) = setup(4);
@@ -180,6 +271,19 @@ mod tests {
                 assert!((got - want).abs() < 1e-5);
             }
         }
+    }
+
+    #[test]
+    fn build_into_reuses_storage_and_matches_build() {
+        let (query, codec, _, _, _) = setup(4);
+        let fresh = LookupTable::build(&query, &codec.codebook);
+        // dirty, differently-sized scratch must not leak into the table
+        let scratch = vec![7.5f32; 13];
+        let reused =
+            LookupTable::build_into(&query, &codec.codebook, scratch);
+        assert_eq!(fresh.as_slice(), reused.as_slice());
+        let recovered = reused.into_table();
+        assert_eq!(recovered.len(), 4 * 64);
     }
 
     #[test]
@@ -202,38 +306,71 @@ mod tests {
     }
 
     #[test]
-    fn batched_scan_matches_scalar_all_specializations() {
+    fn batched_scan_bit_identical_to_scalar_all_specializations() {
+        // every unrolled kernel and the generic path accumulate in
+        // subspace order 0..m, so the batch is *bit-identical* to the
+        // scalar score() — not merely close (m = 32 exercises generic)
         for m in [2usize, 4, 8, 16, 32] {
-            let d_k = 64;
-            if d_k % m != 0 {
-                continue;
-            }
-            let (query, codec, _, codes, n) = setup(m.min(16));
+            let (query, codec, _, codes, n) = setup(m);
             let m_eff = codec.codebook.m;
+            assert_eq!(m_eff, m);
             let lut = LookupTable::build(&query, &codec.codebook);
             let batch = lut.scores(&codes, n);
             for l in 0..n {
                 let s = lut.score(&codes[l * m_eff..(l + 1) * m_eff]);
-                // unrolled kernels use pairwise sums; f32 reassociation
-                // gives tiny differences vs the sequential scalar path
-                assert!((batch[l] - s).abs() < 1e-5);
+                assert_eq!(
+                    batch[l].to_bits(),
+                    s.to_bits(),
+                    "m={m} l={l}"
+                );
             }
         }
     }
 
     #[test]
-    fn blocked_scan_bit_identical_to_flat_scan() {
-        for m in [2usize, 4, 8, 16] {
+    fn lane_scan_bit_identical_to_flat_scan() {
+        for m in [2usize, 4, 8, 16, 32] {
             let (query, codec, _, codes, n) = setup(m);
             let lut = LookupTable::build(&query, &codec.codebook);
             let flat = lut.scores(&codes, n);
-            // uneven block sizes, last block partial — the paged shape
-            for bt in [32usize, 48, 200, 7] {
-                let mut blocked = Vec::new();
-                lut.scores_blocks(codes.chunks(bt * m), &mut blocked);
-                assert_eq!(flat, blocked, "m={m} block_tokens={bt}");
+            // uneven group sizes, last lane partial — the paged shape
+            for gt in [32usize, 48, 200, 7] {
+                let lanes = to_lanes(&codes, m, gt);
+                let mut out = Vec::new();
+                lut.scores_lanes(
+                    lanes.iter().map(|(l, n)| (&l[..], *n)),
+                    &mut out,
+                );
+                assert_eq!(flat.len(), out.len());
+                for (a, b) in flat.iter().zip(&out) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "m={m} group_tokens={gt}"
+                    );
+                }
             }
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "misaligned")]
+    fn lane_scan_rejects_misaligned_lane_in_release_too() {
+        let (query, codec, _, _, _) = setup(4);
+        let lut = LookupTable::build(&query, &codec.codebook);
+        let mut out = Vec::new();
+        // 7 bytes is not a multiple of m=4: must abort, not misscore
+        lut.scores_lanes([(&[0u8; 7][..], 1)], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "stride")]
+    fn lane_scan_rejects_overlong_len() {
+        let (query, codec, _, _, _) = setup(4);
+        let lut = LookupTable::build(&query, &codec.codebook);
+        let mut out = Vec::new();
+        // lane holds 2 tokens per subspace but claims 3
+        lut.scores_lanes([(&[0u8; 8][..], 3)], &mut out);
     }
 
     #[test]

@@ -59,18 +59,46 @@ impl PqCodec {
     /// codebook (§Perf: ~6.6 µs → ~1 µs per key at m=4, K=256), with
     /// ‖c‖² precomputed at codebook construction.
     pub fn encode(&self, key: &[f32]) -> Vec<u8> {
+        let mut codes = vec![0u8; self.codebook.m];
+        self.encode_into(key, &mut codes);
+        codes
+    }
+
+    /// Allocation-free [`PqCodec::encode`] into a caller buffer of
+    /// exactly `m` bytes (the per-subspace dot scratch comes from the
+    /// shared thread-pool arena; callers on a serial hot path should
+    /// prefer [`PqCodec::encode_into_with`] and own the scratch).
+    pub fn encode_into(&self, key: &[f32], out: &mut [u8]) {
+        let pool = crate::util::threadpool::scratch();
+        let mut dots = pool.take_f32_any(self.codebook.k);
+        self.encode_into_with(key, out, &mut dots);
+        pool.put_f32(dots);
+    }
+
+    /// [`PqCodec::encode_into`] with caller-owned dot scratch —
+    /// `dots` is resized to K and fully overwritten, so the cache
+    /// append stage (serial, interleaved with the pipelined executor's
+    /// worker fan-outs) encodes without touching the shared arena's
+    /// mutex at all.
+    pub fn encode_into_with(
+        &self,
+        key: &[f32],
+        out: &mut [u8],
+        dots: &mut Vec<f32>,
+    ) {
         let cb = &self.codebook;
         assert_eq!(key.len(), cb.d_k());
+        assert_eq!(out.len(), cb.m, "encode_into needs an m-byte buffer");
         let (k, d_sub) = (cb.k, cb.d_sub);
-        let mut codes = Vec::with_capacity(cb.m);
-        let mut dots = vec![0.0f32; k];
-        for i in 0..cb.m {
+        dots.clear();
+        dots.resize(k, 0.0);
+        for (i, slot) in out.iter_mut().enumerate() {
             let sub = &key[i * d_sub..(i + 1) * d_sub];
             let ct = cb.subspace_t(i);
             dots.iter_mut().for_each(|v| *v = 0.0);
             for (d, &xv) in sub.iter().enumerate() {
                 if xv != 0.0 {
-                    crate::tensor::axpy(&mut dots, xv, &ct[d * k..(d + 1) * k]);
+                    crate::tensor::axpy(dots, xv, &ct[d * k..(d + 1) * k]);
                 }
             }
             let norms = cb.norms2(i);
@@ -83,9 +111,8 @@ impl PqCodec {
                     best = c;
                 }
             }
-            codes.push(best as u8);
+            *slot = best as u8;
         }
-        codes
     }
 
     /// Encode a batch of `n` keys (n × d_k row-major) -> (n × m) codes.

@@ -29,45 +29,75 @@ pub fn weighted_decode(
     assert_eq!(codes.len(), n * m, "codes/weights length mismatch");
 
     // phase 1: scatter weights into per-subspace accumulators — O(n·m)
-    let mut acc = vec![0.0f32; m * k];
+    let pool = crate::util::threadpool::scratch();
+    let mut acc = pool.take_f32(m * k);
     scatter_weights(&mut acc, weights, codes, m, k);
-    centroid_matvec(&acc, codec)
+    let out = centroid_matvec(&acc, codec);
+    pool.put_f32(acc);
+    out
 }
 
-/// Block-resident sibling of [`weighted_decode`] — the serving hot
-/// path's fused tail. The (n × m) code matrix arrives as a sequence of
-/// row-major chunks (the paged cache's per-block value-code slices,
-/// `BlockView::value_codes`), aligned with `weights` in token order.
-/// Weights are scatter-accumulated into the per-subspace (K,) tables
-/// *while the blocks stream*, then one m × K × d_sub centroid matvec
-/// produces the output — values are never gathered into contiguous
-/// scratch and never dequantized per token. Accumulation order matches
-/// the flat path exactly, so the result is bit-identical to
-/// [`weighted_decode`] over the gathered equivalent.
-pub fn weighted_decode_blocks<'a, I>(
+/// Subspace-major sibling of [`weighted_decode`] — the serving hot
+/// path's fused tail, in the same fast-scan lane layout the key-side
+/// ADC scan uses ([`crate::pq::LookupTable::scores_lanes`]). Each lane
+/// is the `(m × stride)` code matrix of one group of tokens
+/// (`BlockView::value_codes`), first `len` of each row valid, aligned
+/// with `weights` in token order. One (K,) accumulator row stays hot
+/// per subspace while the group's weights scatter into it; a final
+/// m × K × d_sub centroid matvec produces the output — values are
+/// never gathered into contiguous scratch and never dequantized per
+/// token. For every accumulator cell the weight additions happen in
+/// token order exactly as the flat path performs them, so the result
+/// is bit-identical to [`weighted_decode`] over the gathered
+/// equivalent.
+///
+/// Lane geometry is checked with release-mode asserts (a corrupt block
+/// lane aborts instead of silently mis-weighting).
+pub fn weighted_decode_lanes<'a, I>(
     weights: &[f32],
-    blocks: I,
+    lanes: I,
     codec: &PqCodec,
 ) -> Vec<f32>
 where
-    I: IntoIterator<Item = &'a [u8]>,
+    I: IntoIterator<Item = (&'a [u8], usize)>,
 {
     let cb = &codec.codebook;
     let (m, k) = (cb.m, cb.k);
-    let mut acc = vec![0.0f32; m * k];
+    let pool = crate::util::threadpool::scratch();
+    let mut acc = pool.take_f32(m * k);
     let mut l = 0usize;
-    for codes in blocks {
-        debug_assert_eq!(codes.len() % m, 0);
-        let n = codes.len() / m;
-        scatter_weights(&mut acc, &weights[l..l + n], codes, m, k);
-        l += n;
+    for (lane, len) in lanes {
+        assert_eq!(
+            lane.len() % m,
+            0,
+            "value-code lane misaligned: {} bytes for m={m}",
+            lane.len()
+        );
+        let stride = lane.len() / m;
+        assert!(
+            len <= stride,
+            "lane claims {len} tokens but has stride {stride}"
+        );
+        let w = &weights[l..l + len];
+        for i in 0..m {
+            let accrow = &mut acc[i * k..(i + 1) * k];
+            let codes_i = &lane[i * stride..i * stride + len];
+            for (&c, &wv) in codes_i.iter().zip(w) {
+                if wv != 0.0 {
+                    accrow[c as usize] += wv;
+                }
+            }
+        }
+        l += len;
     }
     assert_eq!(l, weights.len(), "codes/weights length mismatch");
-    centroid_matvec(&acc, codec)
+    let out = centroid_matvec(&acc, codec);
+    pool.put_f32(acc);
+    out
 }
 
 /// Phase 1 of the transposed aggregation: `acc[i*k + codes[l][i]] +=
-/// weights[l]` for every token `l` of one code chunk.
+/// weights[l]` for every token `l` of one token-major code chunk.
 fn scatter_weights(
     acc: &mut [f32],
     weights: &[f32],
@@ -86,11 +116,13 @@ fn scatter_weights(
     }
 }
 
-/// Phase 2: per-subspace weighted centroid sum — O(m·K·d_sub).
+/// Phase 2: per-subspace weighted centroid sum — O(m·K·d_sub). The
+/// output buffer is drawn from the shared scratch pool so the serving
+/// loop can recycle it once the context vector is consumed.
 fn centroid_matvec(acc: &[f32], codec: &PqCodec) -> Vec<f32> {
     let cb = &codec.codebook;
     let (m, k, d_sub) = (cb.m, cb.k, cb.d_sub);
-    let mut out = vec![0.0f32; m * d_sub];
+    let mut out = crate::util::threadpool::scratch().take_f32(m * d_sub);
     for i in 0..m {
         let seg = &mut out[i * d_sub..(i + 1) * d_sub];
         let cents = cb.subspace(i);
@@ -118,6 +150,7 @@ pub fn flops(n: usize, m: usize, k: usize, d_sub: usize) -> (usize, usize) {
 mod tests {
     use super::*;
     use crate::pq::TrainOpts;
+    use crate::testkit::fixtures::interleave_lanes;
     use crate::util::rng::Pcg32;
 
     fn setup(n: usize, d_k: usize, m: usize, k: usize)
@@ -184,9 +217,13 @@ mod tests {
         let (_, codec, codes, _) = setup(32, 32, 4, 16);
         let out = weighted_decode(&vec![0.0; 32], &codes, &codec);
         assert!(out.iter().all(|&x| x == 0.0));
-        // blocked path agrees on the all-zero weight vector
-        let blocked = weighted_decode_blocks(
-            &vec![0.0; 32], codes.chunks(8 * 4), &codec);
+        // lane path agrees on the all-zero weight vector
+        let lanes = interleave_lanes(&codes, 4, 8);
+        let blocked = weighted_decode_lanes(
+            &vec![0.0; 32],
+            lanes.iter().map(|(l, n)| (&l[..], *n)),
+            &codec,
+        );
         assert_eq!(out, blocked);
     }
 
@@ -196,23 +233,27 @@ mod tests {
         let out = weighted_decode(&[], &[], &codec);
         assert_eq!(out, vec![0.0f32; 32]);
         let blocked =
-            weighted_decode_blocks(&[], std::iter::empty(), &codec);
+            weighted_decode_lanes(&[], std::iter::empty(), &codec);
         assert_eq!(blocked, vec![0.0f32; 32]);
     }
 
     #[test]
-    fn blocked_decode_bit_identical_to_flat() {
+    fn lane_decode_bit_identical_to_flat() {
         for (n, m, k) in [(64usize, 4usize, 32usize), (200, 8, 64)] {
             let (_, codec, codes, weights) = setup(n, 64, m, k);
             let flat = weighted_decode(&weights, &codes, &codec);
-            // uneven chunk sizes incl. a partial tail — the paged shape
-            for bt in [32usize, 48, 7, n] {
-                let blocked = weighted_decode_blocks(
-                    &weights, codes.chunks(bt * m), &codec);
+            // uneven group sizes incl. a partial tail — the paged shape
+            for gt in [32usize, 48, 7, n] {
+                let lanes = interleave_lanes(&codes, m, gt);
+                let blocked = weighted_decode_lanes(
+                    &weights,
+                    lanes.iter().map(|(l, n)| (&l[..], *n)),
+                    &codec,
+                );
                 assert_eq!(
                     flat.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
                     blocked.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
-                    "n={n} m={m} block_tokens={bt}"
+                    "n={n} m={m} group_tokens={gt}"
                 );
             }
         }
@@ -220,11 +261,22 @@ mod tests {
 
     #[test]
     #[should_panic(expected = "length mismatch")]
-    fn blocked_rejects_short_code_stream() {
+    fn lanes_reject_short_code_stream() {
         let (_, codec, codes, weights) = setup(32, 32, 4, 16);
-        // stream only half the blocks for a full-length weight vector
-        weighted_decode_blocks(
-            &weights, codes.chunks(16 * 4).take(1), &codec);
+        // stream only half the lanes for a full-length weight vector
+        let lanes = interleave_lanes(&codes, 4, 16);
+        weighted_decode_lanes(
+            &weights,
+            lanes.iter().take(1).map(|(l, n)| (&l[..], *n)),
+            &codec,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "misaligned")]
+    fn lanes_reject_misaligned_lane_in_release_too() {
+        let (_, codec, _, _) = setup(8, 32, 4, 16);
+        weighted_decode_lanes(&[0.1], [(&[0u8; 7][..], 1)], &codec);
     }
 
     #[test]

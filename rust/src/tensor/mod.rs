@@ -9,7 +9,9 @@
 mod ops;
 mod tensor2;
 
-pub use ops::{gelu_inplace, layernorm, softmax_inplace, softmax_rows};
+pub use ops::{
+    gelu_inplace, layernorm, layernorm_into, softmax_inplace, softmax_rows,
+};
 pub use tensor2::Tensor2;
 
 /// Dot product of two equal-length slices (unrolled for autovectorization).
@@ -40,6 +42,41 @@ pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
     debug_assert_eq!(y.len(), x.len());
     for (yi, xi) in y.iter_mut().zip(x.iter()) {
         *yi += alpha * *xi;
+    }
+}
+
+/// Row-batched vector–matrix product: row `r` of `x` (rows × k_n,
+/// row-major) times `w` (k_n × c_n) into row `r` of `out`.
+///
+/// Per output element the accumulation over `k` runs ascending with
+/// zero coefficients skipped — the *identical* float-op sequence as
+/// [`Tensor2::vecmat`] on that row, so a batch through this kernel is
+/// bit-identical to per-row `vecmat` calls. The difference is purely
+/// locality: `w` is streamed in k-blocks shared by every row, so at
+/// decode batch width B the weight matrix crosses memory once per
+/// block instead of B times — this is what turns the engine's QKV/MLP
+/// stages from weight-bandwidth-bound to compute-bound (the decode
+/// hot-path overhaul's GEMM batching).
+pub fn matmul_rows_into(x: &[f32], w: &Tensor2, out: &mut [f32]) {
+    let (k_n, c_n) = (w.rows, w.cols);
+    assert_eq!(x.len() % k_n, 0, "x rows must be k_n wide");
+    let rows = x.len() / k_n;
+    assert_eq!(out.len(), rows * c_n, "out must be rows × c_n");
+    out.fill(0.0);
+    const KB: usize = 64; // k-block: w-rows chunk resident in L1/L2
+    for k0 in (0..k_n).step_by(KB) {
+        let k1 = (k0 + KB).min(k_n);
+        for r in 0..rows {
+            let xrow = &x[r * k_n..(r + 1) * k_n];
+            let orow = &mut out[r * c_n..(r + 1) * c_n];
+            for (k, &a) in
+                xrow.iter().enumerate().take(k1).skip(k0)
+            {
+                if a != 0.0 {
+                    axpy(orow, a, &w.data[k * c_n..(k + 1) * c_n]);
+                }
+            }
+        }
     }
 }
 
@@ -97,5 +134,29 @@ mod tests {
     #[test]
     fn norm2_basic() {
         assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matmul_rows_into_bit_identical_to_per_row_vecmat() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seed(123);
+        // k_n spans multiple 64-wide k-blocks with a ragged tail
+        let (rows, k_n, c_n) = (5usize, 150usize, 37usize);
+        let w = Tensor2::randn(k_n, c_n, 0.3, &mut rng);
+        let mut x: Vec<f32> =
+            (0..rows * k_n).map(|_| rng.next_f32_std()).collect();
+        // sprinkle exact zeros to exercise the skip path
+        for i in (0..x.len()).step_by(11) {
+            x[i] = 0.0;
+        }
+        let mut out = vec![7.0f32; rows * c_n];
+        matmul_rows_into(&x, &w, &mut out);
+        for r in 0..rows {
+            let want = w.vecmat(&x[r * k_n..(r + 1) * k_n]);
+            for (a, b) in out[r * c_n..(r + 1) * c_n].iter().zip(&want)
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {r}");
+            }
+        }
     }
 }

@@ -28,16 +28,34 @@ pub fn softmax_rows(t: &mut Tensor2) {
 
 /// LayerNorm over the last axis: (x - mean)/sqrt(var + eps) * g + b.
 pub fn layernorm(x: &[f32], g: &[f32], b: &[f32], eps: f32) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    layernorm_into(x, g, b, eps, &mut out);
+    out
+}
+
+/// [`layernorm`] into a caller buffer (the engine's batched GEMM
+/// stages normalize rows into pooled staging tensors without per-row
+/// allocations). Bit-identical to [`layernorm`] — same reduction and
+/// elementwise order.
+pub fn layernorm_into(
+    x: &[f32],
+    g: &[f32],
+    b: &[f32],
+    eps: f32,
+    out: &mut [f32],
+) {
     assert_eq!(x.len(), g.len());
     assert_eq!(x.len(), b.len());
+    assert_eq!(x.len(), out.len());
     let n = x.len() as f32;
     let mean = x.iter().sum::<f32>() / n;
     let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
     let inv = 1.0 / (var + eps).sqrt();
-    x.iter()
-        .zip(g.iter().zip(b.iter()))
-        .map(|(v, (gi, bi))| (v - mean) * inv * gi + bi)
-        .collect()
+    for (o, (v, (gi, bi))) in
+        out.iter_mut().zip(x.iter().zip(g.iter().zip(b.iter())))
+    {
+        *o = (v - mean) * inv * gi + bi;
+    }
 }
 
 /// GPT-2's tanh-approximation GELU, in place.

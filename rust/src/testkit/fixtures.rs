@@ -100,6 +100,37 @@ pub fn low_rank_keys(
     out
 }
 
+/// Re-pack token-major (n × m) PQ codes into subspace-major fast-scan
+/// lanes of at most `group` tokens each: one `(m × group)` row-major
+/// lane per group (full stride even for a partial tail, mirroring the
+/// paged cache's block layout), paired with the group's valid token
+/// count. This is the layout `KvCache` blocks expose to
+/// `LookupTable::scores_lanes` / `pq::values::weighted_decode_lanes`;
+/// the parity suites use this helper to build reference lanes.
+pub fn interleave_lanes(
+    codes: &[u8],
+    m: usize,
+    group: usize,
+) -> Vec<(Vec<u8>, usize)> {
+    assert!(m > 0 && group > 0);
+    assert_eq!(codes.len() % m, 0, "token-major codes must be n × m");
+    let n = codes.len() / m;
+    let mut lanes = Vec::new();
+    let mut t0 = 0usize;
+    while t0 < n {
+        let len = group.min(n - t0);
+        let mut lane = vec![0u8; m * group];
+        for t in 0..len {
+            for i in 0..m {
+                lane[i * group + t] = codes[(t0 + t) * m + i];
+            }
+        }
+        lanes.push((lane, len));
+        t0 += len;
+    }
+    lanes
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,13 +1,25 @@
-//! BENCH_serving.json regression comparison — the CI perf gate.
+//! Bench-artifact regression comparison — the CI perf gate.
 //!
-//! CI downloads the previous run's `BENCH_serving.json` artifact and
-//! runs `lookat bench-check --old <prev> --new <current>`: any backend
-//! × batch-width tokens/s figure that regresses by more than the
-//! tolerance fails the job, and a backend that disappears from the
-//! sweep fails it too (silent coverage loss reads as a pass otherwise).
-//! New backends in the current file are ignored — they have no baseline.
+//! CI downloads the previous run's bench artifact (`BENCH_serving.json`
+//! and `BENCH_adc.json`) and runs `lookat bench-check --old <prev>
+//! --new <current>` on each: any throughput metric that regresses by
+//! more than the tolerance fails the job, and a result entry that
+//! disappears from the sweep fails it too (silent coverage loss reads
+//! as a pass otherwise). New entries in the current file are ignored —
+//! they have no baseline.
+//!
+//! The document contract is schema-light: a top-level `results` array
+//! of objects, each carrying a `backend` name plus numeric throughput
+//! metrics. Which metrics exist is discovered from the *baseline*
+//! entry: every numeric key ending in `_tok_s`, `_gb_s` or `_per_s`
+//! is compared (higher is better). That makes the same gate cover the
+//! serving sweep's `batch_N_tok_s` columns and the ADC micro-bench's
+//! scan figures without either knowing about the other.
 
 use crate::util::json::Json;
+
+/// Key suffixes treated as higher-is-better throughput metrics.
+const METRIC_SUFFIXES: [&str; 3] = ["_tok_s", "_gb_s", "_per_s"];
 
 /// One tokens/s comparison that exceeded the tolerance (or vanished).
 #[derive(Clone, Debug, PartialEq)]
@@ -40,9 +52,9 @@ impl std::fmt::Display for Regression {
     }
 }
 
-/// Compare two BENCH_serving.json documents. Returns every regression
-/// beyond `max_regress` (0.10 = a 10% tokens/s drop fails); an empty
-/// vec is a pass. `Err` means a document is structurally malformed.
+/// Compare two bench documents. Returns every regression beyond
+/// `max_regress` (0.10 = a 10% throughput drop fails); an empty vec is
+/// a pass. `Err` means a document is structurally malformed.
 pub fn compare(
     old: &Json,
     new: &Json,
@@ -50,10 +62,6 @@ pub fn compare(
 ) -> Result<Vec<Regression>, String> {
     let old_results = results_of(old, "old")?;
     let new_results = results_of(new, "new")?;
-    let batches = old
-        .get("batch_sizes")
-        .and_then(|b| b.as_arr())
-        .ok_or("old: missing batch_sizes array")?;
 
     let mut regressions = Vec::new();
     for entry in old_results {
@@ -61,33 +69,33 @@ pub fn compare(
             .get("backend")
             .and_then(|b| b.as_str())
             .ok_or("old: result without backend name")?;
+        let fields = entry
+            .as_obj()
+            .ok_or("old: result entry is not an object")?;
         let new_entry = new_results.iter().find(|e| {
             e.get("backend").and_then(|b| b.as_str()) == Some(backend)
         });
-        for bs in batches {
-            let metric = format!(
-                "batch_{}_tok_s",
-                bs.as_usize().ok_or("old: non-numeric batch size")?
-            );
-            let Some(old_v) =
-                entry.get(&metric).and_then(|v| v.as_f64())
-            else {
-                continue; // metric not recorded in the baseline
+        for (metric, val) in fields {
+            if !METRIC_SUFFIXES.iter().any(|s| metric.ends_with(s)) {
+                continue;
+            }
+            let Some(old_v) = val.as_f64() else {
+                continue; // non-numeric metric-looking key
             };
             let new_v = new_entry
-                .and_then(|e| e.get(&metric))
+                .and_then(|e| e.get(metric))
                 .and_then(|v| v.as_f64());
             match new_v {
                 None => regressions.push(Regression {
                     backend: backend.to_string(),
-                    metric,
+                    metric: metric.clone(),
                     old: old_v,
                     new: f64::NAN,
                 }),
                 Some(n) if n < old_v * (1.0 - max_regress) => {
                     regressions.push(Regression {
                         backend: backend.to_string(),
-                        metric,
+                        metric: metric.clone(),
                         old: old_v,
                         new: n,
                     })
@@ -192,5 +200,47 @@ mod tests {
         let good = doc(&[("fp16", &[(1, 100.0)])]);
         assert!(compare(&Json::obj(), &good, 0.1).is_err());
         assert!(compare(&good, &Json::obj(), 0.1).is_err());
+    }
+
+    /// Build a BENCH_adc.json-shaped doc: arbitrary metric keys.
+    fn adc_doc(entries: &[(&str, &[(&str, f64)])]) -> Json {
+        let mut top = Json::obj();
+        let results = entries
+            .iter()
+            .map(|(name, metrics)| {
+                let mut o = Json::obj();
+                o.set("backend", Json::Str(name.to_string()));
+                for (k, v) in metrics.iter() {
+                    o.set(k, Json::Num(*v));
+                }
+                o
+            })
+            .collect();
+        top.set("results", Json::Arr(results));
+        top
+    }
+
+    #[test]
+    fn metric_discovery_covers_adc_scan_keys() {
+        // the ADC micro-bench records GB/s and tokens/s per m; the
+        // same gate must cover them without a batch_sizes array
+        let old = adc_doc(&[(
+            "adc-m4-lanes",
+            &[("scan_gb_s", 10.0), ("scan_tok_s", 5e8), ("m", 4.0)],
+        )]);
+        let ok = adc_doc(&[(
+            "adc-m4-lanes",
+            &[("scan_gb_s", 9.5), ("scan_tok_s", 5e8), ("m", 4.0)],
+        )]);
+        assert!(compare(&old, &ok, 0.10).unwrap().is_empty());
+        let bad = adc_doc(&[(
+            "adc-m4-lanes",
+            // `m` shrinking is NOT a regression (not a metric key);
+            // scan_gb_s dropping 30% is
+            &[("scan_gb_s", 7.0), ("scan_tok_s", 5e8), ("m", 2.0)],
+        )]);
+        let regs = compare(&old, &bad, 0.10).unwrap();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, "scan_gb_s");
     }
 }

@@ -1,4 +1,5 @@
-//! Minimal work-stealing-free thread pool + scoped parallel-for.
+//! Minimal work-stealing-free thread pool + scoped parallel-for +
+//! tick-scoped scratch arenas.
 //!
 //! tokio is not vendored in the offline image; the coordinator's event
 //! loop and the experiment harness use this instead. The pool owns N
@@ -11,12 +12,135 @@
 //! [`parallel_map`]/[`parallel_try_map`] route through a process-wide
 //! pool via it — so decode-tick workers, and their thread-local gather
 //! scratch, persist across ticks instead of being re-spawned per call.
+//! [`ThreadPool::overlap`] is the two-stage sibling: one borrow-capable
+//! background task on a worker while the caller runs a foreground
+//! closure inline, joined before returning — the engine's
+//! software-pipelined layer executor is built on it.
+//!
+//! The pool also owns a [`ScratchPool`]: a recycler of f32 buffers
+//! that the decode hot path leases per tick (LUT tables, score/weight
+//! vectors, GEMM staging). Buffers cycle engine → kernels → engine, so
+//! after warm-up a steady-state decode tick performs no scratch heap
+//! allocations — the churn of per-item `Vec::with_capacity`/`vec!` that
+//! used to dominate the allocator profile is gone.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Recycler of scratch buffers owned by a [`ThreadPool`].
+///
+/// [`ScratchPool::take_f32`] leases a zero-filled buffer (identical
+/// semantics to `vec![0.0; len]`); [`ScratchPool::take_f32_any`] skips
+/// the fill for consumers that overwrite every element;
+/// [`ScratchPool::put_f32`] returns one. The pool is shared across
+/// threads behind a mutex: lease/return pairs are coarse (per work
+/// item or per tick stage, never per element), so the lock is touched
+/// a few hundred times per serving tick, which is noise next to the
+/// attention math. Returned buffers keep their capacity, so after one
+/// warm tick every lease is satisfied without touching the allocator;
+/// [`ScratchPool::stats`] exposes the take/fresh-allocation counters
+/// the arena tests assert on.
+#[derive(Default)]
+pub struct ScratchPool {
+    f32s: Mutex<PoolInner>,
+    takes: AtomicUsize,
+    fresh: AtomicUsize,
+}
+
+#[derive(Default)]
+struct PoolInner {
+    bufs: Vec<Vec<f32>>,
+    /// Σ capacity over `bufs`, in f32 elements — the retention bound
+    bytes_held: usize,
+}
+
+/// Buffer-count and byte retention bounds: returns beyond either are
+/// dropped instead of pooled. Growth bounds, not correctness knobs —
+/// the byte cap keeps one giant monolithic-prefill staging lease from
+/// ratcheting the process high-water mark forever. (The free list is
+/// deliberately size-agnostic LIFO: the serving tick leases in a
+/// stable rhythm, so capacities converge; a pathological mix of sizes
+/// degrades to allocator calls, never to incorrectness.)
+const MAX_POOLED: usize = 1024;
+const MAX_POOLED_F32S: usize = 16 << 20; // 64 MB
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn lease(&self, len: usize, zero: bool) -> Vec<f32> {
+        self.takes.fetch_add(1, Ordering::Relaxed);
+        let mut v = {
+            let mut pool = self.f32s.lock().unwrap();
+            match pool.bufs.pop() {
+                Some(v) => {
+                    pool.bytes_held -= v.capacity();
+                    v
+                }
+                None => Vec::new(),
+            }
+        };
+        if v.capacity() < len {
+            // this lease touches the allocator — empty pool OR a
+            // recycled buffer too small for the request (resize must
+            // grow it). Counting both keeps `stats()` an honest
+            // observer of the zero-allocation contract.
+            self.fresh.fetch_add(1, Ordering::Relaxed);
+        }
+        if zero {
+            v.clear();
+        }
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Lease a zero-filled f32 buffer of length `len`.
+    pub fn take_f32(&self, len: usize) -> Vec<f32> {
+        self.lease(len, true)
+    }
+
+    /// Lease a buffer of length `len` with **unspecified contents**
+    /// (recycled scratch values, zeros only where the buffer had to
+    /// grow) — for consumers that overwrite every element before
+    /// reading (GEMM outputs, copy/assign targets). Skips the
+    /// zero-fill [`ScratchPool::take_f32`] pays, which would be
+    /// redundant work on the hot path; still entirely safe — recycled
+    /// buffers only ever hold earlier scratch f32s.
+    pub fn take_f32_any(&self, len: usize) -> Vec<f32> {
+        self.lease(len, false)
+    }
+
+    /// Return an f32 buffer for reuse (its contents are discarded).
+    pub fn put_f32(&self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let mut pool = self.f32s.lock().unwrap();
+        if pool.bufs.len() < MAX_POOLED
+            && pool.bytes_held + v.capacity() <= MAX_POOLED_F32S
+        {
+            pool.bytes_held += v.capacity();
+            pool.bufs.push(v);
+        }
+    }
+
+    /// (total takes, takes that had to allocate a fresh buffer).
+    pub fn stats(&self) -> (usize, usize) {
+        (
+            self.takes.load(Ordering::Relaxed),
+            self.fresh.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// The process-wide scratch pool (owned by the [`global`] ThreadPool).
+pub fn scratch() -> &'static ScratchPool {
+    &global().scratch
+}
 
 struct Shared {
     queue: Mutex<std::collections::VecDeque<Job>>,
@@ -31,6 +155,8 @@ struct Shared {
 pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
+    /// tick-scoped scratch arenas — see [`ScratchPool`]
+    pub scratch: ScratchPool,
 }
 
 impl ThreadPool {
@@ -54,7 +180,7 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        Self { shared, workers }
+        Self { shared, workers, scratch: ScratchPool::new() }
     }
 
     /// Pool sized to available parallelism.
@@ -71,10 +197,14 @@ impl ThreadPool {
 
     /// Enqueue a job.
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.submit_boxed(Box::new(f));
+    }
+
+    fn submit_boxed(&self, job: Job) {
         self.shared.inflight.fetch_add(1, Ordering::SeqCst);
         {
             let mut q = self.shared.queue.lock().unwrap();
-            q.push_back(Box::new(f));
+            q.push_back(job);
         }
         self.shared.cv.notify_one();
     }
@@ -203,6 +333,139 @@ impl ThreadPool {
             // same behavior as std::thread::scope: the child's payload
             // (e.g. an assert message) reaches the caller intact
             std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Submit ONE borrow-capable task and return a join handle — the
+    /// asynchronous sibling of [`ThreadPool::run_scoped`], built for
+    /// stage overlap: the caller keeps computing on its own thread
+    /// while the task runs, then joins. This is the primitive behind
+    /// the engine's software-pipelined layer executor (layer `l`
+    /// attention inline on the caller — which is what keeps the
+    /// non-`Send` PJRT kernels legal — overlapped with layer `l+1` QKV
+    /// on a worker).
+    ///
+    /// Soundness mirrors `run_scoped`: the closure may borrow caller
+    /// state because [`ScopedJoin`] cannot outlive `'env`, and both
+    /// [`ScopedJoin::join`] and its `Drop` block until the task has
+    /// finished — the borrow can never dangle. While blocked, the
+    /// caller helps drain the queue, so a fan-out issued from inside a
+    /// pool job cannot deadlock the fixed worker set. A panicking task
+    /// parks its payload in the handle and rethrows on join.
+    fn submit_scoped<'env, R, F>(&'env self, f: F) -> ScopedJoin<'env, R>
+    where
+        R: Send + 'env,
+        F: FnOnce() -> R + Send + 'env,
+    {
+        let slot: Arc<TaskSlot<R>> = Arc::new(TaskSlot {
+            done: Mutex::new(None),
+            cv: Condvar::new(),
+        });
+        let slot2 = slot.clone();
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            let r = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(f),
+            );
+            // assign under the lock, notify while holding it: the
+            // joiner re-checks under the same lock, so no lost wakeup
+            let mut g = slot2.done.lock().unwrap();
+            *g = Some(r);
+            slot2.cv.notify_all();
+        });
+        // SAFETY: the job is only reachable from the queue until it
+        // runs, and ScopedJoin (tied to 'env) blocks in join() AND in
+        // Drop until the job has completed — everything `f` borrows
+        // strictly outlives every use.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(
+                job,
+            )
+        };
+        self.submit_boxed(job);
+        ScopedJoin { slot, pool: self, joined: false }
+    }
+
+    /// Overlap two stages: run `bg` on a pool worker while `fg` runs
+    /// inline on the calling thread, then return both results —
+    /// joining `bg` *before* returning even if `fg` panics, which is
+    /// what makes the borrow-capable background closure sound without
+    /// exposing a forgettable join handle. `fg` needs no `Send` (it
+    /// never leaves the caller), so stages that own non-`Send` state —
+    /// the PJRT attention kernels — always go in the foreground. This
+    /// is the engine's software-pipelining primitive.
+    pub fn overlap<'env, RF, RB>(
+        &'env self,
+        bg: impl FnOnce() -> RB + Send + 'env,
+        fg: impl FnOnce() -> RF,
+    ) -> (RF, RB)
+    where
+        RB: Send + 'env,
+    {
+        let task = self.submit_scoped(bg);
+        let f = fg();
+        (f, task.join())
+    }
+}
+
+struct TaskSlot<R> {
+    done: Mutex<Option<std::thread::Result<R>>>,
+    cv: Condvar,
+}
+
+/// Join handle of one `submit_scoped` task. Module-private on
+/// purpose: it must not be `mem::forget`-ten while the task borrows
+/// caller state (dropping blocks until the task completes — a
+/// forgotten handle would let the lifetime-erased borrow dangle), so
+/// the only exposed surface is the always-joining
+/// [`ThreadPool::overlap`].
+struct ScopedJoin<'env, R> {
+    slot: Arc<TaskSlot<R>>,
+    pool: &'env ThreadPool,
+    joined: bool,
+}
+
+impl<R> ScopedJoin<'_, R> {
+    /// Block until the task finishes and return its result,
+    /// repropagating a task panic on the calling thread. The caller
+    /// work-helps on the pool's queue while it waits.
+    fn join(mut self) -> R {
+        let r = self.wait_result();
+        self.joined = true;
+        match r {
+            Ok(v) => v,
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+    }
+
+    fn wait_result(&self) -> std::thread::Result<R> {
+        loop {
+            if let Some(r) = self.slot.done.lock().unwrap().take() {
+                return r;
+            }
+            if !self.pool.try_run_one() {
+                // queue drained but our task still runs on a worker —
+                // sleep until its completion notifies
+                let g = self.slot.done.lock().unwrap();
+                if g.is_some() {
+                    continue;
+                }
+                let mut g = self.slot.cv.wait(g).unwrap();
+                if let Some(r) = g.take() {
+                    return r;
+                }
+            }
+        }
+    }
+}
+
+impl<R> Drop for ScopedJoin<'_, R> {
+    fn drop(&mut self) {
+        if !self.joined {
+            // an unjoined handle (early return, unwind) must still
+            // block out the borrow; the task's own panic, if any, is
+            // swallowed here — the caller is already unwinding or has
+            // chosen not to look
+            let _ = self.wait_result();
         }
     }
 }
@@ -503,5 +766,171 @@ mod tests {
         let got: Result<Vec<usize>, String> =
             parallel_try_map(0, 4, |i| Ok(i));
         assert_eq!(got.unwrap(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn scratch_pool_zero_fills_and_recycles() {
+        let pool = ScratchPool::new();
+        let mut a = pool.take_f32(8);
+        assert_eq!(a, vec![0.0f32; 8]);
+        a.iter_mut().for_each(|v| *v = 9.0);
+        let cap = a.capacity();
+        pool.put_f32(a);
+        // the recycled lease reuses capacity and is zeroed again
+        let b = pool.take_f32(4);
+        assert_eq!(b, vec![0.0f32; 4]);
+        assert!(b.capacity() >= cap.min(4));
+        let (takes, fresh) = pool.stats();
+        assert_eq!(takes, 2);
+        assert_eq!(fresh, 1, "second take must reuse, not allocate");
+    }
+
+    #[test]
+    fn take_f32_any_skips_the_zero_fill_but_sizes_correctly() {
+        let pool = ScratchPool::new();
+        let mut a = pool.take_f32(6);
+        a.iter_mut().for_each(|v| *v = 5.0);
+        pool.put_f32(a);
+        // shrinking lease: old contents may show through (that is the
+        // point — the consumer overwrites every element)
+        let b = pool.take_f32_any(4);
+        assert_eq!(b.len(), 4);
+        pool.put_f32(b);
+        // growing lease: the new tail is zeroed, len is exact — and
+        // because the recycled buffer's capacity is far too small
+        // (1000 exceeds any amortized over-allocation of a 6-element
+        // vec), the growth is booked as a fresh allocation
+        let c = pool.take_f32_any(1000);
+        assert_eq!(c.len(), 1000);
+        assert!(c[6..].iter().all(|&x| x == 0.0));
+        let (takes, fresh) = pool.stats();
+        assert_eq!((takes, fresh), (3, 2));
+    }
+
+    #[test]
+    fn scratch_pool_steady_state_allocates_nothing() {
+        // lease/return cycles after warm-up never hit the allocator —
+        // the arena contract the decode tick relies on
+        let pool = ScratchPool::new();
+        for _ in 0..3 {
+            let v = pool.take_f32(64);
+            pool.put_f32(v);
+        }
+        let (_, fresh_before) = pool.stats();
+        for _ in 0..100 {
+            let v = pool.take_f32(64);
+            pool.put_f32(v);
+        }
+        let (_, fresh_after) = pool.stats();
+        assert_eq!(fresh_before, fresh_after, "steady state allocated");
+    }
+
+    #[test]
+    fn global_pool_owns_a_scratch_pool() {
+        let v = scratch().take_f32(16);
+        assert_eq!(v.len(), 16);
+        scratch().put_f32(v);
+    }
+
+    #[test]
+    fn submit_scoped_runs_borrowing_task_and_joins() {
+        let pool = ThreadPool::new(2);
+        let data: Vec<u64> = (0..100).collect();
+        let task = pool.submit_scoped(|| data.iter().sum::<u64>());
+        // caller keeps working while the task runs
+        let local: u64 = data.iter().map(|x| x * 2).sum();
+        let remote = task.join();
+        assert_eq!(remote, 4950);
+        assert_eq!(local, 9900);
+        assert_eq!(pool.inflight(), 0);
+    }
+
+    #[test]
+    fn submit_scoped_overlaps_with_inline_fanout() {
+        // the pipelined-executor shape: one scoped task in flight while
+        // the caller runs its own run_scoped fan-out on the same pool
+        let pool = ThreadPool::new(2);
+        let side = AtomicU64::new(0);
+        let task = pool.submit_scoped(|| {
+            side.fetch_add(7, Ordering::SeqCst);
+            7u64
+        });
+        let counter = AtomicU64::new(0);
+        pool.run_scoped(8, |_| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(task.join(), 7);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+        assert_eq!(side.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
+    fn submit_scoped_propagates_panics_on_join() {
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let task = pool.submit_scoped(|| {
+                    panic!("scoped boom");
+                });
+                task.join()
+            }),
+        );
+        assert!(caught.is_err(), "panic must reach the joiner");
+        // pool still serviceable afterwards
+        let t = pool.submit_scoped(|| 41 + 1);
+        assert_eq!(t.join(), 42);
+    }
+
+    #[test]
+    fn overlap_runs_both_sides_and_orders_results() {
+        let pool = ThreadPool::new(2);
+        let data: Vec<u64> = (0..64).collect();
+        let (fg, bg) = pool.overlap(
+            || data.iter().sum::<u64>(),
+            || "foreground",
+        );
+        assert_eq!(fg, "foreground");
+        assert_eq!(bg, 2016);
+        assert_eq!(pool.inflight(), 0);
+    }
+
+    #[test]
+    fn overlap_joins_background_even_when_foreground_panics() {
+        let pool = ThreadPool::new(2);
+        let flag = AtomicU64::new(0);
+        let caught = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.overlap(
+                    || {
+                        std::thread::sleep(
+                            std::time::Duration::from_millis(10),
+                        );
+                        flag.fetch_add(1, Ordering::SeqCst);
+                    },
+                    || {
+                        panic!("fg boom");
+                    },
+                )
+            }),
+        );
+        assert!(caught.is_err());
+        // the background task completed before overlap unwound
+        assert_eq!(flag.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn unjoined_scoped_handle_blocks_on_drop() {
+        let pool = ThreadPool::new(1);
+        let flag = AtomicU64::new(0);
+        {
+            let _task = pool.submit_scoped(|| {
+                std::thread::sleep(
+                    std::time::Duration::from_millis(20),
+                );
+                flag.fetch_add(1, Ordering::SeqCst);
+            });
+            // dropped unjoined: must block until the task completed
+        }
+        assert_eq!(flag.load(Ordering::SeqCst), 1);
     }
 }

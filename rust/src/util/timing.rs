@@ -1,0 +1,188 @@
+//! Per-phase wall-time accounting for the decode hot path.
+//!
+//! The engine owns one [`PhaseTimers`] and threads it (as an optional
+//! borrow) through the per-layer [`crate::attention::DecodePlan`]s, so
+//! the kernels can attribute time to `lut_build` / `scan` /
+//! `value_decode` while the engine itself books `qkv` and `mlp`.
+//! Counters are atomics: worker threads add durations concurrently and
+//! the serving loop drains a snapshot per run into
+//! [`crate::coordinator::ServingReport`].
+//!
+//! Semantics: each phase accumulates the *summed* duration of its
+//! timed sections across all threads and overlapped pipeline stages,
+//! so phase totals can legitimately exceed the run's wall time — they
+//! are a breakdown of where compute went, not a partition of the
+//! clock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// One timed phase of the decode tick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// per-query LUT construction (LOOKAT kernels)
+    LutBuild,
+    /// key scoring: the ADC lane scan, or dense Q·Kᵀ on fp16/int paths
+    Scan,
+    /// the attention tail: α·V accumulation or the fused blocked
+    /// weighted decode over PQ value codes
+    ValueDecode,
+    /// LN1 + QKV projection (engine stage)
+    Qkv,
+    /// attention-out projection + MLP tail (engine stage)
+    Mlp,
+}
+
+/// Concurrent per-phase accumulators (nanoseconds).
+#[derive(Debug, Default)]
+pub struct PhaseTimers {
+    lut_build_ns: AtomicU64,
+    scan_ns: AtomicU64,
+    value_decode_ns: AtomicU64,
+    qkv_ns: AtomicU64,
+    mlp_ns: AtomicU64,
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one timed section to a phase.
+    pub fn add(&self, phase: Phase, d: Duration) {
+        let ns = d.as_nanos() as u64;
+        self.cell(phase).fetch_add(ns, Ordering::Relaxed);
+    }
+
+    fn cell(&self, phase: Phase) -> &AtomicU64 {
+        match phase {
+            Phase::LutBuild => &self.lut_build_ns,
+            Phase::Scan => &self.scan_ns,
+            Phase::ValueDecode => &self.value_decode_ns,
+            Phase::Qkv => &self.qkv_ns,
+            Phase::Mlp => &self.mlp_ns,
+        }
+    }
+
+    /// Current totals without resetting.
+    pub fn snapshot(&self) -> PhaseTimes {
+        let s = |c: &AtomicU64| c.load(Ordering::Relaxed) as f64 / 1e9;
+        PhaseTimes {
+            lut_build_s: s(&self.lut_build_ns),
+            scan_s: s(&self.scan_ns),
+            value_decode_s: s(&self.value_decode_ns),
+            qkv_s: s(&self.qkv_ns),
+            mlp_s: s(&self.mlp_ns),
+        }
+    }
+
+    /// Drain the totals (read and reset) — one serving run's breakdown.
+    pub fn take(&self) -> PhaseTimes {
+        let s = |c: &AtomicU64| c.swap(0, Ordering::Relaxed) as f64 / 1e9;
+        PhaseTimes {
+            lut_build_s: s(&self.lut_build_ns),
+            scan_s: s(&self.scan_ns),
+            value_decode_s: s(&self.value_decode_ns),
+            qkv_s: s(&self.qkv_ns),
+            mlp_s: s(&self.mlp_ns),
+        }
+    }
+}
+
+/// A drained per-phase breakdown, in seconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseTimes {
+    pub lut_build_s: f64,
+    pub scan_s: f64,
+    pub value_decode_s: f64,
+    pub qkv_s: f64,
+    pub mlp_s: f64,
+}
+
+impl PhaseTimes {
+    /// Serialize as a flat JSON object (the `phases` block of
+    /// `ServingReport::to_json` / `BENCH_serving.json`).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("lut_build_s", Json::Num(self.lut_build_s));
+        o.set("scan_s", Json::Num(self.scan_s));
+        o.set("value_decode_s", Json::Num(self.value_decode_s));
+        o.set("qkv_s", Json::Num(self.qkv_s));
+        o.set("mlp_s", Json::Num(self.mlp_s));
+        o
+    }
+
+    /// Total attributed seconds across all phases.
+    pub fn total_s(&self) -> f64 {
+        self.lut_build_s
+            + self.scan_s
+            + self.value_decode_s
+            + self.qkv_s
+            + self.mlp_s
+    }
+}
+
+/// Time one section into an optional timer set. When `timers` is
+/// `None` (tests, standalone kernel use) the closure runs untimed —
+/// no clock reads on the fast path.
+#[inline]
+pub fn timed<R>(
+    timers: Option<&PhaseTimers>,
+    phase: Phase,
+    f: impl FnOnce() -> R,
+) -> R {
+    match timers {
+        None => f(),
+        Some(t) => {
+            let t0 = std::time::Instant::now();
+            let r = f();
+            t.add(phase, t0.elapsed());
+            r
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate_and_drain() {
+        let t = PhaseTimers::new();
+        t.add(Phase::Scan, Duration::from_millis(2));
+        t.add(Phase::Scan, Duration::from_millis(3));
+        t.add(Phase::Qkv, Duration::from_millis(1));
+        let snap = t.snapshot();
+        assert!((snap.scan_s - 0.005).abs() < 1e-9);
+        assert!((snap.qkv_s - 0.001).abs() < 1e-9);
+        assert_eq!(snap.lut_build_s, 0.0);
+        // take drains
+        let taken = t.take();
+        assert_eq!(taken, snap);
+        assert_eq!(t.snapshot(), PhaseTimes::default());
+        assert!((taken.total_s() - 0.006).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timed_books_into_the_right_phase() {
+        let t = PhaseTimers::new();
+        let r = timed(Some(&t), Phase::LutBuild, || 7);
+        assert_eq!(r, 7);
+        assert!(t.snapshot().lut_build_s >= 0.0);
+        // None skips the clock entirely but still runs the closure
+        assert_eq!(timed(None, Phase::Mlp, || 9), 9);
+        assert_eq!(t.snapshot().mlp_s, 0.0);
+    }
+
+    #[test]
+    fn json_has_all_phase_keys() {
+        let j = PhaseTimes::default().to_json();
+        for k in
+            ["lut_build_s", "scan_s", "value_decode_s", "qkv_s", "mlp_s"]
+        {
+            assert!(j.get(k).is_some(), "missing {k}");
+        }
+    }
+}

@@ -23,6 +23,7 @@ fn paper_cfg(backend: AttentionBackend) -> EngineConfig {
         calib_tokens: 128,
         decode_threads: 0,
         prefill_chunk: 0,
+        pipeline: true,
     }
 }
 
@@ -90,6 +91,7 @@ fn tiny_batcher(max_batch: usize) -> Batcher {
         calib_tokens: 48,
         decode_threads: 2,
         prefill_chunk: 0,
+        pipeline: true,
     })
     .unwrap();
     Batcher::new(

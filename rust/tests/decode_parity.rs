@@ -40,6 +40,7 @@ fn tiny_cfg_kv(
         calib_tokens: 96,
         decode_threads: threads,
         prefill_chunk: 0,
+        pipeline: true,
     }
 }
 
@@ -53,6 +54,7 @@ fn paper_cfg(backend: AttentionBackend, threads: usize) -> EngineConfig {
         calib_tokens: 128,
         decode_threads: threads,
         prefill_chunk: 0,
+        pipeline: true,
     }
 }
 
@@ -430,6 +432,83 @@ fn chunked_prefill_bit_identical_pjrt_backends() {
         let ch_toks: Vec<u32> =
             (0..2).map(|_| ch.decode_one(1).unwrap()).collect();
         assert_eq!(mono_toks, ch_toks, "{backend:?}");
+    }
+}
+
+// ---- software-pipelined layer executor ---------------------------------
+
+#[test]
+fn pipeline_bit_identical_on_mixed_ticks_and_deeper_models() {
+    // the pipelined executor must be invisible in outputs on the
+    // hardest tick shape: mixed decode + prefill-chunk entries, a
+    // deeper layer stack (more skewed iterations), and both the
+    // compressed and dense key backends with PQ values
+    let tok = ByteTokenizer::new();
+    let long = tok.encode(
+        "a long prompt that arrives in chunks while other sequences \
+         keep decoding through the pipelined executor",
+    );
+    assert!(long.len() > BLOCK_TOKENS);
+    for backend in [
+        AttentionBackend::Lookat { m: 4, k: 64 },
+        AttentionBackend::Fp16Exact,
+    ] {
+        let mk = |pipeline: bool| {
+            let mut cfg = tiny_cfg_kv(
+                backend.clone(),
+                ValueBackend::Pq { m: 4, k: 64 },
+                3,
+            );
+            cfg.model.n_layer = 4;
+            cfg.pipeline = pipeline;
+            cfg.prefill_chunk = 8;
+            Engine::build(&cfg).unwrap()
+        };
+        let run = |e: &mut Engine| -> Vec<u32> {
+            // two decoding sequences...
+            e.start_seq(1, &tok.encode("steady decoder one")).unwrap();
+            e.start_seq(2, &tok.encode("steady decoder two")).unwrap();
+            // ...plus a prompt fed in chunks through mixed ticks
+            e.begin_seq(3).unwrap();
+            let mut toks = Vec::new();
+            let mut off = 0usize;
+            while off < long.len() {
+                let end = (off + 8).min(long.len());
+                let entries = vec![
+                    TickEntry::Decode(1),
+                    TickEntry::Decode(2),
+                    TickEntry::Prefill {
+                        seq: 3,
+                        tokens: &long[off..end],
+                    },
+                ];
+                let outs = e.step_batch(&entries).unwrap();
+                toks.push(outs[0].token.unwrap());
+                toks.push(outs[1].token.unwrap());
+                off = end;
+            }
+            // all three decode together once the prefill lands
+            for _ in 0..4 {
+                let outs = e
+                    .step_batch(&[
+                        TickEntry::Decode(1),
+                        TickEntry::Decode(2),
+                        TickEntry::Decode(3),
+                    ])
+                    .unwrap();
+                for o in outs {
+                    toks.push(o.token.unwrap());
+                }
+            }
+            toks
+        };
+        let mut on = mk(true);
+        let mut off_e = mk(false);
+        assert_eq!(
+            run(&mut on),
+            run(&mut off_e),
+            "{backend:?}: pipeline on/off diverged"
+        );
     }
 }
 

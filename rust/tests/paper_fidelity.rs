@@ -289,6 +289,7 @@ fn combined_64x_key_value_pq_serving_path() {
                 cache: &cache,
                 d_k: D_K,
                 threads: 1,
+                timers: None,
                 items,
             };
             let outs = LookatKernel.decode_batch(&plan).unwrap();

@@ -4,12 +4,19 @@
 //! 1. K-Means is deterministic for a fixed `Pcg32` seed;
 //! 2. `PqCodec::encode_batch` codes are always `< K`;
 //! 3. ADC lookup scores equal naive decode-then-dot-product within 1e-4;
-//! 4. `pq::values::weighted_decode` (and its block-resident sibling)
-//!    equals the naive decode-then-weighted-sum within 1e-4.
+//! 4. `pq::values::weighted_decode` (and its lane-resident sibling)
+//!    equals the naive decode-then-weighted-sum within 1e-4;
+//! 5. the subspace-major fast-scan (`LookupTable::scores_lanes`) and
+//!    the grouped value weighted-decode
+//!    (`pq::values::weighted_decode_lanes`) are *bit-identical* to the
+//!    flat token-major references across uneven group sizes, partial
+//!    tail groups and every unrolled `m` ∈ {2, 4, 8, 16} plus the
+//!    generic path.
 
 use lookat::pq::kmeans::kmeans;
 use lookat::pq::{LookupTable, PqCodec, TrainOpts};
 use lookat::prop_assert;
+use lookat::testkit::fixtures::interleave_lanes;
 use lookat::util::proptest::Gen;
 use lookat::util::rng::Pcg32;
 
@@ -169,17 +176,134 @@ fn weighted_decode_equals_decode_then_weighted_sum_within_1e4() {
             }
         }
         let bt = g.usize_in(1, n);
-        let blocked = lookat::pq::values::weighted_decode_blocks(
+        let lanes = interleave_lanes(&codes, m, bt);
+        let blocked = lookat::pq::values::weighted_decode_lanes(
             &weights,
-            codes.chunks(bt * m),
+            lanes.iter().map(|(l, n)| (&l[..], *n)),
             &codec,
         );
         if got.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
             != blocked.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
         {
             return Err(format!(
-                "blocked decode diverged from flat (bt={bt})"
+                "lane decode diverged from flat (bt={bt})"
             ));
+        }
+        Ok(())
+    });
+}
+
+/// Every subspace count the scan specializes on, plus one that takes
+/// the generic path (m = 6: d_k = 6·d_sub, never unrolled).
+const SCAN_MS: [usize; 5] = [2, 4, 8, 16, 6];
+
+#[test]
+fn lane_scan_bit_identical_to_flat_for_every_m() {
+    // the fast-scan layout contract: subspace-major lanes with uneven
+    // group sizes and a partial tail must score *bit-identically* to
+    // the token-major reference, because each token still accumulates
+    // its subspaces in order 0..m
+    prop_assert!("lane-scan-bit-identical", 30, |g: &mut Gen| {
+        let m = *g.choose(&SCAN_MS);
+        let d_sub = *g.choose(&[2usize, 4, 8]);
+        let d_k = m * d_sub;
+        let k = *g.choose(&[8usize, 16, 64]);
+        let n = g.usize_in(1, 150);
+        let keys: Vec<f32> =
+            g.normal_vec(n * d_k).iter().map(|v| v * 0.5).collect();
+        let codec = PqCodec::train(
+            &keys,
+            d_k,
+            m,
+            k,
+            &TrainOpts { iters: 4, seed: g.rng.next_u64(), tol: 1e-3 },
+        );
+        let codes = codec.encode_batch(&keys, n);
+        let q: Vec<f32> =
+            g.normal_vec(d_k).iter().map(|v| v * 0.5).collect();
+        let lut = LookupTable::build(&q, &codec.codebook);
+        let flat = lut.scores(&codes, n);
+        // group size drawn to cover: 1 (degenerate), < n (partial
+        // tail), >= n (single partial group)
+        let group = g.usize_in(1, n + 8);
+        let lanes = interleave_lanes(&codes, m, group);
+        let mut out = Vec::new();
+        lut.scores_lanes(
+            lanes.iter().map(|(l, n)| (&l[..], *n)),
+            &mut out,
+        );
+        if out.len() != n {
+            return Err(format!(
+                "lane scan returned {} scores for {n} tokens",
+                out.len()
+            ));
+        }
+        for (l, (a, b)) in flat.iter().zip(&out).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!(
+                    "score {l} diverged: flat {a} vs lanes {b} \
+                     (m={m}, k={k}, group={group})"
+                ));
+            }
+        }
+        // the scalar reference agrees bit-for-bit too (order 0..m)
+        let probe = g.usize_in(0, n - 1);
+        let s = lut.score(&codes[probe * m..(probe + 1) * m]);
+        if s.to_bits() != flat[probe].to_bits() {
+            return Err(format!(
+                "scalar score diverged at {probe} (m={m})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn grouped_value_decode_bit_identical_for_every_m() {
+    // the value-side sibling: grouped scatter order per accumulator
+    // cell is token order, exactly like the flat path, for every
+    // unrolled m and the generic path
+    prop_assert!("lane-value-decode-bit-identical", 30, |g: &mut Gen| {
+        let m = *g.choose(&SCAN_MS);
+        let d_sub = *g.choose(&[2usize, 4]);
+        let d_k = m * d_sub;
+        let k = *g.choose(&[8usize, 32]);
+        let n = g.usize_in(1, 120);
+        let values: Vec<f32> =
+            g.normal_vec(n * d_k).iter().map(|v| v * 0.5).collect();
+        let codec = PqCodec::train(
+            &values,
+            d_k,
+            m,
+            k,
+            &TrainOpts { iters: 4, seed: g.rng.next_u64(), tol: 1e-3 },
+        );
+        let codes = codec.encode_batch(&values, n);
+        let mut weights: Vec<f32> = (0..n)
+            .map(|_| if g.bool() { g.rng.next_f32() } else { 0.0 })
+            .collect();
+        let s: f32 = weights.iter().sum();
+        if s > 0.0 {
+            for w in weights.iter_mut() {
+                *w /= s;
+            }
+        }
+        let flat = lookat::pq::values::weighted_decode(
+            &weights, &codes, &codec);
+        let group = g.usize_in(1, n + 8);
+        let lanes = interleave_lanes(&codes, m, group);
+        let grouped = lookat::pq::values::weighted_decode_lanes(
+            &weights,
+            lanes.iter().map(|(l, n)| (&l[..], *n)),
+            &codec,
+        );
+        for (i, (a, b)) in flat.iter().zip(&grouped).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!(
+                    "dim {i} diverged: flat {a} vs grouped {b} \
+                     (m={m}, k={k}, group={group})"
+                ));
+            }
         }
         Ok(())
     });
