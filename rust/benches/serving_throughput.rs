@@ -15,8 +15,12 @@
 //!   trajectory CI uploads (tokens/s per backend per batch width with
 //!   per-phase breakdowns, the batch-16-vs-1 speedup, and the
 //!   scenarios: the oversubscribed long-prompt interference run under
-//!   fcfs-monolithic vs preempt + chunked prefill, and the 12-layer
-//!   `--pipeline on|off` A/B of the software-pipelined layer executor)
+//!   fcfs-monolithic vs preempt + chunked prefill, the 12-layer
+//!   `--pipeline on|off` A/B of the software-pipelined layer executor,
+//!   the preempt-heavy swap-tier A/B recording swap-vs-reprefill
+//!   speedup, and the shared-system-prompt prefix-cache A/B recording
+//!   blocks shared — `lookat bench-check` gates every scenario's
+//!   `*_tok_s` metric alongside the backend sweep)
 
 use lookat::coordinator::{
     AttentionBackend, BatcherConfig, EngineConfig, Router, RouterConfig,
@@ -60,11 +64,13 @@ fn bench_backend(
             decode_threads: 0,
             prefill_chunk: 0,
             pipeline: true,
+            prefix_cache: false,
         },
         batcher: BatcherConfig {
             max_batch: 1,
             max_queue: 256,
             policy: SchedulerPolicy::Fcfs,
+            ..BatcherConfig::default()
         },
         max_prompt_tokens: 96,
     })?;
@@ -135,11 +141,13 @@ fn scheduler_scenarios() -> anyhow::Result<Json> {
                 decode_threads: 0,
                 prefill_chunk: chunk,
                 pipeline: true,
+                prefix_cache: false,
             },
             batcher: BatcherConfig {
                 max_batch: 16,
                 max_queue: 256,
                 policy,
+                ..BatcherConfig::default()
             },
             max_prompt_tokens: LONG_PROMPT_TOKENS,
         })
@@ -239,11 +247,13 @@ fn pipeline_scenario() -> anyhow::Result<Json> {
                 decode_threads: 0,
                 prefill_chunk: 0,
                 pipeline,
+                prefix_cache: false,
             },
             batcher: BatcherConfig {
                 max_batch: 16,
                 max_queue: 64,
                 policy: SchedulerPolicy::Fcfs,
+                ..BatcherConfig::default()
             },
             max_prompt_tokens: 48,
         })
@@ -291,6 +301,174 @@ fn pipeline_scenario() -> anyhow::Result<Json> {
     Ok(o)
 }
 
+/// The swap-tier scenario: an oversubscribed preempt-heavy trace
+/// (12 medium-context requests over a 10-block cache at batch width 8)
+/// served twice — `--swap off` re-prefills every preemption victim,
+/// `--swap on` spills its blocks to the host-side store and restores
+/// them with a copy. The headline figure is `swap_vs_reprefill`:
+/// decode tokens/s with the swap tier relative to the recompute path
+/// (outputs are bit-identical either way; tests/decode_parity.rs
+/// asserts it).
+fn swap_scenario() -> anyhow::Result<Json> {
+    let build = |swap: bool| {
+        let mut model = ModelConfig::gpt2_layer0();
+        model.n_layer = 2;
+        Router::build(RouterConfig {
+            engine: EngineConfig {
+                model,
+                backend: AttentionBackend::Lookat { m: 4, k: 256 },
+                value_backend: ValueBackend::Fp32,
+                seed: 77,
+                cache_blocks: 10,
+                calib_tokens: 128,
+                decode_threads: 0,
+                prefill_chunk: 32,
+                pipeline: true,
+                prefix_cache: false,
+            },
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_queue: 64,
+                policy: SchedulerPolicy::Preempt,
+                swap,
+                ..BatcherConfig::default()
+            },
+            max_prompt_tokens: 96,
+        })
+    };
+    let trace = || {
+        TraceGenerator::new(TraceConfig {
+            rate: 1000.0,
+            num_requests: 12,
+            prompt_chars: (100, 200),
+            gen_tokens: (24, 48),
+            seed: 7411,
+        })
+        .generate()
+    };
+
+    let mut off_router = build(false)?;
+    let reqs = off_router.tokenize_trace(&trace());
+    let off = off_router.serve_trace(reqs)?;
+    println!("scenario swap-off        {}", off.pretty());
+    drop(off_router);
+
+    let mut on_router = build(true)?;
+    let reqs = on_router.tokenize_trace(&trace());
+    let on = on_router.serve_trace(reqs)?;
+    println!("scenario swap-on         {}", on.pretty());
+
+    let speedup =
+        on.throughput_tok_s() / off.throughput_tok_s().max(1e-12);
+    println!(
+        "scenario swap_preempt_heavy: decode tok/s {:.1} -> {:.1} \
+         ({speedup:.2}x with --swap on; {} spills, {} restores)",
+        off.throughput_tok_s(),
+        on.throughput_tok_s(),
+        on.swap_outs,
+        on.swap_ins
+    );
+
+    let mut o = Json::obj();
+    o.set("scenario", Json::Str("swap_preempt_heavy".into()));
+    o.set("batch", Json::Num(8.0));
+    o.set("swap_off_tok_s", Json::Num(off.throughput_tok_s()));
+    o.set("swap_on_tok_s", Json::Num(on.throughput_tok_s()));
+    o.set("swap_vs_reprefill", Json::Num(speedup));
+    o.set("preemptions", Json::Num(on.preemptions as f64));
+    o.set("swap_outs", Json::Num(on.swap_outs as f64));
+    o.set("swap_ins", Json::Num(on.swap_ins as f64));
+    Ok(o)
+}
+
+/// The prefix-cache scenario: twelve sessions opening with the same
+/// 160-char system prompt (5 full blocks at 32 tokens/block) and
+/// distinct tails, served at batch width 4 with `--prefix-cache off`
+/// vs `on`. Generation lengths are staggered so completions free
+/// slots one at a time and every later admission overlaps live prefix
+/// holders. Records the shared-prefill speedup plus how many physical
+/// blocks sharing saved at peak.
+fn prefix_scenario() -> anyhow::Result<Json> {
+    let build = |prefix_cache: bool| {
+        let mut model = ModelConfig::gpt2_layer0();
+        model.n_layer = 2;
+        Router::build(RouterConfig {
+            engine: EngineConfig {
+                model,
+                backend: AttentionBackend::Lookat { m: 4, k: 256 },
+                value_backend: ValueBackend::Fp32,
+                seed: 77,
+                cache_blocks: 128,
+                calib_tokens: 128,
+                decode_threads: 0,
+                prefill_chunk: 0,
+                pipeline: true,
+                prefix_cache,
+            },
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_queue: 64,
+                policy: SchedulerPolicy::Fcfs,
+                ..BatcherConfig::default()
+            },
+            max_prompt_tokens: 256,
+        })
+    };
+    let specs = || -> Vec<RequestSpec> {
+        let system = lookat::workload::Corpus::new(Genre::Technical, 31)
+            .generate(160);
+        (0..12u64)
+            .map(|i| RequestSpec {
+                id: i,
+                arrival_s: 0.0,
+                genre: Genre::Technical,
+                prompt: format!(
+                    "{system} session {i}: {}",
+                    lookat::workload::Corpus::new(Genre::Prose, 100 + i)
+                        .generate(30)
+                ),
+                gen_tokens: 12 + (i as usize % 5),
+            })
+            .collect()
+    };
+
+    let mut off_router = build(false)?;
+    let reqs = off_router.tokenize_trace(&specs());
+    let off = off_router.serve_trace(reqs)?;
+    println!("scenario prefix-off      {}", off.pretty());
+    drop(off_router);
+
+    let mut on_router = build(true)?;
+    let reqs = on_router.tokenize_trace(&specs());
+    let on = on_router.serve_trace(reqs)?;
+    println!("scenario prefix-on       {}", on.pretty());
+
+    let speedup =
+        on.throughput_tok_s() / off.throughput_tok_s().max(1e-12);
+    println!(
+        "scenario shared_prefix: decode tok/s {:.1} -> {:.1} \
+         ({speedup:.2}x with --prefix-cache on; {} hits, \
+         {} blocks shared at peak)",
+        off.throughput_tok_s(),
+        on.throughput_tok_s(),
+        on.prefix_hits,
+        on.shared_blocks_peak
+    );
+
+    let mut o = Json::obj();
+    o.set("scenario", Json::Str("shared_prefix".into()));
+    o.set("batch", Json::Num(4.0));
+    o.set("prefix_off_tok_s", Json::Num(off.throughput_tok_s()));
+    o.set("prefix_on_tok_s", Json::Num(on.throughput_tok_s()));
+    o.set("prefix_speedup", Json::Num(speedup));
+    o.set("prefix_hits", Json::Num(on.prefix_hits as f64));
+    o.set(
+        "shared_blocks_peak",
+        Json::Num(on.shared_blocks_peak as f64),
+    );
+    Ok(o)
+}
+
 fn main() -> anyhow::Result<()> {
     let combos = [
         // the pre-existing key-backend sweep (fp32 values)
@@ -321,10 +499,15 @@ fn main() -> anyhow::Result<()> {
     }
     let scenarios = scheduler_scenarios()?;
     let pipeline = pipeline_scenario()?;
+    let swap = swap_scenario()?;
+    let prefix = prefix_scenario()?;
 
     let mut top = Json::obj();
     top.set("bench", Json::Str("serving_throughput".into()));
-    top.set("scenarios", Json::Arr(vec![scenarios, pipeline]));
+    top.set(
+        "scenarios",
+        Json::Arr(vec![scenarios, pipeline, swap, prefix]),
+    );
     top.set(
         "batch_sizes",
         Json::Arr(BATCH_SIZES.iter().map(|&b| Json::Num(b as f64)).collect()),

@@ -8,17 +8,19 @@
 //! (`EngineConfig::prefill_chunk` tokens, 0 = monolithic), so long
 //! prompts interleave with decode instead of stalling it. Under
 //! [`SchedulerPolicy::Preempt`], block pressure evicts the
-//! lowest-priority running sequence — its blocks are freed without any
-//! codec teardown and it re-enters the queue carrying its
-//! generated-so-far tokens for cheap code-level re-prefill; the engine
-//! guarantees the resumed logits are bit-identical to the
-//! uninterrupted run.
+//! lowest-priority running sequence. With the swap tier enabled
+//! (`BatcherConfig::swap`) a [`SwapCostModel`] picks per victim between
+//! spilling its cache blocks to the host-side store (restored
+//! bit-identically on re-admission — no recompute at all) and the
+//! legacy path of freeing the blocks and re-prefilling from tokens;
+//! either way the engine guarantees the resumed logits are
+//! bit-identical to the uninterrupted run.
 
 use std::collections::VecDeque;
 
 use super::engine::{Engine, TickEntry};
 use super::request::{CompletedRequest, Request};
-use crate::kvcache::{SeqId, BLOCK_TOKENS};
+use crate::kvcache::{CacheError, SeqId, BLOCK_TOKENS};
 
 /// How the batcher arbitrates cache blocks between running sequences.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,6 +37,41 @@ pub enum SchedulerPolicy {
     Preempt,
 }
 
+/// Recompute-vs-swap cost model consulted when a sequence is preempted
+/// under [`SchedulerPolicy::Preempt`]: spill the cache to the host-side
+/// swap tier when copying it out and back is estimated cheaper than
+/// re-running prefill over the sequence's context. With LOOKAT's
+/// 1 B/subspace codes the spill is ~64× smaller than fp16, so swap wins
+/// for all but the shortest contexts.
+#[derive(Clone, Copy, Debug)]
+pub struct SwapCostModel {
+    /// host copy bandwidth for spill + restore, bytes/s
+    pub copy_bytes_per_s: f64,
+    /// prefill recompute throughput, tokens/s
+    pub prefill_tok_s: f64,
+}
+
+impl Default for SwapCostModel {
+    fn default() -> Self {
+        Self {
+            copy_bytes_per_s: 8e9,
+            prefill_tok_s: 2000.0,
+        }
+    }
+}
+
+impl SwapCostModel {
+    /// Swap when round-tripping `spill_bytes` through the host costs
+    /// less than re-prefilling `ctx_tokens`.
+    pub fn should_swap(&self, spill_bytes: usize, ctx_tokens: usize) -> bool {
+        let copy_s =
+            2.0 * spill_bytes as f64 / self.copy_bytes_per_s.max(1.0);
+        let recompute_s =
+            ctx_tokens as f64 / self.prefill_tok_s.max(1e-9);
+        copy_s < recompute_s
+    }
+}
+
 /// Batching policy knobs.
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
@@ -45,6 +82,11 @@ pub struct BatcherConfig {
     pub max_queue: usize,
     /// block arbitration policy
     pub policy: SchedulerPolicy,
+    /// spill preempted sequences to the swap tier instead of
+    /// re-prefilling, when the cost model agrees (Preempt policy only)
+    pub swap: bool,
+    /// recompute-vs-swap decision model
+    pub swap_cost: SwapCostModel,
 }
 
 impl Default for BatcherConfig {
@@ -53,6 +95,8 @@ impl Default for BatcherConfig {
             max_batch: 8,
             max_queue: 64,
             policy: SchedulerPolicy::Fcfs,
+            swap: true,
+            swap_cost: SwapCostModel::default(),
         }
     }
 }
@@ -67,6 +111,9 @@ struct Queued {
     first_admitted_s: Option<f64>,
     /// original first-token time, preserved across preemptions
     first_token_s: Option<f64>,
+    /// cache state is resident in the engine's swap tier — re-admission
+    /// restores it instead of re-prefilling
+    swapped: bool,
 }
 
 impl Queued {
@@ -76,6 +123,7 @@ impl Queued {
             resume: Vec::new(),
             first_admitted_s: None,
             first_token_s: None,
+            swapped: false,
         }
     }
 
@@ -114,6 +162,12 @@ pub struct Batcher {
     /// sequences evicted under block pressure (cumulative; drained by
     /// the router per serving run)
     pub preemptions: usize,
+    /// preemptions that spilled to the swap tier instead of freeing
+    pub swap_outs: usize,
+    /// re-admissions restored from the swap tier (no re-prefill)
+    pub swap_ins: usize,
+    /// admissions that attached shared prefix-cache blocks
+    pub prefix_hits: usize,
 }
 
 impl Batcher {
@@ -126,6 +180,9 @@ impl Batcher {
             completed: Vec::new(),
             rejected: Vec::new(),
             preemptions: 0,
+            swap_outs: 0,
+            swap_ins: 0,
+            prefix_hits: 0,
         }
     }
 
@@ -187,6 +244,54 @@ impl Batcher {
         let total = self.engine.total_blocks();
         while self.active.len() < self.cfg.max_batch {
             let Some(front) = self.queue.front() else { break };
+            // swap-tier re-admission: the sequence's cache state is
+            // resident in the spill store — restore it wholesale
+            // instead of re-prefilling (its peak already passed
+            // admission once, so no peak-fit re-check)
+            if front.swapped {
+                let need = self.engine.swapped_blocks(front.req.id);
+                if need > budget {
+                    break; // wait for cache space
+                }
+                let mut q = self.queue.pop_front().unwrap();
+                match self.engine.swap_in(q.req.id) {
+                    Ok(()) => {
+                        budget -= need;
+                        self.swap_ins += 1;
+                        let mut prefill_src = q.req.prompt.clone();
+                        prefill_src.extend_from_slice(&q.resume);
+                        // everything through pos is already in cache:
+                        // a decode-phase victim resumes decoding
+                        // immediately, a mid-prefill one continues
+                        // chunking where it stopped
+                        let prefilled = self
+                            .engine
+                            .seq_pos(q.req.id)
+                            .unwrap_or(0)
+                            .min(prefill_src.len());
+                        self.active.push(Active {
+                            admitted_s: q.first_admitted_s.unwrap_or(now_s),
+                            first_token_s: q.first_token_s.take(),
+                            prefill_src,
+                            prefilled,
+                            generated: std::mem::take(&mut q.resume),
+                            req: q.req,
+                        });
+                    }
+                    Err(CacheError::OutOfBlocks) => {
+                        // budget raced with the engine: retry later
+                        self.queue.push_front(q);
+                        break;
+                    }
+                    Err(_) => {
+                        // spill entry unusable — fall back to the
+                        // re-prefill path on the next iteration
+                        q.swapped = false;
+                        self.queue.push_front(q);
+                    }
+                }
+                continue;
+            }
             // a request whose peak context (prompt + full generation)
             // can never fit in the whole cache would either head-of-line
             // block forever (fcfs) or hard-error mid-generation
@@ -202,19 +307,28 @@ impl Batcher {
                 break; // wait for cache space
             }
             let mut q = self.queue.pop_front().unwrap();
-            if self.engine.begin_seq(q.req.id).is_err() {
-                // id collision with a live sequence: refuse it
-                self.rejected.push(q.req.id);
-                continue;
-            }
-            budget -= need;
             let mut prefill_src = q.req.prompt.clone();
             prefill_src.extend_from_slice(&q.resume);
+            let shared = match self
+                .engine
+                .begin_seq_with_prefix(q.req.id, &prefill_src)
+            {
+                Ok(shared) => shared,
+                Err(_) => {
+                    // id collision with a live sequence: refuse it
+                    self.rejected.push(q.req.id);
+                    continue;
+                }
+            };
+            if shared > 0 {
+                self.prefix_hits += 1;
+            }
+            budget -= need.min(budget);
             self.active.push(Active {
                 admitted_s: q.first_admitted_s.unwrap_or(now_s),
                 first_token_s: q.first_token_s.take(),
                 prefill_src,
-                prefilled: 0,
+                prefilled: shared,
                 generated: std::mem::take(&mut q.resume),
                 req: q.req,
             });
@@ -252,9 +366,11 @@ impl Batcher {
     }
 
     /// Evict the lowest-priority active sequence (latest arrival, ties
-    /// to the larger id): blocks freed, request re-queued at the front
-    /// carrying its generated-so-far tokens. Returns false when there
-    /// is nothing to evict.
+    /// to the larger id). When the swap tier is on and the cost model
+    /// favors it, the victim's cache blocks spill to the host-side
+    /// store for bit-identical restore; otherwise its blocks are freed
+    /// and it re-queues carrying its generated-so-far tokens for
+    /// re-prefill. Returns false when there is nothing to evict.
     fn preempt_one(&mut self) -> bool {
         let Some(idx) = (0..self.active.len()).max_by(|&i, &j| {
             let a = &self.active[i].req;
@@ -266,12 +382,27 @@ impl Batcher {
             return false;
         };
         let a = self.active.swap_remove(idx);
-        let _ = self.engine.release(a.req.id);
+        let id = a.req.id;
+        // context that would need recomputing on the re-prefill path
+        let ctx = a.req.prompt.len() + a.generated.len();
+        let swapped = self.cfg.swap
+            && ctx > 0
+            && self
+                .cfg
+                .swap_cost
+                .should_swap(self.engine.seq_spill_bytes(id), ctx)
+            && self.engine.swap_out(id).is_ok();
+        if swapped {
+            self.swap_outs += 1;
+        } else {
+            let _ = self.engine.release(id);
+        }
         self.preemptions += 1;
         self.queue.push_front(Queued {
             resume: a.generated,
             first_admitted_s: Some(a.admitted_s),
             first_token_s: a.first_token_s,
+            swapped,
             req: a.req,
         });
         true
@@ -351,7 +482,16 @@ impl Batcher {
                     a.generated.push(tok);
                     produced += 1;
                 }
-                None => a.prefilled += spans[i],
+                None => {
+                    a.prefilled += spans[i];
+                    if !a.prefilling() {
+                        // prefill just finished: publish its full
+                        // blocks into the prefix cache (no-op when the
+                        // cache is disabled)
+                        self.engine
+                            .register_prefix(a.req.id, &a.prefill_src);
+                    }
+                }
             }
         }
 
@@ -406,11 +546,17 @@ mod tests {
             decode_threads: 2,
             prefill_chunk,
             pipeline: true,
+            prefix_cache: false,
         })
         .unwrap();
         Batcher::new(
             engine,
-            BatcherConfig { max_batch, max_queue, policy },
+            BatcherConfig {
+                max_batch,
+                max_queue,
+                policy,
+                ..BatcherConfig::default()
+            },
         )
     }
 
@@ -477,6 +623,7 @@ mod tests {
             decode_threads: 2,
             prefill_chunk: 0,
             pipeline: true,
+            prefix_cache: false,
         })
         .unwrap();
         let mut b = Batcher::new(
@@ -485,6 +632,7 @@ mod tests {
                 max_batch: 2,
                 max_queue: 16,
                 policy: SchedulerPolicy::Fcfs,
+                ..BatcherConfig::default()
             },
         );
         for i in 0..4 {
@@ -644,6 +792,92 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn swap_tier_resume_matches_reprefill_path() {
+        // same oversubscribed workload with the swap tier on and off:
+        // spilled-and-restored sequences must produce exactly the
+        // tokens the re-prefill path produces
+        let run = |swap: bool| {
+            let mut b = mk_batcher_policy(
+                4, 32, 3, SchedulerPolicy::Preempt, 8);
+            b.cfg.swap = swap;
+            for i in 0..6 {
+                assert!(b.submit(req(i, 25)));
+            }
+            drain(&mut b);
+            assert_eq!(b.completed.len(), 6);
+            assert_eq!(b.engine().cache_stats().tokens, 0);
+            let mut toks: Vec<(u64, Vec<u32>)> = b
+                .completed
+                .iter()
+                .map(|c| (c.id, c.generated.clone()))
+                .collect();
+            toks.sort();
+            (toks, b.swap_outs, b.swap_ins)
+        };
+        let (with_swap, outs, ins) = run(true);
+        let (without, outs_off, _) = run(false);
+        assert!(outs > 0, "oversubscription must exercise the swap tier");
+        assert_eq!(ins, outs, "every spilled sequence must be restored");
+        assert_eq!(outs_off, 0, "swap off must never spill");
+        assert_eq!(with_swap, without,
+                   "swap-tier restore must match re-prefill tokens");
+    }
+
+    #[test]
+    fn prefix_cache_hit_skips_shared_prefill() {
+        let engine = Engine::build(&EngineConfig {
+            model: ModelConfig::test_tiny(),
+            backend: AttentionBackend::Fp16Exact,
+            value_backend:
+                crate::coordinator::engine::ValueBackend::Fp32,
+            seed: 3,
+            cache_blocks: 64,
+            calib_tokens: 64,
+            decode_threads: 2,
+            prefill_chunk: 0,
+            pipeline: true,
+            prefix_cache: true,
+        })
+        .unwrap();
+        let mut b = Batcher::new(
+            engine,
+            BatcherConfig {
+                max_batch: 2,
+                max_queue: 8,
+                policy: SchedulerPolicy::Fcfs,
+                ..BatcherConfig::default()
+            },
+        );
+        // 69 tokens: two full blocks worth of shareable prefix
+        let prompt = vec![7u32; 2 * BLOCK_TOKENS + 5];
+        b.submit(Request {
+            id: 1,
+            prompt: prompt.clone(),
+            max_new_tokens: 8,
+            arrival_s: 0.0,
+        });
+        b.admit(0.0);
+        b.step(0.0).unwrap(); // monolithic prefill registers the prefix
+        b.submit(Request {
+            id: 2,
+            prompt,
+            max_new_tokens: 8,
+            arrival_s: 0.1,
+        });
+        b.admit(0.1);
+        assert_eq!(b.prefix_hits, 1,
+                   "second admission must attach the shared prefix");
+        assert!(b.engine().cache_stats().shared_blocks >= 2);
+        drain(&mut b);
+        assert_eq!(b.completed.len(), 2);
+        assert_eq!(b.completed[0].generated, b.completed[1].generated,
+                   "shared-prefix sequence must decode identically");
+        let s = b.engine().cache_stats();
+        assert_eq!(s.blocks_allocated, 0, "no refcount leaks");
+        assert_eq!(s.shared_blocks, 0);
     }
 
     #[test]

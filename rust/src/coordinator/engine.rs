@@ -37,7 +37,8 @@ use crate::attention::kernel::{
 };
 use crate::attention::{AttentionKernel, AttnOutput, DecodePlan, WorkItem};
 use crate::kvcache::{
-    CacheError, KeyStorage, KvCache, SeqId, ValueStorage, BLOCK_TOKENS,
+    BlockId, CacheError, KeyStorage, KvCache, SeqId, ValueStorage,
+    BLOCK_TOKENS,
 };
 use crate::model::{Gpt2, ModelConfig, PrefillOutput, Weights};
 use crate::pq::{PqCodec, TrainOpts};
@@ -137,6 +138,11 @@ pub struct EngineConfig {
     /// either way (per-row math never changes, only scheduling);
     /// ticks with < 2 entries or a single worker run the serial path
     pub pipeline: bool,
+    /// hash-keyed copy-on-write prefix cache (`--prefix-cache on|off`):
+    /// full prompt blocks are content-hashed at prefill completion and
+    /// later sequences whose prompts start with the same token blocks
+    /// attach the physical blocks instead of recomputing them
+    pub prefix_cache: bool,
 }
 
 impl Default for EngineConfig {
@@ -151,6 +157,7 @@ impl Default for EngineConfig {
             decode_threads: 0,
             prefill_chunk: 0,
             pipeline: true,
+            prefix_cache: false,
         }
     }
 }
@@ -197,6 +204,40 @@ struct SeqMeta {
     last_hidden: Vec<f32>,
 }
 
+/// One shared full prompt block: its exact tokens (hash-collision
+/// verification), one physical block id per layer, and how many live
+/// sequences hold it (registered or attached). The entry is dropped
+/// when the last holder releases — the block ids are only valid while
+/// some holder's per-layer refcounts keep the blocks alive.
+struct PrefixEntry {
+    tokens: Vec<u32>,
+    blocks: Vec<BlockId>,
+    holders: usize,
+}
+
+/// Chain-hash-keyed index of shared prompt blocks. The key for block
+/// `i` hashes block `i-1`'s key plus block `i`'s tokens, so a lookup
+/// that matches k blocks proves the full k-block token prefix matches.
+#[derive(Default)]
+struct PrefixIndex {
+    entries: std::collections::HashMap<u64, PrefixEntry>,
+    /// which entry hashes each live sequence holds
+    held: std::collections::HashMap<SeqId, Vec<u64>>,
+}
+
+/// FNV-1a over a parent chain hash and one block's token bytes.
+fn chain_hash(parent: u64, tokens: &[u32]) -> u64 {
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = parent ^ 0xcbf29ce484222325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
 /// The engine: model + per-layer caches + batched attention kernel.
 pub struct Engine {
     pub model: Gpt2,
@@ -204,6 +245,11 @@ pub struct Engine {
     pub value_backend: ValueBackend,
     caches: Vec<KvCache>,
     seqs: std::collections::HashMap<SeqId, SeqMeta>,
+    /// decode-state of swapped-out sequences (their cache content lives
+    /// in each layer's spill store until swap-in)
+    swapped_meta: std::collections::HashMap<SeqId, SeqMeta>,
+    prefix: PrefixIndex,
+    prefix_cache: bool,
     kernel: Box<dyn AttentionKernel>,
     threads: usize,
     prefill_chunk: usize,
@@ -310,6 +356,9 @@ impl Engine {
             value_backend: cfg.value_backend.clone(),
             caches,
             seqs: std::collections::HashMap::new(),
+            swapped_meta: std::collections::HashMap::new(),
+            prefix: PrefixIndex::default(),
+            prefix_cache: cfg.prefix_cache,
             kernel,
             threads,
             prefill_chunk: cfg.prefill_chunk,
@@ -482,6 +531,208 @@ impl Engine {
             SeqMeta { pos: 0, last_hidden: Vec::new() },
         );
         Ok(())
+    }
+
+    /// Register an empty sequence and, when the prefix cache is on,
+    /// attach every leading full prompt block already resident from an
+    /// earlier sequence with the same token prefix. Returns the number
+    /// of prompt tokens covered by attached blocks (0 with the cache
+    /// off or on a miss) — the scheduler skips prefilling them. At
+    /// least the last prompt token is always left to prefill so the
+    /// sequence still produces its decode hidden state.
+    pub fn begin_seq_with_prefix(
+        &mut self,
+        id: SeqId,
+        prompt: &[u32],
+    ) -> Result<usize, CacheError> {
+        if !self.prefix_cache {
+            self.begin_seq(id)?;
+            return Ok(0);
+        }
+        let max_blocks = prompt.len().saturating_sub(1) / BLOCK_TOKENS;
+        let mut matched: Vec<(u64, Vec<BlockId>)> = Vec::new();
+        let mut parent = 0u64;
+        for i in 0..max_blocks {
+            let toks =
+                &prompt[i * BLOCK_TOKENS..(i + 1) * BLOCK_TOKENS];
+            let h = chain_hash(parent, toks);
+            match self.prefix.entries.get(&h) {
+                Some(e) if e.tokens == toks => {
+                    matched.push((h, e.blocks.clone()));
+                    parent = h;
+                }
+                _ => break,
+            }
+        }
+        self.begin_seq(id)?;
+        if matched.is_empty() {
+            return Ok(0);
+        }
+        let shared = matched.len() * BLOCK_TOKENS;
+        for (layer, cache) in self.caches.iter_mut().enumerate() {
+            let ids_l: Vec<BlockId> =
+                matched.iter().map(|(_, bs)| bs[layer]).collect();
+            cache
+                .attach_prefix(id, &ids_l, shared)
+                .expect("attach_prefix on a just-created sequence");
+        }
+        for (h, _) in &matched {
+            self.prefix.entries.get_mut(h).unwrap().holders += 1;
+        }
+        self.prefix
+            .held
+            .insert(id, matched.iter().map(|(h, _)| *h).collect());
+        self.seqs.get_mut(&id).unwrap().pos = shared;
+        Ok(shared)
+    }
+
+    /// Publish a sequence's full prompt blocks into the prefix index
+    /// (called by the scheduler once the prompt has fully prefilled).
+    /// Only whole blocks are registered — they are immutable from here
+    /// on because appends always target a fresh block at a block
+    /// boundary. Existing matching entries are left alone; a chain-hash
+    /// collision with different tokens stops registration at that block.
+    pub fn register_prefix(&mut self, id: SeqId, tokens: &[u32]) {
+        if !self.prefix_cache || !self.seqs.contains_key(&id) {
+            return;
+        }
+        let n_full = tokens.len() / BLOCK_TOKENS;
+        let mut parent = 0u64;
+        let mut fresh: Vec<(u64, Vec<u32>, Vec<BlockId>)> = Vec::new();
+        for i in 0..n_full {
+            let toks =
+                &tokens[i * BLOCK_TOKENS..(i + 1) * BLOCK_TOKENS];
+            let h = chain_hash(parent, toks);
+            match self.prefix.entries.get(&h) {
+                Some(e) => {
+                    if e.tokens != toks {
+                        break; // collision: leave the chain here
+                    }
+                }
+                None => {
+                    let blocks: Vec<BlockId> = self
+                        .caches
+                        .iter()
+                        .map(|c| c.seq_block_ids(id).unwrap()[i])
+                        .collect();
+                    fresh.push((h, toks.to_vec(), blocks));
+                }
+            }
+            parent = h;
+        }
+        if fresh.is_empty() {
+            return;
+        }
+        let held = self.prefix.held.entry(id).or_default();
+        for (h, toks, blocks) in fresh {
+            self.prefix.entries.insert(
+                h,
+                PrefixEntry { tokens: toks, blocks, holders: 1 },
+            );
+            held.push(h);
+        }
+    }
+
+    /// Drop a sequence's stake in the prefix index; entries with no
+    /// remaining holder are removed (their blocks may be about to go
+    /// back to the pool).
+    fn detach_prefix(&mut self, id: SeqId) {
+        let Some(hashes) = self.prefix.held.remove(&id) else {
+            return;
+        };
+        for h in hashes {
+            if let Some(e) = self.prefix.entries.get_mut(&h) {
+                e.holders -= 1;
+                if e.holders == 0 {
+                    self.prefix.entries.remove(&h);
+                }
+            }
+        }
+    }
+
+    /// Shared-prefix entries currently indexed (test observability).
+    pub fn prefix_entries(&self) -> usize {
+        self.prefix.entries.len()
+    }
+
+    /// Move a live sequence's cache content (every layer) to the
+    /// host-side spill store and free its blocks — the tiered-KV
+    /// alternative to dropping a preemption victim. Its decode state is
+    /// parked alongside, so [`Engine::swap_in`] resumes bit-identically.
+    pub fn swap_out(&mut self, id: SeqId) -> anyhow::Result<()> {
+        if self.swapped_meta.contains_key(&id) {
+            bail!("sequence {id} is already swapped out");
+        }
+        let meta = self
+            .seqs
+            .remove(&id)
+            .with_context(|| format!("unknown seq {id}"))?;
+        self.detach_prefix(id);
+        for c in self.caches.iter_mut() {
+            c.swap_out(id).map_err(|e| anyhow::anyhow!("swap_out: {e}"))?;
+        }
+        self.swapped_meta.insert(id, meta);
+        Ok(())
+    }
+
+    /// Restore a swapped-out sequence into fresh blocks in every layer.
+    /// [`CacheError::OutOfBlocks`] (spill entry kept) when it doesn't
+    /// fit right now — the scheduler retries or falls back to
+    /// re-prefill.
+    pub fn swap_in(&mut self, id: SeqId) -> Result<(), CacheError> {
+        if !self.swapped_meta.contains_key(&id) {
+            return Err(CacheError::UnknownSeq(id));
+        }
+        let need = self.caches[0].swapped_blocks(id);
+        if self.free_blocks() < need {
+            return Err(CacheError::OutOfBlocks);
+        }
+        for layer in 0..self.caches.len() {
+            if let Err(e) = self.caches[layer].swap_in(id) {
+                for l in 0..layer {
+                    let _ = self.caches[l].swap_out(id);
+                }
+                return Err(e);
+            }
+        }
+        let meta = self.swapped_meta.remove(&id).unwrap();
+        self.seqs.insert(id, meta);
+        Ok(())
+    }
+
+    /// Whether a sequence currently lives in the spill store.
+    pub fn is_swapped(&self, id: SeqId) -> bool {
+        self.swapped_meta.contains_key(&id)
+    }
+
+    /// Blocks per layer a swapped sequence needs at swap-in (0 if not
+    /// swapped).
+    pub fn swapped_blocks(&self, id: SeqId) -> usize {
+        self.caches[0].swapped_blocks(id)
+    }
+
+    /// Estimated spill-store bytes for swapping a live sequence out,
+    /// under the paper's byte model (codes 1 B, raw elements 2 B) —
+    /// the recompute-vs-swap cost model's copy-side input.
+    pub fn seq_spill_bytes(&self, id: SeqId) -> usize {
+        let len = self.seq_pos(id).unwrap_or(0);
+        self.caches
+            .iter()
+            .map(|c| {
+                len * c.h
+                    * (c.key_bytes_per_token_per_head()
+                        + c.value_bytes_per_token_per_head())
+            })
+            .sum()
+    }
+
+    /// The layer-0 physical block ids backing a sequence (all layers
+    /// are symmetric) — sharing observability for tests and reports.
+    pub fn seq_block_ids(&self, id: SeqId) -> Vec<BlockId> {
+        self.caches[0]
+            .seq_block_ids(id)
+            .map(|b| b.to_vec())
+            .unwrap_or_default()
     }
 
     /// Admit a sequence with a monolithic prefill (the whole prompt as
@@ -816,11 +1067,21 @@ impl Engine {
             .collect())
     }
 
-    /// Release a finished (or preempted) sequence's cache. The storage
-    /// codecs are untouched — a preempted sequence later re-prefills by
-    /// re-encoding codes only.
+    /// Release a finished (or preempted) sequence's cache — live blocks
+    /// or spill-store entry, whichever it holds. The storage codecs are
+    /// untouched — a preempted sequence later re-prefills by re-encoding
+    /// codes only. Shared prefix blocks merely lose this holder.
     pub fn release(&mut self, id: SeqId) -> anyhow::Result<()> {
-        self.seqs.remove(&id).with_context(|| format!("unknown seq {id}"))?;
+        self.detach_prefix(id);
+        if self.seqs.remove(&id).is_none() {
+            if self.swapped_meta.remove(&id).is_some() {
+                for c in self.caches.iter_mut() {
+                    c.drop_swapped(id);
+                }
+                return Ok(());
+            }
+            bail!("unknown seq {id}");
+        }
         for c in self.caches.iter_mut() {
             c.free_seq(id).map_err(|e| anyhow::anyhow!("{e}"))?;
         }
@@ -1026,6 +1287,7 @@ mod tests {
             decode_threads: 2,
             prefill_chunk: 0,
             pipeline: true,
+            prefix_cache: false,
         }
     }
 
@@ -1308,6 +1570,99 @@ mod tests {
         assert!(t.value_decode_s > 0.0, "value_decode phase not booked");
         // drained: a second take reports a fresh window
         assert_eq!(e.take_phase_times().total_s(), 0.0);
+    }
+
+    #[test]
+    fn swap_roundtrip_is_invisible_in_decode() {
+        // park a decoding sequence in the spill store, churn the freed
+        // blocks with another sequence, restore — the trajectory must
+        // match an uninterrupted run bit for bit
+        let cfg = tiny_cfg(AttentionBackend::Lookat { m: 4, k: 64 });
+        let ids =
+            ByteTokenizer::new().encode("swap roundtrip probe prompt");
+        let mut plain = Engine::build(&cfg).unwrap();
+        plain.start_seq(1, &ids).unwrap();
+        let want: Vec<u32> =
+            (0..6).map(|_| plain.decode_one(1).unwrap()).collect();
+
+        let mut e = Engine::build(&cfg).unwrap();
+        e.start_seq(1, &ids).unwrap();
+        let mut got: Vec<u32> =
+            (0..3).map(|_| e.decode_one(1).unwrap()).collect();
+        e.swap_out(1).unwrap();
+        assert!(e.is_swapped(1));
+        assert!(e.swapped_blocks(1) > 0);
+        assert_eq!(e.cache_stats().blocks_allocated, 0);
+        assert!(e.decode_one(1).is_err(), "swapped seq can't decode");
+        e.start_seq(2, &ids).unwrap();
+        e.decode_one(2).unwrap();
+        e.release(2).unwrap();
+        e.swap_in(1).unwrap();
+        assert!(!e.is_swapped(1));
+        got.extend((0..3).map(|_| e.decode_one(1).unwrap()));
+        assert_eq!(want, got);
+        // releasing a swapped sequence drops the spill entry
+        e.swap_out(1).unwrap();
+        e.release(1).unwrap();
+        assert!(!e.is_swapped(1));
+        assert!(e.swap_in(1).is_err());
+    }
+
+    #[test]
+    fn prefix_cache_shares_blocks_and_keeps_tokens_identical() {
+        let tok = ByteTokenizer::new();
+        let prefix = "shared system prompt ".repeat(5); // 105 tokens
+        let p1 = tok.encode(&format!("{prefix}tail one"));
+        let p2 = tok.encode(&format!("{prefix}tail two"));
+
+        let mut cfg = tiny_cfg(AttentionBackend::Lookat { m: 4, k: 64 });
+        cfg.prefix_cache = true;
+        let mut e = Engine::build(&cfg).unwrap();
+        assert_eq!(
+            e.begin_seq_with_prefix(1, &p1).unwrap(),
+            0,
+            "cold index shares nothing"
+        );
+        e.step_batch(&[TickEntry::Prefill { seq: 1, tokens: &p1 }])
+            .unwrap();
+        e.register_prefix(1, &p1);
+        assert_eq!(e.prefix_entries(), p1.len() / BLOCK_TOKENS);
+
+        // second sequence with the same 105-token system prefix: its 3
+        // leading full blocks attach instead of recomputing
+        let shared = e.begin_seq_with_prefix(2, &p2).unwrap();
+        assert_eq!(shared, 3 * BLOCK_TOKENS);
+        assert_eq!(
+            e.seq_block_ids(2)[..3],
+            e.seq_block_ids(1)[..3],
+            "physical blocks are shared"
+        );
+        assert_eq!(e.cache_stats().shared_blocks, 3);
+        e.step_batch(&[TickEntry::Prefill {
+            seq: 2,
+            tokens: &p2[shared..],
+        }])
+        .unwrap();
+        let got: Vec<u32> =
+            (0..4).map(|_| e.decode_one(2).unwrap()).collect();
+
+        // reference: the same prompt served without sharing
+        let mut r = Engine::build(&cfg).unwrap();
+        r.start_seq(2, &p2).unwrap();
+        let want: Vec<u32> =
+            (0..4).map(|_| r.decode_one(2).unwrap()).collect();
+        assert_eq!(want, got, "shared-prefix decode diverged");
+
+        // no leaks once every holder is gone
+        e.release(1).unwrap();
+        assert!(
+            e.decode_one(2).is_ok(),
+            "survivor keeps the shared blocks alive"
+        );
+        e.release(2).unwrap();
+        assert_eq!(e.cache_stats().blocks_allocated, 0);
+        assert_eq!(e.cache_stats().shared_blocks, 0);
+        assert_eq!(e.prefix_entries(), 0);
     }
 
     #[test]

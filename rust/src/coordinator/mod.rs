@@ -23,7 +23,7 @@ pub mod request;
 pub mod router;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherConfig, SchedulerPolicy};
+pub use batcher::{Batcher, BatcherConfig, SchedulerPolicy, SwapCostModel};
 pub use engine::{
     AttentionBackend, Engine, EngineConfig, TickEntry, TickOutcome,
     ValueBackend,

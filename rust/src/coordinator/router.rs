@@ -34,6 +34,15 @@ pub struct ServingReport {
     pub prefill_tokens: usize,
     /// sequences evicted under block pressure (preemptive policy only)
     pub preemptions: usize,
+    /// preemptions that spilled to the swap tier instead of freeing
+    pub swap_outs: usize,
+    /// re-admissions restored from the swap tier without re-prefill
+    pub swap_ins: usize,
+    /// admissions that attached shared prefix-cache blocks
+    pub prefix_hits: usize,
+    /// peak extra holders on shared blocks — physical blocks saved by
+    /// prefix sharing at the busiest instant of the run
+    pub shared_blocks_peak: usize,
     pub key_cache_peak_bytes: usize,
     pub value_cache_peak_bytes: usize,
     /// per-phase time breakdown of the run (`lut_build`, `scan`,
@@ -71,6 +80,13 @@ impl ServingReport {
         o.set("decode_tokens", Json::Num(self.decode_tokens as f64));
         o.set("throughput_tok_s", Json::Num(self.throughput_tok_s()));
         o.set("preemptions", Json::Num(self.preemptions as f64));
+        o.set("swap_outs", Json::Num(self.swap_outs as f64));
+        o.set("swap_ins", Json::Num(self.swap_ins as f64));
+        o.set("prefix_hits", Json::Num(self.prefix_hits as f64));
+        o.set(
+            "shared_blocks_peak",
+            Json::Num(self.shared_blocks_peak as f64),
+        );
         if let Some(t) = self.ttft_summary() {
             o.set("ttft_p50_s", Json::Num(t.p50));
             o.set("ttft_p99_s", Json::Num(t.p99));
@@ -97,13 +113,17 @@ impl ServingReport {
         let e2e = self.e2e_summary();
         format!(
             "backend={:<14} completed={:<4} rejected={:<3} preempt={:<3} \
-             wall={:>7.2}s decode_tok/s={:>8.1} ttft_p50={:>7.1}ms \
+             swap={}/{} prefix_hits={:<3} wall={:>7.2}s \
+             decode_tok/s={:>8.1} ttft_p50={:>7.1}ms \
              e2e_p50={:>7.1}ms key_cache_peak={:>8} B \
              value_cache_peak={:>8} B",
             self.backend,
             self.completed.len(),
             self.rejected,
             self.preemptions,
+            self.swap_outs,
+            self.swap_ins,
+            self.prefix_hits,
             self.wall_s,
             self.throughput_tok_s(),
             ttft.as_ref().map_or(0.0, |t| t.p50 * 1e3),
@@ -169,6 +189,7 @@ impl Router {
         let mut decode_tokens = 0usize;
         let mut peak_key_bytes = 0usize;
         let mut peak_value_bytes = 0usize;
+        let mut shared_blocks_peak = 0usize;
 
         // fresh phase window for this run (a reused router must not
         // carry an earlier run's breakdown)
@@ -193,6 +214,8 @@ impl Router {
                 let stats = self.batcher.engine().cache_stats();
                 peak_key_bytes = peak_key_bytes.max(stats.key_bytes);
                 peak_value_bytes = peak_value_bytes.max(stats.value_bytes);
+                shared_blocks_peak =
+                    shared_blocks_peak.max(stats.shared_blocks);
             } else if let Some(r) = pending.front() {
                 // idle until the next arrival
                 let wait = (r.arrival_s - now).max(0.0);
@@ -212,6 +235,10 @@ impl Router {
             decode_tokens,
             prefill_tokens,
             preemptions: std::mem::take(&mut self.batcher.preemptions),
+            swap_outs: std::mem::take(&mut self.batcher.swap_outs),
+            swap_ins: std::mem::take(&mut self.batcher.swap_ins),
+            prefix_hits: std::mem::take(&mut self.batcher.prefix_hits),
+            shared_blocks_peak,
             key_cache_peak_bytes: peak_key_bytes,
             value_cache_peak_bytes: peak_value_bytes,
             phases: self.batcher.engine().take_phase_times(),
@@ -238,11 +265,13 @@ mod tests {
                 decode_threads: 2,
                 prefill_chunk: 0,
                 pipeline: true,
+                prefix_cache: false,
             },
             batcher: BatcherConfig {
                 max_batch: 4,
                 max_queue: 64,
                 policy: crate::coordinator::SchedulerPolicy::Fcfs,
+                ..BatcherConfig::default()
             },
             max_prompt_tokens: 48,
         })
@@ -309,11 +338,13 @@ mod tests {
                 decode_threads: 2,
                 prefill_chunk: 0,
                 pipeline: true,
+                prefix_cache: false,
             },
             batcher: BatcherConfig {
                 max_batch: 4,
                 max_queue: 64,
                 policy: crate::coordinator::SchedulerPolicy::Fcfs,
+                ..BatcherConfig::default()
             },
             max_prompt_tokens: 48,
         })
@@ -373,6 +404,10 @@ mod tests {
             "wall_s",
             "throughput_tok_s",
             "preemptions",
+            "swap_outs",
+            "swap_ins",
+            "prefix_hits",
+            "shared_blocks_peak",
             "phases",
         ] {
             assert!(j.get(k).is_some(), "missing {k}");
@@ -405,11 +440,13 @@ mod tests {
                 decode_threads: 2,
                 prefill_chunk: 8,
                 pipeline: true,
+                prefix_cache: false,
             },
             batcher: BatcherConfig {
                 max_batch: 4,
                 max_queue: 64,
                 policy: crate::coordinator::SchedulerPolicy::Preempt,
+                ..BatcherConfig::default()
             },
             max_prompt_tokens: 48,
         })

@@ -7,7 +7,10 @@
 //!   → {"prompt": "text...", "max_new_tokens": 16}
 //!   ← {"id": 3, "text": "...", "prompt_tokens": 12, "ttft_ms": 41.2,
 //!      "e2e_ms": 180.5, "tokens": 16}
-//!   ← {"error": "..."}                      (malformed request / overload)
+//!   ← {"error": "...", "id": 3}   (overload / never-schedulable — the
+//!      id lets clients correlate; always sent on the rejected
+//!      request's own connection)
+//!   ← {"error": "..."}            (malformed request: no id assigned)
 //!
 //! tokio is not vendored offline; the server uses one acceptor thread,
 //! one serving thread driving the batcher, and per-connection reader
@@ -234,32 +237,25 @@ fn serve_loop(
         std::collections::HashMap::new();
     loop {
         let now = t0.elapsed().as_secs_f64();
-        // ingest
+        // ingest — a full queue pushes the id onto `batcher.rejected`,
+        // answered with every other rejection in the drain below
         for mut inbound in queue.lock().unwrap().drain(..) {
             inbound.req.arrival_s = now;
             conns.insert(inbound.req.id, inbound.conn.clone());
-            if !batcher.submit(inbound.req) {
-                if let Some(conn) = conns.remove(batcher.rejected.last()
-                                                 .unwrap()) {
-                    let mut err = Json::obj();
-                    err.set("error",
-                            Json::Str("queue full (backpressure)".into()));
-                    write_line(&conn, &err);
-                }
-            }
+            let _ = batcher.submit(inbound.req);
         }
         // work
         batcher.admit(now);
-        if batcher.active() > 0 {
+        let idle = batcher.active() == 0;
+        if !idle {
             if let Err(e) = batcher.step(t0.elapsed().as_secs_f64()) {
                 crate::log_error!("batcher step failed: {e:#}");
             }
-        } else if stop.load(Ordering::SeqCst) {
-            break;
-        } else {
-            std::thread::sleep(std::time::Duration::from_millis(2));
         }
-        // respond
+        // respond — completions first, then every rejection (queue
+        // backpressure at submit, never-fitting or colliding requests
+        // at admit), each on the rejected request's own connection so
+        // no client hangs
         for done in batcher.completed.drain(..) {
             if let Some(conn) = conns.remove(&done.id) {
                 let mut o = Json::obj();
@@ -272,6 +268,26 @@ fn serve_loop(
                 o.set("e2e_ms", Json::Num(done.e2e() * 1e3));
                 write_line(&conn, &o);
             }
+        }
+        for id in batcher.rejected.drain(..) {
+            if let Some(conn) = conns.remove(&id) {
+                let mut err = Json::obj();
+                err.set(
+                    "error",
+                    Json::Str(
+                        "request rejected (overload or does not fit)"
+                            .into(),
+                    ),
+                );
+                err.set("id", Json::Num(id as f64));
+                write_line(&conn, &err);
+            }
+        }
+        if idle {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
         }
     }
 }
@@ -303,11 +319,13 @@ mod tests {
                 decode_threads: 2,
                 prefill_chunk: 16,
                 pipeline: true,
+                prefix_cache: false,
             },
             batcher: BatcherConfig {
                 max_batch: 2,
                 max_queue: 16,
                 policy: crate::coordinator::SchedulerPolicy::Preempt,
+                ..BatcherConfig::default()
             },
             max_prompt_tokens: 48,
             addr: "127.0.0.1:0".into(),
@@ -351,6 +369,57 @@ mod tests {
             .as_str()
             .unwrap()
             .contains("prompt"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejected_request_gets_error_with_id_on_own_connection() {
+        // 2 blocks = 64 tokens of cache: a clamped-48-token prompt
+        // asking for 256 generated tokens can never fit and is
+        // rejected inside `admit` — the client must still get an
+        // {"error", "id"} line on its own connection instead of
+        // hanging, while a small concurrent request is served
+        let server = Server::start(ServerConfig {
+            engine: EngineConfig {
+                model: ModelConfig::test_tiny(),
+                backend: AttentionBackend::Lookat { m: 4, k: 64 },
+                value_backend:
+                    crate::coordinator::engine::ValueBackend::Fp32,
+                seed: 2,
+                cache_blocks: 2,
+                calib_tokens: 64,
+                decode_threads: 2,
+                prefill_chunk: 16,
+                pipeline: true,
+                prefix_cache: false,
+            },
+            batcher: BatcherConfig {
+                max_batch: 2,
+                max_queue: 16,
+                policy: crate::coordinator::SchedulerPolicy::Preempt,
+                ..BatcherConfig::default()
+            },
+            max_prompt_tokens: 48,
+            addr: "127.0.0.1:0".into(),
+        })
+        .expect("server start");
+        let addr = server.local_addr;
+        let huge = std::thread::spawn(move || {
+            roundtrip(
+                addr,
+                &format!(
+                    r#"{{"prompt": "{}", "max_new_tokens": 256}}"#,
+                    "x".repeat(200)
+                ),
+            )
+        });
+        let ok = roundtrip(addr, r#"{"prompt": "hi", "max_new_tokens": 2}"#);
+        assert!(ok.get("error").is_none(), "{ok}");
+        assert_eq!(ok.get("tokens").unwrap().as_usize(), Some(2));
+        let rej = huge.join().unwrap();
+        assert!(rej.get("error").is_some(), "{rej}");
+        assert!(rej.get("id").is_some(),
+                "rejection must carry the request id: {rej}");
         server.shutdown();
     }
 

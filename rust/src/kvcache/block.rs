@@ -41,12 +41,19 @@ pub struct BlockView<'a> {
     pub value_codes: &'a [u8],
 }
 
-/// Free-list block allocator over a fixed budget of blocks.
+/// Free-list block allocator over a fixed budget of blocks, with
+/// per-block reference counts so immutable prefix blocks can be shared
+/// copy-on-write across sequences: `alloc` hands out a block at
+/// refcount 1, `retain` adds a holder, and `release` only returns the
+/// block to the pool once the last holder lets go.
 #[derive(Debug)]
 pub struct BlockAllocator {
     total: usize,
     free: Vec<BlockId>,
+    /// unique live blocks (each counted once however many holders)
     allocated: usize,
+    /// per-block holder count; 0 = on the free list
+    refs: Vec<u32>,
 }
 
 impl BlockAllocator {
@@ -57,6 +64,7 @@ impl BlockAllocator {
             // LIFO free list: hot blocks are reused while still cached
             free: (0..total_blocks as BlockId).rev().collect(),
             allocated: 0,
+            refs: vec![0; total_blocks],
         }
     }
 
@@ -65,17 +73,41 @@ impl BlockAllocator {
     pub fn alloc(&mut self) -> Option<BlockId> {
         let id = self.free.pop()?;
         self.allocated += 1;
+        self.refs[id as usize] = 1;
         Some(id)
     }
 
-    /// Return a block to the pool.
+    /// Add a holder to a live block (prefix-cache sharing).
+    pub fn retain(&mut self, id: BlockId) {
+        let r = &mut self.refs[id as usize];
+        debug_assert!(*r > 0, "retain of free block {id}");
+        *r += 1;
+    }
+
+    /// Drop one holder; the block returns to the pool when the last
+    /// holder releases it.
     pub fn release(&mut self, id: BlockId) {
-        debug_assert!(
-            !self.free.contains(&id),
-            "double free of block {id}"
-        );
-        self.free.push(id);
-        self.allocated -= 1;
+        let r = &mut self.refs[id as usize];
+        debug_assert!(*r > 0, "double free of block {id}");
+        if *r == 0 {
+            return; // release-side tolerance in release builds
+        }
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(id);
+            self.allocated -= 1;
+        }
+    }
+
+    /// Current holder count of a block (0 = free).
+    pub fn ref_count(&self, id: BlockId) -> u32 {
+        self.refs[id as usize]
+    }
+
+    /// Extra holders beyond the first across all live blocks — the
+    /// number of physical blocks saved by prefix sharing.
+    pub fn shared_refs(&self) -> usize {
+        self.refs.iter().map(|&r| r.saturating_sub(1) as usize).sum()
     }
 
     pub fn available(&self) -> usize {
@@ -127,6 +159,34 @@ mod tests {
         let b = a.alloc().unwrap();
         a.release(b);
         a.release(b);
+    }
+
+    #[test]
+    fn retain_keeps_shared_block_alive() {
+        let mut a = BlockAllocator::new(2);
+        let b = a.alloc().unwrap();
+        a.retain(b); // second holder
+        assert_eq!(a.ref_count(b), 2);
+        assert_eq!(a.shared_refs(), 1);
+        a.release(b); // first holder lets go: still live
+        assert_eq!(a.ref_count(b), 1);
+        assert_eq!(a.allocated(), 1);
+        assert_eq!(a.available(), 1);
+        assert_eq!(a.shared_refs(), 0);
+        a.release(b); // last holder: back to the pool
+        assert_eq!(a.ref_count(b), 0);
+        assert_eq!(a.allocated(), 0);
+        assert_eq!(a.available(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "retain of free block")]
+    #[cfg(debug_assertions)]
+    fn retain_of_free_block_caught_in_debug() {
+        let mut a = BlockAllocator::new(1);
+        let b = a.alloc().unwrap();
+        a.release(b);
+        a.retain(b);
     }
 
     #[test]

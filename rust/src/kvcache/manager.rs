@@ -133,6 +133,9 @@ pub struct CacheStats {
     pub codebook_bytes: usize,
     pub blocks_allocated: usize,
     pub blocks_total: usize,
+    /// physical blocks saved by prefix sharing: extra holders beyond
+    /// the first, summed over live blocks
+    pub shared_blocks: usize,
 }
 
 impl CacheStats {
@@ -144,6 +147,29 @@ impl CacheStats {
 struct SeqState {
     blocks: Vec<BlockId>,
     len: usize,
+}
+
+/// A swapped-out sequence's cache content: the full per-block slabs
+/// (all heads, all `BLOCK_TOKENS` slots — including the stale region of
+/// a trailing partial block) concatenated in block order. Restoring the
+/// whole slab byte-for-byte makes swap-in bit-identical to never having
+/// been evicted; `len` bounds which slots the kernels read.
+struct SwappedSeq {
+    len: usize,
+    keys_raw: Vec<f32>,
+    codes: Vec<u8>,
+    values: Vec<f32>,
+    value_codes: Vec<u8>,
+}
+
+impl SwappedSeq {
+    /// Host-side bytes held by this spill entry.
+    fn bytes(&self) -> usize {
+        self.keys_raw.len() * 4
+            + self.codes.len()
+            + self.values.len() * 4
+            + self.value_codes.len()
+    }
 }
 
 /// Paged KV-cache for one transformer layer (all `h` heads).
@@ -164,6 +190,9 @@ pub struct KvCache {
     value_storage: ValueStorage,
     alloc: BlockAllocator,
     seqs: HashMap<SeqId, SeqState>,
+    /// swap-out tier: preempted sequences' cache content, held host-side
+    /// instead of recomputed (tiered-KV — see [`KvCache::swap_out`])
+    swapped: HashMap<SeqId, SwappedSeq>,
     values: Vec<f32>,
     value_codes: Vec<u8>,
     keys_raw: Vec<f32>,
@@ -216,6 +245,7 @@ impl KvCache {
             value_storage,
             alloc: BlockAllocator::new(max_blocks),
             seqs: HashMap::new(),
+            swapped: HashMap::new(),
             values,
             value_codes,
             keys_raw,
@@ -383,6 +413,159 @@ impl KvCache {
         Ok(())
     }
 
+    /// Swap a sequence out to the host-side spill store: copy its block
+    /// slabs (whole blocks, all heads) out of the paged arena and return
+    /// the blocks to the pool. Works on shared (prefix-attached) blocks
+    /// too — content is copied and this sequence's reference dropped, so
+    /// other holders are unaffected. [`KvCache::swap_in`] restores the
+    /// slabs byte-for-byte into fresh blocks.
+    pub fn swap_out(&mut self, seq: SeqId) -> Result<(), CacheError> {
+        if self.swapped.contains_key(&seq) {
+            return Err(CacheError::DuplicateSeq(seq));
+        }
+        let st =
+            self.seqs.remove(&seq).ok_or(CacheError::UnknownSeq(seq))?;
+        let slot = BLOCK_TOKENS * self.h;
+        let (kf, kc) = (slot * self.d_k, slot * self.storage.m());
+        let (vf, vc) = (slot * self.d_k, slot * self.value_storage.m());
+        let mut sw = SwappedSeq {
+            len: st.len,
+            keys_raw: Vec::new(),
+            codes: Vec::new(),
+            values: Vec::new(),
+            value_codes: Vec::new(),
+        };
+        for &b in &st.blocks {
+            let b = b as usize;
+            match &self.storage {
+                KeyStorage::Fp16 => sw
+                    .keys_raw
+                    .extend_from_slice(&self.keys_raw[b * kf..(b + 1) * kf]),
+                KeyStorage::Pq { .. } => sw
+                    .codes
+                    .extend_from_slice(&self.codes[b * kc..(b + 1) * kc]),
+            }
+            match &self.value_storage {
+                ValueStorage::Fp32 => sw
+                    .values
+                    .extend_from_slice(&self.values[b * vf..(b + 1) * vf]),
+                ValueStorage::Pq { .. } => sw.value_codes.extend_from_slice(
+                    &self.value_codes[b * vc..(b + 1) * vc],
+                ),
+            }
+        }
+        for b in st.blocks {
+            self.alloc.release(b);
+        }
+        self.swapped.insert(seq, sw);
+        Ok(())
+    }
+
+    /// Restore a swapped-out sequence into freshly allocated blocks.
+    /// Fails with [`CacheError::OutOfBlocks`] (entry kept for a later
+    /// retry) if the pool can't hold it right now.
+    pub fn swap_in(&mut self, seq: SeqId) -> Result<(), CacheError> {
+        if self.seqs.contains_key(&seq) {
+            return Err(CacheError::DuplicateSeq(seq));
+        }
+        let need = self
+            .swapped
+            .get(&seq)
+            .ok_or(CacheError::UnknownSeq(seq))?
+            .len
+            .div_ceil(BLOCK_TOKENS);
+        if self.alloc.available() < need {
+            return Err(CacheError::OutOfBlocks);
+        }
+        let sw = self.swapped.remove(&seq).unwrap();
+        let blocks: Vec<BlockId> =
+            (0..need).map(|_| self.alloc.alloc().unwrap()).collect();
+        let slot = BLOCK_TOKENS * self.h;
+        let (kf, kc) = (slot * self.d_k, slot * self.storage.m());
+        let (vf, vc) = (slot * self.d_k, slot * self.value_storage.m());
+        for (i, &b) in blocks.iter().enumerate() {
+            let b = b as usize;
+            match &self.storage {
+                KeyStorage::Fp16 => self.keys_raw[b * kf..(b + 1) * kf]
+                    .copy_from_slice(&sw.keys_raw[i * kf..(i + 1) * kf]),
+                KeyStorage::Pq { .. } => self.codes[b * kc..(b + 1) * kc]
+                    .copy_from_slice(&sw.codes[i * kc..(i + 1) * kc]),
+            }
+            match &self.value_storage {
+                ValueStorage::Fp32 => self.values[b * vf..(b + 1) * vf]
+                    .copy_from_slice(&sw.values[i * vf..(i + 1) * vf]),
+                ValueStorage::Pq { .. } => self.value_codes
+                    [b * vc..(b + 1) * vc]
+                    .copy_from_slice(&sw.value_codes[i * vc..(i + 1) * vc]),
+            }
+        }
+        self.seqs.insert(seq, SeqState { blocks, len: sw.len });
+        Ok(())
+    }
+
+    /// Whether a sequence currently lives in the spill store.
+    pub fn is_swapped(&self, seq: SeqId) -> bool {
+        self.swapped.contains_key(&seq)
+    }
+
+    /// Blocks a swapped sequence will need at swap-in (0 if not swapped).
+    pub fn swapped_blocks(&self, seq: SeqId) -> usize {
+        self.swapped
+            .get(&seq)
+            .map_or(0, |sw| sw.len.div_ceil(BLOCK_TOKENS))
+    }
+
+    /// Discard a spill entry (the sequence will re-prefill instead).
+    pub fn drop_swapped(&mut self, seq: SeqId) {
+        self.swapped.remove(&seq);
+    }
+
+    /// Total host-side bytes held by the spill store.
+    pub fn swap_bytes(&self) -> usize {
+        self.swapped.values().map(|sw| sw.bytes()).sum()
+    }
+
+    /// Attach shared prefix blocks to a freshly created (still empty)
+    /// sequence: each block gains a holder and the sequence starts at
+    /// `tokens` cached tokens. Only whole immutable blocks may be
+    /// shared — appends always write a private block (a new one is
+    /// allocated the moment `len` crosses a block boundary), so shared
+    /// content is copy-on-write by construction.
+    pub fn attach_prefix(
+        &mut self,
+        seq: SeqId,
+        blocks: &[BlockId],
+        tokens: usize,
+    ) -> Result<(), CacheError> {
+        {
+            let st =
+                self.seqs.get(&seq).ok_or(CacheError::UnknownSeq(seq))?;
+            assert!(
+                st.len == 0 && st.blocks.is_empty(),
+                "attach_prefix requires an empty sequence"
+            );
+        }
+        assert_eq!(
+            tokens,
+            blocks.len() * BLOCK_TOKENS,
+            "prefix must cover whole blocks"
+        );
+        for &b in blocks {
+            self.alloc.retain(b);
+        }
+        let st = self.seqs.get_mut(&seq).unwrap();
+        st.blocks.extend_from_slice(blocks);
+        st.len = tokens;
+        Ok(())
+    }
+
+    /// The physical block ids backing a sequence, in token order — the
+    /// prefix cache registers these for sharing, and tests verify
+    /// sharing through them.
+    pub fn seq_block_ids(&self, seq: SeqId) -> Result<&[BlockId], CacheError> {
+        Ok(&self.seqs.get(&seq).ok_or(CacheError::UnknownSeq(seq))?.blocks)
+    }
+
     /// Zero-copy iteration over one head's cache blocks, in token order.
     ///
     /// This is the batched-decode hot path: the LOOKAT kernel scans the
@@ -523,6 +706,7 @@ impl KvCache {
             codebook_bytes,
             blocks_allocated: self.alloc.allocated(),
             blocks_total: self.alloc.total(),
+            shared_blocks: self.alloc.shared_refs(),
         }
     }
 
@@ -1068,6 +1252,153 @@ mod tests {
             ValueStorage::pq(mixed),
             Err(CacheError::MixedCodecs)
         ));
+    }
+
+    #[test]
+    fn swap_roundtrip_restores_codes_bit_for_bit() {
+        // PQ keys + PQ values: swap out, let another sequence dirty the
+        // freed blocks, swap back in — gathered codes must be identical
+        let mut c =
+            KvCache::new(H, DK, 4, pq_storage(4), pq_value_storage(4));
+        c.create_seq(1).unwrap();
+        for t in 0..70 {
+            // 3 blocks, last partial
+            let (k, v) = token(700 + t);
+            c.append(1, &k, &v).unwrap();
+        }
+        let mut before_k = Vec::new();
+        let mut before_v = Vec::new();
+        c.gather_codes_into(1, 1, &mut before_k).unwrap();
+        c.gather_value_codes_into(1, 1, &mut before_v).unwrap();
+
+        c.swap_out(1).unwrap();
+        assert!(c.is_swapped(1));
+        assert_eq!(c.swapped_blocks(1), 3);
+        assert!(c.swap_bytes() > 0);
+        assert_eq!(c.stats().blocks_allocated, 0);
+        assert!(matches!(c.seq_len(1), Err(CacheError::UnknownSeq(1))));
+
+        // scribble over the whole pool with different content
+        c.create_seq(2).unwrap();
+        for t in 0..4 * BLOCK_TOKENS {
+            let (k, v) = token(9000 + t as u64);
+            c.append(2, &k, &v).unwrap();
+        }
+        assert_eq!(c.swap_in(1), Err(CacheError::OutOfBlocks));
+        assert!(c.is_swapped(1), "failed swap-in keeps the spill entry");
+        c.free_seq(2).unwrap();
+
+        c.swap_in(1).unwrap();
+        assert!(!c.is_swapped(1));
+        assert_eq!(c.seq_len(1).unwrap(), 70);
+        let mut after_k = Vec::new();
+        let mut after_v = Vec::new();
+        c.gather_codes_into(1, 1, &mut after_k).unwrap();
+        c.gather_value_codes_into(1, 1, &mut after_v).unwrap();
+        assert_eq!(before_k, after_k);
+        assert_eq!(before_v, after_v);
+    }
+
+    #[test]
+    fn swap_roundtrip_restores_raw_tensors_fp16_path() {
+        let mut c =
+            KvCache::new(H, DK, 4, KeyStorage::Fp16, ValueStorage::Fp32);
+        c.create_seq(5).unwrap();
+        for t in 0..40 {
+            let (k, v) = token(40 + t);
+            c.append(5, &k, &v).unwrap();
+        }
+        let mut before = Vec::new();
+        c.gather_keys_into(5, 0, &mut before).unwrap();
+        c.swap_out(5).unwrap();
+        c.swap_in(5).unwrap();
+        let mut after = Vec::new();
+        c.gather_keys_into(5, 0, &mut after).unwrap();
+        assert_eq!(before, after);
+        // and the sequence keeps growing from where it left off
+        let (k, v) = token(99);
+        c.append(5, &k, &v).unwrap();
+        assert_eq!(c.seq_len(5).unwrap(), 41);
+    }
+
+    #[test]
+    fn swap_error_paths() {
+        let mut c =
+            KvCache::new(H, DK, 2, KeyStorage::Fp16, ValueStorage::Fp32);
+        assert!(matches!(
+            c.swap_out(1),
+            Err(CacheError::UnknownSeq(1))
+        ));
+        assert!(matches!(c.swap_in(1), Err(CacheError::UnknownSeq(1))));
+        c.create_seq(1).unwrap();
+        let (k, v) = token(0);
+        c.append(1, &k, &v).unwrap();
+        c.swap_out(1).unwrap();
+        // a live duplicate blocks swap-in
+        c.create_seq(1).unwrap();
+        assert!(matches!(
+            c.swap_in(1),
+            Err(CacheError::DuplicateSeq(1))
+        ));
+        assert!(matches!(
+            c.swap_out(1),
+            Err(CacheError::DuplicateSeq(1))
+        ));
+        c.free_seq(1).unwrap();
+        c.drop_swapped(1);
+        assert!(matches!(c.swap_in(1), Err(CacheError::UnknownSeq(1))));
+        assert_eq!(c.swap_bytes(), 0);
+    }
+
+    #[test]
+    fn attach_prefix_shares_blocks_copy_on_write() {
+        let mut c =
+            KvCache::new(H, DK, 6, KeyStorage::Fp16, ValueStorage::Fp32);
+        c.create_seq(1).unwrap();
+        for t in 0..2 * BLOCK_TOKENS + 3 {
+            let (k, v) = token(t as u64);
+            c.append(1, &k, &v).unwrap();
+        }
+        // share seq 1's two full blocks with a new sequence
+        let shared: Vec<BlockId> =
+            c.seq_block_ids(1).unwrap()[..2].to_vec();
+        c.create_seq(2).unwrap();
+        c.attach_prefix(2, &shared, 2 * BLOCK_TOKENS).unwrap();
+        assert_eq!(c.seq_len(2).unwrap(), 2 * BLOCK_TOKENS);
+        assert_eq!(
+            &c.seq_block_ids(2).unwrap()[..2],
+            &shared[..],
+            "physical blocks are shared"
+        );
+        let s = c.stats();
+        assert_eq!(s.shared_blocks, 2);
+        // seq 1 used 3 blocks; seq 2 added none yet
+        assert_eq!(s.blocks_allocated, 3);
+
+        // COW divergence: appending to seq 2 allocates a private block
+        // and never touches the shared ones
+        let mut k1_before = Vec::new();
+        c.gather_keys_into(1, 0, &mut k1_before).unwrap();
+        let (k, v) = token(555);
+        c.append(2, &k, &v).unwrap();
+        assert_ne!(
+            c.seq_block_ids(2).unwrap()[2],
+            c.seq_block_ids(1).unwrap()[2],
+            "divergent tail is private"
+        );
+        let mut k1_after = Vec::new();
+        c.gather_keys_into(1, 0, &mut k1_after).unwrap();
+        assert_eq!(k1_before, k1_after, "sharer's append is invisible");
+
+        // freeing the original keeps the shared blocks alive for seq 2
+        c.free_seq(1).unwrap();
+        assert_eq!(c.stats().shared_blocks, 0);
+        let mut k2 = Vec::new();
+        c.gather_keys_into(2, 0, &mut k2).unwrap();
+        assert_eq!(&k2[..DK], &k1_after[..DK]);
+        // and freeing the last holder returns everything
+        c.free_seq(2).unwrap();
+        assert_eq!(c.stats().blocks_allocated, 0);
     }
 
     #[test]

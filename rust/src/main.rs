@@ -70,13 +70,13 @@ fn validate_m(m: usize, flag: &str) -> anyhow::Result<usize> {
     Ok(m)
 }
 
-/// `--pipeline on|off`: the software-pipelined layer executor A/B
-/// switch (output is bit-identical either way).
-fn parse_pipeline(s: &str) -> anyhow::Result<bool> {
+/// `on|off` switches (`--pipeline`, `--swap`, `--prefix-cache`): every
+/// one is a bit-identical A/B toggle.
+fn parse_on_off(flag: &str, s: &str) -> anyhow::Result<bool> {
     match s {
         "on" => Ok(true),
         "off" => Ok(false),
-        other => anyhow::bail!("unknown --pipeline '{other}' (on, off)"),
+        other => anyhow::bail!("unknown --{flag} '{other}' (on, off)"),
     }
 }
 
@@ -143,13 +143,22 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 .opt("pipeline", "on",
                      "on|off: software-pipelined layer executor \
                       (bit-identical A/B)")
+                .opt("swap", "on",
+                     "on|off: spill preempted sequences to the swap \
+                      tier instead of re-prefilling")
+                .opt("prefix-cache", "on",
+                     "on|off: share identical full prompt-prefix \
+                      blocks copy-on-write across sequences")
                 .opt("seed", "7", "rng seed");
             let a = cli.parse(&args[1..])?;
             let backend = parse_backend(a.get("backend"))?;
             let value_backend =
                 parse_value_backend(a.get("value-backend"))?;
             let policy = parse_scheduler(a.get("scheduler"))?;
-            let pipeline = parse_pipeline(a.get("pipeline"))?;
+            let pipeline = parse_on_off("pipeline", a.get("pipeline"))?;
+            let swap = parse_on_off("swap", a.get("swap"))?;
+            let prefix_cache =
+                parse_on_off("prefix-cache", a.get("prefix-cache"))?;
             let mut model = ModelConfig::gpt2_layer0();
             model.n_layer = a.get_usize("layers")?;
             let mut router = Router::build(RouterConfig {
@@ -163,11 +172,14 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     decode_threads: a.get_usize("threads")?,
                     prefill_chunk: a.get_usize("prefill-chunk")?,
                     pipeline,
+                    prefix_cache,
                 },
                 batcher: BatcherConfig {
                     max_batch: a.get_usize("max-batch")?,
                     max_queue: 256,
                     policy,
+                    swap,
+                    ..BatcherConfig::default()
                 },
                 max_prompt_tokens: 120,
             })?;
@@ -200,13 +212,22 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 .opt("pipeline", "on",
                      "on|off: software-pipelined layer executor \
                       (bit-identical A/B)")
+                .opt("swap", "on",
+                     "on|off: spill preempted sequences to the swap \
+                      tier instead of re-prefilling")
+                .opt("prefix-cache", "on",
+                     "on|off: share identical full prompt-prefix \
+                      blocks copy-on-write across sequences")
                 .opt("seed", "7", "rng seed");
             let a = cli.parse(&args[1..])?;
             let backend = parse_backend(a.get("backend"))?;
             let value_backend =
                 parse_value_backend(a.get("value-backend"))?;
             let policy = parse_scheduler(a.get("scheduler"))?;
-            let pipeline = parse_pipeline(a.get("pipeline"))?;
+            let pipeline = parse_on_off("pipeline", a.get("pipeline"))?;
+            let swap = parse_on_off("swap", a.get("swap"))?;
+            let prefix_cache =
+                parse_on_off("prefix-cache", a.get("prefix-cache"))?;
             let mut model = ModelConfig::gpt2_layer0();
             model.n_layer = a.get_usize("layers")?;
             let server = lookat::coordinator::Server::start(
@@ -221,11 +242,14 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                         decode_threads: a.get_usize("threads")?,
                         prefill_chunk: a.get_usize("prefill-chunk")?,
                         pipeline,
+                        prefix_cache,
                     },
                     batcher: BatcherConfig {
                         max_batch: a.get_usize("max-batch")?,
                         max_queue: 256,
                         policy,
+                        swap,
+                        ..BatcherConfig::default()
                     },
                     max_prompt_tokens: 120,
                     addr: a.get("addr").to_string(),
@@ -318,10 +342,11 @@ USAGE:
                                      figure4 / efficiency / all
   lookat serve [--backend B] [--value-backend V] [--requests N]
                [--rate R] [--prefill-chunk T] [--scheduler fcfs|preempt]
-               [--pipeline on|off]
+               [--pipeline on|off] [--swap on|off] [--prefix-cache on|off]
   lookat serve-tcp [--backend B] [--value-backend V] [--addr HOST:PORT]
                    [--prefill-chunk T] [--scheduler fcfs|preempt]
-                   [--pipeline on|off]
+                   [--pipeline on|off] [--swap on|off]
+                   [--prefix-cache on|off]
   lookat bench-check --old PREV.json --new CUR.json [--max-regress F]
   lookat info"
     );

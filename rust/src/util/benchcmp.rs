@@ -9,12 +9,17 @@
 //! they have no baseline.
 //!
 //! The document contract is schema-light: a top-level `results` array
-//! of objects, each carrying a `backend` name plus numeric throughput
-//! metrics. Which metrics exist is discovered from the *baseline*
-//! entry: every numeric key ending in `_tok_s`, `_gb_s` or `_per_s`
-//! is compared (higher is better). That makes the same gate cover the
-//! serving sweep's `batch_N_tok_s` columns and the ADC micro-bench's
-//! scan figures without either knowing about the other.
+//! (and/or a `scenarios` array) of objects, each carrying a `backend`
+//! or `scenario` label plus numeric throughput metrics. Which metrics
+//! exist is discovered from the *baseline* entry: every numeric key
+//! ending in `_tok_s`, `_gb_s` or `_per_s` is compared (higher is
+//! better). That makes the same gate cover the serving sweep's
+//! `batch_N_tok_s` columns, the ADC micro-bench's scan figures and the
+//! serving scenarios' swap/prefix metrics without any of them knowing
+//! about the others. A non-finite new value is a regression (a NaN
+//! must never slip through a `<` comparison); a zero or non-finite
+//! *baseline* can never regress, so it is warned about instead of
+//! silently gating nothing.
 
 use crate::util::json::Json;
 
@@ -24,19 +29,29 @@ const METRIC_SUFFIXES: [&str; 3] = ["_tok_s", "_gb_s", "_per_s"];
 /// One tokens/s comparison that exceeded the tolerance (or vanished).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Regression {
+    /// entry label: `backend` or `scenario` name
     pub backend: String,
     pub metric: String,
     pub old: f64,
+    /// NaN with `missing` set means the metric vanished; NaN without
+    /// it means the new sweep *recorded* a non-finite value
     pub new: f64,
+    pub missing: bool,
 }
 
 impl std::fmt::Display for Regression {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        if self.new.is_nan() {
+        if self.missing {
             write!(
                 f,
                 "{} {}: present in baseline, missing from new sweep",
                 self.backend, self.metric
+            )
+        } else if !self.new.is_finite() {
+            write!(
+                f,
+                "{} {}: {:.1} -> {} (non-finite measurement)",
+                self.backend, self.metric, self.old, self.new
             )
         } else {
             write!(
@@ -60,21 +75,20 @@ pub fn compare(
     new: &Json,
     max_regress: f64,
 ) -> Result<Vec<Regression>, String> {
-    let old_results = results_of(old, "old")?;
-    let new_results = results_of(new, "new")?;
+    let old_results = entries_of(old, "old")?;
+    let new_results = entries_of(new, "new")?;
 
     let mut regressions = Vec::new();
     for entry in old_results {
-        let backend = entry
-            .get("backend")
-            .and_then(|b| b.as_str())
-            .ok_or("old: result without backend name")?;
+        let backend = label_of(entry)
+            .ok_or("old: result without backend/scenario label")?;
         let fields = entry
             .as_obj()
             .ok_or("old: result entry is not an object")?;
-        let new_entry = new_results.iter().find(|e| {
-            e.get("backend").and_then(|b| b.as_str()) == Some(backend)
-        });
+        let new_entry = new_results
+            .iter()
+            .find(|e| label_of(e) == Some(backend))
+            .copied();
         for (metric, val) in fields {
             if !METRIC_SUFFIXES.iter().any(|s| metric.ends_with(s)) {
                 continue;
@@ -82,6 +96,15 @@ pub fn compare(
             let Some(old_v) = val.as_f64() else {
                 continue; // non-numeric metric-looking key
             };
+            if old_v == 0.0 || !old_v.is_finite() {
+                // a zero/NaN baseline can never regress — the gate
+                // would silently cover nothing, so say so out loud
+                crate::log_warn!(
+                    "bench-check: baseline {backend} {metric} = {old_v} \
+                     gates nothing"
+                );
+                continue;
+            }
             let new_v = new_entry
                 .and_then(|e| e.get(metric))
                 .and_then(|v| v.as_f64());
@@ -91,13 +114,20 @@ pub fn compare(
                     metric: metric.clone(),
                     old: old_v,
                     new: f64::NAN,
+                    missing: true,
                 }),
-                Some(n) if n < old_v * (1.0 - max_regress) => {
+                // a non-finite measurement must fail — NaN slips
+                // through any `<` tolerance check
+                Some(n)
+                    if !n.is_finite()
+                        || n < old_v * (1.0 - max_regress) =>
+                {
                     regressions.push(Regression {
                         backend: backend.to_string(),
                         metric: metric.clone(),
                         old: old_v,
                         new: n,
+                        missing: false,
                     })
                 }
                 Some(_) => {}
@@ -107,13 +137,29 @@ pub fn compare(
     Ok(regressions)
 }
 
-fn results_of<'a>(
+/// Gatherable entries of a bench doc: the `results` array, the
+/// `scenarios` array, or both. At least one must be present.
+fn entries_of<'a>(
     doc: &'a Json,
     which: &str,
-) -> Result<&'a [Json], String> {
-    doc.get("results")
-        .and_then(|r| r.as_arr())
-        .ok_or_else(|| format!("{which}: missing results array"))
+) -> Result<Vec<&'a Json>, String> {
+    let results = doc.get("results").and_then(|r| r.as_arr());
+    let scenarios = doc.get("scenarios").and_then(|r| r.as_arr());
+    if results.is_none() && scenarios.is_none() {
+        return Err(format!("{which}: missing results/scenarios array"));
+    }
+    let mut v: Vec<&Json> = Vec::new();
+    v.extend(results.into_iter().flatten());
+    v.extend(scenarios.into_iter().flatten());
+    Ok(v)
+}
+
+/// An entry's identity: `backend` (sweeps) or `scenario` (scenarios).
+fn label_of(entry: &Json) -> Option<&str> {
+    entry
+        .get("backend")
+        .and_then(|b| b.as_str())
+        .or_else(|| entry.get("scenario").and_then(|s| s.as_str()))
 }
 
 #[cfg(test)]
@@ -175,7 +221,87 @@ mod tests {
         assert_eq!(regs.len(), 1);
         assert_eq!(regs[0].backend, "int8");
         assert!(regs[0].new.is_nan());
+        assert!(regs[0].missing);
         assert!(regs[0].to_string().contains("missing"));
+    }
+
+    #[test]
+    fn nan_new_value_fails() {
+        // a NaN measurement slips through `n < threshold` (always
+        // false) — the gate must treat it as a regression, not a pass
+        let old = doc(&[("fp16", &[(1, 100.0)])]);
+        let new = doc(&[("fp16", &[(1, f64::NAN)])]);
+        let regs = compare(&old, &new, 0.10).unwrap();
+        assert_eq!(regs.len(), 1);
+        assert!(regs[0].new.is_nan());
+        assert!(!regs[0].missing, "recorded NaN is not a missing metric");
+        assert!(regs[0].to_string().contains("non-finite"));
+        // infinities are equally unusable as measurements
+        let inf = doc(&[("fp16", &[(1, f64::INFINITY)])]);
+        assert_eq!(compare(&old, &inf, 0.10).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn zero_or_nonfinite_baseline_warns_and_gates_nothing() {
+        // 0.0 baseline: nothing can ever be 10% below it, so it must
+        // not silently count as covered — it is skipped (with a log
+        // warning), and a genuine metric alongside it still gates
+        let old = doc(&[("fp16", &[(1, 0.0), (4, 100.0)])]);
+        let new = doc(&[("fp16", &[(1, 0.0), (4, 50.0)])]);
+        let regs = compare(&old, &new, 0.10).unwrap();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, "batch_4_tok_s");
+        // NaN baseline: same treatment
+        let old_nan = doc(&[("fp16", &[(1, f64::NAN)])]);
+        let new_any = doc(&[("fp16", &[(1, 5.0)])]);
+        assert!(compare(&old_nan, &new_any, 0.10).unwrap().is_empty());
+    }
+
+    /// Build a scenarios-shaped doc (`scenario` label, not `backend`).
+    fn scenario_doc(entries: &[(&str, &[(&str, f64)])]) -> Json {
+        let mut top = Json::obj();
+        let scenarios = entries
+            .iter()
+            .map(|(name, metrics)| {
+                let mut o = Json::obj();
+                o.set("scenario", Json::Str(name.to_string()));
+                for (k, v) in metrics.iter() {
+                    o.set(k, Json::Num(*v));
+                }
+                o
+            })
+            .collect();
+        top.set("scenarios", Json::Arr(scenarios));
+        top
+    }
+
+    #[test]
+    fn scenario_entries_are_gated() {
+        // the serving bench's swap/prefix scenarios live in a
+        // `scenarios` array keyed by `scenario` — the same gate must
+        // cover their *_tok_s metrics automatically
+        let old = scenario_doc(&[(
+            "swap_preempt_heavy",
+            &[("swap_on_tok_s", 200.0), ("swap_off_tok_s", 100.0)],
+        )]);
+        let ok = scenario_doc(&[(
+            "swap_preempt_heavy",
+            &[("swap_on_tok_s", 195.0), ("swap_off_tok_s", 99.0)],
+        )]);
+        assert!(compare(&old, &ok, 0.10).unwrap().is_empty());
+        let bad = scenario_doc(&[(
+            "swap_preempt_heavy",
+            &[("swap_on_tok_s", 120.0), ("swap_off_tok_s", 99.0)],
+        )]);
+        let regs = compare(&old, &bad, 0.10).unwrap();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].backend, "swap_preempt_heavy");
+        assert_eq!(regs[0].metric, "swap_on_tok_s");
+        // a vanished scenario fails like a vanished backend
+        let gone = scenario_doc(&[("other", &[("x_tok_s", 1.0)])]);
+        let regs = compare(&old, &gone, 0.10).unwrap();
+        assert_eq!(regs.len(), 2, "both metrics reported missing");
+        assert!(regs.iter().all(|r| r.missing));
     }
 
     #[test]

@@ -51,7 +51,23 @@ pub struct TraceGenerator {
 }
 
 impl TraceGenerator {
+    /// Panics on degenerate bounds (`hi < lo`): `next_request` samples
+    /// `lo + bounded(hi - lo + 1)`, which would underflow in debug and
+    /// produce a garbage bound in release — fail loudly at
+    /// construction instead.
     pub fn new(cfg: TraceConfig) -> Self {
+        assert!(
+            cfg.prompt_chars.1 >= cfg.prompt_chars.0,
+            "prompt_chars bounds inverted: ({}, {})",
+            cfg.prompt_chars.0,
+            cfg.prompt_chars.1
+        );
+        assert!(
+            cfg.gen_tokens.1 >= cfg.gen_tokens.0,
+            "gen_tokens bounds inverted: ({}, {})",
+            cfg.gen_tokens.0,
+            cfg.gen_tokens.1
+        );
         let rng = Pcg32::seed(cfg.seed);
         Self { cfg, rng, next_id: 0, clock_s: 0.0 }
     }
@@ -141,6 +157,24 @@ mod tests {
         for (i, r) in trace.iter().enumerate() {
             assert_eq!(r.id, i as u64);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "prompt_chars bounds inverted")]
+    fn inverted_prompt_bounds_panic_at_construction() {
+        TraceGenerator::new(TraceConfig {
+            prompt_chars: (200, 100),
+            ..Default::default()
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "gen_tokens bounds inverted")]
+    fn inverted_gen_bounds_panic_at_construction() {
+        TraceGenerator::new(TraceConfig {
+            gen_tokens: (64, 8),
+            ..Default::default()
+        });
     }
 
     #[test]

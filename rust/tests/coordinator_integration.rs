@@ -24,6 +24,7 @@ fn paper_cfg(backend: AttentionBackend) -> EngineConfig {
         decode_threads: 0,
         prefill_chunk: 0,
         pipeline: true,
+        prefix_cache: false,
     }
 }
 
@@ -92,6 +93,7 @@ fn tiny_batcher(max_batch: usize) -> Batcher {
         decode_threads: 2,
         prefill_chunk: 0,
         pipeline: true,
+        prefix_cache: false,
     })
     .unwrap();
     Batcher::new(
@@ -100,6 +102,7 @@ fn tiny_batcher(max_batch: usize) -> Batcher {
             max_batch,
             max_queue: 32,
             policy: lookat::coordinator::SchedulerPolicy::Fcfs,
+            ..BatcherConfig::default()
         },
     )
 }

@@ -5,8 +5,9 @@
 //! N serial batch-of-one decodes on every backend, chunked prefill is
 //! bit-identical to monolithic prefill on every key × value backend
 //! combination, and a preempt → re-admit round trip reproduces the
-//! uninterrupted run's tokens exactly (PJRT backends run when artifacts
-//! are built).
+//! uninterrupted run's tokens exactly — via re-prefill and via the
+//! tiered swap store — with copy-on-write prefix sharing holding under
+//! preemption churn (PJRT backends run when artifacts are built).
 
 use lookat::coordinator::{
     AttentionBackend, Batcher, BatcherConfig, Engine, EngineConfig,
@@ -41,6 +42,7 @@ fn tiny_cfg_kv(
         decode_threads: threads,
         prefill_chunk: 0,
         pipeline: true,
+        prefix_cache: false,
     }
 }
 
@@ -55,6 +57,7 @@ fn paper_cfg(backend: AttentionBackend, threads: usize) -> EngineConfig {
         decode_threads: threads,
         prefill_chunk: 0,
         pipeline: true,
+        prefix_cache: false,
     }
 }
 
@@ -321,7 +324,8 @@ fn drain_batcher(b: &mut Batcher) {
 fn preempt_readmit_roundtrip_produces_identical_tokens() {
     // an oversubscribed preemptive run must emit exactly the tokens of
     // a roomy no-preemption run: re-prefill from codes reproduces the
-    // evicted sequence's decode states bit for bit
+    // evicted sequence's decode states bit for bit (swap disabled here
+    // on purpose — the swap tier has its own parity test below)
     let mk = |blocks: usize, policy: SchedulerPolicy| {
         let mut cfg =
             tiny_cfg(AttentionBackend::Lookat { m: 4, k: 64 }, 2);
@@ -330,7 +334,13 @@ fn preempt_readmit_roundtrip_produces_identical_tokens() {
         let engine = Engine::build(&cfg).unwrap();
         Batcher::new(
             engine,
-            BatcherConfig { max_batch: 4, max_queue: 32, policy },
+            BatcherConfig {
+                max_batch: 4,
+                max_queue: 32,
+                policy,
+                swap: false,
+                ..BatcherConfig::default()
+            },
         )
     };
 
@@ -382,6 +392,7 @@ fn oversubscription_no_longer_rejects_admitted_requests() {
             max_batch: 6,
             max_queue: 64,
             policy: SchedulerPolicy::Preempt,
+            ..BatcherConfig::default()
         },
     );
     for r in preempt_requests(8, 30) {
@@ -391,6 +402,166 @@ fn oversubscription_no_longer_rejects_admitted_requests() {
     assert_eq!(b.completed.len(), 8, "every request completes");
     assert!(b.rejected.is_empty());
     assert_eq!(b.engine().cache_stats().tokens, 0, "cache drained");
+}
+
+// ---- swap tier + prefix cache ------------------------------------------
+
+#[test]
+fn swap_restore_bit_identical_every_key_value_backend_combo() {
+    // the swap tier copies whole code/tensor slabs to a host-side
+    // spill store and back, so a preempted-then-restored sequence must
+    // continue with exactly the tokens of an uninterrupted roomy run —
+    // on every key × value backend combination
+    let key_backends = [
+        AttentionBackend::Fp16Exact,
+        AttentionBackend::Lookat { m: 4, k: 64 },
+        AttentionBackend::Lookat { m: 2, k: 64 },
+        AttentionBackend::ScalarQuant { bits: 8 },
+        AttentionBackend::ScalarQuant { bits: 4 },
+    ];
+    let value_backends = [
+        ValueBackend::Fp32,
+        ValueBackend::Pq { m: 4, k: 64 },
+    ];
+    let by_id = |b: &Batcher| {
+        let mut v: Vec<(u64, Vec<u32>)> = b
+            .completed
+            .iter()
+            .map(|c| (c.id, c.generated.clone()))
+            .collect();
+        v.sort();
+        v
+    };
+    for backend in key_backends {
+        for vb in &value_backends {
+            let mk = |blocks: usize, policy: SchedulerPolicy| {
+                let mut cfg =
+                    tiny_cfg_kv(backend.clone(), vb.clone(), 2);
+                cfg.cache_blocks = blocks;
+                cfg.prefill_chunk = 8;
+                let engine = Engine::build(&cfg).unwrap();
+                Batcher::new(
+                    engine,
+                    BatcherConfig {
+                        max_batch: 4,
+                        max_queue: 32,
+                        policy,
+                        ..BatcherConfig::default()
+                    },
+                )
+            };
+
+            let mut roomy = mk(64, SchedulerPolicy::Fcfs);
+            for r in preempt_requests(4, 40) {
+                assert!(roomy.submit(r));
+            }
+            drain_batcher(&mut roomy);
+
+            let mut tight = mk(5, SchedulerPolicy::Preempt);
+            for r in preempt_requests(4, 40) {
+                assert!(tight.submit(r));
+            }
+            drain_batcher(&mut tight);
+
+            assert!(
+                tight.swap_outs > 0,
+                "{backend:?} + {vb:?}: swap tier never exercised"
+            );
+            assert_eq!(
+                tight.swap_ins, tight.swap_outs,
+                "{backend:?} + {vb:?}: a swapped sequence never resumed"
+            );
+            assert_eq!(tight.completed.len(), 4);
+            assert!(tight.rejected.is_empty());
+            assert_eq!(
+                by_id(&roomy),
+                by_id(&tight),
+                "{backend:?} + {vb:?}: swap restore diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn prefix_cache_cow_holds_under_preemption_churn() {
+    // copy-on-write prefix sharing under an oversubscribed preemptive
+    // batcher: token parity against a roomy prefix-off run proves no
+    // shared block is ever freed (and recycled) while a holder is
+    // still live, and after the full drain no refcount, spill, or
+    // prefix-index leaks remain
+    let tok = ByteTokenizer::new();
+    // 84 chars ≈ 84 tokens: two full shared blocks plus a private tail
+    let system = "shared system preamble text ".repeat(3);
+    let requests = || -> Vec<Request> {
+        (0..6u64)
+            .map(|i| Request {
+                id: i,
+                prompt: tok.encode(&format!("{system}tail {i}")),
+                max_new_tokens: 10 + (i as usize % 4),
+                arrival_s: i as f64 * 0.001,
+            })
+            .collect()
+    };
+    let mk = |blocks: usize, policy: SchedulerPolicy, prefix: bool| {
+        let mut cfg =
+            tiny_cfg(AttentionBackend::Lookat { m: 4, k: 64 }, 2);
+        cfg.cache_blocks = blocks;
+        cfg.prefill_chunk = 8;
+        cfg.prefix_cache = prefix;
+        let engine = Engine::build(&cfg).unwrap();
+        Batcher::new(
+            engine,
+            BatcherConfig {
+                max_batch: 3,
+                max_queue: 32,
+                policy,
+                ..BatcherConfig::default()
+            },
+        )
+    };
+
+    let mut plain = mk(64, SchedulerPolicy::Fcfs, false);
+    for r in requests() {
+        assert!(plain.submit(r));
+    }
+    drain_batcher(&mut plain);
+
+    // 7 blocks against three ~4-block sequences at a time: constant
+    // eviction pressure while prefix blocks are shared and re-attached
+    let mut shared = mk(7, SchedulerPolicy::Preempt, true);
+    for r in requests() {
+        assert!(shared.submit(r));
+    }
+    drain_batcher(&mut shared);
+
+    assert!(shared.preemptions > 0, "churn scenario must preempt");
+    assert_eq!(shared.completed.len(), 6);
+    assert!(shared.rejected.is_empty());
+
+    let by_id = |b: &Batcher| {
+        let mut v: Vec<(u64, Vec<u32>)> = b
+            .completed
+            .iter()
+            .map(|c| (c.id, c.generated.clone()))
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(
+        by_id(&plain),
+        by_id(&shared),
+        "a survivor read a block freed while shared"
+    );
+
+    let s = shared.engine().cache_stats();
+    assert_eq!(s.blocks_allocated, 0, "refcount leak: blocks held");
+    assert_eq!(s.shared_blocks, 0, "dangling shared refs");
+    assert_eq!(s.tokens, 0);
+    assert_eq!(
+        shared.engine().prefix_entries(),
+        0,
+        "prefix index kept entries past their last holder"
+    );
 }
 
 #[test]
