@@ -5,7 +5,10 @@
 //!
 //! Measures raw scan throughput (GB/s of code bytes streamed, and
 //! scored tokens/s) for every unrolled `m` specialization plus the
-//! generic path, in both layouts over the same codes. Lanes are built
+//! generic path, in both layouts over the same codes — plus, per `m`,
+//! the pinned-scalar lane scan and the nibble-packed K=16 shuffle scan
+//! at matched code bits (2m subspaces of 4 bits = m bytes/token, same
+//! stream size, directly comparable GB/s). Lanes are built
 //! at [`BLOCK_TOKENS`]-token groups — exactly the paged cache's block
 //! shape — so the figures are the serving hot path's, not a synthetic
 //! best case. Two artifacts are written:
@@ -17,8 +20,8 @@
 //!   bench-check` discovers and gates alongside the serving figures
 
 use lookat::kvcache::BLOCK_TOKENS;
-use lookat::pq::{Codebook, LookupTable};
-use lookat::testkit::fixtures::interleave_lanes;
+use lookat::pq::{simd, Codebook, LookupTable};
+use lookat::testkit::fixtures::{interleave_lanes, interleave_lanes_packed};
 use lookat::util::bench::{black_box, Bench};
 use lookat::util::json::Json;
 use lookat::util::rng::Pcg32;
@@ -30,18 +33,46 @@ const K: usize = 256;
 
 /// Random codebook + codes: scan cost does not depend on centroid
 /// values, so no k-means training is needed for a scan bench.
-fn setup(m: usize) -> (LookupTable, Vec<u8>) {
-    let mut rng = Pcg32::seed(0xADC + m as u64);
+fn setup_k(m: usize, k: usize) -> (LookupTable, Vec<u8>) {
+    let mut rng = Pcg32::seed(0xADC + (m * k) as u64);
     let d_sub = D_K / m;
     let centroids: Vec<Vec<f32>> = (0..m)
-        .map(|_| (0..K * d_sub).map(|_| rng.next_f32_std()).collect())
+        .map(|_| (0..k * d_sub).map(|_| rng.next_f32_std()).collect())
         .collect();
-    let cb = Codebook::new(m, K, d_sub, centroids);
+    let cb = Codebook::new(m, k, d_sub, centroids);
     let query: Vec<f32> = (0..D_K).map(|_| rng.next_f32_std()).collect();
     let lut = LookupTable::build(&query, &cb);
     let codes: Vec<u8> =
-        (0..N_TOKENS * m).map(|_| rng.next_bounded(K as u32) as u8).collect();
+        (0..N_TOKENS * m).map(|_| rng.next_bounded(k as u32) as u8).collect();
     (lut, codes)
+}
+
+fn setup(m: usize) -> (LookupTable, Vec<u8>) {
+    setup_k(m, K)
+}
+
+fn result_entry(
+    label: String,
+    m: usize,
+    layout: &str,
+    path: &str,
+    meas: &lookat::util::bench::Measurement,
+) -> Json {
+    let mut o = Json::obj();
+    o.set("backend", Json::Str(label));
+    o.set("m", Json::Num(m as f64));
+    o.set("layout", Json::Str(layout.to_string()));
+    o.set("path", Json::Str(path.to_string()));
+    o.set(
+        "scan_tok_s",
+        Json::Num(meas.throughput_items_per_s().unwrap_or(0.0)),
+    );
+    o.set(
+        "scan_gb_s",
+        Json::Num(meas.throughput_gb_per_s().unwrap_or(0.0)),
+    );
+    o.set("median_s", Json::Num(meas.median_s));
+    o
 }
 
 fn main() -> anyhow::Result<()> {
@@ -84,24 +115,103 @@ fn main() -> anyhow::Result<()> {
             .clone();
 
         for (layout, meas) in [("flat", &flat), ("lanes", &grouped)] {
-            let mut o = Json::obj();
-            o.set("backend", Json::Str(format!("adc-m{m}-{layout}")));
-            o.set("m", Json::Num(m as f64));
-            o.set("layout", Json::Str(layout.to_string()));
-            o.set(
-                "scan_tok_s",
-                Json::Num(meas.throughput_items_per_s().unwrap_or(0.0)),
-            );
-            o.set(
-                "scan_gb_s",
-                Json::Num(meas.throughput_gb_per_s().unwrap_or(0.0)),
-            );
-            o.set("median_s", Json::Num(meas.median_s));
-            results.push(o);
+            // historical labels: no path suffix, so the perf trajectory
+            // stays one series per (m, layout) across machines
+            results.push(result_entry(
+                format!("adc-m{m}-{layout}"),
+                m,
+                layout,
+                simd::scan_path(),
+                meas,
+            ));
         }
+
+        // pinned-scalar K=256 lane scan — the dispatch's reference
+        // series, and the packed comparison's "before" number
+        let mut scal_out = Vec::with_capacity(N_TOKENS);
+        let lanes_scalar = bench
+            .run_throughput(
+                &format!("adc_scan/lanes-scalar/m{m}"),
+                N_TOKENS as f64,
+                bytes,
+                || {
+                    scal_out.clear();
+                    lut.scores_lanes_scalar(
+                        lanes.iter().map(|(l, n)| (&l[..], *n)),
+                        &mut scal_out,
+                    );
+                    black_box(scal_out[N_TOKENS - 1]);
+                },
+            )
+            .clone();
+        results.push(result_entry(
+            format!("adc-m{m}-lanes-scalar"),
+            m,
+            "lanes",
+            "scalar",
+            &lanes_scalar,
+        ));
+
+        // 4-bit fast-scan at matched code bits: K=16 with 2m subspaces
+        // streams the same m bytes/token as K=256 with m, so the GB/s
+        // columns are directly comparable
+        let mm = 2 * m;
+        let (lut16, codes16) = setup_k(mm, 16);
+        let packed = interleave_lanes_packed(&codes16, mm, BLOCK_TOKENS);
+        let mut p_out = Vec::with_capacity(N_TOKENS);
+        let packed_simd = bench
+            .run_throughput(
+                &format!("adc_scan/packed16/m{mm}"),
+                N_TOKENS as f64,
+                bytes,
+                || {
+                    p_out.clear();
+                    lut16.scores_lanes_packed(
+                        packed.iter().map(|(l, n)| (&l[..], *n)),
+                        &mut p_out,
+                    );
+                    black_box(p_out[N_TOKENS - 1]);
+                },
+            )
+            .clone();
+        results.push(result_entry(
+            format!("adc-m{mm}-packed16/{}", simd::scan_path()),
+            mm,
+            "packed16",
+            simd::scan_path(),
+            &packed_simd,
+        ));
+        let packed_scalar = bench
+            .run_throughput(
+                &format!("adc_scan/packed16-scalar/m{mm}"),
+                N_TOKENS as f64,
+                bytes,
+                || {
+                    p_out.clear();
+                    lut16.scores_lanes_packed_scalar(
+                        packed.iter().map(|(l, n)| (&l[..], *n)),
+                        &mut p_out,
+                    );
+                    black_box(p_out[N_TOKENS - 1]);
+                },
+            )
+            .clone();
+        results.push(result_entry(
+            format!("adc-m{mm}-packed16-scalar"),
+            mm,
+            "packed16",
+            "scalar",
+            &packed_scalar,
+        ));
+
         println!(
-            "m={m:<3} lanes/flat speedup: {:.2}x",
-            flat.median_s / grouped.median_s.max(1e-12)
+            "m={m:<3} lanes/flat speedup: {:.2}x  \
+             packed16(2m,{})/scalar-lanes: {:.2}x  \
+             packed16 simd/scalar: {:.2}x",
+            flat.median_s / grouped.median_s.max(1e-12),
+            simd::scan_path(),
+            lanes_scalar.median_s / packed_simd.median_s.max(1e-12),
+            packed_scalar.median_s / packed_simd.median_s.max(1e-12),
         );
     }
 
@@ -109,6 +219,7 @@ fn main() -> anyhow::Result<()> {
     top.set("bench", Json::Str("adc_scan".into()));
     top.set("tokens_per_iter", Json::Num(N_TOKENS as f64));
     top.set("group_tokens", Json::Num(BLOCK_TOKENS as f64));
+    top.set("scan_path", Json::Str(simd::scan_path().to_string()));
     top.set("results", Json::Arr(results));
 
     let dir = lookat::experiments::report::reports_dir();

@@ -492,6 +492,15 @@ fn main() -> anyhow::Result<()> {
             AttentionBackend::ScalarQuant { bits: 8 },
             ValueBackend::Pq { m: 8, k: 256 },
         ),
+        // combined-compression 4-bit mode: K=16 keys and values at 2m
+        // subspaces — same bytes/token as the (m, K=256) rows above,
+        // served by the nibble-packed SIMD shuffle scan. New label
+        // ("lookat-8+k16+vpq-8+k16/<isa>"), so the baseline gate picks
+        // it up as a fresh series
+        (
+            AttentionBackend::Lookat { m: 8, k: 16 },
+            ValueBackend::Pq { m: 8, k: 16 },
+        ),
     ];
     let mut results = Vec::new();
     for (b, vb) in combos {

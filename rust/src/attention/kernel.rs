@@ -327,6 +327,9 @@ impl AttentionKernel for LookatKernel {
             .codecs()
             .context("lookat kernel needs a PQ cache")?
             .clone();
+        // K ≤ 16 codecs store nibble-packed block lanes; scan them with
+        // the register-resident shuffle kernel
+        let packed = codecs[0].packed();
         let d_k = plan.d_k;
         let per_item = parallel_try_map(
             plan.items.len(),
@@ -355,17 +358,19 @@ impl AttentionKernel for LookatKernel {
                     // would only truncate away
                     let mut left = p;
                     timed(plan.timers, Phase::Scan, || {
-                        lut.scores_lanes(
-                            blocks.filter_map(|b| {
-                                if left == 0 {
-                                    return None;
-                                }
-                                let take = b.len.min(left);
-                                left -= take;
-                                Some((b.codes, take))
-                            }),
-                            &mut scores,
-                        )
+                        let lanes = blocks.filter_map(|b| {
+                            if left == 0 {
+                                return None;
+                            }
+                            let take = b.len.min(left);
+                            left -= take;
+                            Some((b.codes, take))
+                        });
+                        if packed {
+                            lut.scores_lanes_packed(lanes, &mut scores)
+                        } else {
+                            lut.scores_lanes(lanes, &mut scores)
+                        }
                     });
                     pool.put_f32(lut.into_table());
                     debug_assert_eq!(scores.len(), p);

@@ -181,7 +181,9 @@ pub fn finish_attention_blocks<'a>(
 /// gathered codes. Like [`finish_attention_blocks`], the lane stream
 /// may extend past `scores.len()` tokens (a prefill span row's causal
 /// prefix); excess tokens are truncated by shrinking each lane's
-/// claimed length.
+/// claimed length. K ≤ 16 value codecs store nibble-packed lanes, so
+/// the tail routes them through the packed decode variant — same
+/// accumulation order, still bit-identical.
 pub fn finish_attention_kv_blocks<'a>(
     mut scores: Vec<f32>,
     blocks: impl Iterator<Item = BlockView<'a>>,
@@ -194,18 +196,20 @@ pub fn finish_attention_kv_blocks<'a>(
     }
     softmax_inplace(&mut scores);
     let mut left = scores.len();
-    let out = crate::pq::values::weighted_decode_lanes(
-        &scores,
-        blocks.filter_map(move |b| {
-            if left == 0 {
-                return None;
-            }
-            let take = b.len.min(left);
-            left -= take;
-            Some((b.value_codes, take))
-        }),
-        value_codec,
-    );
+    let lanes = blocks.filter_map(move |b| {
+        if left == 0 {
+            return None;
+        }
+        let take = b.len.min(left);
+        left -= take;
+        Some((b.value_codes, take))
+    });
+    let out = if value_codec.packed() {
+        crate::pq::values::weighted_decode_lanes_packed(
+            &scores, lanes, value_codec)
+    } else {
+        crate::pq::values::weighted_decode_lanes(&scores, lanes, value_codec)
+    };
     AttnOutput { out, weights: scores }
 }
 
@@ -388,6 +392,44 @@ mod tests {
             // blocks expose subspace-major value-code lanes
             let lanes = crate::testkit::fixtures::interleave_lanes(
                 &value_codes, 4, bt);
+            let views = lanes.iter().map(|(lane, len)| BlockView {
+                len: *len,
+                keys: &[],
+                codes: &[],
+                values: &[],
+                value_codes: &lane[..],
+            });
+            let got = finish_attention_kv_blocks(
+                scores.clone(), views, &vc, d_k);
+            assert_eq!(
+                want.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                got.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "block_tokens={bt}"
+            );
+            assert_eq!(want.weights, got.weights, "block_tokens={bt}");
+        }
+    }
+
+    #[test]
+    fn fused_kv_tail_packed_bit_identical_to_primitive() {
+        // K = 16 value codecs nibble-pack their lanes; the fused tail
+        // must still match the flat primitive bit for bit
+        let d_k = 32;
+        let n = 100;
+        let (q, keys, values) = case(n, d_k, 31);
+        let kc = PqCodec::train(&keys, d_k, 4, 64, &TrainOpts::default());
+        let vc = PqCodec::train(&values, d_k, 8, 16, &TrainOpts::default());
+        assert!(vc.packed());
+        let key_codes = kc.encode_batch(&keys, n);
+        let value_codes = vc.encode_batch(&values, n);
+        let want = lookat_kv_attention(
+            &q, &key_codes, &kc, &value_codes, &vc, n);
+
+        let lut = LookupTable::build(&q, &kc.codebook);
+        let scores = lut.scores(&key_codes, n);
+        for bt in [32usize, 48, 6] {
+            let lanes = crate::testkit::fixtures::interleave_lanes_packed(
+                &value_codes, 8, bt);
             let views = lanes.iter().map(|(lane, len)| BlockView {
                 len: *len,
                 keys: &[],

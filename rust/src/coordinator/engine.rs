@@ -66,7 +66,11 @@ impl AttentionBackend {
     pub fn name(&self) -> String {
         match self {
             AttentionBackend::Fp16Exact => "fp16".into(),
-            AttentionBackend::Lookat { m, .. } => format!("lookat-{m}"),
+            // K = 256 is the paper's default and keeps its historical
+            // bare label so perf baselines stay comparable; narrower
+            // codebooks (the 4-bit fast-scan mode) are spelled out
+            AttentionBackend::Lookat { m, k: 256 } => format!("lookat-{m}"),
+            AttentionBackend::Lookat { m, k } => format!("lookat-{m}+k{k}"),
             AttentionBackend::ScalarQuant { bits } => format!("int{bits}"),
             AttentionBackend::PjrtFp16 => "pjrt-fp16".into(),
             AttentionBackend::PjrtLookat { m } => format!("pjrt-lookat-{m}"),
@@ -99,7 +103,8 @@ impl ValueBackend {
     pub fn name(&self) -> String {
         match self {
             ValueBackend::Fp32 => "fp32".into(),
-            ValueBackend::Pq { m, .. } => format!("vpq-{m}"),
+            ValueBackend::Pq { m, k: 256 } => format!("vpq-{m}"),
+            ValueBackend::Pq { m, k } => format!("vpq-{m}+k{k}"),
         }
     }
 
@@ -370,11 +375,38 @@ impl Engine {
     /// Combined backend label for reports: the key backend's name, plus
     /// a `+vpq-<m>` suffix when values are PQ-coded (fp32 values keep
     /// the bare name, so perf trajectories stay comparable across PRs).
+    /// Configs that store nibble-packed (K ≤ 16) code lanes run the
+    /// SIMD shuffle scan, so their labels additionally carry the active
+    /// ISA path (e.g. `lookat-8+k16/avx2`) — K = 256 labels stay bare
+    /// to keep baseline series byte-stable.
     pub fn label(&self) -> String {
-        match &self.value_backend {
+        let base = match &self.value_backend {
             ValueBackend::Fp32 => self.backend.name(),
             vb => format!("{}+{}", self.backend.name(), vb.name()),
+        };
+        if self.packed_codes() {
+            format!("{base}/{}", crate::pq::simd::scan_path())
+        } else {
+            base
         }
+    }
+
+    /// Whether either cache side stores nibble-packed (K ≤ 16) code
+    /// lanes — the configs the register-resident shuffle scan serves.
+    fn packed_codes(&self) -> bool {
+        let key = matches!(self.backend,
+            AttentionBackend::Lookat { k, .. }
+                if crate::pq::packs_nibbles(k));
+        let val = matches!(self.value_backend,
+            ValueBackend::Pq { k, .. } if crate::pq::packs_nibbles(k));
+        key || val
+    }
+
+    /// The ADC scan path the runtime ISA detection selected ("avx2" or
+    /// "scalar"; `LOOKAT_SIMD=scalar` forces the latter). Serving
+    /// reports record it per run so perf series are attributable.
+    pub fn scan_path(&self) -> &'static str {
+        crate::pq::simd::scan_path()
     }
 
     /// Instantiate the backend's attention kernel. PJRT backends open
@@ -1484,11 +1516,16 @@ mod tests {
         assert_eq!(AttentionBackend::Fp16Exact.name(), "fp16");
         assert_eq!(AttentionBackend::Lookat { m: 4, k: 256 }.name(),
                    "lookat-4");
+        assert_eq!(AttentionBackend::Lookat { m: 8, k: 16 }.name(),
+                   "lookat-8+k16");
+        assert_eq!(AttentionBackend::Lookat { m: 4, k: 64 }.name(),
+                   "lookat-4+k64");
         assert_eq!(AttentionBackend::ScalarQuant { bits: 4 }.name(), "int4");
         assert_eq!(AttentionBackend::PjrtLookat { m: 2 }.name(),
                    "pjrt-lookat-2");
         assert_eq!(ValueBackend::Fp32.name(), "fp32");
         assert_eq!(ValueBackend::Pq { m: 8, k: 256 }.name(), "vpq-8");
+        assert_eq!(ValueBackend::Pq { m: 8, k: 16 }.name(), "vpq-8+k16");
     }
 
     #[test]
@@ -1496,7 +1533,7 @@ mod tests {
         let mut cfg = tiny_cfg(AttentionBackend::Lookat { m: 4, k: 64 });
         cfg.value_backend = ValueBackend::Pq { m: 4, k: 64 };
         let mut e = Engine::build(&cfg).unwrap();
-        assert_eq!(e.label(), "lookat-4+vpq-4");
+        assert_eq!(e.label(), "lookat-4+k64+vpq-4+k64");
         let ids = ByteTokenizer::new().encode("fully compressed serve");
         e.start_seq(1, &ids).unwrap();
         for _ in 0..4 {

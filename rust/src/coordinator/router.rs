@@ -27,6 +27,11 @@ pub struct RouterConfig {
 #[derive(Clone, Debug)]
 pub struct ServingReport {
     pub backend: String,
+    /// ADC scan path the runtime ISA detection picked for this run
+    /// ("avx2" or "scalar"; `LOOKAT_SIMD=scalar` pins the latter) —
+    /// recorded separately from `backend` so baseline series keyed on
+    /// the label stay stable across machines
+    pub scan_path: String,
     pub completed: Vec<CompletedRequest>,
     pub rejected: usize,
     pub wall_s: f64,
@@ -74,6 +79,7 @@ impl ServingReport {
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("backend", Json::Str(self.backend.clone()));
+        o.set("scan_path", Json::Str(self.scan_path.clone()));
         o.set("completed", Json::Num(self.completed.len() as f64));
         o.set("rejected", Json::Num(self.rejected as f64));
         o.set("wall_s", Json::Num(self.wall_s));
@@ -112,12 +118,14 @@ impl ServingReport {
         let ttft = self.ttft_summary();
         let e2e = self.e2e_summary();
         format!(
-            "backend={:<14} completed={:<4} rejected={:<3} preempt={:<3} \
+            "backend={:<14} scan={:<6} completed={:<4} rejected={:<3} \
+             preempt={:<3} \
              swap={}/{} prefix_hits={:<3} wall={:>7.2}s \
              decode_tok/s={:>8.1} ttft_p50={:>7.1}ms \
              e2e_p50={:>7.1}ms key_cache_peak={:>8} B \
              value_cache_peak={:>8} B",
             self.backend,
+            self.scan_path,
             self.completed.len(),
             self.rejected,
             self.preemptions,
@@ -227,6 +235,7 @@ impl Router {
 
         Ok(ServingReport {
             backend: self.batcher.engine().label(),
+            scan_path: self.batcher.engine().scan_path().to_string(),
             completed: std::mem::take(&mut self.batcher.completed),
             // drain, don't peek: a reused router (set_max_batch sweeps)
             // must not re-report earlier runs' rejections
@@ -310,7 +319,12 @@ mod tests {
         let reqs = r.tokenize_trace(&small_trace(4));
         let report = r.serve_trace(reqs).unwrap();
         assert_eq!(report.completed.len(), 4);
-        assert_eq!(report.backend, "lookat-4");
+        assert_eq!(report.backend, "lookat-4+k64");
+        assert!(
+            report.scan_path == "avx2" || report.scan_path == "scalar",
+            "scan_path {}",
+            report.scan_path
+        );
         // compressed cache: peak key bytes far below the fp16 router's
         let mut rf = router(AttentionBackend::Fp16Exact);
         let reqs2 = rf.tokenize_trace(&small_trace(4));
@@ -352,7 +366,7 @@ mod tests {
         let reqs = r.tokenize_trace(&small_trace(4));
         let report = r.serve_trace(reqs).unwrap();
         assert_eq!(report.completed.len(), 4);
-        assert_eq!(report.backend, "lookat-4+vpq-4");
+        assert_eq!(report.backend, "lookat-4+k64+vpq-4+k64");
         let mut rf = router(AttentionBackend::Fp16Exact);
         let reqs_fp = rf.tokenize_trace(&small_trace(4));
         let report_fp = rf.serve_trace(reqs_fp).unwrap();
@@ -400,6 +414,7 @@ mod tests {
         let j = report.to_json();
         for k in [
             "backend",
+            "scan_path",
             "completed",
             "wall_s",
             "throughput_tok_s",

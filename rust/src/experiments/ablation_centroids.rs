@@ -4,6 +4,11 @@
 //! at fixed m and check the empirical rank-correlation *deficit*
 //! (1 − ρ) shrinks as K grows, and report the fitted constant of
 //! (1 − ρ) ≈ c · d_k/(mK).
+//!
+//! The sweep also carries the 4-bit fast-scan mode's equal-bit pairs:
+//! (m, K=256) vs (2m, K=16) spend the same code bits per token
+//! (m·8 = 2m·4), so their rows compare fidelity at matched compression
+//! — the trade the SIMD shuffle scan buys its speed with.
 
 use super::eval::EvalContext;
 use super::report::{MdTable, Report};
@@ -15,6 +20,9 @@ pub struct Row {
     pub m: usize,
     /// theory knob d_k/(m·K)
     pub knob: f64,
+    /// code bits per token, m·log2(K) — rows with equal bits are
+    /// equal-compression alternatives
+    pub bits: usize,
     pub spearman: f64,
     pub cosine: f64,
 }
@@ -23,8 +31,10 @@ pub fn compute(len: usize, stride: usize, seed: u64) -> Vec<Row> {
     let ctx = EvalContext::build(len, seed);
     let d_k = ctx.model_cfg.d_head;
     let mut rows = Vec::new();
+    // (2, 256)/(4, 16) and (4, 256)/(8, 16) are the equal-bit pairs:
+    // 16 and 32 code bits per token respectively
     for (m, k) in [(4usize, 16usize), (4, 32), (4, 64), (4, 128), (4, 256),
-                   (2, 64), (8, 64)] {
+                   (2, 64), (8, 64), (2, 256), (8, 16)] {
         let mut per_sample = Vec::new();
         for s in &ctx.samples {
             let codecs: Vec<PqCodec> = (0..ctx.model_cfg.n_head)
@@ -42,6 +52,7 @@ pub fn compute(len: usize, stride: usize, seed: u64) -> Vec<Row> {
             k,
             m,
             knob: d_k as f64 / (m * k) as f64,
+            bits: m * k.trailing_zeros() as usize,
             spearman: agg.spearman.0,
             cosine: agg.cosine.0,
         });
@@ -58,13 +69,14 @@ pub fn fit_constant(rows: &[Row]) -> f64 {
 
 pub fn render(rows: &[Row]) -> Report {
     let mut t = MdTable::new(&[
-        "m", "K", "d_k/(mK)", "Spearman ρ", "1−ρ", "Cosine",
+        "m", "K", "bits/tok", "d_k/(mK)", "Spearman ρ", "1−ρ", "Cosine",
     ]);
     let mut arr = Vec::new();
     for r in rows {
         t.row(vec![
             format!("{}", r.m),
             format!("{}", r.k),
+            format!("{}", r.bits),
             format!("{:.4}", r.knob),
             format!("{:.4}", r.spearman),
             format!("{:.4}", 1.0 - r.spearman),
@@ -73,6 +85,7 @@ pub fn render(rows: &[Row]) -> Report {
         let mut o = Json::obj();
         o.set("m", Json::Num(r.m as f64));
         o.set("k", Json::Num(r.k as f64));
+        o.set("bits_per_token", Json::Num(r.bits as f64));
         o.set("knob", Json::Num(r.knob));
         o.set("spearman", Json::Num(r.spearman));
         o.set("cosine", Json::Num(r.cosine));
@@ -82,7 +95,10 @@ pub fn render(rows: &[Row]) -> Report {
     let markdown = format!(
         "Empirical check of Proposition 1: E[ρ] ≥ 1 − O(d_k/(mK)). \
          Fitted (1−ρ) ≈ {c:.3} · d_k/(mK) over the sweep below — the \
-         deficit shrinks as K (or m) grows, as the bound predicts.\n\n{}",
+         deficit shrinks as K (or m) grows, as the bound predicts. \
+         Rows with equal bits/tok pair the 4-bit fast-scan mode \
+         against the byte-code default at matched compression: \
+         (2m, K=16) vs (m, K=256).\n\n{}",
         t.render()
     );
     let mut j = Json::obj();
@@ -121,6 +137,29 @@ mod tests {
             get(256),
             get(16)
         );
+    }
+
+    #[test]
+    fn equal_bit_pairs_spend_the_same_code_budget() {
+        let rows = compute(64, 16, 8);
+        let get = |m: usize, k: usize| {
+            rows.iter().find(|r| r.m == m && r.k == k).unwrap()
+        };
+        for ((mw, kw), (mp, kp)) in
+            [((4, 256), (8, 16)), ((2, 256), (4, 16))]
+        {
+            let wide = get(mw, kw);
+            let packed = get(mp, kp);
+            assert_eq!(wide.bits, packed.bits, "not an equal-bit pair");
+            // doubling m buys back most of what the narrow codebook
+            // loses: the packed row must stay competitive, not collapse
+            assert!(
+                packed.spearman > wide.spearman - 0.1,
+                "(m={mp}, K={kp}) rho {} vs (m={mw}, K={kw}) rho {}",
+                packed.spearman,
+                wide.spearman
+            );
+        }
     }
 
     #[test]

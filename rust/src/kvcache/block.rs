@@ -16,8 +16,11 @@ pub type BlockId = u32;
 /// layout): a lane is the full `(m × BLOCK_TOKENS)` row-major matrix
 /// of the block — row `i` holds subspace `i`'s codes for every token
 /// slot — and only the first [`BlockView::len`] entries of each row
-/// are valid. The ADC scan (`LookupTable::scores_lanes`) and the fused
-/// value decode (`pq::values::weighted_decode_lanes`) consume
+/// are valid. For K ≤ 16 codecs the lane is **nibble-packed**,
+/// `(m × BLOCK_TOKENS/2)` bytes with two 4-bit codes per byte (low
+/// nibble = even token slot). The ADC scans
+/// (`LookupTable::scores_lanes{,_packed}`) and the fused value decodes
+/// (`pq::values::weighted_decode_lanes{,_packed}`) consume
 /// `(lane, len)` pairs directly, keeping one LUT/accumulator row hot
 /// while a block's codes stream. Float lanes (keys/values) stay
 /// token-major — their consumers walk whole `d_k` rows.
@@ -29,15 +32,17 @@ pub struct BlockView<'a> {
     /// this head's raw keys, (len × d_k) row-major — empty in PQ mode
     pub keys: &'a [f32],
     /// this head's PQ key-code lane, subspace-major
-    /// (m × [`BLOCK_TOKENS`]) with the first `len` of each row valid —
-    /// empty in FP16 mode
+    /// (m × [`BLOCK_TOKENS`]), or (m × [`BLOCK_TOKENS`]/2) when the
+    /// key codec nibble-packs (K ≤ 16), with the first `len` tokens of
+    /// each row valid — empty in FP16 mode
     pub codes: &'a [u8],
     /// this head's raw values, (len × d_k) row-major — empty when values
     /// are PQ-coded (`ValueStorage::Pq`)
     pub values: &'a [f32],
     /// this head's PQ value-code lane, subspace-major
-    /// (m_v × [`BLOCK_TOKENS`]) with the first `len` of each row valid
-    /// — empty when values are raw (`ValueStorage::Fp32`)
+    /// (m_v × [`BLOCK_TOKENS`]) or its packed sibling, with the first
+    /// `len` tokens of each row valid — empty when values are raw
+    /// (`ValueStorage::Fp32`)
     pub value_codes: &'a [u8],
 }
 

@@ -22,8 +22,8 @@ pub enum KeyStorage {
 
 impl KeyStorage {
     /// Validated PQ storage: one codec per head, at least one head,
-    /// every head sharing one subspace count (blocks are strided by a
-    /// single `m`).
+    /// every head sharing one subspace count and one centroid count
+    /// (blocks are strided by a single `m` and a single packing mode).
     pub fn pq(codecs: Vec<PqCodec>) -> Result<KeyStorage, CacheError> {
         uniform_codecs(&codecs)?;
         Ok(KeyStorage::Pq { codecs: Arc::new(codecs) })
@@ -37,6 +37,27 @@ impl KeyStorage {
                 codecs.first().map_or(0, |c| c.codebook.m)
             }
         }
+    }
+
+    /// Whether codes are nibble-packed (K ≤ 16: two per byte).
+    fn packed(&self) -> bool {
+        match self {
+            KeyStorage::Fp16 => false,
+            KeyStorage::Pq { codecs } => {
+                codecs.first().is_some_and(|c| c.packed())
+            }
+        }
+    }
+
+    /// Bytes of one subspace row within a block's per-head code lane:
+    /// `BLOCK_TOKENS` byte codes, or half that nibble-packed.
+    fn code_row_bytes(&self) -> usize {
+        if self.packed() { BLOCK_TOKENS / 2 } else { BLOCK_TOKENS }
+    }
+
+    /// Bytes of one head's code lane in one block (`m` subspace rows).
+    fn lane_bytes(&self) -> usize {
+        self.m() * self.code_row_bytes()
     }
 }
 
@@ -55,7 +76,7 @@ pub enum ValueStorage {
 
 impl ValueStorage {
     /// Validated PQ value storage: same contract as [`KeyStorage::pq`]
-    /// (non-empty, one uniform subspace count across heads).
+    /// (non-empty, one uniform subspace count and centroid count).
     pub fn pq(codecs: Vec<PqCodec>) -> Result<ValueStorage, CacheError> {
         uniform_codecs(&codecs)?;
         Ok(ValueStorage::Pq { codecs: Arc::new(codecs) })
@@ -69,6 +90,26 @@ impl ValueStorage {
                 codecs.first().map_or(0, |c| c.codebook.m)
             }
         }
+    }
+
+    /// Whether value codes are nibble-packed (K ≤ 16).
+    fn packed(&self) -> bool {
+        match self {
+            ValueStorage::Fp32 => false,
+            ValueStorage::Pq { codecs } => {
+                codecs.first().is_some_and(|c| c.packed())
+            }
+        }
+    }
+
+    /// Bytes of one subspace row of a block's per-head value-code lane.
+    fn code_row_bytes(&self) -> usize {
+        if self.packed() { BLOCK_TOKENS / 2 } else { BLOCK_TOKENS }
+    }
+
+    /// Bytes of one head's value-code lane in one block.
+    fn lane_bytes(&self) -> usize {
+        self.m() * self.code_row_bytes()
     }
 }
 
@@ -84,12 +125,16 @@ pub enum CacheError {
     MixedCodecs,
 }
 
-/// Shared validation for the PQ storage constructors.
+/// Shared validation for the PQ storage constructors. Centroid counts
+/// must match too: K decides nibble packing, and blocks are laid out
+/// with a single row stride across heads.
 fn uniform_codecs(codecs: &[PqCodec]) -> Result<(), CacheError> {
     let Some(first) = codecs.first() else {
         return Err(CacheError::NoCodecs);
     };
-    if codecs.iter().any(|c| c.codebook.m != first.codebook.m) {
+    if codecs.iter().any(|c| {
+        c.codebook.m != first.codebook.m || c.codebook.k != first.codebook.k
+    }) {
         return Err(CacheError::MixedCodecs);
     }
     Ok(())
@@ -113,7 +158,8 @@ impl std::fmt::Display for CacheError {
             CacheError::MixedCodecs => {
                 write!(
                     f,
-                    "PQ storage needs one subspace count across heads"
+                    "PQ storage needs one subspace and centroid count \
+                     across heads"
                 )
             }
         }
@@ -183,6 +229,13 @@ impl SwappedSeq {
 ///   value codes: (H, m_v, BLOCK_TOKENS) u8  when value storage is Pq
 ///   keys:        (H, BLOCK_TOKENS, d_k) f32 when Fp16
 ///   key codes:   (H, m, BLOCK_TOKENS)   u8  when Pq
+///
+/// For K ≤ 16 codecs the code lanes are **nibble-packed**: each
+/// subspace row holds `BLOCK_TOKENS/2` bytes, two 4-bit codes per byte
+/// (low nibble = even token slot, high nibble = odd) — shape
+/// `(H, m, BLOCK_TOKENS/2)`. Packing is decided per storage side by
+/// its codec K ([`crate::pq::packs_nibbles`]), so keys and values can
+/// mix packed and byte lanes freely.
 pub struct KvCache {
     pub h: usize,
     pub d_k: usize,
@@ -226,7 +279,7 @@ impl KvCache {
         let (keys_raw, codes) = match &storage {
             KeyStorage::Fp16 => (vec![0.0; max_blocks * slot * d_k], vec![]),
             KeyStorage::Pq { .. } => {
-                (vec![], vec![0u8; max_blocks * slot * m])
+                (vec![], vec![0u8; max_blocks * h * storage.lane_bytes()])
             }
         };
         let m_v = value_storage.m();
@@ -234,9 +287,10 @@ impl KvCache {
             ValueStorage::Fp32 => {
                 (vec![0.0; max_blocks * slot * d_k], vec![])
             }
-            ValueStorage::Pq { .. } => {
-                (vec![], vec![0u8; max_blocks * slot * m_v])
-            }
+            ValueStorage::Pq { .. } => (
+                vec![],
+                vec![0u8; max_blocks * h * value_storage.lane_bytes()],
+            ),
         };
         Self {
             h,
@@ -343,6 +397,9 @@ impl KvCache {
             }
             ValueStorage::Pq { codecs } => {
                 let m_v = codecs[0].codebook.m;
+                let packed = codecs[0].packed();
+                let row =
+                    if packed { BLOCK_TOKENS / 2 } else { BLOCK_TOKENS };
                 for head in 0..h {
                     let code = &mut self.code_scratch[..m_v];
                     codecs[head].encode_into_with(
@@ -350,11 +407,21 @@ impl KvCache {
                         code,
                         &mut self.dots_scratch,
                     );
-                    let lane =
-                        (block * h + head) * BLOCK_TOKENS * m_v;
+                    let lane = (block * h + head) * m_v * row;
                     for (i, &c) in code.iter().enumerate() {
-                        self.value_codes
-                            [lane + i * BLOCK_TOKENS + off] = c;
+                        if packed {
+                            let b = &mut self.value_codes
+                                [lane + i * row + off / 2];
+                            // even slot writes the whole byte, clearing
+                            // any stale high nibble from a freed block
+                            *b = if off % 2 == 0 {
+                                c
+                            } else {
+                                (*b & 0x0F) | (c << 4)
+                            };
+                        } else {
+                            self.value_codes[lane + i * row + off] = c;
+                        }
                     }
                 }
             }
@@ -371,6 +438,9 @@ impl KvCache {
             }
             KeyStorage::Pq { codecs } => {
                 let m = codecs[0].codebook.m;
+                let packed = codecs[0].packed();
+                let row =
+                    if packed { BLOCK_TOKENS / 2 } else { BLOCK_TOKENS };
                 for head in 0..h {
                     let code = &mut self.code_scratch[..m];
                     codecs[head].encode_into_with(
@@ -378,9 +448,19 @@ impl KvCache {
                         code,
                         &mut self.dots_scratch,
                     );
-                    let lane = (block * h + head) * BLOCK_TOKENS * m;
+                    let lane = (block * h + head) * m * row;
                     for (i, &c) in code.iter().enumerate() {
-                        self.codes[lane + i * BLOCK_TOKENS + off] = c;
+                        if packed {
+                            let b = &mut self.codes
+                                [lane + i * row + off / 2];
+                            *b = if off % 2 == 0 {
+                                c
+                            } else {
+                                (*b & 0x0F) | (c << 4)
+                            };
+                        } else {
+                            self.codes[lane + i * row + off] = c;
+                        }
                     }
                 }
             }
@@ -426,8 +506,10 @@ impl KvCache {
         let st =
             self.seqs.remove(&seq).ok_or(CacheError::UnknownSeq(seq))?;
         let slot = BLOCK_TOKENS * self.h;
-        let (kf, kc) = (slot * self.d_k, slot * self.storage.m());
-        let (vf, vc) = (slot * self.d_k, slot * self.value_storage.m());
+        let (kf, kc) =
+            (slot * self.d_k, self.h * self.storage.lane_bytes());
+        let (vf, vc) =
+            (slot * self.d_k, self.h * self.value_storage.lane_bytes());
         let mut sw = SwappedSeq {
             len: st.len,
             keys_raw: Vec::new(),
@@ -481,8 +563,10 @@ impl KvCache {
         let blocks: Vec<BlockId> =
             (0..need).map(|_| self.alloc.alloc().unwrap()).collect();
         let slot = BLOCK_TOKENS * self.h;
-        let (kf, kc) = (slot * self.d_k, slot * self.storage.m());
-        let (vf, vc) = (slot * self.d_k, slot * self.value_storage.m());
+        let (kf, kc) =
+            (slot * self.d_k, self.h * self.storage.lane_bytes());
+        let (vf, vc) =
+            (slot * self.d_k, self.h * self.value_storage.lane_bytes());
         for (i, &b) in blocks.iter().enumerate() {
             let b = b as usize;
             match &self.storage {
@@ -622,8 +706,9 @@ impl KvCache {
         let len = self.seq_len(seq)?;
         out.clear();
         out.reserve(len * m);
+        let packed = self.storage.packed();
         for blk in self.blocks(seq, head)? {
-            deinterleave_lane(blk.codes, blk.len, m, out);
+            deinterleave_lane(blk.codes, blk.len, m, packed, out);
         }
         Ok(len)
     }
@@ -662,30 +747,23 @@ impl KvCache {
         let len = self.seq_len(seq)?;
         out.clear();
         out.reserve(len * m_v);
+        let packed = self.value_storage.packed();
         for blk in self.blocks(seq, head)? {
-            deinterleave_lane(blk.value_codes, blk.len, m_v, out);
+            deinterleave_lane(blk.value_codes, blk.len, m_v, packed, out);
         }
         Ok(len)
     }
 
     /// Exact storage accounting under the paper's byte model. Both sides
     /// reflect the *active* storage mode: PQ-coded tensors cost their
-    /// codes (1 B each) plus their codebooks (FP16 entries), raw tensors
-    /// cost 2 B/element.
+    /// codes (1 B each, or ½ B nibble-packed at K ≤ 16) plus their
+    /// codebooks (FP16 entries), raw tensors cost 2 B/element.
     pub fn stats(&self) -> CacheStats {
         let tokens: usize = self.seqs.values().map(|s| s.len).sum();
-        let key_bytes = match &self.storage {
-            KeyStorage::Fp16 => tokens * self.h * self.d_k * 2,
-            KeyStorage::Pq { .. } => {
-                tokens * self.h * self.storage.m()
-            }
-        };
-        let value_bytes = match &self.value_storage {
-            ValueStorage::Fp32 => tokens * self.h * self.d_k * 2,
-            ValueStorage::Pq { .. } => {
-                tokens * self.h * self.value_storage.m()
-            }
-        };
+        let key_bytes =
+            tokens * self.h * self.key_bytes_per_token_per_head();
+        let value_bytes =
+            tokens * self.h * self.value_bytes_per_token_per_head();
         let mut codebook_bytes: usize = match &self.storage {
             KeyStorage::Fp16 => 0,
             KeyStorage::Pq { codecs } => {
@@ -710,11 +788,14 @@ impl KvCache {
         }
     }
 
-    /// Bytes of key storage per token (the paper's "Mem." column).
+    /// Bytes of key storage per token (the paper's "Mem." column) —
+    /// ⌈m/2⌉ for nibble-packed K ≤ 16 codes.
     pub fn key_bytes_per_token_per_head(&self) -> usize {
         match &self.storage {
             KeyStorage::Fp16 => self.d_k * 2,
-            KeyStorage::Pq { .. } => self.storage.m(),
+            KeyStorage::Pq { codecs } => {
+                codecs.first().map_or(0, |c| c.bytes_per_token())
+            }
         }
     }
 
@@ -722,21 +803,35 @@ impl KvCache {
     pub fn value_bytes_per_token_per_head(&self) -> usize {
         match &self.value_storage {
             ValueStorage::Fp32 => self.d_k * 2,
-            ValueStorage::Pq { .. } => self.value_storage.m(),
+            ValueStorage::Pq { codecs } => {
+                codecs.first().map_or(0, |c| c.bytes_per_token())
+            }
         }
     }
 }
 
 /// De-interleave one block's subspace-major `(m × BLOCK_TOKENS)` code
-/// lane back to token-major `(len × m)`, appending to `out` — the
+/// lane (or its `(m × BLOCK_TOKENS/2)` nibble-packed sibling) back to
+/// token-major `(len × m)` byte codes, appending to `out` — the
 /// single home of the lane-layout inverse (the forward scatter lives
-/// in [`KvCache::append`], the test-side packer in
-/// `testkit::fixtures::interleave_lanes`).
-fn deinterleave_lane(lane: &[u8], len: usize, m: usize, out: &mut Vec<u8>) {
-    debug_assert_eq!(lane.len(), m * BLOCK_TOKENS);
+/// in [`KvCache::append`], the test-side packers in
+/// `testkit::fixtures::interleave_lanes{,_packed}`).
+fn deinterleave_lane(
+    lane: &[u8],
+    len: usize,
+    m: usize,
+    packed: bool,
+    out: &mut Vec<u8>,
+) {
+    let row = if packed { BLOCK_TOKENS / 2 } else { BLOCK_TOKENS };
+    debug_assert_eq!(lane.len(), m * row);
     for t in 0..len {
         for i in 0..m {
-            out.push(lane[i * BLOCK_TOKENS + t]);
+            out.push(if packed {
+                crate::pq::simd::nibble(&lane[i * row..(i + 1) * row], t)
+            } else {
+                lane[i * row + t]
+            });
         }
     }
 }
@@ -773,12 +868,9 @@ impl<'a> Iterator for BlockIter<'a> {
                 (&c.values[fbase..fbase + take * d_k], &[][..])
             }
             ValueStorage::Pq { .. } => {
-                let m_v = c.value_storage.m();
-                let lane = (b * h + self.head) * BLOCK_TOKENS * m_v;
-                (
-                    &[][..],
-                    &c.value_codes[lane..lane + m_v * BLOCK_TOKENS],
-                )
+                let lb = c.value_storage.lane_bytes();
+                let lane = (b * h + self.head) * lb;
+                (&[][..], &c.value_codes[lane..lane + lb])
             }
         };
         let (keys, codes): (&[f32], &[u8]) = match &c.storage {
@@ -786,9 +878,9 @@ impl<'a> Iterator for BlockIter<'a> {
                 (&c.keys_raw[fbase..fbase + take * d_k], &[][..])
             }
             KeyStorage::Pq { .. } => {
-                let m = c.storage.m();
-                let lane = (b * h + self.head) * BLOCK_TOKENS * m;
-                (&[][..], &c.codes[lane..lane + m * BLOCK_TOKENS])
+                let lb = c.storage.lane_bytes();
+                let lane = (b * h + self.head) * lb;
+                (&[][..], &c.codes[lane..lane + lb])
             }
         };
         Some(BlockView { len: take, keys, codes, values, value_codes })
@@ -804,12 +896,17 @@ mod tests {
     const H: usize = 2;
     const DK: usize = 16;
 
+    /// K=16 codecs — nibble-packed lanes, the 4-bit fast-scan mode.
     fn pq_storage(m: usize) -> KeyStorage {
+        pq_storage_k(m, 16)
+    }
+
+    fn pq_storage_k(m: usize, k: usize) -> KeyStorage {
         let mut rng = Pcg32::seed(5);
         let calib: Vec<f32> =
             (0..128 * DK).map(|_| rng.next_f32_std()).collect();
         let codecs: Vec<PqCodec> = (0..H)
-            .map(|_| PqCodec::train(&calib, DK, m, 16, &TrainOpts::default()))
+            .map(|_| PqCodec::train(&calib, DK, m, k, &TrainOpts::default()))
             .collect();
         KeyStorage::pq(codecs).unwrap()
     }
@@ -927,8 +1024,12 @@ mod tests {
 
     #[test]
     fn block_views_match_gathers_fp16_and_pq() {
-        for storage in [KeyStorage::Fp16, pq_storage(4)] {
+        // K=16 -> nibble-packed lanes, K=32 -> byte lanes
+        for storage in
+            [KeyStorage::Fp16, pq_storage(4), pq_storage_k(4, 32)]
+        {
             let is_pq = matches!(storage, KeyStorage::Pq { .. });
+            let packed = storage.packed();
             let mut c = KvCache::new(H, DK, 8, storage, ValueStorage::Fp32);
             c.create_seq(1).unwrap();
             for t in 0..70 {
@@ -952,17 +1053,26 @@ mod tests {
                 if is_pq {
                     let mut codes = Vec::new();
                     c.gather_codes_into(1, head, &mut codes).unwrap();
-                    // block lanes are subspace-major (m × BLOCK_TOKENS);
+                    // block lanes are subspace-major (m × row bytes);
                     // de-interleaving them must reproduce the token-
                     // major gather exactly
                     let m = 4usize;
+                    let row =
+                        if packed { BLOCK_TOKENS / 2 } else { BLOCK_TOKENS };
                     let mut tok = 0usize;
                     for b in c.blocks(1, head).unwrap() {
-                        assert_eq!(b.codes.len(), m * BLOCK_TOKENS);
+                        assert_eq!(b.codes.len(), m * row);
                         for t in 0..b.len {
                             for i in 0..m {
+                                let got = if packed {
+                                    (b.codes[i * row + t / 2]
+                                        >> ((t % 2) * 4))
+                                        & 0x0F
+                                } else {
+                                    b.codes[i * row + t]
+                                };
                                 assert_eq!(
-                                    b.codes[i * BLOCK_TOKENS + t],
+                                    got,
                                     codes[(tok + t) * m + i],
                                     "head {head} tok {t} sub {i}"
                                 );
@@ -1031,15 +1141,26 @@ mod tests {
             pq.append(1, &k, &v).unwrap();
         }
         let s2 = pq.stats();
-        assert_eq!(s2.key_bytes, 10 * H * 4); // m bytes per token per head
+        // K=16 codes are nibble-packed: ⌈m/2⌉ = 2 bytes per token/head
+        assert_eq!(s2.key_bytes, 10 * H * 2);
         assert_eq!(s2.value_bytes, s.value_bytes);
         assert!(s2.codebook_bytes > 0);
-        // compression on keys: 32x/ head for d_k=16? d_k*2/m = 8x here
+        // packed keys: d_k·2 / (m/2) = 16x here
         assert_eq!(
             fp.key_bytes_per_token_per_head()
                 / pq.key_bytes_per_token_per_head(),
-            8
+            16
         );
+
+        // byte-coded K=32 keeps the unpacked m bytes per token per head
+        let mut pq32 =
+            KvCache::new(H, DK, 4, pq_storage_k(4, 32), ValueStorage::Fp32);
+        pq32.create_seq(1).unwrap();
+        for _ in 0..10 {
+            pq32.append(1, &k, &v).unwrap();
+        }
+        assert_eq!(pq32.stats().key_bytes, 10 * H * 4);
+        assert_eq!(pq32.key_bytes_per_token_per_head(), 4);
     }
 
     #[test]
@@ -1113,6 +1234,31 @@ mod tests {
     }
 
     #[test]
+    fn packed_block_reuse_is_clean_after_free() {
+        // a freed block's packed lane holds stale nibbles; the next
+        // sequence's even-slot whole-byte writes must not let them leak
+        let mut c =
+            KvCache::new(H, DK, 2, pq_storage(4), ValueStorage::Fp32);
+        c.create_seq(1).unwrap();
+        for t in 0..5 {
+            let (k, v) = token(50 + t);
+            c.append(1, &k, &v).unwrap();
+        }
+        c.free_seq(1).unwrap();
+        let codecs = c.codecs().unwrap().clone();
+        c.create_seq(2).unwrap();
+        let mut expected = Vec::new();
+        for t in 0..3 {
+            let (k, v) = token(80 + t);
+            expected.extend(codecs[0].encode(&k[..DK]));
+            c.append(2, &k, &v).unwrap();
+        }
+        let mut got = Vec::new();
+        c.gather_codes_into(2, 0, &mut got).unwrap();
+        assert_eq!(got, expected);
+    }
+
+    #[test]
     fn can_append_predicts_admission() {
         let mut c = KvCache::new(H, DK, 2, KeyStorage::Fp16, ValueStorage::Fp32);
         c.create_seq(1).unwrap();
@@ -1158,15 +1304,18 @@ mod tests {
             let n = c.gather_value_codes_into(3, head, &mut codes).unwrap();
             assert_eq!(n, 70);
             assert_eq!(codes, expected[head]);
-            // block views expose subspace-major value-code lanes and
-            // no raw values
+            // block views expose subspace-major nibble-packed value-code
+            // lanes (K=16) and no raw values
+            let row = BLOCK_TOKENS / 2;
             let mut tok = 0usize;
             for b in c.blocks(3, head).unwrap() {
-                assert_eq!(b.value_codes.len(), 4 * BLOCK_TOKENS);
+                assert_eq!(b.value_codes.len(), 4 * row);
                 for t in 0..b.len {
                     for i in 0..4 {
                         assert_eq!(
-                            b.value_codes[i * BLOCK_TOKENS + t],
+                            (b.value_codes[i * row + t / 2]
+                                >> ((t % 2) * 4))
+                                & 0x0F,
                             codes[(tok + t) * 4 + i]
                         );
                     }
@@ -1207,10 +1356,11 @@ mod tests {
         assert_eq!(s_fp.value_bytes, 10 * H * DK * 2);
         assert_eq!(fp.value_bytes_per_token_per_head(), DK * 2);
 
-        // PQ values: codes (m_v B/token/head) + both codebooks
+        // PQ values at K=16: nibble-packed ⌈m_v/2⌉ B/token/head + both
+        // codebooks
         let s_pq = pq.stats();
-        assert_eq!(s_pq.value_bytes, 10 * H * 4);
-        assert_eq!(pq.value_bytes_per_token_per_head(), 4);
+        assert_eq!(s_pq.value_bytes, 10 * H * 2);
+        assert_eq!(pq.value_bytes_per_token_per_head(), 2);
         let one_codebook: usize = pq
             .codecs()
             .unwrap()
@@ -1252,12 +1402,28 @@ mod tests {
             ValueStorage::pq(mixed),
             Err(CacheError::MixedCodecs)
         ));
+        // same m but mismatched K is just as invalid: K decides the
+        // lane packing, which must be uniform across heads
+        let mixed_k = vec![
+            PqCodec::train(&calib, DK, 4, 16, &TrainOpts::default()),
+            PqCodec::train(&calib, DK, 4, 32, &TrainOpts::default()),
+        ];
+        assert!(matches!(
+            KeyStorage::pq(mixed_k.clone()),
+            Err(CacheError::MixedCodecs)
+        ));
+        assert!(matches!(
+            ValueStorage::pq(mixed_k),
+            Err(CacheError::MixedCodecs)
+        ));
     }
 
     #[test]
     fn swap_roundtrip_restores_codes_bit_for_bit() {
-        // PQ keys + PQ values: swap out, let another sequence dirty the
-        // freed blocks, swap back in — gathered codes must be identical
+        // PQ keys + PQ values (K=16, so both sides are nibble-packed):
+        // swap out, let another sequence dirty the freed blocks, swap
+        // back in — gathered codes must be identical (slabs are copied
+        // whole, packed bytes included)
         let mut c =
             KvCache::new(H, DK, 4, pq_storage(4), pq_value_storage(4));
         c.create_seq(1).unwrap();
@@ -1297,6 +1463,25 @@ mod tests {
         c.gather_value_codes_into(1, 1, &mut after_v).unwrap();
         assert_eq!(before_k, after_k);
         assert_eq!(before_v, after_v);
+    }
+
+    #[test]
+    fn swap_roundtrip_restores_byte_coded_lanes_too() {
+        // unpacked K=32 key storage through the swap tier
+        let mut c = KvCache::new(
+            H, DK, 4, pq_storage_k(4, 32), ValueStorage::Fp32);
+        c.create_seq(1).unwrap();
+        for t in 0..40 {
+            let (k, v) = token(4000 + t);
+            c.append(1, &k, &v).unwrap();
+        }
+        let mut before = Vec::new();
+        c.gather_codes_into(1, 0, &mut before).unwrap();
+        c.swap_out(1).unwrap();
+        c.swap_in(1).unwrap();
+        let mut after = Vec::new();
+        c.gather_codes_into(1, 0, &mut after).unwrap();
+        assert_eq!(before, after);
     }
 
     #[test]

@@ -38,11 +38,9 @@ fn parse_backend(s: &str) -> anyhow::Result<AttentionBackend> {
         "int4" => AttentionBackend::ScalarQuant { bits: 4 },
         "pjrt-fp16" => AttentionBackend::PjrtFp16,
         other => {
-            if let Some(m) = other.strip_prefix("lookat-") {
-                AttentionBackend::Lookat {
-                    m: validate_m(m.parse()?, "--backend")?,
-                    k: 256,
-                }
+            if let Some(spec) = other.strip_prefix("lookat-") {
+                let (m, k) = parse_m_k(spec, "--backend")?;
+                AttentionBackend::Lookat { m, k }
             } else if let Some(m) = other.strip_prefix("pjrt-lookat-") {
                 AttentionBackend::PjrtLookat {
                     m: validate_m(m.parse()?, "--backend")?,
@@ -50,11 +48,30 @@ fn parse_backend(s: &str) -> anyhow::Result<AttentionBackend> {
             } else {
                 anyhow::bail!(
                     "unknown backend '{other}' (fp16, int8, int4, \
-                     lookat-<m>, pjrt-fp16, pjrt-lookat-<m>)"
+                     lookat-<m>[-k<K>], pjrt-fp16, pjrt-lookat-<m>)"
                 );
             }
         }
     })
+}
+
+/// `<m>` or `<m>-k<K>` — the PQ geometry spec shared by `--backend
+/// lookat-…` and `--value-backend pq-…`. K defaults to the paper's 256;
+/// `-k16` selects the nibble-packed 4-bit fast-scan mode. K is checked
+/// here so a bad value is a usage error, not a training panic.
+fn parse_m_k(spec: &str, flag: &str) -> anyhow::Result<(usize, usize)> {
+    let (m_str, k) = match spec.split_once("-k") {
+        Some((m_str, k_str)) => {
+            let k: usize = k_str
+                .parse()
+                .map_err(|_| anyhow::anyhow!("{flag}: bad K '{k_str}'"))?;
+            lookat::pq::validate_k(k)
+                .map_err(|e| anyhow::anyhow!("{flag}: {e}"))?;
+            (m_str, k)
+        }
+        None => (spec, 256),
+    };
+    Ok((validate_m(m_str.parse()?, flag)?, k))
 }
 
 /// Subspace counts the serving geometry (d_k = 64) supports — checked
@@ -94,14 +111,13 @@ fn parse_value_backend(s: &str) -> anyhow::Result<ValueBackend> {
     Ok(match s {
         "fp32" => ValueBackend::Fp32,
         other => {
-            if let Some(m) = other.strip_prefix("pq-") {
-                ValueBackend::Pq {
-                    m: validate_m(m.parse()?, "--value-backend")?,
-                    k: 256,
-                }
+            if let Some(spec) = other.strip_prefix("pq-") {
+                let (m, k) = parse_m_k(spec, "--value-backend")?;
+                ValueBackend::Pq { m, k }
             } else {
                 anyhow::bail!(
-                    "unknown value backend '{other}' (fp32, pq-<m>)"
+                    "unknown value backend '{other}' (fp32, \
+                     pq-<m>[-k<K>])"
                 );
             }
         }
@@ -127,9 +143,10 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let cli = Cli::new("lookat serve",
                                "serve a synthetic trace")
                 .opt("backend", "lookat-4",
-                     "fp16|int8|int4|lookat-<m>|pjrt-fp16|pjrt-lookat-<m>")
+                     "fp16|int8|int4|lookat-<m>[-k<K>]|pjrt-fp16|\
+                      pjrt-lookat-<m> (K=16 = 4-bit fast-scan)")
                 .opt("value-backend", "fp32",
-                     "fp32|pq-<m> (PQ-coded values, fused decode)")
+                     "fp32|pq-<m>[-k<K>] (PQ-coded values, fused decode)")
                 .opt("requests", "16", "number of requests")
                 .opt("rate", "4", "arrival rate, req/s")
                 .opt("max-batch", "4", "max concurrent sequences")
@@ -199,8 +216,9 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "serve-tcp" => {
             let cli = Cli::new("lookat serve-tcp",
                                "serve newline-JSON requests over TCP")
-                .opt("backend", "lookat-4", "attention backend")
-                .opt("value-backend", "fp32", "fp32|pq-<m>")
+                .opt("backend", "lookat-4",
+                     "attention backend (see `lookat serve`)")
+                .opt("value-backend", "fp32", "fp32|pq-<m>[-k<K>]")
                 .opt("addr", "127.0.0.1:7070", "bind address")
                 .opt("max-batch", "4", "max concurrent sequences")
                 .opt("layers", "2", "model depth")
@@ -350,4 +368,40 @@ USAGE:
   lookat bench-check --old PREV.json --new CUR.json [--max-regress F]
   lookat info"
     );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_specs_parse_with_and_without_k() {
+        assert_eq!(
+            parse_backend("lookat-4").unwrap(),
+            AttentionBackend::Lookat { m: 4, k: 256 }
+        );
+        assert_eq!(
+            parse_backend("lookat-8-k16").unwrap(),
+            AttentionBackend::Lookat { m: 8, k: 16 }
+        );
+        assert_eq!(
+            parse_value_backend("pq-8-k16").unwrap(),
+            ValueBackend::Pq { m: 8, k: 16 }
+        );
+        assert_eq!(
+            parse_value_backend("pq-4").unwrap(),
+            ValueBackend::Pq { m: 4, k: 256 }
+        );
+    }
+
+    #[test]
+    fn bad_backend_specs_are_usage_errors() {
+        // K outside 2..=256 or non-power-of-two fails at parse, not
+        // inside codebook training
+        assert!(parse_backend("lookat-4-k7").is_err());
+        assert!(parse_backend("lookat-4-k512").is_err());
+        assert!(parse_backend("lookat-4-k0").is_err());
+        assert!(parse_backend("lookat-5").is_err());
+        assert!(parse_value_backend("pq-4-kx").is_err());
+    }
 }

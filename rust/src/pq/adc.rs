@@ -16,8 +16,12 @@
 //!
 //! Every kernel accumulates each token's subspaces **in order 0..m
 //! (strict left-to-right)**, so all paths — [`LookupTable::score`],
-//! [`LookupTable::scores_into`] (all unrolled `m` specializations) and
-//! [`LookupTable::scores_lanes`] — produce bit-identical f32 scores.
+//! [`LookupTable::scores_into`] (all unrolled `m` specializations),
+//! [`LookupTable::scores_lanes`] and the nibble-packed
+//! [`LookupTable::scores_lanes_packed`] — produce bit-identical f32
+//! scores, on the SIMD and the scalar dispatch alike (the lane scans
+//! vectorize *across tokens* via [`super::simd`], never across a
+//! token's subspaces).
 
 use super::Codebook;
 
@@ -185,6 +189,27 @@ impl LookupTable {
     where
         I: IntoIterator<Item = (&'a [u8], usize)>,
     {
+        self.scores_lanes_impl(lanes, out, false)
+    }
+
+    /// [`LookupTable::scores_lanes`] pinned to the scalar kernels — the
+    /// reference the SIMD dispatch is property-tested against, and the
+    /// baseline series in `benches/adc_scan.rs`.
+    pub fn scores_lanes_scalar<'a, I>(&self, lanes: I, out: &mut Vec<f32>)
+    where
+        I: IntoIterator<Item = (&'a [u8], usize)>,
+    {
+        self.scores_lanes_impl(lanes, out, true)
+    }
+
+    fn scores_lanes_impl<'a, I>(
+        &self,
+        lanes: I,
+        out: &mut Vec<f32>,
+        force_scalar: bool,
+    ) where
+        I: IntoIterator<Item = (&'a [u8], usize)>,
+    {
         let (m, k) = (self.m, self.k);
         for (lane, len) in lanes {
             assert_eq!(
@@ -204,26 +229,111 @@ impl LookupTable {
             for i in 0..m {
                 let row = &self.table[i * k..(i + 1) * k];
                 let codes_i = &lane[i * stride..i * stride + len];
-                gather_accumulate(row, codes_i, dst, i == 0);
+                gather_accumulate(row, codes_i, dst, i == 0, force_scalar);
+            }
+        }
+    }
+
+    /// Nibble-packed subspace-major fast scan for K ≤ 16 codecs: the
+    /// register-resident shuffle path.
+    ///
+    /// Same contract as [`LookupTable::scores_lanes`], but each lane is
+    /// the `(m × stride_bytes)` row-major *packed* code matrix of one
+    /// token group: row `i` holds subspace `i`'s 4-bit codes two per
+    /// byte (low nibble = even token, high nibble = odd token), so a
+    /// lane addresses up to `2 · stride_bytes` tokens and only the
+    /// first `len` are valid. Odd `len` — a partial tail or a
+    /// causal-prefix truncation landing mid-byte — leaves the final
+    /// byte's high nibble ignored. On AVX2 the entire quantized LUT row
+    /// (16 f32) lives in registers and each lookup is a shuffle
+    /// ([`super::simd::nibble_accumulate`]); the scalar path is
+    /// bit-identical and stays the source of truth.
+    pub fn scores_lanes_packed<'a, I>(&self, lanes: I, out: &mut Vec<f32>)
+    where
+        I: IntoIterator<Item = (&'a [u8], usize)>,
+    {
+        self.scores_lanes_packed_impl(lanes, out, false)
+    }
+
+    /// [`LookupTable::scores_lanes_packed`] pinned to the scalar
+    /// nibble kernel (reference + bench baseline).
+    pub fn scores_lanes_packed_scalar<'a, I>(
+        &self,
+        lanes: I,
+        out: &mut Vec<f32>,
+    ) where
+        I: IntoIterator<Item = (&'a [u8], usize)>,
+    {
+        self.scores_lanes_packed_impl(lanes, out, true)
+    }
+
+    fn scores_lanes_packed_impl<'a, I>(
+        &self,
+        lanes: I,
+        out: &mut Vec<f32>,
+        force_scalar: bool,
+    ) where
+        I: IntoIterator<Item = (&'a [u8], usize)>,
+    {
+        let (m, k) = (self.m, self.k);
+        assert!(
+            super::packs_nibbles(k),
+            "packed scan needs K <= 16 (4-bit codes); this LUT has K={k}"
+        );
+        for (lane, len) in lanes {
+            assert_eq!(
+                lane.len() % m,
+                0,
+                "packed code lane misaligned: {} bytes for m={m}",
+                lane.len()
+            );
+            let stride = lane.len() / m;
+            assert!(
+                len <= 2 * stride,
+                "packed lane claims {len} tokens but holds at most {}",
+                2 * stride
+            );
+            let start = out.len();
+            out.resize(start + len, 0.0);
+            let dst = &mut out[start..];
+            for i in 0..m {
+                // the (≤16,) LUT row, zero-padded to the register shape
+                let mut row16 = [0.0f32; 16];
+                row16[..k].copy_from_slice(&self.table[i * k..(i + 1) * k]);
+                let packed_i = &lane[i * stride..(i + 1) * stride];
+                if force_scalar {
+                    super::simd::nibble_accumulate_scalar(
+                        &row16, packed_i, len, dst, i == 0,
+                    );
+                } else {
+                    super::simd::nibble_accumulate(
+                        &row16, packed_i, len, dst, i == 0,
+                    );
+                }
             }
         }
     }
 }
 
 /// One fast-scan pass: `dst[t] (=|+=) row[codes[t]]`. The K = 256 case
-/// is specialized through a fixed-size array so the u8 index needs no
-/// bounds check and the loop stays branch-free.
+/// goes through [`super::simd::gather_accumulate`] — an 8-wide
+/// `vgatherdps` on AVX2, the bounds-check-free scalar loop otherwise
+/// (every u8 index is valid against a 256-row). Smaller K keeps the
+/// bounds-checked scalar loop: a corrupt over-K code must abort, and
+/// the packed shuffle path covers K ≤ 16 anyway.
 #[inline]
-fn gather_accumulate(row: &[f32], codes: &[u8], dst: &mut [f32], first: bool) {
+fn gather_accumulate(
+    row: &[f32],
+    codes: &[u8],
+    dst: &mut [f32],
+    first: bool,
+    force_scalar: bool,
+) {
     if let Ok(row) = <&[f32; 256]>::try_from(row) {
-        if first {
-            for (o, &c) in dst.iter_mut().zip(codes) {
-                *o = row[c as usize];
-            }
+        if force_scalar {
+            super::simd::gather_accumulate_scalar(row, codes, dst, first);
         } else {
-            for (o, &c) in dst.iter_mut().zip(codes) {
-                *o += row[c as usize];
-            }
+            super::simd::gather_accumulate(row, codes, dst, first);
         }
     } else if first {
         for (o, &c) in dst.iter_mut().zip(codes) {
@@ -351,6 +461,144 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn setup_k16(m: usize) -> (LookupTable, Vec<u8>, usize) {
+        let d_k = 64;
+        let n = 200;
+        let mut rng = Pcg32::seed(0x416 + m as u64);
+        let keys: Vec<f32> =
+            (0..n * d_k).map(|_| rng.next_f32_std()).collect();
+        let codec =
+            PqCodec::train(&keys, d_k, m, 16, &TrainOpts::default());
+        let codes = codec.encode_batch(&keys, n);
+        let query: Vec<f32> =
+            (0..d_k).map(|_| rng.next_f32_std()).collect();
+        let lut = LookupTable::build(&query, &codec.codebook);
+        (lut, codes, n)
+    }
+
+    #[test]
+    fn packed_scan_bit_identical_to_flat_for_every_m() {
+        use crate::testkit::fixtures::interleave_lanes_packed;
+        for m in [2usize, 4, 8, 16, 32] {
+            let (lut, codes, n) = setup_k16(m);
+            let flat = lut.scores(&codes, n);
+            // even/odd tails, tiny groups, one giant group
+            for gt in [32usize, 48, 200, 6] {
+                let lanes = interleave_lanes_packed(&codes, m, gt);
+                for scalar in [false, true] {
+                    let mut out = Vec::new();
+                    let it = lanes.iter().map(|(l, n)| (&l[..], *n));
+                    if scalar {
+                        lut.scores_lanes_packed_scalar(it, &mut out);
+                    } else {
+                        lut.scores_lanes_packed(it, &mut out);
+                    }
+                    assert_eq!(flat.len(), out.len());
+                    for (t, (a, b)) in flat.iter().zip(&out).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "m={m} group={gt} scalar={scalar} t={t}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_scan_honors_mid_stream_truncation() {
+        // a causal-prefix cut can shorten ANY lane, including to an odd
+        // length whose final byte has a live low nibble and a dead high
+        // nibble — scores must match the flat scan over the same prefix
+        use crate::testkit::fixtures::interleave_lanes_packed;
+        let m = 4;
+        let (lut, codes, _) = setup_k16(m);
+        let lanes = interleave_lanes_packed(&codes, m, 32);
+        for cut in [31usize, 32, 33, 40, 45, 64, 65] {
+            let mut out = Vec::new();
+            let mut left = cut;
+            lut.scores_lanes_packed(
+                lanes.iter().filter_map(|(l, n)| {
+                    if left == 0 {
+                        return None;
+                    }
+                    let take = (*n).min(left);
+                    left -= take;
+                    Some((&l[..], take))
+                }),
+                &mut out,
+            );
+            let flat = lut.scores(&codes[..cut * m], cut);
+            assert_eq!(out.len(), cut);
+            for (a, b) in flat.iter().zip(&out) {
+                assert_eq!(a.to_bits(), b.to_bits(), "cut={cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn byte_lane_scan_simd_matches_scalar_k256() {
+        // dispatched (possibly AVX2 gather) vs pinned-scalar on the
+        // full-width K=256 path
+        let d_k = 64;
+        let n = 203; // not a multiple of 8: exercises the vector tail
+        let mut rng = Pcg32::seed(0x256);
+        let m = 8;
+        let d_sub = d_k / m;
+        let centroids: Vec<Vec<f32>> = (0..m)
+            .map(|_| {
+                (0..256 * d_sub).map(|_| rng.next_f32_std()).collect()
+            })
+            .collect();
+        let cb = Codebook::new(m, 256, d_sub, centroids);
+        let query: Vec<f32> =
+            (0..d_k).map(|_| rng.next_f32_std()).collect();
+        let lut = LookupTable::build(&query, &cb);
+        let codes: Vec<u8> =
+            (0..n * m).map(|_| rng.next_bounded(256) as u8).collect();
+        let lanes = to_lanes(&codes, m, 32);
+        let (mut fast, mut slow) = (Vec::new(), Vec::new());
+        lut.scores_lanes(
+            lanes.iter().map(|(l, n)| (&l[..], *n)),
+            &mut fast,
+        );
+        lut.scores_lanes_scalar(
+            lanes.iter().map(|(l, n)| (&l[..], *n)),
+            &mut slow,
+        );
+        assert_eq!(fast.len(), slow.len());
+        for (a, b) in fast.iter().zip(&slow) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "needs K <= 16")]
+    fn packed_scan_rejects_wide_codebooks() {
+        let (query, codec, _, _, _) = setup(4); // K = 64
+        let lut = LookupTable::build(&query, &codec.codebook);
+        let mut out = Vec::new();
+        lut.scores_lanes_packed([(&[0u8; 8][..], 2)], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "misaligned")]
+    fn packed_scan_rejects_misaligned_lane() {
+        let (lut, _, _) = setup_k16(4);
+        let mut out = Vec::new();
+        lut.scores_lanes_packed([(&[0u8; 7][..], 1)], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "holds at most")]
+    fn packed_scan_rejects_overlong_len() {
+        let (lut, _, _) = setup_k16(4);
+        let mut out = Vec::new();
+        // 8 bytes = 2 per subspace = 4 tokens max, but claims 5
+        lut.scores_lanes_packed([(&[0u8; 8][..], 5)], &mut out);
     }
 
     #[test]

@@ -34,10 +34,28 @@ impl PartialEq for Codebook {
 
 const MAGIC: &[u8; 8] = b"LOOKATCB";
 
+/// The K values the scan kernels support: codes are u8 (or nibbles for
+/// K ≤ 16), and every kernel indexes power-of-two tables. Checked at
+/// every codec boundary so a corrupt or hand-edited codebook fails at
+/// load with a clear error instead of mis-scanning deep inside
+/// `scores_lanes`.
+pub fn validate_k(k: usize) -> Result<(), String> {
+    if !(2..=256).contains(&k) || !k.is_power_of_two() {
+        return Err(format!(
+            "k={k} centroids unsupported: K must be a power of two \
+             in 2..=256"
+        ));
+    }
+    Ok(())
+}
+
 impl Codebook {
     pub fn new(m: usize, k: usize, d_sub: usize,
                centroids: Vec<Vec<f32>>) -> Self {
         assert_eq!(centroids.len(), m);
+        if let Err(e) = validate_k(k) {
+            panic!("{e}");
+        }
         for cb in &centroids {
             assert_eq!(cb.len(), k * d_sub);
         }
@@ -141,6 +159,9 @@ impl Codebook {
         if m == 0 || k == 0 || d_sub == 0 || m * k * d_sub > (1 << 28) {
             bail!("unreasonable codebook dims {m}x{k}x{d_sub}");
         }
+        if let Err(e) = validate_k(k) {
+            bail!("corrupt codebook: {e}");
+        }
         let mut centroids = Vec::with_capacity(m);
         let mut b4 = [0u8; 4];
         for _ in 0..m {
@@ -222,6 +243,40 @@ mod tests {
         let back = Codebook::load(&path).unwrap();
         assert_eq!(back, cb);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_power_of_two_k_panics_at_construction() {
+        random_codebook(2, 17, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn k_of_one_panics_at_construction() {
+        random_codebook(2, 1, 4);
+    }
+
+    #[test]
+    fn corrupt_k_fails_at_load_with_clear_error() {
+        // hand-edit a valid file's k field to a non-power-of-two and
+        // to an oversized value: both must fail in read_from, before
+        // any centroid payload is trusted
+        let cb = random_codebook(2, 8, 2);
+        let mut buf = Vec::new();
+        cb.write_to(&mut buf).unwrap();
+        for bad_k in [7u64, 300] {
+            let mut edited = buf.clone();
+            edited[16..24].copy_from_slice(&bad_k.to_le_bytes());
+            let err = Codebook::read_from(&mut edited.as_slice())
+                .unwrap_err()
+                .to_string();
+            assert!(
+                err.contains("power of two")
+                    || err.contains("unreasonable"),
+                "k={bad_k}: {err}"
+            );
+        }
     }
 
     #[test]

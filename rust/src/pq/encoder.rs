@@ -26,7 +26,9 @@ impl PqCodec {
         opts: &TrainOpts,
     ) -> PqCodec {
         assert!(d_k % m == 0, "d_k={d_k} not divisible by m={m}");
-        assert!(k <= 256, "codes are u8; k={k} > 256 unsupported");
+        if let Err(e) = super::codebook::validate_k(k) {
+            panic!("{e}");
+        }
         let d_sub = d_k / m;
         assert_eq!(calib.len() % d_k, 0);
         let n = calib.len() / d_k;
@@ -150,15 +152,26 @@ impl PqCodec {
         total / n as f64
     }
 
-    /// Compressed bytes per token for this codec (m codes × 1 B).
+    /// Whether this codec's codes are nibble-packed in the paged cache
+    /// (K ≤ 16: two 4-bit codes per byte).
+    pub fn packed(&self) -> bool {
+        super::packs_nibbles(self.codebook.k)
+    }
+
+    /// Compressed bytes per token for this codec as stored: m codes at
+    /// 1 B each for K > 16, or ⌈m/2⌉ B for nibble-packed K ≤ 16 codes.
     pub fn bytes_per_token(&self) -> usize {
-        self.codebook.m
+        if self.packed() {
+            self.codebook.m.div_ceil(2)
+        } else {
+            self.codebook.m
+        }
     }
 
     /// Compression ratio vs FP16 keys (paper's headline metric):
-    /// d_k · 2 bytes -> m bytes.
+    /// d_k · 2 bytes -> m bytes (K > 16) or m/2 bytes (4-bit codes).
     pub fn compression_ratio(&self) -> f64 {
-        (self.codebook.d_k() * 2) as f64 / self.codebook.m as f64
+        (self.codebook.d_k() * 2) as f64 / self.bytes_per_token() as f64
     }
 }
 
@@ -183,12 +196,31 @@ mod tests {
     #[test]
     fn compression_ratios_match_paper_table1() {
         let keys = gaussian_keys(64, 64, 2);
-        // paper §4.1: LOOKAT-2 = 64x, -4 = 32x, -8 = 16x, -16 = 8x
+        // paper §4.1 at K > 16 (byte codes): LOOKAT-2 = 64x, -4 = 32x,
+        // -8 = 16x, -16 = 8x
         for (m, want) in [(2usize, 64.0), (4, 32.0), (8, 16.0), (16, 8.0)] {
             let codec = PqCodec::train(
-                &keys, 64, m, 16, &TrainOpts { iters: 3, ..Default::default() });
+                &keys, 64, m, 32, &TrainOpts { iters: 3, ..Default::default() });
+            assert!(!codec.packed());
             assert_eq!(codec.compression_ratio(), want);
             assert_eq!(codec.bytes_per_token(), m);
+        }
+    }
+
+    #[test]
+    fn packed_k16_halves_bytes_per_token() {
+        // 4-bit codes: K=16 with doubled m matches K=256's bits per
+        // token, so the stored bytes halve at equal m and the equal-bit
+        // configurations line up (m, K=256) ↔ (2m, K=16)
+        let keys = gaussian_keys(64, 64, 2);
+        for (m, want_bytes, want_ratio) in
+            [(2usize, 1usize, 128.0), (4, 2, 64.0), (8, 4, 32.0), (16, 8, 16.0)]
+        {
+            let codec = PqCodec::train(
+                &keys, 64, m, 16, &TrainOpts { iters: 3, ..Default::default() });
+            assert!(codec.packed());
+            assert_eq!(codec.bytes_per_token(), want_bytes);
+            assert_eq!(codec.compression_ratio(), want_ratio);
         }
     }
 
@@ -266,5 +298,12 @@ mod tests {
     fn rejects_bad_m() {
         let keys = gaussian_keys(10, 10, 8);
         PqCodec::train(&keys, 10, 3, 4, &TrainOpts::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_power_of_two_k() {
+        let keys = gaussian_keys(10, 8, 9);
+        PqCodec::train(&keys, 8, 2, 12, &TrainOpts::default());
     }
 }

@@ -11,14 +11,22 @@ mod adc;
 mod codebook;
 mod encoder;
 pub mod kmeans;
+pub mod simd;
 pub mod values;
 
 pub use adc::LookupTable;
-pub use codebook::Codebook;
+pub use codebook::{validate_k, Codebook};
 pub use encoder::PqCodec;
 
 /// Number of centroids per subspace (paper fixes K = 256 so codes fit u8).
 pub const NUM_CENTROIDS: usize = 256;
+
+/// Whether codes for a K-centroid codebook are nibble-packed in the
+/// paged cache (two 4-bit codes per byte). One rule, applied
+/// everywhere: K ≤ 16 packs, larger K stores one byte per code.
+pub fn packs_nibbles(k: usize) -> bool {
+    k <= 16
+}
 
 /// Training options for the K-Means codebook learner.
 #[derive(Clone, Debug)]

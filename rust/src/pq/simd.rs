@@ -1,0 +1,400 @@
+//! Runtime SIMD dispatch for the ADC scan and the fused value decode.
+//!
+//! The contract every kernel here honors: **bit-identical f32 results to
+//! the scalar reference**. That is possible because all vectorization is
+//! *across tokens* (one SIMD lane = one token) while the subspace loop
+//! stays outer and scalar — each token still accumulates its `m`
+//! partial sums strictly in order 0..m, with the exact same IEEE
+//! mul/add sequence the scalar path performs. No FMA is ever used (a
+//! fused `a*b+c` rounds once where the scalar path rounds twice), and
+//! no reassociating horizontal reductions exist in these kernels.
+//!
+//! Three kernels:
+//! * [`gather_accumulate`] — the K ≤ 256 byte-code lane scan: per
+//!   subspace, gather `row[code[t]]` for 8 tokens at a time
+//!   (`_mm256_i32gather_ps`) and add into the score lane.
+//! * [`nibble_accumulate`] — the K ≤ 16 packed-lane shuffle scan: the
+//!   entire quantized LUT row (16 f32) lives in two ymm registers and
+//!   each lookup is a `vpermps` shuffle + blend on index bit 3 — the
+//!   `pshufb` fast-scan trick at full f32 precision.
+//! * [`axpy`] — the fused value decode's centroid matvec inner loop
+//!   (`dst[j] += w * src[j]`, separate mul and add).
+//!
+//! ISA selection happens once per process ([`scan_path`]): AVX2 when
+//! the CPU reports it, unless the `LOOKAT_SIMD=scalar` environment
+//! variable forces the portable scalar fallback (the CI feature-matrix
+//! leg runs the whole test suite that way, no rebuild needed). Scalar
+//! reference implementations live here too and stay the source of
+//! truth; `tests/pq_properties.rs` proves dispatched == scalar bit for
+//! bit on every path.
+
+use std::sync::OnceLock;
+
+/// Name of the env var that forces the scalar fallback when set to
+/// `scalar` (any other value is ignored).
+pub const FORCE_SCALAR_ENV: &str = "LOOKAT_SIMD";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Isa {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
+
+fn isa() -> Isa {
+    static ISA: OnceLock<Isa> = OnceLock::new();
+    *ISA.get_or_init(|| {
+        if std::env::var(FORCE_SCALAR_ENV).as_deref() == Ok("scalar") {
+            return Isa::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+        Isa::Scalar
+    })
+}
+
+/// The active scan path, for labels and reports: `"avx2"` or
+/// `"scalar"`. Resolved once per process.
+pub fn scan_path() -> &'static str {
+    match isa() {
+        Isa::Scalar => "scalar",
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => "avx2",
+    }
+}
+
+/// Whether the dispatched kernels run SIMD (false = scalar fallback,
+/// either forced via [`FORCE_SCALAR_ENV`] or because the CPU lacks
+/// AVX2).
+pub fn simd_enabled() -> bool {
+    !matches!(isa(), Isa::Scalar)
+}
+
+// ---- K ≤ 256 byte-code gather scan -------------------------------------
+
+/// Scalar reference: `dst[t] (+)= row[codes[t]]` for one subspace.
+/// `first` selects store vs accumulate (subspace 0 initializes).
+#[inline]
+pub fn gather_accumulate_scalar(
+    row: &[f32; 256],
+    codes: &[u8],
+    dst: &mut [f32],
+    first: bool,
+) {
+    debug_assert_eq!(codes.len(), dst.len());
+    if first {
+        for (o, &c) in dst.iter_mut().zip(codes) {
+            *o = row[c as usize];
+        }
+    } else {
+        for (o, &c) in dst.iter_mut().zip(codes) {
+            *o += row[c as usize];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gather_accumulate_avx2(
+    row: &[f32; 256],
+    codes: &[u8],
+    dst: &mut [f32],
+    first: bool,
+) {
+    use std::arch::x86_64::*;
+    let n = codes.len();
+    let table = row.as_ptr();
+    let mut t = 0usize;
+    while t + 8 <= n {
+        // 8 token codes -> 8 i32 indices -> one 8-wide f32 gather
+        let idx8 = _mm_loadl_epi64(codes.as_ptr().add(t) as *const _);
+        let idx = _mm256_cvtepu8_epi32(idx8);
+        let vals = _mm256_i32gather_ps::<4>(table, idx);
+        let d = dst.as_mut_ptr().add(t);
+        if first {
+            _mm256_storeu_ps(d, vals);
+        } else {
+            let acc = _mm256_loadu_ps(d);
+            // plain add — same single rounding as the scalar `+=`
+            _mm256_storeu_ps(d, _mm256_add_ps(acc, vals));
+        }
+        t += 8;
+    }
+    gather_accumulate_scalar(
+        row,
+        &codes[t..],
+        &mut dst[t..],
+        first,
+    );
+}
+
+/// Dispatched K ≤ 256 gather-accumulate (one subspace row over a
+/// token-count-long code slice). Bit-identical to
+/// [`gather_accumulate_scalar`] on every input.
+#[inline]
+pub fn gather_accumulate(
+    row: &[f32; 256],
+    codes: &[u8],
+    dst: &mut [f32],
+    first: bool,
+) {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            gather_accumulate_avx2(row, codes, dst, first)
+        },
+        Isa::Scalar => gather_accumulate_scalar(row, codes, dst, first),
+    }
+}
+
+// ---- K ≤ 16 nibble-packed shuffle scan ---------------------------------
+
+/// Extract the 4-bit code of token `t` from a packed row (low nibble =
+/// even token, high nibble = odd token).
+#[inline(always)]
+pub fn nibble(packed: &[u8], t: usize) -> u8 {
+    (packed[t / 2] >> ((t & 1) * 4)) & 0x0F
+}
+
+/// Scalar reference for the packed scan: `dst[t] (+)= row16[code4(t)]`
+/// for one subspace over `len` tokens of a nibble-packed row.
+#[inline]
+pub fn nibble_accumulate_scalar(
+    row16: &[f32; 16],
+    packed: &[u8],
+    len: usize,
+    dst: &mut [f32],
+    first: bool,
+) {
+    debug_assert!(len <= dst.len());
+    debug_assert!(len.div_ceil(2) <= packed.len());
+    if first {
+        for (t, o) in dst.iter_mut().enumerate().take(len) {
+            *o = row16[nibble(packed, t) as usize];
+        }
+    } else {
+        for (t, o) in dst.iter_mut().enumerate().take(len) {
+            *o += row16[nibble(packed, t) as usize];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn nibble_accumulate_avx2(
+    row16: &[f32; 16],
+    packed: &[u8],
+    len: usize,
+    dst: &mut [f32],
+    first: bool,
+) {
+    use std::arch::x86_64::*;
+    // the whole LUT row lives in two ymm registers for the entire scan
+    let lut_lo = _mm256_loadu_ps(row16.as_ptr());
+    let lut_hi = _mm256_loadu_ps(row16.as_ptr().add(8));
+    let seven = _mm256_set1_epi32(7);
+    let lookup8 = |idx: __m256i| {
+        // vpermps over entries 0–7 and 8–15, blended on index bit 3 —
+        // a full-precision register-resident shuffle lookup
+        let lo = _mm256_permutevar8x32_ps(lut_lo, idx);
+        let hi = _mm256_permutevar8x32_ps(lut_hi, idx);
+        let hi_mask = _mm256_cmpgt_epi32(idx, seven);
+        _mm256_blendv_ps(lo, hi, _mm256_castsi256_ps(hi_mask))
+    };
+    let mut t = 0usize;
+    // 16 tokens per iteration: 8 packed bytes -> 16 nibbles in token
+    // order -> two 8-wide shuffle lookups
+    while t + 16 <= len {
+        let bytes = _mm_loadl_epi64(packed.as_ptr().add(t / 2) as *const _);
+        let lo_nib = _mm_and_si128(bytes, _mm_set1_epi8(0x0F));
+        let hi_nib = _mm_and_si128(
+            _mm_srli_epi16(bytes, 4),
+            _mm_set1_epi8(0x0F),
+        );
+        // interleave -> lo0,hi0,lo1,hi1,… = token order 0..16
+        let toks = _mm_unpacklo_epi8(lo_nib, hi_nib);
+        let idx_a = _mm256_cvtepu8_epi32(toks);
+        let idx_b = _mm256_cvtepu8_epi32(_mm_srli_si128(toks, 8));
+        let va = lookup8(idx_a);
+        let vb = lookup8(idx_b);
+        let d = dst.as_mut_ptr().add(t);
+        if first {
+            _mm256_storeu_ps(d, va);
+            _mm256_storeu_ps(d.add(8), vb);
+        } else {
+            let a = _mm256_loadu_ps(d);
+            let b = _mm256_loadu_ps(d.add(8));
+            _mm256_storeu_ps(d, _mm256_add_ps(a, va));
+            _mm256_storeu_ps(d.add(8), _mm256_add_ps(b, vb));
+        }
+        t += 16;
+    }
+    nibble_accumulate_scalar(row16, &packed[t / 2..], len - t, &mut dst[t..], first);
+}
+
+/// Dispatched K ≤ 16 packed shuffle scan. Bit-identical to
+/// [`nibble_accumulate_scalar`] on every input (including odd `len`
+/// partial tails, where the final byte's high nibble is ignored).
+#[inline]
+pub fn nibble_accumulate(
+    row16: &[f32; 16],
+    packed: &[u8],
+    len: usize,
+    dst: &mut [f32],
+    first: bool,
+) {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            nibble_accumulate_avx2(row16, packed, len, dst, first)
+        },
+        Isa::Scalar => {
+            nibble_accumulate_scalar(row16, packed, len, dst, first)
+        }
+    }
+}
+
+// ---- fused value decode matvec ----------------------------------------
+
+/// Scalar reference: `dst[j] += w * src[j]` (separate mul then add —
+/// the rounding the SIMD path must reproduce exactly).
+#[inline]
+pub fn axpy_scalar(dst: &mut [f32], src: &[f32], w: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (o, &v) in dst.iter_mut().zip(src) {
+        *o += w * v;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(dst: &mut [f32], src: &[f32], w: f32) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let wv = _mm256_set1_ps(w);
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let s = _mm256_loadu_ps(src.as_ptr().add(j));
+        let d = _mm256_loadu_ps(dst.as_ptr().add(j));
+        // mul then add, NOT fma: element-wise identical to the scalar
+        // `*o += w * v` double rounding
+        let prod = _mm256_mul_ps(wv, s);
+        _mm256_storeu_ps(dst.as_mut_ptr().add(j), _mm256_add_ps(d, prod));
+        j += 8;
+    }
+    axpy_scalar(&mut dst[j..], &src[j..], w);
+}
+
+/// Dispatched axpy for the centroid matvec phase of the fused value
+/// decode. Bit-identical to [`axpy_scalar`].
+#[inline]
+pub fn axpy(dst: &mut [f32], src: &[f32], w: f32) {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { axpy_avx2(dst, src, w) },
+        Isa::Scalar => axpy_scalar(dst, src, w),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn scan_path_is_stable_and_known() {
+        let p = scan_path();
+        assert!(p == "avx2" || p == "scalar", "unexpected path {p}");
+        assert_eq!(p, scan_path(), "path must be resolved once");
+        assert_eq!(simd_enabled(), p != "scalar");
+    }
+
+    #[test]
+    fn gather_dispatch_matches_scalar_bitwise() {
+        let mut rng = Pcg32::seed(0x51D);
+        let mut row = [0.0f32; 256];
+        for v in row.iter_mut() {
+            *v = rng.next_f32_std();
+        }
+        // lengths straddling the 8-wide vector boundary
+        for n in [0usize, 1, 7, 8, 9, 16, 31, 100] {
+            let codes: Vec<u8> =
+                (0..n).map(|_| rng.next_bounded(256) as u8).collect();
+            let mut a = vec![0.3f32; n];
+            let mut b = a.clone();
+            for first in [true, false] {
+                gather_accumulate(&row, &codes, &mut a, first);
+                gather_accumulate_scalar(&row, &codes, &mut b, first);
+                assert_eq!(
+                    a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "n={n} first={first}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nibble_dispatch_matches_scalar_bitwise() {
+        let mut rng = Pcg32::seed(0x4B17);
+        let mut row = [0.0f32; 16];
+        for v in row.iter_mut() {
+            *v = rng.next_f32_std();
+        }
+        // odd lens exercise the ignored trailing high nibble
+        for len in [0usize, 1, 2, 3, 15, 16, 17, 31, 32, 33, 77] {
+            let packed: Vec<u8> = (0..len.div_ceil(2))
+                .map(|_| rng.next_bounded(256) as u8)
+                .collect();
+            let mut a = vec![0.7f32; len];
+            let mut b = a.clone();
+            for first in [true, false] {
+                nibble_accumulate(&row, &packed, len, &mut a, first);
+                nibble_accumulate_scalar(
+                    &row, &packed, len, &mut b, first,
+                );
+                assert_eq!(
+                    a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "len={len} first={first}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nibble_order_is_low_then_high() {
+        // byte 0xBA holds token0 = 0xA (low), token1 = 0xB (high)
+        assert_eq!(nibble(&[0xBA], 0), 0x0A);
+        assert_eq!(nibble(&[0xBA], 1), 0x0B);
+        let mut row = [0.0f32; 16];
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let mut out = [0.0f32; 2];
+        nibble_accumulate_scalar(&row, &[0xBA], 2, &mut out, true);
+        assert_eq!(out, [10.0, 11.0]);
+    }
+
+    #[test]
+    fn axpy_dispatch_matches_scalar_bitwise() {
+        let mut rng = Pcg32::seed(0xA21);
+        for n in [0usize, 1, 7, 8, 9, 33] {
+            let src: Vec<f32> =
+                (0..n).map(|_| rng.next_f32_std()).collect();
+            let mut a: Vec<f32> =
+                (0..n).map(|_| rng.next_f32_std()).collect();
+            let mut b = a.clone();
+            let w = rng.next_f32_std();
+            axpy(&mut a, &src, w);
+            axpy_scalar(&mut b, &src, w);
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "n={n}"
+            );
+        }
+    }
+}

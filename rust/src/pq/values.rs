@@ -13,6 +13,7 @@
 //! shape as key-side ADC, and the values are never dequantized per-token.
 
 use super::encoder::PqCodec;
+use super::simd;
 
 /// Weighted-sum of PQ-coded values via weight aggregation.
 ///
@@ -32,7 +33,7 @@ pub fn weighted_decode(
     let pool = crate::util::threadpool::scratch();
     let mut acc = pool.take_f32(m * k);
     scatter_weights(&mut acc, weights, codes, m, k);
-    let out = centroid_matvec(&acc, codec);
+    let out = centroid_matvec(&acc, codec, false);
     pool.put_f32(acc);
     out
 }
@@ -57,6 +58,32 @@ pub fn weighted_decode_lanes<'a, I>(
     weights: &[f32],
     lanes: I,
     codec: &PqCodec,
+) -> Vec<f32>
+where
+    I: IntoIterator<Item = (&'a [u8], usize)>,
+{
+    weighted_decode_lanes_impl(weights, lanes, codec, false)
+}
+
+/// [`weighted_decode_lanes`] pinned to the scalar centroid matvec,
+/// regardless of detected ISA — the bit-identity reference for
+/// property tests and benches.
+pub fn weighted_decode_lanes_scalar<'a, I>(
+    weights: &[f32],
+    lanes: I,
+    codec: &PqCodec,
+) -> Vec<f32>
+where
+    I: IntoIterator<Item = (&'a [u8], usize)>,
+{
+    weighted_decode_lanes_impl(weights, lanes, codec, true)
+}
+
+fn weighted_decode_lanes_impl<'a, I>(
+    weights: &[f32],
+    lanes: I,
+    codec: &PqCodec,
+    force_scalar: bool,
 ) -> Vec<f32>
 where
     I: IntoIterator<Item = (&'a [u8], usize)>,
@@ -91,7 +118,87 @@ where
         l += len;
     }
     assert_eq!(l, weights.len(), "codes/weights length mismatch");
-    let out = centroid_matvec(&acc, codec);
+    let out = centroid_matvec(&acc, codec, force_scalar);
+    pool.put_f32(acc);
+    out
+}
+
+/// Nibble-packed sibling of [`weighted_decode_lanes`] for K ≤ 16
+/// codecs: each lane row holds `stride` bytes = two 4-bit codes per
+/// byte (low nibble = even token), so a lane of `m × stride` bytes
+/// covers up to `2·stride` tokens. The scatter unpacks nibbles in
+/// token order, preserving the flat path's accumulation order cell by
+/// cell — bit-identical to [`weighted_decode`] over the gathered,
+/// unpacked equivalent.
+pub fn weighted_decode_lanes_packed<'a, I>(
+    weights: &[f32],
+    lanes: I,
+    codec: &PqCodec,
+) -> Vec<f32>
+where
+    I: IntoIterator<Item = (&'a [u8], usize)>,
+{
+    weighted_decode_lanes_packed_impl(weights, lanes, codec, false)
+}
+
+/// [`weighted_decode_lanes_packed`] pinned to the scalar centroid
+/// matvec — the reference path for dispatch-identity tests.
+pub fn weighted_decode_lanes_packed_scalar<'a, I>(
+    weights: &[f32],
+    lanes: I,
+    codec: &PqCodec,
+) -> Vec<f32>
+where
+    I: IntoIterator<Item = (&'a [u8], usize)>,
+{
+    weighted_decode_lanes_packed_impl(weights, lanes, codec, true)
+}
+
+fn weighted_decode_lanes_packed_impl<'a, I>(
+    weights: &[f32],
+    lanes: I,
+    codec: &PqCodec,
+    force_scalar: bool,
+) -> Vec<f32>
+where
+    I: IntoIterator<Item = (&'a [u8], usize)>,
+{
+    let cb = &codec.codebook;
+    let (m, k) = (cb.m, cb.k);
+    assert!(
+        super::packs_nibbles(k),
+        "packed decode needs K <= 16 (4-bit codes); this codec has K={k}"
+    );
+    let pool = crate::util::threadpool::scratch();
+    let mut acc = pool.take_f32(m * k);
+    let mut l = 0usize;
+    for (lane, len) in lanes {
+        assert_eq!(
+            lane.len() % m,
+            0,
+            "packed value-code lane misaligned: {} bytes for m={m}",
+            lane.len()
+        );
+        let stride = lane.len() / m;
+        assert!(
+            len <= 2 * stride,
+            "packed lane claims {len} tokens but holds at most {}",
+            2 * stride
+        );
+        let w = &weights[l..l + len];
+        for i in 0..m {
+            let accrow = &mut acc[i * k..(i + 1) * k];
+            let packed_i = &lane[i * stride..(i + 1) * stride];
+            for (t, &wv) in w.iter().enumerate() {
+                if wv != 0.0 {
+                    accrow[simd::nibble(packed_i, t) as usize] += wv;
+                }
+            }
+        }
+        l += len;
+    }
+    assert_eq!(l, weights.len(), "codes/weights length mismatch");
+    let out = centroid_matvec(&acc, codec, force_scalar);
     pool.put_f32(acc);
     out
 }
@@ -118,8 +225,14 @@ fn scatter_weights(
 
 /// Phase 2: per-subspace weighted centroid sum — O(m·K·d_sub). The
 /// output buffer is drawn from the shared scratch pool so the serving
-/// loop can recycle it once the context vector is consumed.
-fn centroid_matvec(acc: &[f32], codec: &PqCodec) -> Vec<f32> {
+/// loop can recycle it once the context vector is consumed. The inner
+/// axpy dispatches to the SIMD kernel (mul-then-add, never FMA, so the
+/// scalar path stays bit-identical).
+fn centroid_matvec(
+    acc: &[f32],
+    codec: &PqCodec,
+    force_scalar: bool,
+) -> Vec<f32> {
     let cb = &codec.codebook;
     let (m, k, d_sub) = (cb.m, cb.k, cb.d_sub);
     let mut out = crate::util::threadpool::scratch().take_f32(m * d_sub);
@@ -130,8 +243,10 @@ fn centroid_matvec(acc: &[f32], codec: &PqCodec) -> Vec<f32> {
             let w = acc[i * k + c];
             if w != 0.0 {
                 let cent = &cents[c * d_sub..(c + 1) * d_sub];
-                for (o, v) in seg.iter_mut().zip(cent) {
-                    *o += w * *v;
+                if force_scalar {
+                    simd::axpy_scalar(seg, cent, w);
+                } else {
+                    simd::axpy(seg, cent, w);
                 }
             }
         }
@@ -307,5 +422,106 @@ mod tests {
     fn rejects_mismatched_inputs() {
         let (_, codec, codes, _) = setup(32, 32, 4, 16);
         weighted_decode(&vec![0.1; 16], &codes, &codec);
+    }
+
+    #[test]
+    fn packed_lane_decode_bit_identical_to_flat_for_every_m() {
+        use crate::testkit::fixtures::interleave_lanes_packed;
+        for m in [2usize, 4, 8, 16] {
+            let (_, codec, codes, weights) = setup(200, 64, m, 16);
+            assert!(codec.packed());
+            let flat = weighted_decode(&weights, &codes, &codec);
+            // uneven groups, a partial tail, and one odd-length group
+            for gt in [32usize, 48, 6, 200] {
+                let lanes = interleave_lanes_packed(&codes, m, gt);
+                for scalar in [false, true] {
+                    let it = lanes.iter().map(|(l, n)| (&l[..], *n));
+                    let got = if scalar {
+                        weighted_decode_lanes_packed_scalar(
+                            &weights, it, &codec,
+                        )
+                    } else {
+                        weighted_decode_lanes_packed(&weights, it, &codec)
+                    };
+                    assert_eq!(
+                        flat.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        "m={m} group_tokens={gt} scalar={scalar}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_decode_honors_odd_truncation() {
+        use crate::testkit::fixtures::interleave_lanes_packed;
+        let (_, codec, codes, weights) = setup(100, 64, 4, 16);
+        for cut in [31usize, 32, 33, 45, 64, 65] {
+            let flat =
+                weighted_decode(&weights[..cut], &codes[..cut * 4], &codec);
+            // truncate the lane stream mid-block, odd cuts included
+            let lanes = interleave_lanes_packed(&codes, 4, 32);
+            let mut left = cut;
+            let it = lanes.iter().filter_map(|(l, n)| {
+                if left == 0 {
+                    return None;
+                }
+                let take = (*n).min(left);
+                left -= take;
+                Some((&l[..], take))
+            });
+            let got =
+                weighted_decode_lanes_packed(&weights[..cut], it, &codec);
+            assert_eq!(
+                flat.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "cut={cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn lane_decode_dispatch_matches_scalar_bitwise() {
+        use crate::testkit::fixtures::interleave_lanes;
+        let (_, codec, codes, weights) = setup(203, 64, 8, 64);
+        let lanes = interleave_lanes(&codes, 8, 32);
+        let simd = weighted_decode_lanes(
+            &weights,
+            lanes.iter().map(|(l, n)| (&l[..], *n)),
+            &codec,
+        );
+        let scalar = weighted_decode_lanes_scalar(
+            &weights,
+            lanes.iter().map(|(l, n)| (&l[..], *n)),
+            &codec,
+        );
+        assert_eq!(
+            simd.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            scalar.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "needs K <= 16")]
+    fn packed_decode_rejects_wide_codebooks() {
+        let (_, codec, _, _) = setup(8, 32, 4, 64);
+        weighted_decode_lanes_packed(
+            &[0.5],
+            [(&[0u8; 8][..], 1)],
+            &codec,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "holds at most")]
+    fn packed_decode_rejects_overlong_len() {
+        let (_, codec, _, _) = setup(8, 32, 4, 16);
+        // 8 bytes / m=4 -> stride 2 -> max 4 tokens, claim 5
+        weighted_decode_lanes_packed(
+            &[0.2; 5],
+            [(&[0u8; 8][..], 5)],
+            &codec,
+        );
     }
 }

@@ -131,6 +131,48 @@ pub fn interleave_lanes(
     lanes
 }
 
+/// Nibble-packed sibling of [`interleave_lanes`] for K ≤ 16 codecs:
+/// each lane row holds `group/2` bytes, two 4-bit codes per byte (low
+/// nibble = even token, high nibble = odd token — the paged cache's
+/// packed block layout consumed by `LookupTable::scores_lanes_packed`
+/// and `pq::values::weighted_decode_lanes_packed`). `group` must be
+/// even (the cache's `BLOCK_TOKENS` is); a partial tail simply leaves
+/// trailing bytes zero, like a partially filled block.
+pub fn interleave_lanes_packed(
+    codes: &[u8],
+    m: usize,
+    group: usize,
+) -> Vec<(Vec<u8>, usize)> {
+    assert!(m > 0 && group > 0 && group % 2 == 0);
+    assert_eq!(codes.len() % m, 0, "token-major codes must be n × m");
+    assert!(
+        codes.iter().all(|&c| c < 16),
+        "packed lanes hold 4-bit codes"
+    );
+    let row = group / 2;
+    let n = codes.len() / m;
+    let mut lanes = Vec::new();
+    let mut t0 = 0usize;
+    while t0 < n {
+        let len = group.min(n - t0);
+        let mut lane = vec![0u8; m * row];
+        for t in 0..len {
+            for i in 0..m {
+                let c = codes[(t0 + t) * m + i];
+                let b = &mut lane[i * row + t / 2];
+                if t % 2 == 0 {
+                    *b = c;
+                } else {
+                    *b |= c << 4;
+                }
+            }
+        }
+        lanes.push((lane, len));
+        t0 += len;
+    }
+    lanes
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +199,27 @@ mod tests {
         assert_eq!(keys_from_centers(&centers, 3, 10, 4, 0.1, 1).len(), 40);
         assert_eq!(low_rank_keys(6, 8, 3, 0.05, 2).len(), 48);
         assert_eq!(queries(2, 16, 9).len(), 32);
+    }
+
+    #[test]
+    fn packed_lanes_mirror_byte_lanes() {
+        // same codes, both layouts: unpacking the packed lane must give
+        // the byte lane exactly, nibble order low-then-high
+        let codes: Vec<u8> =
+            (0..37 * 3).map(|i| (i * 7 % 16) as u8).collect();
+        let byte_lanes = interleave_lanes(&codes, 3, 8);
+        let packed = interleave_lanes_packed(&codes, 3, 8);
+        assert_eq!(byte_lanes.len(), packed.len());
+        for ((bl, bn), (pl, pn)) in byte_lanes.iter().zip(&packed) {
+            assert_eq!(bn, pn);
+            assert_eq!(pl.len(), 3 * 4);
+            for i in 0..3 {
+                for t in 0..*bn {
+                    let nib = (pl[i * 4 + t / 2] >> ((t % 2) * 4)) & 0xF;
+                    assert_eq!(nib, bl[i * 8 + t], "i={i} t={t}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -176,6 +176,7 @@ fn batched_decode_bit_identical_all_rust_backends() {
         AttentionBackend::Fp16Exact,
         AttentionBackend::Lookat { m: 4, k: 64 },
         AttentionBackend::Lookat { m: 2, k: 64 },
+        AttentionBackend::Lookat { m: 4, k: 16 },
         AttentionBackend::ScalarQuant { bits: 8 },
         AttentionBackend::ScalarQuant { bits: 4 },
     ] {
@@ -196,12 +197,16 @@ fn batched_decode_bit_identical_every_key_value_backend_combo() {
         AttentionBackend::Fp16Exact,
         AttentionBackend::Lookat { m: 4, k: 64 },
         AttentionBackend::Lookat { m: 2, k: 64 },
+        // nibble-packed 4-bit key lanes (the SIMD fast-scan mode)
+        AttentionBackend::Lookat { m: 4, k: 16 },
         AttentionBackend::ScalarQuant { bits: 8 },
         AttentionBackend::ScalarQuant { bits: 4 },
     ];
     let value_backends = [
         ValueBackend::Fp32,
         ValueBackend::Pq { m: 4, k: 64 },
+        // nibble-packed 4-bit value lanes
+        ValueBackend::Pq { m: 4, k: 16 },
     ];
     for backend in key_backends {
         for vb in &value_backends {
@@ -253,12 +258,16 @@ fn chunked_prefill_bit_identical_every_key_value_backend_combo() {
         AttentionBackend::Fp16Exact,
         AttentionBackend::Lookat { m: 4, k: 64 },
         AttentionBackend::Lookat { m: 2, k: 64 },
+        // nibble-packed 4-bit key lanes (the SIMD fast-scan mode)
+        AttentionBackend::Lookat { m: 4, k: 16 },
         AttentionBackend::ScalarQuant { bits: 8 },
         AttentionBackend::ScalarQuant { bits: 4 },
     ];
     let value_backends = [
         ValueBackend::Fp32,
         ValueBackend::Pq { m: 4, k: 64 },
+        // nibble-packed 4-bit value lanes
+        ValueBackend::Pq { m: 4, k: 16 },
     ];
     for backend in key_backends {
         for vb in &value_backends {
@@ -416,12 +425,16 @@ fn swap_restore_bit_identical_every_key_value_backend_combo() {
         AttentionBackend::Fp16Exact,
         AttentionBackend::Lookat { m: 4, k: 64 },
         AttentionBackend::Lookat { m: 2, k: 64 },
+        // nibble-packed 4-bit key lanes (the SIMD fast-scan mode)
+        AttentionBackend::Lookat { m: 4, k: 16 },
         AttentionBackend::ScalarQuant { bits: 8 },
         AttentionBackend::ScalarQuant { bits: 4 },
     ];
     let value_backends = [
         ValueBackend::Fp32,
         ValueBackend::Pq { m: 4, k: 64 },
+        // nibble-packed 4-bit value lanes
+        ValueBackend::Pq { m: 4, k: 16 },
     ];
     let by_id = |b: &Batcher| {
         let mut v: Vec<(u64, Vec<u32>)> = b

@@ -11,12 +11,18 @@
 //!    (`pq::values::weighted_decode_lanes`) are *bit-identical* to the
 //!    flat token-major references across uneven group sizes, partial
 //!    tail groups and every unrolled `m` ∈ {2, 4, 8, 16} plus the
-//!    generic path.
+//!    generic path;
+//! 6. the nibble-packed K ≤ 16 variants
+//!    (`LookupTable::scores_lanes_packed` and
+//!    `pq::values::weighted_decode_lanes_packed`) — dispatched *and*
+//!    pinned-scalar — are bit-identical to the same flat references
+//!    across odd token counts (partial low-nibble tails) and mid-stream
+//!    causal truncation of the packed lanes.
 
 use lookat::pq::kmeans::kmeans;
 use lookat::pq::{LookupTable, PqCodec, TrainOpts};
 use lookat::prop_assert;
-use lookat::testkit::fixtures::interleave_lanes;
+use lookat::testkit::fixtures::{interleave_lanes, interleave_lanes_packed};
 use lookat::util::proptest::Gen;
 use lookat::util::rng::Pcg32;
 
@@ -302,6 +308,156 @@ fn grouped_value_decode_bit_identical_for_every_m() {
                 return Err(format!(
                     "dim {i} diverged: flat {a} vs grouped {b} \
                      (m={m}, k={k}, group={group})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_lane_scan_bit_identical_to_flat_for_every_m() {
+    // the 4-bit fast-scan contract: nibble-packed lanes (two codes per
+    // byte, low nibble = even token slot) with odd token counts and a
+    // mid-stream causal cut must score bit-identically to the flat
+    // token-major reference, on both the dispatched path and the
+    // pinned-scalar one
+    prop_assert!("packed-scan-bit-identical", 30, |g: &mut Gen| {
+        let m = *g.choose(&SCAN_MS);
+        let d_sub = *g.choose(&[2usize, 4, 8]);
+        let d_k = m * d_sub;
+        let k = *g.choose(&[4usize, 8, 16]);
+        let n = g.usize_in(1, 150);
+        let keys: Vec<f32> =
+            g.normal_vec(n * d_k).iter().map(|v| v * 0.5).collect();
+        let codec = PqCodec::train(
+            &keys,
+            d_k,
+            m,
+            k,
+            &TrainOpts { iters: 4, seed: g.rng.next_u64(), tol: 1e-3 },
+        );
+        if !codec.packed() {
+            return Err(format!("k={k} codec should nibble-pack"));
+        }
+        let codes = codec.encode_batch(&keys, n);
+        let q: Vec<f32> =
+            g.normal_vec(d_k).iter().map(|v| v * 0.5).collect();
+        let lut = LookupTable::build(&q, &codec.codebook);
+        // score only a causal prefix: lanes past the cut are dropped,
+        // the cut group is taken partially — mid-stream truncation
+        let t = g.usize_in(1, n);
+        let flat = lut.scores(&codes[..t * m], t);
+        // even group per the packed-lane layout; may overshoot n so a
+        // single partial group is also drawn
+        let group = 2 * g.usize_in(1, n.div_ceil(2) + 4);
+        let lanes = interleave_lanes_packed(&codes, m, group);
+        let truncate = |mut left: usize| {
+            lanes.iter().filter_map(move |(l, len)| {
+                if left == 0 {
+                    return None;
+                }
+                let take = (*len).min(left);
+                left -= take;
+                Some((&l[..], take))
+            })
+        };
+        let mut out = Vec::new();
+        lut.scores_lanes_packed(truncate(t), &mut out);
+        if out.len() != t {
+            return Err(format!(
+                "packed scan returned {} scores for {t} tokens",
+                out.len()
+            ));
+        }
+        for (l, (a, b)) in flat.iter().zip(&out).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!(
+                    "score {l} diverged: flat {a} vs packed {b} \
+                     (m={m}, k={k}, group={group}, t={t}, n={n})"
+                ));
+            }
+        }
+        let mut scalar = Vec::new();
+        lut.scores_lanes_packed_scalar(truncate(t), &mut scalar);
+        for (l, (a, b)) in out.iter().zip(&scalar).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!(
+                    "score {l}: dispatched {a} vs pinned-scalar {b} \
+                     (m={m}, group={group})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_value_decode_bit_identical_to_flat_for_every_m() {
+    // value-side sibling of the packed scan property: the fused
+    // weighted decode over nibble-packed lanes must match the flat
+    // byte-code reference bit for bit, dispatched and pinned-scalar
+    prop_assert!("packed-value-decode-bit-identical", 30, |g: &mut Gen| {
+        let m = *g.choose(&SCAN_MS);
+        let d_sub = *g.choose(&[2usize, 4]);
+        let d_k = m * d_sub;
+        let k = *g.choose(&[4usize, 16]);
+        let n = g.usize_in(1, 120);
+        let values: Vec<f32> =
+            g.normal_vec(n * d_k).iter().map(|v| v * 0.5).collect();
+        let codec = PqCodec::train(
+            &values,
+            d_k,
+            m,
+            k,
+            &TrainOpts { iters: 4, seed: g.rng.next_u64(), tol: 1e-3 },
+        );
+        if !codec.packed() {
+            return Err(format!("k={k} codec should nibble-pack"));
+        }
+        let codes = codec.encode_batch(&values, n);
+        let t = g.usize_in(1, n);
+        let mut weights: Vec<f32> = (0..t)
+            .map(|_| if g.bool() { g.rng.next_f32() } else { 0.0 })
+            .collect();
+        let s: f32 = weights.iter().sum();
+        if s > 0.0 {
+            for w in weights.iter_mut() {
+                *w /= s;
+            }
+        }
+        let flat = lookat::pq::values::weighted_decode(
+            &weights, &codes[..t * m], &codec);
+        let group = 2 * g.usize_in(1, n.div_ceil(2) + 4);
+        let lanes = interleave_lanes_packed(&codes, m, group);
+        let truncate = |mut left: usize| {
+            lanes.iter().filter_map(move |(l, len)| {
+                if left == 0 {
+                    return None;
+                }
+                let take = (*len).min(left);
+                left -= take;
+                Some((&l[..], take))
+            })
+        };
+        let packed = lookat::pq::values::weighted_decode_lanes_packed(
+            &weights, truncate(t), &codec);
+        for (i, (a, b)) in flat.iter().zip(&packed).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!(
+                    "dim {i} diverged: flat {a} vs packed {b} \
+                     (m={m}, k={k}, group={group}, t={t}, n={n})"
+                ));
+            }
+        }
+        let scalar =
+            lookat::pq::values::weighted_decode_lanes_packed_scalar(
+                &weights, truncate(t), &codec);
+        for (i, (a, b)) in packed.iter().zip(&scalar).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!(
+                    "dim {i}: dispatched {a} vs pinned-scalar {b} \
+                     (m={m}, group={group})"
                 ));
             }
         }
