@@ -20,7 +20,9 @@
 //!   the preempt-heavy swap-tier A/B recording swap-vs-reprefill
 //!   speedup, and the shared-system-prompt prefix-cache A/B recording
 //!   blocks shared — `lookat bench-check` gates every scenario's
-//!   `*_tok_s` metric alongside the backend sweep)
+//!   `*_tok_s` metric alongside the backend sweep, and each backend's
+//!   batch-16 `ttft_p99_s` / `tick_p99_s` tail latencies from the
+//!   telemetry histograms, lower-is-better)
 
 use lookat::coordinator::{
     AttentionBackend, BatcherConfig, EngineConfig, Router, RouterConfig,
@@ -94,6 +96,18 @@ fn bench_backend(
             &format!("batch_{bs}_tok_s"),
             Json::Num(report.throughput_tok_s()),
         );
+        // tail-latency series from the batch-16 run's telemetry
+        // histograms: *_p99_s keys are gated lower-is-better by
+        // `lookat bench-check` (with one-bucket slack for the
+        // sqrt(2)-spaced histogram quantization)
+        if bs == 16 {
+            if let Some(p) = report.ttft_hist.p99() {
+                o.set("ttft_p99_s", Json::Num(p));
+            }
+            if let Some(p) = report.tick_hist.p99() {
+                o.set("tick_p99_s", Json::Num(p));
+            }
+        }
         let mut run = report.to_json();
         run.set("batch", Json::Num(bs as f64));
         runs.push(run);

@@ -17,10 +17,13 @@
 //! bit-identical to the uninterrupted run.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
 
 use super::engine::{Engine, TickEntry};
 use super::request::{CompletedRequest, Request};
 use crate::kvcache::{CacheError, SeqId, BLOCK_TOKENS};
+use crate::telemetry::{Ctr, Gauge, Hist, MetricsRegistry, TraceKind, TraceRing};
 
 /// How the batcher arbitrates cache blocks between running sequences.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -137,6 +140,10 @@ struct Active {
     req: Request,
     admitted_s: f64,
     first_token_s: Option<f64>,
+    /// when the most recent token was produced — inter-token latency
+    /// histogram source (not preserved across preemptions: the ITL a
+    /// client observes across a swap gap includes that gap)
+    last_token_s: Option<f64>,
     /// prompt ++ resumed tokens — the prefill source
     prefill_src: Vec<u32>,
     /// tokens of `prefill_src` already in cache
@@ -168,10 +175,15 @@ pub struct Batcher {
     pub swap_ins: usize,
     /// admissions that attached shared prefix-cache blocks
     pub prefix_hits: usize,
+    /// live metrics sink, shared with the engine (`Engine::metrics`)
+    metrics: Arc<MetricsRegistry>,
+    /// opt-in per-request event ring (`--trace-out`); absent = zero cost
+    tracer: Option<Arc<TraceRing>>,
 }
 
 impl Batcher {
     pub fn new(engine: Engine, cfg: BatcherConfig) -> Self {
+        let metrics = engine.metrics();
         Self {
             cfg,
             engine,
@@ -183,6 +195,8 @@ impl Batcher {
             swap_outs: 0,
             swap_ins: 0,
             prefix_hits: 0,
+            metrics,
+            tracer: None,
         }
     }
 
@@ -190,14 +204,48 @@ impl Batcher {
         &self.engine
     }
 
+    /// Attach a per-request event tracer. Scheduling decisions and tick
+    /// spans are recorded into its ring from this point on.
+    pub fn set_tracer(&mut self, tracer: Arc<TraceRing>) {
+        self.tracer = Some(tracer);
+    }
+
+    pub fn tracer(&self) -> Option<&Arc<TraceRing>> {
+        self.tracer.as_ref()
+    }
+
+    #[inline]
+    fn trace(&self, ts_s: f64, seq: SeqId, kind: TraceKind, dur_s: f64, arg: usize) {
+        if let Some(t) = &self.tracer {
+            t.record(ts_s, seq, kind, dur_s, arg.min(u32::MAX as usize) as u32);
+        }
+    }
+
     /// Submit a request. Returns false (and records the rejection) when
     /// the queue is full — the router's backpressure signal.
     pub fn submit(&mut self, req: Request) -> bool {
+        self.metrics.inc(Ctr::RequestsSubmitted, 1);
         if self.queue.len() >= self.cfg.max_queue {
+            self.metrics.inc(Ctr::RequestsRejected, 1);
+            self.trace(
+                req.arrival_s,
+                req.id,
+                TraceKind::Rejected,
+                0.0,
+                req.prompt.len(),
+            );
             self.rejected.push(req.id);
             return false;
         }
+        self.trace(
+            req.arrival_s,
+            req.id,
+            TraceKind::Queued,
+            0.0,
+            req.prompt.len(),
+        );
         self.queue.push_back(Queued::fresh(req));
+        self.metrics.set(Gauge::QueueDepth, self.queue.len() as u64);
         true
     }
 
@@ -258,6 +306,13 @@ impl Batcher {
                     Ok(()) => {
                         budget -= need;
                         self.swap_ins += 1;
+                        self.trace(
+                            now_s,
+                            q.req.id,
+                            TraceKind::SwapIn,
+                            0.0,
+                            need,
+                        );
                         let mut prefill_src = q.req.prompt.clone();
                         prefill_src.extend_from_slice(&q.resume);
                         // everything through pos is already in cache:
@@ -272,6 +327,7 @@ impl Batcher {
                         self.active.push(Active {
                             admitted_s: q.first_admitted_s.unwrap_or(now_s),
                             first_token_s: q.first_token_s.take(),
+                            last_token_s: None,
                             prefill_src,
                             prefilled,
                             generated: std::mem::take(&mut q.resume),
@@ -299,6 +355,14 @@ impl Batcher {
             let peak = front.req.prompt.len() + front.req.max_new_tokens;
             if peak.div_ceil(BLOCK_TOKENS) > total {
                 let q = self.queue.pop_front().unwrap();
+                self.metrics.inc(Ctr::RequestsRejected, 1);
+                self.trace(
+                    now_s,
+                    q.req.id,
+                    TraceKind::Rejected,
+                    0.0,
+                    q.req.prompt.len(),
+                );
                 self.rejected.push(q.req.id);
                 continue;
             }
@@ -316,23 +380,30 @@ impl Batcher {
                 Ok(shared) => shared,
                 Err(_) => {
                     // id collision with a live sequence: refuse it
+                    self.metrics.inc(Ctr::RequestsRejected, 1);
                     self.rejected.push(q.req.id);
                     continue;
                 }
             };
             if shared > 0 {
                 self.prefix_hits += 1;
+                self.metrics.inc(Ctr::PrefixHits, 1);
+                self.metrics.inc(Ctr::PrefixTokensReused, shared as u64);
             }
+            self.trace(now_s, q.req.id, TraceKind::Admitted, 0.0, shared);
             budget -= need.min(budget);
             self.active.push(Active {
                 admitted_s: q.first_admitted_s.unwrap_or(now_s),
                 first_token_s: q.first_token_s.take(),
+                last_token_s: None,
                 prefill_src,
                 prefilled: shared,
                 generated: std::mem::take(&mut q.resume),
                 req: q.req,
             });
         }
+        self.metrics.set(Gauge::QueueDepth, self.queue.len() as u64);
+        self.metrics.set(Gauge::ActiveSeqs, self.active.len() as u64);
     }
 
     /// This tick's span for one active sequence: the next prefill chunk
@@ -371,7 +442,7 @@ impl Batcher {
     /// store for bit-identical restore; otherwise its blocks are freed
     /// and it re-queues carrying its generated-so-far tokens for
     /// re-prefill. Returns false when there is nothing to evict.
-    fn preempt_one(&mut self) -> bool {
+    fn preempt_one(&mut self, now_s: f64) -> bool {
         let Some(idx) = (0..self.active.len()).max_by(|&i, &j| {
             let a = &self.active[i].req;
             let b = &self.active[j].req;
@@ -385,19 +456,20 @@ impl Batcher {
         let id = a.req.id;
         // context that would need recomputing on the re-prefill path
         let ctx = a.req.prompt.len() + a.generated.len();
+        let spill_bytes = self.engine.seq_spill_bytes(id);
         let swapped = self.cfg.swap
             && ctx > 0
-            && self
-                .cfg
-                .swap_cost
-                .should_swap(self.engine.seq_spill_bytes(id), ctx)
+            && self.cfg.swap_cost.should_swap(spill_bytes, ctx)
             && self.engine.swap_out(id).is_ok();
         if swapped {
             self.swap_outs += 1;
+            self.trace(now_s, id, TraceKind::SwapOut, 0.0, spill_bytes);
         } else {
             let _ = self.engine.release(id);
+            self.trace(now_s, id, TraceKind::Preempt, 0.0, ctx);
         }
         self.preemptions += 1;
+        self.metrics.inc(Ctr::Preemptions, 1);
         self.queue.push_front(Queued {
             resume: a.generated,
             first_admitted_s: Some(a.admitted_s),
@@ -426,7 +498,7 @@ impl Batcher {
             while self.tick_block_need(&spans) > self.engine.free_blocks()
                 && self.active.len() > 1
             {
-                self.preempt_one();
+                self.preempt_one(now_s);
                 spans = self
                     .active
                     .iter()
@@ -468,8 +540,12 @@ impl Batcher {
                 }
             })
             .collect();
+        let tick_start = Instant::now();
         let outcomes = self.engine.step_batch(&entries)?;
+        let tick_s = tick_start.elapsed().as_secs_f64();
         drop(entries);
+        self.metrics.observe(Hist::TickS, tick_s);
+        self.metrics.observe(Hist::BatchOccupancy, self.active.len() as f64);
 
         let mut produced = 0usize;
         for (i, out) in outcomes.iter().enumerate() {
@@ -478,12 +554,26 @@ impl Batcher {
                 Some(tok) => {
                     if a.first_token_s.is_none() {
                         a.first_token_s = Some(now_s);
+                        self.metrics
+                            .observe(Hist::TtftS, now_s - a.req.arrival_s);
+                    } else if let Some(last) = a.last_token_s {
+                        self.metrics.observe(Hist::ItlS, now_s - last);
                     }
+                    a.last_token_s = Some(now_s);
                     a.generated.push(tok);
                     produced += 1;
                 }
                 None => {
                     a.prefilled += spans[i];
+                    if let Some(t) = &self.tracer {
+                        t.record(
+                            now_s,
+                            a.req.id,
+                            TraceKind::PrefillChunk,
+                            tick_s,
+                            spans[i].min(u32::MAX as usize) as u32,
+                        );
+                    }
                     if !a.prefilling() {
                         // prefill just finished: publish its full
                         // blocks into the prefix cache (no-op when the
@@ -495,6 +585,12 @@ impl Batcher {
             }
         }
 
+        if produced > 0 {
+            // one engine-wide decode span per tick (lane 0) — per-token
+            // events would exhaust the ring in seconds at scale
+            self.trace(now_s, 0, TraceKind::DecodeTick, tick_s, produced);
+        }
+
         // sweep completions after the tick
         let mut i = 0;
         while i < self.active.len() {
@@ -503,6 +599,15 @@ impl Batcher {
             {
                 let a = self.active.swap_remove(i);
                 self.engine.release(a.req.id)?;
+                self.metrics.inc(Ctr::RequestsCompleted, 1);
+                self.metrics.observe(Hist::E2eS, now_s - a.req.arrival_s);
+                self.trace(
+                    now_s,
+                    a.req.id,
+                    TraceKind::Finish,
+                    0.0,
+                    a.generated.len(),
+                );
                 self.completed.push(CompletedRequest {
                     id: a.req.id,
                     prompt_tokens: a.req.prompt.len(),
@@ -518,6 +623,8 @@ impl Batcher {
                 i += 1;
             }
         }
+        self.metrics.set(Gauge::ActiveSeqs, self.active.len() as u64);
+        self.metrics.set(Gauge::QueueDepth, self.queue.len() as u64);
         Ok(produced)
     }
 }
@@ -878,6 +985,91 @@ mod tests {
         let s = b.engine().cache_stats();
         assert_eq!(s.blocks_allocated, 0, "no refcount leaks");
         assert_eq!(s.shared_blocks, 0);
+    }
+
+    #[test]
+    fn telemetry_registry_covers_scheduler_cache_swap_and_phases() {
+        // oversubscribed preemptive run with the swap tier on: every
+        // scheduler/cache/swap counter family must light up
+        let mut b = mk_batcher_policy(
+            4, 32, 3, SchedulerPolicy::Preempt, 8);
+        for i in 0..6 {
+            assert!(b.submit(req(i, 25)));
+        }
+        drain(&mut b);
+        let m = b.engine().metrics();
+        assert_eq!(m.counter(Ctr::RequestsSubmitted), 6);
+        assert_eq!(m.counter(Ctr::RequestsCompleted), 6);
+        assert!(m.counter(Ctr::Preemptions) > 0);
+        assert!(m.counter(Ctr::SwapOuts) > 0);
+        assert_eq!(m.counter(Ctr::SwapOuts), m.counter(Ctr::SwapIns));
+        assert!(m.counter(Ctr::SwapBytesOut) > 0);
+        assert_eq!(
+            m.counter(Ctr::SwapBytesOut),
+            m.counter(Ctr::SwapBytesIn),
+            "restores must read back exactly what spills wrote"
+        );
+        assert_eq!(m.counter(Ctr::DecodeTokens), 6 * 25);
+        assert!(m.counter(Ctr::PrefillTokens) > 0);
+        assert!(m.counter(Ctr::ScanBytes) > 0);
+        assert!(m.counter(Ctr::Ticks) > 0);
+        assert!(
+            m.counter(Ctr::PhaseScanNs) > 0,
+            "phase timer deltas must reach the registry"
+        );
+        assert_eq!(m.gauge(Gauge::BlocksTotal), 3);
+        assert_eq!(m.gauge(Gauge::ActiveSeqs), 0, "drained run");
+        assert!(m.gauge(Gauge::ScratchLeases) > 0);
+        assert_eq!(m.hist(Hist::TickS).count(), m.counter(Ctr::Ticks));
+        assert_eq!(m.hist(Hist::TtftS).count(), 6);
+        assert_eq!(m.hist(Hist::E2eS).count(), 6);
+        assert!(m.hist(Hist::ItlS).count() > 0);
+        assert!(m.hist(Hist::BatchOccupancy).count() > 0);
+    }
+
+    #[test]
+    fn tracer_attached_run_matches_untraced_tokens() {
+        // bit-parity with telemetry enabled: attaching the event ring
+        // must not perturb scheduling or generation
+        let run = |traced: bool| {
+            let mut b = mk_batcher_policy(
+                4, 32, 3, SchedulerPolicy::Preempt, 8);
+            if traced {
+                b.set_tracer(Arc::new(TraceRing::new(4096)));
+            }
+            for i in 0..6 {
+                assert!(b.submit(req(i, 25)));
+            }
+            drain(&mut b);
+            let mut toks: Vec<(u64, Vec<u32>)> = b
+                .completed
+                .iter()
+                .map(|c| (c.id, c.generated.clone()))
+                .collect();
+            toks.sort();
+            let events =
+                b.tracer().map(|t| t.events()).unwrap_or_default();
+            (toks, events)
+        };
+        let (traced, events) = run(true);
+        let (plain, _) = run(false);
+        assert_eq!(traced, plain, "tracing must not change tokens");
+        for kind in [
+            TraceKind::Queued,
+            TraceKind::Admitted,
+            TraceKind::PrefillChunk,
+            TraceKind::DecodeTick,
+            TraceKind::SwapIn,
+            TraceKind::Finish,
+        ] {
+            assert!(
+                events.iter().any(|e| e.kind == kind),
+                "missing {kind:?} events"
+            );
+        }
+        assert!(events
+            .iter()
+            .any(|e| matches!(e.kind, TraceKind::SwapOut | TraceKind::Preempt)));
     }
 
     #[test]

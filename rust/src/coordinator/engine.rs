@@ -29,6 +29,8 @@
 //! LOOKAT codebooks are trained once at engine build from a calibration
 //! corpus (paper §3.4); the serving hot path never touches python.
 
+use std::sync::{Arc, Mutex};
+
 use anyhow::{bail, Context};
 
 use crate::attention::kernel::{
@@ -43,6 +45,7 @@ use crate::kvcache::{
 use crate::model::{Gpt2, ModelConfig, PrefillOutput, Weights};
 use crate::pq::{PqCodec, TrainOpts};
 use crate::runtime::Runtime;
+use crate::telemetry::{Ctr, Gauge, MetricsRegistry};
 use crate::util::threadpool::{self, parallel_map, scratch};
 use crate::util::timing::{timed, Phase, PhaseTimers, PhaseTimes};
 use crate::workload::{Corpus, Genre};
@@ -263,6 +266,12 @@ pub struct Engine {
     /// value_decode from the kernels, qkv / mlp from the stage loop);
     /// drained per serving run via [`Engine::take_phase_times`]
     timers: PhaseTimers,
+    /// live serving telemetry; shared out via [`Engine::metrics`] so the
+    /// batcher/router/server publish and read through one registry
+    metrics: Arc<MetricsRegistry>,
+    /// cumulative phase snapshot at the last per-tick publish — the
+    /// registry's phase counters advance by the delta each tick
+    last_phases: Mutex<PhaseTimes>,
 }
 
 impl Engine {
@@ -369,7 +378,15 @@ impl Engine {
             prefill_chunk: cfg.prefill_chunk,
             pipeline: cfg.pipeline,
             timers: PhaseTimers::new(),
+            metrics: Arc::new(MetricsRegistry::new()),
+            last_phases: Mutex::new(PhaseTimes::default()),
         })
+    }
+
+    /// The engine's live telemetry registry. Shared (`Arc`) so the
+    /// batcher, router and TCP server publish and read through it.
+    pub fn metrics(&self) -> Arc<MetricsRegistry> {
+        Arc::clone(&self.metrics)
     }
 
     /// Combined backend label for reports: the key backend's name, plus
@@ -530,7 +547,11 @@ impl Engine {
     /// Phase sums count every thread and overlapped stage, so they may
     /// exceed wall time — they locate compute, not the clock.
     pub fn take_phase_times(&self) -> PhaseTimes {
-        self.timers.take()
+        let taken = self.timers.take();
+        // Re-base the per-tick registry deltas: the accumulators just
+        // reset, so the next publish must diff against zero.
+        *self.last_phases.lock().unwrap() = PhaseTimes::default();
+        taken
     }
 
     /// Tokens currently cached for a sequence (`None` if unknown).
@@ -695,6 +716,7 @@ impl Engine {
         if self.swapped_meta.contains_key(&id) {
             bail!("sequence {id} is already swapped out");
         }
+        let spill_bytes = self.seq_spill_bytes(id);
         let meta = self
             .seqs
             .remove(&id)
@@ -704,6 +726,8 @@ impl Engine {
             c.swap_out(id).map_err(|e| anyhow::anyhow!("swap_out: {e}"))?;
         }
         self.swapped_meta.insert(id, meta);
+        self.metrics.inc(Ctr::SwapOuts, 1);
+        self.metrics.inc(Ctr::SwapBytesOut, spill_bytes as u64);
         Ok(())
     }
 
@@ -729,6 +753,11 @@ impl Engine {
         }
         let meta = self.swapped_meta.remove(&id).unwrap();
         self.seqs.insert(id, meta);
+        self.metrics.inc(Ctr::SwapIns, 1);
+        // Same byte model (and same pos) as the matching swap-out, so
+        // bytes-in totals mirror bytes-out across a spill round trip.
+        self.metrics
+            .inc(Ctr::SwapBytesIn, self.seq_spill_bytes(id) as u64);
         Ok(())
     }
 
@@ -895,6 +924,28 @@ impl Engine {
                     )));
             }
         }
+
+        // Telemetry inputs, taken while positions are still pre-tick:
+        // a query row at position p attends p+1 cached tokens, so the
+        // tick's ADC scan traffic (key codes + value payload, every
+        // layer and head) is derivable without touching the kernels —
+        // the live compute-vs-memory-bound signal.
+        let (mut decode_toks, mut prefill_toks) = (0u64, 0u64);
+        let mut attended = 0usize;
+        for e in entries {
+            let pos0 = self.seqs[&e.seq()].pos;
+            let s = e.span();
+            attended += s * pos0 + s * (s + 1) / 2;
+            match e {
+                TickEntry::Decode(_) => decode_toks += 1,
+                TickEntry::Prefill { .. } => prefill_toks += s as u64,
+            }
+        }
+        let scan_bytes = (attended
+            * h
+            * (self.caches[0].key_bytes_per_token_per_head()
+                + self.caches[0].value_bytes_per_token_per_head())
+            * self.model.n_layer()) as u64;
 
         // row bookkeeping: entry i owns flat rows
         // entry_row0[i] .. entry_row0[i] + span_i
@@ -1089,6 +1140,7 @@ impl Engine {
         for x in xs {
             sp.put_f32(x);
         }
+        self.publish_tick(decode_toks, prefill_toks, scan_bytes);
         Ok(entries
             .iter()
             .enumerate()
@@ -1118,6 +1170,65 @@ impl Engine {
             c.free_seq(id).map_err(|e| anyhow::anyhow!("{e}"))?;
         }
         Ok(())
+    }
+
+    /// End-of-tick registry publish: token/scan counters, phase-timer
+    /// deltas, and cache/swap/arena pressure gauges. Pure observation —
+    /// relaxed atomics plus one uncontended mutex, no allocation.
+    fn publish_tick(
+        &self,
+        decode_tokens: u64,
+        prefill_tokens: u64,
+        scan_bytes: u64,
+    ) {
+        let m = &self.metrics;
+        m.inc(Ctr::Ticks, 1);
+        m.inc(Ctr::DecodeTokens, decode_tokens);
+        m.inc(Ctr::PrefillTokens, prefill_tokens);
+        m.inc(Ctr::ScanBytes, scan_bytes);
+
+        // Phase work since the previous publish. A concurrent
+        // `take_phase_times` resets both the accumulators and the
+        // baseline, so deltas are clamped at zero rather than wrapping.
+        let snap = self.timers.snapshot();
+        {
+            let mut last = self.last_phases.lock().unwrap();
+            let d = |now: f64, prev: f64| ((now - prev).max(0.0) * 1e9) as u64;
+            m.inc(Ctr::PhaseLutBuildNs, d(snap.lut_build_s, last.lut_build_s));
+            m.inc(Ctr::PhaseScanNs, d(snap.scan_s, last.scan_s));
+            m.inc(
+                Ctr::PhaseValueDecodeNs,
+                d(snap.value_decode_s, last.value_decode_s),
+            );
+            m.inc(Ctr::PhaseQkvNs, d(snap.qkv_s, last.qkv_s));
+            m.inc(Ctr::PhaseMlpNs, d(snap.mlp_s, last.mlp_s));
+            *last = snap;
+        }
+
+        // Cache pressure (layer 0; all layers are symmetric).
+        let s = self.caches[0].stats();
+        m.set(Gauge::BlocksTotal, s.blocks_total as u64);
+        m.set(Gauge::BlocksUsed, s.blocks_allocated as u64);
+        m.set(
+            Gauge::BlocksFree,
+            (s.blocks_total - s.blocks_allocated) as u64,
+        );
+        m.set(Gauge::SharedBlocks, s.shared_blocks as u64);
+        m.set(Gauge::KeyCacheBytes, s.key_bytes as u64);
+        m.set(Gauge::ValueCacheBytes, s.value_bytes as u64);
+        m.set(Gauge::SwappedSeqs, self.swapped_meta.len() as u64);
+        let swap_resident: usize =
+            self.caches.iter().map(|c| c.swap_bytes()).sum();
+        m.set(Gauge::SwapResidentBytes, swap_resident as u64);
+
+        // Scratch arena (the process-wide pool the tick stages lease
+        // from) — makes a broken zero-allocation steady state visible.
+        let a = scratch().arena_stats();
+        m.set(Gauge::ScratchLeases, a.leases as u64);
+        m.set(Gauge::ScratchFresh, a.fresh as u64);
+        m.set(Gauge::ScratchZeroed, a.zeroed as u64);
+        m.set(Gauge::ScratchHeldBytes, a.held_bytes as u64);
+        m.set(Gauge::ScratchPeakBytes, a.peak_bytes as u64);
     }
 }
 

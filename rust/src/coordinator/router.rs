@@ -4,12 +4,16 @@
 //! pacing of engine work and trace-time arrival gating: a request only
 //! becomes visible once the serving clock passes its arrival offset.
 
+use std::sync::Arc;
+
 use super::batcher::{Batcher, BatcherConfig};
 use super::engine::{Engine, EngineConfig};
 use super::request::{CompletedRequest, Request};
 use crate::model::ByteTokenizer;
+use crate::telemetry::{Hist, HistogramSnapshot, TraceRing};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
+use crate::util::threadpool::scratch;
 use crate::util::timing::PhaseTimes;
 use crate::workload::RequestSpec;
 
@@ -55,6 +59,22 @@ pub struct ServingReport {
     /// thread and overlapped pipeline stage, so they may exceed
     /// `wall_s`
     pub phases: PhaseTimes,
+    /// latency distributions drained from the telemetry registry for
+    /// this run: time-to-first-token, inter-token gap, end-to-end, and
+    /// per-tick engine latency
+    pub ttft_hist: HistogramSnapshot,
+    pub itl_hist: HistogramSnapshot,
+    pub e2e_hist: HistogramSnapshot,
+    pub tick_hist: HistogramSnapshot,
+    /// scratch-arena activity over the run (leases/fresh/zeroed are
+    /// deltas against the run start; process-wide pool)
+    pub scratch_leases: usize,
+    /// arena leases that touched the allocator — the PR 5 invariant
+    /// says this stays ~0 once decode reaches steady state
+    pub scratch_fresh: usize,
+    pub scratch_zeroed: usize,
+    /// arena retention high-water mark in bytes (absolute, not a delta)
+    pub scratch_peak_bytes: usize,
 }
 
 impl ServingReport {
@@ -101,6 +121,27 @@ impl ServingReport {
             o.set("e2e_p50_s", Json::Num(t.p50));
             o.set("e2e_p99_s", Json::Num(t.p99));
         }
+        // histogram-backed latency keys (telemetry registry); omitted
+        // when the run recorded nothing, so empty runs don't emit zeros
+        let hist_keys: [(&str, &HistogramSnapshot, f64); 5] = [
+            ("ttft_p90_s", &self.ttft_hist, 0.90),
+            ("itl_p50_s", &self.itl_hist, 0.50),
+            ("itl_p99_s", &self.itl_hist, 0.99),
+            ("tick_p50_s", &self.tick_hist, 0.50),
+            ("tick_p99_s", &self.tick_hist, 0.99),
+        ];
+        for (key, hist, q) in hist_keys {
+            if let Some(v) = hist.percentile(q) {
+                o.set(key, Json::Num(v));
+            }
+        }
+        o.set("scratch_leases", Json::Num(self.scratch_leases as f64));
+        o.set("scratch_fresh", Json::Num(self.scratch_fresh as f64));
+        o.set("scratch_zeroed", Json::Num(self.scratch_zeroed as f64));
+        o.set(
+            "scratch_peak_bytes",
+            Json::Num(self.scratch_peak_bytes as f64),
+        );
         o.set(
             "key_cache_peak_bytes",
             Json::Num(self.key_cache_peak_bytes as f64),
@@ -113,16 +154,21 @@ impl ServingReport {
         o
     }
 
-    /// Human-readable serving summary.
+    /// Human-readable serving summary. Latency columns render `n/a`
+    /// when the run completed nothing, rather than a misleading 0.0ms.
     pub fn pretty(&self) -> String {
+        let fmt_ms = |v: Option<f64>| match v {
+            Some(s) => format!("{:>7.1}ms", s * 1e3),
+            None => format!("{:>9}", "n/a"),
+        };
         let ttft = self.ttft_summary();
         let e2e = self.e2e_summary();
         format!(
             "backend={:<14} scan={:<6} completed={:<4} rejected={:<3} \
              preempt={:<3} \
              swap={}/{} prefix_hits={:<3} wall={:>7.2}s \
-             decode_tok/s={:>8.1} ttft_p50={:>7.1}ms \
-             e2e_p50={:>7.1}ms key_cache_peak={:>8} B \
+             decode_tok/s={:>8.1} ttft_p50={} \
+             e2e_p50={} key_cache_peak={:>8} B \
              value_cache_peak={:>8} B",
             self.backend,
             self.scan_path,
@@ -134,8 +180,8 @@ impl ServingReport {
             self.prefix_hits,
             self.wall_s,
             self.throughput_tok_s(),
-            ttft.as_ref().map_or(0.0, |t| t.p50 * 1e3),
-            e2e.as_ref().map_or(0.0, |t| t.p50 * 1e3),
+            fmt_ms(ttft.as_ref().map(|t| t.p50)),
+            fmt_ms(e2e.as_ref().map(|t| t.p50)),
             self.key_cache_peak_bytes,
             self.value_cache_peak_bytes,
         )
@@ -162,6 +208,12 @@ impl Router {
     /// weight init stay out of the comparison.
     pub fn set_max_batch(&mut self, max_batch: usize) {
         self.batcher.cfg.max_batch = max_batch;
+    }
+
+    /// Attach a per-request trace ring; events from every subsequent
+    /// run land in it (`TraceRing::dump_chrome_json` renders them).
+    pub fn set_tracer(&mut self, tracer: Arc<TraceRing>) {
+        self.batcher.set_tracer(tracer);
     }
 
     /// Tokenize a workload trace into requests.
@@ -200,8 +252,14 @@ impl Router {
         let mut shared_blocks_peak = 0usize;
 
         // fresh phase window for this run (a reused router must not
-        // carry an earlier run's breakdown)
+        // carry an earlier run's breakdown); same for the registry's
+        // latency histograms and the scratch-arena baseline
         let _ = self.batcher.engine().take_phase_times();
+        let metrics = self.batcher.engine().metrics();
+        for h in [Hist::TtftS, Hist::ItlS, Hist::E2eS, Hist::TickS] {
+            let _ = metrics.take_hist(h);
+        }
+        let scratch0 = scratch().arena_stats();
 
         while !(pending.is_empty() && self.batcher.idle()) {
             let now = t0.elapsed().as_secs_f64();
@@ -233,6 +291,7 @@ impl Router {
             }
         }
 
+        let scratch1 = scratch().arena_stats();
         Ok(ServingReport {
             backend: self.batcher.engine().label(),
             scan_path: self.batcher.engine().scan_path().to_string(),
@@ -251,6 +310,18 @@ impl Router {
             key_cache_peak_bytes: peak_key_bytes,
             value_cache_peak_bytes: peak_value_bytes,
             phases: self.batcher.engine().take_phase_times(),
+            ttft_hist: metrics.take_hist(Hist::TtftS),
+            itl_hist: metrics.take_hist(Hist::ItlS),
+            e2e_hist: metrics.take_hist(Hist::E2eS),
+            tick_hist: metrics.take_hist(Hist::TickS),
+            scratch_leases: scratch1
+                .leases
+                .saturating_sub(scratch0.leases),
+            scratch_fresh: scratch1.fresh.saturating_sub(scratch0.fresh),
+            scratch_zeroed: scratch1
+                .zeroed
+                .saturating_sub(scratch0.zeroed),
+            scratch_peak_bytes: scratch1.peak_bytes,
         })
     }
 }
@@ -471,5 +542,79 @@ mod tests {
         assert_eq!(report.completed.len(), 6);
         assert_eq!(report.rejected, 0);
         assert!(report.to_json().get("preemptions").is_some());
+    }
+
+    #[test]
+    fn empty_run_report_omits_latency_keys_and_prints_na() {
+        // a run that completes nothing must not fabricate latencies:
+        // the JSON drops every percentile key and pretty() says n/a
+        let mut r = router(AttentionBackend::Fp16Exact);
+        let report = r.serve_trace(Vec::new()).unwrap();
+        assert_eq!(report.completed.len(), 0);
+        let j = report.to_json();
+        for k in [
+            "ttft_p50_s",
+            "ttft_p90_s",
+            "ttft_p99_s",
+            "e2e_p50_s",
+            "e2e_p99_s",
+            "itl_p50_s",
+            "itl_p99_s",
+            "tick_p50_s",
+            "tick_p99_s",
+        ] {
+            assert!(j.get(k).is_none(), "empty run leaked {k}");
+        }
+        let line = report.pretty();
+        assert!(line.contains("n/a"), "pretty lacks n/a: {line}");
+        assert!(
+            !line.contains("0.0ms"),
+            "pretty reports 0.0ms on an empty run: {line}"
+        );
+    }
+
+    #[test]
+    fn report_gains_histogram_backed_latency_fields() {
+        let mut r = router(AttentionBackend::Lookat { m: 4, k: 64 });
+        let reqs = r.tokenize_trace(&small_trace(4));
+        let report = r.serve_trace(reqs).unwrap();
+        assert_eq!(report.completed.len(), 4);
+        // one TTFT observation per completed request, drained into the
+        // report's histogram
+        assert_eq!(report.ttft_hist.count as usize, 4);
+        assert_eq!(report.e2e_hist.count as usize, 4);
+        // every request generates >= 2 tokens, so inter-token gaps and
+        // engine ticks both recorded
+        assert!(report.itl_hist.count > 0);
+        assert!(report.tick_hist.count > 0);
+        assert!(report.scratch_leases > 0, "no scratch leases recorded");
+        let j = report.to_json();
+        for k in [
+            "ttft_p50_s",
+            "ttft_p90_s",
+            "ttft_p99_s",
+            "itl_p50_s",
+            "itl_p99_s",
+            "tick_p50_s",
+            "tick_p99_s",
+            "scratch_leases",
+            "scratch_fresh",
+            "scratch_zeroed",
+            "scratch_peak_bytes",
+        ] {
+            assert!(j.get(k).is_some(), "missing {k}");
+        }
+        // the histogram p50 agrees with the exact per-request summary
+        // to within one geometric bucket (ratio sqrt(2))
+        let exact = report.ttft_summary().unwrap().p50;
+        let hist = j.get("ttft_p50_s").unwrap().as_f64().unwrap();
+        assert!(
+            hist >= exact / 2.0 && hist <= exact * 2.0,
+            "hist p50 {hist} vs exact {exact}"
+        );
+        // a second run on the same router starts from a clean registry
+        let reqs2 = r.tokenize_trace(&small_trace(4));
+        let report2 = r.serve_trace(reqs2).unwrap();
+        assert_eq!(report2.ttft_hist.count as usize, 4);
     }
 }

@@ -12,6 +12,17 @@
 //!      request's own connection)
 //!   ← {"error": "..."}            (malformed request: no id assigned)
 //!
+//! Control verbs share the wire (answered out of band by the serving
+//! loop, so the numbers come from the thread that owns the engine):
+//!   → {"cmd": "stats"}       ← telemetry snapshot (counters / gauges /
+//!                              histogram percentiles) + "uptime_s"
+//!   → {"cmd": "trace-dump"}  ← {"trace": "<chrome trace_event json>"}
+//!                              when started with a trace sink, else
+//!                              {"error": ...}
+//!
+//! With `metrics_addr` set, a sidecar thread additionally serves the
+//! registry in Prometheus text exposition format over plain HTTP GET.
+//!
 //! tokio is not vendored offline; the server uses one acceptor thread,
 //! one serving thread driving the batcher, and per-connection reader
 //! threads feeding a shared queue (see util::threadpool for the pool
@@ -20,13 +31,19 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::request::Request;
 use crate::model::ByteTokenizer;
+use crate::telemetry::{MetricsRegistry, TraceRing};
 use crate::util::json::Json;
+
+/// Events the per-request trace ring retains before overwriting the
+/// oldest — ~6 per request-lifecycle plus one per tick, so this covers
+/// tens of thousands of requests of lookback.
+const TRACE_RING_EVENTS: usize = 65536;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -36,6 +53,12 @@ pub struct ServerConfig {
     pub max_prompt_tokens: usize,
     /// bind address, e.g. "127.0.0.1:7070" (port 0 = ephemeral)
     pub addr: String,
+    /// optional Prometheus text-exposition endpoint, e.g.
+    /// "127.0.0.1:9091" (port 0 = ephemeral; `None` = disabled)
+    pub metrics_addr: Option<String>,
+    /// optional Chrome trace_event sink: enables the in-memory trace
+    /// ring and writes its contents to this path on shutdown
+    pub trace_out: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -45,18 +68,35 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             max_prompt_tokens: 120,
             addr: "127.0.0.1:0".into(),
+            metrics_addr: None,
+            trace_out: None,
         }
     }
 }
 
-struct Inbound {
-    req: Request,
-    conn: Arc<Mutex<TcpStream>>,
+/// Control verbs answered by the serving loop itself.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Control {
+    Stats,
+    TraceDump,
+}
+
+enum Inbound {
+    Request {
+        req: Request,
+        conn: Arc<Mutex<TcpStream>>,
+    },
+    Control {
+        verb: Control,
+        conn: Arc<Mutex<TcpStream>>,
+    },
 }
 
 /// A running server; `shutdown()` + drop joins all threads.
 pub struct Server {
     pub local_addr: std::net::SocketAddr,
+    /// where the Prometheus sidecar bound, when enabled
+    pub metrics_addr: Option<std::net::SocketAddr>,
     stop: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
@@ -113,12 +153,24 @@ impl Server {
                 }
             })?;
 
+        // the engine is born on the serving thread, so the metrics
+        // sidecar learns about its registry through this slot
+        let registry: Arc<OnceLock<Arc<MetricsRegistry>>> =
+            Arc::new(OnceLock::new());
+        let tracer: Option<Arc<TraceRing>> = cfg
+            .trace_out
+            .as_ref()
+            .map(|_| Arc::new(TraceRing::new(TRACE_RING_EVENTS)));
+
         // serving thread: builds the engine, drains the queue into the
         // batcher, steps it, writes completions back to their connections
         let srv_stop = stop.clone();
         let srv_queue = queue.clone();
         let engine_cfg = cfg.engine.clone();
         let batcher_cfg = cfg.batcher.clone();
+        let srv_registry = registry.clone();
+        let srv_tracer = tracer.clone();
+        let trace_out = cfg.trace_out.clone();
         let server_thread = std::thread::Builder::new()
             .name("lookat-server".into())
             .spawn(move || {
@@ -130,14 +182,48 @@ impl Server {
                         return;
                     }
                 };
-                let batcher = Batcher::new(engine, batcher_cfg);
+                let _ = srv_registry.set(engine.metrics());
+                let mut batcher = Batcher::new(engine, batcher_cfg);
+                if let Some(t) = &srv_tracer {
+                    batcher.set_tracer(t.clone());
+                }
                 serve_loop(batcher, srv_queue, srv_stop);
+                if let (Some(t), Some(path)) = (&srv_tracer, &trace_out) {
+                    match std::fs::write(path, t.dump_chrome_json()) {
+                        Ok(()) => crate::log_info!(
+                            "wrote request trace to {path}"
+                        ),
+                        Err(e) => crate::log_error!(
+                            "trace write to {path} failed: {e}"
+                        ),
+                    }
+                }
             })?;
+
+        let mut threads = vec![acceptor, server_thread];
+
+        // optional Prometheus sidecar: plain HTTP, text exposition
+        let mut metrics_addr = None;
+        if let Some(addr) = &cfg.metrics_addr {
+            let ml = TcpListener::bind(addr)?;
+            ml.set_nonblocking(true)?;
+            metrics_addr = Some(ml.local_addr()?);
+            let m_stop = stop.clone();
+            let m_registry = registry.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("lookat-metrics".into())
+                    .spawn(move || {
+                        metrics_loop(ml, m_registry, m_stop);
+                    })?,
+            );
+        }
 
         Ok(Server {
             local_addr,
+            metrics_addr,
             stop,
-            threads: vec![acceptor, server_thread],
+            threads,
         })
     }
 
@@ -173,12 +259,11 @@ fn reader_loop(
                 if trimmed.is_empty() {
                     continue;
                 }
-                match parse_request(trimmed, &tok, &next_id, max_prompt) {
-                    Ok(req) => {
-                        queue.lock().unwrap().push(Inbound {
-                            req,
-                            conn: conn.clone(),
-                        });
+                match parse_inbound(
+                    trimmed, &tok, &next_id, max_prompt, &conn,
+                ) {
+                    Ok(inbound) => {
+                        queue.lock().unwrap().push(inbound);
                     }
                     Err(msg) => {
                         let mut err = Json::obj();
@@ -198,13 +283,25 @@ fn reader_loop(
     }
 }
 
-fn parse_request(
+fn parse_inbound(
     line: &str,
     tok: &ByteTokenizer,
     next_id: &AtomicU64,
     max_prompt: usize,
-) -> Result<Request, String> {
+    conn: &Arc<Mutex<TcpStream>>,
+) -> Result<Inbound, String> {
     let j = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+    if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
+        let verb = match cmd {
+            "stats" => Control::Stats,
+            "trace-dump" => Control::TraceDump,
+            other => return Err(format!("unknown cmd '{other}'")),
+        };
+        return Ok(Inbound::Control {
+            verb,
+            conn: conn.clone(),
+        });
+    }
     let prompt = j
         .get("prompt")
         .and_then(|p| p.as_str())
@@ -217,11 +314,14 @@ fn parse_request(
         .and_then(|n| n.as_usize())
         .unwrap_or(16)
         .clamp(1, 256);
-    Ok(Request {
-        id: next_id.fetch_add(1, Ordering::SeqCst),
-        prompt: tok.encode_clamped(prompt, max_prompt),
-        max_new_tokens: max_new,
-        arrival_s: 0.0, // stamped by the serving loop
+    Ok(Inbound::Request {
+        req: Request {
+            id: next_id.fetch_add(1, Ordering::SeqCst),
+            prompt: tok.encode_clamped(prompt, max_prompt),
+            max_new_tokens: max_new,
+            arrival_s: 0.0, // stamped by the serving loop
+        },
+        conn: conn.clone(),
     })
 }
 
@@ -238,11 +338,47 @@ fn serve_loop(
     loop {
         let now = t0.elapsed().as_secs_f64();
         // ingest — a full queue pushes the id onto `batcher.rejected`,
-        // answered with every other rejection in the drain below
-        for mut inbound in queue.lock().unwrap().drain(..) {
-            inbound.req.arrival_s = now;
-            conns.insert(inbound.req.id, inbound.conn.clone());
-            let _ = batcher.submit(inbound.req);
+        // answered with every other rejection in the drain below.
+        // Control verbs are answered here, from the engine-owning
+        // thread, so stats reads never race a tick. Collected first:
+        // answering a slow client must not hold the reader queue lock.
+        let drained: Vec<Inbound> =
+            std::mem::take(&mut *queue.lock().unwrap());
+        for inbound in drained {
+            match inbound {
+                Inbound::Request { mut req, conn } => {
+                    req.arrival_s = now;
+                    conns.insert(req.id, conn);
+                    let _ = batcher.submit(req);
+                }
+                Inbound::Control { verb: Control::Stats, conn } => {
+                    let mut o = batcher
+                        .engine()
+                        .metrics()
+                        .snapshot()
+                        .to_json();
+                    o.set("uptime_s", Json::Num(now));
+                    write_line(&conn, &o);
+                }
+                Inbound::Control { verb: Control::TraceDump, conn } => {
+                    let mut o = Json::obj();
+                    match batcher.tracer() {
+                        Some(t) => o.set(
+                            "trace",
+                            Json::Str(t.dump_chrome_json()),
+                        ),
+                        None => o.set(
+                            "error",
+                            Json::Str(
+                                "tracing disabled (start the server \
+                                 with --trace-out)"
+                                    .into(),
+                            ),
+                        ),
+                    }
+                    write_line(&conn, &o);
+                }
+            }
         }
         // work
         batcher.admit(now);
@@ -292,6 +428,57 @@ fn serve_loop(
     }
 }
 
+/// Minimal HTTP responder for Prometheus scrapes: every request gets
+/// the full text exposition regardless of path, then the connection
+/// closes. No HTTP library is vendored; scrapers only need 200 + body.
+fn metrics_loop(
+    listener: TcpListener,
+    registry: Arc<OnceLock<Arc<MetricsRegistry>>>,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                stream
+                    .set_read_timeout(Some(
+                        std::time::Duration::from_millis(200),
+                    ))
+                    .ok();
+                // drain the request head up to the blank line; the
+                // verb and path don't change the answer
+                if let Ok(peer) = stream.try_clone() {
+                    let mut reader = BufReader::new(peer);
+                    let mut line = String::new();
+                    while let Ok(n) = reader.read_line(&mut line) {
+                        if n == 0 || line.trim().is_empty() {
+                            break;
+                        }
+                        line.clear();
+                    }
+                }
+                let body = match registry.get() {
+                    Some(r) => r.snapshot().to_prometheus(),
+                    None => "# engine still starting\n".to_string(),
+                };
+                let _ = write!(
+                    stream,
+                    "HTTP/1.1 200 OK\r\n\
+                     Content-Type: text/plain; version=0.0.4\r\n\
+                     Content-Length: {}\r\n\
+                     Connection: close\r\n\r\n{}",
+                    body.len(),
+                    body
+                );
+                let _ = stream.flush();
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
 fn write_line(conn: &Arc<Mutex<TcpStream>>, j: &Json) {
     if let Ok(mut s) = conn.lock() {
         let _ = writeln!(s, "{j}");
@@ -306,8 +493,8 @@ mod tests {
     use crate::model::ModelConfig;
     use std::io::{BufRead, BufReader, Write};
 
-    fn test_server() -> Server {
-        Server::start(ServerConfig {
+    fn test_config() -> ServerConfig {
+        ServerConfig {
             engine: EngineConfig {
                 model: ModelConfig::test_tiny(),
                 backend: AttentionBackend::Lookat { m: 4, k: 64 },
@@ -329,8 +516,13 @@ mod tests {
             },
             max_prompt_tokens: 48,
             addr: "127.0.0.1:0".into(),
-        })
-        .expect("server start")
+            metrics_addr: None,
+            trace_out: None,
+        }
+    }
+
+    fn test_server() -> Server {
+        Server::start(test_config()).expect("server start")
     }
 
     fn roundtrip(addr: std::net::SocketAddr, line: &str) -> Json {
@@ -401,6 +593,8 @@ mod tests {
             },
             max_prompt_tokens: 48,
             addr: "127.0.0.1:0".into(),
+            metrics_addr: None,
+            trace_out: None,
         })
         .expect("server start");
         let addr = server.local_addr;
@@ -449,5 +643,138 @@ mod tests {
         ids.dedup();
         assert_eq!(ids.len(), 4, "each client got a distinct request id");
         server.shutdown();
+    }
+
+    #[test]
+    fn stats_verb_reports_live_metrics() {
+        let server = test_server();
+        let resp = roundtrip(
+            server.local_addr,
+            r#"{"prompt": "warm the counters", "max_new_tokens": 3}"#,
+        );
+        assert!(resp.get("error").is_none(), "{resp}");
+        let stats = roundtrip(server.local_addr, r#"{"cmd": "stats"}"#);
+        let counters = stats.get("counters").expect("counters block");
+        assert!(
+            counters
+                .get("requests_completed")
+                .and_then(Json::as_f64)
+                .unwrap()
+                >= 1.0,
+            "{stats}"
+        );
+        assert!(
+            counters.get("decode_tokens").and_then(Json::as_f64).unwrap()
+                >= 3.0
+        );
+        assert!(
+            counters.get("scan_bytes").and_then(Json::as_f64).unwrap()
+                > 0.0
+        );
+        let gauges = stats.get("gauges").expect("gauges block");
+        assert!(gauges.get("blocks_total").is_some());
+        assert!(gauges.get("scratch_leases").is_some());
+        let hists = stats.get("histograms").expect("histograms block");
+        let ttft = hists.get("ttft_s").expect("ttft_s histogram");
+        assert!(
+            ttft.get("count").and_then(Json::as_f64).unwrap() >= 1.0
+        );
+        assert!(ttft.get("p50").is_some());
+        assert!(stats.get("uptime_s").is_some());
+
+        let bogus = roundtrip(server.local_addr, r#"{"cmd": "bogus"}"#);
+        assert!(bogus
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("unknown cmd"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn prometheus_endpoint_serves_text_exposition() {
+        let mut cfg = test_config();
+        cfg.metrics_addr = Some("127.0.0.1:0".into());
+        let server = Server::start(cfg).expect("server start");
+        let maddr = server.metrics_addr.expect("metrics sidecar bound");
+        let resp = roundtrip(
+            server.local_addr,
+            r#"{"prompt": "scrape me", "max_new_tokens": 2}"#,
+        );
+        assert!(resp.get("error").is_none(), "{resp}");
+        let mut s = TcpStream::connect(maddr).unwrap();
+        write!(s, "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        s.flush().unwrap();
+        let mut body = String::new();
+        use std::io::Read;
+        s.read_to_string(&mut body).unwrap();
+        assert!(body.starts_with("HTTP/1.1 200 OK"), "{body}");
+        assert!(
+            body.contains("lookat_requests_completed"),
+            "missing counter in exposition:\n{body}"
+        );
+        assert!(
+            body.contains("lookat_ttft_s_bucket"),
+            "missing histogram buckets in exposition:\n{body}"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn trace_dump_verb_and_shutdown_write_chrome_json() {
+        let path = std::env::temp_dir().join(format!(
+            "lookat_trace_test_{}.json",
+            std::process::id()
+        ));
+        let mut cfg = test_config();
+        cfg.trace_out = Some(path.to_string_lossy().into_owned());
+        let server = Server::start(cfg).expect("server start");
+        let resp = roundtrip(
+            server.local_addr,
+            r#"{"prompt": "leave a trace", "max_new_tokens": 3}"#,
+        );
+        assert!(resp.get("error").is_none(), "{resp}");
+        let dump =
+            roundtrip(server.local_addr, r#"{"cmd": "trace-dump"}"#);
+        let text = dump
+            .get("trace")
+            .and_then(Json::as_str)
+            .expect("trace payload")
+            .to_string();
+        let events = Json::parse(&text).expect("valid chrome json");
+        let names: Vec<String> = events
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(|e| {
+                e.get("name").and_then(Json::as_str).map(String::from)
+            })
+            .collect();
+        for expected in ["queued", "admitted", "finish", "decode_tick"] {
+            assert!(
+                names.iter().any(|n| n == expected),
+                "trace missing {expected}: {names:?}"
+            );
+        }
+        server.shutdown();
+        let on_disk = std::fs::read_to_string(&path)
+            .expect("trace file written on shutdown");
+        assert!(Json::parse(&on_disk)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .any(|e| {
+                e.get("name").and_then(Json::as_str) == Some("finish")
+            }));
+        let _ = std::fs::remove_file(&path);
+
+        // tracing disabled: the verb answers with an error, not a hang
+        let server2 = test_server();
+        let dump2 =
+            roundtrip(server2.local_addr, r#"{"cmd": "trace-dump"}"#);
+        assert!(dump2.get("error").is_some(), "{dump2}");
+        server2.shutdown();
     }
 }

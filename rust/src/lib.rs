@@ -64,6 +64,7 @@ pub mod model;
 pub mod pq;
 pub mod quant;
 pub mod runtime;
+pub mod telemetry;
 pub mod tensor;
 pub mod testkit;
 pub mod util;

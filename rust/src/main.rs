@@ -4,11 +4,14 @@
 //!   experiment <id>   regenerate a paper table/figure (table1..4,
 //!                     figure3, figure4, efficiency, all)
 //!   serve             run the serving coordinator over a synthetic trace
+//!   stats <addr>      query a running serve-tcp server's telemetry
 //!   info              print artifact + platform info
 //!
 //! Examples:
 //!   lookat experiment table1
 //!   lookat serve --backend lookat-4 --requests 16 --rate 4
+//!   lookat serve-tcp --metrics-addr 127.0.0.1:9091 --trace-out t.json
+//!   lookat stats 127.0.0.1:7070 --interval 2
 //!   lookat info
 
 use lookat::coordinator::{
@@ -166,6 +169,9 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 .opt("prefix-cache", "on",
                      "on|off: share identical full prompt-prefix \
                       blocks copy-on-write across sequences")
+                .opt("trace-out", "",
+                     "write a Chrome trace_event JSON of the run here \
+                      (open in Perfetto; empty = disabled)")
                 .opt("seed", "7", "rng seed");
             let a = cli.parse(&args[1..])?;
             let backend = parse_backend(a.get("backend"))?;
@@ -176,6 +182,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let swap = parse_on_off("swap", a.get("swap"))?;
             let prefix_cache =
                 parse_on_off("prefix-cache", a.get("prefix-cache"))?;
+            let trace_out = a.get("trace-out").to_string();
             let mut model = ModelConfig::gpt2_layer0();
             model.n_layer = a.get_usize("layers")?;
             let mut router = Router::build(RouterConfig {
@@ -208,9 +215,22 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 seed: a.get_u64("seed")?,
             })
             .generate();
+            let tracer = if trace_out.is_empty() {
+                None
+            } else {
+                let t = std::sync::Arc::new(
+                    lookat::telemetry::TraceRing::new(65536),
+                );
+                router.set_tracer(t.clone());
+                Some(t)
+            };
             let reqs = router.tokenize_trace(&trace);
             let report = router.serve_trace(reqs)?;
             println!("{}", report.pretty());
+            if let Some(t) = tracer {
+                std::fs::write(&trace_out, t.dump_chrome_json())?;
+                println!("trace written to {trace_out}");
+            }
             Ok(())
         }
         "serve-tcp" => {
@@ -236,6 +256,13 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 .opt("prefix-cache", "on",
                      "on|off: share identical full prompt-prefix \
                       blocks copy-on-write across sequences")
+                .opt("metrics-addr", "",
+                     "also serve Prometheus text metrics on this \
+                      HOST:PORT (empty = disabled)")
+                .opt("trace-out", "",
+                     "enable per-request tracing; Chrome trace_event \
+                      JSON written here on shutdown and served by the \
+                      trace-dump verb (empty = disabled)")
                 .opt("seed", "7", "rng seed");
             let a = cli.parse(&args[1..])?;
             let backend = parse_backend(a.get("backend"))?;
@@ -246,6 +273,15 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let swap = parse_on_off("swap", a.get("swap"))?;
             let prefix_cache =
                 parse_on_off("prefix-cache", a.get("prefix-cache"))?;
+            let opt_str = |s: &str| {
+                if s.is_empty() {
+                    None
+                } else {
+                    Some(s.to_string())
+                }
+            };
+            let metrics_addr = opt_str(a.get("metrics-addr"));
+            let trace_out = opt_str(a.get("trace-out"));
             let mut model = ModelConfig::gpt2_layer0();
             model.n_layer = a.get_usize("layers")?;
             let server = lookat::coordinator::Server::start(
@@ -271,17 +307,48 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     },
                     max_prompt_tokens: 120,
                     addr: a.get("addr").to_string(),
+                    metrics_addr,
+                    trace_out,
                 },
             )?;
             println!("listening on {}", server.local_addr);
+            if let Some(m) = server.metrics_addr {
+                println!("prometheus metrics on http://{m}/metrics");
+            }
             println!(
                 "protocol: one JSON per line, e.g. \
-                 {{\"prompt\": \"hi\", \"max_new_tokens\": 8}}"
+                 {{\"prompt\": \"hi\", \"max_new_tokens\": 8}}; \
+                 control verbs: {{\"cmd\": \"stats\"}}, \
+                 {{\"cmd\": \"trace-dump\"}}"
             );
             // serve until killed
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
+        }
+        "stats" => {
+            let cli = Cli::new("lookat stats",
+                               "query a serve-tcp server's telemetry")
+                .opt("interval", "0",
+                     "poll every N seconds, printing throughput deltas \
+                      (0 = print once and exit)")
+                .positional("addr", "server address, e.g. 127.0.0.1:7070");
+            let a = cli.parse(&args[1..])?;
+            let addr = a.positionals[0].clone();
+            let interval = a.get_f64("interval")?;
+            let mut prev: Option<lookat::util::json::Json> = None;
+            loop {
+                let snap = fetch_stats(&addr)?;
+                print_stats(&snap, prev.as_ref());
+                if interval <= 0.0 {
+                    break;
+                }
+                prev = Some(snap);
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    interval,
+                ));
+            }
+            Ok(())
         }
         "bench-check" => {
             let cli = Cli::new(
@@ -351,6 +418,125 @@ fn run(args: &[String]) -> anyhow::Result<()> {
     }
 }
 
+/// One stats round trip over the line protocol.
+fn fetch_stats(addr: &str) -> anyhow::Result<lookat::util::json::Json> {
+    use std::io::{BufRead, BufReader, Write};
+    let mut s = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    writeln!(s, "{{\"cmd\": \"stats\"}}")?;
+    s.flush()?;
+    let mut reader = BufReader::new(s);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    lookat::util::json::Json::parse(line.trim())
+        .map_err(|e| anyhow::anyhow!("bad stats response: {e}"))
+}
+
+/// Render a stats snapshot; with a previous snapshot, also print
+/// throughput rates over the elapsed window.
+fn print_stats(
+    snap: &lookat::util::json::Json,
+    prev: Option<&lookat::util::json::Json>,
+) {
+    use lookat::util::json::Json;
+    let num = |block: &str, key: &str| -> f64 {
+        snap.get(block)
+            .and_then(|b| b.get(key))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    let pct = |name: &str, q: &str| -> String {
+        snap.get("histograms")
+            .and_then(|h| h.get(name))
+            .and_then(|h| h.get(q))
+            .and_then(Json::as_f64)
+            .map_or_else(|| "n/a".into(), |v| format!("{:.1}ms", v * 1e3))
+    };
+    let uptime = snap
+        .get("uptime_s")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    println!("uptime   {uptime:.1}s");
+    println!(
+        "requests submitted={} completed={} rejected={} queue={} \
+         active={} preempt={} swap={}/{} prefix_hits={}",
+        num("counters", "requests_submitted"),
+        num("counters", "requests_completed"),
+        num("counters", "requests_rejected"),
+        num("gauges", "queue_depth"),
+        num("gauges", "active_seqs"),
+        num("counters", "preemptions"),
+        num("counters", "swap_outs"),
+        num("counters", "swap_ins"),
+        num("counters", "prefix_hits"),
+    );
+    println!(
+        "tokens   decode={} prefill={} ticks={} scan_bytes={:.3e}",
+        num("counters", "decode_tokens"),
+        num("counters", "prefill_tokens"),
+        num("counters", "ticks"),
+        num("counters", "scan_bytes"),
+    );
+    println!(
+        "cache    blocks={}/{} free={} shared={} key_bytes={:.3e} \
+         value_bytes={:.3e} swapped_seqs={} swap_bytes={:.3e}",
+        num("gauges", "blocks_used"),
+        num("gauges", "blocks_total"),
+        num("gauges", "blocks_free"),
+        num("gauges", "shared_blocks"),
+        num("gauges", "key_cache_bytes"),
+        num("gauges", "value_cache_bytes"),
+        num("gauges", "swapped_seqs"),
+        num("gauges", "swap_resident_bytes"),
+    );
+    println!(
+        "scratch  leases={} fresh={} zeroed={} held_bytes={:.3e} \
+         peak_bytes={:.3e}",
+        num("gauges", "scratch_leases"),
+        num("gauges", "scratch_fresh"),
+        num("gauges", "scratch_zeroed"),
+        num("gauges", "scratch_held_bytes"),
+        num("gauges", "scratch_peak_bytes"),
+    );
+    println!(
+        "latency  ttft p50={}/p90={}/p99={}  itl p50={}/p99={}  \
+         tick p50={}/p99={}",
+        pct("ttft_s", "p50"),
+        pct("ttft_s", "p90"),
+        pct("ttft_s", "p99"),
+        pct("itl_s", "p50"),
+        pct("itl_s", "p99"),
+        pct("tick_s", "p50"),
+        pct("tick_s", "p99"),
+    );
+    if let Some(prev) = prev {
+        let pnum = |block: &str, key: &str| -> f64 {
+            prev.get(block)
+                .and_then(|b| b.get(key))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0)
+        };
+        let dt = (uptime
+            - prev
+                .get("uptime_s")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0))
+        .max(1e-9);
+        println!(
+            "rates    decode_tok/s={:.1} scan_bytes/s={:.3e} \
+             ticks/s={:.1}",
+            (num("counters", "decode_tokens")
+                - pnum("counters", "decode_tokens"))
+                / dt,
+            (num("counters", "scan_bytes")
+                - pnum("counters", "scan_bytes"))
+                / dt,
+            (num("counters", "ticks") - pnum("counters", "ticks")) / dt,
+        );
+    }
+    println!();
+}
+
 fn print_usage() {
     println!(
         "lookat — LOOKAT paper reproduction (PQ+ADC KV-cache compression)
@@ -361,10 +547,15 @@ USAGE:
   lookat serve [--backend B] [--value-backend V] [--requests N]
                [--rate R] [--prefill-chunk T] [--scheduler fcfs|preempt]
                [--pipeline on|off] [--swap on|off] [--prefix-cache on|off]
+               [--trace-out FILE]
   lookat serve-tcp [--backend B] [--value-backend V] [--addr HOST:PORT]
                    [--prefill-chunk T] [--scheduler fcfs|preempt]
                    [--pipeline on|off] [--swap on|off]
-                   [--prefix-cache on|off]
+                   [--prefix-cache on|off] [--metrics-addr HOST:PORT]
+                   [--trace-out FILE]
+  lookat stats <addr> [--interval S]   query a serve-tcp server's
+                                       telemetry (counters, gauges,
+                                       latency percentiles)
   lookat bench-check --old PREV.json --new CUR.json [--max-regress F]
   lookat info"
     );

@@ -1,0 +1,418 @@
+//! Lock-free log-spaced histograms for latency and occupancy metrics.
+//!
+//! `LogHistogram` is a fixed array of atomic bucket counters with
+//! geometrically spaced bounds: bucket `i` covers `[lo·r^i, lo·r^(i+1))`
+//! (bucket 0 additionally absorbs everything below `lo`, the last bucket
+//! everything above the top bound). Recording is a single relaxed
+//! `fetch_add` — no locks, no allocation — so the serving hot path can
+//! observe per-tick and per-token latencies for free.
+//!
+//! Snapshots are plain `u64` vectors that can be merged across
+//! registries (same geometry required) and queried for quantiles: the
+//! extracted percentile is the geometric midpoint of the bucket holding
+//! the rank-th smallest sample, i.e. always within one bucket width of
+//! the exact order statistic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Fixed-point scale used to accumulate the running sum atomically:
+/// micro-units (µs for seconds-valued histograms).
+const SUM_SCALE: f64 = 1e6;
+
+pub struct LogHistogram {
+    lo: f64,
+    ratio: f64,
+    /// Cached 1/ln(ratio) so bucket indexing is one ln + one multiply.
+    inv_ln_ratio: f64,
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    /// Sum of observed values in fixed-point micro-units.
+    sum_micros: AtomicU64,
+}
+
+impl LogHistogram {
+    /// `n` buckets spanning `[lo, lo·ratio^n)`; out-of-range samples
+    /// clamp into the first/last bucket.
+    pub fn new(lo: f64, ratio: f64, n: usize) -> Self {
+        assert!(lo > 0.0 && ratio > 1.0 && n > 0, "bad histogram geometry");
+        let buckets = (0..n).map(|_| AtomicU64::new(0)).collect();
+        LogHistogram {
+            lo,
+            ratio,
+            inv_ln_ratio: 1.0 / ratio.ln(),
+            buckets,
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+        }
+    }
+
+    /// Geometry used for latency metrics (seconds): 64 √2-spaced buckets
+    /// from 1µs, topping out around 4300s — decode ticks, TTFT and
+    /// end-to-end latencies all land well inside.
+    pub fn latency() -> Self {
+        LogHistogram::new(1e-6, std::f64::consts::SQRT_2, 64)
+    }
+
+    /// Geometry for small-integer distributions (batch occupancy, queue
+    /// depth): 32 √2-spaced buckets from 1, topping out at 65536.
+    pub fn occupancy() -> Self {
+        LogHistogram::new(1.0, std::f64::consts::SQRT_2, 32)
+    }
+
+    fn bucket_index(&self, x: f64) -> usize {
+        // NaN fails the comparison and lands in bucket 0; +inf saturates
+        // through the float-to-int cast into the last bucket.
+        if !(x > self.lo) {
+            return 0;
+        }
+        let n = self.buckets.len();
+        let mut i =
+            (((x / self.lo).ln() * self.inv_ln_ratio) as usize).min(n - 1);
+        // ln() rounding can land an exact boundary one bucket off (e.g.
+        // ln(128)/ln(2) = 6.999…); nudge against the true geometric
+        // bounds so `[lo·r^i, lo·r^(i+1))` holds exactly.
+        if i + 1 < n && x >= self.lo * self.ratio.powi(i as i32 + 1) {
+            i += 1;
+        } else if x < self.lo * self.ratio.powi(i as i32) {
+            i -= 1;
+        }
+        i
+    }
+
+    /// Record one sample. Relaxed atomics only; safe from any thread.
+    pub fn observe(&self, x: f64) {
+        let i = self.bucket_index(x);
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        if x.is_finite() && x > 0.0 {
+            let fp = (x * SUM_SCALE) as u64;
+            self.sum_micros.fetch_add(fp, Ordering::Relaxed);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Copy the current state out without disturbing it.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            lo: self.lo,
+            ratio: self.ratio,
+            buckets: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum_micros.load(Ordering::Relaxed) as f64 / SUM_SCALE,
+        }
+    }
+
+    /// Drain: snapshot then reset, so per-run consumers (ServingReport)
+    /// see only their own interval while the live registry stays
+    /// cumulative for anyone polling `stats`.
+    pub fn take(&self) -> HistogramSnapshot {
+        let buckets: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.swap(0, Ordering::Relaxed))
+            .collect();
+        let drained: u64 = buckets.iter().sum();
+        // `count` may transiently disagree with the bucket sum if an
+        // observe() races the drain; derive count from what we actually
+        // took and subtract it, so nothing is double-counted or lost.
+        self.count.fetch_sub(drained, Ordering::Relaxed);
+        let sum = self.sum_micros.swap(0, Ordering::Relaxed) as f64 / SUM_SCALE;
+        HistogramSnapshot {
+            lo: self.lo,
+            ratio: self.ratio,
+            buckets,
+            count: drained,
+            sum,
+        }
+    }
+}
+
+impl std::fmt::Debug for LogHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LogHistogram")
+            .field("lo", &self.lo)
+            .field("ratio", &self.ratio)
+            .field("n", &self.buckets.len())
+            .field("count", &self.count())
+            .finish()
+    }
+}
+
+/// Point-in-time copy of a `LogHistogram`: plain data, mergeable,
+/// queryable for percentiles.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    pub lo: f64,
+    pub ratio: f64,
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl HistogramSnapshot {
+    /// Empty snapshot with latency geometry (for default reports).
+    pub fn empty_latency() -> Self {
+        LogHistogram::latency().snapshot()
+    }
+
+    pub fn bucket_lo(&self, i: usize) -> f64 {
+        self.lo * self.ratio.powi(i as i32)
+    }
+
+    pub fn bucket_hi(&self, i: usize) -> f64 {
+        self.lo * self.ratio.powi(i as i32 + 1)
+    }
+
+    /// Merge another snapshot in (same geometry required). Counts and
+    /// sums add; this is the shard-combining primitive.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        assert!(
+            self.buckets.len() == other.buckets.len()
+                && (self.lo - other.lo).abs() < 1e-12
+                && (self.ratio - other.ratio).abs() < 1e-12,
+            "cannot merge histograms with different geometry"
+        );
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// Quantile in [0,1]. Returns the geometric midpoint of the bucket
+    /// containing the `ceil(q·count)`-th smallest sample, or `None` when
+    /// empty — callers use that to render `n/a` / omit JSON keys.
+    pub fn percentile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(self.bucket_lo(i) * self.ratio.sqrt());
+            }
+        }
+        // Unreachable when counts are consistent; clamp to the top.
+        Some(self.bucket_hi(self.buckets.len() - 1))
+    }
+
+    pub fn p50(&self) -> Option<f64> {
+        self.percentile(0.50)
+    }
+
+    pub fn p90(&self) -> Option<f64> {
+        self.percentile(0.90)
+    }
+
+    pub fn p99(&self) -> Option<f64> {
+        self.percentile(0.99)
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.count == 0 {
+            None
+        } else {
+            Some(self.sum / self.count as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::util::stats::percentile_sorted;
+    use std::sync::Arc;
+
+    #[test]
+    fn bucket_boundaries_land_in_expected_buckets() {
+        let h = LogHistogram::new(1.0, 2.0, 8);
+        // Exactly on a boundary belongs to the bucket it opens; just
+        // below stays in the previous one.
+        for (x, want) in [
+            (0.5, 0),   // below lo clamps to bucket 0
+            (1.0, 0),   // lo itself
+            (1.99, 0),  // just under the first boundary
+            (2.0, 1),   // boundary opens bucket 1
+            (4.0, 2),
+            (127.9, 6),
+            (128.0, 7),
+            (1e9, 7),   // above the top clamps to the last bucket
+        ] {
+            h.observe(x);
+            let snap = h.snapshot();
+            let hot: Vec<usize> = snap
+                .buckets
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(|(i, _)| i)
+                .collect();
+            assert!(
+                hot.contains(&want),
+                "x={x} expected bucket {want}, hot buckets {hot:?}"
+            );
+            // Drain between probes so each sample is checked alone.
+            h.take();
+        }
+    }
+
+    #[test]
+    fn boundary_indexing_is_monotone_across_the_range() {
+        let h = LogHistogram::latency();
+        let mut last = 0usize;
+        let mut x = 1e-7;
+        while x < 1e4 {
+            let i = h.bucket_index(x);
+            assert!(i >= last, "bucket index regressed at x={x}");
+            last = i;
+            x *= 1.11;
+        }
+        assert_eq!(h.bucket_index(f64::NAN), 0);
+        assert_eq!(h.bucket_index(f64::INFINITY), 63);
+    }
+
+    #[test]
+    fn merge_equals_observing_everything_in_one_histogram() {
+        let mut rng = Pcg32::seed(0x7e1e_0001);
+        let a = LogHistogram::latency();
+        let b = LogHistogram::latency();
+        let all = LogHistogram::latency();
+        for i in 0..4000 {
+            let x = 10f64.powf(rng.next_f64() * 6.0 - 5.5); // 3e-6 .. 3e0
+            if i % 2 == 0 {
+                a.observe(x);
+            } else {
+                b.observe(x);
+            }
+            all.observe(x);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        let whole = all.snapshot();
+        assert_eq!(merged.buckets, whole.buckets);
+        assert_eq!(merged.count, whole.count);
+        assert!((merged.sum - whole.sum).abs() < 1e-6 * whole.sum.max(1.0));
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(merged.percentile(q), whole.percentile(q));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different geometry")]
+    fn merge_rejects_mismatched_geometry() {
+        let mut a = LogHistogram::latency().snapshot();
+        let b = LogHistogram::occupancy().snapshot();
+        a.merge(&b);
+    }
+
+    #[test]
+    fn percentiles_match_sorted_vec_oracle_within_one_bucket() {
+        let mut rng = Pcg32::seed(0x7e1e_0002);
+        let h = LogHistogram::latency();
+        let mut samples: Vec<f64> = Vec::new();
+        for _ in 0..5000 {
+            // Mixture: a log-uniform body plus a heavy tail, so the
+            // quantiles cross many buckets.
+            let base = 10f64.powf(rng.next_f64() * 3.0 - 4.0); // 1e-4..1e-1
+            let x = if rng.next_f64() < 0.05 { base * 50.0 } else { base };
+            h.observe(x);
+            samples.push(x);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let snap = h.snapshot();
+        for q in [0.5, 0.9, 0.99] {
+            // Oracle order statistic under the same rank rule the
+            // histogram uses; the histogram must land in its bucket.
+            let rank = ((q * samples.len() as f64).ceil() as usize)
+                .clamp(1, samples.len());
+            let exact = samples[rank - 1];
+            let got = snap.percentile(q).unwrap();
+            let i = snap
+                .buckets
+                .iter()
+                .scan(0u64, |acc, &c| {
+                    *acc += c;
+                    Some(*acc)
+                })
+                .position(|c| c >= rank as u64)
+                .unwrap();
+            assert!(
+                exact >= snap.bucket_lo(i) * 0.999
+                    && exact <= snap.bucket_hi(i) * 1.001,
+                "q={q}: oracle {exact} outside bucket [{}, {})",
+                snap.bucket_lo(i),
+                snap.bucket_hi(i)
+            );
+            let width = snap.bucket_hi(i) - snap.bucket_lo(i);
+            assert!(
+                (got - exact).abs() <= width,
+                "q={q}: hist {got} vs oracle {exact}, bucket width {width}"
+            );
+            // And the interpolating library percentile stays within a
+            // neighboring bucket of the histogram estimate.
+            let interp = percentile_sorted(&samples, q);
+            assert!(
+                interp >= snap.bucket_lo(i.saturating_sub(1))
+                    && interp <= snap.bucket_hi((i + 1).min(snap.buckets.len() - 1)),
+                "q={q}: interpolated oracle {interp} more than one bucket away"
+            );
+        }
+    }
+
+    #[test]
+    fn multi_thread_hammer_loses_nothing() {
+        let h = Arc::new(LogHistogram::latency());
+        let threads = 8;
+        let per = 20_000u64;
+        let mut joins = Vec::new();
+        for t in 0..threads {
+            let h = Arc::clone(&h);
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Pcg32::seed(0x4a44 + t as u64);
+                for _ in 0..per {
+                    h.observe(1e-5 * (1.0 + rng.next_f64() * 1e4));
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count, threads as u64 * per);
+        assert_eq!(snap.buckets.iter().sum::<u64>(), threads as u64 * per);
+    }
+
+    #[test]
+    fn take_drains_and_resets() {
+        let h = LogHistogram::latency();
+        for i in 1..=100 {
+            h.observe(i as f64 * 1e-4);
+        }
+        let first = h.take();
+        assert_eq!(first.count, 100);
+        assert!(first.sum > 0.0);
+        let second = h.take();
+        assert_eq!(second.count, 0);
+        assert_eq!(second.sum, 0.0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(second.percentile(0.5), None);
+    }
+
+    #[test]
+    fn empty_percentiles_are_none() {
+        let snap = LogHistogram::latency().snapshot();
+        assert_eq!(snap.p50(), None);
+        assert_eq!(snap.p99(), None);
+        assert_eq!(snap.mean(), None);
+    }
+}

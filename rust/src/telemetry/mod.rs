@@ -1,0 +1,25 @@
+//! Serving telemetry: live metrics registry, latency histograms, and a
+//! per-request event tracer.
+//!
+//! The paper's thesis is that LOOKAT turns attention from memory-bound
+//! to compute-bound; this module is how a *live* serving process proves
+//! it. The [`MetricsRegistry`] is published into by the batcher (queue
+//! depth, occupancy, TTFT/ITL/tick histograms), the engine (token
+//! counters, ADC scan bytes, per-phase timer deltas, cache/swap/arena
+//! gauges), and is drained per run into `ServingReport` or served live
+//! via the `{"cmd":"stats"}` verb and the `--metrics-addr` Prometheus
+//! endpoint. The [`TraceRing`] records per-request span events as
+//! Chrome `trace_event` JSON for Perfetto.
+//!
+//! Everything here is observability-only and lock-free on the hot
+//! path: relaxed atomics, fixed preallocated buffers, no allocation per
+//! event. Note this is distinct from `crate::metrics`, which holds the
+//! paper-fidelity *quality* metrics (cosine error, KL, overlap).
+
+pub mod histogram;
+pub mod registry;
+pub mod trace;
+
+pub use histogram::{HistogramSnapshot, LogHistogram};
+pub use registry::{Ctr, Gauge, Hist, MetricsRegistry, MetricsSnapshot};
+pub use trace::{TraceEvent, TraceKind, TraceRing};

@@ -1,0 +1,387 @@
+//! Lock-free metrics registry for the serving stack.
+//!
+//! One `MetricsRegistry` lives inside each `Engine`; the batcher,
+//! router and TCP server reach it through `Engine::metrics()`. Every
+//! instrument is enum-indexed into a fixed atomic array, so publishing
+//! is a relaxed `fetch_add`/`store` with no locks, no hashing and no
+//! allocation — cheap enough to run unconditionally on the decode hot
+//! path. Snapshots are plain data: mergeable across registries and
+//! renderable as JSON (the `{"cmd":"stats"}` verb) or Prometheus text
+//! exposition (the `--metrics-addr` endpoint).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+use super::histogram::{HistogramSnapshot, LogHistogram};
+
+macro_rules! metric_enum {
+    ($(#[$meta:meta])* $name:ident { $($variant:ident => $label:literal),+ $(,)? }) => {
+        $(#[$meta])*
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        #[repr(usize)]
+        pub enum $name {
+            $($variant),+
+        }
+
+        impl $name {
+            pub const ALL: &'static [$name] = &[$($name::$variant),+];
+
+            pub fn name(self) -> &'static str {
+                match self {
+                    $($name::$variant => $label),+
+                }
+            }
+        }
+    };
+}
+
+metric_enum!(
+    /// Monotonic counters (cumulative since engine construction).
+    Ctr {
+        RequestsSubmitted => "requests_submitted",
+        RequestsCompleted => "requests_completed",
+        RequestsRejected => "requests_rejected",
+        Preemptions => "preemptions",
+        SwapOuts => "swap_outs",
+        SwapIns => "swap_ins",
+        SwapBytesOut => "swap_bytes_out",
+        SwapBytesIn => "swap_bytes_in",
+        PrefixHits => "prefix_hits",
+        PrefixTokensReused => "prefix_tokens_reused",
+        DecodeTokens => "decode_tokens",
+        PrefillTokens => "prefill_tokens",
+        Ticks => "ticks",
+        ScanBytes => "scan_bytes",
+        PhaseLutBuildNs => "phase_lut_build_ns",
+        PhaseScanNs => "phase_scan_ns",
+        PhaseValueDecodeNs => "phase_value_decode_ns",
+        PhaseQkvNs => "phase_qkv_ns",
+        PhaseMlpNs => "phase_mlp_ns",
+    }
+);
+
+metric_enum!(
+    /// Point-in-time gauges, re-sampled once per scheduler tick.
+    Gauge {
+        QueueDepth => "queue_depth",
+        ActiveSeqs => "active_seqs",
+        SwappedSeqs => "swapped_seqs",
+        BlocksFree => "blocks_free",
+        BlocksUsed => "blocks_used",
+        BlocksTotal => "blocks_total",
+        SharedBlocks => "shared_blocks",
+        KeyCacheBytes => "key_cache_bytes",
+        ValueCacheBytes => "value_cache_bytes",
+        SwapResidentBytes => "swap_resident_bytes",
+        ScratchLeases => "scratch_leases",
+        ScratchFresh => "scratch_fresh",
+        ScratchZeroed => "scratch_zeroed",
+        ScratchHeldBytes => "scratch_held_bytes",
+        ScratchPeakBytes => "scratch_peak_bytes",
+    }
+);
+
+metric_enum!(
+    /// Histograms. Latency instruments record seconds into log-spaced
+    /// buckets; `BatchOccupancy` records sequences per tick.
+    Hist {
+        TtftS => "ttft_s",
+        ItlS => "itl_s",
+        E2eS => "e2e_s",
+        TickS => "tick_s",
+        BatchOccupancy => "batch_occupancy",
+    }
+);
+
+impl Hist {
+    fn make(self) -> LogHistogram {
+        match self {
+            Hist::BatchOccupancy => LogHistogram::occupancy(),
+            _ => LogHistogram::latency(),
+        }
+    }
+}
+
+pub struct MetricsRegistry {
+    counters: Box<[AtomicU64]>,
+    gauges: Box<[AtomicU64]>,
+    hists: Box<[LogHistogram]>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        MetricsRegistry {
+            counters: (0..Ctr::ALL.len()).map(|_| AtomicU64::new(0)).collect(),
+            gauges: (0..Gauge::ALL.len()).map(|_| AtomicU64::new(0)).collect(),
+            hists: Hist::ALL.iter().map(|h| h.make()).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self, c: Ctr, by: u64) {
+        self.counters[c as usize].fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, c: Ctr) -> u64 {
+        self.counters[c as usize].load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn set(&self, g: Gauge, v: u64) {
+        self.gauges[g as usize].store(v, Ordering::Relaxed);
+    }
+
+    pub fn gauge(&self, g: Gauge) -> u64 {
+        self.gauges[g as usize].load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn observe(&self, h: Hist, x: f64) {
+        self.hists[h as usize].observe(x);
+    }
+
+    pub fn hist(&self, h: Hist) -> &LogHistogram {
+        &self.hists[h as usize]
+    }
+
+    /// Drain one histogram (snapshot + reset). Used by per-run report
+    /// builders; the counters and gauges stay cumulative.
+    pub fn take_hist(&self, h: Hist) -> HistogramSnapshot {
+        self.hists[h as usize].take()
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: Ctr::ALL.iter().map(|&c| (c.name(), self.counter(c))).collect(),
+            gauges: Gauge::ALL.iter().map(|&g| (g.name(), self.gauge(g))).collect(),
+            hists: Hist::ALL
+                .iter()
+                .map(|&h| (h.name(), self.hists[h as usize].snapshot()))
+                .collect(),
+        }
+    }
+}
+
+impl std::fmt::Debug for MetricsRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MetricsRegistry")
+            .field("counters", &Ctr::ALL.len())
+            .field("gauges", &Gauge::ALL.len())
+            .field("hists", &Hist::ALL.len())
+            .finish()
+    }
+}
+
+/// Plain-data copy of the whole registry, renderable and mergeable.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(&'static str, u64)>,
+    pub gauges: Vec<(&'static str, u64)>,
+    pub hists: Vec<(&'static str, HistogramSnapshot)>,
+}
+
+impl MetricsSnapshot {
+    /// Combine a peer snapshot (e.g. another shard): counters and
+    /// histogram buckets add; gauges add too, since each shard's gauge
+    /// describes disjoint resources (its own blocks, queue, arenas).
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        for ((_, a), (_, b)) in self.counters.iter_mut().zip(&other.counters) {
+            *a += b;
+        }
+        for ((_, a), (_, b)) in self.gauges.iter_mut().zip(&other.gauges) {
+            *a += b;
+        }
+        for ((_, a), (_, b)) in self.hists.iter_mut().zip(&other.hists) {
+            a.merge(b);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (name, v) in &self.counters {
+            counters.set(name, Json::Num(*v as f64));
+        }
+        let mut gauges = Json::obj();
+        for (name, v) in &self.gauges {
+            gauges.set(name, Json::Num(*v as f64));
+        }
+        let mut hists = Json::obj();
+        for (name, snap) in &self.hists {
+            let mut h = Json::obj();
+            h.set("count", Json::Num(snap.count as f64));
+            h.set("sum", Json::Num(snap.sum));
+            if let (Some(p50), Some(p90), Some(p99)) =
+                (snap.p50(), snap.p90(), snap.p99())
+            {
+                h.set("p50", Json::Num(p50));
+                h.set("p90", Json::Num(p90));
+                h.set("p99", Json::Num(p99));
+            }
+            hists.set(name, h);
+        }
+        let mut out = Json::obj();
+        out.set("counters", counters);
+        out.set("gauges", gauges);
+        out.set("histograms", hists);
+        out
+    }
+
+    /// Prometheus text exposition (version 0.0.4): counters, gauges,
+    /// and cumulative-`le` histogram series under a `lookat_` prefix.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            out.push_str(&format!(
+                "# TYPE lookat_{name} counter\nlookat_{name} {v}\n"
+            ));
+        }
+        for (name, v) in &self.gauges {
+            out.push_str(&format!(
+                "# TYPE lookat_{name} gauge\nlookat_{name} {v}\n"
+            ));
+        }
+        for (name, snap) in &self.hists {
+            out.push_str(&format!("# TYPE lookat_{name} histogram\n"));
+            let mut cum = 0u64;
+            for (i, &c) in snap.buckets.iter().enumerate() {
+                cum += c;
+                out.push_str(&format!(
+                    "lookat_{name}_bucket{{le=\"{:.6e}\"}} {cum}\n",
+                    snap.bucket_hi(i)
+                ));
+            }
+            out.push_str(&format!(
+                "lookat_{name}_bucket{{le=\"+Inf\"}} {}\n",
+                snap.count
+            ));
+            out.push_str(&format!("lookat_{name}_sum {}\n", snap.sum));
+            out.push_str(&format!("lookat_{name}_count {}\n", snap.count));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counters_and_gauges_round_trip() {
+        let r = MetricsRegistry::new();
+        r.inc(Ctr::DecodeTokens, 5);
+        r.inc(Ctr::DecodeTokens, 3);
+        r.set(Gauge::QueueDepth, 7);
+        r.set(Gauge::QueueDepth, 2);
+        assert_eq!(r.counter(Ctr::DecodeTokens), 8);
+        assert_eq!(r.gauge(Gauge::QueueDepth), 2);
+        assert_eq!(r.counter(Ctr::Preemptions), 0);
+    }
+
+    #[test]
+    fn snapshot_json_has_every_instrument() {
+        let r = MetricsRegistry::new();
+        r.inc(Ctr::Ticks, 1);
+        r.observe(Hist::TickS, 0.01);
+        let j = r.snapshot().to_json();
+        for c in Ctr::ALL {
+            assert!(
+                j.get("counters").and_then(|o| o.get(c.name())).is_some(),
+                "missing counter {}",
+                c.name()
+            );
+        }
+        for g in Gauge::ALL {
+            assert!(
+                j.get("gauges").and_then(|o| o.get(g.name())).is_some(),
+                "missing gauge {}",
+                g.name()
+            );
+        }
+        for h in Hist::ALL {
+            assert!(
+                j.get("histograms").and_then(|o| o.get(h.name())).is_some(),
+                "missing histogram {}",
+                h.name()
+            );
+        }
+        // Non-empty histograms expose percentiles; empty ones omit them.
+        let tick = j.get("histograms").unwrap().get("tick_s").unwrap();
+        assert!(tick.get("p50").is_some());
+        let ttft = j.get("histograms").unwrap().get("ttft_s").unwrap();
+        assert!(ttft.get("p50").is_none());
+        assert_eq!(ttft.get("count").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed() {
+        let r = MetricsRegistry::new();
+        r.inc(Ctr::ScanBytes, 1 << 20);
+        r.set(Gauge::BlocksFree, 42);
+        for i in 1..=100 {
+            r.observe(Hist::TtftS, i as f64 * 1e-3);
+        }
+        let text = r.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE lookat_scan_bytes counter"));
+        assert!(text.contains("lookat_scan_bytes 1048576"));
+        assert!(text.contains("lookat_blocks_free 42"));
+        assert!(text.contains("# TYPE lookat_ttft_s histogram"));
+        assert!(text.contains("lookat_ttft_s_bucket{le=\"+Inf\"} 100"));
+        assert!(text.contains("lookat_ttft_s_count 100"));
+        // `le` bounds must be cumulative and end at the total count.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("lookat_ttft_s_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "non-cumulative bucket line: {line}");
+            last = v;
+        }
+        assert_eq!(last, 100);
+    }
+
+    #[test]
+    fn snapshot_merge_adds_everything() {
+        let a = MetricsRegistry::new();
+        let b = MetricsRegistry::new();
+        a.inc(Ctr::DecodeTokens, 10);
+        b.inc(Ctr::DecodeTokens, 32);
+        a.set(Gauge::BlocksUsed, 4);
+        b.set(Gauge::BlocksUsed, 6);
+        a.observe(Hist::ItlS, 0.002);
+        b.observe(Hist::ItlS, 0.004);
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        let decode = m.counters.iter().find(|(n, _)| *n == "decode_tokens").unwrap();
+        assert_eq!(decode.1, 42);
+        let used = m.gauges.iter().find(|(n, _)| *n == "blocks_used").unwrap();
+        assert_eq!(used.1, 10);
+        let itl = &m.hists.iter().find(|(n, _)| *n == "itl_s").unwrap().1;
+        assert_eq!(itl.count, 2);
+    }
+
+    #[test]
+    fn registry_is_shareable_across_threads() {
+        let r = Arc::new(MetricsRegistry::new());
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let r = Arc::clone(&r);
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    r.inc(Ctr::DecodeTokens, 1);
+                    r.observe(Hist::ItlS, 1e-3);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(r.counter(Ctr::DecodeTokens), 80_000);
+        assert_eq!(r.hist(Hist::ItlS).count(), 80_000);
+    }
+}

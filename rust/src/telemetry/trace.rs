@@ -1,0 +1,271 @@
+//! Per-request event tracer: a fixed ring of atomic slots recording
+//! scheduler/engine span events, dumpable as Chrome `trace_event` JSON
+//! (load the file in Perfetto or `chrome://tracing`).
+//!
+//! Recording writes four relaxed `AtomicU64` stores plus one
+//! `fetch_add` on the head — no locks, no allocation — so the tracer
+//! can stay attached on the decode hot path. The ring overwrites the
+//! oldest events once full; `dump_chrome_json` emits whatever is still
+//! resident, sorted by timestamp.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// What happened. Stored in the low 32 bits of the packed word.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u32)]
+pub enum TraceKind {
+    /// Request entered the queue (arg = prompt tokens).
+    Queued = 0,
+    /// Scheduler admitted it (arg = tokens reused from the prefix cache).
+    Admitted = 1,
+    /// One chunked-prefill span ran (arg = chunk tokens; duration = tick).
+    PrefillChunk = 2,
+    /// One decode step ran (arg = batch occupancy; duration = tick).
+    DecodeTick = 3,
+    /// Victim preempted with its blocks freed (arg = blocks released).
+    Preempt = 4,
+    /// Victim preempted to the swap tier (arg = bytes written out).
+    SwapOut = 5,
+    /// Swapped sequence restored (arg = blocks re-allocated).
+    SwapIn = 6,
+    /// Request finished (arg = generated tokens).
+    Finish = 7,
+    /// Request rejected by admission control (arg = prompt tokens).
+    Rejected = 8,
+}
+
+impl TraceKind {
+    fn from_u32(v: u32) -> Option<TraceKind> {
+        match v {
+            0 => Some(TraceKind::Queued),
+            1 => Some(TraceKind::Admitted),
+            2 => Some(TraceKind::PrefillChunk),
+            3 => Some(TraceKind::DecodeTick),
+            4 => Some(TraceKind::Preempt),
+            5 => Some(TraceKind::SwapOut),
+            6 => Some(TraceKind::SwapIn),
+            7 => Some(TraceKind::Finish),
+            8 => Some(TraceKind::Rejected),
+            _ => None,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            TraceKind::Queued => "queued",
+            TraceKind::Admitted => "admitted",
+            TraceKind::PrefillChunk => "prefill_chunk",
+            TraceKind::DecodeTick => "decode_tick",
+            TraceKind::Preempt => "preempt",
+            TraceKind::SwapOut => "swap_out",
+            TraceKind::SwapIn => "swap_in",
+            TraceKind::Finish => "finish",
+            TraceKind::Rejected => "rejected",
+        }
+    }
+
+    /// Span events render as Chrome "X" (complete) events with a
+    /// duration; the rest are "i" (instant) marks.
+    fn is_span(self) -> bool {
+        matches!(self, TraceKind::PrefillChunk | TraceKind::DecodeTick)
+    }
+}
+
+/// One recorded event, unpacked.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub ts_us: u64,
+    pub seq: u64,
+    pub dur_us: u64,
+    pub kind: TraceKind,
+    pub arg: u32,
+}
+
+const WORDS: usize = 4;
+
+/// Lock-free single-writer ring. All serving events are recorded from
+/// the serving-loop thread, so slots cannot interleave; readers only
+/// run `dump` from that same thread (the `trace-dump` verb is answered
+/// by the serve loop).
+pub struct TraceRing {
+    head: AtomicU64,
+    /// `capacity * WORDS` atomics: ts_us, seq, dur_us, kind|arg<<32.
+    slots: Box<[AtomicU64]>,
+    capacity: usize,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(16);
+        TraceRing {
+            head: AtomicU64::new(0),
+            slots: (0..capacity * WORDS).map(|_| AtomicU64::new(0)).collect(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Total events ever recorded (>= resident count once wrapped).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Record an event. `ts_s` is seconds on the serving clock; seq is
+    /// the request id (0 for engine-wide events). `arg` is clamped to
+    /// 31 bits — bit 63 of the packed word is the VALID flag.
+    pub fn record(&self, ts_s: f64, seq: u64, kind: TraceKind, dur_s: f64, arg: u32) {
+        let i = self.head.fetch_add(1, Ordering::Relaxed) as usize % self.capacity;
+        let base = i * WORDS;
+        let ts_us = (ts_s.max(0.0) * 1e6) as u64;
+        let dur_us = (dur_s.max(0.0) * 1e6) as u64;
+        let arg = arg.min(0x7fff_ffff);
+        self.slots[base].store(ts_us, Ordering::Relaxed);
+        self.slots[base + 1].store(seq, Ordering::Relaxed);
+        self.slots[base + 2].store(dur_us, Ordering::Relaxed);
+        self.slots[base + 3]
+            .store(kind as u32 as u64 | ((arg as u64) << 32), Ordering::Relaxed);
+        // Publish: mark the slot initialized only after its words are
+        // written, so a racing dump skips half-written slots.
+        self.slots[base + 3].fetch_or(VALID, Ordering::Release);
+    }
+
+    /// Resident events, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.capacity);
+        for i in 0..self.capacity {
+            let base = i * WORDS;
+            let packed = self.slots[base + 3].load(Ordering::Acquire);
+            if packed & VALID == 0 {
+                continue;
+            }
+            let packed = packed & !VALID;
+            let Some(kind) = TraceKind::from_u32((packed & 0xffff_ffff) as u32)
+            else {
+                continue;
+            };
+            out.push(TraceEvent {
+                ts_us: self.slots[base].load(Ordering::Relaxed),
+                seq: self.slots[base + 1].load(Ordering::Relaxed),
+                dur_us: self.slots[base + 2].load(Ordering::Relaxed),
+                kind,
+                arg: (packed >> 32) as u32,
+            });
+        }
+        out.sort_by_key(|e| e.ts_us);
+        out
+    }
+
+    /// Render the resident events as a Chrome `trace_event` JSON array
+    /// (the format Perfetto and chrome://tracing open directly). Each
+    /// request gets its own `tid` lane; engine-wide events (seq 0 ticks)
+    /// land on lane 0.
+    pub fn dump_chrome_json(&self) -> String {
+        let events = self.events();
+        let mut out = String::from("[\n");
+        for (n, e) in events.iter().enumerate() {
+            let (ph, dur) = if e.kind.is_span() {
+                ("X", format!(",\"dur\":{}", e.dur_us.max(1)))
+            } else {
+                ("i", String::new())
+            };
+            let scope = if e.kind.is_span() { "" } else { ",\"s\":\"t\"" };
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"ph\":\"{ph}\",\"ts\":{},\"pid\":1,\
+                 \"tid\":{}{dur}{scope},\"args\":{{\"v\":{}}}}}",
+                e.kind.name(),
+                e.ts_us,
+                e.seq,
+                e.arg
+            ));
+            out.push_str(if n + 1 == events.len() { "\n" } else { ",\n" });
+        }
+        out.push_str("]\n");
+        out
+    }
+}
+
+impl std::fmt::Debug for TraceRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRing")
+            .field("capacity", &self.capacity)
+            .field("recorded", &self.recorded())
+            .finish()
+    }
+}
+
+/// High bit of the packed kind word marks an initialized slot.
+const VALID: u64 = 1 << 63;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn records_and_reads_back_in_order() {
+        let ring = TraceRing::new(64);
+        ring.record(0.001, 7, TraceKind::Queued, 0.0, 128);
+        ring.record(0.002, 7, TraceKind::Admitted, 0.0, 0);
+        ring.record(0.003, 7, TraceKind::DecodeTick, 0.0005, 4);
+        ring.record(0.004, 7, TraceKind::Finish, 0.0, 16);
+        let ev = ring.events();
+        assert_eq!(ev.len(), 4);
+        assert_eq!(ev[0].kind, TraceKind::Queued);
+        assert_eq!(ev[0].arg, 128);
+        assert_eq!(ev[2].dur_us, 500);
+        assert_eq!(ev[3].kind, TraceKind::Finish);
+        assert!(ev.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+    }
+
+    #[test]
+    fn ring_wraps_keeping_the_newest_events() {
+        let ring = TraceRing::new(16);
+        for i in 0..100u64 {
+            ring.record(i as f64 * 1e-3, i, TraceKind::DecodeTick, 1e-4, 1);
+        }
+        assert_eq!(ring.recorded(), 100);
+        let ev = ring.events();
+        assert_eq!(ev.len(), 16);
+        // Only the most recent 16 survive.
+        assert!(ev.iter().all(|e| e.seq >= 84));
+    }
+
+    #[test]
+    fn chrome_json_parses_and_has_span_durations() {
+        let ring = TraceRing::new(32);
+        ring.record(0.010, 1, TraceKind::Queued, 0.0, 64);
+        ring.record(0.020, 1, TraceKind::PrefillChunk, 0.004, 64);
+        ring.record(0.025, 1, TraceKind::SwapOut, 0.0, 4096);
+        ring.record(0.030, 1, TraceKind::DecodeTick, 0.002, 2);
+        let text = ring.dump_chrome_json();
+        let j = Json::parse(&text).expect("valid json");
+        let arr = j.as_arr().expect("array");
+        assert_eq!(arr.len(), 4);
+        let prefill = arr
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("prefill_chunk"))
+            .unwrap();
+        assert_eq!(prefill.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(prefill.get("dur").and_then(Json::as_f64), Some(4000.0));
+        assert_eq!(prefill.get("tid").and_then(Json::as_f64), Some(1.0));
+        let swap = arr
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("swap_out"))
+            .unwrap();
+        assert_eq!(swap.get("ph").and_then(Json::as_str), Some("i"));
+        assert_eq!(
+            swap.get("args").and_then(|a| a.get("v")).and_then(Json::as_f64),
+            Some(4096.0)
+        );
+    }
+
+    #[test]
+    fn empty_ring_dumps_an_empty_array() {
+        let ring = TraceRing::new(16);
+        let j = Json::parse(&ring.dump_chrome_json()).unwrap();
+        assert_eq!(j.as_arr().unwrap().len(), 0);
+    }
+}

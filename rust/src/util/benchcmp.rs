@@ -26,6 +26,18 @@ use crate::util::json::Json;
 /// Key suffixes treated as higher-is-better throughput metrics.
 const METRIC_SUFFIXES: [&str; 3] = ["_tok_s", "_gb_s", "_per_s"];
 
+/// Key suffixes treated as lower-is-better latency metrics
+/// (`ttft_p99_s`, `tick_p99_s`, …). These come from log-spaced
+/// histograms whose bucket width is a factor of √2, so a reading can
+/// jump ~41% just by crossing a bucket boundary: a latency key only
+/// fails when it exceeds the tolerance AND grows past 1.5× the
+/// baseline — one full bucket plus margin.
+const LATENCY_SUFFIXES: [&str; 1] = ["_p99_s"];
+
+/// Growth factor a latency metric must exceed (in addition to the
+/// tolerance) before it counts as a regression.
+const LATENCY_BUCKET_GUARD: f64 = 1.5;
+
 /// One tokens/s comparison that exceeded the tolerance (or vanished).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Regression {
@@ -37,6 +49,8 @@ pub struct Regression {
     /// it means the new sweep *recorded* a non-finite value
     pub new: f64,
     pub missing: bool,
+    /// latency metric: the failure was the value *growing*
+    pub lower_is_better: bool,
 }
 
 impl std::fmt::Display for Regression {
@@ -52,6 +66,16 @@ impl std::fmt::Display for Regression {
                 f,
                 "{} {}: {:.1} -> {} (non-finite measurement)",
                 self.backend, self.metric, self.old, self.new
+            )
+        } else if self.lower_is_better {
+            write!(
+                f,
+                "{} {}: {:.1} -> {:.1} ms ({:+.1}%)",
+                self.backend,
+                self.metric,
+                self.old * 1e3,
+                self.new * 1e3,
+                (self.new / self.old - 1.0) * 100.0
             )
         } else {
             write!(
@@ -90,7 +114,11 @@ pub fn compare(
             .find(|e| label_of(e) == Some(backend))
             .copied();
         for (metric, val) in fields {
-            if !METRIC_SUFFIXES.iter().any(|s| metric.ends_with(s)) {
+            let lower_is_better =
+                LATENCY_SUFFIXES.iter().any(|s| metric.ends_with(s));
+            if !lower_is_better
+                && !METRIC_SUFFIXES.iter().any(|s| metric.ends_with(s))
+            {
                 continue;
             }
             let Some(old_v) = val.as_f64() else {
@@ -108,6 +136,19 @@ pub fn compare(
             let new_v = new_entry
                 .and_then(|e| e.get(metric))
                 .and_then(|v| v.as_f64());
+            // a non-finite measurement must fail — NaN slips through
+            // any `<` / `>` tolerance check
+            let regressed = |n: f64| {
+                if !n.is_finite() {
+                    return true;
+                }
+                if lower_is_better {
+                    n > old_v * (1.0 + max_regress)
+                        && n > old_v * LATENCY_BUCKET_GUARD
+                } else {
+                    n < old_v * (1.0 - max_regress)
+                }
+            };
             match new_v {
                 None => regressions.push(Regression {
                     backend: backend.to_string(),
@@ -115,19 +156,16 @@ pub fn compare(
                     old: old_v,
                     new: f64::NAN,
                     missing: true,
+                    lower_is_better,
                 }),
-                // a non-finite measurement must fail — NaN slips
-                // through any `<` tolerance check
-                Some(n)
-                    if !n.is_finite()
-                        || n < old_v * (1.0 - max_regress) =>
-                {
+                Some(n) if regressed(n) => {
                     regressions.push(Regression {
                         backend: backend.to_string(),
                         metric: metric.clone(),
                         old: old_v,
                         new: n,
                         missing: false,
+                        lower_is_better,
                     })
                 }
                 Some(_) => {}
@@ -368,5 +406,45 @@ mod tests {
         let regs = compare(&old, &bad, 0.10).unwrap();
         assert_eq!(regs.len(), 1);
         assert_eq!(regs[0].metric, "scan_gb_s");
+    }
+
+    #[test]
+    fn latency_p99_keys_gate_lower_is_better() {
+        // latency growing fails; latency shrinking passes (the
+        // throughput rule would read a big drop as a regression)
+        let old = adc_doc(&[(
+            "lookat-4",
+            &[("ttft_p99_s", 0.100), ("batch_4_tok_s", 300.0)],
+        )]);
+        let faster = adc_doc(&[(
+            "lookat-4",
+            &[("ttft_p99_s", 0.020), ("batch_4_tok_s", 300.0)],
+        )]);
+        assert!(compare(&old, &faster, 0.10).unwrap().is_empty());
+        let slower = adc_doc(&[(
+            "lookat-4",
+            &[("ttft_p99_s", 0.200), ("batch_4_tok_s", 300.0)],
+        )]);
+        let regs = compare(&old, &slower, 0.10).unwrap();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, "ttft_p99_s");
+        assert!(regs[0].lower_is_better);
+        assert!(regs[0].to_string().contains("ms"), "{}", regs[0]);
+    }
+
+    #[test]
+    fn latency_within_one_histogram_bucket_is_not_flagged() {
+        // histogram percentiles are bucket-quantized (ratio sqrt(2)):
+        // a +41% reading can be the same underlying latency landing
+        // one bucket over, so only growth past 1.5x fails
+        let old = adc_doc(&[("lookat-4", &[("tick_p99_s", 0.100)])]);
+        let one_bucket =
+            adc_doc(&[("lookat-4", &[("tick_p99_s", 0.1415)])]);
+        assert!(compare(&old, &one_bucket, 0.10).unwrap().is_empty());
+        // a vanished latency key still fails like any other metric
+        let gone = adc_doc(&[("lookat-4", &[("other_tok_s", 1.0)])]);
+        let regs = compare(&old, &gone, 0.10).unwrap();
+        assert_eq!(regs.len(), 1);
+        assert!(regs[0].missing);
     }
 }

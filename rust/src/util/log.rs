@@ -27,6 +27,18 @@ impl Level {
         }
     }
 
+    /// Safe inverse of `lvl as u8`; out-of-range bytes saturate to the
+    /// most verbose level rather than invoking UB.
+    fn from_u8(raw: u8) -> Level {
+        match raw {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            3 => Level::Debug,
+            _ => Level::Trace,
+        }
+    }
+
     pub fn tag(self) -> &'static str {
         match self {
             Level::Error => "ERROR",
@@ -44,7 +56,7 @@ static START: OnceLock<Instant> = OnceLock::new();
 fn current_level() -> Level {
     let raw = LEVEL.load(Ordering::Relaxed);
     if raw != u8::MAX {
-        return unsafe { std::mem::transmute::<u8, Level>(raw) };
+        return Level::from_u8(raw);
     }
     let lvl = std::env::var("LOOKAT_LOG")
         .ok()
@@ -104,6 +116,14 @@ macro_rules! log_debug {
     };
 }
 
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Trace,
+                               module_path!(), &format!($($arg)*))
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,5 +150,20 @@ mod tests {
         set_level(Level::Info);
         log(Level::Info, "test", "hello");
         log_info!("formatted {} {}", 1, "two");
+        log_trace!("suppressed at info level {}", 3);
+    }
+
+    #[test]
+    fn from_u8_round_trips_and_saturates() {
+        for lvl in [
+            Level::Error,
+            Level::Warn,
+            Level::Info,
+            Level::Debug,
+            Level::Trace,
+        ] {
+            assert_eq!(Level::from_u8(lvl as u8), lvl);
+        }
+        assert_eq!(Level::from_u8(200), Level::Trace);
     }
 }

@@ -48,6 +48,26 @@ pub struct ScratchPool {
     f32s: Mutex<PoolInner>,
     takes: AtomicUsize,
     fresh: AtomicUsize,
+    zeroed: AtomicUsize,
+    peak_bytes: AtomicUsize,
+}
+
+/// Point-in-time arena counters, published into the telemetry registry
+/// and `ServingReport` so a steady-state-allocates-nothing regression
+/// (the PR 5 invariant) is visible instead of silent.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Total buffer leases.
+    pub leases: usize,
+    /// Leases that had to touch the allocator (empty pool or growth).
+    pub fresh: usize,
+    /// Leases that paid a zero-fill (`take_f32` as opposed to
+    /// `take_f32_any`).
+    pub zeroed: usize,
+    /// f32 bytes currently retained on the free list.
+    pub held_bytes: usize,
+    /// High-water mark of retained bytes.
+    pub peak_bytes: usize,
 }
 
 #[derive(Default)]
@@ -74,6 +94,9 @@ impl ScratchPool {
 
     fn lease(&self, len: usize, zero: bool) -> Vec<f32> {
         self.takes.fetch_add(1, Ordering::Relaxed);
+        if zero {
+            self.zeroed.fetch_add(1, Ordering::Relaxed);
+        }
         let mut v = {
             let mut pool = self.f32s.lock().unwrap();
             match pool.bufs.pop() {
@@ -125,6 +148,8 @@ impl ScratchPool {
         {
             pool.bytes_held += v.capacity();
             pool.bufs.push(v);
+            let held = pool.bytes_held * std::mem::size_of::<f32>();
+            self.peak_bytes.fetch_max(held, Ordering::Relaxed);
         }
     }
 
@@ -134,6 +159,22 @@ impl ScratchPool {
             self.takes.load(Ordering::Relaxed),
             self.fresh.load(Ordering::Relaxed),
         )
+    }
+
+    /// Full arena counters (supersedes [`ScratchPool::stats`], which is
+    /// kept for the original zero-allocation assertions).
+    pub fn arena_stats(&self) -> ArenaStats {
+        let held_bytes = {
+            let pool = self.f32s.lock().unwrap();
+            pool.bytes_held * std::mem::size_of::<f32>()
+        };
+        ArenaStats {
+            leases: self.takes.load(Ordering::Relaxed),
+            fresh: self.fresh.load(Ordering::Relaxed),
+            zeroed: self.zeroed.load(Ordering::Relaxed),
+            held_bytes,
+            peak_bytes: self.peak_bytes.load(Ordering::Relaxed).max(held_bytes),
+        }
     }
 }
 
@@ -823,6 +864,33 @@ mod tests {
         }
         let (_, fresh_after) = pool.stats();
         assert_eq!(fresh_before, fresh_after, "steady state allocated");
+    }
+
+    #[test]
+    fn arena_stats_track_leases_zeroing_and_peak() {
+        let pool = ScratchPool::new();
+        let a = pool.take_f32(256); // zeroed lease
+        let b = pool.take_f32_any(64); // raw lease
+        let cap_bytes = a.capacity() * 4 + b.capacity() * 4;
+        pool.put_f32(a);
+        pool.put_f32(b);
+        let s = pool.arena_stats();
+        assert_eq!(s.leases, 2);
+        assert_eq!(s.fresh, 2);
+        assert_eq!(s.zeroed, 1, "only take_f32 pays a zero-fill");
+        assert_eq!(s.held_bytes, cap_bytes);
+        assert_eq!(s.peak_bytes, cap_bytes);
+        // Draining the pool drops held bytes but the peak sticks.
+        let c = pool.take_f32_any(64);
+        let d = pool.take_f32_any(256);
+        let s2 = pool.arena_stats();
+        assert_eq!(s2.held_bytes, 0);
+        assert_eq!(s2.peak_bytes, cap_bytes);
+        assert_eq!(s2.leases, 4);
+        assert_eq!(s2.fresh, 2, "warm leases must not allocate");
+        drop((c, d));
+        // stats() stays consistent with the richer view
+        assert_eq!(pool.stats(), (s2.leases, s2.fresh));
     }
 
     #[test]
