@@ -10,8 +10,8 @@
 //! `make artifacts`).
 
 use lookat::coordinator::{
-    AttentionBackend, BatcherConfig, EngineConfig, Router, RouterConfig,
-    ValueBackend,
+    AttentionBackend, BatcherConfig, CompressionPolicy, EngineConfig,
+    Router, RouterConfig, ValueBackend,
 };
 use lookat::model::ModelConfig;
 use lookat::workload::{TraceConfig, TraceGenerator};
@@ -37,11 +37,15 @@ fn run_backend_kv(
             decode_threads: 0,
             prefill_chunk: 0,
             pipeline: true,
+            prefix_cache: false,
+            policy: CompressionPolicy::Uniform,
         },
         batcher: BatcherConfig {
             max_batch: 4,
             max_queue: 128,
             policy: lookat::coordinator::SchedulerPolicy::Fcfs,
+            swap: true,
+            swap_cost: Default::default(),
         },
         max_prompt_tokens: 120,
     })?;

@@ -18,15 +18,18 @@
 //!   fcfs-monolithic vs preempt + chunked prefill, the 12-layer
 //!   `--pipeline on|off` A/B of the software-pipelined layer executor,
 //!   the preempt-heavy swap-tier A/B recording swap-vs-reprefill
-//!   speedup, and the shared-system-prompt prefix-cache A/B recording
-//!   blocks shared — `lookat bench-check` gates every scenario's
+//!   speedup, the shared-system-prompt prefix-cache A/B recording
+//!   blocks shared, and the compression-policy sweep (uniform vs
+//!   calibrated-at-equal-bits vs norm-pruning, with the calibrated
+//!   run's worst per-(layer,head) rho) — `lookat bench-check` gates
+//!   every scenario's
 //!   `*_tok_s` metric alongside the backend sweep, and each backend's
 //!   batch-16 `ttft_p99_s` / `tick_p99_s` tail latencies from the
 //!   telemetry histograms, lower-is-better)
 
 use lookat::coordinator::{
-    AttentionBackend, BatcherConfig, EngineConfig, Router, RouterConfig,
-    SchedulerPolicy, ValueBackend,
+    AttentionBackend, BatcherConfig, CompressionPolicy, EngineConfig,
+    Router, RouterConfig, SchedulerPolicy, ValueBackend,
 };
 use lookat::model::ModelConfig;
 use lookat::util::json::Json;
@@ -67,6 +70,7 @@ fn bench_backend(
             prefill_chunk: 0,
             pipeline: true,
             prefix_cache: false,
+            policy: CompressionPolicy::Uniform,
         },
         batcher: BatcherConfig {
             max_batch: 1,
@@ -156,6 +160,7 @@ fn scheduler_scenarios() -> anyhow::Result<Json> {
                 prefill_chunk: chunk,
                 pipeline: true,
                 prefix_cache: false,
+                policy: CompressionPolicy::Uniform,
             },
             batcher: BatcherConfig {
                 max_batch: 16,
@@ -262,6 +267,7 @@ fn pipeline_scenario() -> anyhow::Result<Json> {
                 prefill_chunk: 0,
                 pipeline,
                 prefix_cache: false,
+                policy: CompressionPolicy::Uniform,
             },
             batcher: BatcherConfig {
                 max_batch: 16,
@@ -339,6 +345,7 @@ fn swap_scenario() -> anyhow::Result<Json> {
                 prefill_chunk: 32,
                 pipeline: true,
                 prefix_cache: false,
+                policy: CompressionPolicy::Uniform,
             },
             batcher: BatcherConfig {
                 max_batch: 8,
@@ -418,6 +425,7 @@ fn prefix_scenario() -> anyhow::Result<Json> {
                 prefill_chunk: 0,
                 pipeline: true,
                 prefix_cache,
+                policy: CompressionPolicy::Uniform,
             },
             batcher: BatcherConfig {
                 max_batch: 4,
@@ -483,6 +491,88 @@ fn prefix_scenario() -> anyhow::Result<Json> {
     Ok(o)
 }
 
+/// The compression-policy ablation: the same decode-heavy trace served
+/// under `--policy uniform`, `--policy calibrated-<bits>` at *exactly*
+/// the uniform spend (2 layers × 12 heads × m=4 × 8 bits = 768
+/// bits/token, so the comparison is heterogeneous-vs-flat allocation
+/// at equal budget, not more-bits-vs-fewer), and `--policy prune-0.1`.
+/// Records tok/s per policy (gated by `lookat bench-check` like every
+/// other scenario `*_tok_s`), the calibrated run's worst
+/// per-(layer,head) rank correlation and realized bits/token, and the
+/// pruned-token count.
+fn policy_scenario() -> anyhow::Result<Json> {
+    let build = |policy: CompressionPolicy| {
+        let mut model = ModelConfig::gpt2_layer0();
+        model.n_layer = 2;
+        Router::build(RouterConfig {
+            engine: EngineConfig {
+                model,
+                backend: AttentionBackend::Lookat { m: 4, k: 256 },
+                value_backend: ValueBackend::Fp32,
+                seed: 77,
+                cache_blocks: 512,
+                calib_tokens: 192,
+                decode_threads: 0,
+                prefill_chunk: 0,
+                pipeline: true,
+                prefix_cache: false,
+                policy,
+            },
+            batcher: BatcherConfig {
+                max_batch: 16,
+                max_queue: 256,
+                policy: SchedulerPolicy::Fcfs,
+                ..BatcherConfig::default()
+            },
+            max_prompt_tokens: 96,
+        })
+    };
+    const UNIFORM_BITS: usize = 2 * 12 * 4 * 8;
+
+    let mut reports = Vec::new();
+    for policy in [
+        CompressionPolicy::Uniform,
+        CompressionPolicy::Calibrated { bits: UNIFORM_BITS },
+        CompressionPolicy::Prune { frac: 0.1 },
+    ] {
+        let mut router = build(policy)?;
+        let reqs = router.tokenize_trace(&trace());
+        let report = router.serve_trace(reqs)?;
+        println!("scenario policy          {}", report.pretty());
+        reports.push(report);
+    }
+    let (uni, cal, pru) = (&reports[0], &reports[1], &reports[2]);
+    println!(
+        "scenario policy_sweep: tok/s uniform {:.1} / calibrated {:.1} \
+         / prune {:.1}; calibrated min-rho {:.4} at {} bits/token \
+         (uniform spends {UNIFORM_BITS}); {} tokens pruned",
+        uni.throughput_tok_s(),
+        cal.throughput_tok_s(),
+        pru.throughput_tok_s(),
+        cal.min_rho(),
+        cal.policy_bits_per_token,
+        pru.pruned_tokens
+    );
+
+    let mut o = Json::obj();
+    o.set("scenario", Json::Str("compression_policy_sweep".into()));
+    o.set("batch", Json::Num(16.0));
+    o.set("policy_uniform_tok_s", Json::Num(uni.throughput_tok_s()));
+    o.set("policy_calibrated_tok_s", Json::Num(cal.throughput_tok_s()));
+    o.set("policy_prune_tok_s", Json::Num(pru.throughput_tok_s()));
+    o.set("calibrated_min_rho", Json::Num(cal.min_rho()));
+    o.set(
+        "calibrated_bits_per_token",
+        Json::Num(cal.policy_bits_per_token as f64),
+    );
+    o.set(
+        "uniform_bits_per_token",
+        Json::Num(uni.policy_bits_per_token as f64),
+    );
+    o.set("pruned_tokens", Json::Num(pru.pruned_tokens as f64));
+    Ok(o)
+}
+
 fn main() -> anyhow::Result<()> {
     let combos = [
         // the pre-existing key-backend sweep (fp32 values)
@@ -524,12 +614,13 @@ fn main() -> anyhow::Result<()> {
     let pipeline = pipeline_scenario()?;
     let swap = swap_scenario()?;
     let prefix = prefix_scenario()?;
+    let policy = policy_scenario()?;
 
     let mut top = Json::obj();
     top.set("bench", Json::Str("serving_throughput".into()));
     top.set(
         "scenarios",
-        Json::Arr(vec![scenarios, pipeline, swap, prefix]),
+        Json::Arr(vec![scenarios, pipeline, swap, prefix, policy]),
     );
     top.set(
         "batch_sizes",

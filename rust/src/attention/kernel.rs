@@ -6,11 +6,15 @@
 //! kernel. Since the chunked-prefill scheduler landed, a work item is a
 //! *span* of `rows ≥ 1` query rows: decode items carry one row, prefill
 //! chunks carry the whole chunk. Row `r` of an item attends only its
-//! causal prefix (`seq_len - rows + r + 1` cached tokens), so prefill
-//! compute rides the same block-resident scan as decode and a chunk of
-//! any size is bit-identical to the monolithic equivalent — every row's
-//! math depends only on (query row, cache prefix), never on how the
-//! rows were grouped into ticks.
+//! causal prefix — `seq_len - rows + r + 1` cached tokens, or the
+//! explicit per-row survivor counts in [`WorkItem::prefixes`] when the
+//! engine's L2-norm pruning policy skipped appends — so prefill compute
+//! rides the same block-resident scan as decode and a chunk of any size
+//! is bit-identical to the monolithic equivalent: every row's math
+//! depends only on (query row, cache prefix), never on how the rows
+//! were grouped into ticks. The PJRT kernels derive prefixes from the
+//! cache length only (the engine rejects pruning policies on PJRT
+//! backends, where the two derivations always agree).
 //!
 //! The pure-rust kernels fan the independent items out on
 //! `util::threadpool`; the PJRT kernels own the runtime client (whose
@@ -62,6 +66,24 @@ pub struct WorkItem<'a> {
     /// `seq_len - rows + r + 1` cached tokens (the span's K/V are
     /// appended to the cache before the kernel runs)
     pub rows: usize,
+    /// per-row causal prefix lengths, when the appends that preceded
+    /// this plan decided them (the prune-aware path: a pruned token
+    /// leaves the cache length unchanged, so row `r`'s prefix is the
+    /// *survivor* count after its append attempt, not
+    /// `seq_len - rows + r + 1`). `None` derives the classic uniform
+    /// prefixes from the cache length — with pruning off the two are
+    /// equal, so this field never changes results, only feasibility.
+    pub prefixes: Option<&'a [usize]>,
+}
+
+impl WorkItem<'_> {
+    /// Causal prefix length of row `r` against a cache of `n` tokens.
+    fn prefix(&self, n: usize, r: usize) -> usize {
+        match self.prefixes {
+            Some(ps) => ps[r].min(n),
+            None => row_prefix(n, self.rows, r),
+        }
+    }
 }
 
 /// All attention work of one layer for one decode tick.
@@ -192,7 +214,7 @@ impl AttentionKernel for Fp16Kernel {
                     }
                     let mut outs = Vec::with_capacity(it.rows);
                     for r in 0..it.rows {
-                        let p = row_prefix(n, it.rows, r);
+                        let p = it.prefix(n, r);
                         let q = &it.q[r * d_k..(r + 1) * d_k];
                         let scores =
                             timed(plan.timers, Phase::Scan, || {
@@ -260,7 +282,7 @@ impl AttentionKernel for ScalarQuantKernel {
                     }
                     let mut outs = Vec::with_capacity(it.rows);
                     for r in 0..it.rows {
-                        let p = row_prefix(n, it.rows, r);
+                        let p = it.prefix(n, r);
                         let q = &it.q[r * d_k..(r + 1) * d_k];
                         // the round-trip + dense rescore is the scan
                         // phase of this bandwidth-bound baseline
@@ -340,7 +362,7 @@ impl AttentionKernel for LookatKernel {
                 let pool = scratch();
                 let mut outs = Vec::with_capacity(it.rows);
                 for r in 0..it.rows {
-                    let p = row_prefix(n, it.rows, r);
+                    let p = it.prefix(n, r);
                     let q = &it.q[r * d_k..(r + 1) * d_k];
                     let lut = timed(plan.timers, Phase::LutBuild, || {
                         LookupTable::build_into(
@@ -734,6 +756,7 @@ mod tests {
                     head,
                     q: &qs[i][head * DK..(head + 1) * DK],
                     rows: 1,
+                    prefixes: None,
                 });
             }
         }
@@ -888,6 +911,7 @@ mod tests {
                 head,
                 q: &q_heads[head],
                 rows,
+                prefixes: None,
             })
             .collect();
         DecodePlan { cache, d_k: DK, threads: 2, timers: None, items }
@@ -957,6 +981,65 @@ mod tests {
                 let got = &outs[head * rows + r];
                 assert_eq!(got.out, want.out, "head {head} row {r}");
                 assert_eq!(got.weights, want.weights);
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_prefixes_override_derived_span_prefixes() {
+        // the prune-aware contract: when the plan carries per-row
+        // survivor counts, each row attends exactly that many cached
+        // tokens — for every rust backend, key side and value side
+        let n = 40usize;
+        let rows = 3usize;
+        let pfx = [5usize, 9, 40];
+        let mut rng = Pcg32::seed(47);
+        let q_heads: Vec<Vec<f32>> = (0..H)
+            .map(|_| {
+                (0..rows * DK).map(|_| rng.next_f32_std()).collect()
+            })
+            .collect();
+
+        let cache = filled_cache(KeyStorage::Fp16, &[(1, n)]);
+        let mut plan = span_plan(&cache, &q_heads, 1, rows);
+        for it in plan.items.iter_mut() {
+            it.prefixes = Some(&pfx);
+        }
+        let outs = Fp16Kernel.decode_batch(&plan).unwrap();
+        for head in 0..H {
+            let mut keys = Vec::new();
+            let mut vals = Vec::new();
+            cache.gather_keys_into(1, head, &mut keys).unwrap();
+            cache.gather_values_into(1, head, &mut vals).unwrap();
+            for (r, &p) in pfx.iter().enumerate() {
+                let q = &q_heads[head][r * DK..(r + 1) * DK];
+                let want = attention::exact_attention(
+                    q, &keys[..p * DK], &vals[..p * DK], p);
+                let got = &outs[head * rows + r];
+                assert_eq!(got.out, want.out, "head {head} row {r}");
+            }
+        }
+
+        let cache = filled_cache(pq_storage(4), &[(1, n)]);
+        let mut plan = span_plan(&cache, &q_heads, 1, rows);
+        for it in plan.items.iter_mut() {
+            it.prefixes = Some(&pfx);
+        }
+        let outs = LookatKernel.decode_batch(&plan).unwrap();
+        let codecs = cache.codecs().unwrap();
+        for head in 0..H {
+            let mut codes = Vec::new();
+            let mut vals = Vec::new();
+            cache.gather_codes_into(1, head, &mut codes).unwrap();
+            cache.gather_values_into(1, head, &mut vals).unwrap();
+            for (r, &p) in pfx.iter().enumerate() {
+                let q = &q_heads[head][r * DK..(r + 1) * DK];
+                let m = codecs[head].codebook.m;
+                let want = attention::lookat_attention(
+                    q, &codes[..p * m], &codecs[head],
+                    &vals[..p * DK], p);
+                let got = &outs[head * rows + r];
+                assert_eq!(got.out, want.out, "head {head} row {r}");
             }
         }
     }

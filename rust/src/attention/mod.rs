@@ -6,6 +6,16 @@
 //! backends the serving engine fans out over (seq, head) work items.
 //! Shapes follow the paper: `q` is (d_k), the cache holds `n`
 //! keys/values of dimension d_k.
+//!
+//! Bit-parity contract: the batched kernels are *definitionally* equal
+//! to these primitives — same score math, same softmax, same subspace
+//! accumulation order (`0..m`), same block iteration order — so a
+//! batched decode over paged cache blocks must produce the identical
+//! f32 bits as the flat single-query call (`tests/decode_parity.rs`
+//! enforces it per backend). Causal masking is expressed as a per-row
+//! key-prefix length, either derived from the span geometry or carried
+//! explicitly on the work item ([`WorkItem::prefixes`], used when
+//! token pruning makes logical positions diverge from stored rows).
 
 pub mod kernel;
 

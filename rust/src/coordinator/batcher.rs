@@ -654,6 +654,7 @@ mod tests {
             prefill_chunk,
             pipeline: true,
             prefix_cache: false,
+            policy: crate::coordinator::CompressionPolicy::Uniform,
         })
         .unwrap();
         Batcher::new(
@@ -731,6 +732,7 @@ mod tests {
             prefill_chunk: 0,
             pipeline: true,
             prefix_cache: false,
+            policy: crate::coordinator::CompressionPolicy::Uniform,
         })
         .unwrap();
         let mut b = Batcher::new(
@@ -947,6 +949,7 @@ mod tests {
             prefill_chunk: 0,
             pipeline: true,
             prefix_cache: true,
+            policy: crate::coordinator::CompressionPolicy::Uniform,
         })
         .unwrap();
         let mut b = Batcher::new(

@@ -29,10 +29,15 @@
 //! LOOKAT codebooks are trained once at engine build from a calibration
 //! corpus (paper §3.4); the serving hot path never touches python.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context};
 
+use super::policy::{
+    allocate_budget, prune_threshold, BudgetItem, CompressionPolicy,
+    HeadPolicy, PolicySummary, Side,
+};
 use crate::attention::kernel::{
     Fp16Kernel, LookatKernel, PjrtFp16Kernel, PjrtLookatKernel,
     ScalarQuantKernel,
@@ -151,6 +156,15 @@ pub struct EngineConfig {
     /// later sequences whose prompts start with the same token blocks
     /// attach the physical blocks instead of recomputing them
     pub prefix_cache: bool,
+    /// compression policy (`--policy uniform|calibrated-<bits>|
+    /// prune-<frac>`), resolved once at build time. `Uniform` trains
+    /// one (m, K) per cache side exactly as before (bit-identical to
+    /// the pre-policy engine); `Calibrated` distributes a total
+    /// bits/token budget across (layer, head, side) by calibration
+    /// error; `Prune` drops low-L2-norm tokens at append time. PJRT
+    /// backends accept only `Uniform` (the artifacts bake in one
+    /// global m)
+    pub policy: CompressionPolicy,
 }
 
 impl Default for EngineConfig {
@@ -166,6 +180,7 @@ impl Default for EngineConfig {
             prefill_chunk: 0,
             pipeline: true,
             prefix_cache: false,
+            policy: CompressionPolicy::Uniform,
         }
     }
 }
@@ -272,6 +287,13 @@ pub struct Engine {
     /// cumulative phase snapshot at the last per-tick publish — the
     /// registry's phase counters advance by the delta each tick
     last_phases: Mutex<PhaseTimes>,
+    /// the active compression policy (resolved at build)
+    policy: CompressionPolicy,
+    /// build-time policy record: per-(layer, head) subspace counts,
+    /// rho estimates, prune thresholds, total bits/token
+    summary: PolicySummary,
+    /// cumulative pruned-token count at the last per-tick publish
+    last_pruned: AtomicU64,
 }
 
 impl Engine {
@@ -305,16 +327,56 @@ impl Engine {
             );
         }
 
+        // Policy validation up front: the PJRT artifacts bake in one
+        // global m, and prefix sharing indexes blocks by token
+        // position, which pruning breaks.
+        if cfg.policy != CompressionPolicy::Uniform
+            && matches!(
+                cfg.backend,
+                AttentionBackend::PjrtFp16
+                    | AttentionBackend::PjrtLookat { .. }
+            )
+        {
+            bail!(
+                "--policy {} is not supported on PJRT backends (the \
+                 artifacts assume one global m); use --policy uniform",
+                cfg.policy.name()
+            );
+        }
+        if matches!(cfg.policy, CompressionPolicy::Calibrated { .. })
+            && key_pq.is_none()
+            && value_pq.is_none()
+        {
+            bail!(
+                "--policy {} needs a PQ side to budget; pick a lookat \
+                 backend and/or a vpq value backend",
+                cfg.policy.name()
+            );
+        }
+        if matches!(cfg.policy, CompressionPolicy::Prune { .. })
+            && cfg.prefix_cache
+        {
+            bail!(
+                "--prefix-cache cannot combine with --policy {}: pruned \
+                 caches break block-aligned prefix sharing",
+                cfg.policy.name()
+            );
+        }
+
         // PQ backends: train per-layer, per-head codebooks on a
         // calibration corpus exactly like the paper's §3.4 (prefill
         // once, take each head's keys — and values, for the §5.2
-        // value-side extension — from every layer).
-        let calib: Option<PrefillOutput> =
-            if key_pq.is_some() || value_pq.is_some() {
-                Some(Self::calibration_prefill(&model, cfg)?)
-            } else {
-                None
-            };
+        // value-side extension — from every layer). The pruning policy
+        // rides the same prefill for its norm thresholds even when the
+        // key side stays raw.
+        let calib: Option<PrefillOutput> = if key_pq.is_some()
+            || value_pq.is_some()
+            || cfg.policy != CompressionPolicy::Uniform
+        {
+            Some(Self::calibration_prefill(&model, cfg)?)
+        } else {
+            None
+        };
         let train = |data: &[f32], m: usize, k: usize, salt: u64| {
             PqCodec::train(
                 data,
@@ -325,34 +387,200 @@ impl Engine {
             )
         };
 
-        let mut caches = Vec::with_capacity(cfg.model.n_layer);
-        for layer in 0..cfg.model.n_layer {
-            let storage = if let Some((m, k)) = key_pq {
-                let out = calib.as_ref().unwrap();
-                let codecs: Vec<PqCodec> = (0..h)
-                    .map(|head| {
-                        train(&out.head_keys(layer, head, d_k), m, k, 0x90)
-                    })
-                    .collect();
-                KeyStorage::pq(codecs).map_err(|e| anyhow::anyhow!("{e}"))?
-            } else {
-                KeyStorage::Fp16
+        // Resolve the policy into per-(layer, head) codec sets for each
+        // PQ side. Uniform (and Prune, whose codec geometry is uniform)
+        // performs the exact historical training calls, so it is
+        // bit-identical to the pre-policy engine; Calibrated trains a
+        // candidate ladder per slot and spends the bits/token budget
+        // where calibration error drops fastest.
+        let n_layer = cfg.model.n_layer;
+        type LayerCodecs = Vec<Option<Vec<PqCodec>>>;
+        let (key_codecs, val_codecs): (LayerCodecs, LayerCodecs) =
+            match cfg.policy {
+                CompressionPolicy::Calibrated { bits } => {
+                    let out = calib.as_ref().unwrap();
+                    let mut items: Vec<BudgetItem> = Vec::new();
+                    let mut trained: Vec<Vec<PqCodec>> = Vec::new();
+                    for (side, base, salt) in [
+                        (Side::Key, key_pq, 0x90u64),
+                        (Side::Value, value_pq, 0x91),
+                    ] {
+                        let Some((m0, k)) = base else { continue };
+                        let cands = candidate_ms(d_k, m0);
+                        for layer in 0..n_layer {
+                            for head in 0..h {
+                                let data = match side {
+                                    Side::Key => {
+                                        out.head_keys(layer, head, d_k)
+                                    }
+                                    Side::Value => {
+                                        out.head_values(layer, head, d_k)
+                                    }
+                                };
+                                let codecs: Vec<PqCodec> = cands
+                                    .iter()
+                                    .map(|&m| train(&data, m, k, salt))
+                                    .collect();
+                                let candidates = codecs
+                                    .iter()
+                                    .map(|c| {
+                                        (
+                                            c.codebook.m,
+                                            c.train_mse
+                                                .iter()
+                                                .sum::<f64>(),
+                                        )
+                                    })
+                                    .collect();
+                                items.push(BudgetItem {
+                                    layer,
+                                    head,
+                                    side,
+                                    code_bits: code_bits(k),
+                                    candidates,
+                                });
+                                trained.push(codecs);
+                            }
+                        }
+                    }
+                    let choice = allocate_budget(&items, bits).map_err(
+                        |e| {
+                            anyhow::anyhow!(
+                                "--policy {}: {e}",
+                                cfg.policy.name()
+                            )
+                        },
+                    )?;
+                    let mut keyc: LayerCodecs = (0..n_layer)
+                        .map(|_| key_pq.map(|_| Vec::new()))
+                        .collect();
+                    let mut valc: LayerCodecs = (0..n_layer)
+                        .map(|_| value_pq.map(|_| Vec::new()))
+                        .collect();
+                    for ((item, mut codecs), &c) in
+                        items.iter().zip(trained).zip(&choice)
+                    {
+                        let chosen = codecs.swap_remove(c);
+                        let slot = match item.side {
+                            Side::Key => {
+                                keyc[item.layer].as_mut().unwrap()
+                            }
+                            Side::Value => {
+                                valc[item.layer].as_mut().unwrap()
+                            }
+                        };
+                        debug_assert_eq!(slot.len(), item.head);
+                        slot.push(chosen);
+                    }
+                    (keyc, valc)
+                }
+                _ => {
+                    let keyc = (0..n_layer)
+                        .map(|layer| {
+                            key_pq.map(|(m, k)| {
+                                let out = calib.as_ref().unwrap();
+                                (0..h)
+                                    .map(|head| {
+                                        train(
+                                            &out.head_keys(
+                                                layer, head, d_k,
+                                            ),
+                                            m,
+                                            k,
+                                            0x90,
+                                        )
+                                    })
+                                    .collect()
+                            })
+                        })
+                        .collect();
+                    let valc = (0..n_layer)
+                        .map(|layer| {
+                            value_pq.map(|(m, k)| {
+                                let out = calib.as_ref().unwrap();
+                                (0..h)
+                                    .map(|head| {
+                                        train(
+                                            &out.head_values(
+                                                layer, head, d_k,
+                                            ),
+                                            m,
+                                            k,
+                                            0x91,
+                                        )
+                                    })
+                                    .collect()
+                            })
+                        })
+                        .collect();
+                    (keyc, valc)
+                }
             };
-            let value_storage = if let Some((m, k)) = value_pq {
+
+        // Pruning thresholds: the frac-quantile of the calibration
+        // tokens' mean-head key L2 norms, per layer (the same statistic
+        // KvCache::append tests at serve time).
+        let thresholds: Vec<f32> = match cfg.policy {
+            CompressionPolicy::Prune { frac } => {
                 let out = calib.as_ref().unwrap();
-                let codecs: Vec<PqCodec> = (0..h)
-                    .map(|head| {
-                        train(
-                            &out.head_values(layer, head, d_k), m, k, 0x91)
+                let mut tok = vec![0f32; h * d_k];
+                (0..n_layer)
+                    .map(|layer| {
+                        let per_head: Vec<Vec<f32>> = (0..h)
+                            .map(|head| out.head_keys(layer, head, d_k))
+                            .collect();
+                        let n_tok = per_head[0].len() / d_k;
+                        let norms: Vec<f32> = (0..n_tok)
+                            .map(|t| {
+                                for (head, ks) in
+                                    per_head.iter().enumerate()
+                                {
+                                    tok[head * d_k..(head + 1) * d_k]
+                                        .copy_from_slice(
+                                            &ks[t * d_k
+                                                ..(t + 1) * d_k],
+                                        );
+                                }
+                                crate::kvcache::mean_head_norm(
+                                    &tok, h, d_k,
+                                )
+                            })
+                            .collect();
+                        prune_threshold(&norms, frac)
                     })
-                    .collect();
-                ValueStorage::pq(codecs)
-                    .map_err(|e| anyhow::anyhow!("{e}"))?
-            } else {
-                ValueStorage::Fp32
+                    .collect()
+            }
+            _ => Vec::new(),
+        };
+
+        let summary = Self::build_policy_summary(
+            cfg,
+            &calib,
+            &key_codecs,
+            &val_codecs,
+            &thresholds,
+            h,
+            d_k,
+        );
+
+        let mut caches = Vec::with_capacity(n_layer);
+        for layer in 0..n_layer {
+            let storage = match &key_codecs[layer] {
+                Some(cs) => KeyStorage::pq(cs.clone())
+                    .map_err(|e| anyhow::anyhow!("{e}"))?,
+                None => KeyStorage::Fp16,
             };
-            caches.push(KvCache::new(
-                h, d_k, cfg.cache_blocks, storage, value_storage));
+            let value_storage = match &val_codecs[layer] {
+                Some(cs) => ValueStorage::pq(cs.clone())
+                    .map_err(|e| anyhow::anyhow!("{e}"))?,
+                None => ValueStorage::Fp32,
+            };
+            let mut cache = KvCache::new(
+                h, d_k, cfg.cache_blocks, storage, value_storage);
+            if let Some(&thr) = thresholds.get(layer) {
+                cache.set_prune_threshold(Some(thr));
+            }
+            caches.push(cache);
         }
 
         let kernel = Self::build_kernel(cfg)?;
@@ -380,7 +608,76 @@ impl Engine {
             timers: PhaseTimers::new(),
             metrics: Arc::new(MetricsRegistry::new()),
             last_phases: Mutex::new(PhaseTimes::default()),
+            policy: cfg.policy.clone(),
+            summary,
+            last_pruned: AtomicU64::new(0),
         })
+    }
+
+    /// The active compression policy.
+    pub fn policy(&self) -> &CompressionPolicy {
+        &self.policy
+    }
+
+    /// The build-time policy record: which m each (layer, head, side)
+    /// got, its estimated score fidelity (Spearman ρ on calibration
+    /// probes), the per-layer prune thresholds and the total bits/token
+    /// actually spent — the ablation harness's per-head rho source.
+    pub fn policy_record(&self) -> &PolicySummary {
+        &self.summary
+    }
+
+    /// Tokens the L2-norm pruning policy has dropped so far, summed
+    /// over every layer cache (0 unless `--policy prune-<frac>`).
+    pub fn pruned_tokens(&self) -> u64 {
+        self.caches.iter().map(|c| c.pruned_tokens()).sum()
+    }
+
+    /// Assemble the [`PolicySummary`] at build time (pure observation;
+    /// the rho estimate reuses the calibration keys as probe queries).
+    #[allow(clippy::too_many_arguments)]
+    fn build_policy_summary(
+        cfg: &EngineConfig,
+        calib: &Option<PrefillOutput>,
+        key_codecs: &[Option<Vec<PqCodec>>],
+        val_codecs: &[Option<Vec<PqCodec>>],
+        thresholds: &[f32],
+        h: usize,
+        d_k: usize,
+    ) -> PolicySummary {
+        let mut total_bits = 0usize;
+        let mut heads = Vec::with_capacity(cfg.model.n_layer * h);
+        for layer in 0..cfg.model.n_layer {
+            for head in 0..h {
+                let kc = key_codecs[layer].as_ref().map(|cs| &cs[head]);
+                let vc = val_codecs[layer].as_ref().map(|cs| &cs[head]);
+                for c in [kc, vc].into_iter().flatten() {
+                    total_bits +=
+                        c.codebook.m * code_bits(c.codebook.k);
+                }
+                let rho = match (kc, calib) {
+                    (Some(c), Some(out)) => estimate_rho(
+                        &out.head_keys(layer, head, d_k),
+                        c,
+                        d_k,
+                    ),
+                    _ => 1.0,
+                };
+                heads.push(HeadPolicy {
+                    layer,
+                    head,
+                    key_m: kc.map_or(0, |c| c.codebook.m),
+                    value_m: vc.map_or(0, |c| c.codebook.m),
+                    rho,
+                });
+            }
+        }
+        PolicySummary {
+            policy: cfg.policy.name(),
+            total_bits_per_token: total_bits,
+            prune_thresholds: thresholds.to_vec(),
+            heads,
+        }
     }
 
     /// The engine's live telemetry registry. Shared (`Arc`) so the
@@ -739,7 +1036,14 @@ impl Engine {
         if !self.swapped_meta.contains_key(&id) {
             return Err(CacheError::UnknownSeq(id));
         }
-        let need = self.caches[0].swapped_blocks(id);
+        // max across layers: per-layer pruning thresholds can leave
+        // layers with different survivor counts (hence block counts)
+        let need = self
+            .caches
+            .iter()
+            .map(|c| c.swapped_blocks(id))
+            .max()
+            .unwrap_or(0);
         if self.free_blocks() < need {
             return Err(CacheError::OutOfBlocks);
         }
@@ -767,22 +1071,28 @@ impl Engine {
     }
 
     /// Blocks per layer a swapped sequence needs at swap-in (0 if not
-    /// swapped).
+    /// swapped; the max across layers, since per-layer pruning can
+    /// leave layers holding different survivor counts).
     pub fn swapped_blocks(&self, id: SeqId) -> usize {
-        self.caches[0].swapped_blocks(id)
+        self.caches
+            .iter()
+            .map(|c| c.swapped_blocks(id))
+            .max()
+            .unwrap_or(0)
     }
 
     /// Estimated spill-store bytes for swapping a live sequence out,
     /// under the paper's byte model (codes 1 B, raw elements 2 B) —
     /// the recompute-vs-swap cost model's copy-side input.
     pub fn seq_spill_bytes(&self, id: SeqId) -> usize {
-        let len = self.seq_pos(id).unwrap_or(0);
+        // per-layer lengths (not pos): pruning drops tokens per layer,
+        // and the all-heads byte helpers price heterogeneous per-head m
         self.caches
             .iter()
             .map(|c| {
-                len * c.h
-                    * (c.key_bytes_per_token_per_head()
-                        + c.value_bytes_per_token_per_head())
+                c.seq_len(id).unwrap_or(0)
+                    * (c.key_bytes_per_token_all_heads()
+                        + c.value_bytes_per_token_all_heads())
             })
             .sum()
     }
@@ -941,11 +1251,19 @@ impl Engine {
                 TickEntry::Prefill { .. } => prefill_toks += s as u64,
             }
         }
+        // summed per cache: calibrated policies give layers different
+        // bytes/token, and the all-heads helpers price per-head m.
+        // Under pruning this is an upper bound (positions, not
+        // survivors) — acceptable for a traffic signal.
         let scan_bytes = (attended
-            * h
-            * (self.caches[0].key_bytes_per_token_per_head()
-                + self.caches[0].value_bytes_per_token_per_head())
-            * self.model.n_layer()) as u64;
+            * self
+                .caches
+                .iter()
+                .map(|c| {
+                    c.key_bytes_per_token_all_heads()
+                        + c.value_bytes_per_token_all_heads()
+                })
+                .sum::<usize>()) as u64;
 
         // row bookkeeping: entry i owns flat rows
         // entry_row0[i] .. entry_row0[i] + span_i
@@ -1024,7 +1342,8 @@ impl Engine {
 
             // prologue: group A's layer-0 projections + appends
             let mut qkv_a = stage_qkv(model, timers, 0, &xs, threads);
-            stage_append(&mut caches[0], ents_a, spans_a, &qkv_a, h * d_k)?;
+            let mut pfx_a = stage_append(
+                &mut caches[0], ents_a, spans_a, &qkv_a, h * d_k)?;
             for layer in 0..n_layer {
                 // overlap 1: A attends layer l ∥ B projects layer l
                 let (res_a, qkv_b) = pool.overlap(
@@ -1032,16 +1351,18 @@ impl Engine {
                     || {
                         stage_attend(
                             &mut **kernel, &caches[layer], timers,
-                            ents_a, spans_a, &qkv_a, threads, h, d_k,
+                            ents_a, spans_a, &pfx_a, &qkv_a, threads,
+                            h, d_k,
                         )
                     },
                 );
                 let outs_a = res_a?;
                 sp.put_f32(std::mem::take(&mut qkv_a));
                 // overlap 2: A's MLP tail ∥ B's serial cache appends
+                let pfx_b;
                 {
                     let xs_a = &mut xs;
-                    let (res, ()) = pool.overlap(
+                    let (append_res, ()) = pool.overlap(
                         move || {
                             stage_tail(
                                 model, timers, layer, spans_a, outs_a,
@@ -1055,7 +1376,7 @@ impl Engine {
                             )
                         },
                     );
-                    res?;
+                    pfx_b = append_res?;
                 }
                 if layer + 1 < n_layer {
                     // overlap 3: B attends layer l ∥ A projects l+1
@@ -1068,8 +1389,8 @@ impl Engine {
                         || {
                             stage_attend(
                                 &mut **kernel, &caches[layer], timers,
-                                ents_b, spans_b, &qkv_b, threads, h,
-                                d_k,
+                                ents_b, spans_b, &pfx_b, &qkv_b,
+                                threads, h, d_k,
                             )
                         },
                     );
@@ -1077,7 +1398,7 @@ impl Engine {
                     qkv_a = q_next;
                     // overlap 4: B's MLP tail ∥ A's appends for l+1
                     let xs_b_ref = &mut xs_b;
-                    let (res, ()) = pool.overlap(
+                    let (append_res, ()) = pool.overlap(
                         move || {
                             stage_tail(
                                 model, timers, layer, spans_b, outs_b,
@@ -1091,11 +1412,11 @@ impl Engine {
                             )
                         },
                     );
-                    res?;
+                    pfx_a = append_res?;
                 } else {
                     let outs_b = stage_attend(
                         &mut **kernel, &caches[layer], timers, ents_b,
-                        spans_b, &qkv_b, threads, h, d_k,
+                        spans_b, &pfx_b, &qkv_b, threads, h, d_k,
                     )?;
                     stage_tail(
                         model, timers, layer, spans_b, outs_b,
@@ -1109,12 +1430,12 @@ impl Engine {
         } else {
             for layer in 0..n_layer {
                 let qkv = stage_qkv(model, timers, layer, &xs, threads);
-                stage_append(
+                let pfx = stage_append(
                     &mut caches[layer], entries, &spans, &qkv, h * d_k,
                 )?;
                 let outs = stage_attend(
                     &mut **kernel, &caches[layer], timers, entries,
-                    &spans, &qkv, threads, h, d_k,
+                    &spans, &pfx, &qkv, threads, h, d_k,
                 )?;
                 stage_tail(
                     model, timers, layer, &spans, outs, &mut xs,
@@ -1187,6 +1508,11 @@ impl Engine {
         m.inc(Ctr::PrefillTokens, prefill_tokens);
         m.inc(Ctr::ScanBytes, scan_bytes);
 
+        // pruning-policy drops since the last publish (all layers)
+        let pruned = self.pruned_tokens();
+        let prev = self.last_pruned.swap(pruned, Ordering::Relaxed);
+        m.inc(Ctr::PrunedTokens, pruned.saturating_sub(prev));
+
         // Phase work since the previous publish. A concurrent
         // `take_phase_times` resets both the accumulators and the
         // baseline, so deltas are clamped at zero rather than wrapping.
@@ -1232,6 +1558,60 @@ impl Engine {
     }
 }
 
+// ---- policy resolution helpers -----------------------------------------
+
+/// Candidate subspace counts for the calibrated policy: halve, keep or
+/// double the backend's base m, clipped to divisors of d_k. The 3-wide
+/// ladder bounds codebook training at 3× the uniform cost while still
+/// letting sensitive heads take bits from insensitive ones.
+fn candidate_ms(d_k: usize, base: usize) -> Vec<usize> {
+    [base / 2, base, base * 2]
+        .into_iter()
+        .filter(|&m| m >= 1 && m <= d_k && d_k % m == 0)
+        .collect()
+}
+
+/// Bits per stored code for a K-centroid codebook (⌈log2 K⌉).
+fn code_bits(k: usize) -> usize {
+    (usize::BITS - (k - 1).leading_zeros()) as usize
+}
+
+/// Spearman-ρ estimate of one head's key-score fidelity: calibration
+/// keys double as probe queries, scored exactly and through the
+/// codec's reconstruction against up to 128 calibration keys. A cheap
+/// build-time proxy for the paper's serving-path rho (reported per
+/// (layer, head) in [`PolicySummary`]), not a replacement for the
+/// paper_fidelity suite.
+fn estimate_rho(keys: &[f32], codec: &PqCodec, d_k: usize) -> f64 {
+    let n = (keys.len() / d_k).min(128);
+    if n < 8 {
+        return 1.0;
+    }
+    let recon: Vec<Vec<f32>> = (0..n)
+        .map(|t| {
+            let k = &keys[t * d_k..(t + 1) * d_k];
+            codec.decode(&codec.encode(k))
+        })
+        .collect();
+    let probes = [0, n / 3, (2 * n) / 3, n - 1];
+    let mut sum = 0.0f64;
+    for &p in &probes {
+        let q = &keys[p * d_k..(p + 1) * d_k];
+        let exact: Vec<f64> = (0..n)
+            .map(|t| {
+                crate::tensor::dot(q, &keys[t * d_k..(t + 1) * d_k])
+                    as f64
+            })
+            .collect();
+        let approx: Vec<f64> = recon
+            .iter()
+            .map(|r| crate::tensor::dot(q, r) as f64)
+            .collect();
+        sum += crate::metrics::spearman_rho(&exact, &approx);
+    }
+    sum / probes.len() as f64
+}
+
 // ---- tick stages -------------------------------------------------------
 //
 // One serving tick decomposes, per layer and per entry group, into
@@ -1263,14 +1643,21 @@ fn stage_qkv(
 }
 
 /// Append one group's K/V rows to a layer cache, entry order then row
-/// order — identical append order to the pre-pipeline engine.
+/// order — identical append order to the pre-pipeline engine. Returns
+/// each row's causal prefix (the sequence's length right after its
+/// append attempt), flat in group row order: with pruning off this
+/// equals the classic `seq_len - rows + r + 1` derivation; with
+/// pruning on, skipped appends leave the length unchanged and the
+/// attention stage must score against the survivor counts instead.
 fn stage_append(
     cache: &mut KvCache,
     entries: &[TickEntry<'_>],
     spans: &[usize],
     qkv: &[f32],
     d: usize,
-) -> anyhow::Result<()> {
+) -> anyhow::Result<Vec<usize>> {
+    let mut prefixes =
+        Vec::with_capacity(spans.iter().sum::<usize>());
     let mut r = 0usize;
     for (e, &s) in entries.iter().zip(spans) {
         let id = e.seq();
@@ -1283,10 +1670,15 @@ fn stage_append(
                     &qkv[base + 2 * d..base + 3 * d],
                 )
                 .map_err(|e| anyhow::anyhow!("cache append: {e}"))?;
+            prefixes.push(
+                cache
+                    .seq_len(id)
+                    .map_err(|e| anyhow::anyhow!("cache append: {e}"))?,
+            );
             r += 1;
         }
     }
-    Ok(())
+    Ok(prefixes)
 }
 
 /// Attention for one group and layer: build the (seq, head) span plan
@@ -1300,6 +1692,7 @@ fn stage_attend(
     timers: &PhaseTimers,
     entries: &[TickEntry<'_>],
     spans: &[usize],
+    prefixes: &[usize],
     qkv: &[f32],
     threads: usize,
     h: usize,
@@ -1326,8 +1719,10 @@ fn stage_attend(
         r0 += s;
     }
     // the group's plan: (seq, head) span items, seq-major with
-    // ascending heads (the kernel contract)
+    // ascending heads (the kernel contract); each item carries its
+    // rows' append-time prefixes so pruned tokens are never scored
     let mut items = Vec::with_capacity(entries.len() * h);
+    let mut e_r0 = 0usize;
     for (i, e) in entries.iter().enumerate() {
         let s = spans[i];
         for head in 0..h {
@@ -1336,8 +1731,10 @@ fn stage_attend(
                 head,
                 q: &qbufs[i][head * s * d_k..(head + 1) * s * d_k],
                 rows: s,
+                prefixes: Some(&prefixes[e_r0..e_r0 + s]),
             });
         }
+        e_r0 += s;
     }
     let plan = DecodePlan {
         cache,
@@ -1431,6 +1828,7 @@ mod tests {
             prefill_chunk: 0,
             pipeline: true,
             prefix_cache: false,
+            policy: CompressionPolicy::Uniform,
         }
     }
 
@@ -1830,5 +2228,182 @@ mod tests {
         let t_b: Vec<u32> =
             (0..5).map(|_| b.decode_one(7).unwrap()).collect();
         assert_eq!(t_a, t_b);
+    }
+
+    #[test]
+    fn calibrated_policy_fits_budget_and_serves_heterogeneous_m() {
+        // test_tiny: 2 layers × 4 heads = 8 key slots, d_k = 16, so
+        // the m ∈ {2,4,8} ladder at 6 bits/code spans 96..384
+        // bits/token. 150 forces a mixed assignment: uniform-4 (192)
+        // does not fit, uniform-2 (96) leaves bits on the table.
+        let mut cfg = tiny_cfg(AttentionBackend::Lookat { m: 4, k: 64 });
+        cfg.policy = CompressionPolicy::Calibrated { bits: 150 };
+        let mut e = Engine::build(&cfg).unwrap();
+
+        let rec = e.policy_record().clone();
+        assert_eq!(rec.policy, "calibrated-150");
+        assert!(
+            rec.total_bits_per_token <= 150,
+            "spent {} bits over the 150-bit budget",
+            rec.total_bits_per_token
+        );
+        assert_eq!(rec.heads.len(), 8);
+        let ms: Vec<usize> = rec.heads.iter().map(|h| h.key_m).collect();
+        for h in &rec.heads {
+            assert!([2, 4, 8].contains(&h.key_m), "key_m {}", h.key_m);
+            assert_eq!(h.value_m, 0, "fp32 values stay raw");
+            assert!(
+                h.rho.is_finite() && h.rho <= 1.0 + 1e-9,
+                "rho {} out of range",
+                h.rho
+            );
+        }
+        assert!(
+            ms.iter().any(|&m| m != ms[0]),
+            "budget 150 should split heads across m tiers, got {ms:?}"
+        );
+        assert!(rec.min_rho() <= 1.0 + 1e-9);
+
+        // serves end-to-end, and the whole resolution is deterministic
+        let ids = ByteTokenizer::new().encode("calibrated serve probe");
+        e.start_seq(1, &ids).unwrap();
+        let t_a: Vec<u32> =
+            (0..5).map(|_| e.decode_one(1).unwrap()).collect();
+        let mut b = Engine::build(&cfg).unwrap();
+        let ms_b: Vec<usize> = b
+            .policy_record()
+            .heads
+            .iter()
+            .map(|h| h.key_m)
+            .collect();
+        assert_eq!(ms, ms_b, "allocation not deterministic");
+        b.start_seq(2, &ids).unwrap();
+        let t_b: Vec<u32> =
+            (0..5).map(|_| b.decode_one(2).unwrap()).collect();
+        assert_eq!(t_a, t_b);
+    }
+
+    #[test]
+    fn prune_policy_drops_low_norm_tokens_and_reports_them() {
+        let mut cfg = tiny_cfg(AttentionBackend::Fp16Exact);
+        cfg.policy = CompressionPolicy::Prune { frac: 0.5 };
+        let mut e = Engine::build(&cfg).unwrap();
+        let rec = e.policy_record().clone();
+        assert_eq!(rec.policy, "prune-0.5");
+        assert_eq!(
+            rec.prune_thresholds.len(),
+            2,
+            "one threshold per layer"
+        );
+        assert!(rec.prune_thresholds.iter().all(|t| *t > 0.0));
+
+        let ids = ByteTokenizer::new().encode(
+            "a long enough prompt that the median-norm threshold must \
+             drop a healthy fraction of its tokens from the cache",
+        );
+        e.start_seq(1, &ids).unwrap();
+        let t_a: Vec<u32> =
+            (0..4).map(|_| e.decode_one(1).unwrap()).collect();
+        let pruned = e.pruned_tokens();
+        assert!(pruned > 0, "median threshold pruned nothing");
+        // every pruned token is one the cache never stored:
+        // cache_stats reports layer 0, which saw ids.len()+4 appends
+        let stats = e.cache_stats();
+        assert!(stats.tokens < ids.len() + 4);
+        assert!(stats.tokens >= 1, "first token is never pruned");
+        // the delta-published counter catches up to the live total
+        assert_eq!(e.metrics().counter(Ctr::PrunedTokens), pruned);
+
+        // pruning is part of the (seed, prompt) trajectory: rebuilds
+        // agree on both the tokens and the drop count
+        let mut b = Engine::build(&cfg).unwrap();
+        b.start_seq(9, &ids).unwrap();
+        let t_b: Vec<u32> =
+            (0..4).map(|_| b.decode_one(9).unwrap()).collect();
+        assert_eq!(t_a, t_b);
+        assert_eq!(b.pruned_tokens(), pruned);
+    }
+
+    #[test]
+    fn policy_validation_rejects_unsupported_combinations() {
+        // calibrated with nothing to budget
+        let mut cfg = tiny_cfg(AttentionBackend::Fp16Exact);
+        cfg.policy = CompressionPolicy::Calibrated { bits: 256 };
+        let err = Engine::build(&cfg).unwrap_err().to_string();
+        assert!(err.contains("needs a PQ side"), "{err}");
+
+        // budget below the minimal assignment
+        let mut cfg = tiny_cfg(AttentionBackend::Lookat { m: 4, k: 64 });
+        cfg.policy = CompressionPolicy::Calibrated { bits: 1 };
+        let err = Engine::build(&cfg).unwrap_err().to_string();
+        assert!(err.contains("budget"), "{err}");
+
+        // pruning breaks block-aligned prefix sharing
+        let mut cfg = tiny_cfg(AttentionBackend::Fp16Exact);
+        cfg.policy = CompressionPolicy::Prune { frac: 0.25 };
+        cfg.prefix_cache = true;
+        let err = Engine::build(&cfg).unwrap_err().to_string();
+        assert!(err.contains("prefix"), "{err}");
+
+        // PJRT artifacts bake in one global m — bail before any
+        // artifact loading happens
+        let mut cfg = tiny_cfg(AttentionBackend::PjrtFp16);
+        cfg.policy = CompressionPolicy::Prune { frac: 0.25 };
+        let err = Engine::build(&cfg).unwrap_err().to_string();
+        assert!(err.contains("PJRT"), "{err}");
+    }
+
+    #[test]
+    fn swap_and_prefix_cache_survive_calibrated_policy() {
+        // the PR-6 subsystems must keep working when per-head codec
+        // geometry is non-uniform: swap snapshots carry per-layer code
+        // widths, prefix sharing reuses whole heterogeneous blocks
+        let mut cfg = tiny_cfg(AttentionBackend::Lookat { m: 4, k: 64 });
+        cfg.policy = CompressionPolicy::Calibrated { bits: 150 };
+        let ids =
+            ByteTokenizer::new().encode("swap under calibrated policy");
+        let mut plain = Engine::build(&cfg).unwrap();
+        plain.start_seq(1, &ids).unwrap();
+        let want: Vec<u32> =
+            (0..6).map(|_| plain.decode_one(1).unwrap()).collect();
+
+        let mut e = Engine::build(&cfg).unwrap();
+        e.start_seq(1, &ids).unwrap();
+        let mut got: Vec<u32> =
+            (0..3).map(|_| e.decode_one(1).unwrap()).collect();
+        e.swap_out(1).unwrap();
+        assert!(e.swapped_blocks(1) > 0);
+        e.start_seq(2, &ids).unwrap();
+        e.decode_one(2).unwrap();
+        e.release(2).unwrap();
+        e.swap_in(1).unwrap();
+        got.extend((0..3).map(|_| e.decode_one(1).unwrap()));
+        assert_eq!(want, got, "swap roundtrip diverged under policy");
+
+        // prefix sharing under the same calibrated geometry
+        let tok = ByteTokenizer::new();
+        let prefix = "shared calibrated prefix ".repeat(4); // 100 tokens
+        let p1 = tok.encode(&format!("{prefix}tail one"));
+        let p2 = tok.encode(&format!("{prefix}tail two"));
+        cfg.prefix_cache = true;
+        let mut e = Engine::build(&cfg).unwrap();
+        assert_eq!(e.begin_seq_with_prefix(1, &p1).unwrap(), 0);
+        e.step_batch(&[TickEntry::Prefill { seq: 1, tokens: &p1 }])
+            .unwrap();
+        e.register_prefix(1, &p1);
+        let shared = e.begin_seq_with_prefix(2, &p2).unwrap();
+        assert_eq!(shared, 3 * BLOCK_TOKENS);
+        e.step_batch(&[TickEntry::Prefill {
+            seq: 2,
+            tokens: &p2[shared..],
+        }])
+        .unwrap();
+        let got: Vec<u32> =
+            (0..4).map(|_| e.decode_one(2).unwrap()).collect();
+        let mut r = Engine::build(&cfg).unwrap();
+        r.start_seq(2, &p2).unwrap();
+        let want: Vec<u32> =
+            (0..4).map(|_| r.decode_one(2).unwrap()).collect();
+        assert_eq!(want, got, "shared-prefix decode diverged");
     }
 }

@@ -9,6 +9,9 @@
 //!   [`crate::kvcache`]
 //! * [`batcher`] — continuous batching with cache-aware admission
 //!   control, chunked prefill and preemptive scheduling
+//! * [`policy`] — adaptive compression policies: per-(layer, head)
+//!   subspace budgets from calibration error, and L2-norm token
+//!   pruning, resolved once at engine build time
 //! * [`router`] — the front door: trace-driven serving loop, backpressure,
 //!   latency/throughput accounting
 //!
@@ -19,6 +22,7 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod policy;
 pub mod request;
 pub mod router;
 pub mod server;
@@ -28,6 +32,7 @@ pub use engine::{
     AttentionBackend, Engine, EngineConfig, TickEntry, TickOutcome,
     ValueBackend,
 };
+pub use policy::{CompressionPolicy, HeadPolicy, PolicySummary};
 pub use request::{CompletedRequest, Request, RequestState};
 pub use router::{Router, RouterConfig, ServingReport};
 pub use server::{Server, ServerConfig};

@@ -1,0 +1,467 @@
+//! Adaptive compression policies: how the engine distributes its
+//! compression budget across (layer, head, side) at build time.
+//!
+//! The paper's O(d_k/mK) fidelity bound says error tracks the
+//! per-subspace dimensionality — but sensitivity is not uniform across
+//! layers and heads. [`CompressionPolicy::Calibrated`] measures
+//! per-(layer, head) reconstruction error on the calibration corpus
+//! (the same prefill that trains the codebooks) and assigns each slot
+//! its own subspace count `m` inside a total bits/token budget, via
+//! the deterministic greedy allocator in [`allocate_budget`].
+//! [`CompressionPolicy::Prune`] drops low-L2-norm keys entirely
+//! ("A Simple and Effective L2 Norm-Based Strategy", PAPERS.md): the
+//! threshold is the `frac`-quantile of the calibration tokens' norms
+//! ([`prune_threshold`]) and tokens below it are never appended to the
+//! cache — attention runs over the surviving set.
+//!
+//! Everything here is pure (no engine, no I/O): resolution takes error
+//! tables in and returns per-slot subspace counts, so the budget
+//! invariants are unit- and property-testable in isolation. The engine
+//! wires the result into per-head codec sets
+//! ([`crate::kvcache::KeyStorage::pq`] accepts heterogeneous m) and
+//! records the outcome as a [`PolicySummary`] for reports.
+
+/// The policy axis of [`crate::coordinator::EngineConfig`]: resolved
+/// once at engine build, immutable afterwards.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CompressionPolicy {
+    /// One global (m, K) per cache side — the pre-policy engine,
+    /// bit-identical to it by construction (same codec training calls
+    /// in the same order).
+    Uniform,
+    /// Per-(layer, head, side) subspace counts chosen from calibration
+    /// error under a total budget of `bits` bits/token summed over
+    /// every PQ-coded (layer, head, side) slot.
+    Calibrated { bits: usize },
+    /// L2-norm token pruning: drop the lowest-norm `frac` fraction of
+    /// tokens (threshold calibrated per layer); codec geometry stays
+    /// uniform.
+    Prune { frac: f64 },
+}
+
+impl Default for CompressionPolicy {
+    fn default() -> Self {
+        CompressionPolicy::Uniform
+    }
+}
+
+impl CompressionPolicy {
+    /// Stable label for reports and bench scenario keys.
+    pub fn name(&self) -> String {
+        match self {
+            CompressionPolicy::Uniform => "uniform".into(),
+            CompressionPolicy::Calibrated { bits } => {
+                format!("calibrated-{bits}")
+            }
+            CompressionPolicy::Prune { frac } => format!("prune-{frac}"),
+        }
+    }
+
+    /// Parse the CLI spelling: `uniform`, `calibrated-<bits>` or
+    /// `prune-<frac>` (frac strictly inside (0, 1)).
+    pub fn parse(s: &str) -> Result<CompressionPolicy, String> {
+        let usage = format!(
+            "unknown --policy '{s}' (uniform, calibrated-<bits>, \
+             prune-<frac> with 0 < frac < 1)"
+        );
+        if s == "uniform" {
+            return Ok(CompressionPolicy::Uniform);
+        }
+        if let Some(b) = s.strip_prefix("calibrated-") {
+            let bits: usize = b.parse().map_err(|_| usage.clone())?;
+            if bits == 0 {
+                return Err(usage);
+            }
+            return Ok(CompressionPolicy::Calibrated { bits });
+        }
+        if let Some(fr) = s.strip_prefix("prune-") {
+            let frac: f64 = fr.parse().map_err(|_| usage.clone())?;
+            if !(frac > 0.0 && frac < 1.0) {
+                return Err(usage);
+            }
+            return Ok(CompressionPolicy::Prune { frac });
+        }
+        Err(usage)
+    }
+}
+
+/// Which cache side a budget item belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Side {
+    Key,
+    Value,
+}
+
+/// One (layer, head, side) slot competing for the bits/token budget.
+#[derive(Clone, Debug)]
+pub struct BudgetItem {
+    pub layer: usize,
+    pub head: usize,
+    pub side: Side,
+    /// bits per stored code on this side (⌈log2 K⌉)
+    pub code_bits: usize,
+    /// candidate subspace counts, strictly ascending in `m`, each with
+    /// its calibration error proxy (summed per-subspace k-means MSE)
+    pub candidates: Vec<(usize, f64)>,
+}
+
+impl BudgetItem {
+    fn bits_at(&self, choice: usize) -> usize {
+        self.candidates[choice].0 * self.code_bits
+    }
+}
+
+/// Deterministic budget allocation: pick one candidate `m` per item so
+/// that Σ m·code_bits ≤ `budget_bits`, greedily spending bits where
+/// they buy the most error reduction.
+///
+/// Every item starts at its cheapest candidate; each round upgrades
+/// the single (item, candidate) step with the best positive error
+/// reduction per extra bit that still fits the budget (first item wins
+/// ties, so the result is a pure function of the inputs). As a safety
+/// net the best *uniform* assignment that fits the budget is computed
+/// too, and wins if its total error is strictly lower — so a
+/// calibrated allocation never does worse than the uniform policy at
+/// equal total bits/token.
+///
+/// Returns the chosen candidate index per item, or an error if even
+/// the minimal assignment exceeds the budget.
+pub fn allocate_budget(
+    items: &[BudgetItem],
+    budget_bits: usize,
+) -> Result<Vec<usize>, String> {
+    for it in items {
+        assert!(
+            !it.candidates.is_empty()
+                && it.candidates.windows(2).all(|w| w[0].0 < w[1].0),
+            "candidates must be non-empty and ascending in m"
+        );
+    }
+    let mut choice = vec![0usize; items.len()];
+    let mut spent: usize =
+        items.iter().map(|it| it.bits_at(0)).sum();
+    if spent > budget_bits {
+        return Err(format!(
+            "bits/token budget {budget_bits} is below the minimal \
+             assignment ({spent} bits across {} slots)",
+            items.len()
+        ));
+    }
+    loop {
+        // best single upgrade: any later candidate of any item, ranked
+        // by error reduction per extra bit
+        let mut best: Option<(f64, usize, usize)> = None;
+        for (i, it) in items.iter().enumerate() {
+            let (_, e0) = it.candidates[choice[i]];
+            let base_bits = it.bits_at(choice[i]);
+            for j in choice[i] + 1..it.candidates.len() {
+                let extra = it.bits_at(j) - base_bits;
+                if spent + extra > budget_bits {
+                    continue;
+                }
+                let gain = (e0 - it.candidates[j].1) / extra as f64;
+                if gain <= 0.0 {
+                    continue;
+                }
+                if best.map_or(true, |(g, _, _)| gain > g) {
+                    best = Some((gain, i, j));
+                }
+            }
+        }
+        match best {
+            Some((_, i, j)) => {
+                spent += items[i].bits_at(j) - items[i].bits_at(choice[i]);
+                choice[i] = j;
+            }
+            None => break,
+        }
+    }
+
+    // uniform safety net: the calibrated result must never lose to the
+    // best single-m assignment at the same budget
+    let total = |ch: &[usize]| -> f64 {
+        items
+            .iter()
+            .zip(ch)
+            .map(|(it, &c)| it.candidates[c].1)
+            .sum()
+    };
+    let greedy_err = total(&choice);
+    if let Some(first) = items.first() {
+        for (ci, &(m, _)) in first.candidates.iter().enumerate() {
+            let uni: Option<Vec<usize>> = items
+                .iter()
+                .map(|it| {
+                    it.candidates.iter().position(|&(mm, _)| mm == m)
+                })
+                .collect();
+            let _ = ci;
+            let Some(uni) = uni else { continue };
+            let bits: usize = items
+                .iter()
+                .zip(&uni)
+                .map(|(it, &c)| it.bits_at(c))
+                .sum();
+            if bits <= budget_bits && total(&uni) < greedy_err {
+                return Ok(uni);
+            }
+        }
+    }
+    Ok(choice)
+}
+
+/// The norm threshold for [`CompressionPolicy::Prune`]: the
+/// `frac`-quantile of the calibration tokens' mean-head key L2 norms.
+/// Tokens whose norm falls strictly below the returned value are
+/// pruned at append time, so roughly `frac` of a calibration-like
+/// stream is dropped (`frac = 0` prunes nothing).
+pub fn prune_threshold(norms: &[f32], frac: f64) -> f32 {
+    assert!(!norms.is_empty(), "prune_threshold needs calibration norms");
+    let mut sorted = norms.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((frac * sorted.len() as f64) as usize).min(sorted.len() - 1);
+    sorted[idx]
+}
+
+/// Resolved policy outcome for one (layer, head): the telemetry /
+/// report surface of the tentpole ("rho-per-(layer,head) in the
+/// report", ROADMAP).
+#[derive(Clone, Copy, Debug)]
+pub struct HeadPolicy {
+    pub layer: usize,
+    pub head: usize,
+    /// key-side subspace count (0 = raw FP16 keys)
+    pub key_m: usize,
+    /// value-side subspace count (0 = raw FP32 values)
+    pub value_m: usize,
+    /// estimated key-score fidelity: Spearman ρ between exact and ADC
+    /// scores on calibration probes (1.0 for raw keys)
+    pub rho: f64,
+}
+
+/// The engine's record of what the policy resolved to, captured at
+/// build time and surfaced through `ServingReport`.
+#[derive(Clone, Debug, Default)]
+pub struct PolicySummary {
+    /// [`CompressionPolicy::name`] of the active policy
+    pub policy: String,
+    /// bits/token actually spent across every PQ (layer, head, side)
+    pub total_bits_per_token: usize,
+    /// per-layer prune thresholds (empty when pruning is off)
+    pub prune_thresholds: Vec<f32>,
+    /// one entry per (layer, head)
+    pub heads: Vec<HeadPolicy>,
+}
+
+impl PolicySummary {
+    /// Smallest per-(layer, head) rho estimate (1.0 when no PQ side
+    /// exists) — the single-number fidelity floor for reports.
+    pub fn min_rho(&self) -> f64 {
+        self.heads
+            .iter()
+            .map(|h| h.rho)
+            .fold(1.0f64, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(
+        layer: usize,
+        head: usize,
+        side: Side,
+        code_bits: usize,
+        cands: &[(usize, f64)],
+    ) -> BudgetItem {
+        BudgetItem {
+            layer,
+            head,
+            side,
+            code_bits,
+            candidates: cands.to_vec(),
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        for s in ["uniform", "calibrated-512", "prune-0.1"] {
+            let p = CompressionPolicy::parse(s).unwrap();
+            assert_eq!(p.name(), s);
+        }
+        for bad in [
+            "", "none", "calibrated-", "calibrated-0", "calibrated-x",
+            "prune-0", "prune-1", "prune-1.5", "prune-abc",
+        ] {
+            let err = CompressionPolicy::parse(bad).unwrap_err();
+            assert!(err.contains("--policy"), "{err}");
+            assert!(err.contains("calibrated-<bits>"), "{err}");
+        }
+    }
+
+    #[test]
+    fn allocator_spends_budget_where_error_drops_fastest() {
+        // head 0's error collapses with more subspaces, head 1's is
+        // already flat — the budget should go to head 0
+        let items = vec![
+            item(0, 0, Side::Key, 8, &[(2, 10.0), (4, 1.0), (8, 0.5)]),
+            item(0, 1, Side::Key, 8, &[(2, 1.0), (4, 0.99), (8, 0.98)]),
+        ];
+        // budget: 2+4 subspaces · 8 bits = 48 bits
+        let choice = allocate_budget(&items, 48).unwrap();
+        assert_eq!(items[0].candidates[choice[0]].0, 4);
+        assert_eq!(items[1].candidates[choice[1]].0, 2);
+    }
+
+    #[test]
+    fn allocator_errors_below_minimal_budget() {
+        let items =
+            vec![item(0, 0, Side::Key, 8, &[(2, 1.0), (4, 0.5)])];
+        let err = allocate_budget(&items, 15).unwrap_err();
+        assert!(err.contains("budget"), "{err}");
+    }
+
+    #[test]
+    fn allocator_never_loses_to_uniform_at_equal_bits() {
+        // adversarial: greedy's per-bit ranking would splurge on item
+        // 0's early win and strand item 1 at its worst candidate; the
+        // uniform safety net must still hold
+        let items = vec![
+            item(0, 0, Side::Key, 8, &[(2, 5.0), (4, 4.9), (8, 0.1)]),
+            item(0, 1, Side::Key, 8, &[(2, 5.0), (4, 0.2), (8, 0.19)]),
+        ];
+        for budget in [32usize, 48, 64, 96, 128] {
+            let choice = allocate_budget(&items, budget).unwrap();
+            let err: f64 = items
+                .iter()
+                .zip(&choice)
+                .map(|(it, &c)| it.candidates[c].1)
+                .sum();
+            // best uniform at this budget
+            let mut best_uni = f64::INFINITY;
+            for &(m, _) in &items[0].candidates {
+                let bits: usize =
+                    items.iter().map(|it| m * it.code_bits).sum();
+                if bits > budget {
+                    continue;
+                }
+                let e: f64 = items
+                    .iter()
+                    .map(|it| {
+                        it.candidates
+                            .iter()
+                            .find(|&&(mm, _)| mm == m)
+                            .unwrap()
+                            .1
+                    })
+                    .sum();
+                best_uni = best_uni.min(e);
+            }
+            if best_uni.is_finite() {
+                assert!(
+                    err <= best_uni + 1e-12,
+                    "budget {budget}: calibrated {err} > uniform \
+                     {best_uni}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn allocation_property_budget_and_determinism() {
+        // property: for random error tables the allocation (a) never
+        // exceeds the budget, (b) is reproducible from identical
+        // inputs — the "deterministic for a fixed calibration seed"
+        // half of the tentpole contract
+        crate::prop_assert!("policy-budget", 200, |g| {
+            let n_items = g.usize_in(1, 12);
+            let code_bits = [4usize, 6, 8][g.usize_in(0, 2)];
+            let items: Vec<BudgetItem> = (0..n_items)
+                .map(|i| {
+                    // errors drawn decreasing-ish in m, like real
+                    // k-means residuals
+                    let mut e = g.f32_in(0.5, 4.0) as f64;
+                    let cands: Vec<(usize, f64)> = [2usize, 4, 8, 16]
+                        .iter()
+                        .map(|&m| {
+                            e *= g.f32_in(0.3, 1.05) as f64;
+                            (m, e)
+                        })
+                        .collect();
+                    BudgetItem {
+                        layer: i / 4,
+                        head: i % 4,
+                        side: if i % 2 == 0 {
+                            Side::Key
+                        } else {
+                            Side::Value
+                        },
+                        code_bits,
+                        candidates: cands,
+                    }
+                })
+                .collect();
+            let min_bits: usize =
+                items.iter().map(|it| it.bits_at(0)).sum();
+            let budget =
+                min_bits + g.usize_in(0, 16 * code_bits * n_items);
+            let a = allocate_budget(&items, budget)
+                .map_err(|e| e.to_string())?;
+            let spent: usize = items
+                .iter()
+                .zip(&a)
+                .map(|(it, &c)| it.bits_at(c))
+                .sum();
+            if spent > budget {
+                return Err(format!("spent {spent} > budget {budget}"));
+            }
+            let b = allocate_budget(&items, budget).unwrap();
+            if a != b {
+                return Err("allocation is not deterministic".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prune_threshold_is_the_frac_quantile() {
+        let norms: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        // 10% quantile of 1..=100 → the 11th smallest (index 10)
+        assert_eq!(prune_threshold(&norms, 0.1), 11.0);
+        // pruning is strict-below, so frac→0 keeps everything
+        assert_eq!(prune_threshold(&norms, 0.0), 1.0);
+        assert_eq!(prune_threshold(&norms, 0.999), 100.0);
+        // order-independent
+        let mut rev = norms.clone();
+        rev.reverse();
+        assert_eq!(prune_threshold(&rev, 0.1), 11.0);
+    }
+
+    #[test]
+    fn summary_min_rho_floors_over_heads() {
+        let s = PolicySummary {
+            policy: "calibrated-256".into(),
+            total_bits_per_token: 256,
+            prune_thresholds: Vec::new(),
+            heads: vec![
+                HeadPolicy {
+                    layer: 0,
+                    head: 0,
+                    key_m: 4,
+                    value_m: 0,
+                    rho: 0.99,
+                },
+                HeadPolicy {
+                    layer: 0,
+                    head: 1,
+                    key_m: 2,
+                    value_m: 0,
+                    rho: 0.97,
+                },
+            ],
+        };
+        assert!((s.min_rho() - 0.97).abs() < 1e-12);
+        assert_eq!(PolicySummary::default().min_rho(), 1.0);
+    }
+}

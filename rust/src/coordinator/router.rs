@@ -8,6 +8,7 @@ use std::sync::Arc;
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::engine::{Engine, EngineConfig};
+use super::policy::HeadPolicy;
 use super::request::{CompletedRequest, Request};
 use crate::model::ByteTokenizer;
 use crate::telemetry::{Hist, HistogramSnapshot, TraceRing};
@@ -36,6 +37,17 @@ pub struct ServingReport {
     /// recorded separately from `backend` so baseline series keyed on
     /// the label stay stable across machines
     pub scan_path: String,
+    /// active compression policy label ([`super::CompressionPolicy::name`])
+    pub policy: String,
+    /// bits/token the policy spent across every PQ (layer, head, side)
+    pub policy_bits_per_token: usize,
+    /// resolved per-(layer, head) policy: subspace counts and the
+    /// build-time Spearman-ρ fidelity estimate — the ablation harness's
+    /// per-head rho column
+    pub head_policies: Vec<HeadPolicy>,
+    /// tokens the L2-norm pruning policy dropped over the engine's
+    /// lifetime (0 unless `--policy prune-<frac>`)
+    pub pruned_tokens: u64,
     pub completed: Vec<CompletedRequest>,
     pub rejected: usize,
     pub wall_s: f64,
@@ -96,10 +108,43 @@ impl ServingReport {
             &self.completed.iter().map(|c| c.e2e()).collect::<Vec<_>>())
     }
 
+    /// Smallest per-(layer, head) rho estimate in the resolved policy
+    /// (1.0 when no head carries a PQ codec).
+    pub fn min_rho(&self) -> f64 {
+        self.head_policies
+            .iter()
+            .map(|h| h.rho)
+            .fold(1.0f64, f64::min)
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("backend", Json::Str(self.backend.clone()));
         o.set("scan_path", Json::Str(self.scan_path.clone()));
+        o.set("policy", Json::Str(self.policy.clone()));
+        o.set(
+            "policy_bits_per_token",
+            Json::Num(self.policy_bits_per_token as f64),
+        );
+        o.set("policy_min_rho", Json::Num(self.min_rho()));
+        o.set("pruned_tokens", Json::Num(self.pruned_tokens as f64));
+        o.set(
+            "head_policies",
+            Json::Arr(
+                self.head_policies
+                    .iter()
+                    .map(|h| {
+                        Json::from_pairs(vec![
+                            ("layer", Json::Num(h.layer as f64)),
+                            ("head", Json::Num(h.head as f64)),
+                            ("key_m", Json::Num(h.key_m as f64)),
+                            ("value_m", Json::Num(h.value_m as f64)),
+                            ("rho", Json::Num(h.rho)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
         o.set("completed", Json::Num(self.completed.len() as f64));
         o.set("rejected", Json::Num(self.rejected as f64));
         o.set("wall_s", Json::Num(self.wall_s));
@@ -164,20 +209,22 @@ impl ServingReport {
         let ttft = self.ttft_summary();
         let e2e = self.e2e_summary();
         format!(
-            "backend={:<14} scan={:<6} completed={:<4} rejected={:<3} \
-             preempt={:<3} \
-             swap={}/{} prefix_hits={:<3} wall={:>7.2}s \
+            "backend={:<14} scan={:<6} policy={:<12} completed={:<4} \
+             rejected={:<3} preempt={:<3} \
+             swap={}/{} prefix_hits={:<3} pruned={:<5} wall={:>7.2}s \
              decode_tok/s={:>8.1} ttft_p50={} \
              e2e_p50={} key_cache_peak={:>8} B \
              value_cache_peak={:>8} B",
             self.backend,
             self.scan_path,
+            self.policy,
             self.completed.len(),
             self.rejected,
             self.preemptions,
             self.swap_outs,
             self.swap_ins,
             self.prefix_hits,
+            self.pruned_tokens,
             self.wall_s,
             self.throughput_tok_s(),
             fmt_ms(ttft.as_ref().map(|t| t.p50)),
@@ -292,9 +339,14 @@ impl Router {
         }
 
         let scratch1 = scratch().arena_stats();
+        let policy_rec = self.batcher.engine().policy_record().clone();
         Ok(ServingReport {
             backend: self.batcher.engine().label(),
             scan_path: self.batcher.engine().scan_path().to_string(),
+            policy: policy_rec.policy,
+            policy_bits_per_token: policy_rec.total_bits_per_token,
+            head_policies: policy_rec.heads,
+            pruned_tokens: self.batcher.engine().pruned_tokens(),
             completed: std::mem::take(&mut self.batcher.completed),
             // drain, don't peek: a reused router (set_max_batch sweeps)
             // must not re-report earlier runs' rejections
@@ -330,6 +382,7 @@ impl Router {
 mod tests {
     use super::*;
     use crate::coordinator::engine::{AttentionBackend, ValueBackend};
+    use crate::coordinator::CompressionPolicy;
     use crate::model::ModelConfig;
     use crate::workload::{TraceConfig, TraceGenerator};
 
@@ -346,6 +399,7 @@ mod tests {
                 prefill_chunk: 0,
                 pipeline: true,
                 prefix_cache: false,
+                policy: CompressionPolicy::Uniform,
             },
             batcher: BatcherConfig {
                 max_batch: 4,
@@ -424,6 +478,7 @@ mod tests {
                 prefill_chunk: 0,
                 pipeline: true,
                 prefix_cache: false,
+                policy: CompressionPolicy::Uniform,
             },
             batcher: BatcherConfig {
                 max_batch: 4,
@@ -486,6 +541,11 @@ mod tests {
         for k in [
             "backend",
             "scan_path",
+            "policy",
+            "policy_bits_per_token",
+            "policy_min_rho",
+            "pruned_tokens",
+            "head_policies",
             "completed",
             "wall_s",
             "throughput_tok_s",
@@ -498,6 +558,11 @@ mod tests {
         ] {
             assert!(j.get(k).is_some(), "missing {k}");
         }
+        assert_eq!(
+            j.get("policy").unwrap().as_str(),
+            Some("uniform"),
+            "default policy label"
+        );
         let phases = j.get("phases").unwrap();
         for k in
             ["lut_build_s", "scan_s", "value_decode_s", "qkv_s", "mlp_s"]
@@ -527,6 +592,7 @@ mod tests {
                 prefill_chunk: 8,
                 pipeline: true,
                 prefix_cache: false,
+                policy: CompressionPolicy::Uniform,
             },
             batcher: BatcherConfig {
                 max_batch: 4,
@@ -616,5 +682,78 @@ mod tests {
         let reqs2 = r.tokenize_trace(&small_trace(4));
         let report2 = r.serve_trace(reqs2).unwrap();
         assert_eq!(report2.ttft_hist.count as usize, 4);
+    }
+
+    #[test]
+    fn report_carries_per_head_policy_detail() {
+        // calibrated run: the report must expose each (layer, head)'s
+        // resolved m and rho — the ablation harness reads these
+        let mut r = Router::build(RouterConfig {
+            engine: EngineConfig {
+                model: ModelConfig::test_tiny(),
+                backend: AttentionBackend::Lookat { m: 4, k: 64 },
+                value_backend: ValueBackend::Fp32,
+                seed: 5,
+                cache_blocks: 128,
+                calib_tokens: 64,
+                decode_threads: 2,
+                prefill_chunk: 0,
+                pipeline: true,
+                prefix_cache: false,
+                policy: CompressionPolicy::Calibrated { bits: 150 },
+            },
+            batcher: BatcherConfig::default(),
+            max_prompt_tokens: 48,
+        })
+        .unwrap();
+        let reqs = r.tokenize_trace(&small_trace(3));
+        let report = r.serve_trace(reqs).unwrap();
+        assert_eq!(report.completed.len(), 3);
+        assert_eq!(report.policy, "calibrated-150");
+        assert!(report.policy_bits_per_token <= 150);
+        assert_eq!(report.head_policies.len(), 8); // 2 layers × 4 heads
+        assert!(report.min_rho().is_finite());
+        let j = report.to_json();
+        let heads = j.get("head_policies").unwrap().as_arr().unwrap();
+        assert_eq!(heads.len(), 8);
+        for h in heads {
+            let m =
+                h.get("key_m").and_then(Json::as_f64).unwrap() as usize;
+            assert!([2, 4, 8].contains(&m), "key_m {m}");
+            assert!(h.get("rho").and_then(Json::as_f64).is_some());
+        }
+
+        // prune run: the dropped-token counter reaches the report
+        let mut rp = Router::build(RouterConfig {
+            engine: EngineConfig {
+                model: ModelConfig::test_tiny(),
+                backend: AttentionBackend::Fp16Exact,
+                value_backend: ValueBackend::Fp32,
+                seed: 5,
+                cache_blocks: 128,
+                calib_tokens: 64,
+                decode_threads: 2,
+                prefill_chunk: 0,
+                pipeline: true,
+                prefix_cache: false,
+                policy: CompressionPolicy::Prune { frac: 0.5 },
+            },
+            batcher: BatcherConfig::default(),
+            max_prompt_tokens: 48,
+        })
+        .unwrap();
+        let reqs = rp.tokenize_trace(&small_trace(3));
+        let report = rp.serve_trace(reqs).unwrap();
+        assert_eq!(report.completed.len(), 3);
+        assert_eq!(report.policy, "prune-0.5");
+        assert!(report.pruned_tokens > 0, "no tokens pruned");
+        assert!(
+            report
+                .to_json()
+                .get("pruned_tokens")
+                .and_then(Json::as_f64)
+                .unwrap()
+                > 0.0
+        );
     }
 }

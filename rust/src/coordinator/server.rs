@@ -507,6 +507,7 @@ mod tests {
                 prefill_chunk: 16,
                 pipeline: true,
                 prefix_cache: false,
+                policy: crate::coordinator::CompressionPolicy::Uniform,
             },
             batcher: BatcherConfig {
                 max_batch: 2,
@@ -584,6 +585,7 @@ mod tests {
                 prefill_chunk: 16,
                 pipeline: true,
                 prefix_cache: false,
+                policy: crate::coordinator::CompressionPolicy::Uniform,
             },
             batcher: BatcherConfig {
                 max_batch: 2,

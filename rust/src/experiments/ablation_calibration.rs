@@ -12,7 +12,7 @@ use crate::util::json::Json;
 use crate::workload::Genre;
 
 pub struct Matrix {
-    /// cosine[i][j]: trained on genre i, evaluated on genre j
+    /// `cosine[i][j]`: trained on genre i, evaluated on genre j
     pub cosine: Vec<Vec<f64>>,
     pub spearman: Vec<Vec<f64>>,
 }

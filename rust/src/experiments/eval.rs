@@ -330,6 +330,7 @@ impl EvalContext {
                     head,
                     q: &sample.queries[head][t * d_k..(t + 1) * d_k],
                     rows: 1,
+                    prefixes: None,
                 })
                 .collect();
             let plan =

@@ -22,24 +22,37 @@ pub enum KeyStorage {
 
 impl KeyStorage {
     /// Validated PQ storage: one codec per head, at least one head,
-    /// every head sharing one subspace count and one centroid count
-    /// (blocks are strided by a single `m` and a single packing mode).
+    /// every head sharing one centroid count (K decides the lane
+    /// packing, which must be uniform). Subspace counts may differ per
+    /// head — a [`crate::coordinator::CompressionPolicy`] assigns each
+    /// head its own `m`, and block lanes are strided by the per-head
+    /// offset tables the cache precomputes.
     pub fn pq(codecs: Vec<PqCodec>) -> Result<KeyStorage, CacheError> {
         uniform_codecs(&codecs)?;
         Ok(KeyStorage::Pq { codecs: Arc::new(codecs) })
     }
 
-    /// Codes per token per head (0 for FP16 storage).
-    fn m(&self) -> usize {
+    /// Largest per-head subspace count (0 for FP16 storage) — sizes
+    /// the shared encode scratch.
+    fn max_m(&self) -> usize {
         match self {
             KeyStorage::Fp16 => 0,
             KeyStorage::Pq { codecs } => {
-                codecs.first().map_or(0, |c| c.codebook.m)
+                codecs.iter().map(|c| c.codebook.m).max().unwrap_or(0)
             }
         }
     }
 
+    /// Codes per token for one head (0 for FP16 storage).
+    fn head_m(&self, head: usize) -> usize {
+        match self {
+            KeyStorage::Fp16 => 0,
+            KeyStorage::Pq { codecs } => codecs[head].codebook.m,
+        }
+    }
+
     /// Whether codes are nibble-packed (K ≤ 16: two per byte).
+    /// Uniform across heads — `uniform_codecs` enforces one K per side.
     fn packed(&self) -> bool {
         match self {
             KeyStorage::Fp16 => false,
@@ -53,11 +66,6 @@ impl KeyStorage {
     /// `BLOCK_TOKENS` byte codes, or half that nibble-packed.
     fn code_row_bytes(&self) -> usize {
         if self.packed() { BLOCK_TOKENS / 2 } else { BLOCK_TOKENS }
-    }
-
-    /// Bytes of one head's code lane in one block (`m` subspace rows).
-    fn lane_bytes(&self) -> usize {
-        self.m() * self.code_row_bytes()
     }
 }
 
@@ -76,19 +84,28 @@ pub enum ValueStorage {
 
 impl ValueStorage {
     /// Validated PQ value storage: same contract as [`KeyStorage::pq`]
-    /// (non-empty, one uniform subspace count and centroid count).
+    /// (non-empty, one uniform centroid count; per-head subspace counts
+    /// may differ).
     pub fn pq(codecs: Vec<PqCodec>) -> Result<ValueStorage, CacheError> {
         uniform_codecs(&codecs)?;
         Ok(ValueStorage::Pq { codecs: Arc::new(codecs) })
     }
 
-    /// Codes per token per head (0 for FP32 storage).
-    fn m(&self) -> usize {
+    /// Largest per-head subspace count (0 for FP32 storage).
+    fn max_m(&self) -> usize {
         match self {
             ValueStorage::Fp32 => 0,
             ValueStorage::Pq { codecs } => {
-                codecs.first().map_or(0, |c| c.codebook.m)
+                codecs.iter().map(|c| c.codebook.m).max().unwrap_or(0)
             }
+        }
+    }
+
+    /// Codes per token for one head (0 for FP32 storage).
+    fn head_m(&self, head: usize) -> usize {
+        match self {
+            ValueStorage::Fp32 => 0,
+            ValueStorage::Pq { codecs } => codecs[head].codebook.m,
         }
     }
 
@@ -106,11 +123,6 @@ impl ValueStorage {
     fn code_row_bytes(&self) -> usize {
         if self.packed() { BLOCK_TOKENS / 2 } else { BLOCK_TOKENS }
     }
-
-    /// Bytes of one head's value-code lane in one block.
-    fn lane_bytes(&self) -> usize {
-        self.m() * self.code_row_bytes()
-    }
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -120,21 +132,22 @@ pub enum CacheError {
     DuplicateSeq(SeqId),
     /// PQ storage was constructed with an empty codec set.
     NoCodecs,
-    /// PQ storage was constructed with per-head codecs whose subspace
-    /// counts differ — block strides assume one `m` across heads.
+    /// PQ storage was constructed with per-head codecs whose centroid
+    /// counts differ — K decides nibble packing, which must be uniform
+    /// within one cache side. (Per-head subspace counts are fine: a
+    /// `CompressionPolicy` assigns each head its own `m`.)
     MixedCodecs,
 }
 
-/// Shared validation for the PQ storage constructors. Centroid counts
-/// must match too: K decides nibble packing, and blocks are laid out
-/// with a single row stride across heads.
+/// Shared validation for the PQ storage constructors. Only the
+/// centroid count must be uniform: K decides nibble packing, and one
+/// side's lanes share one packing mode. Subspace counts vary freely
+/// per head — the cache precomputes per-head lane offsets.
 fn uniform_codecs(codecs: &[PqCodec]) -> Result<(), CacheError> {
     let Some(first) = codecs.first() else {
         return Err(CacheError::NoCodecs);
     };
-    if codecs.iter().any(|c| {
-        c.codebook.m != first.codebook.m || c.codebook.k != first.codebook.k
-    }) {
+    if codecs.iter().any(|c| c.codebook.k != first.codebook.k) {
         return Err(CacheError::MixedCodecs);
     }
     Ok(())
@@ -158,8 +171,8 @@ impl std::fmt::Display for CacheError {
             CacheError::MixedCodecs => {
                 write!(
                     f,
-                    "PQ storage needs one subspace and centroid count \
-                     across heads"
+                    "PQ storage needs one centroid count across heads \
+                     (K decides lane packing; per-head m is fine)"
                 )
             }
         }
@@ -236,6 +249,21 @@ impl SwappedSeq {
 /// `(H, m, BLOCK_TOKENS/2)`. Packing is decided per storage side by
 /// its codec K ([`crate::pq::packs_nibbles`]), so keys and values can
 /// mix packed and byte lanes freely.
+///
+/// **Heterogeneous `m`:** each head may carry its own subspace count
+/// (a calibrated [`crate::coordinator::CompressionPolicy`] assigns
+/// per-(layer, head) budgets), so a block's code region is laid out by
+/// the precomputed per-head byte-offset tables `key_lane_off` /
+/// `val_lane_off` rather than a single `h · m · row` stride. K (and
+/// therefore packing) stays uniform within one side. Swap slabs copy
+/// the whole per-block code region, so the tier is geometry-agnostic.
+///
+/// **Pruning:** with a prune threshold set
+/// ([`KvCache::set_prune_threshold`]), appends whose mean per-head key
+/// L2 norm falls below the threshold are skipped entirely — no codes
+/// written, no block allocated, `append` returns `Ok(false)` — and
+/// attention runs over the surviving set. The first token of a
+/// sequence is never pruned.
 pub struct KvCache {
     pub h: usize,
     pub d_k: usize,
@@ -250,12 +278,23 @@ pub struct KvCache {
     value_codes: Vec<u8>,
     keys_raw: Vec<f32>,
     codes: Vec<u8>,
-    /// append-time encode buffer (max(m, m_v) bytes) — the hot path
-    /// encodes into it and scatters strided, allocation-free
+    /// append-time encode buffer (max over heads of max(m, m_v) bytes)
+    /// — the hot path encodes into it and scatters strided,
+    /// allocation-free
     code_scratch: Vec<u8>,
     /// append-time per-subspace dot scratch for the encoders — owned
     /// so the serial append stage never touches the shared arena mutex
     dots_scratch: Vec<f32>,
+    /// per-head byte offsets of the key-code lanes within one block's
+    /// code region (len h+1; `[h]` is the whole region's stride) —
+    /// supports heterogeneous per-head m
+    key_lane_off: Vec<usize>,
+    /// per-head byte offsets of the value-code lanes (len h+1)
+    val_lane_off: Vec<usize>,
+    /// L2-norm token-pruning threshold (None = keep everything)
+    prune_threshold: Option<f32>,
+    /// tokens skipped by the pruning policy since construction
+    pruned: u64,
 }
 
 impl KvCache {
@@ -275,22 +314,41 @@ impl KvCache {
             }
         }
         let slot = BLOCK_TOKENS * h;
-        let m = storage.m();
+        // per-head lane offsets: lanes are laid out head-major within a
+        // block's code region, each head contributing m_head · row bytes
+        let lane_offsets =
+            |row: usize, head_m: &dyn Fn(usize) -> usize| -> Vec<usize> {
+                let mut off = Vec::with_capacity(h + 1);
+                let mut acc = 0usize;
+                off.push(0);
+                for head in 0..h {
+                    acc += head_m(head) * row;
+                    off.push(acc);
+                }
+                off
+            };
+        let key_lane_off = lane_offsets(storage.code_row_bytes(), &|head| {
+            storage.head_m(head)
+        });
+        let val_lane_off =
+            lane_offsets(value_storage.code_row_bytes(), &|head| {
+                value_storage.head_m(head)
+            });
+        let m = storage.max_m();
         let (keys_raw, codes) = match &storage {
             KeyStorage::Fp16 => (vec![0.0; max_blocks * slot * d_k], vec![]),
             KeyStorage::Pq { .. } => {
-                (vec![], vec![0u8; max_blocks * h * storage.lane_bytes()])
+                (vec![], vec![0u8; max_blocks * key_lane_off[h]])
             }
         };
-        let m_v = value_storage.m();
+        let m_v = value_storage.max_m();
         let (values, value_codes) = match &value_storage {
             ValueStorage::Fp32 => {
                 (vec![0.0; max_blocks * slot * d_k], vec![])
             }
-            ValueStorage::Pq { .. } => (
-                vec![],
-                vec![0u8; max_blocks * h * value_storage.lane_bytes()],
-            ),
+            ValueStorage::Pq { .. } => {
+                (vec![], vec![0u8; max_blocks * val_lane_off[h]])
+            }
         };
         Self {
             h,
@@ -306,7 +364,25 @@ impl KvCache {
             codes,
             code_scratch: vec![0u8; m.max(m_v)],
             dots_scratch: Vec::new(),
+            key_lane_off,
+            val_lane_off,
+            prune_threshold: None,
+            pruned: 0,
         }
+    }
+
+    /// Arm (or disarm) L2-norm token pruning: appends whose mean
+    /// per-head key norm falls below `thr` are skipped (see
+    /// [`KvCache::append`]). Resolved once at engine build by the
+    /// pruning [`crate::coordinator::CompressionPolicy`] from the
+    /// calibration norm distribution.
+    pub fn set_prune_threshold(&mut self, thr: Option<f32>) {
+        self.prune_threshold = thr;
+    }
+
+    /// Tokens dropped by the pruning policy since construction.
+    pub fn pruned_tokens(&self) -> u64 {
+        self.pruned
     }
 
     pub fn is_pq(&self) -> bool {
@@ -360,22 +436,34 @@ impl KvCache {
     /// Append one token's K/V for all heads.
     ///
     /// `keys`/`values` are (H × d_k). In PQ mode the key (and, under
-    /// `ValueStorage::Pq`, the value) is immediately encoded to `m`
-    /// codes per head and the raw vector is dropped — this is the
+    /// `ValueStorage::Pq`, the value) is immediately encoded to that
+    /// head's `m` codes and the raw vector is dropped — this is the
     /// paper's storage contract (compressed tensors never exist
     /// uncompressed in the cache).
+    ///
+    /// Returns `Ok(true)` if the token was stored, `Ok(false)` if the
+    /// pruning policy dropped it (mean per-head key L2 norm below the
+    /// armed threshold; nothing is written and no block is allocated).
+    /// The first token of a sequence is always stored so attention
+    /// never runs over an empty set.
     pub fn append(
         &mut self,
         seq: SeqId,
         keys: &[f32],
         values: &[f32],
-    ) -> Result<(), CacheError> {
+    ) -> Result<bool, CacheError> {
         assert_eq!(keys.len(), self.h * self.d_k);
         assert_eq!(values.len(), self.h * self.d_k);
         let st = self
             .seqs
             .get_mut(&seq)
             .ok_or(CacheError::UnknownSeq(seq))?;
+        if let Some(thr) = self.prune_threshold {
+            if st.len > 0 && mean_head_norm(keys, self.h, self.d_k) < thr {
+                self.pruned += 1;
+                return Ok(false);
+            }
+        }
         let off = st.len % BLOCK_TOKENS;
         if off == 0 {
             let b = self.alloc.alloc().ok_or(CacheError::OutOfBlocks)?;
@@ -385,7 +473,9 @@ impl KvCache {
         let h = self.h;
         let d_k = self.d_k;
         // values: one strided write (or encode) per head (head-major
-        // block layout; code lanes are subspace-major within the block)
+        // block layout; code lanes are subspace-major within the block,
+        // strided by the per-head offset table — heads can carry
+        // different m)
         match &self.value_storage {
             ValueStorage::Fp32 => {
                 for head in 0..h {
@@ -396,18 +486,19 @@ impl KvCache {
                 }
             }
             ValueStorage::Pq { codecs } => {
-                let m_v = codecs[0].codebook.m;
                 let packed = codecs[0].packed();
                 let row =
                     if packed { BLOCK_TOKENS / 2 } else { BLOCK_TOKENS };
+                let stride = self.val_lane_off[h];
                 for head in 0..h {
+                    let m_v = codecs[head].codebook.m;
                     let code = &mut self.code_scratch[..m_v];
                     codecs[head].encode_into_with(
                         &values[head * d_k..(head + 1) * d_k],
                         code,
                         &mut self.dots_scratch,
                     );
-                    let lane = (block * h + head) * m_v * row;
+                    let lane = block * stride + self.val_lane_off[head];
                     for (i, &c) in code.iter().enumerate() {
                         if packed {
                             let b = &mut self.value_codes
@@ -437,18 +528,19 @@ impl KvCache {
                 }
             }
             KeyStorage::Pq { codecs } => {
-                let m = codecs[0].codebook.m;
                 let packed = codecs[0].packed();
                 let row =
                     if packed { BLOCK_TOKENS / 2 } else { BLOCK_TOKENS };
+                let stride = self.key_lane_off[h];
                 for head in 0..h {
+                    let m = codecs[head].codebook.m;
                     let code = &mut self.code_scratch[..m];
                     codecs[head].encode_into_with(
                         &keys[head * d_k..(head + 1) * d_k],
                         code,
                         &mut self.dots_scratch,
                     );
-                    let lane = (block * h + head) * m * row;
+                    let lane = block * stride + self.key_lane_off[head];
                     for (i, &c) in code.iter().enumerate() {
                         if packed {
                             let b = &mut self.codes
@@ -466,7 +558,7 @@ impl KvCache {
             }
         }
         st.len += 1;
-        Ok(())
+        Ok(true)
     }
 
     /// Blocks currently held by one sequence — the preemptive
@@ -506,10 +598,8 @@ impl KvCache {
         let st =
             self.seqs.remove(&seq).ok_or(CacheError::UnknownSeq(seq))?;
         let slot = BLOCK_TOKENS * self.h;
-        let (kf, kc) =
-            (slot * self.d_k, self.h * self.storage.lane_bytes());
-        let (vf, vc) =
-            (slot * self.d_k, self.h * self.value_storage.lane_bytes());
+        let (kf, kc) = (slot * self.d_k, self.key_lane_off[self.h]);
+        let (vf, vc) = (slot * self.d_k, self.val_lane_off[self.h]);
         let mut sw = SwappedSeq {
             len: st.len,
             keys_raw: Vec::new(),
@@ -563,10 +653,8 @@ impl KvCache {
         let blocks: Vec<BlockId> =
             (0..need).map(|_| self.alloc.alloc().unwrap()).collect();
         let slot = BLOCK_TOKENS * self.h;
-        let (kf, kc) =
-            (slot * self.d_k, self.h * self.storage.lane_bytes());
-        let (vf, vc) =
-            (slot * self.d_k, self.h * self.value_storage.lane_bytes());
+        let (kf, kc) = (slot * self.d_k, self.key_lane_off[self.h]);
+        let (vf, vc) = (slot * self.d_k, self.val_lane_off[self.h]);
         for (i, &b) in blocks.iter().enumerate() {
             let b = b as usize;
             match &self.storage {
@@ -701,7 +789,7 @@ impl KvCache {
         head: usize,
         out: &mut Vec<u8>,
     ) -> Result<usize, CacheError> {
-        let m = self.storage.m();
+        let m = self.storage.head_m(head);
         assert!(m > 0, "gather_codes_into is for PQ caches");
         let len = self.seq_len(seq)?;
         out.clear();
@@ -742,7 +830,7 @@ impl KvCache {
         head: usize,
         out: &mut Vec<u8>,
     ) -> Result<usize, CacheError> {
-        let m_v = self.value_storage.m();
+        let m_v = self.value_storage.head_m(head);
         assert!(m_v > 0, "gather_value_codes_into is for PQ value caches");
         let len = self.seq_len(seq)?;
         out.clear();
@@ -760,10 +848,8 @@ impl KvCache {
     /// codebooks (FP16 entries), raw tensors cost 2 B/element.
     pub fn stats(&self) -> CacheStats {
         let tokens: usize = self.seqs.values().map(|s| s.len).sum();
-        let key_bytes =
-            tokens * self.h * self.key_bytes_per_token_per_head();
-        let value_bytes =
-            tokens * self.h * self.value_bytes_per_token_per_head();
+        let key_bytes = tokens * self.key_bytes_per_token_all_heads();
+        let value_bytes = tokens * self.value_bytes_per_token_all_heads();
         let mut codebook_bytes: usize = match &self.storage {
             KeyStorage::Fp16 => 0,
             KeyStorage::Pq { codecs } => {
@@ -788,8 +874,10 @@ impl KvCache {
         }
     }
 
-    /// Bytes of key storage per token (the paper's "Mem." column) —
-    /// ⌈m/2⌉ for nibble-packed K ≤ 16 codes.
+    /// Bytes of key storage per token for head 0 (the paper's "Mem."
+    /// column under a uniform policy) — ⌈m/2⌉ for nibble-packed K ≤ 16
+    /// codes. Under a calibrated policy heads differ; use
+    /// [`KvCache::key_bytes_per_token_all_heads`] for exact accounting.
     pub fn key_bytes_per_token_per_head(&self) -> usize {
         match &self.storage {
             KeyStorage::Fp16 => self.d_k * 2,
@@ -799,7 +887,8 @@ impl KvCache {
         }
     }
 
-    /// Bytes of value storage per token (the "Mem." column's value axis).
+    /// Bytes of value storage per token for head 0 (uniform-policy
+    /// "Mem." column value axis).
     pub fn value_bytes_per_token_per_head(&self) -> usize {
         match &self.value_storage {
             ValueStorage::Fp32 => self.d_k * 2,
@@ -808,6 +897,50 @@ impl KvCache {
             }
         }
     }
+
+    /// Exact key bytes per token summed over all heads — correct under
+    /// heterogeneous per-head m.
+    pub fn key_bytes_per_token_all_heads(&self) -> usize {
+        match &self.storage {
+            KeyStorage::Fp16 => self.h * self.d_k * 2,
+            KeyStorage::Pq { codecs } => {
+                codecs.iter().map(|c| c.bytes_per_token()).sum()
+            }
+        }
+    }
+
+    /// Exact value bytes per token summed over all heads.
+    pub fn value_bytes_per_token_all_heads(&self) -> usize {
+        match &self.value_storage {
+            ValueStorage::Fp32 => self.h * self.d_k * 2,
+            ValueStorage::Pq { codecs } => {
+                codecs.iter().map(|c| c.bytes_per_token()).sum()
+            }
+        }
+    }
+
+    /// Per-head key subspace counts (empty for FP16 storage) — the
+    /// telemetry/report surface for the resolved policy.
+    pub fn key_ms(&self) -> Vec<usize> {
+        match &self.storage {
+            KeyStorage::Fp16 => Vec::new(),
+            KeyStorage::Pq { codecs } => {
+                codecs.iter().map(|c| c.codebook.m).collect()
+            }
+        }
+    }
+}
+
+/// Mean over heads of the per-head key L2 norm — the pruning policy's
+/// per-token signal. Head-averaged because block slots are shared
+/// across heads: a token is either resident for every head or none.
+pub(crate) fn mean_head_norm(keys: &[f32], h: usize, d_k: usize) -> f32 {
+    let mut acc = 0.0f32;
+    for head in 0..h {
+        let k = &keys[head * d_k..(head + 1) * d_k];
+        acc += k.iter().map(|x| x * x).sum::<f32>().sqrt();
+    }
+    acc / h as f32
 }
 
 /// De-interleave one block's subspace-major `(m × BLOCK_TOKENS)` code
@@ -868,8 +1001,12 @@ impl<'a> Iterator for BlockIter<'a> {
                 (&c.values[fbase..fbase + take * d_k], &[][..])
             }
             ValueStorage::Pq { .. } => {
-                let lb = c.value_storage.lane_bytes();
-                let lane = (b * h + self.head) * lb;
+                // per-head lane: heads may carry different m, so slice
+                // by the precomputed offset table
+                let lane =
+                    b * c.val_lane_off[h] + c.val_lane_off[self.head];
+                let lb = c.val_lane_off[self.head + 1]
+                    - c.val_lane_off[self.head];
                 (&[][..], &c.value_codes[lane..lane + lb])
             }
         };
@@ -878,8 +1015,10 @@ impl<'a> Iterator for BlockIter<'a> {
                 (&c.keys_raw[fbase..fbase + take * d_k], &[][..])
             }
             KeyStorage::Pq { .. } => {
-                let lb = c.storage.lane_bytes();
-                let lane = (b * h + self.head) * lb;
+                let lane =
+                    b * c.key_lane_off[h] + c.key_lane_off[self.head];
+                let lb = c.key_lane_off[self.head + 1]
+                    - c.key_lane_off[self.head];
                 (&[][..], &c.codes[lane..lane + lb])
             }
         };
@@ -1386,24 +1525,19 @@ mod tests {
     }
 
     #[test]
-    fn mixed_subspace_codecs_are_an_error_not_a_panic() {
+    fn mixed_subspace_codecs_are_allowed_mixed_k_is_not() {
         let mut rng = Pcg32::seed(23);
         let calib: Vec<f32> =
             (0..128 * DK).map(|_| rng.next_f32_std()).collect();
-        let mixed = vec![
+        // per-head m is the calibrated-policy contract: legal
+        let mixed_m = vec![
             PqCodec::train(&calib, DK, 4, 16, &TrainOpts::default()),
             PqCodec::train(&calib, DK, 8, 16, &TrainOpts::default()),
         ];
-        assert!(matches!(
-            KeyStorage::pq(mixed.clone()),
-            Err(CacheError::MixedCodecs)
-        ));
-        assert!(matches!(
-            ValueStorage::pq(mixed),
-            Err(CacheError::MixedCodecs)
-        ));
-        // same m but mismatched K is just as invalid: K decides the
-        // lane packing, which must be uniform across heads
+        assert!(KeyStorage::pq(mixed_m.clone()).is_ok());
+        assert!(ValueStorage::pq(mixed_m).is_ok());
+        // mismatched K is invalid: K decides the lane packing, which
+        // must be uniform across heads
         let mixed_k = vec![
             PqCodec::train(&calib, DK, 4, 16, &TrainOpts::default()),
             PqCodec::train(&calib, DK, 4, 32, &TrainOpts::default()),
@@ -1416,6 +1550,118 @@ mod tests {
             ValueStorage::pq(mixed_k),
             Err(CacheError::MixedCodecs)
         ));
+    }
+
+    /// Per-head m (K=16 packed and K=32 byte lanes): codes land in the
+    /// right per-head lanes and round-trip both through the gathers and
+    /// through the swap tier.
+    #[test]
+    fn heterogeneous_m_lanes_roundtrip_and_swap() {
+        for k in [16usize, 32] {
+            let mut rng = Pcg32::seed(29);
+            let calib: Vec<f32> =
+                (0..128 * DK).map(|_| rng.next_f32_std()).collect();
+            let het = |ms: [usize; H]| -> Vec<PqCodec> {
+                ms.iter()
+                    .map(|&m| {
+                        PqCodec::train(
+                            &calib, DK, m, k, &TrainOpts::default())
+                    })
+                    .collect()
+            };
+            let kcodecs = het([2, 8]);
+            let vcodecs = het([8, 4]);
+            let mut c = KvCache::new(
+                H,
+                DK,
+                8,
+                KeyStorage::pq(kcodecs.clone()).unwrap(),
+                ValueStorage::pq(vcodecs.clone()).unwrap(),
+            );
+            assert_eq!(c.key_ms(), vec![2, 8]);
+            assert_eq!(
+                c.key_bytes_per_token_all_heads(),
+                kcodecs.iter().map(|cc| cc.bytes_per_token()).sum()
+            );
+            c.create_seq(1).unwrap();
+            let mut want_k: Vec<Vec<u8>> = vec![Vec::new(); H];
+            let mut want_v: Vec<Vec<u8>> = vec![Vec::new(); H];
+            for t in 0..70 {
+                // 3 blocks, last partial
+                let (kk, vv) = token(600 + t);
+                for head in 0..H {
+                    want_k[head].extend(
+                        kcodecs[head].encode(&kk[head * DK..(head + 1) * DK]),
+                    );
+                    want_v[head].extend(
+                        vcodecs[head].encode(&vv[head * DK..(head + 1) * DK]),
+                    );
+                }
+                assert!(c.append(1, &kk, &vv).unwrap());
+            }
+            let mut got = Vec::new();
+            for head in 0..H {
+                c.gather_codes_into(1, head, &mut got).unwrap();
+                assert_eq!(got, want_k[head], "keys head {head} k {k}");
+                c.gather_value_codes_into(1, head, &mut got).unwrap();
+                assert_eq!(got, want_v[head], "values head {head} k {k}");
+                // block views expose exactly this head's m·row lane
+                let row = if k <= 16 {
+                    BLOCK_TOKENS / 2
+                } else {
+                    BLOCK_TOKENS
+                };
+                for b in c.blocks(1, head).unwrap() {
+                    assert_eq!(
+                        b.codes.len(),
+                        kcodecs[head].codebook.m * row
+                    );
+                    assert_eq!(
+                        b.value_codes.len(),
+                        vcodecs[head].codebook.m * row
+                    );
+                }
+            }
+            // swap the non-uniform slabs out and back: bit-identical
+            c.swap_out(1).unwrap();
+            c.swap_in(1).unwrap();
+            for head in 0..H {
+                c.gather_codes_into(1, head, &mut got).unwrap();
+                assert_eq!(got, want_k[head], "post-swap keys {head}");
+                c.gather_value_codes_into(1, head, &mut got).unwrap();
+                assert_eq!(got, want_v[head], "post-swap values {head}");
+            }
+        }
+    }
+
+    #[test]
+    fn prune_threshold_skips_low_norm_tokens() {
+        let mut c = KvCache::new(
+            H, DK, 8, KeyStorage::Fp16, ValueStorage::Fp32);
+        c.create_seq(1).unwrap();
+        let (k, v) = token(11);
+        let tiny_k = vec![1e-6f32; H * DK];
+        // first token is never pruned, even below threshold
+        c.set_prune_threshold(Some(1e-3));
+        assert!(c.append(1, &tiny_k, &v).unwrap());
+        assert_eq!(c.pruned_tokens(), 0);
+        // normal-norm tokens survive, low-norm ones are dropped
+        assert!(c.append(1, &k, &v).unwrap());
+        assert!(!c.append(1, &tiny_k, &v).unwrap());
+        assert!(!c.append(1, &tiny_k, &v).unwrap());
+        assert_eq!(c.pruned_tokens(), 2);
+        assert_eq!(c.seq_len(1).unwrap(), 2);
+        // pruned appends never allocate blocks
+        assert_eq!(c.seq_blocks(1).unwrap(), 1);
+        // gathers see only the surviving set
+        let mut keys = Vec::new();
+        c.gather_keys_into(1, 0, &mut keys).unwrap();
+        assert_eq!(keys.len(), 2 * DK);
+        assert_eq!(&keys[DK..], &k[..DK]);
+        // disarming restores store-everything behavior
+        c.set_prune_threshold(None);
+        assert!(c.append(1, &tiny_k, &v).unwrap());
+        assert_eq!(c.seq_len(1).unwrap(), 3);
     }
 
     #[test]

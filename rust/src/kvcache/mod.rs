@@ -10,11 +10,37 @@
 //! decode kernels scan them in place via [`KvCache::blocks`] — the
 //! LOOKAT hot path never copies key codes out of the cache, and the
 //! fused weighted decode never copies (or dequantizes) value codes.
+//!
+//! # Invariants
+//!
+//! - **Block geometry**: every block holds [`BLOCK_TOKENS`] token
+//!   slots for all `h` heads, head-major. Float lanes are token-major
+//!   `(H, BLOCK_TOKENS, d_k)`; code lanes are subspace-major
+//!   `(m_head, BLOCK_TOKENS)` per head (nibble-packed to
+//!   `(m_head, BLOCK_TOKENS/2)` at K ≤ 16, low nibble = even slot).
+//! - **Heterogeneous m, uniform K**: each head may carry its own
+//!   subspace count (set by a resolved
+//!   [`crate::coordinator::CompressionPolicy`]); lane addressing goes
+//!   through per-head byte-offset tables. The centroid count K — and
+//!   therefore the packing mode — is uniform within one cache side
+//!   ([`CacheError::MixedCodecs`] otherwise).
+//! - **Swap tier**: swap-out copies whole per-block slabs (every head,
+//!   every slot, stale bytes included), so restore is bit-identical
+//!   under any lane geometry.
+//! - **Prefix sharing**: only whole immutable blocks are shared;
+//!   appends write private blocks, making sharing copy-on-write by
+//!   construction. Sharing requires identical codecs (same engine
+//!   build), so geometry always matches.
+//! - **Pruning**: with a norm threshold armed, low-norm tokens are
+//!   never appended ([`KvCache::append`] returns `Ok(false)`); the
+//!   cache length then counts *surviving* tokens only, and attention
+//!   runs over exactly that set.
 
 mod block;
 mod manager;
 
 pub use block::{BlockAllocator, BlockId, BlockView, BLOCK_TOKENS};
+pub(crate) use manager::mean_head_norm;
 pub use manager::{
     BlockIter, CacheError, CacheStats, KeyStorage, KvCache, SeqId,
     ValueStorage,

@@ -31,6 +31,27 @@
 //! one calling convention and manifest validation — see `runtime/mod.rs`
 //! and README.md §Build matrix.
 //!
+//! How much each (layer, head, side) compresses is decided at engine
+//! build time by a [`coordinator::CompressionPolicy`] — uniform (the
+//! paper's single global `m`), calibrated per-(layer,head) subspace
+//! budgets under a total bits/token ceiling, or L2-norm token pruning.
+//! See `docs/ARCHITECTURE.md` at the repo root for the module map and
+//! the life of a decode tick.
+//!
+//! ## Crate-wide invariants
+//!
+//! * **Determinism** — every run is a pure function of the config
+//!   (seed, backend, policy); no wall-clock, no `HashMap` iteration on
+//!   numeric paths. Benches and experiment tables regenerate
+//!   bit-identically.
+//! * **Subspace accumulation order** — ADC scores, LUT builds and
+//!   weighted value decodes always accumulate subspaces in order
+//!   `0..m`; f32 addition is not associative, so any reordering is a
+//!   bit-parity break (tested in `tests/decode_parity.rs`).
+//! * **Compressed-at-rest** — cached keys (and PQ values) exist only
+//!   as codes; nothing on the serving path dequantizes a cache block
+//!   to score it.
+//!
 //! ## Quick example
 //!
 //! ```no_run

@@ -1,22 +1,28 @@
 //! `lookat` — the leader binary: experiments, serving, and utilities.
 //!
 //! Subcommands:
-//!   experiment <id>   regenerate a paper table/figure (table1..4,
-//!                     figure3, figure4, efficiency, all)
-//!   serve             run the serving coordinator over a synthetic trace
-//!   stats <addr>      query a running serve-tcp server's telemetry
-//!   info              print artifact + platform info
+//!
+//! ```text
+//! experiment <id>   regenerate a paper table/figure (table1..4,
+//!                   figure3, figure4, efficiency, all)
+//! serve             run the serving coordinator over a synthetic trace
+//! stats <addr>      query a running serve-tcp server's telemetry
+//! info              print artifact + platform info
+//! ```
 //!
 //! Examples:
-//!   lookat experiment table1
-//!   lookat serve --backend lookat-4 --requests 16 --rate 4
-//!   lookat serve-tcp --metrics-addr 127.0.0.1:9091 --trace-out t.json
-//!   lookat stats 127.0.0.1:7070 --interval 2
-//!   lookat info
+//!
+//! ```text
+//! lookat experiment table1
+//! lookat serve --backend lookat-4 --requests 16 --rate 4
+//! lookat serve-tcp --metrics-addr 127.0.0.1:9091 --trace-out t.json
+//! lookat stats 127.0.0.1:7070 --interval 2
+//! lookat info
+//! ```
 
 use lookat::coordinator::{
-    AttentionBackend, BatcherConfig, EngineConfig, Router, RouterConfig,
-    SchedulerPolicy, ValueBackend,
+    AttentionBackend, BatcherConfig, CompressionPolicy, EngineConfig,
+    Router, RouterConfig, SchedulerPolicy, ValueBackend,
 };
 use lookat::model::ModelConfig;
 use lookat::util::cli::Cli;
@@ -100,6 +106,12 @@ fn parse_on_off(flag: &str, s: &str) -> anyhow::Result<bool> {
     }
 }
 
+/// `--policy` spellings live in [`CompressionPolicy::parse`]; this
+/// adapter only lifts its message into `anyhow`.
+fn parse_policy(s: &str) -> anyhow::Result<CompressionPolicy> {
+    CompressionPolicy::parse(s).map_err(|e| anyhow::anyhow!(e))
+}
+
 fn parse_scheduler(s: &str) -> anyhow::Result<SchedulerPolicy> {
     Ok(match s {
         "fcfs" => SchedulerPolicy::Fcfs,
@@ -169,6 +181,10 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 .opt("prefix-cache", "on",
                      "on|off: share identical full prompt-prefix \
                       blocks copy-on-write across sequences")
+                .opt("policy", "uniform",
+                     "uniform|calibrated-<bits>|prune-<frac>: \
+                      compression policy (per-(layer,head) subspace \
+                      budgets / L2-norm token pruning)")
                 .opt("trace-out", "",
                      "write a Chrome trace_event JSON of the run here \
                       (open in Perfetto; empty = disabled)")
@@ -178,6 +194,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let value_backend =
                 parse_value_backend(a.get("value-backend"))?;
             let policy = parse_scheduler(a.get("scheduler"))?;
+            let compression = parse_policy(a.get("policy"))?;
             let pipeline = parse_on_off("pipeline", a.get("pipeline"))?;
             let swap = parse_on_off("swap", a.get("swap"))?;
             let prefix_cache =
@@ -197,6 +214,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     prefill_chunk: a.get_usize("prefill-chunk")?,
                     pipeline,
                     prefix_cache,
+                    policy: compression,
                 },
                 batcher: BatcherConfig {
                     max_batch: a.get_usize("max-batch")?,
@@ -256,6 +274,10 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 .opt("prefix-cache", "on",
                      "on|off: share identical full prompt-prefix \
                       blocks copy-on-write across sequences")
+                .opt("policy", "uniform",
+                     "uniform|calibrated-<bits>|prune-<frac>: \
+                      compression policy (per-(layer,head) subspace \
+                      budgets / L2-norm token pruning)")
                 .opt("metrics-addr", "",
                      "also serve Prometheus text metrics on this \
                       HOST:PORT (empty = disabled)")
@@ -269,6 +291,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let value_backend =
                 parse_value_backend(a.get("value-backend"))?;
             let policy = parse_scheduler(a.get("scheduler"))?;
+            let compression = parse_policy(a.get("policy"))?;
             let pipeline = parse_on_off("pipeline", a.get("pipeline"))?;
             let swap = parse_on_off("swap", a.get("swap"))?;
             let prefix_cache =
@@ -297,6 +320,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                         prefill_chunk: a.get_usize("prefill-chunk")?,
                         pipeline,
                         prefix_cache,
+                        policy: compression,
                     },
                     batcher: BatcherConfig {
                         max_batch: a.get_usize("max-batch")?,
@@ -547,12 +571,14 @@ USAGE:
   lookat serve [--backend B] [--value-backend V] [--requests N]
                [--rate R] [--prefill-chunk T] [--scheduler fcfs|preempt]
                [--pipeline on|off] [--swap on|off] [--prefix-cache on|off]
+               [--policy uniform|calibrated-<bits>|prune-<frac>]
                [--trace-out FILE]
   lookat serve-tcp [--backend B] [--value-backend V] [--addr HOST:PORT]
                    [--prefill-chunk T] [--scheduler fcfs|preempt]
                    [--pipeline on|off] [--swap on|off]
-                   [--prefix-cache on|off] [--metrics-addr HOST:PORT]
-                   [--trace-out FILE]
+                   [--prefix-cache on|off]
+                   [--policy uniform|calibrated-<bits>|prune-<frac>]
+                   [--metrics-addr HOST:PORT] [--trace-out FILE]
   lookat stats <addr> [--interval S]   query a serve-tcp server's
                                        telemetry (counters, gauges,
                                        latency percentiles)
@@ -594,5 +620,45 @@ mod tests {
         assert!(parse_backend("lookat-4-k0").is_err());
         assert!(parse_backend("lookat-5").is_err());
         assert!(parse_value_backend("pq-4-kx").is_err());
+    }
+
+    #[test]
+    fn on_off_errors_name_the_flag_and_accepted_values() {
+        // a typo'd A/B switch must say WHICH flag broke and what it
+        // takes, not a generic parse failure
+        for flag in ["pipeline", "swap", "prefix-cache"] {
+            assert!(parse_on_off(flag, "on").unwrap());
+            assert!(!parse_on_off(flag, "off").unwrap());
+            let err =
+                parse_on_off(flag, "yes").unwrap_err().to_string();
+            assert!(
+                err.contains(&format!("--{flag}")),
+                "error does not name --{flag}: {err}"
+            );
+            assert!(err.contains("'yes'"), "missing offending value: {err}");
+            assert!(
+                err.contains("on") && err.contains("off"),
+                "missing accepted values: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn policy_specs_parse_and_reject_garbage() {
+        assert_eq!(
+            parse_policy("uniform").unwrap(),
+            CompressionPolicy::Uniform
+        );
+        assert_eq!(
+            parse_policy("calibrated-384").unwrap(),
+            CompressionPolicy::Calibrated { bits: 384 }
+        );
+        assert_eq!(
+            parse_policy("prune-0.25").unwrap(),
+            CompressionPolicy::Prune { frac: 0.25 }
+        );
+        let err = parse_policy("smallest").unwrap_err().to_string();
+        assert!(err.contains("--policy"), "{err}");
+        assert!(err.contains("prune-<frac>"), "{err}");
     }
 }

@@ -6,6 +6,23 @@
 //!   2. [`PqCodec`] encodes each key vector into `m` uint8 codes.
 //!   3. [`LookupTable`] precomputes `LUT_i = q^(i) · C_i^T` per query and
 //!      scores every key with `m` table lookups + adds — no dequantization.
+//!
+//! Invariants every implementation in this module (scalar, SIMD
+//! gather, nibble-packed shuffle) must preserve:
+//!
+//! * subspaces are accumulated **in order `0..m`** — f32 addition is
+//!   not associative, and the serving engine's bit-parity tests treat
+//!   any reordering as a regression;
+//! * training is a pure function of (calibration keys, `d_k`, `m`,
+//!   `K`, seed): identical inputs produce bit-identical codebooks, so
+//!   two engines built from the same config agree on every code;
+//! * `m` must divide `d_k`, and codes for `K ≤ 16` are nibble-packed
+//!   ([`packs_nibbles`]) — two codes per byte, low nibble first —
+//!   while larger `K` stores one byte per code.
+//!
+//! Codebooks are per-(layer, head): the coordinator's
+//! `CompressionPolicy` may assign *different* `m` to different heads,
+//! so nothing here assumes a globally uniform geometry.
 
 mod adc;
 mod codebook;

@@ -3,11 +3,11 @@
 //!
 //! Two interchangeable backends behind one `Runtime` type:
 //!
-//! * **`--features xla`** — the PJRT CPU client ([`executor`]): compiles
+//! * **`--features xla`** — the PJRT CPU client (`executor`): compiles
 //!   the HLO text through xla_extension and runs it on device. Interchange
 //!   is HLO *text* — jax ≥0.5 serialized protos carry 64-bit instruction
 //!   ids that xla_extension 0.5.1 rejects; the text parser reassigns ids.
-//! * **default** — a pure-rust interpreter ([`interp`]) over the manifest
+//! * **default** — a pure-rust interpreter (`interp`) over the manifest
 //!   contract: it validates shapes/dtypes identically and evaluates the
 //!   known artifact kinds (fp16 attention, LUT build, ADC scores, LOOKAT
 //!   attention) with the same math as the L3 hot path. This keeps every

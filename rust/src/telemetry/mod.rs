@@ -6,7 +6,8 @@
 //! it. The [`MetricsRegistry`] is published into by the batcher (queue
 //! depth, occupancy, TTFT/ITL/tick histograms), the engine (token
 //! counters, ADC scan bytes, per-phase timer deltas, cache/swap/arena
-//! gauges), and is drained per run into `ServingReport` or served live
+//! gauges, pruned-token counts under a pruning compression policy),
+//! and is drained per run into `ServingReport` or served live
 //! via the `{"cmd":"stats"}` verb and the `--metrics-addr` Prometheus
 //! endpoint. The [`TraceRing`] records per-request span events as
 //! Chrome `trace_event` JSON for Perfetto.

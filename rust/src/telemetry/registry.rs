@@ -53,6 +53,7 @@ metric_enum!(
         PrefillTokens => "prefill_tokens",
         Ticks => "ticks",
         ScanBytes => "scan_bytes",
+        PrunedTokens => "pruned_tokens",
         PhaseLutBuildNs => "phase_lut_build_ns",
         PhaseScanNs => "phase_scan_ns",
         PhaseValueDecodeNs => "phase_value_decode_ns",

@@ -3,8 +3,8 @@
 //! the actual serving loop). Skips when artifacts aren't built.
 
 use lookat::coordinator::{
-    AttentionBackend, Batcher, BatcherConfig, Engine, EngineConfig,
-    Request, ValueBackend,
+    AttentionBackend, Batcher, BatcherConfig, CompressionPolicy, Engine,
+    EngineConfig, Request, ValueBackend,
 };
 use lookat::model::{ByteTokenizer, ModelConfig};
 use lookat::runtime::default_artifacts_dir;
@@ -25,6 +25,7 @@ fn paper_cfg(backend: AttentionBackend) -> EngineConfig {
         prefill_chunk: 0,
         pipeline: true,
         prefix_cache: false,
+        policy: CompressionPolicy::Uniform,
     }
 }
 
@@ -94,6 +95,7 @@ fn tiny_batcher(max_batch: usize) -> Batcher {
         prefill_chunk: 0,
         pipeline: true,
         prefix_cache: false,
+        policy: CompressionPolicy::Uniform,
     })
     .unwrap();
     Batcher::new(

@@ -10,8 +10,8 @@
 //! preemption churn (PJRT backends run when artifacts are built).
 
 use lookat::coordinator::{
-    AttentionBackend, Batcher, BatcherConfig, Engine, EngineConfig,
-    Request, SchedulerPolicy, TickEntry, ValueBackend,
+    AttentionBackend, Batcher, BatcherConfig, CompressionPolicy, Engine,
+    EngineConfig, Request, SchedulerPolicy, TickEntry, ValueBackend,
 };
 use lookat::kvcache::{
     CacheError, KeyStorage, KvCache, ValueStorage, BLOCK_TOKENS,
@@ -43,6 +43,7 @@ fn tiny_cfg_kv(
         prefill_chunk: 0,
         pipeline: true,
         prefix_cache: false,
+        policy: CompressionPolicy::Uniform,
     }
 }
 
@@ -58,6 +59,7 @@ fn paper_cfg(backend: AttentionBackend, threads: usize) -> EngineConfig {
         prefill_chunk: 0,
         pipeline: true,
         prefix_cache: false,
+        policy: CompressionPolicy::Uniform,
     }
 }
 
@@ -109,7 +111,7 @@ fn freed_blocks_return_to_the_allocator_and_readmit() {
     loop {
         let id = 2 + (appended / BLOCK_TOKENS) as u64 % 2;
         match c.append(id, &k, &v) {
-            Ok(()) => appended += 1,
+            Ok(_) => appended += 1,
             Err(CacheError::OutOfBlocks) => break,
             Err(e) => panic!("unexpected error: {e}"),
         }
@@ -216,6 +218,62 @@ fn batched_decode_bit_identical_every_key_value_backend_combo() {
                 backend.clone(), vb.clone(), 4)).unwrap();
             assert_batched_matches_serial(
                 &mut serial, &mut batched, 4, 6);
+        }
+    }
+}
+
+#[test]
+fn uniform_policy_bit_identical_every_key_value_backend_combo() {
+    // `--policy uniform` must be a no-op: codec training uses the exact
+    // historical calibration calls (same salts, same subspace geometry),
+    // so an engine with the policy spelled out decodes the same tokens
+    // as one built from the default-policy config on every backend combo
+    let key_backends = [
+        AttentionBackend::Fp16Exact,
+        AttentionBackend::Lookat { m: 4, k: 64 },
+        AttentionBackend::Lookat { m: 2, k: 64 },
+        AttentionBackend::Lookat { m: 4, k: 16 },
+        AttentionBackend::ScalarQuant { bits: 8 },
+        AttentionBackend::ScalarQuant { bits: 4 },
+    ];
+    let value_backends = [
+        ValueBackend::Fp32,
+        ValueBackend::Pq { m: 4, k: 64 },
+        ValueBackend::Pq { m: 4, k: 16 },
+    ];
+    let tok = ByteTokenizer::new();
+    let ids = tok.encode("uniform policy parity prompt, long enough to spill");
+    for backend in key_backends {
+        for vb in &value_backends {
+            let mut explicit =
+                tiny_cfg_kv(backend.clone(), vb.clone(), 2);
+            explicit.policy = CompressionPolicy::Uniform;
+            let mut default_cfg =
+                tiny_cfg_kv(backend.clone(), vb.clone(), 2);
+            default_cfg.policy = CompressionPolicy::default();
+            let mut a = Engine::build(&explicit).unwrap();
+            let mut b = Engine::build(&default_cfg).unwrap();
+
+            // uniform record mirrors the backend geometry exactly
+            let rec = a.policy_record();
+            assert_eq!(rec.policy, "uniform");
+            if let AttentionBackend::Lookat { m, .. } = backend {
+                assert!(
+                    rec.heads.iter().all(|h| h.key_m == m),
+                    "{backend:?}: uniform key_m must equal backend m"
+                );
+            }
+
+            a.start_seq(1, &ids).unwrap();
+            b.start_seq(1, &ids).unwrap();
+            for step in 0..6 {
+                let ta = a.decode_one(1).unwrap();
+                let tb = b.decode_one(1).unwrap();
+                assert_eq!(
+                    ta, tb,
+                    "{backend:?}/{vb:?} diverged at step {step}"
+                );
+            }
         }
     }
 }
