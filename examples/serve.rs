@@ -39,13 +39,14 @@ fn run_backend_kv(
             pipeline: true,
             prefix_cache: false,
             policy: CompressionPolicy::Uniform,
+            faults: Default::default(),
         },
         batcher: BatcherConfig {
             max_batch: 4,
             max_queue: 128,
             policy: lookat::coordinator::SchedulerPolicy::Fcfs,
             swap: true,
-            swap_cost: Default::default(),
+            ..BatcherConfig::default()
         },
         max_prompt_tokens: 120,
     })?;

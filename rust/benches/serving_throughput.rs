@@ -71,6 +71,7 @@ fn bench_backend(
             pipeline: true,
             prefix_cache: false,
             policy: CompressionPolicy::Uniform,
+            faults: Default::default(),
         },
         batcher: BatcherConfig {
             max_batch: 1,
@@ -161,6 +162,7 @@ fn scheduler_scenarios() -> anyhow::Result<Json> {
                 pipeline: true,
                 prefix_cache: false,
                 policy: CompressionPolicy::Uniform,
+                faults: Default::default(),
             },
             batcher: BatcherConfig {
                 max_batch: 16,
@@ -268,6 +270,7 @@ fn pipeline_scenario() -> anyhow::Result<Json> {
                 pipeline,
                 prefix_cache: false,
                 policy: CompressionPolicy::Uniform,
+                faults: Default::default(),
             },
             batcher: BatcherConfig {
                 max_batch: 16,
@@ -346,6 +349,7 @@ fn swap_scenario() -> anyhow::Result<Json> {
                 pipeline: true,
                 prefix_cache: false,
                 policy: CompressionPolicy::Uniform,
+                faults: Default::default(),
             },
             batcher: BatcherConfig {
                 max_batch: 8,
@@ -426,6 +430,7 @@ fn prefix_scenario() -> anyhow::Result<Json> {
                 pipeline: true,
                 prefix_cache,
                 policy: CompressionPolicy::Uniform,
+                faults: Default::default(),
             },
             batcher: BatcherConfig {
                 max_batch: 4,
@@ -517,6 +522,7 @@ fn policy_scenario() -> anyhow::Result<Json> {
                 pipeline: true,
                 prefix_cache: false,
                 policy,
+                faults: Default::default(),
             },
             batcher: BatcherConfig {
                 max_batch: 16,

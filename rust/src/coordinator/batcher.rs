@@ -24,6 +24,7 @@ use super::engine::{Engine, TickEntry};
 use super::request::{CompletedRequest, Request};
 use crate::kvcache::{CacheError, SeqId, BLOCK_TOKENS};
 use crate::telemetry::{Ctr, Gauge, Hist, MetricsRegistry, TraceKind, TraceRing};
+use crate::util::fault::{FaultAction, FaultPlan, FaultSite};
 
 /// How the batcher arbitrates cache blocks between running sequences.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -90,6 +91,14 @@ pub struct BatcherConfig {
     pub swap: bool,
     /// recompute-vs-swap decision model
     pub swap_cost: SwapCostModel,
+    /// server-side default deadline for requests that carry no
+    /// `timeout_ms` of their own (`None` = unlimited). A request past
+    /// its deadline is expired: blocks reclaimed, id pushed to
+    /// [`Batcher::expired`] for the caller to answer
+    pub deadline_ms: Option<u64>,
+    /// scheduler-side fault injection (the `tick` site); disabled plans
+    /// cost one branch per tick
+    pub faults: FaultPlan,
 }
 
 impl Default for BatcherConfig {
@@ -100,6 +109,8 @@ impl Default for BatcherConfig {
             policy: SchedulerPolicy::Fcfs,
             swap: true,
             swap_cost: SwapCostModel::default(),
+            deadline_ms: None,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -166,6 +177,12 @@ pub struct Batcher {
     active: Vec<Active>,
     pub completed: Vec<CompletedRequest>,
     pub rejected: Vec<SeqId>,
+    /// requests that blew their deadline (queued or active); blocks are
+    /// already reclaimed — the caller owes each id a `deadline` error
+    pub expired: Vec<SeqId>,
+    /// sequences torn down by [`Batcher::quarantine_active`] after a
+    /// tick panic; the caller owes each id a structured error
+    pub quarantined: Vec<SeqId>,
     /// sequences evicted under block pressure (cumulative; drained by
     /// the router per serving run)
     pub preemptions: usize,
@@ -191,6 +208,8 @@ impl Batcher {
             active: Vec::new(),
             completed: Vec::new(),
             rejected: Vec::new(),
+            expired: Vec::new(),
+            quarantined: Vec::new(),
             preemptions: 0,
             swap_outs: 0,
             swap_ins: 0,
@@ -262,6 +281,74 @@ impl Batcher {
         self.queue.is_empty() && self.active.is_empty()
     }
 
+    /// Expire queued and active requests past their deadline
+    /// ([`Request::timeout_ms`], defaulting to
+    /// `BatcherConfig::deadline_ms`). Cache state — live blocks for
+    /// active sequences, spill-store slabs for swapped queued ones — is
+    /// reclaimed through [`Engine::release`]; the id lands in
+    /// [`Batcher::expired`] so the caller can answer the connection.
+    fn expire_deadlines(&mut self, now_s: f64) {
+        let default_ms = self.cfg.deadline_ms;
+        let mut i = 0;
+        while i < self.queue.len() {
+            let past = self.queue[i]
+                .req
+                .deadline_s(default_ms)
+                .is_some_and(|d| now_s >= d);
+            if !past {
+                i += 1;
+                continue;
+            }
+            let q = self.queue.remove(i).unwrap();
+            // swapped entries hold spill-store state, fresh ones hold
+            // nothing at all — release is best-effort either way
+            let _ = self.engine.release(q.req.id);
+            self.expire(q.req.id, now_s, q.context_len());
+        }
+        let mut i = 0;
+        while i < self.active.len() {
+            let past = self.active[i]
+                .req
+                .deadline_s(default_ms)
+                .is_some_and(|d| now_s >= d);
+            if !past {
+                i += 1;
+                continue;
+            }
+            let a = self.active.swap_remove(i);
+            let _ = self.engine.release(a.req.id);
+            self.expire(a.req.id, now_s, a.generated.len());
+        }
+    }
+
+    fn expire(&mut self, id: SeqId, now_s: f64, arg: usize) {
+        self.metrics.inc(Ctr::DeadlineExpired, 1);
+        self.trace(now_s, id, TraceKind::Rejected, 0.0, arg);
+        self.expired.push(id);
+    }
+
+    /// Tear down every active sequence after a tick panic: blocks are
+    /// freed (best effort — the engine itself may be mid-fault), ids
+    /// land in [`Batcher::quarantined`] for the caller to answer, and
+    /// the scheduler is left clean so serving continues. Returns the
+    /// quarantined ids.
+    pub fn quarantine_active(&mut self, now_s: f64) -> Vec<SeqId> {
+        let mut ids = Vec::with_capacity(self.active.len());
+        for a in self.active.drain(..) {
+            let _ = self.engine.release(a.req.id);
+            ids.push(a.req.id);
+        }
+        if !ids.is_empty() {
+            self.metrics.inc(Ctr::PanicsQuarantined, 1);
+        }
+        for &id in &ids {
+            self.trace(now_s, id, TraceKind::Rejected, 0.0, 0);
+        }
+        self.quarantined.extend_from_slice(&ids);
+        self.metrics.set(Gauge::ActiveSeqs, self.active.len() as u64);
+        ids
+    }
+
     /// Blocks the queue-front request needs to be admitted under the
     /// current policy.
     fn admission_need(&self, q: &Queued) -> usize {
@@ -288,6 +375,7 @@ impl Batcher {
     /// prompt is fed to the engine chunk by chunk inside
     /// [`Batcher::step`]'s mixed ticks.
     pub fn admit(&mut self, now_s: f64) {
+        self.expire_deadlines(now_s);
         let mut budget = self.engine.free_blocks();
         let total = self.engine.total_blocks();
         while self.active.len() < self.cfg.max_batch {
@@ -488,6 +576,24 @@ impl Batcher {
     /// the tick by evicting low-priority sequences. Returns the number
     /// of decode tokens produced; `now_s` stamps completion records.
     pub fn step(&mut self, now_s: f64) -> anyhow::Result<usize> {
+        // tick-site fault hook, evaluated before any scheduler or
+        // engine state changes so a panic here quarantines cleanly
+        match self.cfg.faults.check(FaultSite::Tick) {
+            None => {}
+            Some(FaultAction::Delay(d)) => {
+                self.metrics.inc(Ctr::FaultsInjected, 1);
+                std::thread::sleep(d);
+            }
+            Some(FaultAction::Err) => {
+                self.metrics.inc(Ctr::FaultsInjected, 1);
+                anyhow::bail!("injected fault: tick");
+            }
+            Some(FaultAction::Panic) => {
+                self.metrics.inc(Ctr::FaultsInjected, 1);
+                panic!("injected fault: tick");
+            }
+        }
+        self.expire_deadlines(now_s);
         if self.active.is_empty() {
             return Ok(0);
         }
@@ -655,6 +761,7 @@ mod tests {
             pipeline: true,
             prefix_cache: false,
             policy: crate::coordinator::CompressionPolicy::Uniform,
+            faults: Default::default(),
         })
         .unwrap();
         Batcher::new(
@@ -681,6 +788,7 @@ mod tests {
             prompt: ByteTokenizer::new().encode("prompt text"),
             max_new_tokens: gen,
             arrival_s: 0.0,
+            timeout_ms: None,
         }
     }
 
@@ -733,6 +841,7 @@ mod tests {
             pipeline: true,
             prefix_cache: false,
             policy: crate::coordinator::CompressionPolicy::Uniform,
+            faults: Default::default(),
         })
         .unwrap();
         let mut b = Batcher::new(
@@ -830,6 +939,7 @@ mod tests {
             prompt: ByteTokenizer::new().encode("prefill only"),
             max_new_tokens: 0,
             arrival_s: 0.0,
+            timeout_ms: None,
         });
         drain(&mut b);
         assert_eq!(b.completed.len(), 1);
@@ -846,6 +956,7 @@ mod tests {
             prompt: vec![1u32; 3 * BLOCK_TOKENS],
             max_new_tokens: 4,
             arrival_s: 0.0,
+            timeout_ms: None,
         };
         b.submit(huge);
         b.submit(req(1, 2));
@@ -950,6 +1061,7 @@ mod tests {
             pipeline: true,
             prefix_cache: true,
             policy: crate::coordinator::CompressionPolicy::Uniform,
+            faults: Default::default(),
         })
         .unwrap();
         let mut b = Batcher::new(
@@ -968,6 +1080,7 @@ mod tests {
             prompt: prompt.clone(),
             max_new_tokens: 8,
             arrival_s: 0.0,
+            timeout_ms: None,
         });
         b.admit(0.0);
         b.step(0.0).unwrap(); // monolithic prefill registers the prefix
@@ -976,6 +1089,7 @@ mod tests {
             prompt,
             max_new_tokens: 8,
             arrival_s: 0.1,
+            timeout_ms: None,
         });
         b.admit(0.1);
         assert_eq!(b.prefix_hits, 1,
@@ -1106,5 +1220,153 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn queued_request_past_deadline_is_expired_not_admitted() {
+        let mut b = mk_batcher(1, 16, 64);
+        // id 0 occupies the single batch slot; id 1 waits in queue
+        b.submit(req(0, 50));
+        let mut slow = req(1, 2);
+        slow.timeout_ms = Some(100);
+        b.submit(slow);
+        b.admit(0.0);
+        assert_eq!(b.active(), 1);
+        assert_eq!(b.queued(), 1);
+        // the queued request's deadline (arrival 0.0 + 100ms) passes
+        b.admit(0.2);
+        assert_eq!(b.expired, vec![1]);
+        assert_eq!(b.queued(), 0);
+        drain(&mut b);
+        assert_eq!(b.completed.len(), 1);
+        assert_eq!(b.completed[0].id, 0);
+        assert_eq!(b.engine().cache_stats().tokens, 0);
+        assert_eq!(
+            b.engine().metrics().counter(Ctr::DeadlineExpired),
+            1
+        );
+    }
+
+    #[test]
+    fn active_request_past_deadline_frees_its_blocks() {
+        let mut b = mk_batcher(2, 16, 64);
+        let mut r = req(0, 1000);
+        r.timeout_ms = Some(50);
+        b.submit(r);
+        b.submit(req(1, 3));
+        b.admit(0.0);
+        b.step(0.0).unwrap();
+        assert_eq!(b.active(), 2);
+        // mid-generation expiry: blocks reclaimed, peer unaffected
+        b.step(0.1).unwrap();
+        assert_eq!(b.expired, vec![0]);
+        assert_eq!(b.active(), 1);
+        drain(&mut b);
+        assert_eq!(b.completed.len(), 1);
+        assert_eq!(b.completed[0].id, 1);
+        assert_eq!(b.engine().cache_stats().tokens, 0);
+        assert_eq!(b.engine().cache_stats().blocks_allocated, 0);
+    }
+
+    #[test]
+    fn server_default_deadline_applies_when_request_has_none() {
+        let mut b = mk_batcher(1, 16, 64);
+        b.cfg.deadline_ms = Some(100);
+        b.submit(req(0, 1000));
+        b.admit(0.0);
+        b.step(0.0).unwrap();
+        b.step(0.2).unwrap();
+        assert_eq!(b.expired, vec![0]);
+        assert!(b.idle());
+        assert_eq!(b.engine().cache_stats().blocks_allocated, 0);
+    }
+
+    #[test]
+    fn per_request_timeout_overrides_server_default() {
+        let mut b = mk_batcher(2, 16, 64);
+        b.cfg.deadline_ms = Some(50);
+        let mut patient = req(0, 4);
+        patient.timeout_ms = Some(60_000);
+        b.submit(patient);
+        b.admit(0.0);
+        let mut now = 0.0;
+        while !b.idle() {
+            b.admit(now);
+            b.step(now).unwrap();
+            now += 0.1; // every tick is past the 50ms default
+        }
+        assert_eq!(b.completed.len(), 1, "own timeout must win");
+        assert!(b.expired.is_empty());
+    }
+
+    #[test]
+    fn injected_tick_error_surfaces_and_recovers() {
+        let mut b = mk_batcher(2, 16, 64);
+        b.cfg.faults = FaultPlan::parse("tick:err@2").unwrap();
+        b.submit(req(0, 3));
+        b.admit(0.0);
+        b.step(0.0).unwrap(); // tick 1: clean
+        let err = b.step(0.1).unwrap_err(); // tick 2: injected
+        assert!(err.to_string().contains("injected fault: tick"));
+        drain(&mut b); // later ticks are clean again
+        assert_eq!(b.completed.len(), 1);
+        assert_eq!(
+            b.engine().metrics().counter(Ctr::FaultsInjected),
+            1
+        );
+    }
+
+    #[test]
+    fn tick_panic_quarantines_active_and_serving_continues() {
+        let mut b = mk_batcher(2, 16, 64);
+        b.cfg.faults = FaultPlan::parse("tick:panic@2").unwrap();
+        b.submit(req(0, 3));
+        b.submit(req(1, 3));
+        b.admit(0.0);
+        b.step(0.0).unwrap();
+        let panicked = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| b.step(0.1)),
+        )
+        .is_err();
+        assert!(panicked, "tick 2 must panic by plan");
+        let ids = b.quarantine_active(0.1);
+        assert_eq!(ids, vec![0, 1]);
+        assert_eq!(b.quarantined, vec![0, 1]);
+        assert_eq!(b.engine().cache_stats().blocks_allocated, 0);
+        assert_eq!(
+            b.engine().metrics().counter(Ctr::PanicsQuarantined),
+            1
+        );
+        // the batcher keeps serving fresh work after the quarantine
+        b.submit(req(7, 2));
+        drain(&mut b);
+        assert_eq!(b.completed.len(), 1);
+        assert_eq!(b.completed[0].id, 7);
+        assert_eq!(b.engine().cache_stats().tokens, 0);
+    }
+
+    #[test]
+    fn disabled_fault_plan_changes_nothing() {
+        // bit-parity: default (disabled) plan vs no plan at all
+        let run = |spec: Option<&str>| {
+            let mut b = mk_batcher_policy(
+                4, 32, 3, SchedulerPolicy::Preempt, 8);
+            if let Some(s) = spec {
+                b.cfg.faults = FaultPlan::parse(s).unwrap();
+            }
+            for i in 0..6 {
+                assert!(b.submit(req(i, 25)));
+            }
+            drain(&mut b);
+            let mut toks: Vec<(u64, Vec<u32>)> = b
+                .completed
+                .iter()
+                .map(|c| (c.id, c.generated.clone()))
+                .collect();
+            toks.sort();
+            toks
+        };
+        assert_eq!(run(None), run(Some("")));
+        assert_eq!(run(None), run(Some("seed:42")));
     }
 }

@@ -51,6 +51,7 @@ use crate::model::{Gpt2, ModelConfig, PrefillOutput, Weights};
 use crate::pq::{PqCodec, TrainOpts};
 use crate::runtime::Runtime;
 use crate::telemetry::{Ctr, Gauge, MetricsRegistry};
+use crate::util::fault::{FaultAction, FaultPlan, FaultSite};
 use crate::util::threadpool::{self, parallel_map, scratch};
 use crate::util::timing::{timed, Phase, PhaseTimers, PhaseTimes};
 use crate::workload::{Corpus, Genre};
@@ -165,6 +166,10 @@ pub struct EngineConfig {
     /// backends accept only `Uniform` (the artifacts bake in one
     /// global m)
     pub policy: CompressionPolicy,
+    /// deterministic fault-injection plan (chaos testing; the default
+    /// disabled plan is a single branch on the hot path). Engine-side
+    /// hooks: block allocation, swap out/in, prefix attach
+    pub faults: FaultPlan,
 }
 
 impl Default for EngineConfig {
@@ -181,6 +186,7 @@ impl Default for EngineConfig {
             pipeline: true,
             prefix_cache: false,
             policy: CompressionPolicy::Uniform,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -236,6 +242,11 @@ struct PrefixEntry {
     tokens: Vec<u32>,
     blocks: Vec<BlockId>,
     holders: usize,
+    /// FNV-1a over the blocks' cache content (all layers, chained),
+    /// stamped at registration and re-verified before any attach —
+    /// shared blocks are immutable, so drift means corruption and the
+    /// entry is dropped instead of served
+    checksum: u64,
 }
 
 /// Chain-hash-keyed index of shared prompt blocks. The key for block
@@ -294,6 +305,39 @@ pub struct Engine {
     summary: PolicySummary,
     /// cumulative pruned-token count at the last per-tick publish
     last_pruned: AtomicU64,
+    /// deterministic fault-injection plan (disabled by default; see
+    /// [`crate::util::fault`])
+    faults: FaultPlan,
+}
+
+/// Typed failure from the engine's admission path. `Cache` errors are
+/// retryable capacity signals (the scheduler preempts or re-queues);
+/// `Fault` wraps what used to be a `panic!` — a non-cache prefill
+/// failure (position overflow, kernel fault) the scheduler answers by
+/// quarantining the one sequence and keeping everyone else alive.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineError {
+    Cache(CacheError),
+    Fault { seq: SeqId, msg: String },
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Cache(e) => write!(f, "{e}"),
+            EngineError::Fault { seq, msg } => {
+                write!(f, "sequence {seq} prefill fault: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<CacheError> for EngineError {
+    fn from(e: CacheError) -> Self {
+        EngineError::Cache(e)
+    }
 }
 
 impl Engine {
@@ -611,7 +655,28 @@ impl Engine {
             policy: cfg.policy.clone(),
             summary,
             last_pruned: AtomicU64::new(0),
+            faults: cfg.faults.clone(),
         })
+    }
+
+    /// Consult the fault plan at an engine hook. Delay actions sleep in
+    /// place and return `None` (the operation proceeds); `Err` is
+    /// returned for the call site to convert into its native error
+    /// type; `Panic` panics here (the serving loop's `catch_unwind`
+    /// isolation is what's under test). Every firing is counted.
+    fn injected_fault(&mut self, site: FaultSite) -> Option<FaultAction> {
+        let act = self.faults.check(site)?;
+        self.metrics.inc(Ctr::FaultsInjected, 1);
+        match act {
+            FaultAction::Delay(d) => {
+                std::thread::sleep(d);
+                None
+            }
+            FaultAction::Panic => {
+                panic!("injected fault: {}", site.name())
+            }
+            FaultAction::Err => Some(FaultAction::Err),
+        }
     }
 
     /// The active compression policy.
@@ -906,13 +971,30 @@ impl Engine {
             let toks =
                 &prompt[i * BLOCK_TOKENS..(i + 1) * BLOCK_TOKENS];
             let h = chain_hash(parent, toks);
-            match self.prefix.entries.get(&h) {
-                Some(e) if e.tokens == toks => {
-                    matched.push((h, e.blocks.clone()));
-                    parent = h;
-                }
-                _ => break,
+            let Some(e) = self.prefix.entries.get(&h) else { break };
+            if e.tokens != toks {
+                break;
             }
+            let blocks = e.blocks.clone();
+            let want = e.checksum;
+            // integrity gate: shared blocks are immutable by the
+            // copy-on-write contract, so a checksum mismatch means
+            // corruption — drop the entry and re-prefill from this
+            // block on instead of serving poisoned state
+            if self.prefix_block_checksum(&blocks) != want {
+                self.metrics.inc(Ctr::ChecksumFailures, 1);
+                self.prefix.entries.remove(&h);
+                break;
+            }
+            matched.push((h, blocks));
+            parent = h;
+        }
+        // injected prefix-attach fault: the lookup degrades to a miss
+        // (the request re-prefills; correctness is unaffected)
+        if !matched.is_empty()
+            && self.injected_fault(FaultSite::PrefixAttach).is_some()
+        {
+            matched.clear();
         }
         self.begin_seq(id)?;
         if matched.is_empty() {
@@ -973,14 +1055,32 @@ impl Engine {
         if fresh.is_empty() {
             return;
         }
+        // stamp each entry's content checksum while the blocks are
+        // provably untouched (they were just prefilled)
+        let fresh: Vec<(u64, Vec<u32>, Vec<BlockId>, u64)> = fresh
+            .into_iter()
+            .map(|(h, toks, blocks)| {
+                let ck = self.prefix_block_checksum(&blocks);
+                (h, toks, blocks, ck)
+            })
+            .collect();
         let held = self.prefix.held.entry(id).or_default();
-        for (h, toks, blocks) in fresh {
+        for (h, toks, blocks, checksum) in fresh {
             self.prefix.entries.insert(
                 h,
-                PrefixEntry { tokens: toks, blocks, holders: 1 },
+                PrefixEntry { tokens: toks, blocks, holders: 1, checksum },
             );
             held.push(h);
         }
+    }
+
+    /// One prefix entry's content checksum: each layer's physical
+    /// block chained through FNV-1a in layer order.
+    fn prefix_block_checksum(&self, blocks: &[BlockId]) -> u64 {
+        self.caches
+            .iter()
+            .zip(blocks)
+            .fold(0xcbf29ce484222325, |h, (c, &b)| c.block_checksum(b, h))
     }
 
     /// Drop a sequence's stake in the prefix index; entries with no
@@ -1013,6 +1113,11 @@ impl Engine {
         if self.swapped_meta.contains_key(&id) {
             bail!("sequence {id} is already swapped out");
         }
+        if self.injected_fault(FaultSite::SwapOut).is_some() {
+            // before any state moves: the caller's fallback (drop the
+            // victim and re-prefill later) sees a clean sequence
+            bail!("{}", CacheError::Injected("swap_out"));
+        }
         let spill_bytes = self.seq_spill_bytes(id);
         let meta = self
             .seqs
@@ -1036,6 +1141,12 @@ impl Engine {
         if !self.swapped_meta.contains_key(&id) {
             return Err(CacheError::UnknownSeq(id));
         }
+        if self.injected_fault(FaultSite::SwapIn).is_some() {
+            // drop the parked state so the scheduler's fallback (clear
+            // the swapped flag, re-prefill) leaves nothing behind
+            self.purge_swapped(id);
+            return Err(CacheError::Injected("swap_in"));
+        }
         // max across layers: per-layer pruning thresholds can leave
         // layers with different survivor counts (hence block counts)
         let need = self
@@ -1052,6 +1163,12 @@ impl Engine {
                 for l in 0..layer {
                     let _ = self.caches[l].swap_out(id);
                 }
+                if matches!(e, CacheError::Corrupt(_)) {
+                    // never restore a poisoned slab; the whole spill
+                    // entry dies and the sequence re-prefills
+                    self.metrics.inc(Ctr::ChecksumFailures, 1);
+                    self.purge_swapped(id);
+                }
                 return Err(e);
             }
         }
@@ -1063,6 +1180,25 @@ impl Engine {
         self.metrics
             .inc(Ctr::SwapBytesIn, self.seq_spill_bytes(id) as u64);
         Ok(())
+    }
+
+    /// Drop every layer's spill entry and the parked decode state —
+    /// the sequence must re-prefill from tokens.
+    fn purge_swapped(&mut self, id: SeqId) {
+        self.swapped_meta.remove(&id);
+        for c in self.caches.iter_mut() {
+            c.drop_swapped(id);
+        }
+    }
+
+    /// Chaos-test instrumentation: corrupt the spill entries backing a
+    /// swapped sequence so the next swap-in fails its checksum.
+    pub fn corrupt_swapped(&mut self, id: SeqId) -> bool {
+        let mut any = false;
+        for c in self.caches.iter_mut() {
+            any |= c.corrupt_swapped(id);
+        }
+        any
     }
 
     /// Whether a sequence currently lives in the spill store.
@@ -1110,7 +1246,7 @@ impl Engine {
     /// one span through the backend kernel). Rolls back cleanly on
     /// cache exhaustion so the caller can retry later.
     pub fn start_seq(&mut self, id: SeqId, prompt: &[u32])
-        -> Result<(), CacheError>
+        -> Result<(), EngineError>
     {
         assert!(!prompt.is_empty(), "empty prompt");
         self.begin_seq(id)?;
@@ -1124,12 +1260,15 @@ impl Engine {
                 // filled) sequence entirely
                 let _ = self.release(id);
                 match e.downcast_ref::<CacheError>() {
-                    Some(ce) => Err(ce.clone()),
+                    Some(ce) => Err(EngineError::Cache(ce.clone())),
                     // non-cache failures (position overflow, kernel
-                    // faults) are programming errors, not retryable
-                    // capacity signals — matching the pre-scheduler
-                    // behaviour of panicking inside the prefill
-                    None => panic!("start_seq({id}): {e:#}"),
+                    // faults) used to panic the serving thread here;
+                    // typed, the scheduler quarantines this one
+                    // sequence and keeps serving the rest
+                    None => Err(EngineError::Fault {
+                        seq: id,
+                        msg: format!("{e:#}"),
+                    }),
                 }
             }
         }
@@ -1209,6 +1348,14 @@ impl Engine {
                     "sequence {id} would exceed max position {max_pos}"
                 );
             }
+        }
+
+        // injected allocator failure: the same typed signal as a real
+        // exhausted pool, so schedulers exercise their preempt/retry
+        // path without actually shrinking the budget
+        if self.injected_fault(FaultSite::Alloc).is_some() {
+            return Err(anyhow::Error::new(CacheError::OutOfBlocks)
+                .context("injected allocation failure"));
         }
 
         // pre-flight the tick's block demand so a mid-batch OutOfBlocks
@@ -1829,6 +1976,7 @@ mod tests {
             pipeline: true,
             prefix_cache: false,
             policy: CompressionPolicy::Uniform,
+            faults: Default::default(),
         }
     }
 

@@ -29,8 +29,8 @@ pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig, SchedulerPolicy, SwapCostModel};
 pub use engine::{
-    AttentionBackend, Engine, EngineConfig, TickEntry, TickOutcome,
-    ValueBackend,
+    AttentionBackend, Engine, EngineConfig, EngineError, TickEntry,
+    TickOutcome, ValueBackend,
 };
 pub use policy::{CompressionPolicy, HeadPolicy, PolicySummary};
 pub use request::{CompletedRequest, Request, RequestState};

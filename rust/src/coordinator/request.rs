@@ -12,6 +12,21 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// arrival time offset (seconds from trace start)
     pub arrival_s: f64,
+    /// per-request deadline: the request must finish within this many
+    /// milliseconds of arrival or it is expired (blocks reclaimed, a
+    /// `deadline` error answered). `None` defers to the scheduler's
+    /// configured default, which may also be unlimited
+    pub timeout_ms: Option<u64>,
+}
+
+impl Request {
+    /// The absolute deadline in trace time, given the scheduler's
+    /// default timeout (`None` = no deadline).
+    pub fn deadline_s(&self, default_ms: Option<u64>) -> Option<f64> {
+        self.timeout_ms
+            .or(default_ms)
+            .map(|ms| self.arrival_s + ms as f64 / 1e3)
+    }
 }
 
 /// Where a request currently is in its lifecycle.

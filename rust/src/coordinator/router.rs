@@ -11,7 +11,7 @@ use super::engine::{Engine, EngineConfig};
 use super::policy::HeadPolicy;
 use super::request::{CompletedRequest, Request};
 use crate::model::ByteTokenizer;
-use crate::telemetry::{Hist, HistogramSnapshot, TraceRing};
+use crate::telemetry::{Ctr, Hist, HistogramSnapshot, TraceRing};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 use crate::util::threadpool::scratch;
@@ -50,6 +50,15 @@ pub struct ServingReport {
     pub pruned_tokens: u64,
     pub completed: Vec<CompletedRequest>,
     pub rejected: usize,
+    /// requests that blew their deadline (queued or mid-generation)
+    pub expired: usize,
+    /// sequences torn down after a tick panic
+    pub quarantined: usize,
+    /// faults the injection plan fired during the run (0 with no plan)
+    pub faults_injected: u64,
+    /// swap-slab / prefix-block checksum verifications that failed
+    /// (each one fell back to re-prefill)
+    pub checksum_failures: u64,
     pub wall_s: f64,
     pub decode_tokens: usize,
     pub prefill_tokens: usize,
@@ -147,6 +156,16 @@ impl ServingReport {
         );
         o.set("completed", Json::Num(self.completed.len() as f64));
         o.set("rejected", Json::Num(self.rejected as f64));
+        o.set("expired", Json::Num(self.expired as f64));
+        o.set("quarantined", Json::Num(self.quarantined as f64));
+        o.set(
+            "faults_injected",
+            Json::Num(self.faults_injected as f64),
+        );
+        o.set(
+            "checksum_failures",
+            Json::Num(self.checksum_failures as f64),
+        );
         o.set("wall_s", Json::Num(self.wall_s));
         o.set("decode_tokens", Json::Num(self.decode_tokens as f64));
         o.set("throughput_tok_s", Json::Num(self.throughput_tok_s()));
@@ -278,6 +297,7 @@ impl Router {
                 prompt: tok.encode_clamped(&spec.prompt, max_len),
                 max_new_tokens: spec.gen_tokens,
                 arrival_s: spec.arrival_s,
+                timeout_ms: None,
             })
             .collect()
     }
@@ -307,7 +327,13 @@ impl Router {
             let _ = metrics.take_hist(h);
         }
         let scratch0 = scratch().arena_stats();
+        let faults0 = metrics.counter(Ctr::FaultsInjected);
+        let cksum0 = metrics.counter(Ctr::ChecksumFailures);
 
+        // a fault-injected tick error (or a transient engine failure)
+        // skips the tick and retries; only a persistent failure streak
+        // aborts the run
+        let mut consecutive_errs = 0usize;
         while !(pending.is_empty() && self.batcher.idle()) {
             let now = t0.elapsed().as_secs_f64();
             // deliver arrived requests
@@ -321,9 +347,23 @@ impl Router {
             }
             self.batcher.admit(now);
             if self.batcher.active() > 0 {
-                decode_tokens += self
-                    .batcher
-                    .step(t0.elapsed().as_secs_f64())?;
+                match self.batcher.step(t0.elapsed().as_secs_f64()) {
+                    Ok(n) => {
+                        consecutive_errs = 0;
+                        decode_tokens += n;
+                    }
+                    Err(e) => {
+                        consecutive_errs += 1;
+                        anyhow::ensure!(
+                            consecutive_errs < 100,
+                            "batcher stuck after {consecutive_errs} \
+                             consecutive tick failures: {e:#}"
+                        );
+                        crate::log_error!(
+                            "tick failed (retrying): {e:#}"
+                        );
+                    }
+                }
                 let stats = self.batcher.engine().cache_stats();
                 peak_key_bytes = peak_key_bytes.max(stats.key_bytes);
                 peak_value_bytes = peak_value_bytes.max(stats.value_bytes);
@@ -351,6 +391,15 @@ impl Router {
             // drain, don't peek: a reused router (set_max_batch sweeps)
             // must not re-report earlier runs' rejections
             rejected: std::mem::take(&mut self.batcher.rejected).len(),
+            expired: std::mem::take(&mut self.batcher.expired).len(),
+            quarantined: std::mem::take(&mut self.batcher.quarantined)
+                .len(),
+            faults_injected: metrics
+                .counter(Ctr::FaultsInjected)
+                .saturating_sub(faults0),
+            checksum_failures: metrics
+                .counter(Ctr::ChecksumFailures)
+                .saturating_sub(cksum0),
             wall_s: t0.elapsed().as_secs_f64(),
             decode_tokens,
             prefill_tokens,
@@ -400,6 +449,7 @@ mod tests {
                 pipeline: true,
                 prefix_cache: false,
                 policy: CompressionPolicy::Uniform,
+                faults: Default::default(),
             },
             batcher: BatcherConfig {
                 max_batch: 4,
@@ -479,6 +529,7 @@ mod tests {
                 pipeline: true,
                 prefix_cache: false,
                 policy: CompressionPolicy::Uniform,
+                faults: Default::default(),
             },
             batcher: BatcherConfig {
                 max_batch: 4,
@@ -547,6 +598,10 @@ mod tests {
             "pruned_tokens",
             "head_policies",
             "completed",
+            "expired",
+            "quarantined",
+            "faults_injected",
+            "checksum_failures",
             "wall_s",
             "throughput_tok_s",
             "preemptions",
@@ -593,6 +648,7 @@ mod tests {
                 pipeline: true,
                 prefix_cache: false,
                 policy: CompressionPolicy::Uniform,
+                faults: Default::default(),
             },
             batcher: BatcherConfig {
                 max_batch: 4,
@@ -685,6 +741,37 @@ mod tests {
     }
 
     #[test]
+    fn deadline_expiry_reaches_the_report() {
+        let mut r = router(AttentionBackend::Fp16Exact);
+        // a zero-ms default SLO expires every request at its first
+        // admission sweep, deterministically
+        r.batcher.cfg.deadline_ms = Some(0);
+        let reqs = r.tokenize_trace(&small_trace(3));
+        let report = r.serve_trace(reqs).unwrap();
+        assert_eq!(report.expired, 3);
+        assert!(report.completed.is_empty());
+        assert_eq!(
+            report.to_json().get("expired").and_then(Json::as_f64),
+            Some(report.expired as f64)
+        );
+        // all cache reclaimed despite the mid-flight teardowns
+        assert_eq!(r.batcher.engine().cache_stats().tokens, 0);
+        assert_eq!(r.batcher.engine().cache_stats().blocks_allocated, 0);
+    }
+
+    #[test]
+    fn injected_tick_errors_are_retried_and_counted() {
+        let mut r = router(AttentionBackend::Lookat { m: 4, k: 64 });
+        r.batcher.cfg.faults =
+            crate::util::fault::FaultPlan::parse("tick:err@2").unwrap();
+        let reqs = r.tokenize_trace(&small_trace(3));
+        let report = r.serve_trace(reqs).unwrap();
+        assert_eq!(report.completed.len(), 3, "run survives the fault");
+        assert_eq!(report.faults_injected, 1);
+        assert!(report.to_json().get("faults_injected").is_some());
+    }
+
+    #[test]
     fn report_carries_per_head_policy_detail() {
         // calibrated run: the report must expose each (layer, head)'s
         // resolved m and rho — the ablation harness reads these
@@ -701,6 +788,7 @@ mod tests {
                 pipeline: true,
                 prefix_cache: false,
                 policy: CompressionPolicy::Calibrated { bits: 150 },
+                faults: Default::default(),
             },
             batcher: BatcherConfig::default(),
             max_prompt_tokens: 48,
@@ -737,6 +825,7 @@ mod tests {
                 pipeline: true,
                 prefix_cache: false,
                 policy: CompressionPolicy::Prune { frac: 0.5 },
+                faults: Default::default(),
             },
             batcher: BatcherConfig::default(),
             max_prompt_tokens: 48,

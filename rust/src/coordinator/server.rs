@@ -12,6 +12,10 @@
 //!      request's own connection)
 //!   ← {"error": "..."}            (malformed request: no id assigned)
 //!
+//! Requests may carry `"timeout_ms"`: past that deadline (or the
+//! server-wide `--timeout-ms` default) the request is expired — blocks
+//! reclaimed, `{"error": "deadline", "id"}` answered.
+//!
 //! Control verbs share the wire (answered out of band by the serving
 //! loop, so the numbers come from the thread that owns the engine):
 //!   → {"cmd": "stats"}       ← telemetry snapshot (counters / gauges /
@@ -19,6 +23,11 @@
 //!   → {"cmd": "trace-dump"}  ← {"trace": "<chrome trace_event json>"}
 //!                              when started with a trace sink, else
 //!                              {"error": ...}
+//!   → {"cmd": "drain"}       ← {"ok": "draining", ...}; stops
+//!                              admissions (later requests get
+//!                              {"error": "draining", "id"}), finishes
+//!                              or deadline-expires everything in
+//!                              flight, then shuts the server down
 //!
 //! With `metrics_addr` set, a sidecar thread additionally serves the
 //! registry in Prometheus text exposition format over plain HTTP GET.
@@ -37,13 +46,19 @@ use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::request::Request;
 use crate::model::ByteTokenizer;
-use crate::telemetry::{MetricsRegistry, TraceRing};
+use crate::telemetry::{Gauge, MetricsRegistry, TraceRing};
 use crate::util::json::Json;
 
 /// Events the per-request trace ring retains before overwriting the
 /// oldest — ~6 per request-lifecycle plus one per tick, so this covers
 /// tens of thousands of requests of lookback.
 const TRACE_RING_EVENTS: usize = 65536;
+
+/// Per-connection socket write timeout: a client that stops reading
+/// stalls only its own replies, never the serving loop's other
+/// connections (writes happen under that connection's own lock).
+const WRITE_TIMEOUT: std::time::Duration =
+    std::time::Duration::from_secs(5);
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -79,6 +94,7 @@ impl Default for ServerConfig {
 enum Control {
     Stats,
     TraceDump,
+    Drain,
 }
 
 enum Inbound {
@@ -92,12 +108,14 @@ enum Inbound {
     },
 }
 
-/// A running server; `shutdown()` + drop joins all threads.
+/// A running server; `shutdown()` joins all threads immediately,
+/// `drain()` answers everything in flight first.
 pub struct Server {
     pub local_addr: std::net::SocketAddr,
     /// where the Prometheus sidecar bound, when enabled
     pub metrics_addr: Option<std::net::SocketAddr>,
     stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -112,6 +130,7 @@ impl Server {
         listener.set_nonblocking(true)?;
         let local_addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
+        let draining = Arc::new(AtomicBool::new(false));
         let queue: Arc<Mutex<Vec<Inbound>>> = Arc::new(Mutex::new(Vec::new()));
         let next_id = Arc::new(AtomicU64::new(0));
 
@@ -126,9 +145,22 @@ impl Server {
                 while !acc_stop.load(Ordering::SeqCst) {
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            let conn = Arc::new(Mutex::new(
-                                stream.try_clone().expect("clone stream"),
-                            ));
+                            // a client that stops reading must stall
+                            // only its own replies (shared with the
+                            // clone: SO_SNDTIMEO is per-socket)
+                            stream.set_write_timeout(Some(WRITE_TIMEOUT))
+                                .ok();
+                            let writer = match stream.try_clone() {
+                                Ok(w) => w,
+                                Err(e) => {
+                                    crate::log_error!(
+                                        "accept: stream clone failed, \
+                                         dropping connection: {e}"
+                                    );
+                                    continue;
+                                }
+                            };
+                            let conn = Arc::new(Mutex::new(writer));
                             let q = acc_queue.clone();
                             let ids = next_id.clone();
                             let rstop = acc_stop.clone();
@@ -165,6 +197,7 @@ impl Server {
         // serving thread: builds the engine, drains the queue into the
         // batcher, steps it, writes completions back to their connections
         let srv_stop = stop.clone();
+        let srv_draining = draining.clone();
         let srv_queue = queue.clone();
         let engine_cfg = cfg.engine.clone();
         let batcher_cfg = cfg.batcher.clone();
@@ -187,7 +220,7 @@ impl Server {
                 if let Some(t) = &srv_tracer {
                     batcher.set_tracer(t.clone());
                 }
-                serve_loop(batcher, srv_queue, srv_stop);
+                serve_loop(batcher, srv_queue, srv_stop, srv_draining);
                 if let (Some(t), Some(path)) = (&srv_tracer, &trace_out) {
                     match std::fs::write(path, t.dump_chrome_json()) {
                         Ok(()) => crate::log_info!(
@@ -223,13 +256,45 @@ impl Server {
             local_addr,
             metrics_addr,
             stop,
+            draining,
             threads,
         })
     }
 
-    /// Signal shutdown and join all threads.
+    /// Signal shutdown and join all threads. In-flight work is
+    /// abandoned; use [`Server::drain`] to answer it first.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    /// Graceful drain: stop admitting new requests (they are answered
+    /// `{"error": "draining"}`), finish or deadline-expire everything
+    /// already in flight, answer it all, then shut down and join. The
+    /// serving loop records the tail time in the `drain_duration_ms`
+    /// gauge.
+    pub fn drain(mut self) {
+        self.draining.store(true, Ordering::SeqCst);
+        // the serving thread flips `stop` once the batcher is empty
+        // and every queued line has been answered
+        while !self.stop.load(Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    /// Block until the server stops on its own — a wire-initiated
+    /// `{"cmd": "drain"}` ran dry, or the engine failed to build —
+    /// then join all threads. This is the CLI's foreground wait: it
+    /// never returns while the server is healthy and undrained.
+    pub fn wait(mut self) {
+        while !self.stop.load(Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -295,6 +360,7 @@ fn parse_inbound(
         let verb = match cmd {
             "stats" => Control::Stats,
             "trace-dump" => Control::TraceDump,
+            "drain" => Control::Drain,
             other => return Err(format!("unknown cmd '{other}'")),
         };
         return Ok(Inbound::Control {
@@ -314,12 +380,17 @@ fn parse_inbound(
         .and_then(|n| n.as_usize())
         .unwrap_or(16)
         .clamp(1, 256);
+    let timeout_ms = j
+        .get("timeout_ms")
+        .and_then(|n| n.as_usize())
+        .map(|ms| ms as u64);
     Ok(Inbound::Request {
         req: Request {
             id: next_id.fetch_add(1, Ordering::SeqCst),
             prompt: tok.encode_clamped(prompt, max_prompt),
             max_new_tokens: max_new,
             arrival_s: 0.0, // stamped by the serving loop
+            timeout_ms,
         },
         conn: conn.clone(),
     })
@@ -329,14 +400,20 @@ fn serve_loop(
     mut batcher: Batcher,
     queue: Arc<Mutex<Vec<Inbound>>>,
     stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
 ) {
     let t0 = std::time::Instant::now();
     let tok = ByteTokenizer::new();
     // request id -> connection to answer on
     let mut conns: std::collections::HashMap<u64, Arc<Mutex<TcpStream>>> =
         std::collections::HashMap::new();
+    // when the drain began, for the drain_duration_ms gauge
+    let mut drain_started: Option<f64> = None;
     loop {
         let now = t0.elapsed().as_secs_f64();
+        if draining.load(Ordering::SeqCst) && drain_started.is_none() {
+            drain_started = Some(now);
+        }
         // ingest — a full queue pushes the id onto `batcher.rejected`,
         // answered with every other rejection in the drain below.
         // Control verbs are answered here, from the engine-owning
@@ -347,6 +424,15 @@ fn serve_loop(
         for inbound in drained {
             match inbound {
                 Inbound::Request { mut req, conn } => {
+                    if drain_started.is_some() {
+                        // admissions are closed; answer immediately so
+                        // the client never waits on a draining server
+                        let mut err = Json::obj();
+                        err.set("error", Json::Str("draining".into()));
+                        err.set("id", Json::Num(req.id as f64));
+                        write_line(&conn, &err);
+                        continue;
+                    }
                     req.arrival_s = now;
                     conns.insert(req.id, conn);
                     let _ = batcher.submit(req);
@@ -378,20 +464,48 @@ fn serve_loop(
                     }
                     write_line(&conn, &o);
                 }
+                Inbound::Control { verb: Control::Drain, conn } => {
+                    draining.store(true, Ordering::SeqCst);
+                    if drain_started.is_none() {
+                        drain_started = Some(now);
+                    }
+                    let mut o = Json::obj();
+                    o.set("ok", Json::Str("draining".into()));
+                    o.set("queued", Json::Num(batcher.queued() as f64));
+                    o.set("active", Json::Num(batcher.active() as f64));
+                    write_line(&conn, &o);
+                }
             }
         }
-        // work
+        // work — the tick runs under catch_unwind so one poisoned
+        // sequence (or an injected panic) never kills the server: the
+        // active set is quarantined, answered below, and the loop goes
+        // on serving
         batcher.admit(now);
         let idle = batcher.active() == 0;
         if !idle {
-            if let Err(e) = batcher.step(t0.elapsed().as_secs_f64()) {
-                crate::log_error!("batcher step failed: {e:#}");
+            let step_now = t0.elapsed().as_secs_f64();
+            match std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| batcher.step(step_now)),
+            ) {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => {
+                    crate::log_error!("batcher step failed: {e:#}");
+                }
+                Err(payload) => {
+                    let msg = panic_message(payload.as_ref());
+                    let ids = batcher.quarantine_active(step_now);
+                    crate::log_error!(
+                        "batcher tick panicked ({msg}); quarantined \
+                         {} active sequence(s), serving continues",
+                        ids.len()
+                    );
+                }
             }
         }
-        // respond — completions first, then every rejection (queue
-        // backpressure at submit, never-fitting or colliding requests
-        // at admit), each on the rejected request's own connection so
-        // no client hangs
+        // respond — completions first, then every terminal error
+        // (rejected, deadline-expired, quarantined), each on the
+        // request's own connection so no client hangs
         for done in batcher.completed.drain(..) {
             if let Some(conn) = conns.remove(&done.id) {
                 let mut o = Json::obj();
@@ -419,13 +533,64 @@ fn serve_loop(
                 write_line(&conn, &err);
             }
         }
+        for id in batcher.expired.drain(..) {
+            if let Some(conn) = conns.remove(&id) {
+                let mut err = Json::obj();
+                err.set("error", Json::Str("deadline".into()));
+                err.set("id", Json::Num(id as f64));
+                write_line(&conn, &err);
+            }
+        }
+        for id in batcher.quarantined.drain(..) {
+            if let Some(conn) = conns.remove(&id) {
+                let mut err = Json::obj();
+                err.set(
+                    "error",
+                    Json::Str("quarantined: internal fault".into()),
+                );
+                err.set("id", Json::Num(id as f64));
+                write_line(&conn, &err);
+            }
+        }
         if idle {
             if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            if drain_started.is_some() && batcher.idle() {
+                // drained dry: answer any straggler lines, publish the
+                // tail time, and let `Server::drain` join us
+                for inbound in
+                    std::mem::take(&mut *queue.lock().unwrap())
+                {
+                    if let Inbound::Request { req, conn } = inbound {
+                        let mut err = Json::obj();
+                        err.set("error", Json::Str("draining".into()));
+                        err.set("id", Json::Num(req.id as f64));
+                        write_line(&conn, &err);
+                    }
+                }
+                let ms = (t0.elapsed().as_secs_f64()
+                    - drain_started.unwrap_or(now))
+                    * 1e3;
+                batcher
+                    .engine()
+                    .metrics()
+                    .set(Gauge::DrainDurationMs, ms.max(0.0) as u64);
+                stop.store(true, Ordering::SeqCst);
                 break;
             }
             std::thread::sleep(std::time::Duration::from_millis(2));
         }
     }
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
 }
 
 /// Minimal HTTP responder for Prometheus scrapes: every request gets
@@ -508,6 +673,7 @@ mod tests {
                 pipeline: true,
                 prefix_cache: false,
                 policy: crate::coordinator::CompressionPolicy::Uniform,
+                faults: Default::default(),
             },
             batcher: BatcherConfig {
                 max_batch: 2,
@@ -586,6 +752,7 @@ mod tests {
                 pipeline: true,
                 prefix_cache: false,
                 policy: crate::coordinator::CompressionPolicy::Uniform,
+                faults: Default::default(),
             },
             batcher: BatcherConfig {
                 max_batch: 2,
@@ -778,5 +945,144 @@ mod tests {
             roundtrip(server2.local_addr, r#"{"cmd": "trace-dump"}"#);
         assert!(dump2.get("error").is_some(), "{dump2}");
         server2.shutdown();
+    }
+
+    /// test_config with a tick fault plan (slowing or breaking ticks).
+    fn faulty_config(spec: &str) -> ServerConfig {
+        let mut cfg = test_config();
+        cfg.batcher.faults =
+            crate::util::fault::FaultPlan::parse(spec).unwrap();
+        cfg
+    }
+
+    #[test]
+    fn drain_verb_finishes_inflight_and_refuses_new_requests() {
+        // every tick sleeps 5ms, so the 256-token request stays in
+        // flight long enough to drain around it deterministically
+        let server = Server::start(faulty_config("tick_delay:5ms"))
+            .expect("server start");
+        let addr = server.local_addr;
+        let inflight = std::thread::spawn(move || {
+            roundtrip(
+                addr,
+                r#"{"prompt": "long running", "max_new_tokens": 256}"#,
+            )
+        });
+        // wait until the request is admitted before draining
+        loop {
+            let stats = roundtrip(addr, r#"{"cmd": "stats"}"#);
+            let active = stats
+                .get("gauges")
+                .and_then(|g| g.get("active_seqs"))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0);
+            if active >= 1.0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let ack = roundtrip(addr, r#"{"cmd": "drain"}"#);
+        assert_eq!(ack.get("ok").and_then(Json::as_str),
+                   Some("draining"), "{ack}");
+        // a post-drain request is refused immediately, not queued
+        let refused = roundtrip(
+            addr,
+            r#"{"prompt": "too late", "max_new_tokens": 2}"#,
+        );
+        assert_eq!(refused.get("error").and_then(Json::as_str),
+                   Some("draining"), "{refused}");
+        // the in-flight request still completes in full
+        let done = inflight.join().unwrap();
+        assert!(done.get("error").is_none(), "{done}");
+        assert_eq!(done.get("tokens").unwrap().as_usize(), Some(256));
+        server.drain();
+    }
+
+    #[test]
+    fn deadline_expired_request_answers_deadline_error() {
+        // 5ms-per-tick server: 256 tokens need >1s, the 80ms deadline
+        // expires mid-generation and must answer promptly
+        let server = Server::start(faulty_config("tick_delay:5ms"))
+            .expect("server start");
+        let resp = roundtrip(
+            server.local_addr,
+            r#"{"prompt": "hurry", "max_new_tokens": 256,
+                "timeout_ms": 80}"#,
+        );
+        assert_eq!(resp.get("error").and_then(Json::as_str),
+                   Some("deadline"), "{resp}");
+        assert!(resp.get("id").is_some());
+        // the server keeps serving deadline-free requests afterwards
+        let ok = roundtrip(
+            server.local_addr,
+            r#"{"prompt": "no rush", "max_new_tokens": 2}"#,
+        );
+        assert!(ok.get("error").is_none(), "{ok}");
+        let stats = roundtrip(server.local_addr, r#"{"cmd": "stats"}"#);
+        let expired = stats
+            .get("counters")
+            .and_then(|c| c.get("deadline_expired"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(expired >= 1.0, "{stats}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn tick_panic_is_quarantined_and_server_survives() {
+        // third tick panics by plan; the victim gets a structured
+        // error and the server stays up for the next client
+        let server = Server::start(faulty_config("tick:panic@3"))
+            .expect("server start");
+        let resp = roundtrip(
+            server.local_addr,
+            r#"{"prompt": "doomed", "max_new_tokens": 8}"#,
+        );
+        assert_eq!(resp.get("error").and_then(Json::as_str),
+                   Some("quarantined: internal fault"), "{resp}");
+        assert!(resp.get("id").is_some());
+        let ok = roundtrip(
+            server.local_addr,
+            r#"{"prompt": "survivor", "max_new_tokens": 3}"#,
+        );
+        assert!(ok.get("error").is_none(), "{ok}");
+        assert_eq!(ok.get("tokens").unwrap().as_usize(), Some(3));
+        let stats = roundtrip(server.local_addr, r#"{"cmd": "stats"}"#);
+        let counters = stats.get("counters").unwrap();
+        assert!(
+            counters
+                .get("panics_quarantined")
+                .and_then(Json::as_f64)
+                .unwrap()
+                >= 1.0,
+            "{stats}"
+        );
+        assert!(
+            counters
+                .get("faults_injected")
+                .and_then(Json::as_f64)
+                .unwrap()
+                >= 1.0,
+            "{stats}"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn slow_reader_does_not_block_other_clients() {
+        let server = test_server();
+        // client A sends a request and never reads its reply
+        let mut slow = TcpStream::connect(server.local_addr).unwrap();
+        writeln!(slow, r#"{{"prompt": "ignored reply", "max_new_tokens": 2}}"#)
+            .unwrap();
+        slow.flush().unwrap();
+        // client B must still be served promptly
+        let ok = roundtrip(
+            server.local_addr,
+            r#"{"prompt": "responsive", "max_new_tokens": 2}"#,
+        );
+        assert!(ok.get("error").is_none(), "{ok}");
+        drop(slow);
+        server.shutdown();
     }
 }

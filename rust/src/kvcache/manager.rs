@@ -6,6 +6,7 @@ use std::sync::Arc;
 
 use super::block::{BlockAllocator, BlockId, BlockView, BLOCK_TOKENS};
 use crate::pq::PqCodec;
+use crate::util::fault;
 
 /// Sequence identifier (one per serving request).
 pub type SeqId = u64;
@@ -137,6 +138,13 @@ pub enum CacheError {
     /// within one cache side. (Per-head subspace counts are fine: a
     /// `CompressionPolicy` assigns each head its own `m`.)
     MixedCodecs,
+    /// A swapped slab failed its FNV-1a integrity check at restore.
+    /// The spill entry is discarded — the scheduler re-prefills rather
+    /// than serving corrupt state.
+    Corrupt(SeqId),
+    /// A configured fault plan injected a failure at this hook point
+    /// (chaos testing — see [`crate::util::fault::FaultPlan`]).
+    Injected(&'static str),
 }
 
 /// Shared validation for the PQ storage constructors. Only the
@@ -174,6 +182,16 @@ impl std::fmt::Display for CacheError {
                     "PQ storage needs one centroid count across heads \
                      (K decides lane packing; per-head m is fine)"
                 )
+            }
+            CacheError::Corrupt(id) => {
+                write!(
+                    f,
+                    "sequence {id}'s swapped state failed checksum \
+                     verification (discarded; re-prefill required)"
+                )
+            }
+            CacheError::Injected(site) => {
+                write!(f, "injected fault ({site})")
             }
         }
     }
@@ -219,6 +237,10 @@ struct SwappedSeq {
     codes: Vec<u8>,
     values: Vec<f32>,
     value_codes: Vec<u8>,
+    /// FNV-1a over all four slabs, stamped at swap-out and verified at
+    /// swap-in — host-side spill memory is outside the paged arena's
+    /// invariants, so restores prove integrity before serving
+    checksum: u64,
 }
 
 impl SwappedSeq {
@@ -228,6 +250,19 @@ impl SwappedSeq {
             + self.codes.len()
             + self.values.len() * 4
             + self.value_codes.len()
+    }
+
+    /// FNV-1a over the slabs (chained in a fixed order).
+    fn compute_checksum(&self) -> u64 {
+        let mut h = fault::fnv1a(&[]);
+        for x in &self.keys_raw {
+            h = fault::fnv1a_extend(h, &x.to_le_bytes());
+        }
+        h = fault::fnv1a_extend(h, &self.codes);
+        for x in &self.values {
+            h = fault::fnv1a_extend(h, &x.to_le_bytes());
+        }
+        fault::fnv1a_extend(h, &self.value_codes)
     }
 }
 
@@ -606,6 +641,7 @@ impl KvCache {
             codes: Vec::new(),
             values: Vec::new(),
             value_codes: Vec::new(),
+            checksum: 0,
         };
         for &b in &st.blocks {
             let b = b as usize;
@@ -629,25 +665,30 @@ impl KvCache {
         for b in st.blocks {
             self.alloc.release(b);
         }
+        sw.checksum = sw.compute_checksum();
         self.swapped.insert(seq, sw);
         Ok(())
     }
 
     /// Restore a swapped-out sequence into freshly allocated blocks.
     /// Fails with [`CacheError::OutOfBlocks`] (entry kept for a later
-    /// retry) if the pool can't hold it right now.
+    /// retry) if the pool can't hold it right now, or with
+    /// [`CacheError::Corrupt`] (entry discarded) if the slabs no longer
+    /// match their swap-out checksum — corrupt state is never restored;
+    /// the scheduler re-prefills instead.
     pub fn swap_in(&mut self, seq: SeqId) -> Result<(), CacheError> {
         if self.seqs.contains_key(&seq) {
             return Err(CacheError::DuplicateSeq(seq));
         }
-        let need = self
-            .swapped
-            .get(&seq)
-            .ok_or(CacheError::UnknownSeq(seq))?
-            .len
-            .div_ceil(BLOCK_TOKENS);
+        let entry =
+            self.swapped.get(&seq).ok_or(CacheError::UnknownSeq(seq))?;
+        let need = entry.len.div_ceil(BLOCK_TOKENS);
         if self.alloc.available() < need {
             return Err(CacheError::OutOfBlocks);
+        }
+        if entry.compute_checksum() != entry.checksum {
+            self.swapped.remove(&seq);
+            return Err(CacheError::Corrupt(seq));
         }
         let sw = self.swapped.remove(&seq).unwrap();
         let blocks: Vec<BlockId> =
@@ -736,6 +777,64 @@ impl KvCache {
     /// sharing through them.
     pub fn seq_block_ids(&self, seq: SeqId) -> Result<&[BlockId], CacheError> {
         Ok(&self.seqs.get(&seq).ok_or(CacheError::UnknownSeq(seq))?.blocks)
+    }
+
+    /// FNV-1a over one block's live slabs, chained onto `state`. The
+    /// prefix cache stamps registered blocks with this and re-verifies
+    /// before attaching them to a new sequence — shared blocks are
+    /// immutable by the copy-on-write contract, so any drift is
+    /// corruption, and the attach falls back to a re-prefill.
+    pub fn block_checksum(&self, b: BlockId, state: u64) -> u64 {
+        let slot = BLOCK_TOKENS * self.h;
+        let (kf, kc) = (slot * self.d_k, self.key_lane_off[self.h]);
+        let (vf, vc) = (slot * self.d_k, self.val_lane_off[self.h]);
+        let b = b as usize;
+        let mut h = state;
+        match &self.storage {
+            KeyStorage::Fp16 => {
+                for x in &self.keys_raw[b * kf..(b + 1) * kf] {
+                    h = fault::fnv1a_extend(h, &x.to_le_bytes());
+                }
+            }
+            KeyStorage::Pq { .. } => {
+                h = fault::fnv1a_extend(h, &self.codes[b * kc..(b + 1) * kc]);
+            }
+        }
+        match &self.value_storage {
+            ValueStorage::Fp32 => {
+                for x in &self.values[b * vf..(b + 1) * vf] {
+                    h = fault::fnv1a_extend(h, &x.to_le_bytes());
+                }
+            }
+            ValueStorage::Pq { .. } => {
+                h = fault::fnv1a_extend(
+                    h,
+                    &self.value_codes[b * vc..(b + 1) * vc],
+                );
+            }
+        }
+        h
+    }
+
+    /// Flip one byte of a spill entry's slabs — chaos-test
+    /// instrumentation that forces the swap-in checksum to fail.
+    /// Returns `false` when the sequence has no spill entry.
+    pub fn corrupt_swapped(&mut self, seq: SeqId) -> bool {
+        let Some(sw) = self.swapped.get_mut(&seq) else {
+            return false;
+        };
+        if let Some(c) = sw.codes.first_mut() {
+            *c ^= 0xff;
+        } else if let Some(x) = sw.keys_raw.first_mut() {
+            *x = f32::from_bits(x.to_bits() ^ 1);
+        } else if let Some(c) = sw.value_codes.first_mut() {
+            *c ^= 0xff;
+        } else if let Some(x) = sw.values.first_mut() {
+            *x = f32::from_bits(x.to_bits() ^ 1);
+        } else {
+            return false;
+        }
+        true
     }
 
     /// Zero-copy iteration over one head's cache blocks, in token order.
@@ -1779,6 +1878,65 @@ mod tests {
         c.drop_swapped(1);
         assert!(matches!(c.swap_in(1), Err(CacheError::UnknownSeq(1))));
         assert_eq!(c.swap_bytes(), 0);
+    }
+
+    #[test]
+    fn corrupted_swap_entry_is_rejected_and_discarded() {
+        // PQ keys (code slab) and the FP16 raw-slab path both verify
+        let mut c =
+            KvCache::new(H, DK, 4, pq_storage(4), ValueStorage::Fp32);
+        c.create_seq(1).unwrap();
+        for t in 0..40 {
+            let (k, v) = token(60 + t);
+            c.append(1, &k, &v).unwrap();
+        }
+        c.swap_out(1).unwrap();
+        assert!(c.corrupt_swapped(1));
+        assert_eq!(c.swap_in(1), Err(CacheError::Corrupt(1)));
+        assert!(
+            !c.is_swapped(1),
+            "poisoned spill entry must be discarded"
+        );
+        assert_eq!(
+            c.stats().blocks_allocated,
+            0,
+            "rejected restore must not leak blocks"
+        );
+
+        let mut f =
+            KvCache::new(H, DK, 4, KeyStorage::Fp16, ValueStorage::Fp32);
+        f.create_seq(2).unwrap();
+        let (k, v) = token(0);
+        f.append(2, &k, &v).unwrap();
+        f.swap_out(2).unwrap();
+        assert!(f.corrupt_swapped(2));
+        assert_eq!(f.swap_in(2), Err(CacheError::Corrupt(2)));
+        assert!(!f.corrupt_swapped(2), "entry is gone");
+    }
+
+    #[test]
+    fn block_checksum_is_stable_and_content_sensitive() {
+        let mut c =
+            KvCache::new(H, DK, 4, pq_storage(4), pq_value_storage(4));
+        c.create_seq(1).unwrap();
+        for t in 0..2 * BLOCK_TOKENS {
+            let (k, v) = token(t as u64);
+            c.append(1, &k, &v).unwrap();
+        }
+        let ids = c.seq_block_ids(1).unwrap().to_vec();
+        let h0 = c.block_checksum(ids[0], 0xcbf29ce484222325);
+        let h1 = c.block_checksum(ids[1], 0xcbf29ce484222325);
+        assert_ne!(h0, h1, "different content, different checksum");
+        assert_eq!(
+            h0,
+            c.block_checksum(ids[0], 0xcbf29ce484222325),
+            "re-hashing untouched content is stable"
+        );
+        // chaining is order-sensitive
+        assert_ne!(
+            c.block_checksum(ids[1], h0),
+            c.block_checksum(ids[0], h1)
+        );
     }
 
     #[test]

@@ -122,6 +122,23 @@ fn parse_scheduler(s: &str) -> anyhow::Result<SchedulerPolicy> {
     })
 }
 
+/// `--faults` spec (empty falls back to the `LOOKAT_FAULTS` env var;
+/// both unset = injection disabled). Grammar and determinism live in
+/// [`lookat::util::fault::FaultPlan`].
+fn parse_faults(s: &str) -> anyhow::Result<lookat::util::fault::FaultPlan> {
+    let cli = if s.is_empty() { None } else { Some(s) };
+    lookat::util::fault::FaultPlan::resolve(cli)
+}
+
+/// `--timeout-ms` (0 = no server-side default deadline).
+fn parse_timeout_ms(ms: u64) -> Option<u64> {
+    if ms == 0 {
+        None
+    } else {
+        Some(ms)
+    }
+}
+
 fn parse_value_backend(s: &str) -> anyhow::Result<ValueBackend> {
     Ok(match s {
         "fp32" => ValueBackend::Fp32,
@@ -188,6 +205,13 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 .opt("trace-out", "",
                      "write a Chrome trace_event JSON of the run here \
                       (open in Perfetto; empty = disabled)")
+                .opt("timeout-ms", "0",
+                     "default per-request deadline in ms; past it the \
+                      request expires and frees its blocks (0 = none)")
+                .opt("faults", "",
+                     "deterministic fault-injection plan, e.g. \
+                      'seed:1,alloc:0.05,swap_in:err@3,tick_delay:20ms' \
+                      (empty = LOOKAT_FAULTS env, unset = disabled)")
                 .opt("seed", "7", "rng seed");
             let a = cli.parse(&args[1..])?;
             let backend = parse_backend(a.get("backend"))?;
@@ -200,6 +224,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let prefix_cache =
                 parse_on_off("prefix-cache", a.get("prefix-cache"))?;
             let trace_out = a.get("trace-out").to_string();
+            let faults = parse_faults(a.get("faults"))?;
+            let deadline_ms = parse_timeout_ms(a.get_u64("timeout-ms")?);
             let mut model = ModelConfig::gpt2_layer0();
             model.n_layer = a.get_usize("layers")?;
             let mut router = Router::build(RouterConfig {
@@ -215,12 +241,15 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     pipeline,
                     prefix_cache,
                     policy: compression,
+                    faults: faults.clone(),
                 },
                 batcher: BatcherConfig {
                     max_batch: a.get_usize("max-batch")?,
                     max_queue: 256,
                     policy,
                     swap,
+                    deadline_ms,
+                    faults,
                     ..BatcherConfig::default()
                 },
                 max_prompt_tokens: 120,
@@ -285,6 +314,15 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                      "enable per-request tracing; Chrome trace_event \
                       JSON written here on shutdown and served by the \
                       trace-dump verb (empty = disabled)")
+                .opt("timeout-ms", "0",
+                     "default per-request deadline in ms for requests \
+                      without their own \"timeout_ms\"; past it the \
+                      request is answered {\"error\": \"deadline\"} \
+                      (0 = none)")
+                .opt("faults", "",
+                     "deterministic fault-injection plan, e.g. \
+                      'seed:1,alloc:0.05,swap_in:err@3,tick_delay:20ms' \
+                      (empty = LOOKAT_FAULTS env, unset = disabled)")
                 .opt("seed", "7", "rng seed");
             let a = cli.parse(&args[1..])?;
             let backend = parse_backend(a.get("backend"))?;
@@ -305,6 +343,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             };
             let metrics_addr = opt_str(a.get("metrics-addr"));
             let trace_out = opt_str(a.get("trace-out"));
+            let faults = parse_faults(a.get("faults"))?;
+            let deadline_ms = parse_timeout_ms(a.get_u64("timeout-ms")?);
             let mut model = ModelConfig::gpt2_layer0();
             model.n_layer = a.get_usize("layers")?;
             let server = lookat::coordinator::Server::start(
@@ -321,12 +361,15 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                         pipeline,
                         prefix_cache,
                         policy: compression,
+                        faults: faults.clone(),
                     },
                     batcher: BatcherConfig {
                         max_batch: a.get_usize("max-batch")?,
                         max_queue: 256,
                         policy,
                         swap,
+                        deadline_ms,
+                        faults,
                         ..BatcherConfig::default()
                     },
                     max_prompt_tokens: 120,
@@ -341,14 +384,15 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             }
             println!(
                 "protocol: one JSON per line, e.g. \
-                 {{\"prompt\": \"hi\", \"max_new_tokens\": 8}}; \
+                 {{\"prompt\": \"hi\", \"max_new_tokens\": 8, \
+                 \"timeout_ms\": 5000}}; \
                  control verbs: {{\"cmd\": \"stats\"}}, \
-                 {{\"cmd\": \"trace-dump\"}}"
+                 {{\"cmd\": \"trace-dump\"}}, {{\"cmd\": \"drain\"}}"
             );
-            // serve until killed
-            loop {
-                std::thread::sleep(std::time::Duration::from_secs(3600));
-            }
+            // serve until killed or drained over the wire
+            server.wait();
+            println!("drained; exiting");
+            Ok(())
         }
         "stats" => {
             let cli = Cli::new("lookat stats",
@@ -572,13 +616,16 @@ USAGE:
                [--rate R] [--prefill-chunk T] [--scheduler fcfs|preempt]
                [--pipeline on|off] [--swap on|off] [--prefix-cache on|off]
                [--policy uniform|calibrated-<bits>|prune-<frac>]
-               [--trace-out FILE]
+               [--trace-out FILE] [--timeout-ms MS] [--faults SPEC]
   lookat serve-tcp [--backend B] [--value-backend V] [--addr HOST:PORT]
                    [--prefill-chunk T] [--scheduler fcfs|preempt]
                    [--pipeline on|off] [--swap on|off]
                    [--prefix-cache on|off]
                    [--policy uniform|calibrated-<bits>|prune-<frac>]
                    [--metrics-addr HOST:PORT] [--trace-out FILE]
+                   [--timeout-ms MS] [--faults SPEC]
+      SPEC example: 'seed:1,alloc:0.05,swap_in:err@3,tick_delay:20ms'
+      (also read from LOOKAT_FAULTS when the flag is absent)
   lookat stats <addr> [--interval S]   query a serve-tcp server's
                                        telemetry (counters, gauges,
                                        latency percentiles)
@@ -641,6 +688,19 @@ mod tests {
                 "missing accepted values: {err}"
             );
         }
+    }
+
+    #[test]
+    fn faults_and_timeout_flags_parse() {
+        let plan = parse_faults("seed:1,alloc:0.5,tick:err@2").unwrap();
+        assert!(plan.is_active());
+        let err = parse_faults("alloc:bogus").unwrap_err();
+        assert!(
+            format!("{err:#}").contains("--faults"),
+            "error does not name the flag: {err:#}"
+        );
+        assert_eq!(parse_timeout_ms(0), None);
+        assert_eq!(parse_timeout_ms(250), Some(250));
     }
 
     #[test]

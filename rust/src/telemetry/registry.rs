@@ -59,6 +59,10 @@ metric_enum!(
         PhaseValueDecodeNs => "phase_value_decode_ns",
         PhaseQkvNs => "phase_qkv_ns",
         PhaseMlpNs => "phase_mlp_ns",
+        FaultsInjected => "faults_injected",
+        DeadlineExpired => "deadline_expired",
+        PanicsQuarantined => "panics_quarantined",
+        ChecksumFailures => "checksum_failures",
     }
 );
 
@@ -80,6 +84,7 @@ metric_enum!(
         ScratchZeroed => "scratch_zeroed",
         ScratchHeldBytes => "scratch_held_bytes",
         ScratchPeakBytes => "scratch_peak_bytes",
+        DrainDurationMs => "drain_duration_ms",
     }
 );
 

@@ -1,0 +1,432 @@
+//! Deterministic, seeded fault injection for chaos testing.
+//!
+//! A [`FaultPlan`] is parsed from a compact spec (CLI `--faults` or the
+//! `LOOKAT_FAULTS` environment variable) and threaded into the serving
+//! stack, which consults it at a fixed set of hook points — block
+//! allocation, swap out/in, prefix attach, and tick boundaries. Every
+//! trigger is deterministic: probabilistic clauses draw from a seeded
+//! [`Pcg32`] stream and nth-call clauses count per-site invocations, so
+//! a chaos run replays bit-for-bit under the same spec.
+//!
+//! Spec grammar (comma-separated clauses):
+//!
+//! ```text
+//! seed:42                  seed for probabilistic draws (default 0)
+//! alloc:0.05               fail 5% of block-allocation checks
+//! swap_in:err@3            fail exactly the 3rd swap-in
+//! swap_out:err@1           fail exactly the 1st swap-out
+//! prefix:err@2             fail exactly the 2nd prefix attach
+//! tick:panic@7             panic at the start of the 7th tick
+//! tick:err@4               fail the 4th tick with an error
+//! tick_delay:20ms          sleep 20 ms at every tick boundary
+//! tick_delay:5ms@3         sleep 5 ms at the 3rd tick only
+//! ```
+//!
+//! An empty/absent spec parses to the disabled plan, whose
+//! [`FaultPlan::check`] is a branch on an empty `Vec` — free on the
+//! serving fast path.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context};
+
+use super::rng::Pcg32;
+
+/// Hook points the serving stack consults the plan at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// block-demand check in the engine tick (simulates allocator
+    /// exhaustion; surfaces as `CacheError::OutOfBlocks`)
+    Alloc,
+    /// engine-level swap-out of a preemption victim
+    SwapOut,
+    /// engine-level swap-in of a parked sequence
+    SwapIn,
+    /// prefix-cache block attach at admission
+    PrefixAttach,
+    /// batcher tick boundary (before any engine state is touched)
+    Tick,
+}
+
+impl FaultSite {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Alloc => "alloc",
+            FaultSite::SwapOut => "swap_out",
+            FaultSite::SwapIn => "swap_in",
+            FaultSite::PrefixAttach => "prefix",
+            FaultSite::Tick => "tick",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            FaultSite::Alloc => 0,
+            FaultSite::SwapOut => 1,
+            FaultSite::SwapIn => 2,
+            FaultSite::PrefixAttach => 3,
+            FaultSite::Tick => 4,
+        }
+    }
+}
+
+/// What an armed clause does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// fail the hooked operation with an injected error
+    Err,
+    /// panic at the hook (exercises the serving loop's isolation)
+    Panic,
+    /// stall the hooked operation (models a slow tier / noisy core)
+    Delay(Duration),
+}
+
+/// When a clause fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Trigger {
+    /// every call, independently, with this probability (seeded draw)
+    Prob(f64),
+    /// exactly the nth call to this site (1-indexed)
+    Nth(u64),
+    /// every call
+    Every,
+}
+
+#[derive(Clone, Debug)]
+struct Clause {
+    site: FaultSite,
+    trigger: Trigger,
+    action: FaultAction,
+}
+
+/// A parsed, seeded fault schedule. `Default` is the disabled plan.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    clauses: Vec<Clause>,
+    rng: Option<Pcg32>,
+    /// per-site call counters (indexed by [`FaultSite::idx`])
+    calls: [u64; 5],
+    spec: String,
+}
+
+impl FaultPlan {
+    /// Parse a spec string. Empty (after trimming) means disabled.
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Ok(FaultPlan::default());
+        }
+        let mut seed = 0u64;
+        let mut clauses = Vec::new();
+        for raw in spec.split(',') {
+            let clause = raw.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (key, val) = clause.split_once(':').with_context(|| {
+                format!("fault clause '{clause}' is not 'site:spec'")
+            })?;
+            let (key, val) = (key.trim(), val.trim());
+            if key == "seed" {
+                seed = val.parse().with_context(|| {
+                    format!("fault seed '{val}' is not a u64")
+                })?;
+                continue;
+            }
+            if key == "tick_delay" {
+                let (dur, trigger) = parse_delay(val)?;
+                clauses.push(Clause {
+                    site: FaultSite::Tick,
+                    trigger,
+                    action: FaultAction::Delay(dur),
+                });
+                continue;
+            }
+            let site = match key {
+                "alloc" => FaultSite::Alloc,
+                "swap_out" => FaultSite::SwapOut,
+                "swap_in" => FaultSite::SwapIn,
+                "prefix" => FaultSite::PrefixAttach,
+                "tick" => FaultSite::Tick,
+                other => bail!(
+                    "unknown fault site '{other}' (expected alloc, \
+                     swap_out, swap_in, prefix, tick, tick_delay, seed)"
+                ),
+            };
+            clauses.push(parse_action(site, val)?);
+        }
+        let need_rng = clauses
+            .iter()
+            .any(|c| matches!(c.trigger, Trigger::Prob(_)));
+        Ok(FaultPlan {
+            clauses,
+            rng: need_rng.then(|| Pcg32::seed(seed)),
+            calls: [0; 5],
+            spec: spec.to_string(),
+        })
+    }
+
+    /// Resolve from an explicit CLI spec, falling back to the
+    /// `LOOKAT_FAULTS` environment variable, else the disabled plan.
+    pub fn resolve(cli: Option<&str>) -> anyhow::Result<FaultPlan> {
+        match cli {
+            Some(s) => FaultPlan::parse(s)
+                .context("invalid --faults spec"),
+            None => match std::env::var("LOOKAT_FAULTS") {
+                Ok(s) => FaultPlan::parse(&s)
+                    .context("invalid LOOKAT_FAULTS spec"),
+                Err(_) => Ok(FaultPlan::default()),
+            },
+        }
+    }
+
+    /// Whether any clause is armed.
+    pub fn is_active(&self) -> bool {
+        !self.clauses.is_empty()
+    }
+
+    /// The original spec (empty for the disabled plan).
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// Consult the plan at a hook point. Counts the call and returns
+    /// the first firing clause's action, if any. The disabled plan
+    /// returns `None` after a single branch.
+    #[inline]
+    pub fn check(&mut self, site: FaultSite) -> Option<FaultAction> {
+        if self.clauses.is_empty() {
+            return None;
+        }
+        self.check_slow(site)
+    }
+
+    fn check_slow(&mut self, site: FaultSite) -> Option<FaultAction> {
+        self.calls[site.idx()] += 1;
+        let n = self.calls[site.idx()];
+        for i in 0..self.clauses.len() {
+            if self.clauses[i].site != site {
+                continue;
+            }
+            let fires = match self.clauses[i].trigger {
+                Trigger::Every => true,
+                Trigger::Nth(k) => n == k,
+                Trigger::Prob(p) => {
+                    // one draw per armed probabilistic clause per call,
+                    // so the stream is independent of whether earlier
+                    // clauses fired
+                    self.rng.as_mut().unwrap().next_f64() < p
+                }
+            };
+            if fires {
+                return Some(self.clauses[i].action);
+            }
+        }
+        None
+    }
+}
+
+/// Action grammar for err/panic sites: `err@N`, `panic@N`, `err`,
+/// `panic`, or a bare probability like `0.05` (implies `Err`).
+fn parse_action(site: FaultSite, val: &str) -> anyhow::Result<Clause> {
+    let (word, trigger) = match val.split_once('@') {
+        Some((w, n)) => {
+            let n: u64 = n.trim().parse().with_context(|| {
+                format!("fault count '@{n}' is not a u64")
+            })?;
+            if n == 0 {
+                bail!("fault counts are 1-indexed; '@0' never fires");
+            }
+            (w.trim(), Trigger::Nth(n))
+        }
+        None => (val, Trigger::Every),
+    };
+    if let Ok(p) = word.parse::<f64>() {
+        if !(0.0..=1.0).contains(&p) {
+            bail!("fault probability {p} is outside [0, 1]");
+        }
+        if !matches!(trigger, Trigger::Every) {
+            bail!("a probability clause cannot take '@N'");
+        }
+        return Ok(Clause {
+            site,
+            trigger: Trigger::Prob(p),
+            action: FaultAction::Err,
+        });
+    }
+    let action = match word {
+        "err" => FaultAction::Err,
+        "panic" => FaultAction::Panic,
+        other => bail!(
+            "unknown fault action '{other}' for site '{}' (expected \
+             err, panic, or a probability)",
+            site.name()
+        ),
+    };
+    Ok(Clause { site, trigger, action })
+}
+
+/// Delay grammar: `20ms` or `20ms@N` (ms suffix optional).
+fn parse_delay(val: &str) -> anyhow::Result<(Duration, Trigger)> {
+    let (dur, trigger) = match val.split_once('@') {
+        Some((d, n)) => {
+            let n: u64 = n.trim().parse().with_context(|| {
+                format!("fault count '@{n}' is not a u64")
+            })?;
+            if n == 0 {
+                bail!("fault counts are 1-indexed; '@0' never fires");
+            }
+            (d.trim(), Trigger::Nth(n))
+        }
+        None => (val, Trigger::Every),
+    };
+    let ms: u64 = dur
+        .strip_suffix("ms")
+        .unwrap_or(dur)
+        .trim()
+        .parse()
+        .with_context(|| {
+            format!("tick_delay '{dur}' is not '<N>ms'")
+        })?;
+    Ok((Duration::from_millis(ms), trigger))
+}
+
+/// FNV-1a over a byte slab — the integrity checksum used on swapped
+/// sequences and prefix-cache blocks (same constants as the prefix
+/// chain hash, so one self-consistent hash family repo-wide).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_extend(0xcbf29ce484222325, bytes)
+}
+
+/// Continue an FNV-1a stream — chain multi-slab checksums without
+/// concatenating the slabs.
+pub fn fnv1a_extend(state: u64, bytes: &[u8]) -> u64 {
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = state;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_is_disabled() {
+        let mut p = FaultPlan::parse("").unwrap();
+        assert!(!p.is_active());
+        for _ in 0..10 {
+            assert_eq!(p.check(FaultSite::Alloc), None);
+            assert_eq!(p.check(FaultSite::Tick), None);
+        }
+    }
+
+    #[test]
+    fn nth_clause_fires_exactly_once() {
+        let mut p = FaultPlan::parse("swap_in:err@3").unwrap();
+        let fired: Vec<bool> = (0..6)
+            .map(|_| p.check(FaultSite::SwapIn).is_some())
+            .collect();
+        assert_eq!(fired, [false, false, true, false, false, false]);
+        // other sites never fire
+        assert_eq!(p.check(FaultSite::SwapOut), None);
+    }
+
+    #[test]
+    fn probability_stream_is_seeded_and_reproducible() {
+        let run = |spec: &str| -> Vec<bool> {
+            let mut p = FaultPlan::parse(spec).unwrap();
+            (0..200)
+                .map(|_| p.check(FaultSite::Alloc).is_some())
+                .collect()
+        };
+        let a = run("seed:7,alloc:0.3");
+        let b = run("seed:7,alloc:0.3");
+        assert_eq!(a, b);
+        let c = run("seed:8,alloc:0.3");
+        assert_ne!(a, c);
+        let hits = a.iter().filter(|&&x| x).count();
+        assert!(
+            (30..=90).contains(&hits),
+            "p=0.3 over 200 draws fired {hits} times"
+        );
+    }
+
+    #[test]
+    fn tick_delay_and_panic_grammar() {
+        let mut p =
+            FaultPlan::parse("tick_delay:20ms,tick:panic@2").unwrap();
+        assert_eq!(
+            p.check(FaultSite::Tick),
+            Some(FaultAction::Delay(Duration::from_millis(20)))
+        );
+        // the delay clause is listed first, so it wins tick 2 as well;
+        // order in the spec is priority order
+        assert_eq!(
+            p.check(FaultSite::Tick),
+            Some(FaultAction::Delay(Duration::from_millis(20)))
+        );
+        let mut q = FaultPlan::parse("tick:panic@2").unwrap();
+        assert_eq!(q.check(FaultSite::Tick), None);
+        assert_eq!(q.check(FaultSite::Tick), Some(FaultAction::Panic));
+        let mut d = FaultPlan::parse("tick_delay:5ms@3").unwrap();
+        assert_eq!(d.check(FaultSite::Tick), None);
+        assert_eq!(d.check(FaultSite::Tick), None);
+        assert_eq!(
+            d.check(FaultSite::Tick),
+            Some(FaultAction::Delay(Duration::from_millis(5)))
+        );
+    }
+
+    #[test]
+    fn issue_example_spec_parses() {
+        let p = FaultPlan::parse(
+            "alloc:0.05,swap_in:err@3,tick_delay:20ms",
+        )
+        .unwrap();
+        assert!(p.is_active());
+        assert_eq!(p.spec(), "alloc:0.05,swap_in:err@3,tick_delay:20ms");
+    }
+
+    #[test]
+    fn bad_specs_fail_with_context() {
+        for bad in [
+            "alloc",           // no colon
+            "bogus:0.5",       // unknown site
+            "alloc:1.5",       // probability out of range
+            "alloc:0.5@3",     // probability with count
+            "swap_in:boom",    // unknown action
+            "swap_in:err@0",   // zero count
+            "tick_delay:fast", // non-numeric delay
+            "seed:banana",     // non-numeric seed
+        ] {
+            assert!(
+                FaultPlan::parse(bad).is_err(),
+                "spec '{bad}' should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn resolve_prefers_cli_over_env() {
+        let p = FaultPlan::resolve(Some("alloc:err@1")).unwrap();
+        assert!(p.is_active());
+        let d = FaultPlan::resolve(Some("")).unwrap();
+        assert!(!d.is_active());
+    }
+
+    #[test]
+    fn fnv1a_matches_known_vectors() {
+        // standard FNV-1a 64-bit test vectors
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+        // chaining is equivalent to one pass
+        let whole = fnv1a(b"foobar");
+        let chained = fnv1a_extend(fnv1a(b"foo"), b"bar");
+        assert_eq!(whole, chained);
+    }
+}

@@ -8,6 +8,7 @@
 pub mod bench;
 pub mod benchcmp;
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod log;
 pub mod proptest;

@@ -1,0 +1,386 @@
+//! Chaos suite: mixed workloads under deterministic seeded fault
+//! plans. The invariants under test are the serving stack's failure
+//! contracts, not its happy path:
+//!
+//!   * every submitted request reaches exactly one terminal state
+//!     (completed / rejected / expired / quarantined) — nothing hangs,
+//!     nothing is answered twice
+//!   * after the drain, no cache state leaks: zero live tokens, zero
+//!     allocated blocks, zero shared prefix refs, zero spill entries
+//!   * faults degrade, never corrupt: requests that survive a faulty
+//!     run produce bit-identical tokens to a fault-free run of the
+//!     same workload (uniform policy, deterministic engine)
+//!
+//! Every plan is seeded, so failures replay exactly.
+
+use lookat::coordinator::{
+    AttentionBackend, Batcher, BatcherConfig, CompressionPolicy, Engine,
+    EngineConfig, Request, SchedulerPolicy, ValueBackend,
+};
+use lookat::kvcache::CacheError;
+use lookat::model::{ByteTokenizer, ModelConfig};
+use lookat::util::fault::FaultPlan;
+
+fn chaos_engine_cfg(blocks: usize, prefix: bool) -> EngineConfig {
+    EngineConfig {
+        model: ModelConfig::test_tiny(),
+        backend: AttentionBackend::Lookat { m: 4, k: 64 },
+        value_backend: ValueBackend::Fp32,
+        seed: 1234,
+        cache_blocks: blocks,
+        calib_tokens: 64,
+        decode_threads: 2,
+        prefill_chunk: 32,
+        pipeline: true,
+        prefix_cache: prefix,
+        policy: CompressionPolicy::Uniform,
+        faults: Default::default(),
+    }
+}
+
+fn chaos_batcher(
+    blocks: usize,
+    prefix: bool,
+    engine_faults: &str,
+    batcher_faults: &str,
+) -> Batcher {
+    let mut ecfg = chaos_engine_cfg(blocks, prefix);
+    ecfg.faults = FaultPlan::parse(engine_faults).unwrap();
+    let engine = Engine::build(&ecfg).unwrap();
+    Batcher::new(
+        engine,
+        BatcherConfig {
+            max_batch: 3,
+            max_queue: 32,
+            policy: SchedulerPolicy::Preempt,
+            faults: FaultPlan::parse(batcher_faults).unwrap(),
+            ..BatcherConfig::default()
+        },
+    )
+}
+
+fn workload(n: u64) -> Vec<Request> {
+    let tok = ByteTokenizer::new();
+    let prompts = [
+        "chaos prompt one, short",
+        "a second chaos prompt that runs a little longer than the first",
+        "third — different length again to vary block usage",
+        "fourth prompt",
+    ];
+    (0..n)
+        .map(|i| Request {
+            id: i,
+            prompt: tok.encode(prompts[i as usize % prompts.len()]),
+            max_new_tokens: 6 + (i as usize % 7),
+            arrival_s: i as f64 * 0.002,
+            timeout_ms: None,
+        })
+        .collect()
+}
+
+/// Seed override for CI's chaos matrix: `LOOKAT_FAULTS=seed:N` re-runs
+/// every probabilistic plan in this suite under seed N — the contracts
+/// (conservation, leak-freedom, survivor bit-parity) must hold for any
+/// seed. `@N` nth-trigger clauses are deterministic and unaffected.
+/// Locally, with the env unset, the baked-in seed is used.
+fn seeded(spec: &str, default_seed: u64) -> String {
+    let seed = std::env::var("LOOKAT_FAULTS")
+        .ok()
+        .and_then(|env| {
+            env.split(',').find_map(|clause| {
+                clause
+                    .trim()
+                    .strip_prefix("seed:")
+                    .and_then(|v| v.parse::<u64>().ok())
+            })
+        })
+        .unwrap_or(default_seed);
+    format!("seed:{seed},{spec}")
+}
+
+/// Drive the batcher the way the serving loop does: tick errors are
+/// logged-and-retried, tick panics quarantine the active set, and the
+/// loop only exits when the scheduler is empty. Returns the number of
+/// ticks that failed (err or panic).
+fn drive_to_drain(b: &mut Batcher, reqs: Vec<Request>) -> usize {
+    let mut pending: std::collections::VecDeque<Request> = reqs.into();
+    let mut now = 0.0f64;
+    let mut faults_seen = 0usize;
+    let mut iters = 0usize;
+    while !(pending.is_empty() && b.idle()) {
+        while pending
+            .front()
+            .is_some_and(|r| r.arrival_s <= now)
+        {
+            let mut r = pending.pop_front().unwrap();
+            r.arrival_s = now;
+            b.submit(r);
+        }
+        b.admit(now);
+        if b.active() > 0 {
+            let step = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| b.step(now)),
+            );
+            match step {
+                Ok(Ok(_)) => {}
+                Ok(Err(_)) => faults_seen += 1, // retried next tick
+                Err(_) => {
+                    faults_seen += 1;
+                    b.quarantine_active(now);
+                }
+            }
+        }
+        now += 0.005;
+        iters += 1;
+        assert!(iters < 20_000, "chaos run failed to drain");
+    }
+    faults_seen
+}
+
+/// One terminal reply per request, never two — the conservation law the
+/// TCP server relies on to answer every connection exactly once.
+fn assert_conservation(b: &Batcher, submitted: u64) {
+    let mut terminal: Vec<u64> = b
+        .completed
+        .iter()
+        .map(|c| c.id)
+        .chain(b.rejected.iter().copied())
+        .chain(b.expired.iter().copied())
+        .chain(b.quarantined.iter().copied())
+        .collect();
+    terminal.sort_unstable();
+    let before = terminal.len();
+    terminal.dedup();
+    assert_eq!(terminal.len(), before, "a request got two terminal states");
+    assert_eq!(
+        terminal,
+        (0..submitted).collect::<Vec<u64>>(),
+        "every request must reach exactly one terminal state"
+    );
+}
+
+fn assert_no_leaks(b: &Batcher) {
+    let stats = b.engine().cache_stats();
+    assert_eq!(stats.tokens, 0, "live tokens leaked past drain");
+    assert_eq!(stats.blocks_allocated, 0, "blocks leaked past drain");
+    assert_eq!(stats.shared_blocks, 0, "shared prefix refs leaked");
+    assert_eq!(b.engine().prefix_entries(), 0, "prefix entries leaked");
+}
+
+/// Baseline sanity: the chaos harness itself, with no plan armed.
+#[test]
+fn fault_free_chaos_workload_completes_everything() {
+    let mut b = chaos_batcher(64, false, "", "");
+    let n = 12;
+    let faults = drive_to_drain(&mut b, workload(n));
+    assert_eq!(faults, 0);
+    assert_eq!(b.completed.len(), n as usize);
+    assert_conservation(&b, n);
+    assert_no_leaks(&b);
+}
+
+#[test]
+fn mixed_workload_under_alloc_faults_conserves_requests() {
+    // ~15% of engine block-demand checks fail; the Preempt scheduler
+    // retries / evicts around them and every request still terminates
+    let mut b = chaos_batcher(64, false, &seeded("alloc:0.15", 5), "");
+    let n = 12;
+    drive_to_drain(&mut b, workload(n));
+    assert_conservation(&b, n);
+    assert_no_leaks(&b);
+    // alloc faults are retryable: nothing should have been lost to
+    // quarantine, and the plan must actually have fired
+    assert!(b.quarantined.is_empty());
+    assert!(
+        b.engine()
+            .metrics()
+            .counter(lookat::telemetry::Ctr::FaultsInjected)
+            > 0,
+        "plan never fired — the test is vacuous"
+    );
+}
+
+#[test]
+fn tick_errors_and_panics_still_conserve_requests() {
+    // tick 4 errors (retried), tick 9 panics (active set quarantined);
+    // later requests are served by the surviving loop
+    let mut b = chaos_batcher(64, false, "", "tick:err@4,tick:panic@9");
+    let n = 10;
+    let faults = drive_to_drain(&mut b, workload(n));
+    assert!(faults >= 2, "both planned faults must fire, saw {faults}");
+    assert_conservation(&b, n);
+    assert_no_leaks(&b);
+    assert!(!b.quarantined.is_empty(), "the panic must quarantine");
+    assert!(!b.completed.is_empty(), "serving must continue after it");
+}
+
+#[test]
+fn deadline_storm_conserves_requests_and_blocks() {
+    // alternating impossible (1ms) and unlimited deadlines over a
+    // cache under alloc faults: expiries must free their blocks even
+    // while the allocator is misbehaving
+    let mut b = chaos_batcher(64, false, &seeded("alloc:0.1", 11), "");
+    let n = 12;
+    let mut reqs = workload(n);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        if i % 2 == 0 {
+            r.timeout_ms = Some(1);
+        }
+    }
+    drive_to_drain(&mut b, reqs);
+    assert_conservation(&b, n);
+    assert_no_leaks(&b);
+    assert!(!b.expired.is_empty(), "1ms deadlines must expire");
+    // unlimited-deadline requests are never expired by mistake
+    for id in &b.expired {
+        assert_eq!(id % 2, 0, "only even ids carried the 1ms deadline");
+    }
+}
+
+/// The headline degradation contract: a faulty run's *survivors* are
+/// bit-identical to the fault-free run. Faults may change *which*
+/// requests finish, never *what* they say.
+#[test]
+fn surviving_outputs_match_fault_free_run_bit_for_bit() {
+    let n = 12;
+    let run = |engine_faults: &str, batcher_faults: &str| {
+        let mut b =
+            chaos_batcher(24, false, engine_faults, batcher_faults);
+        drive_to_drain(&mut b, workload(n));
+        assert_conservation(&b, n);
+        assert_no_leaks(&b);
+        let mut out: Vec<(u64, Vec<u32>)> = b
+            .completed
+            .iter()
+            .map(|c| (c.id, c.generated.clone()))
+            .collect();
+        out.sort();
+        out
+    };
+    let clean = run("", "");
+    assert_eq!(clean.len(), n as usize, "fault-free run must complete all");
+    // 24-block cache under preemption + alloc/swap faults + tick churn
+    let faulty = run(
+        &seeded("alloc:0.1,swap_in:err@2", 3),
+        "tick:err@5,tick:panic@11",
+    );
+    assert!(!faulty.is_empty(), "some requests must survive the storm");
+    let reference: std::collections::HashMap<u64, &Vec<u32>> =
+        clean.iter().map(|(id, toks)| (*id, toks)).collect();
+    for (id, toks) in &faulty {
+        assert_eq!(
+            Some(toks),
+            reference.get(id).copied(),
+            "request {id}'s tokens drifted under faults"
+        );
+    }
+}
+
+#[test]
+fn prefix_attach_fault_degrades_to_a_miss_with_identical_tokens() {
+    let tok = ByteTokenizer::new();
+    let system = "shared chaos system preamble ".repeat(3);
+    let reqs = || -> Vec<Request> {
+        (0..4u64)
+            .map(|i| Request {
+                id: i,
+                prompt: tok.encode(&format!("{system}tail {i}")),
+                max_new_tokens: 8,
+                arrival_s: i as f64 * 0.002,
+                timeout_ms: None,
+            })
+            .collect()
+    };
+    let run = |faults: &str| {
+        let mut ecfg = chaos_engine_cfg(96, true);
+        ecfg.faults = FaultPlan::parse(faults).unwrap();
+        let mut b = Batcher::new(
+            ecfg_build(ecfg),
+            BatcherConfig {
+                max_batch: 2,
+                max_queue: 16,
+                policy: SchedulerPolicy::Fcfs,
+                ..BatcherConfig::default()
+            },
+        );
+        drive_to_drain(&mut b, reqs());
+        assert_eq!(b.completed.len(), 4);
+        assert_no_leaks(&b);
+        let mut out: Vec<(u64, Vec<u32>)> = b
+            .completed
+            .iter()
+            .map(|c| (c.id, c.generated.clone()))
+            .collect();
+        out.sort();
+        (out, b.prefix_hits)
+    };
+    let (clean, hits_clean) = run("");
+    // every prefix attach is refused: the lookup degrades to a miss
+    // (full re-prefill), and the tokens don't move a bit
+    let (faulty, hits_faulty) = run("prefix:err");
+    assert_eq!(clean, faulty, "prefix-miss fallback changed tokens");
+    assert!(hits_clean > 0, "clean run must actually share the prefix");
+    assert_eq!(hits_faulty, 0, "every attach was fault-refused");
+}
+
+fn ecfg_build(cfg: EngineConfig) -> Engine {
+    Engine::build(&cfg).unwrap()
+}
+
+// ---- engine-level integrity checks (swap checksums) ----
+
+#[test]
+fn corrupted_swap_slab_is_never_restored_and_reprefill_matches() {
+    let tok = ByteTokenizer::new();
+    let ids = tok.encode("checksummed swap victim prompt");
+    // reference: uninterrupted run
+    let mut reference =
+        Engine::build(&chaos_engine_cfg(32, false)).unwrap();
+    reference.start_seq(1, &ids).unwrap();
+    let want: Vec<u32> =
+        (0..5).map(|_| reference.decode_one(1).unwrap()).collect();
+
+    let mut e = Engine::build(&chaos_engine_cfg(32, false)).unwrap();
+    e.start_seq(1, &ids).unwrap();
+    e.swap_out(1).unwrap();
+    assert!(e.corrupt_swapped(1), "no spill entry to corrupt");
+    match e.swap_in(1) {
+        Err(CacheError::Corrupt(seq)) => assert_eq!(seq, 1),
+        other => panic!("corrupt swap-in must fail, got {other:?}"),
+    }
+    assert!(
+        !e.is_swapped(1),
+        "poisoned spill entries must be discarded, not retried"
+    );
+    assert_eq!(e.cache_stats().blocks_allocated, 0, "restore leaked");
+    assert_eq!(
+        e.metrics()
+            .counter(lookat::telemetry::Ctr::ChecksumFailures),
+        1
+    );
+    // the fallback path: re-prefill from tokens, bit-identical tokens
+    e.start_seq(1, &ids).unwrap();
+    let got: Vec<u32> =
+        (0..5).map(|_| e.decode_one(1).unwrap()).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn injected_swap_in_fault_purges_the_spill_entry() {
+    let tok = ByteTokenizer::new();
+    let ids = tok.encode("swap-in fault victim");
+    let mut cfg = chaos_engine_cfg(32, false);
+    cfg.faults = FaultPlan::parse("swap_in:err@1").unwrap();
+    let mut e = Engine::build(&cfg).unwrap();
+    e.start_seq(1, &ids).unwrap();
+    e.swap_out(1).unwrap();
+    match e.swap_in(1) {
+        Err(CacheError::Injected(site)) => assert_eq!(site, "swap_in"),
+        other => panic!("expected the injected fault, got {other:?}"),
+    }
+    assert!(!e.is_swapped(1), "fault fallback must purge the entry");
+    assert_eq!(e.cache_stats().blocks_allocated, 0);
+    // the engine is healthy afterwards: same id can re-prefill
+    e.start_seq(1, &ids).unwrap();
+    e.decode_one(1).unwrap();
+}

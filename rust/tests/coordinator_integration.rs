@@ -26,6 +26,7 @@ fn paper_cfg(backend: AttentionBackend) -> EngineConfig {
         pipeline: true,
         prefix_cache: false,
         policy: CompressionPolicy::Uniform,
+        faults: Default::default(),
     }
 }
 
@@ -96,6 +97,7 @@ fn tiny_batcher(max_batch: usize) -> Batcher {
         pipeline: true,
         prefix_cache: false,
         policy: CompressionPolicy::Uniform,
+        faults: Default::default(),
     })
     .unwrap();
     Batcher::new(
@@ -115,6 +117,7 @@ fn req(id: u64, gen: usize) -> Request {
         prompt: ByteTokenizer::new().encode("integration prompt"),
         max_new_tokens: gen,
         arrival_s: 0.0,
+        timeout_ms: None,
     }
 }
 

@@ -44,6 +44,7 @@ fn tiny_cfg_kv(
         pipeline: true,
         prefix_cache: false,
         policy: CompressionPolicy::Uniform,
+        faults: Default::default(),
     }
 }
 
@@ -60,6 +61,7 @@ fn paper_cfg(backend: AttentionBackend, threads: usize) -> EngineConfig {
         pipeline: true,
         prefix_cache: false,
         policy: CompressionPolicy::Uniform,
+        faults: Default::default(),
     }
 }
 
@@ -366,6 +368,7 @@ fn preempt_requests(n: u64, gen: usize) -> Vec<Request> {
             max_new_tokens: gen,
             // staggered arrivals: preemption victims are well-defined
             arrival_s: i as f64 * 0.001,
+            timeout_ms: None,
         })
         .collect()
 }
@@ -570,6 +573,7 @@ fn prefix_cache_cow_holds_under_preemption_churn() {
                 prompt: tok.encode(&format!("{system}tail {i}")),
                 max_new_tokens: 10 + (i as usize % 4),
                 arrival_s: i as f64 * 0.001,
+                timeout_ms: None,
             })
             .collect()
     };
